@@ -1,0 +1,46 @@
+//! Perplexity comparison across quantization schemes on the trained
+//! tiny-GPT (the Table 2 protocol in miniature), using the PJRT
+//! artifacts for the headline variants and the CPU reference forward
+//! for a config the artifacts don't carry — demonstrating both paths.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example eval_perplexity
+//! ```
+
+use lobcq::eval::{ppl_cpu, ppl_pjrt, Env, EvalOpts, Scheme};
+use lobcq::runtime::Engine;
+use lobcq::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let env = Env::load();
+    anyhow::ensure!(env.has_artifacts(), "run `make artifacts` first");
+    let size = "s";
+    let cfg = env.model_config(size)?;
+    let weights = env.weights(size)?;
+    let opts = EvalOpts { n_windows: 16, ..Default::default() };
+
+    // --- Path 1: PJRT artifacts (the serving numerics) ---
+    let mut eng = Engine::from_dir(&env.dir)?;
+    let ordered: Vec<Tensor> = weights.ordered(&cfg)?.into_iter().cloned().collect();
+    let refs: Vec<&Tensor> = ordered.iter().collect();
+    eng.register_weights("w", &cfg, &refs)?;
+    let fam = env.family(8, 4, 6)?;
+    eng.register_books("nc8", &Env::books_tensor(&fam))?;
+
+    println!("== PJRT artifact path (model {size}) ==");
+    for (variant, books) in [("bf16", None), ("lobcq_g64_nc8", Some("nc8")), ("mx4", None), ("mxfp4", None)] {
+        let ppl = ppl_pjrt(&mut eng, size, variant, "w", books, &opts)?;
+        println!("  {variant:<16} ppl {ppl:.3}");
+    }
+
+    // --- Path 2: CPU reference forward (arbitrary configs) ---
+    println!("\n== CPU reference path (W4A4, configs without artifacts) ==");
+    let base = ppl_cpu(&cfg, &weights, &Scheme::Bf16, &Scheme::Bf16, &opts)?;
+    println!("  {:<24} ppl {base:.3}", "BF16");
+    for (lb, nc, la) in [(8usize, 4usize, 128usize), (4, 4, 32), (8, 16, 16)] {
+        let scheme = env.lobcq(lb, nc, la)?;
+        let ppl = ppl_cpu(&cfg, &weights, &scheme, &scheme, &opts)?;
+        println!("  {:<24} ppl {ppl:.3} (Δ {:+.3}, {:.3} bits)", scheme.name(), ppl - base, scheme.bits());
+    }
+    Ok(())
+}

@@ -1,0 +1,305 @@
+"""AOT build orchestrator: train → calibrate → lower → manifest.
+
+Runs once under ``make artifacts``; the Rust binary is self-contained
+afterwards. Interchange is HLO *text* (NOT ``.serialize()``): jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs in ``artifacts/``:
+  weights_{s,m,l}.npz / .bin    trained tiny-GPT weights (npz for python,
+                                bin for the Rust loader)
+  codebooks.json                universal LO-BCQ families (raw levels;
+                                consumers apply INT-B_c, paper §3)
+  model_{size}_{variant}_b{B}.hlo.txt   weights-as-inputs forwards
+  op_lobcq_quant.hlo.txt        standalone quantize op (books as inputs —
+                                the Rust↔kernel parity surface)
+  op_gemm.hlo.txt               standalone Pallas GEMM
+  manifest.json                 everything the Rust side needs to load
+"""
+
+import argparse
+import json
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, lobcq as L, train as T
+from .kernels.gemm import gemm
+from .kernels.lobcq_quant import lobcq_fake_quant
+from .model import SIZES, QuantSpec, forward_flat, param_names, param_shapes
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"
+
+# The activation-quant graph variants lowered per model size (eval batch).
+ACTQ_VARIANTS = [
+    ("lobcq_g64_nc2", dict(scheme="lobcq", lb=8, la=64, nc=2)),
+    ("lobcq_g64_nc8", dict(scheme="lobcq", lb=8, la=64, nc=8)),
+    ("lobcq_g32_nc16", dict(scheme="lobcq", lb=8, la=32, nc=16)),
+    ("mx4", dict(scheme="mx4")),
+    ("vsq", dict(scheme="vsq")),
+    ("mxfp4", dict(scheme="mxfp4")),
+]
+
+EVAL_BATCH = 8
+SERVE_BATCHES = (1, 8)
+
+# Universal codebook families calibrated from the proxy ("s") model
+# weights + activations (paper §4.1 calibrates on GPT3-126M).
+FAMILY_SPECS = [(nc, 4) for nc in (1, 2, 4, 8, 16)] + \
+               [(nc, 3) for nc in (4, 8)] + [(nc, 2) for nc in (4, 8)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def write_text(path: Path, text: str):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(text)
+    print(f"[aot] wrote {path.name} ({len(text) / 1024:.0f} KiB)", flush=True)
+
+
+# ---- codebook calibration ----
+
+def calibration_blocks(params_s: dict, lb: int = 8, la: int = 64, max_blocks: int = 4096) -> np.ndarray:
+    """Pool normalized blocks from the proxy model's GEMM weights and one
+    batch of activations on training data (§4.1)."""
+    cfg_norm = L.LobcqConfig(lb=lb, la=la)
+    pools = []
+    for name, w in params_s.items():
+        if w.ndim == 2 and not name.startswith(("embed", "pos")):
+            vals, _, _ = L.normalize(np.ascontiguousarray(w.T), cfg_norm)
+            pools.append(vals.reshape(-1, lb))
+    # Activations: one batch through the proxy model.
+    from .model import collect_activation_taps
+    toks = np.array(corpus.generate(T.TRAIN_SEED, 16 * 65)).reshape(16, 65)[:, :64].astype(np.int32)
+    taps = collect_activation_taps({k: jnp.asarray(v) for k, v in params_s.items()},
+                                   jnp.asarray(toks), SIZES["s"])
+    for a in taps:
+        vals, _, _ = L.normalize(np.ascontiguousarray(a), cfg_norm)
+        pools.append(vals.reshape(-1, lb))
+    blocks = np.concatenate(pools, axis=0)
+    # Deterministic subsample.
+    rng = np.random.default_rng(0xB10C)
+    idx = rng.permutation(blocks.shape[0])[:max_blocks]
+    return blocks[idx]
+
+
+def calibrate_families(params_s: dict) -> dict:
+    blocks = calibration_blocks(params_s)
+    fams = {}
+    for nc, b in FAMILY_SPECS:
+        cfg = L.LobcqConfig(lb=8, la=64, nc=nc, b=b, bc=6)
+        res = L.calibrate(blocks, cfg, seed=0x5EED + nc * 10 + b, max_iters=40, rel_tol=1e-5)
+        key = f"nc{nc}_b{b}"
+        fams[key] = {
+            "b": b,
+            "nc": nc,
+            "books": [[float(x) for x in row] for row in res.books],
+            "final_mse": res.trace[-1],
+            "iters": len(res.trace),
+        }
+        print(f"[calib] {key}: J={res.trace[-1]:.5f} after {len(res.trace)} iters", flush=True)
+    return fams
+
+
+def family_books(fams: dict, nc: int, b: int = 4, bc: int = 6) -> np.ndarray:
+    raw = np.array(fams[f"nc{nc}_b{b}"]["books"], dtype=np.float32)
+    return L.quantize_codewords(raw, bc)
+
+
+# ---- weights.bin (rust loader format) ----
+
+def write_weights_bin(path: Path, params: dict, names: list):
+    import struct
+
+    with open(path, "wb") as f:
+        f.write(b"LWTS")
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<I", len(names)))
+        for name in names:
+            w = np.ascontiguousarray(params[name], dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", w.ndim))
+            for d in w.shape:
+                f.write(struct.pack("<I", d))
+            f.write(w.tobytes())
+    print(f"[aot] wrote {path.name}", flush=True)
+
+
+# ---- lowering ----
+
+def lower_model(size: str, variant: str, spec: QuantSpec, batch: int, t: int) -> str:
+    """Lower one model graph. LO-BCQ variants take the frozen codebooks
+    as a graph *input* `(Nc, 16)` right after tokens — both closer to the
+    paper's deployment (tiny runtime-resident table) and a workaround for
+    xla_extension 0.5.1 mis-executing constant-baked codebooks (decodes
+    to zeros; probed in rust integration tests)."""
+    cfg = SIZES[size]
+    shapes = param_shapes(cfg)
+    tok_spec = jax.ShapeDtypeStruct((batch, t), jnp.int32)
+    w_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes.values()]
+
+    if spec.scheme == "lobcq":
+        nc = len(spec.books)
+        books_spec = jax.ShapeDtypeStruct((nc, 1 << 4), jnp.float32)
+
+        def fn(tokens, books, *ws):
+            return (forward_flat(ws, tokens, cfg, spec, books_arr=books),)
+
+        lowered = jax.jit(fn).lower(tok_spec, books_spec, *w_specs)
+    else:
+
+        def fn(tokens, *ws):
+            return (forward_flat(ws, tokens, cfg, spec),)
+
+        lowered = jax.jit(fn).lower(tok_spec, *w_specs)
+    return to_hlo_text(lowered)
+
+
+def lower_ops() -> dict:
+    """Standalone op artifacts (parity + micro-bench surfaces)."""
+    out = {}
+
+    def quant_fn(x, books):
+        return (lobcq_fake_quant(x, books, lb=8, la=64, norm_max=31.0),)
+
+    lowered = jax.jit(quant_fn).lower(
+        jax.ShapeDtypeStruct((8, 256), jnp.float32),
+        jax.ShapeDtypeStruct((8, 16), jnp.float32))
+    out["op_lobcq_quant"] = {"file": "op_lobcq_quant.hlo.txt", "x_shape": [8, 256],
+                             "books_shape": [8, 16], "lb": 8, "la": 64, "norm_max": 31.0,
+                             "text": to_hlo_text(lowered)}
+
+    def gemm_fn(a, b):
+        return (gemm(a, b),)
+
+    lowered = jax.jit(gemm_fn).lower(
+        jax.ShapeDtypeStruct((32, 256), jnp.float32),
+        jax.ShapeDtypeStruct((256, 128), jnp.float32))
+    out["op_gemm"] = {"file": "op_gemm.hlo.txt", "a_shape": [32, 256], "b_shape": [256, 128],
+                      "text": to_hlo_text(lowered)}
+    return out
+
+
+def make_spec(fams: dict, variant_cfg: dict) -> QuantSpec:
+    cfgd = dict(variant_cfg)
+    scheme = cfgd.pop("scheme")
+    if scheme == "lobcq":
+        books = family_books(fams, cfgd.pop("nc"))
+        return QuantSpec(scheme="lobcq", books=tuple(map(tuple, books.tolist())), **cfgd)
+    return QuantSpec(scheme=scheme)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(ART))
+    ap.add_argument("--sizes", default="s,m,l")
+    ap.add_argument("--skip-actq", action="store_true", help="bf16 artifacts only (fast dev)")
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    sizes = args.sizes.split(",")
+
+    # 1. Train (skips sizes whose weights exist).
+    T.main(out_dir=out, sizes=sizes)
+
+    # 2. Calibrate universal codebooks from the proxy model.
+    params_s = T.load_params("s", out) if "s" in sizes else T.load_params(sizes[0], out)
+    cb_path = out / "codebooks.json"
+    if cb_path.exists():
+        fams = json.loads(cb_path.read_text())["families"]
+        print("[calib] codebooks.json exists, reusing")
+    else:
+        fams = calibrate_families(params_s)
+        cb_path.write_text(json.dumps({"families": fams, "calibrated_on": "s"}, indent=2))
+
+    # 3. Weights in rust format + manifest skeleton.
+    manifest = {
+        "vocab": corpus.VOCAB,
+        "max_t": 64,
+        "corpus": {
+            "train_seed": T.TRAIN_SEED,
+            "val_seed": T.VAL_SEED,
+            "val_tokens": T.VAL_TOKENS,
+            "val_fingerprint": str(corpus.fingerprint(corpus.generate(T.VAL_SEED, T.VAL_TOKENS))),
+        },
+        "codebooks": "codebooks.json",
+        "models": {},
+        "artifacts": [],
+        "ops": {},
+    }
+
+    for size in sizes:
+        cfg = SIZES[size]
+        params = T.load_params(size, out)
+        names = param_names(cfg)
+        write_weights_bin(out / f"weights_{size}.bin", params, names)
+        manifest["models"][size] = {
+            "d": cfg.d,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "vocab": cfg.vocab,
+            "max_t": cfg.max_t,
+            "params": cfg.param_count(),
+            "weights_bin": f"weights_{size}.bin",
+            "weight_names": names,
+            "weight_shapes": [list(param_shapes(cfg)[n]) for n in names],
+        }
+
+    # 4. Lower model graphs.
+    for size in sizes:
+        for batch in SERVE_BATCHES:
+            name = f"model_{size}_bf16_b{batch}"
+            path = out / f"{name}.hlo.txt"
+            if not path.exists():
+                write_text(path, lower_model(size, "bf16", QuantSpec(), batch, 64))
+            manifest["artifacts"].append(
+                {"file": path.name, "size": size, "variant": "bf16", "batch": batch, "t": 64})
+        if args.skip_actq:
+            continue
+        for vname, vcfg in ACTQ_VARIANTS:
+            spec = make_spec(fams, vcfg)
+            name = f"model_{size}_{vname}_b{EVAL_BATCH}"
+            path = out / f"{name}.hlo.txt"
+            if not path.exists():
+                write_text(path, lower_model(size, vname, spec, EVAL_BATCH, 64))
+            entry = {"file": path.name, "size": size, "variant": vname,
+                     "batch": EVAL_BATCH, "t": 64}
+            if spec.scheme == "lobcq":
+                entry["books_nc"] = len(spec.books)
+            manifest["artifacts"].append(entry)
+    # Serving latency variant: quantized decode at batch 1 for "m".
+    if not args.skip_actq and "m" in sizes:
+        spec = make_spec(fams, dict(ACTQ_VARIANTS[1][1]))
+        path = out / "model_m_lobcq_g64_nc8_b1.hlo.txt"
+        if not path.exists():
+            write_text(path, lower_model("m", "lobcq_g64_nc8", spec, 1, 64))
+        manifest["artifacts"].append(
+            {"file": path.name, "size": "m", "variant": "lobcq_g64_nc8", "batch": 1, "t": 64,
+             "books_nc": len(spec.books)})
+
+    # 5. Standalone ops.
+    ops = lower_ops()
+    for key, meta in ops.items():
+        text = meta.pop("text")
+        path = out / meta["file"]
+        if not path.exists():
+            write_text(path, text)
+        manifest["ops"][key] = meta
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"[aot] manifest with {len(manifest['artifacts'])} model artifacts -> {out / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Deterministic synthetic corpus — token-exact mirror of
+``rust/src/data/corpus.rs``.
+
+A small stochastic grammar over a 168-token vocabulary stands in for
+Wikitext (no network in this environment; DESIGN.md §1 documents the
+substitution). The grammar has real sequential structure — determiner →
+adjective → noun agreement ranges, verb argument frames, Zipf-skewed word
+choice — so a tiny trained transformer reaches perplexity far below the
+uniform baseline and quantization-induced perplexity deltas are
+meaningful.
+
+Token id layout (contiguous ranges):
+    0          PAD
+    1          BOS
+    2..6       determiners   (4)
+    6..38      adjectives    (32)
+    38..102    nouns         (64)
+    102..150   verbs         (48)
+    150..166   adverbs       (16)
+    166        COMMA
+    167        PERIOD
+"""
+
+from .pcg import Pcg32
+
+PAD = 0
+BOS = 1
+DET0, N_DET = 2, 4
+ADJ0, N_ADJ = 6, 32
+NOUN0, N_NOUN = 38, 64
+VERB0, N_VERB = 102, 48
+ADV0, N_ADV = 150, 16
+COMMA = 166
+PERIOD = 167
+VOCAB = 168
+
+
+def zipf(rng: Pcg32, n: int) -> int:
+    """Zipf-ish skewed index in [0, n): floor(n * u^2)."""
+    u = rng.next_f32()
+    i = int(n * u * u)
+    return min(i, n - 1)
+
+
+def noun_phrase(rng: Pcg32, out: list) -> None:
+    det = zipf(rng, N_DET)
+    out.append(DET0 + det)
+    if rng.next_f32() < 0.5:
+        # Adjective choice is correlated with the determiner (structure
+        # for the model to learn): each det owns a band of 8 adjectives.
+        band = det * 8
+        out.append(ADJ0 + band + zipf(rng, 8))
+    out.append(NOUN0 + zipf(rng, N_NOUN))
+
+
+def verb_phrase(rng: Pcg32, out: list) -> None:
+    verb = zipf(rng, N_VERB)
+    out.append(VERB0 + verb)
+    u = rng.next_f32()
+    if u < 0.6:
+        noun_phrase(rng, out)
+    elif u < 0.85:
+        # Adverb band correlated with the verb.
+        out.append(ADV0 + (verb % 4) * 4 + zipf(rng, 4))
+    # else: intransitive, nothing.
+
+
+def sentence(rng: Pcg32, out: list) -> None:
+    noun_phrase(rng, out)
+    verb_phrase(rng, out)
+    if rng.next_f32() < 0.2:
+        out.append(COMMA)
+        verb_phrase(rng, out)
+    out.append(PERIOD)
+
+
+def generate(seed: int, n_tokens: int) -> list:
+    """Generate exactly ``n_tokens`` tokens (BOS + sentences, truncated)."""
+    rng = Pcg32(seed, 0xDA7A)
+    out = [BOS]
+    while len(out) < n_tokens:
+        sentence(rng, out)
+    return out[:n_tokens]
+
+
+def fingerprint(tokens) -> int:
+    """FNV-1a over token ids — cross-language corpus identity check."""
+    h = 0xCBF29CE484222325
+    for t in tokens:
+        h ^= t
+        h = (h * 0x100000001B3) & ((1 << 64) - 1)
+    return h

@@ -1,0 +1,101 @@
+"""Low-precision number formats in numpy/jax — mirror of
+``rust/src/formats/``. Parity with the Rust codecs is enforced by
+``tests/test_parity.py`` on vectors emitted by ``lobcq gen-parity``.
+
+All functions are pure and work on numpy arrays or jnp arrays (the
+quantize path uses only ufuncs jnp also provides, so the Pallas kernel
+imports these directly).
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FloatFormat:
+    """Finite EeMm float format (see rust formats/float.rs)."""
+
+    name: str
+    be: int
+    bm: int
+    bias: int
+    max_value: float
+
+    @property
+    def emin(self) -> int:
+        return 1 - self.bias
+
+    @property
+    def min_subnormal(self) -> float:
+        return 2.0 ** (self.emin - self.bm)
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.be + self.bm
+
+
+def make_format(name: str, be: int, bm: int, max_value: float | None = None) -> FloatFormat:
+    bias = (1 << (be - 1)) - 1 if be >= 1 else 0
+    emax = (1 << be) - 1 - bias
+    default_max = float((2 << bm) - 1) * 2.0 ** (emax - bm)
+    return FloatFormat(name, be, bm, bias, max_value if max_value is not None else default_max)
+
+
+E1M2 = make_format("E1M2", 1, 2)
+E2M1 = make_format("E2M1", 2, 1)
+E3M0 = make_format("E3M0", 3, 0)
+E4M3 = make_format("E4M3", 4, 3, 448.0)
+E5M2 = make_format("E5M2", 5, 2, 57344.0)
+E3M3 = make_format("E3M3", 3, 3)
+E3M2 = make_format("E3M2", 3, 2)
+E4M0 = make_format("E4M0", 4, 0)
+
+BY_NAME = {f.name: f for f in [E1M2, E2M1, E3M0, E4M3, E5M2, E3M3, E3M2, E4M0]}
+
+
+def quantize_float(x, fmt: FloatFormat, xp=np):
+    """Round-to-nearest-even quantization to the EeMm grid with
+    saturation — same semantics as rust ``FloatFormat::quantize``.
+
+    ``xp`` selects the array namespace (numpy or jax.numpy) so the same
+    code serves ref.py and the Pallas kernel body.
+    """
+    x = xp.asarray(x, dtype=xp.float32)
+    a = xp.abs(x)
+    # Bucket exponent, clamped to the subnormal region.
+    safe = xp.where(a > 0, a, xp.float32(1.0))
+    e = xp.floor(xp.log2(safe))
+    e = xp.maximum(e, xp.float32(fmt.emin))
+    step = xp.exp2(e - fmt.bm)
+    q = xp.round(a / step) * step  # numpy/jax round = ties-to-even
+    q = xp.minimum(q, xp.float32(fmt.max_value))
+    q = xp.where(a == 0, xp.float32(0.0), q)
+    q = xp.where(a >= fmt.max_value, xp.float32(fmt.max_value), q)
+    return xp.copysign(q, x)
+
+
+def quantize_int(x, bits: int, xp=np):
+    """Symmetric INT-k round-ties-even with saturation (rust IntFormat)."""
+    m = float((1 << (bits - 1)) - 1)
+    x = xp.asarray(x, dtype=xp.float32)
+    return xp.round(xp.clip(x, -m, m))
+
+
+def e8m0_floor(x, xp=np):
+    """Power-of-two floor scale (MX convention); degenerate -> 2^-127."""
+    x = xp.asarray(x, dtype=xp.float32)
+    safe = xp.where(x > 0, x, xp.float32(1.0))
+    e = xp.clip(xp.floor(xp.log2(safe)), -127.0, 127.0)
+    out = xp.exp2(e)
+    return xp.where(x > 0, out, xp.float32(2.0 ** -127))
+
+
+def bf16_round(x):
+    """Round f32 to the bf16 grid (RNE on the low 16 bits; numpy only —
+    the jax path uses ``astype(jnp.bfloat16)`` which is identical)."""
+    x = np.asarray(x, dtype=np.float32)
+    bits = x.view(np.uint32)
+    rounding_bias = np.uint32(0x7FFF) + ((bits >> np.uint32(16)) & np.uint32(1))
+    out_bits = (bits + rounding_bias) & np.uint32(0xFFFF0000)
+    return out_bits.view(np.float32)

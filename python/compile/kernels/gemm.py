@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: tiled GEMM over (dequantized) operands.
+
+The paper's inference GEMMs consume LO-BCQ-decoded 6-bit-integer
+codewords; its own evaluation emulates them in BF16 (§4.1 fn. 3). This
+kernel is the MXU half of that pipeline: a classic (TM, TN, TK) tiled
+matmul with an f32 accumulator, structured for the TPU systolic array
+(DESIGN.md §Hardware-Adaptation). `interpret=True` for CPU-PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    del n_k
+
+
+def gemm(a, b, *, tm: int = 32, tn: int = 32, tk: int = 32, interpret: bool = True):
+    """`a (M, K) @ b (K, N) -> (M, N)` with zero-padding to tile multiples."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+
+    pm, pk, pn = (-m) % tm, (-k) % tk, (-n) % tn
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    gm, gk, gn = a.shape[0] // tm, a.shape[1] // tk, b.shape[1] // tn
+
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, n_k=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]
+
+
+def quantized_gemm(x, w, books, *, lb: int, la: int, norm_max: float, interpret: bool = True):
+    """The full W4A4 pipeline: LO-BCQ fake-quantize both operands, then
+    the tiled GEMM — the composition the serving artifacts lower."""
+    from .lobcq_quant import lobcq_fake_quant
+
+    xq = lobcq_fake_quant(x, books, lb=lb, la=la, norm_max=norm_max, interpret=interpret)
+    wq = lobcq_fake_quant(w.T, books, lb=lb, la=la, norm_max=norm_max, interpret=interpret).T
+    return gemm(xq, wq, interpret=interpret)

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: fused LO-BCQ fake-quantization (the paper's
+deployment hot-spot, §3).
+
+One kernel pass per operand tile performs the full on-the-fly pipeline:
+block-array max-reduce → E4M3 relative scale (eq. 7–8) → per-block
+codebook selection (eq. 4) → per-scalar nearest-codeword rounding (eq. 2)
+→ dequantize. The frozen codebooks (≤ 0.19 KB) ride along as a tiny VMEM-
+resident input — exactly the hardware-friendliness claim of the paper.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles rows; each
+tile holds `TILE_R` rows of the operand in VMEM. The distance tensor
+(TILE_R·K/L_b, N_c, L_b, E) is the dominant VMEM term — see
+``vmem_estimate`` below, asserted ≤ 4 MiB in tests for serving shapes.
+`interpret=True` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import lobcq_fake_quant_ref, tensor_scale
+
+
+def _kernel(x_ref, books_ref, sx_ref, o_ref, *, lb: int, la: int, norm_max: float):
+    x = x_ref[...]
+    books = books_ref[...]
+    s_x = sx_ref[0, 0]
+    o_ref[...] = lobcq_fake_quant_ref(x, books, s_x, lb=lb, la=la, norm_max=norm_max)
+
+
+def lobcq_fake_quant(x, books, *, lb: int, la: int, norm_max: float, tile_rows: int = 8,
+                     interpret: bool = True):
+    """Fake-quantize ``x`` (..., K) with frozen ``books`` via Pallas.
+
+    The per-tensor scale s_X is a global max-reduce computed outside the
+    kernel (one cheap XLA reduction); everything per-block-array happens
+    inside the tiled kernel.
+    """
+    x = jnp.asarray(x, dtype=jnp.float32)
+    books = jnp.asarray(books, dtype=jnp.float32)
+    shape = x.shape
+    k = shape[-1]
+    assert k % la == 0, f"K={k} must be a multiple of L_A={la}"
+    rows = x.size // k
+    x2 = x.reshape(rows, k)
+
+    # Pad rows to a multiple of the tile.
+    pad = (-rows) % tile_rows
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, k), jnp.float32)], axis=0)
+    padded_rows = x2.shape[0]
+
+    s_x = tensor_scale(x, norm_max).reshape(1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, lb=lb, la=la, norm_max=norm_max),
+        grid=(padded_rows // tile_rows,),
+        in_specs=[
+            pl.BlockSpec((tile_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec(books.shape, lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_rows, k), jnp.float32),
+        interpret=interpret,
+    )(x2, books, s_x)
+
+    return out[:rows].reshape(shape)
+
+
+def vmem_estimate(tile_rows: int, k: int, nc: int, entries: int, lb: int) -> int:
+    """Estimated VMEM bytes for one tile (DESIGN.md §Perf): input tile +
+    output tile + the (n_blocks, Nc, L_b, E) distance tensor + codebooks."""
+    tile = tile_rows * k * 4
+    n_blocks = tile_rows * k // lb
+    dist = n_blocks * nc * lb * entries * 4
+    books = nc * entries * 4
+    return 2 * tile + dist + books
+
+
+def mxu_utilization_note(k: int, d_out: int, nc: int, entries: int, lb: int) -> str:
+    """Analytic MXU utilization estimate for the quantize+GEMM pipeline
+    (recorded in EXPERIMENTS.md §Perf; interpret-mode wallclock is NOT a
+    TPU proxy). The quantizer is VPU work; the GEMM is MXU work. Ratio of
+    quantizer FLOPs to GEMM MACs bounds the MXU duty cycle."""
+    vpu_flops_per_scalar = nc * entries * 3 / 1  # dist, square, min-tree per scalar
+    gemm_macs_per_scalar = d_out  # each A scalar feeds d_out MACs
+    duty = gemm_macs_per_scalar / (gemm_macs_per_scalar + vpu_flops_per_scalar)
+    return (
+        f"quantize VPU ops/scalar≈{vpu_flops_per_scalar:.0f}, "
+        f"GEMM MACs/scalar={gemm_macs_per_scalar}, "
+        f"MXU duty bound≈{duty:.2%} (overlappable: quantize of tile t+1 "
+        f"can run on VPU while MXU consumes tile t)"
+    )

@@ -1,0 +1,129 @@
+"""Pure-jnp reference oracles (L1 correctness baseline).
+
+Every Pallas kernel in this package is `assert_allclose`-checked against
+the functions here (pytest + hypothesis sweeps), and these in turn are
+checked against the numpy/f64 oracle in ``compile.lobcq`` and the Rust
+implementation (parity vectors). All math is f32 to match both the
+kernels and the Rust hot path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..formats import E4M3, quantize_float
+
+
+def lobcq_fake_quant_ref(x, books, s_x, *, lb: int, la: int, norm_max: float):
+    """LO-BCQ fake-quantize (paper eq. 2, 4, 7–8) over the trailing axis.
+
+    x:      (..., K) f32, K % la == 0
+    books:  (Nc, E) f32 sorted codeword levels (INT-B_c-quantized)
+    s_x:    scalar per-tensor scale (norm_max / max|x|), computed by the
+            caller (a global reduction that stays outside the tile kernel)
+    Returns the dequantized tensor, same shape.
+    """
+    x = jnp.asarray(x, dtype=jnp.float32)
+    shape = x.shape
+    arrays = x.reshape(-1, la)
+    amax = jnp.max(jnp.abs(arrays), axis=1)
+    s_a = norm_max / jnp.where(amax > 0, amax, 1.0)
+    rel = quantize_float(s_a / s_x, E4M3, xp=jnp)
+    # Zero block arrays get scale 0 -> exact-zero dequant (matches rust).
+    eff = jnp.where(amax > 0, rel * s_x, 0.0).astype(jnp.float32)
+    v = arrays * eff[:, None]
+
+    blocks = v.reshape(-1, lb)  # (n, lb)
+    # (n, Nc, lb, E) squared distances to every codeword.
+    d = blocks[:, None, :, None] - books[None, :, None, :]
+    e = d * d
+    per_scalar = jnp.min(e, axis=3)  # (n, Nc, lb)
+    entry_idx = jnp.argmin(e, axis=3)  # (n, Nc, lb) — first min = lower level
+    errs = jnp.sum(per_scalar, axis=2)  # (n, Nc)
+    sel = jnp.argmin(errs, axis=1)  # (n,)
+    q_all = books[jnp.arange(books.shape[0])[None, :, None], entry_idx]  # (n, Nc, lb)
+    q = jnp.take_along_axis(q_all, sel[:, None, None], axis=1)[:, 0, :]  # (n, lb)
+
+    inv = jnp.where(eff != 0, 1.0 / eff, 0.0).astype(jnp.float32)
+    out = q.reshape(-1, la) * inv[:, None]
+    return out.reshape(shape)
+
+
+def tensor_scale(x, norm_max: float):
+    """Per-tensor scale s_X = norm_max / max|x| (eq. 8 denominator)."""
+    amax = jnp.max(jnp.abs(x))
+    return jnp.where(amax > 0, norm_max / jnp.where(amax > 0, amax, 1.0), 1.0).astype(jnp.float32)
+
+
+def lobcq_fake_quant_full_ref(x, books, *, lb: int, la: int, norm_max: float):
+    """Convenience: computes s_x internally."""
+    return lobcq_fake_quant_ref(x, books, tensor_scale(x, norm_max), lb=lb, la=la, norm_max=norm_max)
+
+
+def matmul_ref(a, b):
+    """f32 matmul oracle for the Pallas GEMM kernel."""
+    return jnp.matmul(jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
+                      precision="highest")
+
+
+# ---- baseline quantizers in jnp (model graph variants, §4.1) ----
+
+def mx4_quant_ref(x, *, block_len: int = 16):
+    """MX4 proxy: E1M2 scalars + per-block E8M0 floor scale (A.5.1)."""
+    from ..formats import E1M2, e8m0_floor
+
+    x = jnp.asarray(x, dtype=jnp.float32)
+    shape = x.shape
+    blocks = x.reshape(-1, block_len)
+    amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = e8m0_floor(jnp.where(amax > 0, E1M2.max_value / jnp.where(amax > 0, amax, 1.0), 1.0), xp=jnp)
+    q = quantize_float(blocks * scale, E1M2, xp=jnp) / scale
+    q = jnp.where(amax > 0, q, 0.0)
+    return q.reshape(shape)
+
+
+def mxfp4_quant_ref(x, *, block_len: int = 32):
+    """MXFP4: E2M1 scalars + per-block E8M0 floor scale."""
+    from ..formats import E2M1, e8m0_floor
+
+    x = jnp.asarray(x, dtype=jnp.float32)
+    shape = x.shape
+    blocks = x.reshape(-1, block_len)
+    amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = e8m0_floor(jnp.where(amax > 0, E2M1.max_value / jnp.where(amax > 0, amax, 1.0), 1.0), xp=jnp)
+    q = quantize_float(blocks * scale, E2M1, xp=jnp) / scale
+    q = jnp.where(amax > 0, q, 0.0)
+    return q.reshape(shape)
+
+
+def vsq_quant_ref(x, *, vec_len: int = 16, scalar_bits: int = 4, scale_bits: int = 8):
+    """VSQ: INT4 scalars, per-vector scale itself on a UINT8 linear grid
+    (A.5) — including the wide-dynamic-range collapse failure mode."""
+    x = jnp.asarray(x, dtype=jnp.float32)
+    shape = x.shape
+    smax = float((1 << (scalar_bits - 1)) - 1)
+    vecs = x.reshape(-1, vec_len)
+    amax = jnp.max(jnp.abs(vecs), axis=1)
+    scales = jnp.where(amax > 0, smax / jnp.where(amax > 0, amax, 1.0), 0.0)
+    scale_max = jnp.max(scales)
+    levels = float((1 << scale_bits) - 1)
+    s2 = jnp.where(scale_max > 0, levels / scale_max, 0.0)
+    qs = jnp.where(s2 > 0, jnp.maximum(jnp.round(scales * s2), 0.0) / s2, 0.0)
+    q = jnp.round(jnp.clip(vecs * qs[:, None], -smax, smax))
+    deq = jnp.where(qs[:, None] > 0, q / jnp.where(qs[:, None] > 0, qs[:, None], 1.0), 0.0)
+    return deq.reshape(shape)
+
+
+def quant_ref_by_name(name: str):
+    """Scheme registry used by model.py's activation-quant variants."""
+    return {
+        "mx4": mx4_quant_ref,
+        "mxfp4": mxfp4_quant_ref,
+        "vsq": vsq_quant_ref,
+    }[name]
+
+
+def numpy_oracle_check(x, books, cfg):
+    """Cross-check helper: f64-accurate numpy result for the same op."""
+    from .. import lobcq as L
+
+    return L.fake_quantize(np.asarray(x, np.float32), cfg, np.asarray(books, np.float32))

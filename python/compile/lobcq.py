@@ -1,0 +1,209 @@
+"""LO-BCQ calibration in numpy — build-time mirror of
+``rust/src/quant/lobcq.rs`` (paper §2.2–2.4).
+
+Used by ``aot.py`` to calibrate the universal codebook families shipped in
+``artifacts/codebooks.json`` (raw levels; consumers apply INT-B_c codeword
+quantization). The fake-quantize here is the numpy oracle the Pallas
+kernel and the Rust implementation are both checked against.
+"""
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .formats import E4M3, quantize_float, quantize_int
+from .pcg import Pcg32
+
+
+@dataclass(frozen=True)
+class LobcqConfig:
+    lb: int = 8
+    la: int = 64
+    nc: int = 8
+    b: int = 4
+    bc: int = 6
+
+    @property
+    def entries(self) -> int:
+        return 1 << self.b
+
+    @property
+    def norm_max(self) -> float:
+        return float((1 << (self.bc - 1)) - 1)
+
+    @property
+    def bitwidth(self) -> float:
+        """eq. 9 without the negligible codebook term."""
+        return self.b + np.log2(self.nc) / self.lb + 8.0 / self.la
+
+
+def normalize(data: np.ndarray, cfg: LobcqConfig):
+    """Per-block-array normalization (eq. 7–8), f32 semantics matching
+    rust ``lobcq::normalize``. Returns (values, eff_scales, s_x)."""
+    flat = np.asarray(data, dtype=np.float32).reshape(-1)
+    assert flat.size % cfg.la == 0, f"{flat.size} % {cfg.la} != 0"
+    nm = np.float32(cfg.norm_max)
+    tensor_amax = np.float32(np.max(np.abs(flat))) if flat.size else np.float32(0)
+    s_x = nm / tensor_amax if tensor_amax > 0 else np.float32(1.0)
+    arrays = flat.reshape(-1, cfg.la)
+    amax = np.max(np.abs(arrays), axis=1).astype(np.float32)
+    s_a = (nm / np.where(amax > 0, amax, 1)).astype(np.float32)
+    rel = quantize_float(s_a / s_x, E4M3).astype(np.float32)
+    # All-zero block arrays get scale 0: decode's inverse-scale guard then
+    # reproduces exact zeros (mirrors rust + the Pallas kernel).
+    eff = np.where(amax > 0, rel * s_x, np.float32(0.0)).astype(np.float32)
+    values = (arrays * eff[:, None]).astype(np.float32)
+    return values.reshape(-1), eff, np.float32(s_x)
+
+
+def nearest_index(levels: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Nearest sorted-level index with ties to the LOWER level — identical
+    tie rule to rust ``nearest_level_index``."""
+    idx = np.searchsorted(levels, x)  # first level >= x ... (left)
+    idx = np.clip(idx, 0, len(levels) - 1)
+    lo = np.clip(idx - 1, 0, len(levels) - 1)
+    take_lo = (idx > 0) & ((x - levels[lo]) <= (levels[idx] - x))
+    return np.where(take_lo, lo, idx)
+
+
+def quantize_with_levels(levels: np.ndarray, x: np.ndarray) -> np.ndarray:
+    return levels[nearest_index(levels, x)]
+
+
+def lloyd_max(data: np.ndarray, init_levels: np.ndarray, max_iters: int = 100, rel_tol: float = 1e-9):
+    """1-D Lloyd-Max warm-started from ``init_levels`` (sorted)."""
+    data = np.sort(np.asarray(data, dtype=np.float32))
+    levels = np.array(init_levels, dtype=np.float32)
+    if data.size == 0:
+        return levels
+    prev = np.inf
+    for _ in range(max_iters):
+        thr = 0.5 * (levels[:-1] + levels[1:])
+        bounds = np.concatenate([[0], np.searchsorted(data, thr), [data.size]])
+        for i in range(len(levels)):
+            lo, hi = bounds[i], bounds[i + 1]
+            if hi > lo:
+                levels[i] = np.float32(np.mean(data[lo:hi].astype(np.float64)))
+        levels = np.sort(levels)
+        mse = float(np.mean((data - quantize_with_levels(levels, data)) ** 2))
+        if np.isfinite(prev) and prev - mse <= rel_tol * max(prev, 1e-30):
+            break
+        prev = mse
+    return levels
+
+
+def quantile_init(data: np.ndarray, k: int) -> np.ndarray:
+    data = np.sort(np.asarray(data, dtype=np.float32))
+    if data.size == 0:
+        return np.arange(k, dtype=np.float32)
+    q = (np.arange(k) + 0.5) / k
+    levels = data[np.minimum((q * data.size).astype(int), data.size - 1)].astype(np.float32)
+    for i in range(1, k):
+        if levels[i] <= levels[i - 1]:
+            levels[i] = levels[i - 1] + np.float32(1.1920929e-07) * (1 + abs(levels[i - 1]))
+    return levels
+
+
+@dataclass
+class CalibResult:
+    books: np.ndarray  # (Nc, 2^B) raw (unquantized) levels
+    trace: list = field(default_factory=list)
+
+
+def kmeanspp_seeds(blocks: np.ndarray, k: int, rng: Pcg32) -> list:
+    """k-means++ (D² sampling) over block rows."""
+    n = blocks.shape[0]
+    seeds = [rng.index(n)]
+    d2 = np.sum((blocks - blocks[seeds[0]]) ** 2, axis=1).astype(np.float64)
+    while len(seeds) < k:
+        total = float(d2.sum())
+        if total <= 0:
+            seeds.append(rng.index(n))
+        else:
+            x = rng.next_f64() * total
+            pick = int(np.searchsorted(np.cumsum(d2), x))
+            pick = min(pick, n - 1)
+            seeds.append(pick)
+        d2 = np.minimum(d2, np.sum((blocks - blocks[seeds[-1]]) ** 2, axis=1))
+    return seeds
+
+
+def block_errors(books: np.ndarray, blocks: np.ndarray, chunk: int = 2048) -> np.ndarray:
+    """(n_blocks, Nc) squared error of quantizing each block with each
+    codebook; accumulated in float64 to match rust's f64 accumulation.
+    Chunked so the (n, Nc, lb, E) distance tensor stays bounded."""
+    out = np.empty((blocks.shape[0], books.shape[0]), dtype=np.float64)
+    for lo in range(0, blocks.shape[0], chunk):
+        sl = blocks[lo:lo + chunk]
+        d = sl[:, None, :, None].astype(np.float64) - books[None, :, None, :].astype(np.float64)
+        per_scalar = np.min(d * d, axis=3)
+        out[lo:lo + chunk] = per_scalar.sum(axis=2)
+    return out
+
+
+def calibrate(blocks: np.ndarray, cfg: LobcqConfig, seed: int = 0, max_iters: int = 100,
+              rel_tol: float = 1e-6) -> CalibResult:
+    """LO-BCQ iterations (eq. 4–6) on normalized blocks (n, lb)."""
+    blocks = np.asarray(blocks, dtype=np.float32)
+    n = blocks.shape[0]
+    rng = Pcg32(seed, 0xC0FFEE)
+
+    # --- init: kmeans++ seeds -> cluster -> per-cluster Lloyd-Max ---
+    seeds = kmeanspp_seeds(blocks, cfg.nc, rng)
+    seed_blocks = blocks[seeds]
+    d = blocks[:, None, :] - seed_blocks[None, :, :]
+    assign = np.argmin(np.sum(d * d, axis=2), axis=1)
+    books = np.zeros((cfg.nc, cfg.entries), dtype=np.float32)
+    for c in range(cfg.nc):
+        members = blocks[assign == c].reshape(-1)
+        init = quantile_init(members, cfg.entries)
+        books[c] = lloyd_max(members, init)
+
+    trace = []
+    total_scalars = blocks.size
+    for _ in range(max_iters):
+        # step 1: reassign (eq. 4)
+        errs = block_errors(books, blocks)
+        assign = np.argmin(errs, axis=1)
+        # step 2: refit (eq. 6), warm-started
+        for c in range(cfg.nc):
+            members = blocks[assign == c].reshape(-1)
+            if members.size:
+                books[c] = lloyd_max(members, books[c])
+        sq = 0.0
+        for c in range(cfg.nc):
+            members = blocks[assign == c].reshape(-1)
+            if members.size:
+                q = quantize_with_levels(np.sort(books[c]), members)
+                sq += float(np.sum((members.astype(np.float64) - q) ** 2))
+        j = sq / total_scalars
+        if trace and trace[-1] - j <= rel_tol * max(trace[-1], 1e-30):
+            trace.append(j)
+            break
+        trace.append(j)
+    books = np.sort(books, axis=1)
+    assert n == blocks.shape[0]
+    return CalibResult(books=books, trace=trace)
+
+
+def quantize_codewords(books: np.ndarray, bc: int) -> np.ndarray:
+    return np.sort(quantize_int(books, bc), axis=1).astype(np.float32)
+
+
+def fake_quantize(data: np.ndarray, cfg: LobcqConfig, books: np.ndarray) -> np.ndarray:
+    """Numpy oracle: normalize → select codebook per block (f64 errors,
+    first-min ties) → nearest codeword (ties to lower) → denormalize.
+    Matches rust ``lobcq::fake_quantize`` and the Pallas kernel."""
+    shape = np.asarray(data).shape
+    values, eff, _ = normalize(data, cfg)
+    blocks = values.reshape(-1, cfg.lb)
+    errs = block_errors(books, blocks)
+    sel = np.argmin(errs, axis=1)
+    out = np.empty_like(blocks, dtype=np.float32)
+    for c in range(books.shape[0]):
+        mask = sel == c
+        if mask.any():
+            out[mask] = quantize_with_levels(books[c], blocks[mask])
+    arrays = out.reshape(-1, cfg.la)
+    inv = np.where(eff != 0, np.float32(1.0) / eff, np.float32(0.0)).astype(np.float32)
+    return (arrays * inv[:, None]).astype(np.float32).reshape(shape)

@@ -1,0 +1,246 @@
+"""L2: tiny decoder-only GPT in JAX with quantized GEMMs.
+
+The paper quantizes the QKV, attention-projection, and fully-connected
+GEMMs of GPT3/Llama2/Nemotron4 (§4.1); this model has exactly those GEMM
+sites. Three sizes (s/m/l) stand in for the paper's model-size axis
+(DESIGN.md §1 substitutions). Weights are *inputs* to the lowered graphs,
+so the Rust side can feed weights quantized under any scheme/config; the
+activation-quantization variants additionally fake-quantize every GEMM's
+activation input in-graph — LO-BCQ via the L1 Pallas kernel, baselines
+via their jnp references.
+"""
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .corpus import VOCAB
+from .kernels import ref as kref
+from .kernels.lobcq_quant import lobcq_fake_quant
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d: int
+    n_layers: int
+    n_heads: int
+    vocab: int = VOCAB
+    max_t: int = 64
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d % self.n_heads == 0
+        return self.d // self.n_heads
+
+    def param_count(self) -> int:
+        shapes = param_shapes(self)
+        return sum(int(np.prod(s)) for s in shapes.values())
+
+
+SIZES = {
+    "s": ModelConfig("s", d=128, n_layers=2, n_heads=4),
+    "m": ModelConfig("m", d=256, n_layers=3, n_heads=8),
+    "l": ModelConfig("l", d=256, n_layers=6, n_heads=8),
+}
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    """Ordered name -> shape map. This order is the weights-as-inputs
+    calling convention shared with Rust (artifacts/manifest.json)."""
+    shapes = {
+        "embed": (cfg.vocab, cfg.d),
+        "pos": (cfg.max_t, cfg.d),
+    }
+    for i in range(cfg.n_layers):
+        shapes[f"l{i}.ln1.g"] = (cfg.d,)
+        shapes[f"l{i}.ln1.b"] = (cfg.d,)
+        shapes[f"l{i}.attn.wqkv"] = (cfg.d, 3 * cfg.d)
+        shapes[f"l{i}.attn.wo"] = (cfg.d, cfg.d)
+        shapes[f"l{i}.ln2.g"] = (cfg.d,)
+        shapes[f"l{i}.ln2.b"] = (cfg.d,)
+        shapes[f"l{i}.mlp.w1"] = (cfg.d, cfg.d_ff)
+        shapes[f"l{i}.mlp.w2"] = (cfg.d_ff, cfg.d)
+    shapes["lnf.g"] = (cfg.d,)
+    shapes["lnf.b"] = (cfg.d,)
+    return shapes
+
+
+def param_names(cfg: ModelConfig) -> list:
+    return list(param_shapes(cfg).keys())
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in param_shapes(cfg).items():
+        if name.endswith(".g"):
+            params[name] = np.ones(shape, np.float32)
+        elif name.endswith(".b"):
+            params[name] = np.zeros(shape, np.float32)
+        else:
+            std = 0.02 if name in ("embed", "pos") else 0.02 / np.sqrt(2 * cfg.n_layers)
+            params[name] = (rng.standard_normal(shape) * std).astype(np.float32)
+    return params
+
+
+# ---- quantization plumbing ----
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """Which scheme (if any) fake-quantizes GEMM *activations* in-graph.
+
+    Weight quantization is done by the caller (Rust feeds pre-quantized
+    weights), keeping one graph per activation scheme instead of one per
+    (weight scheme × activation scheme) pair.
+    """
+
+    scheme: str = "none"  # none | lobcq | mx4 | vsq | mxfp4
+    lb: int = 8
+    la: int = 64
+    norm_max: float = 31.0
+    books: tuple = field(default=None, hash=False, compare=False)  # (Nc, E) np array
+    use_pallas: bool = True
+
+    def tag(self) -> str:
+        if self.scheme == "none":
+            return "bf16"
+        if self.scheme == "lobcq":
+            nc = len(self.books)
+            return f"lobcq_g{self.la}_nc{nc}_lb{self.lb}"
+        return self.scheme
+
+
+def make_act_quant(spec: QuantSpec, books_arr=None):
+    """Activation fake-quant function (..., K) -> (..., K).
+
+    ``books_arr`` (a traced jnp array) overrides ``spec.books`` so the
+    codebooks can be an *input* of the lowered graph. This is both closer
+    to the paper's deployment (frozen ≤0.19 KB table resident at runtime)
+    and a required workaround: xla_extension 0.5.1 mis-executes the
+    kernel when the codebook rides in as a large f32 constant (probed in
+    rust/tests — constant-baked books decode to zeros).
+    """
+    if spec.scheme == "none":
+        return lambda x: x
+    if spec.scheme == "lobcq":
+        books = books_arr if books_arr is not None else jnp.asarray(
+            np.asarray(spec.books, np.float32))
+        if spec.use_pallas:
+            return lambda x: lobcq_fake_quant(
+                x, books, lb=spec.lb, la=spec.la, norm_max=spec.norm_max)
+        return lambda x: kref.lobcq_fake_quant_full_ref(
+            x, books, lb=spec.lb, la=spec.la, norm_max=spec.norm_max)
+    return kref.quant_ref_by_name(spec.scheme)
+
+
+def quantize_weight_np(w: np.ndarray, spec: QuantSpec) -> np.ndarray:
+    """Offline weight fake-quant along the reduction (first) axis, numpy.
+    Used by python-side sanity checks; Rust does the same in production."""
+    if spec.scheme == "none":
+        return w
+    if spec.scheme == "lobcq":
+        from . import lobcq as L
+
+        cfg = L.LobcqConfig(lb=spec.lb, la=spec.la, nc=len(spec.books), b=4, bc=6)
+        return L.fake_quantize(np.ascontiguousarray(w.T), cfg, np.asarray(spec.books)).T.copy()
+    fn = kref.quant_ref_by_name(spec.scheme)
+    return np.asarray(fn(jnp.asarray(np.ascontiguousarray(w.T)))).T.copy()
+
+
+# ---- forward pass ----
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x ** 3)))
+
+
+def forward(params: dict, tokens, cfg: ModelConfig, spec: QuantSpec = QuantSpec(),
+            taps: list = None, books_arr=None):
+    """Logits for a (B, T) int32 token batch. ``taps``, when a list, is
+    filled with every GEMM's pre-quantization activation (calibration)."""
+    act_q = make_act_quant(spec, books_arr)
+
+    def qmatmul(x, w):
+        if taps is not None:
+            taps.append(x)
+        return act_q(x) @ w
+
+    b, t = tokens.shape
+    x = params["embed"][tokens] + params["pos"][:t][None, :, :]
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    neg = jnp.float32(-1e9)
+    for i in range(cfg.n_layers):
+        h = layer_norm(x, params[f"l{i}.ln1.g"], params[f"l{i}.ln1.b"])
+        qkv = qmatmul(h, params[f"l{i}.attn.wqkv"])  # (B,T,3D)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        hd = cfg.head_dim
+
+        def heads(z):
+            return z.reshape(b, t, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+
+        qh, kh, vh = heads(q), heads(k), heads(v)
+        att = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(jnp.float32(hd))
+        att = jnp.where(mask[None, None, :, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", att, vh)
+        out = out.transpose(0, 2, 1, 3).reshape(b, t, cfg.d)
+        x = x + qmatmul(out, params[f"l{i}.attn.wo"])
+
+        h = layer_norm(x, params[f"l{i}.ln2.g"], params[f"l{i}.ln2.b"])
+        h = gelu(qmatmul(h, params[f"l{i}.mlp.w1"]))
+        x = x + qmatmul(h, params[f"l{i}.mlp.w2"])
+
+    x = layer_norm(x, params["lnf.g"], params["lnf.b"])
+    # Tied LM head (not quantized — the paper quantizes GEMM layers only).
+    return x @ params["embed"].T
+
+
+def forward_flat(flat_weights, tokens, cfg: ModelConfig, spec: QuantSpec = QuantSpec(),
+                 books_arr=None):
+    """Weights-as-positional-inputs wrapper (the lowered signature)."""
+    names = param_names(cfg)
+    params = dict(zip(names, flat_weights))
+    return forward(params, tokens, cfg, spec, books_arr=books_arr)
+
+
+def loss_fn(params, tokens, cfg: ModelConfig):
+    """Next-token cross entropy over (B, T+1) token windows."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(params, inp, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def perplexity(params, token_windows, cfg: ModelConfig) -> float:
+    """Corpus perplexity over (N, T+1) windows (python-side check; the
+    production evaluator is Rust + PJRT)."""
+    loss = 0.0
+    n = 0
+    f = jax.jit(partial(loss_fn, cfg=cfg))
+    for i in range(0, token_windows.shape[0], 64):
+        batch = token_windows[i:i + 64]
+        loss += float(f(params, batch)) * batch.shape[0]
+        n += batch.shape[0]
+    return float(np.exp(loss / n))
+
+
+def collect_activation_taps(params, tokens, cfg: ModelConfig) -> list:
+    """All GEMM input activations for codebook calibration (§4.1: one
+    batch of training data through the proxy model)."""
+    taps = []
+    forward(params, tokens, cfg, QuantSpec(), taps=taps)
+    return [np.asarray(t).reshape(-1, t.shape[-1]) for t in taps]

@@ -1,0 +1,52 @@
+"""PCG32 — bit-exact mirror of ``rust/src/util/rng.rs``.
+
+The synthetic corpus (and anything else that must agree token-exactly
+between the build path and the Rust runtime) derives all randomness from
+this generator. Parity is enforced by ``tests/test_parity.py`` against
+vectors emitted by ``lobcq gen-parity``.
+"""
+
+MASK64 = (1 << 64) - 1
+PCG_MULT = 6364136223846793005
+
+
+class Pcg32:
+    """PCG-XSH-RR 64/32 (O'Neill 2014)."""
+
+    def __init__(self, seed: int, stream: int = 0):
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & MASK64
+        self.next_u32()
+        self.state = (self.state + seed) & MASK64
+        self.next_u32()
+
+    def next_u32(self) -> int:
+        old = self.state
+        self.state = (old * PCG_MULT + self.inc) & MASK64
+        xorshifted = ((old >> 18) ^ old) >> 27 & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << ((-rot) & 31))) & 0xFFFFFFFF
+
+    def next_u64(self) -> int:
+        return (self.next_u32() << 32) | self.next_u32()
+
+    def next_f32(self) -> float:
+        # Matches rust: (next_u32() >> 8) * 2^-24, computed in f32.
+        import numpy as np
+
+        return float(np.float32(self.next_u32() >> 8) * np.float32(1.0 / (1 << 24)))
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, bound: int) -> int:
+        """Lemire-style unbiased bounded draw (mirrors rust exactly)."""
+        assert bound > 0
+        threshold = (-bound) % (1 << 32) % bound
+        while True:
+            r = self.next_u32()
+            if r >= threshold:
+                return r % bound
+
+    def index(self, bound: int) -> int:
+        return self.below(bound)

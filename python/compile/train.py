@@ -1,0 +1,110 @@
+"""Build-time pre-training of the tiny GPT sizes on the synthetic corpus.
+
+Runs once under ``make artifacts`` (skipped when weights exist). Adam is
+hand-rolled (no optax dependency). The loss curve is appended to
+``artifacts/train_log_{size}.json`` and summarized in EXPERIMENTS.md.
+"""
+
+import json
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import SIZES, ModelConfig, init_params, loss_fn, perplexity
+
+TRAIN_SEED = 1234
+VAL_SEED = 5678
+TRAIN_TOKENS = 400_000
+VAL_TOKENS = 40_000
+
+
+def windows(tokens: np.ndarray, t: int, stride: int) -> np.ndarray:
+    """(N, t+1) next-token-prediction windows."""
+    n = (len(tokens) - t - 1) // stride
+    return np.stack([tokens[i * stride:i * stride + t + 1] for i in range(n)]).astype(np.int32)
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    new_p, new_m, new_v = {}, {}, {}
+    t = step + 1
+    for k in params:
+        new_m[k] = b1 * m[k] + (1 - b1) * grads[k]
+        new_v[k] = b2 * v[k] + (1 - b2) * grads[k] ** 2
+        mhat = new_m[k] / (1 - b1 ** t)
+        vhat = new_v[k] / (1 - b2 ** t)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_p, new_m, new_v
+
+
+def train_size(cfg: ModelConfig, steps: int, batch: int = 16, lr: float = 3e-3,
+               log_every: int = 25, out_dir: Path = Path("../artifacts")) -> dict:
+    t0 = time.time()
+    train_tok = np.array(corpus.generate(TRAIN_SEED, TRAIN_TOKENS))
+    val_tok = np.array(corpus.generate(VAL_SEED, VAL_TOKENS))
+    t = cfg.max_t
+    train_win = windows(train_tok, t, stride=t // 2)
+    val_win = windows(val_tok, t, stride=t)[:256]
+
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg, seed=7).items()}
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(vv) for k, vv in params.items()}
+
+    grad_fn = jax.jit(jax.value_and_grad(partial(loss_fn, cfg=cfg)))
+    update = jax.jit(partial(adam_update, lr=lr))
+
+    rng = np.random.default_rng(99)
+    log = []
+    for step in range(steps):
+        idx = rng.integers(0, train_win.shape[0], size=batch)
+        loss, grads = grad_fn(params, jnp.asarray(train_win[idx]))
+        params, m, v = update(params, grads, m, v, step)
+        if step % log_every == 0 or step == steps - 1:
+            log.append({"step": step, "loss": float(loss)})
+            print(f"[train {cfg.name}] step {step:4d} loss {float(loss):.4f}", flush=True)
+
+    val_ppl = perplexity(params, val_win, cfg)
+    uniform_ppl = float(cfg.vocab)
+    elapsed = time.time() - t0
+    print(f"[train {cfg.name}] val ppl {val_ppl:.3f} (uniform {uniform_ppl}) in {elapsed:.0f}s")
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    np.savez(out_dir / f"weights_{cfg.name}.npz", **{k: np.asarray(v) for k, v in params.items()})
+    summary = {
+        "size": cfg.name,
+        "params": cfg.param_count(),
+        "steps": steps,
+        "batch": batch,
+        "final_loss": log[-1]["loss"],
+        "val_ppl": val_ppl,
+        "seconds": elapsed,
+        "loss_curve": log,
+    }
+    (out_dir / f"train_log_{cfg.name}.json").write_text(json.dumps(summary, indent=2))
+    return summary
+
+
+def load_params(size: str, out_dir: Path = Path("../artifacts")) -> dict:
+    with np.load(out_dir / f"weights_{size}.npz") as z:
+        return {k: z[k] for k in z.files}
+
+
+STEPS = {"s": 500, "m": 350, "l": 250}
+
+
+def main(out_dir: Path = Path("../artifacts"), sizes=None):
+    results = {}
+    for name in sizes or SIZES:
+        if (out_dir / f"weights_{name}.npz").exists():
+            print(f"[train] weights_{name}.npz exists, skipping")
+            continue
+        results[name] = train_size(SIZES[name], steps=STEPS[name], out_dir=out_dir)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Format codec tests (python mirror of rust formats/)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import formats as F
+
+
+def enumerate_non_negative(fmt: F.FloatFormat):
+    vals = [0.0]
+    for m in range(1, 1 << fmt.bm):
+        vals.append(m * fmt.min_subnormal)
+    top = (1 << fmt.be) - 1
+    for ecode in range(1, top + 1):
+        e = ecode - fmt.bias
+        for m in range(1 << fmt.bm):
+            v = (1.0 + m / (1 << fmt.bm)) * 2.0 ** e
+            if v <= fmt.max_value:
+                vals.append(v)
+    return sorted(set(vals))
+
+
+@pytest.mark.parametrize("fmt", [F.E1M2, F.E2M1, F.E3M0, F.E3M2, F.E3M3])
+def test_quantize_idempotent_on_grid(fmt):
+    grid = enumerate_non_negative(fmt)
+    full = [-v for v in grid if v > 0] + grid
+    x = np.array(full, np.float32)
+    q = F.quantize_float(x, fmt)
+    np.testing.assert_array_equal(q, x)
+
+
+def test_e2m1_grid_matches_mxfp4_spec():
+    assert enumerate_non_negative(F.E2M1) == [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+
+
+def test_e4m3_saturates_at_448():
+    x = np.array([1e9, -1e9, 500.0], np.float32)
+    q = F.quantize_float(x, F.E4M3)
+    np.testing.assert_array_equal(q, [448.0, -448.0, 448.0])
+
+
+@pytest.mark.parametrize("fmt", [F.E1M2, F.E2M1, F.E3M0, F.E4M3])
+@settings(max_examples=200, deadline=None)
+@given(x=st.floats(-1e4, 1e4, allow_nan=False, width=32))
+def test_quantize_picks_nearest(fmt, x):
+    grid = np.array(enumerate_non_negative(fmt), np.float64)
+    grid = np.concatenate([-grid[::-1], grid])
+    q = float(F.quantize_float(np.float32(x), fmt))
+    best = float(grid[np.argmin(np.abs(grid - np.float64(np.float32(x))))])
+    assert abs(q - np.float32(x)) <= abs(best - np.float32(x)) + 1e-7
+
+
+def test_ties_to_even():
+    # E2M1 around 1.0: 1.25 ties {1.0, 1.5} -> 1.0 (even mantissa).
+    assert float(F.quantize_float(np.float32(1.25), F.E2M1)) == 1.0
+    assert float(F.quantize_float(np.float32(1.75), F.E2M1)) == 2.0
+
+
+def test_int_codec():
+    q = F.quantize_int(np.array([100.0, -100.0, 2.5, 3.5, -2.5], np.float32), 4)
+    np.testing.assert_array_equal(q, [7.0, -7.0, 2.0, 4.0, -2.0])
+
+
+def test_e8m0_floor():
+    x = np.array([0.1, 1.0, 1.5, 3.9, 1000.0], np.float32)
+    q = F.e8m0_floor(x)
+    assert np.all(q <= x + 1e-9)
+    assert np.all(q * 2 > x)
+    assert np.all(np.log2(q) % 1 == 0)
+
+
+def test_bf16_round_trip():
+    exact = np.array([0.0, 1.0, -2.5, 384.0], np.float32)
+    np.testing.assert_array_equal(F.bf16_round(exact), exact)
+    # bf16 ulp at 1.0 is 2^-7.
+    assert float(F.bf16_round(np.float32(1.0 + 2.0 ** -10))) == 1.0
+
+
+@settings(max_examples=200, deadline=None)
+@given(x=st.floats(allow_nan=False, allow_infinity=False, width=32))
+def test_bf16_matches_jax_cast(x):
+    import jax.numpy as jnp
+
+    ours = float(F.bf16_round(np.float32(x)))
+    jaxs = float(jnp.asarray(np.float32(x)).astype(jnp.bfloat16).astype(jnp.float32))
+    assert ours == jaxs

@@ -1,0 +1,135 @@
+"""L1 kernel correctness: Pallas vs pure-jnp ref (the CORE correctness
+signal), ref vs f64 numpy oracle, GEMM vs jnp matmul. Hypothesis sweeps
+shapes and LO-BCQ configurations."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import lobcq as L
+from compile.kernels.gemm import gemm, quantized_gemm
+from compile.kernels.lobcq_quant import lobcq_fake_quant, vmem_estimate
+from compile.kernels.ref import (lobcq_fake_quant_full_ref, matmul_ref,
+                                 mx4_quant_ref, mxfp4_quant_ref, vsq_quant_ref)
+
+
+def make_books(nc: int, entries: int = 16, bc: int = 6, seed: int = 0) -> np.ndarray:
+    """Codeword-quantized random-ish but sorted books."""
+    rng = np.random.default_rng(seed)
+    m = (1 << (bc - 1)) - 1
+    raw = rng.uniform(-m, m, size=(nc, entries)).astype(np.float32)
+    return L.quantize_codewords(raw, bc)
+
+
+def make_data(rows: int, k: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, k)).astype(np.float32) * 2.0
+    # Sprinkle outliers.
+    n_out = max(1, x.size // 50)
+    idx = rng.integers(0, x.size, n_out)
+    x.reshape(-1)[idx] *= 8.0
+    return x
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 24),
+    arrays_per_row=st.integers(1, 3),
+    lb=st.sampled_from([2, 4, 8]),
+    nc=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_pallas_kernel_matches_ref(rows, arrays_per_row, lb, nc, seed):
+    la = 64
+    k = la * arrays_per_row
+    x = make_data(rows, k, seed)
+    books = make_books(nc, seed=seed)
+    ker = np.asarray(lobcq_fake_quant(x, books, lb=lb, la=la, norm_max=31.0, tile_rows=8))
+    ref = np.asarray(lobcq_fake_quant_full_ref(x, books, lb=lb, la=la, norm_max=31.0))
+    np.testing.assert_array_equal(ker, ref)
+
+
+@settings(max_examples=10, deadline=None)
+@given(lb=st.sampled_from([4, 8]), nc=st.sampled_from([2, 8]), seed=st.integers(0, 2 ** 16))
+def test_ref_matches_numpy_oracle(lb, nc, seed):
+    """jnp (f32 error sums) vs numpy (f64): allow rare tie-flips at the
+    codebook-selection boundary, require numerics otherwise identical."""
+    la = 64
+    x = make_data(16, 128, seed)
+    books = make_books(nc, seed=seed)
+    cfg = L.LobcqConfig(lb=lb, la=la, nc=nc, b=4, bc=6)
+    ref = np.asarray(lobcq_fake_quant_full_ref(x, books, lb=lb, la=la, norm_max=cfg.norm_max))
+    oracle = L.fake_quantize(x, cfg, books)
+    mismatch = np.mean(ref != oracle)
+    assert mismatch < 5e-3, f"mismatch fraction {mismatch}"
+    # And where they differ, both must be valid low-error quantizations.
+    nmse_ref = np.mean((x - ref) ** 2) / np.mean(x ** 2)
+    nmse_orc = np.mean((x - oracle) ** 2) / np.mean(x ** 2)
+    assert abs(nmse_ref - nmse_orc) < 1e-4
+
+
+def test_kernel_3d_input_and_padding():
+    x = make_data(5, 128, 3).reshape(5, 1, 128)  # odd row count -> padding
+    books = make_books(4)
+    ker = np.asarray(lobcq_fake_quant(x, books, lb=8, la=64, norm_max=31.0, tile_rows=8))
+    ref = np.asarray(lobcq_fake_quant_full_ref(x, books, lb=8, la=64, norm_max=31.0))
+    assert ker.shape == x.shape
+    np.testing.assert_array_equal(ker, ref)
+
+
+def test_kernel_zero_tensor():
+    x = np.zeros((4, 64), np.float32)
+    books = make_books(2)
+    out = np.asarray(lobcq_fake_quant(x, books, lb=8, la=64, norm_max=31.0))
+    # All-zero input must stay exactly zero (guard paths).
+    assert np.allclose(out, 0.0)
+
+
+def test_quantization_error_bounded():
+    x = make_data(16, 256, 11)
+    books = make_books(8)
+    out = np.asarray(lobcq_fake_quant(x, books, lb=8, la=64, norm_max=31.0))
+    nmse = np.mean((x - out) ** 2) / np.mean(x ** 2)
+    assert 0 < nmse < 0.05, nmse
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 40), k=st.integers(1, 50), n=st.integers(1, 40),
+       seed=st.integers(0, 2 ** 16))
+def test_gemm_matches_matmul(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(gemm(a, b, tm=16, tn=16, tk=16))
+    want = np.asarray(matmul_ref(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_quantized_gemm_pipeline():
+    """W4A4 pipeline with *calibrated* books: output close to f32 GEMM."""
+    rng = np.random.default_rng(42)
+    x = rng.standard_normal((16, 256)).astype(np.float32)
+    w = rng.standard_normal((256, 64)).astype(np.float32)
+    cfg = L.LobcqConfig(lb=8, la=64, nc=8)
+    blocks, _, _ = L.normalize(np.concatenate([x.reshape(-1), w.T.reshape(-1)]), cfg)
+    res = L.calibrate(blocks.reshape(-1, cfg.lb)[:2048], cfg, seed=1, max_iters=10)
+    books = L.quantize_codewords(res.books, cfg.bc)
+    got = np.asarray(quantized_gemm(x, w, books, lb=8, la=64, norm_max=31.0))
+    want = x @ w
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert rel < 0.15, rel
+
+
+def test_vmem_budget_for_serving_tile():
+    """DESIGN.md §Perf: serving tile VMEM ≤ 4 MiB."""
+    bytes_ = vmem_estimate(tile_rows=8, k=256, nc=16, entries=16, lb=8)
+    assert bytes_ <= 4 * 1024 * 1024, bytes_
+
+
+@pytest.mark.parametrize("fn,grp", [(mx4_quant_ref, 16), (mxfp4_quant_ref, 32), (vsq_quant_ref, 16)])
+def test_baseline_refs_lossy_but_bounded(fn, grp):
+    x = make_data(8, 64, 5)
+    q = np.asarray(fn(x))
+    assert q.shape == x.shape
+    nmse = np.mean((x - q) ** 2) / np.mean(x ** 2)
+    assert 0 < nmse < 0.2, nmse

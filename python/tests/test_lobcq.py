@@ -1,0 +1,112 @@
+"""LO-BCQ calibration tests (python mirror of the Rust algorithm)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import lobcq as L
+
+
+def mixture(n: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    out = rng.random(n) < 0.05
+    x[out] *= 6.0
+    return x
+
+
+def test_normalize_round_trip():
+    cfg = L.LobcqConfig()
+    data = mixture(1024, 0)
+    vals, eff, s_x = L.normalize(data, cfg)
+    back = (vals.reshape(-1, cfg.la) / eff[:, None]).reshape(-1)
+    np.testing.assert_allclose(back, data, rtol=1e-5, atol=1e-6)
+    assert s_x > 0
+
+
+def test_normalize_hits_norm_max():
+    cfg = L.LobcqConfig()
+    vals, _, _ = L.normalize(mixture(512, 1), cfg)
+    per_array = np.abs(vals.reshape(-1, cfg.la)).max(axis=1)
+    assert np.all(per_array <= cfg.norm_max * 1.07)
+    assert np.all(per_array >= cfg.norm_max * 0.9)
+
+
+def test_calibration_trace_monotone():
+    cfg = L.LobcqConfig(nc=4)
+    blocks, _, _ = L.normalize(mixture(8192, 2), cfg)
+    res = L.calibrate(blocks.reshape(-1, cfg.lb), cfg, seed=3, max_iters=25, rel_tol=0)
+    assert len(res.trace) >= 2
+    for a, b in zip(res.trace, res.trace[1:]):
+        assert b <= a * (1 + 1e-9) + 1e-12, res.trace
+
+
+def test_more_codebooks_lower_mse():
+    data = mixture(16384, 4)
+    last = np.inf
+    for nc in (1, 4, 16):
+        cfg = L.LobcqConfig(nc=nc)
+        blocks, _, _ = L.normalize(data, cfg)
+        res = L.calibrate(blocks.reshape(-1, cfg.lb), cfg, seed=5, max_iters=25)
+        j = res.trace[-1]
+        assert j <= last * 1.02, (nc, j, last)
+        last = j
+
+
+def test_codeword_quantization_grid():
+    raw = np.array([[-30.7, -10.2, 10.6, 30.9]], np.float32)
+    np.testing.assert_array_equal(L.quantize_codewords(raw, 6), [[-31.0, -10.0, 11.0, 31.0]])
+    np.testing.assert_array_equal(L.quantize_codewords(raw, 4), [[-7.0, -7.0, 7.0, 7.0]])
+
+
+def test_fake_quantize_stable_under_requantization():
+    """Exact idempotency does NOT hold (re-quantizing re-derives the
+    block-array amax, which the first pass perturbed), but the second
+    pass must be *stable*: its change is far smaller than the first
+    pass's quantization error."""
+    cfg = L.LobcqConfig(nc=4)
+    data = mixture(2048, 6)
+    blocks, _, _ = L.normalize(data, cfg)
+    res = L.calibrate(blocks.reshape(-1, cfg.lb), cfg, seed=7, max_iters=15)
+    books = L.quantize_codewords(res.books, cfg.bc)
+    q1 = L.fake_quantize(data, cfg, books)
+    q2 = L.fake_quantize(q1, cfg, books)
+    err1 = float(np.mean((data - q1) ** 2))
+    err2 = float(np.mean((q1 - q2) ** 2))
+    assert err2 < 0.2 * err1, (err1, err2)
+
+
+def test_zero_block_array_stays_zero():
+    cfg = L.LobcqConfig(nc=2)
+    data = mixture(256, 8)
+    data[:cfg.la] = 0.0
+    blocks, eff, _ = L.normalize(data, cfg)
+    assert eff[0] == 0.0
+    res = L.calibrate(blocks.reshape(-1, cfg.lb), cfg, seed=9, max_iters=8)
+    books = L.quantize_codewords(res.books, cfg.bc)
+    q = L.fake_quantize(data, cfg, books)
+    assert np.all(q[:cfg.la] == 0.0)
+
+
+def test_nearest_index_tie_to_lower():
+    levels = np.array([-1.0, 0.0, 2.0], np.float32)
+    x = np.array([-0.5, 1.0, -5.0, 5.0], np.float32)
+    idx = L.nearest_index(levels, x)
+    np.testing.assert_array_equal(idx, [0, 1, 0, 2])  # ties -> lower level
+
+
+@settings(max_examples=15, deadline=None)
+@given(nc=st.sampled_from([2, 4]), seed=st.integers(0, 1 << 16), n_arrays=st.integers(2, 16))
+def test_fake_quantize_shape_and_finite(nc, seed, n_arrays):
+    cfg = L.LobcqConfig(nc=nc, la=32, lb=4)
+    data = mixture(32 * n_arrays, seed)
+    blocks, _, _ = L.normalize(data, cfg)
+    res = L.calibrate(blocks.reshape(-1, cfg.lb)[:512], cfg, seed=seed, max_iters=8)
+    books = L.quantize_codewords(res.books, cfg.bc)
+    q = L.fake_quantize(data, cfg, books)
+    assert q.shape == data.shape
+    assert np.all(np.isfinite(q))
+
+
+def test_bitwidth_eq9():
+    assert abs(L.LobcqConfig(lb=8, la=64, nc=8).bitwidth - 4.5) < 1e-9
+    assert abs(L.LobcqConfig(lb=8, la=128, nc=2).bitwidth - 4.1875) < 1e-9

@@ -1,0 +1,106 @@
+"""L2 model tests: shapes, quant variant plumbing, trainability signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import corpus
+from compile.model import (SIZES, QuantSpec, collect_activation_taps, forward,
+                           forward_flat, init_params, loss_fn, param_names,
+                           param_shapes)
+
+
+def toks(b, t, seed=0):
+    return jnp.asarray(np.array(corpus.generate(seed, b * (t + 1))[:b * t]).reshape(b, t),
+                       dtype=jnp.int32)
+
+
+def test_param_shapes_and_count():
+    cfg = SIZES["s"]
+    shapes = param_shapes(cfg)
+    assert shapes["embed"] == (cfg.vocab, cfg.d)
+    assert shapes["l0.attn.wqkv"] == (cfg.d, 3 * cfg.d)
+    assert cfg.param_count() == sum(int(np.prod(s)) for s in shapes.values())
+    # All GEMM reduction dims divisible by the largest block array (128)
+    # so every quant config in the paper's grid applies.
+    for name, s in shapes.items():
+        if len(s) == 2 and not name.startswith(("embed", "pos")):
+            assert s[0] % 128 == 0, (name, s)
+
+
+def test_forward_shapes_and_finite():
+    cfg = SIZES["s"]
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg).items()}
+    logits = forward(params, toks(2, 16), cfg)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_forward_flat_matches_dict():
+    cfg = SIZES["s"]
+    params = init_params(cfg)
+    names = param_names(cfg)
+    t = toks(1, 8)
+    a = forward({k: jnp.asarray(v) for k, v in params.items()}, t, cfg)
+    b = forward_flat([jnp.asarray(params[n]) for n in names], t, cfg)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    cfg = SIZES["s"]
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg).items()}
+    t1 = toks(1, 16, seed=1)
+    t2 = np.asarray(t1).copy()
+    t2[0, -1] = (t2[0, -1] + 1) % cfg.vocab
+    l1 = np.asarray(forward(params, t1, cfg))
+    l2 = np.asarray(forward(params, jnp.asarray(t2), cfg))
+    np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], atol=1e-5)
+    assert not np.allclose(l1[0, -1], l2[0, -1])
+
+
+def test_activation_taps_count():
+    cfg = SIZES["s"]
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg).items()}
+    taps = collect_activation_taps(params, toks(2, 16), cfg)
+    # 4 GEMMs per layer: qkv, wo, w1, w2.
+    assert len(taps) == 4 * cfg.n_layers
+    assert taps[0].shape == (2 * 16, cfg.d)
+
+
+def test_quant_variants_change_logits_boundedly():
+    cfg = SIZES["s"]
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg).items()}
+    t = toks(2, 16, seed=2)
+    base = np.asarray(forward(params, t, cfg))
+    books = np.sort(np.linspace(-31, 31, 16, dtype=np.float32))[None].repeat(8, 0)
+    for spec in [
+        QuantSpec(scheme="lobcq", books=tuple(map(tuple, books.tolist())), use_pallas=False),
+        QuantSpec(scheme="mx4"),
+        QuantSpec(scheme="mxfp4"),
+    ]:
+        q = np.asarray(forward(params, t, cfg, spec))
+        assert q.shape == base.shape
+        rel = np.linalg.norm(q - base) / np.linalg.norm(base)
+        assert 0 < rel < 0.5, (spec.scheme, rel)
+
+
+def test_lobcq_pallas_variant_matches_ref_variant():
+    cfg = SIZES["s"]
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg).items()}
+    t = toks(1, 16, seed=3)
+    books = np.sort(np.linspace(-31, 31, 16, dtype=np.float32))[None].repeat(4, 0)
+    bt = tuple(map(tuple, books.tolist()))
+    a = np.asarray(forward(params, t, cfg, QuantSpec(scheme="lobcq", books=bt, use_pallas=True)))
+    b = np.asarray(forward(params, t, cfg, QuantSpec(scheme="lobcq", books=bt, use_pallas=False)))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_one_grad_step_reduces_loss():
+    cfg = SIZES["s"]
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg).items()}
+    batch = jnp.asarray(np.array(corpus.generate(7, 4 * 17)).reshape(4, 17), jnp.int32)
+    l0, g = jax.value_and_grad(lambda p: loss_fn(p, batch, cfg))(params)
+    params2 = {k: params[k] - 0.5 * g[k] for k in params}
+    l1 = loss_fn(params2, batch, cfg)
+    assert float(l1) < float(l0)

@@ -1,0 +1,79 @@
+"""Cross-language parity: Rust emits test vectors (``lobcq gen-parity``),
+python must reproduce them exactly (PCG stream, corpus tokens, format
+codecs) or near-exactly (LO-BCQ fake-quantize — f32/f64 selector ties).
+
+Skipped when artifacts/parity.json has not been generated yet
+(``make parity``)."""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile import corpus, formats as F, lobcq as L
+from compile.pcg import Pcg32
+
+PARITY = Path(__file__).resolve().parents[2] / "artifacts" / "parity.json"
+
+pytestmark = pytest.mark.skipif(not PARITY.exists(),
+                                reason="artifacts/parity.json missing (run `make parity`)")
+
+
+@pytest.fixture(scope="module")
+def vectors():
+    return json.loads(PARITY.read_text())
+
+
+def test_pcg_stream(vectors):
+    for case in vectors["pcg"]:
+        rng = Pcg32(case["seed"], case["stream"])
+        got = [rng.next_u32() for _ in range(len(case["u32"]))]
+        assert got == case["u32"]
+
+
+def test_pcg_floats(vectors):
+    for case in vectors["pcg_f32"]:
+        rng = Pcg32(case["seed"], case["stream"])
+        got = np.array([rng.next_f32() for _ in range(len(case["f32"]))], np.float32)
+        np.testing.assert_array_equal(got, np.array(case["f32"], np.float32))
+
+
+def test_corpus_tokens(vectors):
+    case = vectors["corpus"]
+    toks = corpus.generate(case["seed"], case["n"])
+    assert toks[:64] == case["head"]
+    # Fingerprint travels as a string (u64 exceeds f64-exact JSON range).
+    assert corpus.fingerprint(toks) == int(case["fingerprint"])
+
+
+def test_float_formats(vectors):
+    for case in vectors["formats"]:
+        fmt = F.BY_NAME[case["format"]]
+        x = np.array(case["x"], np.float32)
+        want = np.array(case["q"], np.float32)
+        got = F.quantize_float(x, fmt)
+        np.testing.assert_array_equal(got, want, err_msg=case["format"])
+
+
+def test_int_format(vectors):
+    case = vectors["int4"]
+    got = F.quantize_int(np.array(case["x"], np.float32), 4)
+    np.testing.assert_array_equal(got, np.array(case["q"], np.float32))
+
+
+def test_lobcq_fake_quantize(vectors):
+    """Given the same frozen books, python and rust dequantize (near-)
+    identically; tie-flips at the f32/f64 selector boundary are allowed
+    at < 0.5% of scalars with matching overall NMSE."""
+    case = vectors["lobcq"]
+    cfg = L.LobcqConfig(lb=case["lb"], la=case["la"], nc=case["nc"], b=case["b"], bc=case["bc"])
+    books = np.array(case["books"], np.float32)
+    x = np.array(case["x"], np.float32)
+    want = np.array(case["q"], np.float32)
+    got = L.fake_quantize(x, cfg, books)
+    mismatch = float(np.mean(got != want))
+    assert mismatch < 5e-3, f"mismatch fraction {mismatch}"
+    nmse_rs = float(np.mean((x - want) ** 2) / np.mean(x ** 2))
+    nmse_py = float(np.mean((x - got) ** 2) / np.mean(x ** 2))
+    assert abs(nmse_rs - nmse_py) < 1e-5

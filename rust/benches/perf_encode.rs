@@ -1,0 +1,58 @@
+//! §Perf L3 micro-bench: the on-the-fly quantization hot path.
+//!
+//! Measures (a) LO-BCQ fake-quantize (normalize → select → round →
+//! denormalize), (b) the packed-format encode (Fig. 5 bitstream), and
+//! (c) decode, in scalars/second — the paper's claim that tiny frozen
+//! codebooks make dynamic activation quantization cheap. Target
+//! (DESIGN.md §8): ≥ 100 M scalars/s/core for the fake-quantize path.
+//! Before/after numbers live in EXPERIMENTS.md §Perf.
+
+use lobcq::quant::encode::{decode, encode};
+use lobcq::quant::lobcq::{fake_quantize, LobcqConfig};
+use lobcq::util::rng::{llm_like_sample, Pcg32};
+use lobcq::util::timer::{black_box, Bencher};
+
+fn main() {
+    let env = lobcq::eval::Env::load();
+    let cfg = LobcqConfig::new(8, 8, 64);
+    let fam = env.family(8, 4, 6).expect("family");
+
+    let mut rng = Pcg32::seeded(0xBE7C);
+    let sizes = [4 * 1024usize, 64 * 1024, 512 * 1024];
+    let b = Bencher::default();
+
+    println!("# perf_encode — LO-BCQ hot path (g64, Nc=8, B=4)\n");
+    for &n in &sizes {
+        let x = llm_like_sample(&mut rng, n, 0.05, 4.0);
+        let shape = [n / 64, 64];
+
+        let r = b.run(&format!("fake_quantize/{n}"), || {
+            black_box(fake_quantize(black_box(&x), &cfg, &fam));
+        });
+        println!("{}", r.throughput(n as f64, "scalars"));
+
+        let r = b.run(&format!("encode_packed/{n}"), || {
+            black_box(encode(black_box(&x), &shape, &cfg, &fam));
+        });
+        println!("{}", r.throughput(n as f64, "scalars"));
+
+        let enc = encode(&x, &shape, &cfg, &fam);
+        let r = b.run(&format!("decode_packed/{n}"), || {
+            black_box(decode(black_box(&enc), &fam));
+        });
+        println!("{}", r.throughput(n as f64, "scalars"));
+    }
+
+    // Codebook-selection microcosm: the eq. 4 argmin over Nc books.
+    let x = llm_like_sample(&mut rng, 64 * 1024, 0.05, 4.0);
+    let norm = lobcq::quant::lobcq::normalize(&x, cfg.la, &cfg);
+    let blocks: Vec<&[f32]> = norm.values.chunks_exact(cfg.lb).collect();
+    let r = b.run("select_only/64k", || {
+        let mut acc = 0usize;
+        for blk in &blocks {
+            acc += fam.select(blk);
+        }
+        black_box(acc);
+    });
+    println!("{}", r.throughput(x.len() as f64, "scalars"));
+}

@@ -1,0 +1,83 @@
+//! §Perf L3 end-to-end: serving latency/throughput through the full
+//! coordinator (router → batcher → PJRT W4A4 artifact), comparing the
+//! BF16 and LO-BCQ variants and several batching policies. Skips with a
+//! notice when artifacts are missing. Results → EXPERIMENTS.md §Perf.
+
+use lobcq::coordinator::{BatchPolicy, Limits, PjrtExecutor, Sampling, Server};
+use lobcq::data::corpus;
+use lobcq::eval::Env;
+use lobcq::model::Weights;
+use lobcq::runtime::{Manifest, RuntimeService};
+use lobcq::tensor::Tensor;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP perf_serving: run `make artifacts` first");
+        return;
+    }
+    let quick = std::env::var("LOBCQ_BENCH_FULL").map(|v| v != "1").unwrap_or(true);
+    let n_requests = if quick { 32 } else { 128 };
+
+    let manifest = Manifest::load(dir).expect("manifest");
+    let env = Env::load();
+    println!("# perf_serving — coordinator end-to-end (model m, {n_requests} requests × 4 new tokens)\n");
+
+    for (variant, label) in [("bf16", "BF16"), ("lobcq_g64_nc8", "LO-BCQ W4A4 (g64, Nc=8)")] {
+        for max_batch in [1usize, 8] {
+            let Some(entry) = manifest.find("m", variant, max_batch).cloned() else {
+                continue;
+            };
+            let service = RuntimeService::start(dir).expect("runtime");
+            let client = service.client();
+            let cfg = env.model_config("m").unwrap();
+            let weights = Weights::load(&manifest.weights_path("m").unwrap()).unwrap();
+            let ordered: Vec<Tensor> = weights.ordered(&cfg).unwrap().into_iter().cloned().collect();
+            client.register_weights("w", &cfg, ordered).unwrap();
+            let books_key = entry.books_nc.map(|nc| {
+                let fam = env.family(nc, 4, 6).unwrap();
+                client.register_books("books", Env::books_tensor(&fam)).unwrap();
+                "books".to_string()
+            });
+            let exec = PjrtExecutor {
+                client,
+                entry: entry.clone(),
+                weights_key: "w".into(),
+                books_key,
+                vocab: manifest.vocab,
+            };
+            let server = Arc::new(Server::start(
+                exec,
+                BatchPolicy { max_batch, max_wait: Duration::from_millis(4) },
+                Limits { max_prompt: 64, max_new: 16, vocab: manifest.vocab as u32 },
+                Sampling::Greedy,
+            ));
+
+            let t0 = Instant::now();
+            let mut handles = Vec::new();
+            for i in 0..n_requests {
+                let s = server.clone();
+                handles.push(std::thread::spawn(move || {
+                    let prompt = corpus::generate(7_000 + i as u64, 16);
+                    s.submit(prompt, 4).unwrap().wait().unwrap()
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let snap = server.metrics.snapshot();
+            println!(
+                "{label:<28} batch≤{max_batch}: {:.1} req/s, {:.1} tok/s | {}",
+                n_requests as f64 / wall,
+                snap.tokens as f64 / wall,
+                snap.report()
+            );
+            if let Ok(s) = Arc::try_unwrap(server) {
+                s.shutdown();
+            }
+        }
+    }
+}

@@ -1,0 +1,4 @@
+//! Regenerates Table 11 + Figure 8 (per-tensor FP vs Lloyd-Max).
+fn main() {
+    lobcq::eval::experiments::bench_entry("tab11");
+}

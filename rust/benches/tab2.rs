@@ -1,0 +1,7 @@
+//! Regenerates paper experiment `tab2` (see DESIGN.md §3 for the
+//! experiment index and EXPERIMENTS.md for recorded results).
+//! Quick workload under plain `cargo bench`; LOBCQ_BENCH_FULL=1 for
+//! paper-scale.
+fn main() {
+    lobcq::eval::experiments::bench_entry("tab2");
+}

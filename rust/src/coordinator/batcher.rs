@@ -1,0 +1,203 @@
+//! Dynamic batcher: collects admitted requests into batches of at most
+//! `max_batch`, waiting at most `max_wait` for the batch to fill —
+//! the standard latency/throughput knob of serving systems (vLLM-style).
+//!
+//! Invariants (property-tested): FIFO order within a batch stream, no
+//! request dropped, no request duplicated, batch size ≤ max_batch, and a
+//! non-empty queue never waits longer than `max_wait` once the first
+//! request of a batch has arrived.
+
+use super::request::Request;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+#[derive(Debug, Default)]
+struct QueueState {
+    queue: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Thread-safe dynamic batching queue.
+#[derive(Debug)]
+pub struct Batcher {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    policy: BatchPolicy,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { state: Mutex::new(QueueState::default()), cv: Condvar::new(), policy }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Enqueue a request (producer side). Returns false if closed.
+    pub fn push(&self, req: Request) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return false;
+        }
+        st.queue.push_back(req);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Close the queue: producers are rejected, consumers drain what is
+    /// left and then receive `None`.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take the next batch (consumer side). Blocks until at least one
+    /// request is available, then waits up to `max_wait` for the batch to
+    /// fill (returning early if it does). Returns `None` when closed and
+    /// drained.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut st = self.state.lock().unwrap();
+        // Wait for a first request (or shutdown).
+        loop {
+            if !st.queue.is_empty() {
+                break;
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+        // Fill window: wait until max_batch or deadline.
+        let deadline = Instant::now() + self.policy.max_wait;
+        while st.queue.len() < self.policy.max_batch && !st.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (next, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = next;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let n = st.queue.len().min(self.policy.max_batch);
+        Some(st.queue.drain(..n).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    fn req(id: u64) -> Request {
+        Request { id, prompt: vec![1], max_new: 1, submitted_at: Instant::now() }
+    }
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn batches_respect_max_batch_and_fifo() {
+        let b = Batcher::new(policy(3, 0));
+        for i in 0..7 {
+            assert!(b.push(req(i)));
+        }
+        let ids: Vec<Vec<u64>> = (0..3)
+            .map(|_| b.next_batch().unwrap().iter().map(|r| r.id).collect())
+            .collect();
+        assert_eq!(ids, vec![vec![0, 1, 2], vec![3, 4, 5], vec![6]]);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Batcher::new(policy(4, 0));
+        b.push(req(1));
+        b.close();
+        assert!(!b.push(req(2)), "push after close accepted");
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn full_batch_returns_before_deadline() {
+        let b = Batcher::new(policy(2, 10_000)); // absurd wait
+        b.push(req(1));
+        b.push(req(2));
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(t.elapsed() < Duration::from_millis(1000), "waited despite full batch");
+    }
+
+    #[test]
+    fn waits_for_stragglers() {
+        let b = Arc::new(Batcher::new(policy(2, 200)));
+        let b2 = b.clone();
+        b.push(req(1));
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            b2.push(req(2));
+        });
+        let batch = b.next_batch().unwrap();
+        h.join().unwrap();
+        assert_eq!(batch.len(), 2, "straggler not included");
+    }
+
+    #[test]
+    fn consumer_blocks_until_first_push() {
+        let b = Arc::new(Batcher::new(policy(2, 1)));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.push(req(9));
+        let got = h.join().unwrap().unwrap();
+        assert_eq!(got[0].id, 9);
+    }
+
+    #[test]
+    fn prop_no_drop_no_duplicate_fifo() {
+        forall(80, "batcher conservation + order", |rng| {
+            let max_batch = 1 + rng.index(6);
+            let b = Batcher::new(policy(max_batch, 0));
+            let n = 1 + rng.index(40);
+            for i in 0..n as u64 {
+                b.push(req(i));
+            }
+            b.close();
+            let mut seen = Vec::new();
+            while let Some(batch) = b.next_batch() {
+                ensure(batch.len() <= max_batch, || "batch too large".into())?;
+                seen.extend(batch.iter().map(|r| r.id));
+            }
+            ensure(seen.len() == n, || format!("dropped/extra: {} vs {n}", seen.len()))?;
+            ensure(seen.windows(2).all(|w| w[0] < w[1]), || "order violated".into())
+        });
+    }
+}

@@ -1,0 +1,123 @@
+//! Step executor abstraction: one fixed-shape forward pass per decode
+//! step. The production impl wraps the PJRT [`RuntimeClient`]; the mock
+//! drives coordinator unit/property tests with no artifacts required.
+
+use crate::runtime::{ArtifactEntry, Logits, RuntimeClient};
+
+/// Executes a (batch, t) token forward and returns logits. `tokens` is
+/// row-major batch*t; implementations have a FIXED (batch, t) shape —
+/// the scheduler pads partial batches.
+pub trait StepExecutor: Send {
+    fn batch(&self) -> usize;
+    fn t(&self) -> usize;
+    fn vocab(&self) -> usize;
+    fn step(&self, tokens: &[u32]) -> anyhow::Result<Logits>;
+}
+
+/// PJRT-backed executor bound to one artifact + registered weight/book
+/// keys (see `RuntimeClient::register_weights` / `register_books`).
+pub struct PjrtExecutor {
+    pub client: RuntimeClient,
+    pub entry: ArtifactEntry,
+    pub weights_key: String,
+    pub books_key: Option<String>,
+    pub vocab: usize,
+}
+
+impl StepExecutor for PjrtExecutor {
+    fn batch(&self) -> usize {
+        self.entry.batch
+    }
+
+    fn t(&self) -> usize {
+        self.entry.t
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn step(&self, tokens: &[u32]) -> anyhow::Result<Logits> {
+        self.client.run_model(&self.entry, &self.weights_key, self.books_key.as_deref(), tokens.to_vec())
+    }
+}
+
+/// Deterministic mock: logits prefer `(last_token + 1) % vocab`, with a
+/// configurable artificial delay — enough structure for scheduler tests
+/// to verify batching, routing, and timing behaviour.
+pub struct MockExecutor {
+    pub batch: usize,
+    pub t: usize,
+    pub vocab: usize,
+    pub delay: std::time::Duration,
+    pub calls: std::sync::atomic::AtomicUsize,
+}
+
+impl MockExecutor {
+    pub fn new(batch: usize, t: usize, vocab: usize) -> MockExecutor {
+        MockExecutor {
+            batch,
+            t,
+            vocab,
+            delay: std::time::Duration::ZERO,
+            calls: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+
+    pub fn call_count(&self) -> usize {
+        self.calls.load(std::sync::atomic::Ordering::SeqCst)
+    }
+}
+
+impl StepExecutor for MockExecutor {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn step(&self, tokens: &[u32]) -> anyhow::Result<Logits> {
+        self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        anyhow::ensure!(tokens.len() == self.batch * self.t, "bad token count");
+        let mut data = vec![0.0f32; self.batch * self.t * self.vocab];
+        for b in 0..self.batch {
+            for p in 0..self.t {
+                let tok = tokens[b * self.t + p] as usize;
+                let want = (tok + 1) % self.vocab;
+                data[(b * self.t + p) * self.vocab + want] = 10.0;
+            }
+        }
+        Ok(Logits { data, batch: self.batch, t: self.t, vocab: self.vocab })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_prefers_successor_token() {
+        let m = MockExecutor::new(1, 4, 10);
+        let logits = m.step(&[3, 4, 5, 6]).unwrap();
+        // argmax at position 1 should be 5.
+        let row = &logits.data[1 * 10..2 * 10];
+        let argmax = row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert_eq!(argmax, 5);
+        assert_eq!(m.call_count(), 1);
+    }
+
+    #[test]
+    fn mock_validates_shape() {
+        let m = MockExecutor::new(2, 4, 10);
+        assert!(m.step(&[1, 2, 3]).is_err());
+    }
+}

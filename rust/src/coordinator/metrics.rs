@@ -1,0 +1,132 @@
+//! Serving metrics: latency histograms per stage, token throughput, and
+//! batch-occupancy statistics — the quantities the §Perf serving bench
+//! reports (p50/p95/p99 latency, tokens/s, batch fill).
+
+use crate::util::stats::LatencyHistogram;
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Debug)]
+struct Inner {
+    queue: LatencyHistogram,
+    execute: LatencyHistogram,
+    total: LatencyHistogram,
+    batch_sizes: Vec<usize>,
+    tokens_out: u64,
+    requests_done: u64,
+    started: Option<Instant>,
+}
+
+#[derive(Debug)]
+pub struct ServerMetrics {
+    inner: Mutex<Inner>,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerMetrics {
+    pub fn new() -> ServerMetrics {
+        ServerMetrics {
+            inner: Mutex::new(Inner {
+                queue: LatencyHistogram::new(),
+                execute: LatencyHistogram::new(),
+                total: LatencyHistogram::new(),
+                batch_sizes: Vec::new(),
+                tokens_out: 0,
+                requests_done: 0,
+                started: None,
+            }),
+        }
+    }
+
+    pub fn record_response(&self, queue_us: f64, execute_us: f64, total_us: f64, tokens: usize, batch: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.started.get_or_insert_with(Instant::now);
+        g.queue.record_us(queue_us);
+        g.execute.record_us(execute_us);
+        g.total.record_us(total_us);
+        g.batch_sizes.push(batch);
+        g.tokens_out += tokens as u64;
+        g.requests_done += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let elapsed = g.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let mean_batch = if g.batch_sizes.is_empty() {
+            0.0
+        } else {
+            g.batch_sizes.iter().sum::<usize>() as f64 / g.batch_sizes.len() as f64
+        };
+        MetricsSnapshot {
+            requests: g.requests_done,
+            tokens: g.tokens_out,
+            tokens_per_s: if elapsed > 0.0 { g.tokens_out as f64 / elapsed } else { 0.0 },
+            queue_p50_us: g.queue.percentile_us(50.0),
+            queue_p99_us: g.queue.percentile_us(99.0),
+            exec_p50_us: g.execute.percentile_us(50.0),
+            exec_p99_us: g.execute.percentile_us(99.0),
+            total_p50_us: g.total.percentile_us(50.0),
+            total_p95_us: g.total.percentile_us(95.0),
+            total_p99_us: g.total.percentile_us(99.0),
+            mean_batch,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub tokens: u64,
+    pub tokens_per_s: f64,
+    pub queue_p50_us: f64,
+    pub queue_p99_us: f64,
+    pub exec_p50_us: f64,
+    pub exec_p99_us: f64,
+    pub total_p50_us: f64,
+    pub total_p95_us: f64,
+    pub total_p99_us: f64,
+    pub mean_batch: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} throughput={:.1} tok/s | total p50={:.0}µs p95={:.0}µs p99={:.0}µs | \
+             queue p50={:.0}µs p99={:.0}µs | exec p50={:.0}µs p99={:.0}µs | mean batch={:.2}",
+            self.requests,
+            self.tokens,
+            self.tokens_per_s,
+            self.total_p50_us,
+            self.total_p95_us,
+            self.total_p99_us,
+            self.queue_p50_us,
+            self.queue_p99_us,
+            self.exec_p50_us,
+            self.exec_p99_us,
+            self.mean_batch
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = ServerMetrics::new();
+        m.record_response(100.0, 2000.0, 2200.0, 8, 4);
+        m.record_response(200.0, 2100.0, 2400.0, 8, 4);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.tokens, 16);
+        assert!(s.total_p50_us >= 2000.0);
+        assert_eq!(s.mean_batch, 4.0);
+        assert!(s.report().contains("requests=2"));
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 serving coordinator — the system wrapper around the paper's
+//! contribution: requests flow router → dynamic batcher → scheduler →
+//! fixed-shape PJRT executor running the W4A4 graphs, with the frozen
+//! ≤0.19 KB codebook family resident in the runtime (paper §3's
+//! "activation quantization on the fly" deployment).
+
+pub mod batcher;
+pub mod executor;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use executor::{MockExecutor, PjrtExecutor, StepExecutor};
+pub use metrics::{MetricsSnapshot, ServerMetrics};
+pub use request::{AdmitError, Limits, Request, Response};
+pub use scheduler::{run_batch, Sampling};
+pub use server::{Server, Ticket};

@@ -1,0 +1,90 @@
+//! Request/response types for the serving coordinator.
+
+use std::time::Instant;
+
+/// Inference request: a token prompt plus generation length.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub submitted_at: Instant,
+}
+
+/// Completed response with per-stage timing.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Generated tokens (not including the prompt).
+    pub tokens: Vec<u32>,
+    /// Time from submit to batch pickup.
+    pub queue_us: f64,
+    /// Time spent in model execution (sum over decode steps).
+    pub execute_us: f64,
+    /// End-to-end latency.
+    pub total_us: f64,
+    /// Batch size this request was served in.
+    pub batch_size: usize,
+}
+
+/// Validation limits enforced by the router.
+#[derive(Debug, Clone, Copy)]
+pub struct Limits {
+    pub max_prompt: usize,
+    pub max_new: usize,
+    pub vocab: u32,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum AdmitError {
+    #[error("empty prompt")]
+    EmptyPrompt,
+    #[error("prompt length {0} exceeds limit {1}")]
+    PromptTooLong(usize, usize),
+    #[error("max_new {0} exceeds limit {1}")]
+    TooManyTokens(usize, usize),
+    #[error("token {0} outside vocabulary {1}")]
+    BadToken(u32, u32),
+    #[error("server shutting down")]
+    Shutdown,
+}
+
+/// Validate a request against the limits (router admission check).
+pub fn validate(prompt: &[u32], max_new: usize, limits: &Limits) -> Result<(), AdmitError> {
+    if prompt.is_empty() {
+        return Err(AdmitError::EmptyPrompt);
+    }
+    if prompt.len() > limits.max_prompt {
+        return Err(AdmitError::PromptTooLong(prompt.len(), limits.max_prompt));
+    }
+    if max_new == 0 || max_new > limits.max_new {
+        return Err(AdmitError::TooManyTokens(max_new, limits.max_new));
+    }
+    if let Some(&bad) = prompt.iter().find(|&&t| t >= limits.vocab) {
+        return Err(AdmitError::BadToken(bad, limits.vocab));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limits() -> Limits {
+        Limits { max_prompt: 48, max_new: 16, vocab: 168 }
+    }
+
+    #[test]
+    fn accepts_valid() {
+        assert!(validate(&[1, 2, 3], 4, &limits()).is_ok());
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        let l = limits();
+        assert_eq!(validate(&[], 4, &l), Err(AdmitError::EmptyPrompt));
+        assert!(matches!(validate(&vec![1; 100], 4, &l), Err(AdmitError::PromptTooLong(100, 48))));
+        assert!(matches!(validate(&[1], 0, &l), Err(AdmitError::TooManyTokens(0, 16))));
+        assert!(matches!(validate(&[1, 200], 4, &l), Err(AdmitError::BadToken(200, 168))));
+    }
+}

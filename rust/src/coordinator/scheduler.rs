@@ -1,0 +1,200 @@
+//! Batch decode scheduler: takes one dynamic batch, runs autoregressive
+//! decode steps on the fixed-shape executor (padding partial batches),
+//! and produces per-request responses with stage timings.
+//!
+//! Decode uses a sliding context window of the executor's `t`: the model
+//! artifacts are full-sequence forwards, so each step re-scores the
+//! window and we read the logits at each sequence's frontier position.
+//! (A KV-cache decode artifact is a documented extension — DESIGN.md; for
+//! the tiny models here the full-window step is already sub-10ms.)
+
+use super::executor::StepExecutor;
+use super::request::{Request, Response};
+use crate::data::corpus::PAD;
+use std::time::Instant;
+
+/// Sampling policy for generated tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sampling {
+    Greedy,
+    /// Top-k sampling with a deterministic per-request seed.
+    TopK(usize),
+}
+
+/// Decode one batch of requests to completion. Returns responses in the
+/// same order as `batch`.
+pub fn run_batch<E: StepExecutor + ?Sized>(
+    exec: &E,
+    batch: &[Request],
+    sampling: Sampling,
+) -> anyhow::Result<Vec<Response>> {
+    assert!(!batch.is_empty());
+    assert!(batch.len() <= exec.batch(), "batch {} exceeds executor {}", batch.len(), exec.batch());
+    let (b_exec, t) = (exec.batch(), exec.t());
+    let picked_at = Instant::now();
+
+    // Per-sequence state: full token history (prompt + generated).
+    let mut seqs: Vec<Vec<u32>> = batch.iter().map(|r| r.prompt.clone()).collect();
+    let max_new = batch.iter().map(|r| r.max_new).max().unwrap();
+    let mut execute_us = 0.0f64;
+
+    for _step in 0..max_new {
+        // Build the fixed-shape token tensor: right-aligned... we LEFT-pack
+        // each sequence's last `t` tokens and remember frontier positions.
+        let mut tokens = vec![PAD; b_exec * t];
+        let mut frontier = vec![0usize; batch.len()];
+        for (i, seq) in seqs.iter().enumerate() {
+            let ctx = if seq.len() > t { &seq[seq.len() - t..] } else { &seq[..] };
+            tokens[i * t..i * t + ctx.len()].copy_from_slice(ctx);
+            frontier[i] = ctx.len() - 1;
+        }
+        let t0 = Instant::now();
+        let logits = exec.step(&tokens)?;
+        execute_us += t0.elapsed().as_secs_f64() * 1e6;
+
+        for (i, req) in batch.iter().enumerate() {
+            if seqs[i].len() - req.prompt.len() >= req.max_new {
+                continue; // this sequence is done; others may still decode
+            }
+            let next = pick_token(&logits, i, frontier[i], sampling, req.id, seqs[i].len());
+            seqs[i].push(next);
+        }
+    }
+
+    let done = Instant::now();
+    Ok(batch
+        .iter()
+        .enumerate()
+        .map(|(i, req)| {
+            let queue_us = (picked_at - req.submitted_at).as_secs_f64() * 1e6;
+            Response {
+                id: req.id,
+                tokens: seqs[i][req.prompt.len()..].to_vec(),
+                queue_us,
+                execute_us,
+                total_us: (done - req.submitted_at).as_secs_f64() * 1e6,
+                batch_size: batch.len(),
+            }
+        })
+        .collect())
+}
+
+fn pick_token(
+    logits: &crate::runtime::Logits,
+    row: usize,
+    pos: usize,
+    sampling: Sampling,
+    req_id: u64,
+    step: usize,
+) -> u32 {
+    let v = logits.vocab;
+    let slice = &logits.data[(row * logits.t + pos) * v..(row * logits.t + pos + 1) * v];
+    match sampling {
+        Sampling::Greedy => argmax(slice) as u32,
+        Sampling::TopK(k) => {
+            let mut idx: Vec<usize> = (0..v).collect();
+            idx.sort_by(|&a, &b| slice[b].partial_cmp(&slice[a]).unwrap());
+            idx.truncate(k.max(1));
+            // Softmax over the top-k, sampled with a per-(request, step)
+            // deterministic stream.
+            let max = slice[idx[0]] as f64;
+            let weights: Vec<f64> = idx.iter().map(|&i| ((slice[i] as f64) - max).exp()).collect();
+            let total: f64 = weights.iter().sum();
+            let mut rng = crate::util::rng::Pcg32::new(req_id ^ (step as u64) << 17, 0x5A);
+            let mut x = rng.next_f64() * total;
+            for (w, &i) in weights.iter().zip(&idx) {
+                if x < *w {
+                    return i as u32;
+                }
+                x -= w;
+            }
+            idx[idx.len() - 1] as u32
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::MockExecutor;
+    use crate::util::prop::{ensure, forall};
+    use std::time::Instant;
+
+    fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+        Request { id, prompt, max_new, submitted_at: Instant::now() }
+    }
+
+    #[test]
+    fn greedy_decode_follows_mock_successor_rule() {
+        let exec = MockExecutor::new(4, 16, 32);
+        let batch = vec![req(1, vec![5], 4), req(2, vec![9, 10], 3)];
+        let out = run_batch(&exec, &batch, Sampling::Greedy).unwrap();
+        // Mock predicts tok+1: from 5 -> 6,7,8,9; from 10 -> 11,12,13.
+        assert_eq!(out[0].tokens, vec![6, 7, 8, 9]);
+        assert_eq!(out[1].tokens, vec![11, 12, 13]);
+        assert_eq!(out[0].batch_size, 2);
+        // One executor call per decode step of the longest request.
+        assert_eq!(exec.call_count(), 4);
+    }
+
+    #[test]
+    fn shorter_requests_stop_early() {
+        let exec = MockExecutor::new(2, 8, 32);
+        let batch = vec![req(1, vec![1], 1), req(2, vec![1], 5)];
+        let out = run_batch(&exec, &batch, Sampling::Greedy).unwrap();
+        assert_eq!(out[0].tokens.len(), 1);
+        assert_eq!(out[1].tokens.len(), 5);
+    }
+
+    #[test]
+    fn context_window_slides() {
+        // Prompt longer than t still decodes (uses last t tokens).
+        let exec = MockExecutor::new(1, 4, 32);
+        let batch = vec![req(1, vec![1, 2, 3, 4, 5, 6], 2)];
+        let out = run_batch(&exec, &batch, Sampling::Greedy).unwrap();
+        assert_eq!(out[0].tokens, vec![7, 8]);
+    }
+
+    #[test]
+    fn topk_is_deterministic_and_valid() {
+        let exec = MockExecutor::new(1, 8, 32);
+        let batch = vec![req(7, vec![3], 6)];
+        let a = run_batch(&exec, &batch, Sampling::TopK(3)).unwrap();
+        let b = run_batch(&exec, &batch, Sampling::TopK(3)).unwrap();
+        assert_eq!(a[0].tokens, b[0].tokens);
+        assert!(a[0].tokens.iter().all(|&t| t < 32));
+    }
+
+    #[test]
+    fn prop_response_lengths_and_ids() {
+        forall(81, "scheduler response shape", |rng| {
+            let exec = MockExecutor::new(8, 16, 64);
+            let n = 1 + rng.index(8);
+            let batch: Vec<Request> = (0..n)
+                .map(|i| {
+                    let plen = 1 + rng.index(10);
+                    let prompt: Vec<u32> = (0..plen).map(|_| rng.below(64)).collect();
+                    req(i as u64, prompt, 1 + rng.index(6))
+                })
+                .collect();
+            let out = run_batch(&exec, &batch, Sampling::Greedy).map_err(|e| e.to_string())?;
+            ensure(out.len() == n, || "response count".into())?;
+            for (r, q) in out.iter().zip(&batch) {
+                ensure(r.id == q.id, || "id mismatch".into())?;
+                ensure(r.tokens.len() == q.max_new, || "length mismatch".into())?;
+                ensure(r.tokens.iter().all(|&t| t < 64), || "token out of vocab".into())?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,191 @@
+//! The serving front-end: router (admission + id assignment) → dynamic
+//! batcher → scheduler worker → response delivery. One worker thread per
+//! executor (the PJRT engine serializes executions anyway; multiple
+//! workers make sense with multiple executors/variants).
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::executor::StepExecutor;
+use super::metrics::ServerMetrics;
+use super::request::{validate, AdmitError, Limits, Request, Response};
+use super::scheduler::{run_batch, Sampling};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// Ticket returned on submit; blocks for the response.
+pub struct Ticket {
+    pub id: u64,
+    rx: mpsc::Receiver<anyhow::Result<Response>>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> anyhow::Result<Response> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("server dropped response channel"))?
+    }
+}
+
+type ReplyMap = Arc<Mutex<HashMap<u64, mpsc::Sender<anyhow::Result<Response>>>>>;
+
+/// The serving coordinator.
+pub struct Server {
+    batcher: Arc<Batcher>,
+    replies: ReplyMap,
+    next_id: AtomicU64,
+    limits: Limits,
+    pub metrics: Arc<ServerMetrics>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start a server over an executor. The executor moves to the worker
+    /// thread (PJRT handles are not Sync; `PjrtExecutor` holds a channel
+    /// client so this is cheap).
+    pub fn start<E: StepExecutor + 'static>(
+        exec: E,
+        policy: BatchPolicy,
+        limits: Limits,
+        sampling: Sampling,
+    ) -> Server {
+        let batcher = Arc::new(Batcher::new(policy));
+        let replies: ReplyMap = Arc::new(Mutex::new(HashMap::new()));
+        let metrics = Arc::new(ServerMetrics::new());
+
+        let b = batcher.clone();
+        let r = replies.clone();
+        let m = metrics.clone();
+        let worker = std::thread::Builder::new()
+            .name("lobcq-worker".into())
+            .spawn(move || {
+                while let Some(batch) = b.next_batch() {
+                    let result = run_batch(&exec, &batch, sampling);
+                    let mut guard = r.lock().unwrap();
+                    match result {
+                        Ok(responses) => {
+                            for resp in responses {
+                                m.record_response(
+                                    resp.queue_us,
+                                    resp.execute_us,
+                                    resp.total_us,
+                                    resp.tokens.len(),
+                                    resp.batch_size,
+                                );
+                                if let Some(tx) = guard.remove(&resp.id) {
+                                    let _ = tx.send(Ok(resp));
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            // Fail every request of the batch with the error.
+                            for req in &batch {
+                                if let Some(tx) = guard.remove(&req.id) {
+                                    let _ = tx.send(Err(anyhow::anyhow!("batch failed: {e}")));
+                                }
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawn worker");
+
+        Server { batcher, replies, next_id: AtomicU64::new(1), limits, metrics, workers: vec![worker] }
+    }
+
+    /// Router entry point: validate, assign id, enqueue.
+    pub fn submit(&self, prompt: Vec<u32>, max_new: usize) -> Result<Ticket, AdmitError> {
+        validate(&prompt, max_new, &self.limits)?;
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = mpsc::channel();
+        self.replies.lock().unwrap().insert(id, tx);
+        let ok = self.batcher.push(Request { id, prompt, max_new, submitted_at: Instant::now() });
+        if !ok {
+            self.replies.lock().unwrap().remove(&id);
+            return Err(AdmitError::Shutdown);
+        }
+        Ok(Ticket { id, rx })
+    }
+
+    /// Graceful shutdown: drain the queue, join workers.
+    pub fn shutdown(mut self) {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::MockExecutor;
+    use std::time::Duration;
+
+    fn server(max_batch: usize, wait_ms: u64) -> Server {
+        Server::start(
+            MockExecutor::new(8, 16, 64),
+            BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms) },
+            Limits { max_prompt: 12, max_new: 8, vocab: 64 },
+            Sampling::Greedy,
+        )
+    }
+
+    #[test]
+    fn end_to_end_single_request() {
+        let s = server(4, 1);
+        let resp = s.submit(vec![5], 3).unwrap().wait().unwrap();
+        assert_eq!(resp.tokens, vec![6, 7, 8]);
+        assert!(resp.total_us > 0.0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_all_answered() {
+        let s = Arc::new(server(8, 5));
+        let mut handles = Vec::new();
+        for i in 0..24u32 {
+            let s2 = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let prompt = vec![(i % 60) as u32];
+                s2.submit(prompt, 2).unwrap().wait().unwrap()
+            }));
+        }
+        let mut ids = Vec::new();
+        for h in handles {
+            let resp = h.join().unwrap();
+            assert_eq!(resp.tokens.len(), 2);
+            ids.push(resp.id);
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 24, "duplicate or missing responses");
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.requests, 24);
+        assert!(snap.mean_batch > 1.0, "batching never kicked in: {}", snap.mean_batch);
+        match Arc::try_unwrap(s) {
+            Ok(s) => s.shutdown(),
+            Err(_) => panic!("server still referenced"),
+        }
+    }
+
+    #[test]
+    fn router_rejects_invalid() {
+        let s = server(2, 0);
+        assert!(s.submit(vec![], 2).is_err());
+        assert!(s.submit(vec![1; 99], 2).is_err());
+        assert!(s.submit(vec![99], 2).is_err()); // out-of-vocab token 99 < 64? no: 99 >= 64
+        s.shutdown();
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let s = server(2, 0);
+        let b = s.batcher.clone();
+        b.close();
+        assert_eq!(s.submit(vec![1], 1).err(), Some(AdmitError::Shutdown));
+        s.shutdown();
+    }
+}

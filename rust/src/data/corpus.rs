@@ -1,0 +1,162 @@
+//! Deterministic synthetic corpus — token-exact mirror of
+//! `python/compile/corpus.py` (see that file for the token layout and the
+//! substitution rationale in DESIGN.md §1).
+//!
+//! Token-exactness across the two languages is enforced by
+//! `tests/test_parity.py` (fingerprints + head tokens) and by the
+//! manifest's `val_fingerprint`, which the evaluator checks before
+//! computing perplexity.
+
+use crate::util::rng::Pcg32;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const DET0: u32 = 2;
+pub const N_DET: u32 = 4;
+pub const ADJ0: u32 = 6;
+pub const N_ADJ: u32 = 32;
+pub const NOUN0: u32 = 38;
+pub const N_NOUN: u32 = 64;
+pub const VERB0: u32 = 102;
+pub const N_VERB: u32 = 48;
+pub const ADV0: u32 = 150;
+pub const N_ADV: u32 = 16;
+pub const COMMA: u32 = 166;
+pub const PERIOD: u32 = 167;
+pub const VOCAB: u32 = 168;
+
+/// The RNG stream id the corpus generator uses (matches python 0xDA7A).
+const CORPUS_STREAM: u64 = 0xDA7A;
+
+/// Zipf-ish skewed index in [0, n): floor(n * u^2).
+fn zipf(rng: &mut Pcg32, n: u32) -> u32 {
+    let u = rng.next_f32();
+    ((n as f32 * u * u) as u32).min(n - 1)
+}
+
+fn noun_phrase(rng: &mut Pcg32, out: &mut Vec<u32>) {
+    let det = zipf(rng, N_DET);
+    out.push(DET0 + det);
+    if rng.next_f32() < 0.5 {
+        let band = det * 8;
+        out.push(ADJ0 + band + zipf(rng, 8));
+    }
+    out.push(NOUN0 + zipf(rng, N_NOUN));
+}
+
+fn verb_phrase(rng: &mut Pcg32, out: &mut Vec<u32>) {
+    let verb = zipf(rng, N_VERB);
+    out.push(VERB0 + verb);
+    let u = rng.next_f32();
+    if u < 0.6 {
+        noun_phrase(rng, out);
+    } else if u < 0.85 {
+        out.push(ADV0 + (verb % 4) * 4 + zipf(rng, 4));
+    }
+}
+
+fn sentence(rng: &mut Pcg32, out: &mut Vec<u32>) {
+    noun_phrase(rng, out);
+    verb_phrase(rng, out);
+    if rng.next_f32() < 0.2 {
+        out.push(COMMA);
+        verb_phrase(rng, out);
+    }
+    out.push(PERIOD);
+}
+
+/// Generate exactly `n_tokens` tokens (BOS + sentences, truncated).
+pub fn generate(seed: u64, n_tokens: usize) -> Vec<u32> {
+    let mut rng = Pcg32::new(seed, CORPUS_STREAM);
+    let mut out = vec![BOS];
+    while out.len() < n_tokens {
+        sentence(&mut rng, &mut out);
+    }
+    out.truncate(n_tokens);
+    out
+}
+
+/// FNV-1a over token ids — matches `corpus.fingerprint` in python.
+pub fn fingerprint(tokens: &[u32]) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for &t in tokens {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+/// Split a token stream into (N, t+1) next-token windows (stride = t).
+pub fn windows(tokens: &[u32], t: usize) -> Vec<Vec<u32>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + t + 1 <= tokens.len() {
+        out.push(tokens[i..i + t + 1].to_vec());
+        i += t;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(123, 1000), generate(123, 1000));
+        assert_ne!(generate(124, 1000), generate(123, 1000));
+    }
+
+    #[test]
+    fn tokens_in_vocab_and_bos_first() {
+        let toks = generate(5, 5000);
+        assert_eq!(toks.len(), 5000);
+        assert_eq!(toks[0], BOS);
+        assert!(toks.iter().all(|&t| t < VOCAB));
+    }
+
+    #[test]
+    fn grammar_structure_det_then_adj_or_noun() {
+        let toks = generate(9, 20000);
+        for w in toks.windows(2) {
+            if (DET0..DET0 + N_DET).contains(&w[0]) {
+                let nxt = w[1];
+                assert!(
+                    (ADJ0..ADJ0 + N_ADJ).contains(&nxt) || (NOUN0..NOUN0 + N_NOUN).contains(&nxt),
+                    "det followed by {nxt}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_skew() {
+        let toks = generate(11, 50000);
+        let mut counts = [0usize; N_NOUN as usize];
+        for &t in &toks {
+            if (NOUN0..NOUN0 + N_NOUN).contains(&t) {
+                counts[(t - NOUN0) as usize] += 1;
+            }
+        }
+        let head: usize = counts[..8].iter().sum();
+        let tail: usize = counts[N_NOUN as usize - 8..].iter().sum();
+        assert!(head > 3 * tail, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn fingerprint_stability() {
+        let fp = fingerprint(&generate(5678, 10_000));
+        assert_eq!(fp, fingerprint(&generate(5678, 10_000)));
+        assert_ne!(fp, fingerprint(&generate(5678, 9_999)));
+    }
+
+    #[test]
+    fn windows_cover_stream() {
+        let toks = generate(1, 1000);
+        let w = windows(&toks, 64);
+        assert!(!w.is_empty());
+        assert!(w.iter().all(|x| x.len() == 65));
+        assert_eq!(w[0][0], toks[0]);
+        assert_eq!(w[1][0], toks[64]);
+    }
+}

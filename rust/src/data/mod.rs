@@ -1,0 +1,6 @@
+//! Workload data: the synthetic corpus (Wikitext stand-in) and the
+//! synthetic downstream tasks (LM-harness / MMLU stand-ins). Both are
+//! deterministic mirrors of the python generators — see DESIGN.md §1.
+
+pub mod corpus;
+pub mod tasks;

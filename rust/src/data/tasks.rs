@@ -1,0 +1,227 @@
+//! Synthetic downstream tasks — the LM-evaluation-harness / MMLU analog
+//! (DESIGN.md §1 substitutions; paper §4.2.2–4.2.3).
+//!
+//! Each task instance is a cloze question: a grammatical prefix, one
+//! correct continuation token, and `n_choices - 1` distractors of the
+//! same syntactic category. The evaluator scores each choice by the LM's
+//! log-probability (the answer-ranking protocol of the real harnesses)
+//! and reports accuracy. Five task flavors differ in which category is
+//! predicted and how much context is given — mirroring the spread of
+//! RA/BQ/HS/PQ/WG difficulty.
+
+use super::corpus;
+use crate::util::rng::Pcg32;
+
+/// A single cloze item: score `prefix + choice` for each choice; the
+/// model is correct when the true choice has the highest log-prob.
+#[derive(Debug, Clone)]
+pub struct ClozeItem {
+    pub prefix: Vec<u32>,
+    pub choices: Vec<u32>,
+    pub answer: usize,
+}
+
+/// Task flavors (analogy to the paper's five LM-harness tasks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Predict the noun after det+adj ("RA" analog: 4 choices).
+    NounAfterAdj,
+    /// Predict adj band membership given det ("BQ" analog: 2 choices).
+    AdjBand,
+    /// Predict the adverb band for a verb ("HS" analog: 4 choices).
+    AdverbForVerb,
+    /// Predict the continuation category after a noun ("PQ": 2 choices).
+    VerbVsPeriod,
+    /// Long-context noun repetition ("WG" analog: 2 choices).
+    NounRecall,
+}
+
+pub const ALL_TASKS: [TaskKind; 5] = [
+    TaskKind::NounAfterAdj,
+    TaskKind::AdjBand,
+    TaskKind::AdverbForVerb,
+    TaskKind::VerbVsPeriod,
+    TaskKind::NounRecall,
+];
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::NounAfterAdj => "RA*",
+            TaskKind::AdjBand => "BQ*",
+            TaskKind::AdverbForVerb => "HS*",
+            TaskKind::VerbVsPeriod => "PQ*",
+            TaskKind::NounRecall => "WG*",
+        }
+    }
+}
+
+/// Build `n` cloze items for a task. Prefixes are drawn from freshly
+/// generated corpus text so they match the training distribution; the
+/// distractors are category-consistent, so only a model that learned the
+/// conditional statistics beats chance.
+pub fn build_items(kind: TaskKind, n: usize, seed: u64, max_prefix: usize) -> Vec<ClozeItem> {
+    let mut rng = Pcg32::new(seed, 0x7A5C);
+    let mut items = Vec::with_capacity(n);
+    let mut guard = 0usize;
+    while items.len() < n && guard < n * 200 {
+        guard += 1;
+        // A fresh snippet of corpus text to serve as context.
+        let snippet = corpus::generate(rng.next_u64(), max_prefix.max(16));
+        if let Some(item) = make_item(kind, &snippet, max_prefix, &mut rng) {
+            items.push(item);
+        }
+    }
+    items
+}
+
+fn category(t: u32) -> Option<&'static str> {
+    use corpus::*;
+    if (DET0..DET0 + N_DET).contains(&t) {
+        Some("det")
+    } else if (ADJ0..ADJ0 + N_ADJ).contains(&t) {
+        Some("adj")
+    } else if (NOUN0..NOUN0 + N_NOUN).contains(&t) {
+        Some("noun")
+    } else if (VERB0..VERB0 + N_VERB).contains(&t) {
+        Some("verb")
+    } else if (ADV0..ADV0 + N_ADV).contains(&t) {
+        Some("adv")
+    } else {
+        None
+    }
+}
+
+fn distractors(answer: u32, base: u32, n_cat: u32, k: usize, rng: &mut Pcg32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(k);
+    while out.len() < k {
+        let cand = base + rng.below(n_cat);
+        if cand != answer && !out.contains(&cand) {
+            out.push(cand);
+        }
+    }
+    out
+}
+
+fn make_item(kind: TaskKind, snippet: &[u32], max_prefix: usize, rng: &mut Pcg32) -> Option<ClozeItem> {
+    use corpus::*;
+    // Find a position whose token matches the task's target category and
+    // whose prefix is non-trivial.
+    for (i, &t) in snippet.iter().enumerate().skip(4) {
+        if i >= max_prefix {
+            break;
+        }
+        let prefix = snippet[..i].to_vec();
+        let (answer_tok, mut wrong) = match kind {
+            TaskKind::NounAfterAdj => {
+                if category(t) != Some("noun") || category(snippet[i - 1]) != Some("adj") {
+                    continue;
+                }
+                (t, distractors(t, NOUN0, N_NOUN, 3, rng))
+            }
+            TaskKind::AdjBand => {
+                if category(t) != Some("adj") || category(snippet[i - 1]) != Some("det") {
+                    continue;
+                }
+                // Distractor: adjective from a *different* det band.
+                let det = snippet[i - 1] - DET0;
+                let other_band = (det + 1 + rng.below(N_DET - 1)) % N_DET;
+                (t, vec![ADJ0 + other_band * 8 + rng.below(8)])
+            }
+            TaskKind::AdverbForVerb => {
+                if category(t) != Some("adv") {
+                    continue;
+                }
+                (t, distractors(t, ADV0, N_ADV, 3, rng))
+            }
+            TaskKind::VerbVsPeriod => {
+                if category(t) != Some("verb") || category(snippet[i - 1]) != Some("noun") {
+                    continue;
+                }
+                // Wrong continuation: another determiner (ungrammatical here).
+                (t, vec![DET0 + rng.below(N_DET)])
+            }
+            TaskKind::NounRecall => {
+                if category(t) != Some("noun") || i < 8 {
+                    continue;
+                }
+                // Distractor noun that did NOT appear in the prefix.
+                let mut cand;
+                let mut tries = 0;
+                loop {
+                    cand = NOUN0 + rng.below(N_NOUN);
+                    if cand != t && !prefix.contains(&cand) {
+                        break;
+                    }
+                    tries += 1;
+                    if tries > 64 {
+                        return None;
+                    }
+                }
+                (t, vec![cand])
+            }
+        };
+        // Shuffle answer among choices deterministically.
+        let answer_pos = rng.index(wrong.len() + 1);
+        let mut choices = Vec::with_capacity(wrong.len() + 1);
+        for (j, w) in wrong.drain(..).enumerate() {
+            let _ = j;
+            choices.push(w);
+        }
+        choices.insert(answer_pos, answer_tok);
+        return Some(ClozeItem { prefix, choices, answer: answer_pos });
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn items_well_formed() {
+        for kind in ALL_TASKS {
+            let items = build_items(kind, 50, 42, 48);
+            assert!(items.len() >= 40, "{:?}: only {} items", kind, items.len());
+            for it in &items {
+                assert!(!it.prefix.is_empty());
+                assert!(it.prefix.len() < 48);
+                assert!(it.choices.len() >= 2);
+                assert!(it.answer < it.choices.len());
+                // Distractors distinct from the answer.
+                let ans = it.choices[it.answer];
+                assert_eq!(it.choices.iter().filter(|&&c| c == ans).count(), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = build_items(TaskKind::NounAfterAdj, 10, 7, 48);
+        let b = build_items(TaskKind::NounAfterAdj, 10, 7, 48);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prefix, y.prefix);
+            assert_eq!(x.choices, y.choices);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn answer_position_varies() {
+        let items = build_items(TaskKind::NounAfterAdj, 100, 3, 48);
+        let first = items[0].answer;
+        assert!(items.iter().any(|i| i.answer != first), "answer position constant");
+    }
+
+    #[test]
+    fn noun_recall_distractor_not_in_prefix() {
+        for it in build_items(TaskKind::NounRecall, 30, 9, 48) {
+            for (i, &c) in it.choices.iter().enumerate() {
+                if i != it.answer {
+                    assert!(!it.prefix.contains(&c));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,634 @@
+//! Experiment drivers: one function per paper table/figure, each
+//! producing a markdown report with the same rows/series the paper
+//! reports (workloads scaled to the tiny-GPT testbed — DESIGN.md §3
+//! documents the expected *shape*, EXPERIMENTS.md records measurements).
+//!
+//! Invoked from `lobcq bench --exp <id>` and from `cargo bench`.
+
+use crate::data::corpus;
+use crate::eval::perplexity::{ppl_cpu, EvalOpts};
+use crate::eval::scheme::{is_gemm_weight, mx4, mxfp4, vsq, Scheme};
+use crate::eval::setup::Env;
+use crate::eval::tasks_eval::{harness_suite, mmlu_accuracy};
+use crate::formats::{E1M2, E2M1, E3M0, E3M2, E3M3, E4M0};
+use crate::model::{forward, Weights};
+use crate::quant::baselines::Quantizer;
+use crate::quant::calib::{CalibScope, LobcqQuantizer};
+use crate::quant::lobcq::{calibrate_blocks, normalize, normalized_blocks, CalibOpts, InitMethod, LobcqConfig};
+use crate::quant::metrics::{bitwidth_table1, compression_factor};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+use crate::util::stats::nmse;
+use std::fmt::Write as _;
+
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "tab1", "tab2", "tab3", "tab4", "tab5", "tab6", "tab7", "tab8", "tab9", "tab10", "tab11",
+    "fig1", "fig4", "fig6", "fig7", "fig8", "fig9",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, env: &Env, quick: bool) -> anyhow::Result<String> {
+    match id {
+        "tab1" => tab1(),
+        "tab2" => tab2(env, quick),
+        "tab3" => tab3(env, quick),
+        "tab4" => tab4(env, quick),
+        "tab5" => tab5(env, quick),
+        "tab6" => tab6(env, quick),
+        "tab7" => tab7(env, quick),
+        "tab8" => tab8(env, quick),
+        "tab9" => tab9(env, quick),
+        "tab10" => tab10(env, quick),
+        "tab11" | "fig8" => tab11_fig8(env, quick),
+        "fig1" => fig1(env, quick),
+        "fig4" => fig4(env),
+        "fig6" => fig6(env),
+        "fig7" => fig7(env),
+        "fig9" => fig9(env),
+        other => anyhow::bail!("unknown experiment '{other}' (known: {ALL_EXPERIMENTS:?})"),
+    }
+}
+
+/// Entry point shared by the `benches/` targets (`cargo bench` runs each
+/// experiment in quick mode; set `LOBCQ_BENCH_FULL=1` for paper-scale
+/// workloads). Prints the report and exits non-zero on failure so bench
+/// runs surface regressions.
+pub fn bench_entry(id: &str) {
+    let quick = std::env::var("LOBCQ_BENCH_FULL").map(|v| v != "1").unwrap_or(true);
+    let env = Env::load();
+    let t0 = std::time::Instant::now();
+    match run(id, &env, quick) {
+        Ok(report) => {
+            println!("{report}");
+            println!("[{id}] completed in {:.2}s (quick={quick})", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("[{id}] FAILED: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn opts(quick: bool) -> EvalOpts {
+    EvalOpts { n_windows: if quick { 8 } else { 32 }, ..EvalOpts::default() }
+}
+
+/// Load a model and apply the function-preserving outlier injection
+/// (`eval::outliers`): tiny transformers lack the LLM outlier channels
+/// the paper's evaluation stresses, so every experiment runs on the
+/// injected model — its BF16 function (and PPL) is unchanged.
+fn need_weights(env: &Env, size: &str) -> anyhow::Result<(crate::model::ModelConfig, Weights)> {
+    let cfg = env.model_config(size)?;
+    let w = env.weights(size)?;
+    let wi = crate::eval::outliers::inject_outliers(&cfg, &w, crate::eval::outliers::OutlierSpec::default());
+    Ok((cfg, wi))
+}
+
+/// ---- Table 1: configuration bitwidths (exact analytic grid) ----
+pub fn tab1() -> anyhow::Result<String> {
+    let mut s = String::from("# Table 1 — LO-BCQ bitwidths (eq. 9, exact)\n\n");
+    writeln!(s, "| L_A \\ (L_b, N_c) | (8,2) | (8,4) | (8,8) | (8,16) | (4,2) | (4,4) | (2,2) |")?;
+    writeln!(s, "|---|---|---|---|---|---|---|---|")?;
+    for la in [128usize, 64, 32, 16] {
+        let cells: Vec<String> = [(8usize, 2usize), (8, 4), (8, 8), (8, 16), (4, 2), (4, 4), (2, 2)]
+            .iter()
+            .map(|&(lb, nc)| format!("{:.4}", bitwidth_table1(nc, lb, la)))
+            .collect();
+        writeln!(s, "| {la} | {} |", cells.join(" | "))?;
+    }
+    Ok(s)
+}
+
+/// The W4A4 scheme set used by Tables 2/6/7 and Fig. 1.
+fn w4a4_schemes(env: &Env) -> anyhow::Result<Vec<Scheme>> {
+    Ok(vec![
+        env.lobcq(8, 2, 64)?,
+        env.lobcq(8, 8, 64)?,
+        env.lobcq(8, 16, 32)?,
+        mx4(),
+        vsq(),
+        mxfp4(),
+    ])
+}
+
+/// ---- Table 2: W4A4 perplexity across model sizes ----
+pub fn tab2(env: &Env, quick: bool) -> anyhow::Result<String> {
+    let mut s = String::from(
+        "# Table 2 — W4A4 perplexity (CPU reference forward; weights+activations quantized)\n\n\
+         | Model | BF16 | MX4 (4.5b) | VSQ (4.5b) | MXFP4 (4.25b) | LO-BCQ g64 Nc2 (4.25b) | LO-BCQ g64 Nc8 (4.5b) | LO-BCQ g32 Nc16 (4.75b) |\n\
+         |---|---|---|---|---|---|---|---|\n",
+    );
+    let sizes: &[&str] = if quick { &["s"] } else { &["s", "m", "l"] };
+    for size in sizes {
+        let (cfg, w) = need_weights(env, size)?;
+        let base = ppl_cpu(&cfg, &w, &Scheme::Bf16, &Scheme::Bf16, &opts(quick))?;
+        let mut row = format!("| {size} ({}p) | {base:.3} ", cfg.param_count());
+        for scheme in [mx4(), vsq(), mxfp4(), env.lobcq(8, 2, 64)?, env.lobcq(8, 8, 64)?, env.lobcq(8, 16, 32)?] {
+            let ppl = ppl_cpu(&cfg, &w, &scheme, &scheme, &opts(quick))?;
+            write!(row, "| {ppl:.3} (+{:.3}) ", ppl - base)?;
+        }
+        writeln!(s, "{row}|")?;
+    }
+    s.push_str("\nPaper shape: LO-BCQ Δ ≪ MX4/VSQ/MXFP4 Δ at equal bitwidth; Δ shrinks as Nc grows.\n");
+    Ok(s)
+}
+
+/// ---- Table 3: g128 W4A4 ΔPPL, Nc sweep ----
+pub fn tab3(env: &Env, quick: bool) -> anyhow::Result<String> {
+    let (cfg, w) = need_weights(env, "m")?;
+    let base = ppl_cpu(&cfg, &w, &Scheme::Bf16, &Scheme::Bf16, &opts(quick))?;
+    let mut s = String::from(
+        "# Table 3 — W4A4 ΔPPL at group size 128 (paper: SmoothQuant 77.65, OmniQuant 9.14, QuaRot 0.46, Atom 0.56 on Llama2-7B)\n\n\
+         | Method | bitwidth | ΔPPL (m) |\n|---|---|---|\n",
+    );
+    for nc in [2usize, 4, 8, 16] {
+        let scheme = env.lobcq(8, nc, 128)?;
+        let ppl = ppl_cpu(&cfg, &w, &scheme, &scheme, &opts(quick))?;
+        writeln!(s, "| LO-BCQ (Nc={nc}) | {:.2} | {:+.3} |", scheme.bits(), ppl - base)?;
+    }
+    writeln!(s, "\nBF16 baseline PPL: {base:.3}. Expected shape: ΔPPL decreases with Nc.")?;
+    Ok(s)
+}
+
+/// ---- Table 4: weight-only (W4A16) g128 + task accuracies ----
+pub fn tab4(env: &Env, quick: bool) -> anyhow::Result<String> {
+    let (cfg, w) = need_weights(env, "m")?;
+    let base = ppl_cpu(&cfg, &w, &Scheme::Bf16, &Scheme::Bf16, &opts(quick))?;
+    let items = if quick { 30 } else { 80 };
+    let mut s = String::from(
+        "# Table 4 — weight-only (W4A16) LO-BCQ g128 (paper compares GPTQ/AWQ/QuiP#/AQLM)\n\n\
+         | Nc | bitwidth | ΔPPL | PQ* | WG* | HS* |\n|---|---|---|---|---|---|\n",
+    );
+    for nc in [2usize, 4, 8, 16] {
+        let scheme = env.lobcq(8, nc, 128)?;
+        let ppl = ppl_cpu(&cfg, &w, &scheme, &Scheme::Bf16, &opts(quick))?;
+        let (rows, _) = harness_suite(&cfg, &w, &scheme, &Scheme::Bf16, items, 17)?;
+        let get = |n: &str| rows.iter().find(|(name, _)| name == n).map(|(_, a)| a * 100.0).unwrap();
+        writeln!(
+            s,
+            "| {nc} | {:.2} | {:+.3} | {:.1} | {:.1} | {:.1} |",
+            scheme.bits(),
+            ppl - base,
+            get("PQ*"),
+            get("WG*"),
+            get("HS*")
+        )?;
+    }
+    writeln!(s, "\nBF16 baseline PPL {base:.3}. Shape: small ΔPPL, shrinking with Nc; accuracies ≈ baseline.")?;
+    Ok(s)
+}
+
+/// ---- Table 5: sub-4-bit weight-only ----
+pub fn tab5(env: &Env, quick: bool) -> anyhow::Result<String> {
+    let (cfg, w) = need_weights(env, "m")?;
+    let base = ppl_cpu(&cfg, &w, &Scheme::Bf16, &Scheme::Bf16, &opts(quick))?;
+    let mut s = String::from(
+        "# Table 5 — sub-4-bit weight-only LO-BCQ (paper compares QuIP#/AQLM)\n\n\
+         | B | Nc | bitwidth | PPL (Δ) |\n|---|---|---|---|\n",
+    );
+    writeln!(s, "| 16 (BF16) | - | 16 | {base:.3} |")?;
+    for (b, nc) in [(3u32, 4usize), (3, 8), (2, 4), (2, 8)] {
+        let scheme = env.lobcq_bits(8, nc, 64, b, 6)?;
+        let ppl = ppl_cpu(&cfg, &w, &scheme, &Scheme::Bf16, &opts(quick))?;
+        writeln!(s, "| {b} | {nc} | {:.3} | {ppl:.3} ({:+.3}) |", scheme.bits(), ppl - base)?;
+    }
+    s.push_str("\nShape: W3 degrades mildly, W2 clearly more; Nc=8 beats Nc=4 at both widths.\n");
+    Ok(s)
+}
+
+/// ---- Table 6: LM-harness analog, 0-shot accuracy ----
+pub fn tab6(env: &Env, quick: bool) -> anyhow::Result<String> {
+    let items = if quick { 30 } else { 100 };
+    let sizes: &[&str] = if quick { &["s"] } else { &["s", "m"] };
+    let mut s = String::from(
+        "# Table 6 — downstream task accuracy (5 synthetic cloze tasks, answer-ranking)\n\n\
+         | Model | Method | RA* | BQ* | HS* | PQ* | WG* | Avg (Δ%) |\n|---|---|---|---|---|---|---|---|\n",
+    );
+    for size in sizes {
+        let (cfg, w) = need_weights(env, size)?;
+        let (_, base_avg) = harness_suite(&cfg, &w, &Scheme::Bf16, &Scheme::Bf16, items, 23)?;
+        let mut all: Vec<(String, Scheme)> = vec![("BF16".into(), Scheme::Bf16)];
+        for sc in w4a4_schemes(env)? {
+            all.push((sc.name(), sc));
+        }
+        for (name, scheme) in all {
+            let (rows, avg) = harness_suite(&cfg, &w, &scheme, &scheme, items, 23)?;
+            let cells: Vec<String> = rows.iter().map(|(_, a)| format!("{:.1}", a * 100.0)).collect();
+            writeln!(
+                s,
+                "| {size} | {name} | {} | {:.1} ({:+.2}) |",
+                cells.join(" | "),
+                avg * 100.0,
+                (base_avg - avg) * 100.0
+            )?;
+        }
+    }
+    s.push_str("\nShape: LO-BCQ Δ% < 1 and below MX4/VSQ/MXFP4 at equal bitwidth.\n");
+    Ok(s)
+}
+
+/// ---- Table 7: MMLU analog (long-context multi-choice) ----
+pub fn tab7(env: &Env, quick: bool) -> anyhow::Result<String> {
+    let n = if quick { 40 } else { 150 };
+    let sizes: &[&str] = if quick { &["s"] } else { &["s", "m", "l"] };
+    let mut s = String::from(
+        "# Table 7 — MMLU-analog accuracy (long-context noun recall)\n\n| Method |",
+    );
+    for size in sizes {
+        write!(s, " {size} |")?;
+    }
+    s.push('\n');
+    writeln!(s, "|---|{}", "---|".repeat(sizes.len()))?;
+    let mut all: Vec<(String, Scheme)> = vec![("BF16".into(), Scheme::Bf16)];
+    for sc in w4a4_schemes(env)? {
+        all.push((sc.name(), sc));
+    }
+    for (name, scheme) in all {
+        write!(s, "| {name} |")?;
+        for size in sizes {
+            let (cfg, w) = need_weights(env, size)?;
+            let acc = mmlu_accuracy(&cfg, &w, &scheme, &scheme, n, 29)?;
+            write!(s, " {:.1} |", acc * 100.0)?;
+        }
+        s.push('\n');
+    }
+    Ok(s)
+}
+
+/// ---- Table 8: (L_b, N_c, L_A) ablation grid ----
+pub fn tab8(env: &Env, quick: bool) -> anyhow::Result<String> {
+    let size = "m";
+    let (cfg, w) = need_weights(env, size)?;
+    let base = ppl_cpu(&cfg, &w, &Scheme::Bf16, &Scheme::Bf16, &opts(quick))?;
+    let grid: Vec<(usize, usize)> = if quick {
+        vec![(8, 2), (8, 16), (4, 2)]
+    } else {
+        vec![(8, 2), (8, 4), (8, 8), (8, 16), (4, 2), (4, 4), (2, 2)]
+    };
+    let mut s = format!(
+        "# Table 8 — PPL across LO-BCQ configurations (model {size}, BF16 PPL {base:.3})\n\n| L_A \\ (L_b,N_c) |"
+    );
+    for &(lb, nc) in &grid {
+        write!(s, " ({lb},{nc}) |")?;
+    }
+    s.push('\n');
+    writeln!(s, "|---|{}", "---|".repeat(grid.len()))?;
+    for la in [64usize, 32, 16] {
+        write!(s, "| {la} |")?;
+        for &(lb, nc) in &grid {
+            let scheme = env.lobcq(lb, nc, la)?;
+            let ppl = ppl_cpu(&cfg, &w, &scheme, &scheme, &opts(quick))?;
+            write!(s, " {ppl:.3} |")?;
+        }
+        s.push('\n');
+    }
+    s.push_str("\nShape: PPL improves with Nc↑ and L_A↓; L_b<8 gives diminishing returns at fixed bitwidth.\n");
+    Ok(s)
+}
+
+/// ---- Table 9: universal vs layerwise calibration ----
+pub fn tab9(env: &Env, quick: bool) -> anyhow::Result<String> {
+    let (cfg, w) = need_weights(env, "s")?;
+    let base = ppl_cpu(&cfg, &w, &Scheme::Bf16, &Scheme::Bf16, &opts(quick))?;
+    let ncs: Vec<usize> = if quick { vec![2, 8] } else { vec![2, 4, 8, 16] };
+    let las: Vec<usize> = if quick { vec![64] } else { vec![64, 32, 16] };
+    let mut s = format!(
+        "# Table 9 — universal vs layerwise codebooks (model s, BF16 PPL {base:.3}, W4A4, L_b=8)\n\n\
+         | L_A | scope |"
+    );
+    for nc in &ncs {
+        write!(s, " Nc={nc} |")?;
+    }
+    s.push('\n');
+    writeln!(s, "|---|---|{}", "---|".repeat(ncs.len()))?;
+    for &la in &las {
+        for scope in ["universal", "layerwise"] {
+            write!(s, "| {la} | {scope} |")?;
+            for &nc in &ncs {
+                let ppl = match scope {
+                    "universal" => {
+                        let scheme = env.lobcq(8, nc, la)?;
+                        ppl_cpu(&cfg, &w, &scheme, &scheme, &opts(quick))?
+                    }
+                    _ => {
+                        // Layerwise: refit codebooks per tensor via the
+                        // self-calibrating quantizer.
+                        let lcfg = LobcqConfig::new(8, nc, la);
+                        let q = LobcqQuantizer::layerwise(lcfg, 0xCA11B);
+                        let scheme = LayerwiseScheme { q };
+                        let wq = scheme.quantize_weights(&cfg, &w);
+                        let hook = |x: &[f32]| scheme.q.quantize(x);
+                        let windows = opts(quick);
+                        ppl_cpu_with_hook(&cfg, &wq, &hook, &windows)?
+                    }
+                };
+                write!(s, " {ppl:.3} |")?;
+            }
+            s.push('\n');
+        }
+    }
+    s.push_str("\nShape: layerwise ≈ universal for Nc > 4 (paper's justification for freezing universal books).\n");
+    Ok(s)
+}
+
+/// Thin adapter for layerwise evaluation (Table 9).
+struct LayerwiseScheme {
+    q: LobcqQuantizer,
+}
+
+impl LayerwiseScheme {
+    fn quantize_weights(&self, cfg: &crate::model::ModelConfig, w: &Weights) -> Weights {
+        let mut out = w.clone();
+        for (name, _) in cfg.param_shapes() {
+            if !is_gemm_weight(&name) {
+                continue;
+            }
+            let t = out.tensors.get(&name).unwrap();
+            let tt = t.transpose2();
+            let q = self.q.quantize(&tt.data);
+            out.tensors.insert(name, Tensor::new(&tt.shape, q).transpose2());
+        }
+        out
+    }
+}
+
+/// ppl_cpu for an arbitrary activation hook (layerwise path).
+fn ppl_cpu_with_hook(
+    cfg: &crate::model::ModelConfig,
+    w: &Weights,
+    hook: &(dyn Fn(&[f32]) -> Vec<f32> + Sync),
+    opts: &EvalOpts,
+) -> anyhow::Result<f64> {
+    let toks = corpus::generate(opts.val_seed, opts.n_windows * opts.t + 1 + opts.t);
+    let mut windows = corpus::windows(&toks, opts.t);
+    windows.truncate(opts.n_windows);
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for chunk in windows.chunks(opts.batch) {
+        let batch = chunk.len();
+        let mut tokens = Vec::with_capacity(batch * opts.t);
+        for win in chunk {
+            tokens.extend_from_slice(&win[..opts.t]);
+        }
+        let logits = forward(cfg, w, &tokens, batch, Some(hook))?;
+        for (b, win) in chunk.iter().enumerate() {
+            for p in 0..opts.t {
+                let row = logits.row(b * opts.t + p);
+                nll -= crate::eval::perplexity::log_softmax_at(row, win[p + 1] as usize);
+                count += 1;
+            }
+        }
+    }
+    Ok((nll / count as f64).exp())
+}
+
+/// ---- Table 10: codeword bits (INT4 vs INT6 vs INT8) ----
+pub fn tab10(env: &Env, quick: bool) -> anyhow::Result<String> {
+    let (cfg, w) = need_weights(env, "s")?;
+    let base = ppl_cpu(&cfg, &w, &Scheme::Bf16, &Scheme::Bf16, &opts(quick))?;
+    let mut s = format!(
+        "# Table 10 — codeword integer width (model s, g128, W4A4, BF16 PPL {base:.3})\n\n\
+         | Nc | INT4 | INT6 | INT8 |\n|---|---|---|---|\n"
+    );
+    for nc in [2usize, 4, 8, 16] {
+        write!(s, "| {nc} |")?;
+        for bc in [4u32, 6, 8] {
+            let scheme = env.lobcq_bits(8, nc, 128, 4, bc)?;
+            let ppl = ppl_cpu(&cfg, &w, &scheme, &scheme, &opts(quick))?;
+            write!(s, " {ppl:.3} |")?;
+        }
+        s.push('\n');
+    }
+    s.push_str("\nShape: INT6 ≈ INT8, INT4 clearly worse (paper's basis for B_c = 6).\n");
+    Ok(s)
+}
+
+/// ---- Table 11 + Fig 8: per-tensor FP vs Lloyd-Max ----
+pub fn tab11_fig8(env: &Env, quick: bool) -> anyhow::Result<String> {
+    let (cfg, w) = need_weights(env, "s")?;
+    let base = ppl_cpu(&cfg, &w, &Scheme::Bf16, &Scheme::Bf16, &opts(quick))?;
+    let mut s = format!(
+        "# Table 11 / Fig 8 — per-tensor FP vs Lloyd-Max (weight-only, model s, BF16 PPL {base:.3})\n\n\
+         | bits | FP format | FP PPL | Lloyd-Max PPL | FP wNMSE | LM wNMSE |\n|---|---|---|---|---|---|\n"
+    );
+    // Weight NMSE measured on the first GEMM tensor (Fig. 8's lens).
+    let probe = w.get("l0.attn.wqkv")?;
+    for (bits, fmt) in [(7u32, E3M3), (6, E3M2), (5, E4M0)] {
+        let fp = Scheme::FpTensor(fmt);
+        let lm = Scheme::LloydMax { bits };
+        let fp_ppl = ppl_cpu(&cfg, &w, &fp, &Scheme::Bf16, &opts(quick))?;
+        let lm_ppl = ppl_cpu(&cfg, &w, &lm, &Scheme::Bf16, &opts(quick))?;
+        let fp_nmse = nmse(&probe.data, &fp.quantize_flat(&probe.data));
+        let lm_nmse = nmse(&probe.data, &lm.quantize_flat(&probe.data));
+        writeln!(
+            s,
+            "| {bits} | {} | {fp_ppl:.3} | {lm_ppl:.3} | {fp_nmse:.2e} | {lm_nmse:.2e} |",
+            fmt.name
+        )?;
+    }
+    s.push_str("\nShape: Lloyd-Max ≤ FP at every width; the gap explodes at 5 bits (E4M0 collapse).\n");
+    Ok(s)
+}
+
+/// ---- Fig 1: ΔPPL vs compression factor scatter ----
+pub fn fig1(env: &Env, quick: bool) -> anyhow::Result<String> {
+    let (cfg, w) = need_weights(env, "s")?;
+    let base = ppl_cpu(&cfg, &w, &Scheme::Bf16, &Scheme::Bf16, &opts(quick))?;
+    let mut s = format!(
+        "# Fig 1 — ΔPPL vs compression factor (model s, BF16 PPL {base:.3})\n\n\
+         | Method | bits/scalar | compression× | ΔPPL |\n|---|---|---|---|\n"
+    );
+    let mut schemes = w4a4_schemes(env)?;
+    schemes.push(env.lobcq(8, 4, 128)?);
+    for scheme in schemes {
+        let ppl = ppl_cpu(&cfg, &w, &scheme, &scheme, &opts(quick))?;
+        let bits = scheme.bits();
+        // Equal-weight A and W per the paper's metric.
+        let cf = compression_factor(1000, bits, 1000, bits);
+        writeln!(s, "| {} | {bits:.3} | {cf:.2} | {:+.3} |", scheme.name(), ppl - base)?;
+    }
+    s.push_str("\nShape: LO-BCQ sits on the Pareto frontier — lowest ΔPPL at every compression level.\n");
+    Ok(s)
+}
+
+/// Gather the normalized calibration blocks for figure experiments.
+fn fig_blocks(env: &Env, cfg_q: &LobcqConfig) -> anyhow::Result<Vec<f32>> {
+    let data: Vec<f32> = match env.weights("s") {
+        Ok(w) => w.get("l0.mlp.w1")?.transpose2().data,
+        Err(_) => {
+            let mut rng = Pcg32::seeded(0xF16);
+            crate::util::rng::llm_like_sample(&mut rng, 64 * 1024, 0.04, 4.0)
+        }
+    };
+    let norm = normalize(&data, cfg_q.la, cfg_q);
+    Ok(norm.values)
+}
+
+/// ---- Fig 4: k-means++ vs naive init convergence ----
+pub fn fig4(env: &Env) -> anyhow::Result<String> {
+    let cfg = LobcqConfig::new(8, 16, 64);
+    let values = fig_blocks(env, &cfg)?;
+    let blocks: Vec<&[f32]> = values.chunks_exact(cfg.lb).collect();
+    let mut s = String::from("# Fig 4 — NMSE vs iteration: proposed (k-means++) vs naive init (L_A=64, Nc=16)\n\n| iter | kmeans++ | naive |\n|---|---|---|\n");
+    let denom = crate::util::stats::sum_sq(&values) / values.len() as f64;
+    let run = |init| {
+        let mut rng = Pcg32::seeded(0xF1604);
+        calibrate_blocks(&blocks, &cfg, CalibOpts { max_iters: 25, rel_tol: 0.0, init }, &mut rng)
+            .trace
+            .iter()
+            .map(|j| j / denom)
+            .collect::<Vec<f64>>()
+    };
+    let pp = run(InitMethod::KmeansPp);
+    let naive = run(InitMethod::Random);
+    for i in 0..pp.len().max(naive.len()) {
+        let a = pp.get(i).or(pp.last()).unwrap();
+        let b = naive.get(i).or(naive.last()).unwrap();
+        writeln!(s, "| {i} | {a:.5} | {b:.5} |")?;
+    }
+    let (fa, fb) = (*pp.last().unwrap(), *naive.last().unwrap());
+    writeln!(s, "\nfinal: kmeans++ {fa:.5} vs naive {fb:.5} (expected: kmeans++ ≤ naive)")?;
+    anyhow::ensure!(fa <= fb * 1.05, "kmeans++ init failed to match/beat naive");
+    Ok(s)
+}
+
+/// ---- Fig 6: codebooks vs FP4 formats + per-layer NMSE ----
+pub fn fig6(env: &Env) -> anyhow::Result<String> {
+    let (cfg, w) = need_weights(env, "m")?;
+    let fam = env.family(16, 4, 6)?;
+    let mut s = String::from("# Fig 6 — LO-BCQ codebooks (left) and per-layer weight NMSE (right)\n\n## Codebook levels (INT6 codewords, normalized domain)\n\n");
+    for (i, book) in fam.books.iter().enumerate() {
+        writeln!(s, "- C{i}: {:?}", book.levels)?;
+    }
+    s.push_str("\n## Per-layer NMSE (first 20 GEMM tensors)\n\n| layer | LO-BCQ (g64,Nc16) | E1M2 (g16) | E2M1 (g16) | E3M0 (g16) |\n|---|---|---|---|---|\n");
+    let lob = env.lobcq(8, 16, 64)?;
+    let fp_block = |fmt: crate::formats::FloatFormat, data: &[f32]| -> f64 {
+        // Per-16-block max-scaled FP4 (the MX-style comparison).
+        let mut out = Vec::with_capacity(data.len());
+        for b in data.chunks(16) {
+            let amax = crate::util::stats::amax(b);
+            if amax == 0.0 {
+                out.extend_from_slice(b);
+                continue;
+            }
+            let scale = fmt.max_value / amax;
+            out.extend(b.iter().map(|&x| fmt.quantize(x * scale) / scale));
+        }
+        nmse(data, &out)
+    };
+    let mut count = 0;
+    let mut wins = 0;
+    for (name, _) in cfg.param_shapes() {
+        if !is_gemm_weight(&name) || count >= 20 {
+            continue;
+        }
+        count += 1;
+        let data = w.get(&name)?.transpose2().data;
+        let e_lob = nmse(&data, &lob.quantize_flat(&data));
+        let e1 = fp_block(E1M2, &data);
+        let e2 = fp_block(E2M1, &data);
+        let e3 = fp_block(E3M0, &data);
+        if e_lob <= e1.min(e2).min(e3) {
+            wins += 1;
+        }
+        writeln!(s, "| {name} | {e_lob:.2e} | {e1:.2e} | {e2:.2e} | {e3:.2e} |")?;
+    }
+    writeln!(s, "\nLO-BCQ lowest-NMSE on {wins}/{count} layers (paper: LO-BCQ below all FP4 formats).")?;
+    Ok(s)
+}
+
+/// ---- Fig 7: universal vs layerwise NMSE on activations ----
+pub fn fig7(env: &Env) -> anyhow::Result<String> {
+    let (cfg, w) = need_weights(env, "m")?;
+    // Capture every GEMM input activation on one corpus batch.
+    let taps: std::sync::Mutex<Vec<Vec<f32>>> = std::sync::Mutex::new(Vec::new());
+    let capture = |x: &[f32]| -> Vec<f32> {
+        taps.lock().unwrap().push(x.to_vec());
+        x.to_vec()
+    };
+    let tokens = corpus::generate(1234, 8 * 64);
+    forward(&cfg, &w, &tokens, 8, Some(&capture))?;
+    let taps = taps.into_inner().unwrap();
+
+    let univ = env.lobcq(8, 8, 64)?;
+    let lcfg = LobcqConfig::new(8, 8, 64);
+    let mut s = String::from(
+        "# Fig 7 — universal vs layerwise codebook NMSE on GEMM input activations\n\n\
+         | tap | universal | layerwise |\n|---|---|---|\n",
+    );
+    let mut worst_ratio = 0.0f64;
+    for (i, act) in taps.iter().take(30).enumerate() {
+        let e_u = nmse(act, &univ.quantize_flat(act));
+        let lq = LobcqQuantizer { cfg: lcfg, scope: CalibScope::Layerwise, family: None, seed: i as u64 };
+        let e_l = nmse(act, &lq.quantize(act));
+        worst_ratio = worst_ratio.max(e_u / e_l.max(1e-12));
+        writeln!(s, "| {i} | {e_u:.2e} | {e_l:.2e} |")?;
+    }
+    writeln!(s, "\nworst universal/layerwise NMSE ratio: {worst_ratio:.2} (paper: comparable, ≈1)")?;
+    Ok(s)
+}
+
+/// ---- Fig 9: NMSE vs iterations across configs + baselines ----
+pub fn fig9(env: &Env) -> anyhow::Result<String> {
+    let base_cfg = LobcqConfig::new(8, 8, 64);
+    let values = fig_blocks(env, &base_cfg)?;
+    let denom = crate::util::stats::sum_sq(&values) / values.len() as f64;
+    let mut s = String::from("# Fig 9 — NMSE vs iteration for several (L_b, Nc), with MXFP4/VSQ reference lines\n\n");
+    // Reference lines: baselines on the *denormalized* data.
+    let raw: Vec<f32> = {
+        let (cfgm, w) = need_weights(env, "s").or_else(|_| anyhow::bail!("need artifacts"))?;
+        let _ = cfgm;
+        w.get("l0.mlp.w1")?.transpose2().data
+    };
+    writeln!(s, "- MXFP4 NMSE: {:.5}", nmse(&raw, &mxfp4().quantize_flat(&raw)))?;
+    writeln!(s, "- VSQ NMSE:   {:.5}\n", nmse(&raw, &vsq().quantize_flat(&raw)))?;
+    writeln!(s, "| iter | (8,2) | (8,16) | (4,4) | (2,2) |")?;
+    writeln!(s, "|---|---|---|---|---|")?;
+    let mut traces = Vec::new();
+    for (lb, nc) in [(8usize, 2usize), (8, 16), (4, 4), (2, 2)] {
+        let cfg = LobcqConfig::new(lb, nc, 64);
+        let norm = normalize(&raw, cfg.la, &cfg);
+        let blocks = normalized_blocks(&norm, cfg.lb);
+        let mut rng = Pcg32::seeded(0xF19);
+        let trace = calibrate_blocks(&blocks, &cfg, CalibOpts { max_iters: 20, rel_tol: 0.0, init: InitMethod::KmeansPp }, &mut rng).trace;
+        let d = crate::util::stats::sum_sq(&norm.values) / norm.values.len() as f64;
+        traces.push(trace.iter().map(|j| j / d).collect::<Vec<f64>>());
+    }
+    let rows = traces.iter().map(|t| t.len()).max().unwrap();
+    for i in 0..rows {
+        write!(s, "| {i} |")?;
+        for t in &traces {
+            write!(s, " {:.5} |", t.get(i).or(t.last()).unwrap())?;
+        }
+        s.push('\n');
+    }
+    let _ = denom;
+    s.push_str("\nShape: monotone traces; more codebooks / shorter blocks converge lower.\n");
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tab1_is_pure_and_complete() {
+        let s = tab1().unwrap();
+        assert!(s.contains("4.1875"));
+        assert!(s.contains("| 16 |"));
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let env = Env::load_from(std::path::PathBuf::from("/nonexistent"));
+        assert!(run("tab99", &env, true).is_err());
+    }
+
+    #[test]
+    fn fig4_runs_without_artifacts() {
+        // Uses the synthetic fallback when no artifacts exist.
+        let env = Env::load_from(std::path::PathBuf::from("/nonexistent"));
+        let s = fig4(&env).unwrap();
+        assert!(s.contains("kmeans++"));
+    }
+}

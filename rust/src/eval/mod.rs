@@ -1,0 +1,14 @@
+//! Evaluation harness: perplexity + downstream-task accuracy evaluators
+//! and one driver per paper table/figure (see DESIGN.md §3 for the
+//! experiment index and EXPERIMENTS.md for measured results).
+
+pub mod experiments;
+pub mod outliers;
+pub mod perplexity;
+pub mod scheme;
+pub mod setup;
+pub mod tasks_eval;
+
+pub use perplexity::{ppl_cpu, ppl_pjrt, EvalOpts};
+pub use scheme::Scheme;
+pub use setup::Env;

@@ -1,0 +1,166 @@
+//! Function-preserving outlier injection.
+//!
+//! Large LLMs develop *outlier channels*: a few activation dimensions
+//! with magnitudes 10–100× the rest (Dettmers et al. 2022; the paper's
+//! §4.2.1 discussion of VSQ's Llama2-7B blow-up hinges on them). Tiny
+//! synthetic-corpus transformers do not develop this phenomenon, so
+//! naive W4A4 evaluation on them under-stresses every quantizer and
+//! compresses the differences the paper's tables measure.
+//!
+//! This module restores the phenomenon *without changing the function
+//! computed*: pick a fraction of channels and scale them by `alpha` on
+//! the producer side (LN gain/bias columns, or V-projection columns)
+//! while scaling the consumer weight rows by `1/alpha`. In exact
+//! arithmetic the logits are identical (diagonal rescaling through a
+//! linear map); in BF16/f32 the baseline perplexity moves by rounding
+//! noise only (asserted in tests) — but the *quantizers* now face
+//! realistic outlier-bearing operands on three of the four GEMM inputs
+//! (the MLP-down input is left natural: GELU is not scale-equivariant).
+//!
+//! DESIGN.md §1 records this as part of the model-substitution argument.
+
+use crate::model::{ModelConfig, Weights};
+use crate::util::rng::Pcg32;
+
+/// Injection parameters. Defaults mirror measured LLM outlier stats:
+/// ~3% of channels at ~16× magnitude.
+#[derive(Debug, Clone, Copy)]
+pub struct OutlierSpec {
+    pub frac: f32,
+    pub alpha: f32,
+    pub seed: u64,
+}
+
+impl Default for OutlierSpec {
+    fn default() -> Self {
+        OutlierSpec { frac: 0.04, alpha: 16.0, seed: 0x0071 }
+    }
+}
+
+fn pick_channels(rng: &mut Pcg32, n: usize, frac: f32) -> Vec<usize> {
+    let k = ((n as f32 * frac).round() as usize).max(1);
+    rng.sample_indices(n, k)
+}
+
+/// Scale column `j` of a row-major (rows, cols) tensor by `a`.
+fn scale_col(t: &mut crate::tensor::Tensor, j: usize, a: f32) {
+    let cols = t.cols();
+    let rows = t.rows();
+    for r in 0..rows {
+        t.data[r * cols + j] *= a;
+    }
+}
+
+/// Scale row `j` by `a`.
+fn scale_row(t: &mut crate::tensor::Tensor, j: usize, a: f32) {
+    for v in t.row_mut(j) {
+        *v *= a;
+    }
+}
+
+/// Apply the rescaling to a weight set. Returns the transformed copy.
+pub fn inject_outliers(cfg: &ModelConfig, w: &Weights, spec: OutlierSpec) -> Weights {
+    let mut out = w.clone();
+    let mut rng = Pcg32::new(spec.seed, 0x0071E8);
+    let d = cfg.d;
+    for i in 0..cfg.n_layers {
+        // (1) ln1 gain/bias channel j × α  ⇒  wqkv row j × 1/α.
+        let chans = pick_channels(&mut rng, d, spec.frac);
+        {
+            let g = out.tensors.get_mut(&format!("l{i}.ln1.g")).unwrap();
+            for &j in &chans {
+                g.data[j] *= spec.alpha;
+            }
+            let b = out.tensors.get_mut(&format!("l{i}.ln1.b")).unwrap();
+            for &j in &chans {
+                b.data[j] *= spec.alpha;
+            }
+            let wqkv = out.tensors.get_mut(&format!("l{i}.attn.wqkv")).unwrap();
+            for &j in &chans {
+                scale_row(wqkv, j, 1.0 / spec.alpha);
+            }
+        }
+        // (2) V output channel j × α  ⇒  wo row j × 1/α. (V occupies
+        // columns [2d, 3d) of wqkv; attention mixes tokens, not channels,
+        // so the scale rides through to wo's input rows.)
+        let chans = pick_channels(&mut rng, d, spec.frac);
+        {
+            let wqkv = out.tensors.get_mut(&format!("l{i}.attn.wqkv")).unwrap();
+            for &j in &chans {
+                scale_col(wqkv, 2 * d + j, spec.alpha);
+            }
+            let wo = out.tensors.get_mut(&format!("l{i}.attn.wo")).unwrap();
+            for &j in &chans {
+                scale_row(wo, j, 1.0 / spec.alpha);
+            }
+        }
+        // (3) ln2 channel j × α  ⇒  mlp.w1 row j × 1/α.
+        let chans = pick_channels(&mut rng, d, spec.frac);
+        {
+            let g = out.tensors.get_mut(&format!("l{i}.ln2.g")).unwrap();
+            for &j in &chans {
+                g.data[j] *= spec.alpha;
+            }
+            let b = out.tensors.get_mut(&format!("l{i}.ln2.b")).unwrap();
+            for &j in &chans {
+                b.data[j] *= spec.alpha;
+            }
+            let w1 = out.tensors.get_mut(&format!("l{i}.mlp.w1")).unwrap();
+            for &j in &chans {
+                scale_row(w1, j, 1.0 / spec.alpha);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::perplexity::{ppl_cpu, EvalOpts};
+    use crate::eval::scheme::Scheme;
+    use crate::model::forward;
+    use crate::model::forward::tests_support::random_weights;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { name: "t".into(), d: 32, n_layers: 2, n_heads: 2, vocab: 168, max_t: 32 }
+    }
+
+    #[test]
+    fn function_preserving_in_f32() {
+        let c = cfg();
+        let w = random_weights(&c, 31);
+        let wi = inject_outliers(&c, &w, OutlierSpec::default());
+        let tokens = crate::data::corpus::generate(3, 16);
+        let a = forward(&c, &w, &tokens, 1, None).unwrap();
+        let b = forward(&c, &wi, &tokens, 1, None).unwrap();
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 2e-3 * (1.0 + x.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn baseline_ppl_unchanged_but_quantized_stressed() {
+        let c = cfg();
+        let w = random_weights(&c, 32);
+        let wi = inject_outliers(&c, &w, OutlierSpec::default());
+        let opts = EvalOpts { n_windows: 4, t: 32, batch: 2, val_seed: 5678 };
+        let base = ppl_cpu(&c, &w, &Scheme::Bf16, &Scheme::Bf16, &opts).unwrap();
+        let base_i = ppl_cpu(&c, &wi, &Scheme::Bf16, &Scheme::Bf16, &opts).unwrap();
+        assert!((base - base_i).abs() / base < 0.01, "{base} vs {base_i}");
+        // The injected model stresses a coarse quantizer more.
+        let q = crate::eval::scheme::vsq();
+        let qv = ppl_cpu(&c, &wi, &q, &q, &opts).unwrap();
+        let qv_plain = ppl_cpu(&c, &w, &q, &q, &opts).unwrap();
+        assert!(qv > qv_plain * 0.9, "injection should not make VSQ easier: {qv} vs {qv_plain}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = cfg();
+        let w = random_weights(&c, 33);
+        let a = inject_outliers(&c, &w, OutlierSpec::default());
+        let b = inject_outliers(&c, &w, OutlierSpec::default());
+        assert_eq!(a.get("l0.ln1.g").unwrap().data, b.get("l0.ln1.g").unwrap().data);
+    }
+}

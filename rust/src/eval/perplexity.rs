@@ -1,0 +1,160 @@
+//! Perplexity evaluation over the synthetic validation corpus, via
+//! either the CPU reference forward (configuration sweeps) or a PJRT
+//! artifact (headline tables / serving parity).
+
+use crate::data::corpus;
+use crate::eval::scheme::Scheme;
+use crate::model::{forward, ModelConfig, Weights};
+use crate::runtime::Engine;
+
+/// Evaluation workload: windows of `t` tokens from the validation stream.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOpts {
+    pub val_seed: u64,
+    pub n_windows: usize,
+    pub t: usize,
+    pub batch: usize,
+}
+
+impl Default for EvalOpts {
+    fn default() -> Self {
+        EvalOpts { val_seed: 5678, n_windows: 32, t: 64, batch: 8 }
+    }
+}
+
+fn val_windows(opts: &EvalOpts) -> Vec<Vec<u32>> {
+    let toks = corpus::generate(opts.val_seed, opts.n_windows * opts.t + 1 + opts.t);
+    let mut w = corpus::windows(&toks, opts.t);
+    w.truncate(opts.n_windows);
+    w
+}
+
+/// Mean NLL → PPL from per-position log-probs.
+fn ppl_from_nll(nll: f64, count: usize) -> f64 {
+    (nll / count.max(1) as f64).exp()
+}
+
+/// Perplexity via the CPU reference forward: weights quantized offline by
+/// `scheme`, activations quantized by the scheme's hook (W4A4 when both;
+/// pass `Scheme::Bf16` in `act_scheme` for weight-only W4A16 rows).
+pub fn ppl_cpu(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    weight_scheme: &Scheme,
+    act_scheme: &Scheme,
+    opts: &EvalOpts,
+) -> anyhow::Result<f64> {
+    let qw = weight_scheme.quantize_weights(cfg, weights);
+    let hook = act_scheme.act_hook();
+    let hook_ref: crate::model::forward::ActQuant = hook.as_deref().map(|h| h as &(dyn Fn(&[f32]) -> Vec<f32> + Sync));
+    let windows = val_windows(opts);
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for chunk in windows.chunks(opts.batch) {
+        let batch = chunk.len();
+        let mut tokens = Vec::with_capacity(batch * opts.t);
+        for w in chunk {
+            tokens.extend_from_slice(&w[..opts.t]);
+        }
+        let logits = forward(cfg, &qw, &tokens, batch, hook_ref)?;
+        let vocab = cfg.vocab;
+        for (b, w) in chunk.iter().enumerate() {
+            for p in 0..opts.t - 1 {
+                let row = logits.row(b * opts.t + p);
+                nll -= log_softmax_at(row, w[p + 1] as usize);
+                count += 1;
+            }
+            // Last position predicts the window's +1 token.
+            let row = logits.row(b * opts.t + opts.t - 1);
+            nll -= log_softmax_at(row, w[opts.t] as usize);
+            count += 1;
+            let _ = vocab;
+        }
+    }
+    Ok(ppl_from_nll(nll, count))
+}
+
+/// Perplexity via a PJRT artifact (weights must be registered; LO-BCQ
+/// variants additionally need a registered books key).
+pub fn ppl_pjrt(
+    eng: &mut Engine,
+    size: &str,
+    variant: &str,
+    weights_key: &str,
+    books_key: Option<&str>,
+    opts: &EvalOpts,
+) -> anyhow::Result<f64> {
+    let entry = eng
+        .manifest
+        .find(size, variant, opts.batch)
+        .ok_or_else(|| anyhow::anyhow!("no artifact {size}/{variant}/b{}", opts.batch))?
+        .clone();
+    anyhow::ensure!(entry.t == opts.t, "artifact t {} != opts.t {}", entry.t, opts.t);
+    let windows = val_windows(opts);
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for chunk in windows.chunks(opts.batch) {
+        // Pad partial chunks by repeating the first window (scored rows
+        // are limited to the real ones).
+        let mut tokens = Vec::with_capacity(opts.batch * opts.t);
+        for i in 0..opts.batch {
+            let w = chunk.get(i).unwrap_or(&chunk[0]);
+            tokens.extend_from_slice(&w[..opts.t]);
+        }
+        let logits = eng.run_model(&entry, weights_key, books_key, &tokens)?;
+        for (b, w) in chunk.iter().enumerate() {
+            for p in 0..opts.t - 1 {
+                nll -= logits.log_prob(b, p, w[p + 1]);
+                count += 1;
+            }
+            nll -= logits.log_prob(b, opts.t - 1, w[opts.t]);
+            count += 1;
+        }
+    }
+    Ok(ppl_from_nll(nll, count))
+}
+
+pub fn log_softmax_at(row: &[f32], idx: usize) -> f64 {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let logsum: f64 = row.iter().map(|&x| ((x as f64) - max).exp()).sum::<f64>().ln() + max;
+    row[idx] as f64 - logsum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::tests_support::{random_weights, tiny_cfg};
+
+    fn opts() -> EvalOpts {
+        EvalOpts { val_seed: 5678, n_windows: 4, t: 16, batch: 2 }
+    }
+
+    #[test]
+    fn random_model_ppl_near_uniform() {
+        // Untrained weights: PPL should be near vocab size (log-uniform).
+        let cfg = tiny_cfg(); // vocab 40, but corpus tokens reach 167 — clamp
+        // Use a corpus-compatible tiny config instead.
+        let cfg = ModelConfig { vocab: 168, ..cfg };
+        let w = random_weights(&cfg, 11);
+        let ppl = ppl_cpu(&cfg, &w, &Scheme::Bf16, &Scheme::Bf16, &opts()).unwrap();
+        assert!(ppl > 60.0 && ppl < 400.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn quantized_ppl_at_least_baseline_shape() {
+        let cfg = ModelConfig { vocab: 168, ..tiny_cfg() };
+        let w = random_weights(&cfg, 12);
+        let base = ppl_cpu(&cfg, &w, &Scheme::Bf16, &Scheme::Bf16, &opts()).unwrap();
+        let q = crate::eval::scheme::mx4();
+        let quant = ppl_cpu(&cfg, &w, &q, &q, &opts()).unwrap();
+        // Untrained nets can wobble either way, but stay within a band.
+        assert!(quant > base * 0.5 && quant < base * 2.0, "{quant} vs {base}");
+    }
+
+    #[test]
+    fn log_softmax_normalized() {
+        let row = [0.0f32, 1.0, -2.0];
+        let total: f64 = (0..3).map(|i| log_softmax_at(&row, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

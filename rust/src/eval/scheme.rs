@@ -1,0 +1,162 @@
+//! Quantization scheme registry for the evaluation harness: one enum
+//! that can (a) fake-quantize a model's GEMM weights offline and (b)
+//! provide the on-the-fly activation hook for the CPU forward — so every
+//! table swaps schemes uniformly.
+
+use crate::formats::FloatFormat;
+use crate::model::{ModelConfig, Weights};
+use crate::quant::baselines::{
+    FpTensorQuantizer, LloydMaxTensorQuantizer, Mx4Quantizer, Mxfp4Quantizer, Quantizer, VsqQuantizer,
+};
+use crate::quant::codebook::CodebookFamily;
+use crate::quant::lobcq::{fake_quantize, LobcqConfig};
+use crate::tensor::Tensor;
+
+/// A weight/activation quantization scheme instance.
+#[derive(Clone)]
+pub enum Scheme {
+    Bf16,
+    /// LO-BCQ with a frozen (universal) family.
+    Lobcq { cfg: LobcqConfig, family: CodebookFamily },
+    Mx4(Mx4Quantizer),
+    Vsq(VsqQuantizer),
+    Mxfp4(Mxfp4Quantizer),
+    /// Per-tensor FP format (Table 11 / Fig. 8).
+    FpTensor(FloatFormat),
+    /// Per-tensor Lloyd-Max (Table 11 / Fig. 8).
+    LloydMax { bits: u32 },
+}
+
+impl Scheme {
+    pub fn name(&self) -> String {
+        match self {
+            Scheme::Bf16 => "BF16".into(),
+            Scheme::Lobcq { cfg, .. } => {
+                format!("LO-BCQ (g{}, Nc={}, Lb={}, B={})", cfg.la, cfg.nc, cfg.lb, cfg.b)
+            }
+            Scheme::Mx4(q) => q.name(),
+            Scheme::Vsq(q) => q.name(),
+            Scheme::Mxfp4(q) => q.name(),
+            Scheme::FpTensor(f) => format!("FP per-tensor ({})", f.name),
+            Scheme::LloydMax { bits } => format!("Lloyd-Max per-tensor ({bits}b)"),
+        }
+    }
+
+    /// Effective bits per scalar (eq. 9 for LO-BCQ; scheme-native else).
+    pub fn bits(&self) -> f64 {
+        match self {
+            Scheme::Bf16 => 16.0,
+            Scheme::Lobcq { cfg, .. } => cfg.bitwidth(),
+            Scheme::Mx4(q) => q.bits_per_scalar(),
+            Scheme::Vsq(q) => q.bits_per_scalar(),
+            Scheme::Mxfp4(q) => q.bits_per_scalar(),
+            Scheme::FpTensor(f) => f.bits() as f64,
+            Scheme::LloydMax { bits } => *bits as f64,
+        }
+    }
+
+    /// Fake-quantize a flat slice along contiguous groups (reduction dim).
+    pub fn quantize_flat(&self, data: &[f32]) -> Vec<f32> {
+        match self {
+            Scheme::Bf16 => {
+                let mut v = data.to_vec();
+                crate::formats::bf16_round_slice(&mut v);
+                v
+            }
+            Scheme::Lobcq { cfg, family } => fake_quantize(data, cfg, family),
+            Scheme::Mx4(q) => q.quantize(data),
+            Scheme::Vsq(q) => q.quantize(data),
+            Scheme::Mxfp4(q) => q.quantize(data),
+            Scheme::FpTensor(f) => FpTensorQuantizer::new(*f).quantize(data),
+            Scheme::LloydMax { bits } => LloydMaxTensorQuantizer::new(*bits).quantize(data),
+        }
+    }
+
+    /// Fake-quantize all GEMM weights of a model along the reduction
+    /// dimension (mirror of python `quantize_weight_np`): transpose so K
+    /// is contiguous, quantize, transpose back. Embeddings / LN params
+    /// are untouched (paper §4.1 quantizes GEMM layers only).
+    pub fn quantize_weights(&self, cfg: &ModelConfig, w: &Weights) -> Weights {
+        if matches!(self, Scheme::Bf16) {
+            return w.clone();
+        }
+        let mut out = w.clone();
+        for (name, _) in cfg.param_shapes() {
+            if !is_gemm_weight(&name) {
+                continue;
+            }
+            let t = out.tensors.get(&name).unwrap();
+            let tt = t.transpose2();
+            let q = self.quantize_flat(&tt.data);
+            let qt = Tensor::new(&tt.shape, q).transpose2();
+            out.tensors.insert(name, qt);
+        }
+        out
+    }
+
+    /// Activation hook for the CPU forward (None for BF16 — the eval
+    /// baseline leaves activations in f32/BF16, matching the artifacts).
+    pub fn act_hook(&self) -> Option<Box<dyn Fn(&[f32]) -> Vec<f32> + Sync + Send>> {
+        match self {
+            Scheme::Bf16 => None,
+            other => {
+                let s = other.clone();
+                Some(Box::new(move |x: &[f32]| s.quantize_flat(x)))
+            }
+        }
+    }
+}
+
+/// GEMM weights are the 2-D non-embedding parameters.
+pub fn is_gemm_weight(name: &str) -> bool {
+    name.contains(".attn.w") || name.contains(".mlp.w")
+}
+
+/// Paper-default baseline instances.
+pub fn mx4() -> Scheme {
+    Scheme::Mx4(Mx4Quantizer::paper_default())
+}
+
+pub fn vsq() -> Scheme {
+    Scheme::Vsq(VsqQuantizer::paper_default())
+}
+
+pub fn mxfp4() -> Scheme {
+    Scheme::Mxfp4(Mxfp4Quantizer::paper_default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::tests_support::{random_weights, tiny_cfg};
+
+    #[test]
+    fn gemm_weight_detection() {
+        assert!(is_gemm_weight("l0.attn.wqkv"));
+        assert!(is_gemm_weight("l3.mlp.w2"));
+        assert!(!is_gemm_weight("embed"));
+        assert!(!is_gemm_weight("l0.ln1.g"));
+        assert!(!is_gemm_weight("pos"));
+    }
+
+    #[test]
+    fn quantize_weights_touches_only_gemms() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 9);
+        let q = mx4().quantize_weights(&cfg, &w);
+        assert_eq!(q.get("embed").unwrap().data, w.get("embed").unwrap().data);
+        assert_ne!(
+            q.get("l0.attn.wqkv").unwrap().data,
+            w.get("l0.attn.wqkv").unwrap().data
+        );
+        // Shapes preserved through the transpose round trip.
+        assert_eq!(q.get("l0.mlp.w1").unwrap().shape, w.get("l0.mlp.w1").unwrap().shape);
+    }
+
+    #[test]
+    fn scheme_bits() {
+        assert_eq!(mx4().bits(), 4.5);
+        assert_eq!(mxfp4().bits(), 4.25);
+        assert_eq!(Scheme::Bf16.bits(), 16.0);
+    }
+}

@@ -1,0 +1,184 @@
+//! Evaluation environment: loads the artifacts (manifest, trained
+//! weights, universal codebook families) once and hands out schemes.
+//! Falls back to rust-side calibration when `artifacts/` is absent so
+//! unit tests and quickstart examples work pre-`make artifacts`.
+
+use crate::model::{ModelConfig, Weights};
+use crate::quant::calib::{calibrate_universal, sample_rows};
+use crate::quant::codebook::CodebookFamily;
+use crate::quant::lobcq::{CalibOpts, LobcqConfig};
+use crate::runtime::Manifest;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+pub struct Env {
+    pub dir: PathBuf,
+    pub manifest: Option<Manifest>,
+    family_cache: Mutex<HashMap<String, CodebookFamily>>,
+    weights_cache: Mutex<HashMap<String, Weights>>,
+}
+
+impl Env {
+    pub fn load() -> Env {
+        Self::load_from(Manifest::default_dir())
+    }
+
+    pub fn load_from(dir: PathBuf) -> Env {
+        let manifest = Manifest::load(&dir).ok();
+        Env { dir, manifest, family_cache: Mutex::new(HashMap::new()), weights_cache: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn has_artifacts(&self) -> bool {
+        self.manifest.is_some()
+    }
+
+    pub fn model_config(&self, size: &str) -> anyhow::Result<ModelConfig> {
+        let m = self.manifest.as_ref().ok_or_else(|| anyhow::anyhow!("no artifacts"))?;
+        m.models
+            .get(size)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("unknown model size '{size}'"))
+    }
+
+    pub fn weights(&self, size: &str) -> anyhow::Result<Weights> {
+        if let Some(w) = self.weights_cache.lock().unwrap().get(size) {
+            return Ok(w.clone());
+        }
+        let m = self.manifest.as_ref().ok_or_else(|| anyhow::anyhow!("no artifacts"))?;
+        let w = Weights::load(&m.weights_path(size)?)?;
+        w.validate(&self.model_config(size)?)?;
+        self.weights_cache.lock().unwrap().insert(size.to_string(), w.clone());
+        Ok(w)
+    }
+
+    /// Universal family for (nc, b), codeword-quantized to INT-`bc`.
+    /// Prefers the python-calibrated `codebooks.json`; falls back to
+    /// rust calibration on the proxy model weights (or synthetic data
+    /// when no artifacts exist at all).
+    pub fn family(&self, nc: usize, b: u32, bc: u32) -> anyhow::Result<CodebookFamily> {
+        let key = format!("nc{nc}_b{b}_bc{bc}");
+        if let Some(f) = self.family_cache.lock().unwrap().get(&key) {
+            return Ok(f.clone());
+        }
+        let fam = match self.load_family_json(nc, b) {
+            Ok(raw) => raw.quantize_codewords(bc),
+            Err(_) => self.calibrate_fallback(nc, b, bc)?,
+        };
+        self.family_cache.lock().unwrap().insert(key, fam.clone());
+        Ok(fam)
+    }
+
+    fn load_family_json(&self, nc: usize, b: u32) -> anyhow::Result<CodebookFamily> {
+        let j = Json::from_file(&self.dir.join("codebooks.json"))?;
+        let fam = j.get("families")?.get(&format!("nc{nc}_b{b}"))?;
+        CodebookFamily::from_json(fam)
+    }
+
+    fn calibrate_fallback(&self, nc: usize, b: u32, bc: u32) -> anyhow::Result<CodebookFamily> {
+        let cfg = LobcqConfig::new(8, nc, 64).with_bits(b).with_codeword_bits(bc);
+        let samples: Vec<Tensor> = if let Ok(w) = self.weights("s") {
+            let gemms: Vec<&Tensor> = self
+                .model_config("s")?
+                .param_shapes()
+                .iter()
+                .filter(|(n, _)| crate::eval::scheme::is_gemm_weight(n))
+                .map(|(n, _)| w.get(n).unwrap())
+                .collect();
+            sample_rows(&gemms, 32, 0xCA11)
+        } else {
+            let mut rng = crate::util::rng::Pcg32::seeded(0xCA11);
+            vec![Tensor::new(&[64, 256], crate::util::rng::llm_like_sample(&mut rng, 64 * 256, 0.04, 4.0))]
+        };
+        let refs: Vec<&Tensor> = samples.iter().collect();
+        Ok(calibrate_universal(&refs, &cfg, CalibOpts::default(), 0x5EED))
+    }
+
+    /// Universal family calibrated on the *outlier-injected* proxy model
+    /// (the evaluation distribution — paper §4.1 calibrates on real model
+    /// data, which carries LLM outlier channels; see `eval::outliers`).
+    /// Falls back to the plain family when no artifacts exist.
+    pub fn family_for_eval(&self, nc: usize, b: u32, bc: u32) -> anyhow::Result<CodebookFamily> {
+        let key = format!("inj_nc{nc}_b{b}_bc{bc}");
+        if let Some(f) = self.family_cache.lock().unwrap().get(&key) {
+            return Ok(f.clone());
+        }
+        let fam = match (self.weights("s"), self.model_config("s")) {
+            (Ok(w), Ok(cfgm)) => {
+                let wi = crate::eval::outliers::inject_outliers(
+                    &cfgm,
+                    &w,
+                    crate::eval::outliers::OutlierSpec::default(),
+                );
+                let cfg = LobcqConfig::new(8, nc, 64).with_bits(b).with_codeword_bits(bc);
+                // Reduction-dim orientation: transpose each GEMM weight.
+                let gemms: Vec<Tensor> = cfgm
+                    .param_shapes()
+                    .iter()
+                    .filter(|(n, _)| crate::eval::scheme::is_gemm_weight(n))
+                    .map(|(n, _)| wi.get(n).unwrap().transpose2())
+                    .collect();
+                let refs: Vec<&Tensor> = gemms.iter().collect();
+                let sampled = sample_rows(&refs, 24, 0xCA11);
+                let srefs: Vec<&Tensor> = sampled.iter().collect();
+                calibrate_universal(&srefs, &cfg, CalibOpts::default(), 0x5EED)
+            }
+            _ => self.family(nc, b, bc)?,
+        };
+        self.family_cache.lock().unwrap().insert(key, fam.clone());
+        Ok(fam)
+    }
+
+    /// LO-BCQ scheme at a grid point, using the eval-distribution family.
+    pub fn lobcq(&self, lb: usize, nc: usize, la: usize) -> anyhow::Result<crate::eval::scheme::Scheme> {
+        self.lobcq_bits(lb, nc, la, 4, 6)
+    }
+
+    pub fn lobcq_bits(&self, lb: usize, nc: usize, la: usize, b: u32, bc: u32) -> anyhow::Result<crate::eval::scheme::Scheme> {
+        let cfg = LobcqConfig::new(lb, nc, la).with_bits(b).with_codeword_bits(bc);
+        cfg.validate()?;
+        Ok(crate::eval::scheme::Scheme::Lobcq { cfg, family: self.family_for_eval(nc, b, bc)? })
+    }
+
+    /// Flatten a family into the (Nc, entries) tensor the PJRT graphs take.
+    pub fn books_tensor(family: &CodebookFamily) -> Tensor {
+        let entries = family.books[0].len();
+        let rows: Vec<f32> = family.books.iter().flat_map(|b| b.levels.clone()).collect();
+        Tensor::new(&[family.nc(), entries], rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fallback_family_without_artifacts() {
+        let env = Env::load_from(PathBuf::from("/nonexistent-artifacts"));
+        assert!(!env.has_artifacts());
+        let fam = env.family(4, 4, 6).unwrap();
+        assert_eq!(fam.nc(), 4);
+        assert_eq!(fam.books[0].len(), 16);
+        // Cached second call.
+        let fam2 = env.family(4, 4, 6).unwrap();
+        assert_eq!(fam, fam2);
+    }
+
+    #[test]
+    fn lobcq_scheme_construction() {
+        let env = Env::load_from(PathBuf::from("/nonexistent-artifacts"));
+        let s = env.lobcq(8, 4, 64).unwrap();
+        assert!((s.bits() - 4.375).abs() < 1e-9);
+        assert!(env.lobcq(8, 3, 64).is_err(), "non-pow2 Nc accepted");
+    }
+
+    #[test]
+    fn books_tensor_shape() {
+        let env = Env::load_from(PathBuf::from("/nonexistent-artifacts"));
+        let fam = env.family(2, 4, 6).unwrap();
+        let t = Env::books_tensor(&fam);
+        assert_eq!(t.shape, vec![2, 16]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Downstream-task accuracy evaluation (paper §4.2.2–4.2.3 analog): the
+//! answer-ranking protocol — score each choice token by the model's
+//! log-probability at the prefix frontier; accuracy = fraction of items
+//! where the true choice ranks first.
+
+use crate::data::tasks::{ClozeItem, TaskKind};
+use crate::eval::perplexity::log_softmax_at;
+use crate::eval::scheme::Scheme;
+use crate::model::{forward, ModelConfig, Weights};
+
+/// Accuracy of one task under a (weight, activation) scheme pair.
+pub fn task_accuracy(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    weight_scheme: &Scheme,
+    act_scheme: &Scheme,
+    items: &[ClozeItem],
+) -> anyhow::Result<f64> {
+    anyhow::ensure!(!items.is_empty(), "no task items");
+    let qw = weight_scheme.quantize_weights(cfg, weights);
+    let hook = act_scheme.act_hook();
+    let hook_ref: crate::model::forward::ActQuant = hook.as_deref().map(|h| h as &(dyn Fn(&[f32]) -> Vec<f32> + Sync));
+
+    let mut correct = 0usize;
+    // Batch items: each item needs logits at its prefix frontier. Pack up
+    // to 8 prefixes per forward, padded to the longest in the pack.
+    for pack in items.chunks(8) {
+        let t = pack.iter().map(|i| i.prefix.len()).max().unwrap();
+        let batch = pack.len();
+        let mut tokens = vec![crate::data::corpus::PAD; batch * t];
+        for (b, item) in pack.iter().enumerate() {
+            // Right-align so the frontier is always position t-1 (causal
+            // attention over left-pad sees PAD prefix; acceptable since
+            // every item in a pack shares the convention).
+            let off = t - item.prefix.len();
+            tokens[b * t + off..(b + 1) * t].copy_from_slice(&item.prefix);
+        }
+        let logits = forward(cfg, &qw, &tokens, batch, hook_ref)?;
+        for (b, item) in pack.iter().enumerate() {
+            let row = logits.row(b * t + t - 1);
+            let best = item
+                .choices
+                .iter()
+                .enumerate()
+                .max_by(|(_, &x), (_, &y)| {
+                    log_softmax_at(row, x as usize)
+                        .partial_cmp(&log_softmax_at(row, y as usize))
+                        .unwrap()
+                })
+                .unwrap()
+                .0;
+            if best == item.answer {
+                correct += 1;
+            }
+        }
+    }
+    Ok(correct as f64 / items.len() as f64)
+}
+
+/// Run all five LM-harness-analog tasks; returns (name, accuracy) rows
+/// plus the average.
+pub fn harness_suite(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    weight_scheme: &Scheme,
+    act_scheme: &Scheme,
+    items_per_task: usize,
+    seed: u64,
+) -> anyhow::Result<(Vec<(String, f64)>, f64)> {
+    let mut rows = Vec::new();
+    let mut sum = 0.0;
+    for kind in crate::data::tasks::ALL_TASKS {
+        let items = crate::data::tasks::build_items(kind, items_per_task, seed, 48);
+        let acc = task_accuracy(cfg, weights, weight_scheme, act_scheme, &items)?;
+        sum += acc;
+        rows.push((kind.name().to_string(), acc));
+    }
+    let n = rows.len() as f64;
+    Ok((rows, sum / n))
+}
+
+/// The MMLU analog: the hardest multi-choice task with longer context.
+pub fn mmlu_accuracy(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    weight_scheme: &Scheme,
+    act_scheme: &Scheme,
+    n_items: usize,
+    seed: u64,
+) -> anyhow::Result<f64> {
+    let items = crate::data::tasks::build_items(TaskKind::NounRecall, n_items, seed, 60);
+    task_accuracy(cfg, weights, weight_scheme, act_scheme, &items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::{build_items, TaskKind};
+    use crate::model::forward::tests_support::random_weights;
+    use crate::model::ModelConfig;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { name: "t".into(), d: 32, n_layers: 2, n_heads: 2, vocab: 168, max_t: 64 }
+    }
+
+    #[test]
+    fn random_model_near_chance() {
+        let c = cfg();
+        let w = random_weights(&c, 21);
+        let items = build_items(TaskKind::NounAfterAdj, 60, 5, 48);
+        let acc = task_accuracy(&c, &w, &Scheme::Bf16, &Scheme::Bf16, &items).unwrap();
+        // 4 choices -> chance 0.25; untrained model should be near it.
+        assert!(acc > 0.05 && acc < 0.6, "acc {acc}");
+    }
+
+    #[test]
+    fn harness_suite_runs_all_tasks() {
+        let c = cfg();
+        let w = random_weights(&c, 22);
+        let (rows, avg) = harness_suite(&c, &w, &Scheme::Bf16, &Scheme::Bf16, 10, 3).unwrap();
+        assert_eq!(rows.len(), 5);
+        assert!(avg > 0.0 && avg <= 1.0);
+    }
+}

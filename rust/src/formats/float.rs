@@ -1,0 +1,350 @@
+//! Generic low-precision floating-point codec (the paper's `EeMm` formats,
+//! appendix A.4.2).
+//!
+//! A format is parameterized by exponent bits `be`, mantissa bits `bm`, and
+//! an exponent bias (default `2^(be-1) - 1`). All encodings are finite —
+//! out-of-range values saturate to ±max, matching how inference
+//! quantization uses these formats (paper eq. 13–14). The E4M3 preset
+//! follows the OCP FP8 convention (max = 448, the top mantissa pattern at
+//! the top exponent being reserved), expressed here via a `max_value`
+//! override.
+//!
+//! Quantization is round-to-nearest with ties-to-even on the mantissa grid,
+//! including gradual underflow (subnormals), which is what `jnp` and the
+//! python mirror (`python/compile/formats.py`) produce — the two are
+//! parity-tested on shared JSON vectors.
+
+/// A finite low-precision float format.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FloatFormat {
+    /// Exponent bits (>= 1).
+    pub be: u32,
+    /// Mantissa bits (>= 0).
+    pub bm: u32,
+    /// Exponent bias.
+    pub bias: i32,
+    /// Largest representable magnitude (saturation point).
+    pub max_value: f32,
+    /// Display name, e.g. "E4M3".
+    pub name: &'static str,
+}
+
+impl FloatFormat {
+    /// Build a format with the conventional bias `2^(be-1)-1` and the
+    /// all-finite maximum `2^emax * (2 - 2^-bm)`.
+    pub const fn new(name: &'static str, be: u32, bm: u32) -> FloatFormat {
+        let bias = if be >= 1 { (1 << (be - 1)) - 1 } else { 0 };
+        let emax = ((1 << be) - 1) - bias - 0; // top exponent code, finite
+        // max = 2^emax * (2 - 2^-bm)
+        let frac_num = (2 << bm) - 1; // (2 - 2^-bm) * 2^bm
+        let max_value = (frac_num as f32) * pow2i(emax - bm as i32);
+        FloatFormat { be, bm, bias, max_value, name }
+    }
+
+    /// Override the maximum (used by the OCP E4M3 preset).
+    pub const fn with_max(mut self, max_value: f32) -> FloatFormat {
+        self.max_value = max_value;
+        self
+    }
+
+    /// Minimum normal exponent (unbiased).
+    pub fn emin(&self) -> i32 {
+        1 - self.bias
+    }
+
+    /// Smallest positive subnormal step.
+    pub fn min_subnormal(&self) -> f32 {
+        pow2(self.emin() - self.bm as i32)
+    }
+
+    /// Total bit width including sign.
+    pub fn bits(&self) -> u32 {
+        1 + self.be + self.bm
+    }
+
+    /// Round a value to the nearest representable (ties to even), with
+    /// saturation at ±max_value. NaN maps to 0 (defensive; operands are
+    /// finite in this library).
+    pub fn quantize(&self, x: f32) -> f32 {
+        if x.is_nan() {
+            return 0.0;
+        }
+        let a = x.abs();
+        if a == 0.0 {
+            return 0.0;
+        }
+        if a >= self.max_value {
+            return self.max_value.copysign(x);
+        }
+        // Unbiased exponent of the *bucket* the value falls in.
+        let e = (a.log2().floor() as i32).clamp(self.emin(), i32::MAX);
+        // Mantissa grid step for that bucket (subnormal bucket when
+        // a < 2^emin uses the emin step).
+        let step = pow2(e - self.bm as i32);
+        let q = (a / step).round_ties_even() * step;
+        // Rounding up may promote to the next binade (e.g. 1.96 -> 2.0);
+        // that is still exactly representable, so no fixup needed beyond
+        // the saturation check above.
+        let q = q.min(self.max_value);
+        q.copysign(x)
+    }
+
+    /// Quantize a slice in place.
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        for v in xs.iter_mut() {
+            *v = self.quantize(*v);
+        }
+    }
+
+    /// Encode a value to its bit pattern: `[sign | exponent | mantissa]`,
+    /// `bits()` wide. The value is quantized first, so any finite f32 is
+    /// accepted. Used by the packed LO-BCQ block format (Fig. 5) to store
+    /// per-block-array scale factors as raw E4M3 bytes.
+    pub fn encode_bits(&self, x: f32) -> u16 {
+        assert!(self.bits() <= 16, "encode_bits supports formats up to 16 bits");
+        let q = self.quantize(x);
+        let sign = if q.is_sign_negative() { 1u16 } else { 0 };
+        let a = q.abs();
+        let (ecode, mcode) = if a == 0.0 {
+            (0u16, 0u16)
+        } else {
+            let e = (a.log2().floor() as i32).max(self.emin());
+            if a < pow2(self.emin()) {
+                // Subnormal: exponent code 0, mantissa counts min-subnormal steps.
+                (0, (a / self.min_subnormal()).round() as u16)
+            } else {
+                let frac = a / pow2(e); // in [1, 2)
+                let m = ((frac - 1.0) * (1u32 << self.bm) as f32).round() as u16;
+                ((e + self.bias) as u16, m)
+            }
+        };
+        (sign << (self.be + self.bm)) | (ecode << self.bm) | mcode
+    }
+
+    /// Decode a bit pattern produced by [`encode_bits`](Self::encode_bits).
+    pub fn decode_bits(&self, code: u16) -> f32 {
+        let mmask = (1u16 << self.bm) - 1;
+        let emask = (1u16 << self.be) - 1;
+        let m = code & mmask;
+        let e = (code >> self.bm) & emask;
+        let sign = (code >> (self.be + self.bm)) & 1;
+        let a = if e == 0 {
+            m as f32 * self.min_subnormal()
+        } else {
+            (1.0 + m as f32 / (1u32 << self.bm) as f32) * pow2(e as i32 - self.bias)
+        };
+        let a = a.min(self.max_value);
+        if sign == 1 {
+            -a
+        } else {
+            a
+        }
+    }
+
+    /// Enumerate all non-negative representable values in ascending order
+    /// (small formats only; used for codebook comparisons, Fig. 6, and
+    /// exhaustive codec tests).
+    pub fn enumerate_non_negative(&self) -> Vec<f32> {
+        assert!(self.bits() <= 10, "enumerate only for small formats");
+        let mut vals = vec![0.0f32];
+        // Subnormals: m / 2^bm * 2^emin for m = 1..2^bm
+        for m in 1..(1u32 << self.bm) {
+            vals.push(m as f32 * self.min_subnormal());
+        }
+        // Normals.
+        let top_code = (1i32 << self.be) - 1;
+        for ecode in 1..=top_code {
+            let e = ecode - self.bias;
+            for m in 0..(1u32 << self.bm) {
+                let v = (1.0 + m as f32 / (1u32 << self.bm) as f32) * pow2(e);
+                if v <= self.max_value {
+                    vals.push(v);
+                }
+            }
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        vals
+    }
+
+    /// All representable values (negatives, zero, positives), ascending.
+    pub fn enumerate_all(&self) -> Vec<f32> {
+        let pos = self.enumerate_non_negative();
+        let mut all: Vec<f32> = pos.iter().rev().filter(|&&v| v > 0.0).map(|&v| -v).collect();
+        all.extend(pos);
+        all
+    }
+}
+
+/// 2^e as f32 for small |e| (const-friendly integer variant).
+const fn pow2i(e: i32) -> f32 {
+    // Constructed via bit pattern to stay const: only valid for normal
+    // range, which all our formats' emax satisfy.
+    if e >= -126 && e <= 127 {
+        f32::from_bits(((e + 127) as u32) << 23)
+    } else if e < -126 {
+        0.0
+    } else {
+        f32::INFINITY
+    }
+}
+
+/// 2^e as f32 including subnormal results.
+pub fn pow2(e: i32) -> f32 {
+    if e >= -126 {
+        pow2i(e)
+    } else if e >= -149 {
+        f32::from_bits(1u32 << (e + 149))
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::presets::*;
+
+    #[test]
+    fn pow2_matches_std() {
+        for e in -150..=127 {
+            assert_eq!(pow2(e), 2f64.powi(e) as f32, "e={e}");
+        }
+    }
+
+    #[test]
+    fn e2m1_values_match_mxfp4_spec() {
+        // MXFP4 / E2M1 representable magnitudes: 0, 0.5, 1, 1.5, 2, 3, 4, 6.
+        let vals = E2M1.enumerate_non_negative();
+        assert_eq!(vals, vec![0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+        assert_eq!(E2M1.max_value, 6.0);
+    }
+
+    #[test]
+    fn e1m2_values() {
+        // E1M2: bias 0, emin = 1, subnormal step 2^(1-2) = 0.5... check count.
+        let vals = E1M2.enumerate_non_negative();
+        assert_eq!(vals.len(), 8); // 0 + 3 subnormals + 4 normals at e=1
+        assert_eq!(vals[0], 0.0);
+        assert_eq!(*vals.last().unwrap(), E1M2.max_value);
+    }
+
+    #[test]
+    fn e3m0_powers_of_two() {
+        let vals = E3M0.enumerate_non_negative();
+        // Pure exponent format: 0, then subnormal step, then powers of 2.
+        for w in vals.windows(2).skip(1) {
+            if w[0] > 0.0 {
+                assert_eq!(w[1] / w[0], 2.0, "{:?}", w);
+            }
+        }
+    }
+
+    #[test]
+    fn e4m3_ocp_max_is_448() {
+        assert_eq!(E4M3.max_value, 448.0);
+        assert_eq!(E4M3.quantize(1e9), 448.0);
+        assert_eq!(E4M3.quantize(-1e9), -448.0);
+    }
+
+    #[test]
+    fn quantize_is_idempotent_on_enumerated_values() {
+        for fmt in [E1M2, E2M1, E3M0, E3M2, E3M3] {
+            for v in fmt.enumerate_all() {
+                assert_eq!(fmt.quantize(v), v, "{} value {v}", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_picks_nearest() {
+        for fmt in [E1M2, E2M1, E3M0, E3M2] {
+            let grid = fmt.enumerate_all();
+            let mut x = -fmt.max_value * 1.5;
+            while x < fmt.max_value * 1.5 {
+                let q = fmt.quantize(x);
+                let best = grid
+                    .iter()
+                    .cloned()
+                    .min_by(|a, b| (a - x).abs().partial_cmp(&(b - x).abs()).unwrap())
+                    .unwrap();
+                assert!(
+                    (q - x).abs() <= (best - x).abs() + 1e-7,
+                    "{}: quantize({x}) = {q}, nearest = {best}",
+                    fmt.name
+                );
+                x += fmt.max_value / 257.0;
+            }
+        }
+    }
+
+    #[test]
+    fn ties_round_to_even_mantissa() {
+        // In E2M1 the grid around 1.0 is {1.0, 1.5}: 1.25 is a tie ->
+        // rounds to 1.0 (even mantissa 0) not 1.5 (odd mantissa 1).
+        assert_eq!(E2M1.quantize(1.25), 1.0);
+        // 1.75 ties between 1.5 and 2.0 -> 2.0 (mantissa 0).
+        assert_eq!(E2M1.quantize(1.75), 2.0);
+    }
+
+    #[test]
+    fn subnormal_flush_behaviour() {
+        // Values below half the min subnormal round to zero.
+        for fmt in [E2M1, E4M3] {
+            let tiny = fmt.min_subnormal() * 0.49;
+            assert_eq!(fmt.quantize(tiny), 0.0, "{}", fmt.name);
+            let keep = fmt.min_subnormal() * 0.51;
+            assert_eq!(fmt.quantize(keep), fmt.min_subnormal(), "{}", fmt.name);
+        }
+    }
+
+    #[test]
+    fn sign_symmetric() {
+        let mut rng = crate::util::rng::Pcg32::seeded(11);
+        for fmt in [E1M2, E2M1, E3M0, E4M3, E5M2] {
+            for _ in 0..500 {
+                let x = rng.normal() * 8.0;
+                assert_eq!(fmt.quantize(x), -fmt.quantize(-x), "{} x={x}", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trip_all_values() {
+        for fmt in [E1M2, E2M1, E3M0, E3M2, E3M3, E4M3, E5M2] {
+            for v in fmt.enumerate_all() {
+                let code = fmt.encode_bits(v);
+                assert!(code < (1 << fmt.bits()), "{}: code {code} too wide", fmt.name);
+                let back = fmt.decode_bits(code);
+                assert_eq!(back, v, "{}: {v} -> {code:#x} -> {back}", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn encode_bits_of_arbitrary_equals_quantize() {
+        let mut rng = crate::util::rng::Pcg32::seeded(16);
+        for fmt in [E2M1, E4M3] {
+            for _ in 0..2000 {
+                let x = rng.normal() * 50.0;
+                assert_eq!(fmt.decode_bits(fmt.encode_bits(x)), fmt.quantize(x), "{} x={x}", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn negative_zero_encodes_sign() {
+        // -0.0 carries the sign bit but decodes equal to 0.0.
+        let code = E4M3.encode_bits(-0.0);
+        assert_eq!(E4M3.decode_bits(code), 0.0);
+    }
+
+    #[test]
+    fn bits_accounting() {
+        assert_eq!(E2M1.bits(), 4);
+        assert_eq!(E1M2.bits(), 4);
+        assert_eq!(E3M0.bits(), 4);
+        assert_eq!(E4M3.bits(), 8);
+        assert_eq!(E3M3.bits(), 7);
+    }
+}

@@ -1,0 +1,133 @@
+//! Symmetric signed integer codec (INT-k), paper appendix A.4.1.
+//!
+//! Quantization levels are the integers in `[-(2^{k-1}-1), 2^{k-1}-1]` —
+//! the symmetric range used by VSQ and by LO-BCQ's INT-`B_c` codeword
+//! quantization (the most negative two's-complement code is unused, as is
+//! standard for symmetric DNN quantization). Rounding is
+//! nearest-ties-to-even; out-of-range values saturate.
+
+/// Symmetric INT-k format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IntFormat {
+    /// Total bits including sign (2..=16).
+    pub bits: u32,
+}
+
+impl IntFormat {
+    pub const fn new(bits: u32) -> IntFormat {
+        assert!(bits >= 2 && bits <= 16);
+        IntFormat { bits }
+    }
+
+    /// Largest representable level, `2^{k-1} - 1` (paper eq. 7 numerator).
+    pub fn max_level(&self) -> i32 {
+        (1 << (self.bits - 1)) - 1
+    }
+
+    /// Round to nearest integer level with saturation; returns the level.
+    pub fn encode(&self, x: f32) -> i32 {
+        if x.is_nan() {
+            return 0;
+        }
+        let m = self.max_level() as f32;
+        x.clamp(-m, m).round_ties_even() as i32
+    }
+
+    /// Encoded level back to f32.
+    pub fn decode(&self, level: i32) -> f32 {
+        debug_assert!(level.abs() <= self.max_level());
+        level as f32
+    }
+
+    /// Quantize to the integer grid (encode∘decode).
+    pub fn quantize(&self, x: f32) -> f32 {
+        self.decode(self.encode(x))
+    }
+
+    /// Quantize a slice in place.
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        for v in xs.iter_mut() {
+            *v = self.quantize(*v);
+        }
+    }
+
+    /// Max-scaled quantize-dequantize of a slice (the VSQ per-vector
+    /// scheme, appendix A.5): scale so max|x| hits the top level, round,
+    /// rescale back. Returns the scale used.
+    pub fn quantize_maxscaled(&self, xs: &mut [f32]) -> f32 {
+        let amax = crate::util::stats::amax(xs);
+        if amax == 0.0 {
+            return 1.0;
+        }
+        let scale = self.max_level() as f32 / amax;
+        for v in xs.iter_mut() {
+            *v = self.quantize(*v * scale) / scale;
+        }
+        scale
+    }
+}
+
+pub const INT4: IntFormat = IntFormat::new(4);
+pub const INT6: IntFormat = IntFormat::new(6);
+pub const INT8: IntFormat = IntFormat::new(8);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_levels() {
+        assert_eq!(INT4.max_level(), 7);
+        assert_eq!(INT6.max_level(), 31);
+        assert_eq!(INT8.max_level(), 127);
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(INT4.encode(100.0), 7);
+        assert_eq!(INT4.encode(-100.0), -7);
+    }
+
+    #[test]
+    fn ties_to_even() {
+        assert_eq!(INT8.encode(2.5), 2);
+        assert_eq!(INT8.encode(3.5), 4);
+        assert_eq!(INT8.encode(-2.5), -2);
+    }
+
+    #[test]
+    fn round_trip_integers() {
+        for lvl in -7..=7 {
+            assert_eq!(INT4.encode(lvl as f32), lvl);
+            assert_eq!(INT4.quantize(lvl as f32), lvl as f32);
+        }
+    }
+
+    #[test]
+    fn maxscaled_hits_top_level() {
+        let mut xs = vec![0.1f32, -0.25, 0.5];
+        INT4.quantize_maxscaled(&mut xs);
+        // max element maps exactly to ±max_level/scale = original max.
+        assert_eq!(xs[2], 0.5);
+        // all within range
+        assert!(xs.iter().all(|v| v.abs() <= 0.5));
+    }
+
+    #[test]
+    fn maxscaled_zero_vector_noop() {
+        let mut xs = vec![0.0f32; 4];
+        let s = INT4.quantize_maxscaled(&mut xs);
+        assert_eq!(s, 1.0);
+        assert!(xs.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn quantize_error_bounded_by_half_step() {
+        let mut rng = crate::util::rng::Pcg32::seeded(12);
+        for _ in 0..1000 {
+            let x = rng.range_f32(-7.0, 7.0);
+            let q = INT4.quantize(x);
+            assert!((q - x).abs() <= 0.5 + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Number formats (paper appendix A.4): generic `EeMm` floating-point
+//! codecs, symmetric INT-k, E8M0 power-of-two scales, and BF16 rounding.
+//!
+//! Everything here is deterministic, allocation-free on the quantize path,
+//! and mirrored by `python/compile/formats.py` (parity-tested through the
+//! shared JSON vectors in `make test`).
+
+pub mod float;
+pub mod int;
+pub mod presets;
+
+pub use float::FloatFormat;
+pub use int::{IntFormat, INT4, INT6, INT8};
+pub use presets::{bf16_round, bf16_round_slice, by_name, E8M0};
+pub use presets::{E1M2, E2M1, E3M0, E3M2, E3M3, E4M0, E4M3, E5M2, FP4_FORMATS};

@@ -1,0 +1,155 @@
+//! Named format presets used throughout the paper.
+//!
+//! - `E1M2` — proxy for MX4 (paper A.5.1 conservatively bounds MX4 by E1M2).
+//! - `E2M1` — MXFP4 scalar format.
+//! - `E3M0` — 4-bit pure-exponent format (Fig. 6 comparison).
+//! - `E4M3` — OCP FP8, the LO-BCQ per-block-array scale-factor format
+//!   (paper §2.4; max 448 per the OCP convention).
+//! - `E5M2` — OCP FP8 alternate (used in ablations).
+//! - `E3M3`, `E3M2`, `E4M0` — appendix A.1 / Table 11 per-tensor formats.
+//! - `E8M0` — power-of-two scale format used by MX/MXFP block scales.
+
+use super::float::FloatFormat;
+
+pub const E1M2: FloatFormat = FloatFormat::new("E1M2", 1, 2);
+pub const E2M1: FloatFormat = FloatFormat::new("E2M1", 2, 1);
+pub const E3M0: FloatFormat = FloatFormat::new("E3M0", 3, 0);
+pub const E4M3: FloatFormat = FloatFormat::new("E4M3", 4, 3).with_max(448.0);
+pub const E5M2: FloatFormat = FloatFormat::new("E5M2", 5, 2).with_max(57344.0);
+pub const E3M3: FloatFormat = FloatFormat::new("E3M3", 3, 3);
+pub const E3M2: FloatFormat = FloatFormat::new("E3M2", 3, 2);
+pub const E4M0: FloatFormat = FloatFormat::new("E4M0", 4, 0);
+
+/// All 4-bit float formats compared against LO-BCQ codebooks in Fig. 6.
+pub const FP4_FORMATS: [FloatFormat; 3] = [E1M2, E2M1, E3M0];
+
+/// Look up a preset by name (CLI / config surface).
+pub fn by_name(name: &str) -> Option<FloatFormat> {
+    match name.to_ascii_uppercase().as_str() {
+        "E1M2" => Some(E1M2),
+        "E2M1" => Some(E2M1),
+        "E3M0" => Some(E3M0),
+        "E4M3" => Some(E4M3),
+        "E5M2" => Some(E5M2),
+        "E3M3" => Some(E3M3),
+        "E3M2" => Some(E3M2),
+        "E4M0" => Some(E4M0),
+        _ => None,
+    }
+}
+
+/// E8M0: pure power-of-two scale (8 exponent bits, bias 127, no sign, no
+/// mantissa). Used for MX / MXFP per-block-array scale factors. Following
+/// the MX convention, encoding takes `floor(log2(x))` — the shared scale
+/// must not overshoot the block maximum or the top element would clip.
+#[derive(Debug, Clone, Copy)]
+pub struct E8M0;
+
+impl E8M0 {
+    pub const BITS: u32 = 8;
+
+    /// Quantize a positive scale to an exact power of two (floor mode).
+    /// Zero and negatives map to the smallest representable scale.
+    pub fn quantize_floor(x: f32) -> f32 {
+        if !(x > 0.0) || !x.is_finite() {
+            return super::float::pow2(-127);
+        }
+        let e = x.log2().floor() as i32;
+        super::float::pow2(e.clamp(-127, 127))
+    }
+
+    /// Nearest-power-of-two variant (used in ablations).
+    pub fn quantize_nearest(x: f32) -> f32 {
+        if !(x > 0.0) || !x.is_finite() {
+            return super::float::pow2(-127);
+        }
+        let lo = Self::quantize_floor(x);
+        let hi = lo * 2.0;
+        if (x - lo).abs() <= (hi - x).abs() {
+            lo
+        } else {
+            hi.min(super::float::pow2(127))
+        }
+    }
+}
+
+/// BF16 rounding (round-to-nearest-even on the low 16 bits of an f32).
+/// The paper's unquantized baseline format and its "fake quantization"
+/// compute precision (§4.1 footnote 3).
+pub fn bf16_round(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    let bits = x.to_bits();
+    let rounding_bias = 0x7FFF + ((bits >> 16) & 1);
+    f32::from_bits((bits.wrapping_add(rounding_bias)) & 0xFFFF_0000)
+}
+
+/// BF16-round a slice in place.
+pub fn bf16_round_slice(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = bf16_round(*v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("e4m3").unwrap().name, "E4M3");
+        assert!(by_name("E9M9").is_none());
+    }
+
+    #[test]
+    fn e8m0_floor_is_power_of_two_below() {
+        for x in [0.1f32, 1.0, 1.5, 2.0, 3.9, 1000.0] {
+            let q = E8M0::quantize_floor(x);
+            assert!(q <= x, "{q} > {x}");
+            assert!(q * 2.0 > x, "floor too small for {x}");
+            assert_eq!(q.log2().fract(), 0.0);
+        }
+    }
+
+    #[test]
+    fn e8m0_nearest() {
+        assert_eq!(E8M0::quantize_nearest(3.1), 4.0);
+        assert_eq!(E8M0::quantize_nearest(2.9), 2.0);
+        assert_eq!(E8M0::quantize_nearest(2.0), 2.0);
+    }
+
+    #[test]
+    fn e8m0_degenerate_inputs() {
+        assert!(E8M0::quantize_floor(0.0) > 0.0);
+        assert!(E8M0::quantize_floor(-1.0) > 0.0);
+        assert!(E8M0::quantize_floor(f32::NAN) > 0.0);
+    }
+
+    #[test]
+    fn bf16_round_trip_exact_values() {
+        // Values with <= 8 significand bits are exact in bf16.
+        for x in [0.0f32, 1.0, -2.5, 0.15625, 384.0] {
+            assert_eq!(bf16_round(x), x);
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest() {
+        // bf16 has 7 explicit mantissa bits: ulp at 1.0 is 2^-7.
+        assert_eq!(bf16_round(1.0 + 2f32.powi(-10)), 1.0);
+        // 1 + 3*2^-9 is closer to 1 + 2^-7 than to 1.0.
+        assert_eq!(bf16_round(1.0 + 3.0 * 2f32.powi(-9)), 1.0 + 2f32.powi(-7));
+    }
+
+    #[test]
+    fn bf16_error_bound() {
+        let mut rng = crate::util::rng::Pcg32::seeded(13);
+        for _ in 0..2000 {
+            let x = rng.normal() * 100.0;
+            let q = bf16_round(x);
+            // Relative error <= 2^-8 (half ulp of the 8-bit significand).
+            assert!((q - x).abs() <= x.abs() * 2f32.powi(-8) + f32::MIN_POSITIVE);
+        }
+    }
+}

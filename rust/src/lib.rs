@@ -1,0 +1,26 @@
+//! # lobcq — Locally Optimal Block Clustered Quantization (W4A4)
+//!
+//! Production-quality reproduction of *LO-BCQ: Block Clustered Quantization
+//! for 4-bit (W4A4) LLM Inference* as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! - **L1** (`python/compile/kernels/`): Pallas fake-quant + GEMM kernels.
+//! - **L2** (`python/compile/model.py`): tiny-GPT forward in JAX, lowered
+//!   AOT to HLO text artifacts.
+//! - **L3** (this crate): the serving coordinator (router → dynamic
+//!   batcher → scheduler → PJRT executor pool) with on-the-fly activation
+//!   quantization, the full LO-BCQ algorithm + baselines, and the
+//!   experiment harness reproducing every table and figure in the paper.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod formats;
+pub mod tensor;
+pub mod util;
+pub mod quant;
+pub mod data;
+pub mod model;
+pub mod runtime;
+pub mod coordinator;
+pub mod eval;

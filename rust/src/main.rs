@@ -1,0 +1,402 @@
+//! `lobcq` — leader binary: serving, evaluation, calibration, and the
+//! experiment harness, all over the AOT artifacts (Python never runs on
+//! the request path).
+
+use lobcq::coordinator::{BatchPolicy, Limits, PjrtExecutor, Sampling, Server};
+use lobcq::data::corpus;
+use lobcq::eval::{experiments, Env};
+use lobcq::model::Weights;
+use lobcq::quant::calib::calibrate_universal;
+use lobcq::quant::lobcq::{CalibOpts, LobcqConfig};
+use lobcq::runtime::{Manifest, RuntimeService};
+use lobcq::tensor::Tensor;
+use lobcq::util::cli::{render_help, Args, OptSpec};
+use lobcq::util::json::Json;
+use lobcq::util::rng::Pcg32;
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    match cmd {
+        "serve" => serve(rest),
+        "bench" => bench(rest),
+        "eval" => eval(rest),
+        "calibrate" => calibrate(rest),
+        "gen-parity" => gen_parity(rest),
+        "info" => info(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `lobcq help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "lobcq — LO-BCQ W4A4 serving + experiment harness\n\n\
+         commands:\n\
+         \x20 serve       run the serving coordinator on a synthetic workload\n\
+         \x20 bench       run a paper experiment (--exp tab1..tab11, fig1..fig9, all)\n\
+         \x20 eval        perplexity of one artifact variant via PJRT\n\
+         \x20 calibrate   run LO-BCQ calibration in rust, dump codebooks\n\
+         \x20 gen-parity  emit cross-language parity vectors for pytest\n\
+         \x20 info        summarize artifacts/manifest.json\n"
+    );
+}
+
+fn artifacts_opt() -> OptSpec {
+    OptSpec { name: "artifacts", help: "artifacts directory", takes_value: true, default: Some("artifacts") }
+}
+
+// ---- serve ----
+
+fn serve(argv: &[String]) -> anyhow::Result<()> {
+    let specs = [
+        artifacts_opt(),
+        OptSpec { name: "size", help: "model size (s|m|l)", takes_value: true, default: Some("m") },
+        OptSpec { name: "variant", help: "artifact variant", takes_value: true, default: Some("lobcq_g64_nc8") },
+        OptSpec { name: "requests", help: "synthetic request count", takes_value: true, default: Some("64") },
+        OptSpec { name: "max-new", help: "tokens to generate per request", takes_value: true, default: Some("8") },
+        OptSpec { name: "max-batch", help: "dynamic batch limit", takes_value: true, default: Some("8") },
+        OptSpec { name: "max-wait-ms", help: "batcher wait", takes_value: true, default: Some("4") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        println!("{}", render_help("serve", "run the serving coordinator", &specs));
+        return Ok(());
+    }
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let size = args.str_or("size", "m").to_string();
+    let variant = args.str_or("variant", "lobcq_g64_nc8").to_string();
+    let n_requests = args.usize_or("requests", 64)?;
+    let max_new = args.usize_or("max-new", 8)?;
+
+    let env = Env::load_from(dir.clone());
+    let manifest = Manifest::load(&dir)?;
+    manifest.check_corpus_parity()?;
+    let cfg = env.model_config(&size)?;
+    let entry = manifest
+        .find(&size, &variant, args.usize_or("max-batch", 8)?)
+        .or_else(|| manifest.find(&size, &variant, 8))
+        .ok_or_else(|| anyhow::anyhow!("no artifact {size}/{variant}"))?
+        .clone();
+
+    println!("[serve] starting runtime for {size}/{variant} (batch {})", entry.batch);
+    let service = RuntimeService::start(&dir)?;
+    let client = service.client();
+    let weights = Weights::load(&manifest.weights_path(&size)?)?;
+    let ordered: Vec<Tensor> = weights.ordered(&cfg)?.into_iter().cloned().collect();
+    client.register_weights("w", &cfg, ordered)?;
+    let books_key = if let Some(nc) = entry.books_nc {
+        let fam = env.family(nc, 4, 6)?;
+        client.register_books("books", Env::books_tensor(&fam))?;
+        Some("books".to_string())
+    } else {
+        None
+    };
+
+    let exec = PjrtExecutor {
+        client,
+        entry: entry.clone(),
+        weights_key: "w".into(),
+        books_key,
+        vocab: manifest.vocab,
+    };
+    let server = Server::start(
+        exec,
+        BatchPolicy {
+            max_batch: entry.batch,
+            max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 4)?),
+        },
+        Limits { max_prompt: entry.t, max_new: 32, vocab: manifest.vocab as u32 },
+        Sampling::Greedy,
+    );
+
+    // Synthetic client swarm.
+    println!("[serve] firing {n_requests} requests (max_new {max_new})");
+    let t0 = Instant::now();
+    let server = std::sync::Arc::new(server);
+    let mut handles = Vec::new();
+    for i in 0..n_requests {
+        let s = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let prompt = corpus::generate(9000 + i as u64, 16);
+            s.submit(prompt, max_new).unwrap().wait()
+        }));
+    }
+    let mut ok = 0;
+    for h in handles {
+        if h.join().unwrap().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("[serve] {ok}/{n_requests} ok in {wall:.2}s");
+    println!("[serve] {}", server.metrics.snapshot().report());
+    if let Ok(s) = std::sync::Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+    Ok(())
+}
+
+// ---- bench (experiments) ----
+
+fn bench(argv: &[String]) -> anyhow::Result<()> {
+    let specs = [
+        artifacts_opt(),
+        OptSpec { name: "exp", help: "experiment id or 'all'", takes_value: true, default: Some("all") },
+        OptSpec { name: "quick", help: "reduced workload", takes_value: false, default: None },
+        OptSpec { name: "out", help: "write report to file", takes_value: true, default: None },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    let env = Env::load_from(PathBuf::from(args.str_or("artifacts", "artifacts")));
+    let quick = args.flag("quick");
+    let ids: Vec<&str> = match args.str_or("exp", "all") {
+        "all" => experiments::ALL_EXPERIMENTS.to_vec(),
+        one => vec![one],
+    };
+    let mut full = String::new();
+    for id in ids {
+        let t0 = Instant::now();
+        println!("== running {id} ==");
+        match experiments::run(id, &env, quick) {
+            Ok(report) => {
+                println!("{report}");
+                println!("[{id}] done in {:.1}s\n", t0.elapsed().as_secs_f64());
+                full.push_str(&report);
+                full.push('\n');
+            }
+            Err(e) => {
+                println!("[{id}] SKIPPED/FAILED: {e:#}\n");
+                full.push_str(&format!("# {id}: FAILED — {e:#}\n\n"));
+            }
+        }
+    }
+    if let Some(out) = args.opt("out") {
+        std::fs::write(out, &full)?;
+        println!("report written to {out}");
+    }
+    Ok(())
+}
+
+// ---- eval (PJRT perplexity) ----
+
+fn eval(argv: &[String]) -> anyhow::Result<()> {
+    let specs = [
+        artifacts_opt(),
+        OptSpec { name: "size", help: "model size", takes_value: true, default: Some("s") },
+        OptSpec { name: "variant", help: "artifact variant", takes_value: true, default: Some("bf16") },
+        OptSpec { name: "windows", help: "eval windows", takes_value: true, default: Some("32") },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let env = Env::load_from(dir.clone());
+    let size = args.str_or("size", "s").to_string();
+    let variant = args.str_or("variant", "bf16").to_string();
+
+    let mut eng = lobcq::runtime::Engine::from_dir(&dir)?;
+    let cfg = env.model_config(&size)?;
+    let weights = env.weights(&size)?;
+    let ordered: Vec<Tensor> = weights.ordered(&cfg)?.into_iter().cloned().collect();
+    let refs: Vec<&Tensor> = ordered.iter().collect();
+    eng.register_weights("w", &cfg, &refs)?;
+    let entry = eng
+        .manifest
+        .find(&size, &variant, 8)
+        .ok_or_else(|| anyhow::anyhow!("no artifact {size}/{variant}/b8"))?
+        .clone();
+    let books_key = if let Some(nc) = entry.books_nc {
+        let fam = env.family(nc, 4, 6)?;
+        eng.register_books("books", &Env::books_tensor(&fam))?;
+        Some("books")
+    } else {
+        None
+    };
+    let opts = lobcq::eval::EvalOpts { n_windows: args.usize_or("windows", 32)?, ..Default::default() };
+    let ppl = lobcq::eval::ppl_pjrt(&mut eng, &size, &variant, "w", books_key, &opts)?;
+    println!("ppl[{size}/{variant}] = {ppl:.4}");
+    Ok(())
+}
+
+// ---- calibrate ----
+
+fn calibrate(argv: &[String]) -> anyhow::Result<()> {
+    let specs = [
+        artifacts_opt(),
+        OptSpec { name: "nc", help: "number of codebooks", takes_value: true, default: Some("8") },
+        OptSpec { name: "b", help: "index bits", takes_value: true, default: Some("4") },
+        OptSpec { name: "out", help: "output json", takes_value: true, default: Some("artifacts/codebooks_rust.json") },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    let env = Env::load_from(PathBuf::from(args.str_or("artifacts", "artifacts")));
+    let nc = args.usize_or("nc", 8)?;
+    let b = args.usize_or("b", 4)? as u32;
+    let cfg = LobcqConfig::new(8, nc, 64).with_bits(b);
+    let weights = env.weights("s")?;
+    let model_cfg = env.model_config("s")?;
+    let gemms: Vec<&Tensor> = model_cfg
+        .param_shapes()
+        .iter()
+        .filter(|(n, _)| lobcq::eval::scheme::is_gemm_weight(n))
+        .map(|(n, _)| weights.get(n).unwrap())
+        .collect();
+    let t0 = Instant::now();
+    let fam = calibrate_universal(&gemms, &cfg, CalibOpts::default(), 0x5EED);
+    println!("calibrated nc{nc}_b{b} in {:.1}s", t0.elapsed().as_secs_f64());
+    let out = PathBuf::from(args.str_or("out", "artifacts/codebooks_rust.json"));
+    fam.save(&out)?;
+    println!("saved to {}", out.display());
+    Ok(())
+}
+
+// ---- gen-parity ----
+
+/// Emit cross-language parity vectors for `python/tests/test_parity.py`.
+fn gen_parity(argv: &[String]) -> anyhow::Result<()> {
+    let specs = [OptSpec { name: "out", help: "output json", takes_value: true, default: Some("artifacts/parity.json") }];
+    let args = Args::parse(argv, &specs)?;
+
+    let mut root = Json::obj();
+
+    // PCG streams (seeds chosen f64-exact for the JSON layer).
+    let mut pcg_cases = Vec::new();
+    let mut pcg_f32_cases = Vec::new();
+    for (seed, stream) in [(42u64, 7u64), (0, 0), (123456789, 12345)] {
+        let mut rng = Pcg32::new(seed, stream);
+        let u32s: Vec<Json> = (0..16).map(|_| Json::Num(rng.next_u32() as f64)).collect();
+        pcg_cases.push(
+            Json::obj()
+                .with("seed", Json::Num(seed as f64))
+                .with("stream", Json::Num(stream as f64))
+                .with("u32", Json::Arr(u32s)),
+        );
+        let mut rng = Pcg32::new(seed, stream);
+        let f32s: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
+        pcg_f32_cases.push(
+            Json::obj()
+                .with("seed", Json::Num(seed as f64))
+                .with("stream", Json::Num(stream as f64))
+                .with("f32", Json::from_f32s(&f32s)),
+        );
+    }
+    root.set("pcg", Json::Arr(pcg_cases));
+    root.set("pcg_f32", Json::Arr(pcg_f32_cases));
+
+    // Corpus (fingerprint as string: u64 exceeds f64-exact range).
+    let toks = corpus::generate(5678, 40_000);
+    root.set(
+        "corpus",
+        Json::obj()
+            .with("seed", Json::Num(5678.0))
+            .with("n", Json::Num(40_000.0))
+            .with(
+                "head",
+                Json::from_usizes(&toks[..64].iter().map(|&t| t as usize).collect::<Vec<_>>()),
+            )
+            .with("fingerprint", Json::Str(corpus::fingerprint(&toks).to_string())),
+    );
+
+    // Float formats on a deterministic sweep of values.
+    let mut rng = Pcg32::seeded(0xFA117);
+    let mut xs: Vec<f32> = vec![0.0, -0.0, 1.0, -1.0, 0.5, 6.0, 448.0, 1e-8, 1e8, 3.1415927];
+    for _ in 0..200 {
+        xs.push(lobcq::util::prop::gen_wide_f32(&mut rng));
+    }
+    let mut fmt_cases = Vec::new();
+    for fmt in [
+        lobcq::formats::E1M2,
+        lobcq::formats::E2M1,
+        lobcq::formats::E3M0,
+        lobcq::formats::E4M3,
+        lobcq::formats::E5M2,
+        lobcq::formats::E3M3,
+        lobcq::formats::E3M2,
+        lobcq::formats::E4M0,
+    ] {
+        let q: Vec<f32> = xs.iter().map(|&x| fmt.quantize(x)).collect();
+        fmt_cases.push(
+            Json::obj()
+                .with("format", Json::Str(fmt.name.into()))
+                .with("x", Json::from_f32s(&xs))
+                .with("q", Json::from_f32s(&q)),
+        );
+    }
+    root.set("formats", Json::Arr(fmt_cases));
+
+    // INT4.
+    let ints: Vec<f32> = xs.iter().map(|&x| lobcq::formats::INT4.quantize(x)).collect();
+    root.set(
+        "int4",
+        Json::obj().with("x", Json::from_f32s(&xs)).with("q", Json::from_f32s(&ints)),
+    );
+
+    // LO-BCQ fake-quantize with a frozen family.
+    let env = Env::load();
+    let cfg = LobcqConfig::new(8, 8, 64);
+    let fam = env.family(8, 4, 6)?;
+    let mut rng = Pcg32::seeded(0x10BC);
+    let x = lobcq::util::rng::llm_like_sample(&mut rng, 16 * 256, 0.05, 4.0);
+    let q = lobcq::quant::lobcq::fake_quantize(&x, &cfg, &fam);
+    let books: Vec<Json> = fam.books.iter().map(|b| Json::from_f32s(&b.levels)).collect();
+    root.set(
+        "lobcq",
+        Json::obj()
+            .with("lb", Json::Num(cfg.lb as f64))
+            .with("la", Json::Num(cfg.la as f64))
+            .with("nc", Json::Num(cfg.nc as f64))
+            .with("b", Json::Num(cfg.b as f64))
+            .with("bc", Json::Num(cfg.bc as f64))
+            .with("books", Json::Arr(books))
+            .with("x", Json::from_f32s(&x))
+            .with("q", Json::from_f32s(&q)),
+    );
+
+    let out = PathBuf::from(args.str_or("out", "artifacts/parity.json"));
+    root.to_file(&out)?;
+    println!("parity vectors written to {}", out.display());
+    Ok(())
+}
+
+// ---- info ----
+
+fn info(argv: &[String]) -> anyhow::Result<()> {
+    let specs = [artifacts_opt()];
+    let args = Args::parse(argv, &specs)?;
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let m = Manifest::load(&dir)?;
+    println!("artifacts: {}", dir.display());
+    println!("vocab {} max_t {}", m.vocab, m.max_t);
+    for (name, cfg) in &m.models {
+        println!(
+            "model {name}: d={} layers={} heads={} params={}",
+            cfg.d,
+            cfg.n_layers,
+            cfg.n_heads,
+            cfg.param_count()
+        );
+    }
+    println!("{} model artifacts:", m.artifacts.len());
+    for a in &m.artifacts {
+        println!("  {} (books_nc {:?})", a.key(), a.books_nc);
+    }
+    println!("{} ops: {:?}", m.ops.len(), m.ops.keys().collect::<Vec<_>>());
+    m.check_corpus_parity()?;
+    println!("corpus parity: OK");
+    Ok(())
+}

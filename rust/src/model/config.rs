@@ -1,0 +1,108 @@
+//! Model configuration — mirror of `python/compile/model.py::ModelConfig`
+//! plus the manifest-driven loading used by the runtime.
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub max_t: usize,
+}
+
+impl ModelConfig {
+    pub fn d_ff(&self) -> usize {
+        4 * self.d
+    }
+
+    pub fn head_dim(&self) -> usize {
+        assert!(self.d % self.n_heads == 0);
+        self.d / self.n_heads
+    }
+
+    /// Ordered (name, shape) list — the weights-as-inputs calling
+    /// convention shared with `python/compile/model.py::param_shapes`.
+    pub fn param_shapes(&self) -> Vec<(String, Vec<usize>)> {
+        let mut v: Vec<(String, Vec<usize>)> = vec![
+            ("embed".into(), vec![self.vocab, self.d]),
+            ("pos".into(), vec![self.max_t, self.d]),
+        ];
+        for i in 0..self.n_layers {
+            v.push((format!("l{i}.ln1.g"), vec![self.d]));
+            v.push((format!("l{i}.ln1.b"), vec![self.d]));
+            v.push((format!("l{i}.attn.wqkv"), vec![self.d, 3 * self.d]));
+            v.push((format!("l{i}.attn.wo"), vec![self.d, self.d]));
+            v.push((format!("l{i}.ln2.g"), vec![self.d]));
+            v.push((format!("l{i}.ln2.b"), vec![self.d]));
+            v.push((format!("l{i}.mlp.w1"), vec![self.d, self.d_ff()]));
+            v.push((format!("l{i}.mlp.w2"), vec![self.d_ff(), self.d]));
+        }
+        v.push(("lnf.g".into(), vec![self.d]));
+        v.push(("lnf.b".into(), vec![self.d]));
+        v
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_shapes().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// Parse from a manifest `models.<size>` entry.
+    pub fn from_manifest(name: &str, j: &Json) -> anyhow::Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: name.to_string(),
+            d: j.get("d")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            vocab: j.get("vocab")?.as_usize()?,
+            max_t: j.get("max_t")?.as_usize()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s_cfg() -> ModelConfig {
+        ModelConfig { name: "s".into(), d: 128, n_layers: 2, n_heads: 4, vocab: 168, max_t: 64 }
+    }
+
+    #[test]
+    fn shapes_match_python_convention() {
+        let cfg = s_cfg();
+        let shapes = cfg.param_shapes();
+        assert_eq!(shapes[0], ("embed".to_string(), vec![168, 128]));
+        assert_eq!(shapes[1], ("pos".to_string(), vec![64, 128]));
+        assert_eq!(shapes[2].0, "l0.ln1.g");
+        assert_eq!(shapes[4], ("l0.attn.wqkv".to_string(), vec![128, 384]));
+        assert_eq!(shapes.last().unwrap().0, "lnf.b");
+        // 2 + 8 per layer + 2
+        assert_eq!(shapes.len(), 2 + 8 * 2 + 2);
+    }
+
+    #[test]
+    fn param_count_s_model() {
+        // Matches python: embed 168*128 + pos 64*128 + per-layer
+        // (2*128 + 128*384 + 128*128 + 2*128 + 128*512 + 512*128) * 2 + 2*128.
+        let cfg = s_cfg();
+        let per_layer = 2 * 128 + 128 * 384 + 128 * 128 + 2 * 128 + 128 * 512 + 512 * 128;
+        let want = 168 * 128 + 64 * 128 + 2 * per_layer + 2 * 128;
+        assert_eq!(cfg.param_count(), want);
+        assert_eq!(cfg.param_count(), 424192); // pinned vs python test run
+    }
+
+    #[test]
+    fn from_manifest_json() {
+        let j = Json::parse(
+            r#"{"d":256,"n_layers":3,"n_heads":8,"vocab":168,"max_t":64,"params":1}"#,
+        )
+        .unwrap();
+        let cfg = ModelConfig::from_manifest("m", &j).unwrap();
+        assert_eq!(cfg.d, 256);
+        assert_eq!(cfg.head_dim(), 32);
+        assert_eq!(cfg.d_ff(), 1024);
+    }
+}

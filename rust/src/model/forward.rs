@@ -1,0 +1,298 @@
+//! CPU reference forward pass — numerically mirrors
+//! `python/compile/model.py::forward` (layer norm, tanh-GELU, causal
+//! attention, tied LM head).
+//!
+//! Role in the stack: the PJRT artifacts are the *serving* path; this
+//! forward exists so the evaluation harness can sweep quantization
+//! configurations (Tables 4/5/8/9/10 vary L_b/L_A/N_c/B_c across dozens
+//! of settings) without lowering one HLO graph per grid point. An
+//! integration test cross-checks its logits against the executed PJRT
+//! artifact to ~1e-4 (`rust/tests/artifact_integration.rs`).
+
+use crate::model::config::ModelConfig;
+use crate::model::weights::Weights;
+use crate::tensor::Tensor;
+
+/// Activation fake-quantizer applied at every GEMM input (the in-graph
+/// counterpart of the actq artifact variants). `None` = bf16 path.
+pub type ActQuant<'a> = Option<&'a (dyn Fn(&[f32]) -> Vec<f32> + Sync)>;
+
+/// Parallel matmul: `a [m,k] @ b [k,n]`, rows split across threads.
+pub fn matmul_par(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2);
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    if m * n * k < 1 << 18 || threads == 1 {
+        return a.matmul(b);
+    }
+    let mut out = vec![0.0f32; m * n];
+    let chunk = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ti, out_chunk) in out.chunks_mut(chunk * n).enumerate() {
+            let a = &a;
+            let b = &b;
+            s.spawn(move || {
+                let row0 = ti * chunk;
+                for (r, orow) in out_chunk.chunks_mut(n).enumerate() {
+                    let arow = a.row(row0 + r);
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = b.row(kk);
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    Tensor::new(&[m, n], out)
+}
+
+fn layer_norm(x: &mut Tensor, g: &Tensor, b: &Tensor, eps: f32) {
+    let d = x.cols();
+    for row in x.data.chunks_exact_mut(d) {
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) * inv * g.data[j] + b.data[j];
+        }
+    }
+}
+
+fn gelu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        let c = 0.797_884_56_f32;
+        *v = 0.5 * *v * (1.0 + (c * (*v + 0.044715 * *v * *v * *v)).tanh());
+    }
+}
+
+fn softmax_rows(x: &mut [f32], cols: usize) {
+    for row in x.chunks_exact_mut(cols) {
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// GEMM with optional activation fake-quantization (weights are expected
+/// to be pre-quantized by the caller when evaluating weight quant).
+fn qmatmul(x: &Tensor, w: &Tensor, act_q: ActQuant) -> Tensor {
+    match act_q {
+        None => matmul_par(x, w),
+        Some(q) => {
+            let xq = Tensor::new(&x.shape, q(&x.data));
+            matmul_par(&xq, w)
+        }
+    }
+}
+
+/// Forward pass: `tokens` is (B, T) with T ≤ cfg.max_t; returns logits
+/// as a (B*T, vocab) tensor (row r = batch r/T, position r%T).
+pub fn forward(cfg: &ModelConfig, w: &Weights, tokens: &[u32], batch: usize, act_q: ActQuant) -> anyhow::Result<Tensor> {
+    anyhow::ensure!(tokens.len() % batch == 0, "tokens not divisible by batch");
+    let t = tokens.len() / batch;
+    anyhow::ensure!(t <= cfg.max_t, "sequence {t} > max_t {}", cfg.max_t);
+    let d = cfg.d;
+    let embed = w.get("embed")?;
+    let pos = w.get("pos")?;
+
+    // x: (B*T, D)
+    let mut x = Tensor::zeros(&[batch * t, d]);
+    for (r, &tok) in tokens.iter().enumerate() {
+        anyhow::ensure!((tok as usize) < cfg.vocab, "token {tok} out of vocab");
+        let e = embed.row(tok as usize);
+        let p = pos.row(r % t);
+        let row = x.row_mut(r);
+        for j in 0..d {
+            row[j] = e[j] + p[j];
+        }
+    }
+
+    let hd = cfg.head_dim();
+    let scale = 1.0 / (hd as f32).sqrt();
+    for i in 0..cfg.n_layers {
+        // --- attention block ---
+        let mut h = x.clone();
+        layer_norm(&mut h, w.get(&format!("l{i}.ln1.g"))?, w.get(&format!("l{i}.ln1.b"))?, 1e-5);
+        let qkv = qmatmul(&h, w.get(&format!("l{i}.attn.wqkv"))?, act_q); // (B*T, 3D)
+        let mut attn_out = Tensor::zeros(&[batch * t, d]);
+        for b in 0..batch {
+            for head in 0..cfg.n_heads {
+                let off = head * hd;
+                // scores (T, T)
+                let mut scores = vec![f32::NEG_INFINITY; t * t];
+                for qi in 0..t {
+                    let qrow = &qkv.row(b * t + qi)[off..off + hd];
+                    for ki in 0..=qi {
+                        let krow = &qkv.row(b * t + ki)[d + off..d + off + hd];
+                        let dot: f32 = qrow.iter().zip(krow).map(|(a, c)| a * c).sum();
+                        scores[qi * t + ki] = dot * scale;
+                    }
+                }
+                softmax_rows(&mut scores, t);
+                for qi in 0..t {
+                    let out_row = &mut attn_out.row_mut(b * t + qi)[off..off + hd];
+                    for ki in 0..=qi {
+                        let p = scores[qi * t + ki];
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let vrow = &qkv.row(b * t + ki)[2 * d + off..2 * d + off + hd];
+                        for (o, &v) in out_row.iter_mut().zip(vrow) {
+                            *o += p * v;
+                        }
+                    }
+                }
+            }
+        }
+        let proj = qmatmul(&attn_out, w.get(&format!("l{i}.attn.wo"))?, act_q);
+        for (xv, pv) in x.data.iter_mut().zip(&proj.data) {
+            *xv += pv;
+        }
+
+        // --- MLP block ---
+        let mut h = x.clone();
+        layer_norm(&mut h, w.get(&format!("l{i}.ln2.g"))?, w.get(&format!("l{i}.ln2.b"))?, 1e-5);
+        let mut ff = qmatmul(&h, w.get(&format!("l{i}.mlp.w1"))?, act_q);
+        gelu(&mut ff.data);
+        let down = qmatmul(&ff, w.get(&format!("l{i}.mlp.w2"))?, act_q);
+        for (xv, dv) in x.data.iter_mut().zip(&down.data) {
+            *xv += dv;
+        }
+    }
+
+    layer_norm(&mut x, w.get("lnf.g")?, w.get("lnf.b")?, 1e-5);
+    // Tied LM head: logits = x @ embed^T (unquantized, as in python).
+    let embed_t = embed.transpose2();
+    Ok(matmul_par(&x, &embed_t))
+}
+
+/// Test-only fixtures shared by eval/coordinator unit tests.
+#[cfg(test)]
+pub mod tests_support {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use std::collections::BTreeMap;
+
+    pub fn tiny_cfg() -> ModelConfig {
+        ModelConfig { name: "t".into(), d: 32, n_layers: 2, n_heads: 2, vocab: 40, max_t: 16 }
+    }
+
+    pub fn random_weights(cfg: &ModelConfig, seed: u64) -> Weights {
+        let mut rng = Pcg32::seeded(seed);
+        let mut tensors = BTreeMap::new();
+        for (name, shape) in cfg.param_shapes() {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = if name.ends_with(".g") {
+                vec![1.0; n]
+            } else if name.ends_with(".b") {
+                vec![0.0; n]
+            } else {
+                (0..n).map(|_| rng.normal() * 0.05).collect()
+            };
+            tensors.insert(name, Tensor::new(&shape, data));
+        }
+        Weights { tensors }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::{random_weights, tiny_cfg};
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 1);
+        w.validate(&cfg).unwrap();
+        let tokens: Vec<u32> = (0..2 * 8).map(|i| (i % 40) as u32).collect();
+        let logits = forward(&cfg, &w, &tokens, 2, None).unwrap();
+        assert_eq!(logits.shape, vec![16, 40]);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 2);
+        let mut tok1: Vec<u32> = (0..8).map(|i| (i % 40) as u32).collect();
+        let l1 = forward(&cfg, &w, &tok1, 1, None).unwrap();
+        tok1[7] = 39;
+        let l2 = forward(&cfg, &w, &tok1, 1, None).unwrap();
+        // Positions 0..6 unchanged, position 7 changed.
+        for r in 0..7 {
+            for c in 0..40 {
+                assert!((l1.at(r, c) - l2.at(r, c)).abs() < 1e-5, "row {r} changed");
+            }
+        }
+        let diff: f32 = (0..40).map(|c| (l1.at(7, c) - l2.at(7, c)).abs()).sum();
+        assert!(diff > 1e-3, "last position insensitive to its token");
+    }
+
+    #[test]
+    fn batch_rows_independent() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 3);
+        let a: Vec<u32> = (0..8).map(|i| (i * 3 % 40) as u32).collect();
+        let b: Vec<u32> = (0..8).map(|i| (i * 7 % 40) as u32).collect();
+        let together: Vec<u32> = a.iter().chain(&b).cloned().collect();
+        let lt = forward(&cfg, &w, &together, 2, None).unwrap();
+        let la = forward(&cfg, &w, &a, 1, None).unwrap();
+        for r in 0..8 {
+            for c in 0..40 {
+                assert!((lt.at(r, c) - la.at(r, c)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn act_quant_hook_changes_logits_boundedly() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 4);
+        let tokens: Vec<u32> = (0..8).map(|i| (i % 40) as u32).collect();
+        let base = forward(&cfg, &w, &tokens, 1, None).unwrap();
+        let crush = |x: &[f32]| -> Vec<f32> {
+            // Coarse 3-bit-ish quantizer as a stand-in hook.
+            x.iter().map(|&v| (v * 4.0).round() / 4.0).collect()
+        };
+        let q = forward(&cfg, &w, &tokens, 1, Some(&crush)).unwrap();
+        let num: f64 = base.data.iter().zip(&q.data).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let den: f64 = base.data.iter().map(|a| (*a as f64).powi(2)).sum();
+        let rel = (num / den).sqrt();
+        assert!(rel > 0.0 && rel < 1.0, "rel {rel}");
+    }
+
+    #[test]
+    fn matmul_par_matches_serial() {
+        let mut rng = Pcg32::seeded(5);
+        let a = Tensor::from_fn(&[37, 64], |_| rng.normal());
+        let b = Tensor::from_fn(&[64, 53], |_| rng.normal());
+        let serial = a.matmul(&b);
+        let par = matmul_par(&a, &b);
+        for (x, y) in serial.data.iter().zip(&par.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_tokens() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 6);
+        assert!(forward(&cfg, &w, &[999], 1, None).is_err());
+        assert!(forward(&cfg, &w, &vec![0; cfg.max_t + 1], 1, None).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! The tiny-GPT model family (mirror of `python/compile/model.py`):
+//! configuration, LWTS weight loading, and a CPU reference forward used
+//! by the ablation-grid evaluator (cross-checked against the PJRT
+//! artifacts in integration tests).
+
+pub mod config;
+pub mod forward;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use forward::{forward, matmul_par};
+pub use weights::Weights;

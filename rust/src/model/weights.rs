@@ -1,0 +1,148 @@
+//! Loader for the `weights_{size}.bin` artifact (LWTS format, written by
+//! `python/compile/aot.py::write_weights_bin`):
+//!
+//! ```text
+//! magic "LWTS" | u32 version | u32 n_tensors
+//! per tensor: u32 name_len | name | u32 rank | u32 dims[rank] | f32 data (LE)
+//! ```
+
+use crate::model::config::ModelConfig;
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+/// Named weight collection for one model.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn get(&self, name: &str) -> anyhow::Result<&Tensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow::anyhow!("missing weight '{name}'"))
+    }
+
+    /// Weights in the model's calling-convention order.
+    pub fn ordered<'a>(&'a self, cfg: &ModelConfig) -> anyhow::Result<Vec<&'a Tensor>> {
+        cfg.param_shapes().iter().map(|(name, _)| self.get(name)).collect()
+    }
+
+    /// Validate every tensor against the config's expected shapes.
+    pub fn validate(&self, cfg: &ModelConfig) -> anyhow::Result<()> {
+        for (name, shape) in cfg.param_shapes() {
+            let t = self.get(&name)?;
+            anyhow::ensure!(
+                t.shape == shape,
+                "weight '{name}': shape {:?} != expected {:?}",
+                t.shape,
+                shape
+            );
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Weights> {
+        let mut f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::from_bytes(&buf)
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> anyhow::Result<Weights> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> anyhow::Result<&[u8]> {
+            anyhow::ensure!(*pos + n <= buf.len(), "truncated weights at {}", *pos);
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let u32_at = |pos: &mut usize| -> anyhow::Result<u32> {
+            let s = take(pos, 4)?;
+            Ok(u32::from_le_bytes(s.try_into().unwrap()))
+        };
+        anyhow::ensure!(take(&mut pos, 4)? == b"LWTS", "bad magic");
+        anyhow::ensure!(u32_at(&mut pos)? == 1, "unsupported version");
+        let n = u32_at(&mut pos)? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = u32_at(&mut pos)? as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())?;
+            let rank = u32_at(&mut pos)? as usize;
+            anyhow::ensure!(rank <= 4, "rank {rank} too large");
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(u32_at(&mut pos)? as usize);
+            }
+            let count: usize = shape.iter().product();
+            let raw = take(&mut pos, count * 4)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.insert(name, Tensor::new(&shape, data));
+        }
+        anyhow::ensure!(pos == buf.len(), "trailing bytes in weights file");
+        Ok(Weights { tensors })
+    }
+
+    /// Serialize back to LWTS bytes (round-trip tests + tooling).
+    pub fn to_bytes(&self, order: &[String]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"LWTS");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(order.len() as u32).to_le_bytes());
+        for name in order {
+            let t = &self.tensors[name];
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for &d in &t.shape {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &x in &t.data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Weights {
+        let mut tensors = BTreeMap::new();
+        tensors.insert("a".to_string(), Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        tensors.insert("b.c".to_string(), Tensor::new(&[4], vec![0.5, -0.5, 0.0, 1e-9]));
+        Weights { tensors }
+    }
+
+    #[test]
+    fn round_trip() {
+        let w = sample();
+        let bytes = w.to_bytes(&["a".into(), "b.c".into()]);
+        let back = Weights::from_bytes(&bytes).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.get("a").unwrap().data, w.get("a").unwrap().data);
+        assert_eq!(back.get("b.c").unwrap().shape, vec![4]);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let w = sample();
+        let bytes = w.to_bytes(&["a".into(), "b.c".into()]);
+        assert!(Weights::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Weights::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_weight_error() {
+        let w = sample();
+        assert!(w.get("nope").is_err());
+    }
+}

@@ -1,0 +1,88 @@
+//! Per-tensor floating-point quantizer (paper appendix A.4.3, Table 11).
+//!
+//! Max-scaled quantization to an `EeMm` grid: scale the tensor so its
+//! maximum magnitude maps to the format's maximum (eq. 13), round to
+//! nearest (eq. 14), rescale. Used for the Fig. 8 / Table 11 comparison
+//! against per-tensor Lloyd-Max.
+
+use super::Quantizer;
+use crate::formats::FloatFormat;
+
+#[derive(Debug, Clone, Copy)]
+pub struct FpTensorQuantizer {
+    pub format: FloatFormat,
+}
+
+impl FpTensorQuantizer {
+    pub fn new(format: FloatFormat) -> FpTensorQuantizer {
+        FpTensorQuantizer { format }
+    }
+}
+
+impl Quantizer for FpTensorQuantizer {
+    fn name(&self) -> String {
+        format!("FP per-tensor ({})", self.format.name)
+    }
+
+    fn bits_per_scalar(&self) -> f64 {
+        // Per-tensor scale amortizes to ~0.
+        self.format.bits() as f64
+    }
+
+    fn quantize(&self, data: &[f32]) -> Vec<f32> {
+        let amax = crate::util::stats::amax(data);
+        if amax == 0.0 {
+            return data.to_vec();
+        }
+        // eq. 13: s_X = max|X| / max(format) — we apply the inverse.
+        let scale = self.format.max_value / amax;
+        data.iter().map(|&x| self.format.quantize(x * scale) / scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{E3M2, E3M3, E4M0};
+    use crate::util::rng::Pcg32;
+    use crate::util::stats::nmse;
+
+    #[test]
+    fn max_value_preserved() {
+        let data = vec![0.5f32, -2.0, 1.0, 0.0];
+        let dq = FpTensorQuantizer::new(E3M3).quantize(&data);
+        // The max maps exactly onto the format max and back.
+        assert!((dq[1] + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn more_mantissa_less_error() {
+        let mut rng = Pcg32::seeded(60);
+        let data: Vec<f32> = (0..8192).map(|_| rng.normal()).collect();
+        let e_m3 = nmse(&data, &FpTensorQuantizer::new(E3M3).quantize(&data));
+        let e_m2 = nmse(&data, &FpTensorQuantizer::new(E3M2).quantize(&data));
+        let e_m0 = nmse(&data, &FpTensorQuantizer::new(E4M0).quantize(&data));
+        assert!(e_m3 < e_m2, "{e_m3} vs {e_m2}");
+        assert!(e_m2 < e_m0, "{e_m2} vs {e_m0}");
+    }
+
+    #[test]
+    fn table11_shape_e4m0_is_bad() {
+        // Table 11: at 5 bits the FP quantizer (E4M0) collapses while
+        // Lloyd-Max degrades gracefully. Check the NMSE gap is large.
+        let mut rng = Pcg32::seeded(61);
+        let data = crate::util::rng::llm_like_sample(&mut rng, 16384, 0.03, 3.0);
+        let e_fp = nmse(&data, &FpTensorQuantizer::new(E4M0).quantize(&data));
+        let lm = crate::quant::lloyd_max::lloyd_max(&data, 5, Default::default());
+        let dq_lm: Vec<f32> =
+            data.iter().map(|&x| crate::quant::lloyd_max::nearest_level(&lm.levels, x)).collect();
+        let e_lm = nmse(&data, &dq_lm);
+        assert!(e_fp > 3.0 * e_lm, "fp {e_fp} vs lloyd-max {e_lm}");
+    }
+
+    #[test]
+    fn zero_tensor_identity() {
+        let data = vec![0.0f32; 16];
+        assert_eq!(FpTensorQuantizer::new(E3M3).quantize(&data), data);
+    }
+}

@@ -1,0 +1,79 @@
+//! Per-tensor Lloyd-Max quantizer (paper appendix A.1, Fig. 8, Table 11).
+//!
+//! MSE-optimal scalar levels fit on the tensor itself — the strongest
+//! *per-tensor* scalar quantizer, used to show that even optimal scalar
+//! quantization at coarse granularity is insufficient (motivating the
+//! per-block design of LO-BCQ).
+
+use super::Quantizer;
+use crate::quant::lloyd_max::{lloyd_max, nearest_level, LloydMaxOpts};
+
+#[derive(Debug, Clone, Copy)]
+pub struct LloydMaxTensorQuantizer {
+    pub bits: u32,
+}
+
+impl LloydMaxTensorQuantizer {
+    pub fn new(bits: u32) -> LloydMaxTensorQuantizer {
+        LloydMaxTensorQuantizer { bits }
+    }
+}
+
+impl Quantizer for LloydMaxTensorQuantizer {
+    fn name(&self) -> String {
+        format!("Lloyd-Max per-tensor ({}b)", self.bits)
+    }
+
+    fn bits_per_scalar(&self) -> f64 {
+        self.bits as f64
+    }
+
+    fn quantize(&self, data: &[f32]) -> Vec<f32> {
+        let fit = lloyd_max(data, self.bits, LloydMaxOpts::default());
+        data.iter().map(|&x| nearest_level(&fit.levels, x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{E3M2, E3M3};
+    use crate::quant::baselines::FpTensorQuantizer;
+    use crate::util::rng::Pcg32;
+    use crate::util::stats::nmse;
+
+    #[test]
+    fn beats_fp_format_at_equal_bits() {
+        // Fig. 8: Lloyd-Max < E3M3 at 7 bits; Table 11 at 6 bits (E3M2).
+        let mut rng = Pcg32::seeded(62);
+        let data = crate::util::rng::llm_like_sample(&mut rng, 16384, 0.03, 3.0);
+        for (bits, fmt) in [(7u32, E3M3), (6, E3M2)] {
+            let e_lm = nmse(&data, &LloydMaxTensorQuantizer::new(bits).quantize(&data));
+            let e_fp = nmse(&data, &FpTensorQuantizer::new(fmt).quantize(&data));
+            assert!(e_lm <= e_fp, "{bits}b: lloyd-max {e_lm} vs {} {e_fp}", fmt.name);
+        }
+    }
+
+    #[test]
+    fn monotone_in_bits() {
+        let mut rng = Pcg32::seeded(63);
+        let data = rng.normal_vec(8192);
+        let mut prev = f64::INFINITY;
+        for bits in [3u32, 4, 5, 6, 7] {
+            let e = nmse(&data, &LloydMaxTensorQuantizer::new(bits).quantize(&data));
+            assert!(e < prev, "bits {bits}: {e} !< {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn output_has_at_most_2_pow_bits_values() {
+        let mut rng = Pcg32::seeded(64);
+        let data = rng.normal_vec(4096);
+        let dq = LloydMaxTensorQuantizer::new(4).quantize(&data);
+        let mut d: Vec<f32> = dq.clone();
+        d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        d.dedup();
+        assert!(d.len() <= 16, "{} distinct", d.len());
+    }
+}

@@ -1,0 +1,76 @@
+//! Baseline quantizers the paper compares against (§4.1, appendix A.5):
+//! VSQ, MX4, MXFP4, per-tensor FP formats, and per-tensor Lloyd-Max.
+//!
+//! All baselines implement [`Quantizer`], a fake-quantize interface over
+//! flat data (the evaluation harness swaps them uniformly, Tables 2/6/7
+//! and Fig. 1).
+
+pub mod fp_tensor;
+pub mod lloydmax_tensor;
+pub mod mx;
+pub mod mxfp;
+pub mod vsq;
+
+pub use fp_tensor::FpTensorQuantizer;
+pub use lloydmax_tensor::LloydMaxTensorQuantizer;
+pub use mx::Mx4Quantizer;
+pub use mxfp::Mxfp4Quantizer;
+pub use vsq::VsqQuantizer;
+
+/// A fake-quantizer over flat f32 data: returns the dequantized values
+/// (quantize→dequantize), leaving the caller to compute error metrics.
+pub trait Quantizer {
+    /// Human-readable name (report rows).
+    fn name(&self) -> String;
+    /// Effective bits per scalar including metadata overheads.
+    fn bits_per_scalar(&self) -> f64;
+    /// Fake-quantize: data length must be a multiple of the scheme's
+    /// group size.
+    fn quantize(&self, data: &[f32]) -> Vec<f32>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{llm_like_sample, Pcg32};
+    use crate::util::stats::nmse;
+
+    fn sample(n: usize) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(50);
+        llm_like_sample(&mut rng, n, 0.05, 4.0)
+    }
+
+    /// Cross-baseline sanity: every baseline is lossy but bounded, and the
+    /// Fig. 1 ordering LO-BCQ < {MX4, VSQ, MXFP4} in NMSE holds on
+    /// LLM-like data.
+    #[test]
+    fn baseline_nmse_ordering_vs_lobcq() {
+        let data = sample(64 * 256);
+        let baselines: Vec<Box<dyn Quantizer>> = vec![
+            Box::new(VsqQuantizer::paper_default()),
+            Box::new(Mx4Quantizer::paper_default()),
+            Box::new(Mxfp4Quantizer::paper_default()),
+        ];
+        let t = crate::tensor::Tensor::new(&[64, 256], data.clone());
+        let (q, lobcq_nmse) =
+            crate::quant::lobcq::self_calibrated_quantize(&t, &crate::quant::lobcq::LobcqConfig::new(8, 8, 64), 99);
+        drop(q);
+        for b in &baselines {
+            let dq = b.quantize(&data);
+            let e = nmse(&data, &dq);
+            assert!(e.is_finite() && e > 0.0, "{}: nmse {e}", b.name());
+            assert!(
+                lobcq_nmse < e,
+                "LO-BCQ nmse {lobcq_nmse} should beat {} ({e})",
+                b.name()
+            );
+        }
+    }
+
+    #[test]
+    fn bitwidths_match_paper_setup() {
+        assert!((VsqQuantizer::paper_default().bits_per_scalar() - 4.5).abs() < 1e-12);
+        assert!((Mx4Quantizer::paper_default().bits_per_scalar() - 4.5).abs() < 1e-12);
+        assert!((Mxfp4Quantizer::paper_default().bits_per_scalar() - 4.25).abs() < 1e-12);
+    }
+}

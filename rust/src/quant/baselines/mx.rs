@@ -1,0 +1,112 @@
+//! MX4 — microscaling format (Rouhani et al. 2023a; paper A.5.1).
+//!
+//! The paper conservatively *overestimates* MX4's accuracy by modeling it
+//! as E1M2 scalars (each scalar gets its own exponent bit instead of one
+//! shared per 2-element sub-block) with a per-16-element block scale in
+//! E8M0 (power of two, floor mode) and no per-tensor scaling. Effective
+//! bitwidth 4 + 8/16 = 4.5 bits ("MX4 (g16)" rows).
+
+use super::Quantizer;
+use crate::formats::{FloatFormat, E1M2, E8M0};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Mx4Quantizer {
+    /// Block (scale-sharing group) length — 16 in the paper.
+    pub block_len: usize,
+    /// Scalar element format (E1M2 proxy).
+    pub scalar: FloatFormat,
+}
+
+impl Mx4Quantizer {
+    pub fn paper_default() -> Mx4Quantizer {
+        Mx4Quantizer { block_len: 16, scalar: E1M2 }
+    }
+}
+
+impl Quantizer for Mx4Quantizer {
+    fn name(&self) -> String {
+        format!("MX4 (g{})", self.block_len)
+    }
+
+    fn bits_per_scalar(&self) -> f64 {
+        self.scalar.bits() as f64 + E8M0::BITS as f64 / self.block_len as f64
+    }
+
+    fn quantize(&self, data: &[f32]) -> Vec<f32> {
+        assert!(data.len() % self.block_len == 0);
+        let mut out = Vec::with_capacity(data.len());
+        for block in data.chunks_exact(self.block_len) {
+            let amax = crate::util::stats::amax(block);
+            if amax == 0.0 {
+                out.extend(std::iter::repeat(0.0).take(self.block_len));
+                continue;
+            }
+            // E8M0 floor scale: largest power of two with
+            // amax/scale <= max representable (MX spec: the shared scale
+            // is 2^floor(log2(amax)) / 2^emax_elem).
+            let ideal = self.scalar.max_value / amax;
+            let scale = E8M0::quantize_floor(ideal);
+            for &x in block {
+                out.push(self.scalar.quantize(x * scale) / scale);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::stats::nmse;
+
+    #[test]
+    fn bits() {
+        assert_eq!(Mx4Quantizer::paper_default().bits_per_scalar(), 4.5);
+    }
+
+    #[test]
+    fn block_max_never_clips() {
+        // Floor-mode E8M0 guarantees scaled max <= scalar max.
+        let mut rng = Pcg32::seeded(55);
+        let q = Mx4Quantizer::paper_default();
+        for _ in 0..100 {
+            let data: Vec<f32> = (0..16).map(|_| rng.normal() * 10f32.powi(rng.below(6) as i32 - 3)).collect();
+            let amax = crate::util::stats::amax(&data);
+            let dq = q.quantize(&data);
+            let qmax = crate::util::stats::amax(&dq);
+            // Dequantized max can round up one grid step but never clip down
+            // to a saturated value far below amax.
+            assert!(qmax <= amax * 1.34 + 1e-9, "clipped/overflowed: {qmax} vs {amax}");
+        }
+    }
+
+    #[test]
+    fn gaussian_nmse_reasonable() {
+        let mut rng = Pcg32::seeded(56);
+        let data: Vec<f32> = (0..4096).map(|_| rng.normal()).collect();
+        let e = nmse(&data, &Mx4Quantizer::paper_default().quantize(&data));
+        assert!(e > 0.001 && e < 0.05, "nmse {e}");
+    }
+
+    #[test]
+    fn values_on_e1m2_grid() {
+        let mut rng = Pcg32::seeded(57);
+        let data: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let q = Mx4Quantizer::paper_default();
+        let dq = q.quantize(&data);
+        for block in dq.chunks_exact(16) {
+            let mut distinct: Vec<f32> = block.to_vec();
+            distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            distinct.dedup();
+            // E1M2 has 15 distinct values (7 pos, 7 neg, zero).
+            assert!(distinct.len() <= 15);
+        }
+    }
+
+    #[test]
+    fn zero_block() {
+        let dq = Mx4Quantizer::paper_default().quantize(&vec![0.0; 16]);
+        assert!(dq.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,350 @@
+//! Codebook types for block clustered quantization (paper §2.1, §2.4).
+//!
+//! A [`Codebook`] is `2^B` scalar quantization levels (sorted ascending);
+//! a [`CodebookFamily`] is the set of `Nc` codebooks shared by an entire
+//! tensor — or, after *universal* calibration (paper §3), by every tensor
+//! of every model. Codewords are quantized to INT-`B_c` integers in the
+//! normalized domain where the block-array maximum maps to `2^{B_c-1}-1`
+//! (paper eq. 7; `B_c = 6` by default, Table 10 ablates 4/6/8).
+
+use crate::formats::IntFormat;
+use crate::util::json::Json;
+
+/// One scalar quantization codebook: sorted levels in the normalized
+/// (per-block-array-scaled) domain.
+///
+/// Decision thresholds (level midpoints) are precomputed at construction:
+/// the hot-path encode is then a branch-predictable threshold count
+/// instead of a binary search — the first optimization of the §Perf pass
+/// (see EXPERIMENTS.md §Perf; ~8× on the select path).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Codebook {
+    pub levels: Vec<f32>,
+    /// Midpoints between consecutive levels (len = levels.len() - 1).
+    thresholds: Vec<f32>,
+    /// Fixed-width copies padded to 16 levels / 15 thresholds (+∞ pads):
+    /// the hot path iterates constant-length arrays so LLVM unrolls and
+    /// vectorizes the threshold counting (§Perf pass, EXPERIMENTS.md).
+    lut_levels: [f32; 16],
+    lut_thresholds: [f32; 15],
+}
+
+impl Codebook {
+    pub fn new(mut levels: Vec<f32>) -> Codebook {
+        assert!((1..=16).contains(&levels.len()), "codebook entries must be 1..=16");
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let thresholds: Vec<f32> = levels.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
+        let mut lut_levels = [*levels.last().unwrap(); 16];
+        lut_levels[..levels.len()].copy_from_slice(&levels);
+        let mut lut_thresholds = [f32::INFINITY; 15];
+        lut_thresholds[..thresholds.len()].copy_from_slice(&thresholds);
+        Codebook { levels, thresholds, lut_levels, lut_thresholds }
+    }
+
+    /// Number of entries (2^B).
+    pub fn len(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.levels.is_empty()
+    }
+
+    /// Index of the nearest level to `x` (eq. 2). Ties at a midpoint go
+    /// to the lower level (`x > t` is false at `x == t`), matching
+    /// `lloyd_max::nearest_level_index`; with INT-B_c codeword levels the
+    /// midpoints are exact in f32, so the two agree bit-for-bit.
+    #[inline]
+    pub fn encode(&self, x: f32) -> usize {
+        // Constant-length loop over the padded thresholds (+∞ pads never
+        // fire), fully unrolled/vectorized by LLVM.
+        let mut idx = 0usize;
+        for t in self.lut_thresholds {
+            idx += (x > t) as usize;
+        }
+        idx
+    }
+
+    /// Branchless f32 squared error of quantizing `block` — the §Perf
+    /// select kernel. f32 accumulation matches the Pallas kernel (jnp
+    /// f32); selection order can differ from the f64 reference only on
+    /// exact-tie boundaries (covered by the parity tolerance tests).
+    #[inline]
+    pub fn block_sq_err_f32(&self, block: &[f32]) -> f32 {
+        let th = &self.lut_thresholds;
+        let lv = &self.lut_levels;
+        // Fast path for the paper's default L_b = 8: vectorize the
+        // threshold counting ACROSS the 8 scalars (15 iterations of an
+        // 8-wide compare — AVX-friendly), then a short gather epilogue.
+        if block.len() == 8 {
+            let x: [f32; 8] = block.try_into().unwrap();
+            let mut idx = [0i32; 8];
+            for t in th {
+                for j in 0..8 {
+                    idx[j] += (x[j] > *t) as i32;
+                }
+            }
+            let mut acc = 0.0f32;
+            for j in 0..8 {
+                let d = x[j] - lv[(idx[j] as usize) & 15];
+                acc += d * d;
+            }
+            return acc;
+        }
+        // General path (L_b ∈ {2, 4}): per-scalar threshold count.
+        let mut acc = 0.0f32;
+        for &x in block {
+            let mut idx = 0i32;
+            for t in th {
+                idx += (x > *t) as i32;
+            }
+            let d = x - lv[(idx as usize) & 15];
+            acc = d.mul_add(d, acc);
+        }
+        acc
+    }
+
+    /// Level value at `idx`.
+    #[inline]
+    pub fn decode(&self, idx: usize) -> f32 {
+        self.levels[idx]
+    }
+
+    /// Nearest-level quantization (encode∘decode), via the LUT path.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        self.lut_levels[self.encode(x) & 15]
+    }
+
+    /// Squared error of quantizing a whole block with this codebook —
+    /// the mapping-function objective of eq. 4.
+    #[inline]
+    pub fn block_sq_err(&self, block: &[f32]) -> f64 {
+        block
+            .iter()
+            .map(|&x| {
+                let d = (x - self.quantize(x)) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    /// `block_sq_err` with an early-exit bound: returns `None` as soon
+    /// as the partial sum exceeds `bound` (§Perf: skips most of the
+    /// losing codebooks in the eq. 4 argmin).
+    #[inline]
+    pub fn block_sq_err_bounded(&self, block: &[f32], bound: f64) -> Option<f64> {
+        let mut acc = 0.0f64;
+        for &x in block {
+            let d = (x - self.quantize(x)) as f64;
+            acc += d * d;
+            if acc >= bound {
+                return None;
+            }
+        }
+        Some(acc)
+    }
+
+    /// Quantize codewords themselves to the INT-`bc` grid (paper §2.4 /
+    /// Table 10) and deduplicate-preserving-count is NOT applied: entries
+    /// may collide after rounding, which only wastes index space (the
+    /// paper accepts this; Table 10's INT4 row shows the resulting loss).
+    pub fn quantize_codewords(&self, bc: u32) -> Codebook {
+        let f = IntFormat::new(bc);
+        Codebook::new(self.levels.iter().map(|&l| f.quantize(l)).collect())
+    }
+}
+
+/// A family of `Nc` codebooks plus the scalar-index bitwidth `B`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodebookFamily {
+    pub books: Vec<Codebook>,
+    /// Index bits per scalar (entries per book = 2^b).
+    pub b: u32,
+}
+
+impl CodebookFamily {
+    pub fn new(books: Vec<Codebook>, b: u32) -> CodebookFamily {
+        assert!(!books.is_empty());
+        for book in &books {
+            assert_eq!(book.len(), 1 << b, "codebook size must be 2^B");
+        }
+        CodebookFamily { books, b }
+    }
+
+    pub fn nc(&self) -> usize {
+        self.books.len()
+    }
+
+    /// Selector bits per block.
+    pub fn selector_bits(&self) -> u32 {
+        (self.nc() as f64).log2().ceil() as u32
+    }
+
+    /// The mapping function f (eq. 4): index of the codebook with minimal
+    /// squared error on this block (first-minimum tie rule: a later book
+    /// only wins with a strictly smaller error). Uses the branchless f32
+    /// error kernel (§Perf).
+    #[inline]
+    pub fn select(&self, block: &[f32]) -> usize {
+        let mut best = 0usize;
+        let mut best_err = self.books[0].block_sq_err_f32(block);
+        for (i, book) in self.books.iter().enumerate().skip(1) {
+            let e = book.block_sq_err_f32(block);
+            if e < best_err {
+                best_err = e;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Quantize all codewords to INT-`bc` (done once after calibration).
+    pub fn quantize_codewords(&self, bc: u32) -> CodebookFamily {
+        CodebookFamily {
+            books: self.books.iter().map(|bk| bk.quantize_codewords(bc)).collect(),
+            b: self.b,
+        }
+    }
+
+    /// Memory footprint in bytes at `bc` bits per codeword.
+    pub fn footprint_bytes(&self, bc: u32) -> f64 {
+        super::metrics::codebook_bytes(self.nc(), self.b, bc)
+    }
+
+    // ----- persistence (artifacts/codebooks.json) -----
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("b", Json::Num(self.b as f64))
+            .with("nc", Json::Num(self.nc() as f64))
+            .with(
+                "books",
+                Json::Arr(self.books.iter().map(|bk| Json::from_f32s(&bk.levels)).collect()),
+            )
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<CodebookFamily> {
+        let b = j.get("b")?.as_usize()? as u32;
+        let books = j
+            .get("books")?
+            .as_arr()?
+            .iter()
+            .map(|arr| Ok(Codebook::new(arr.as_f32_vec()?)))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(CodebookFamily::new(books, b))
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        self.to_json().to_file(path)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<CodebookFamily> {
+        Self::from_json(&Json::from_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+
+    fn book(levels: &[f32]) -> Codebook {
+        Codebook::new(levels.to_vec())
+    }
+
+    #[test]
+    fn encode_decode_nearest() {
+        let cb = book(&[-2.0, 0.0, 1.0, 3.0]);
+        assert_eq!(cb.encode(0.4), 1);
+        assert_eq!(cb.encode(0.6), 2);
+        assert_eq!(cb.quantize(-10.0), -2.0);
+        assert_eq!(cb.decode(3), 3.0);
+    }
+
+    #[test]
+    fn block_sq_err_additive() {
+        let cb = book(&[0.0, 1.0]);
+        // block [0.25, 0.75] -> errors 0.25^2 + 0.25^2
+        let e = cb.block_sq_err(&[0.25, 0.75]);
+        assert!((e - 0.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn family_select_picks_min_mse_book() {
+        let fam = CodebookFamily::new(
+            vec![
+                book(&[-1.0, -0.5, 0.5, 1.0]), // small-magnitude book
+                book(&[-8.0, -4.0, 4.0, 8.0]), // large-magnitude book
+            ],
+            2,
+        );
+        assert_eq!(fam.select(&[0.4, -0.6, 0.9, 0.1]), 0);
+        assert_eq!(fam.select(&[7.0, -3.5, 5.0, -8.0]), 1);
+        assert_eq!(fam.selector_bits(), 1);
+    }
+
+    #[test]
+    fn codeword_quantization_rounds_to_int_grid() {
+        let cb = book(&[-30.7, -10.2, 10.6, 30.9]);
+        let q6 = cb.quantize_codewords(6);
+        assert_eq!(q6.levels, vec![-31.0, -10.0, 11.0, 31.0]);
+        let q4 = cb.quantize_codewords(4);
+        // INT4 clamps to ±7.
+        assert_eq!(q4.levels, vec![-7.0, -7.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "codebook size must be 2^B")]
+    fn family_validates_sizes() {
+        CodebookFamily::new(vec![book(&[0.0, 1.0, 2.0])], 2);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let fam = CodebookFamily::new(
+            vec![book(&[-1.5, 0.0, 0.25, 2.0]), book(&[-8.0, -1.0, 1.0, 8.0])],
+            2,
+        );
+        let back = CodebookFamily::from_json(&fam.to_json()).unwrap();
+        assert_eq!(fam, back);
+    }
+
+    #[test]
+    fn footprint_matches_paper_claim() {
+        let books: Vec<Codebook> =
+            (0..16).map(|i| book(&(0..16).map(|j| (i * 16 + j) as f32).collect::<Vec<_>>())).collect();
+        let fam = CodebookFamily::new(books, 4);
+        assert!(fam.footprint_bytes(6) <= 192.0);
+    }
+
+    #[test]
+    fn prop_select_is_argmin() {
+        forall(23, "select == brute-force argmin", |rng| {
+            let nc = 1 + rng.index(8);
+            let books: Vec<Codebook> = (0..nc)
+                .map(|_| {
+                    let mut lv: Vec<f32> = (0..4).map(|_| rng.normal() * 4.0).collect();
+                    lv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    Codebook::new(lv)
+                })
+                .collect();
+            let fam = CodebookFamily::new(books, 2);
+            let block: Vec<f32> = (0..8).map(|_| rng.normal() * 4.0).collect();
+            let sel = fam.select(&block);
+            // Brute-force f32 argmin (select's accumulation precision).
+            let best = (0..nc)
+                .min_by(|&a, &b| {
+                    fam.books[a]
+                        .block_sq_err_f32(&block)
+                        .partial_cmp(&fam.books[b].block_sq_err_f32(&block))
+                        .unwrap()
+                })
+                .unwrap();
+            ensure(
+                (fam.books[sel].block_sq_err_f32(&block) - fam.books[best].block_sq_err_f32(&block)).abs() < 1e-9,
+                || format!("select {sel} vs argmin {best}"),
+            )
+        });
+    }
+}

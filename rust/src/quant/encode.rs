@@ -1,0 +1,393 @@
+//! Bit-exact packed LO-BCQ block format (paper Fig. 5).
+//!
+//! Layout per tensor:
+//! - header: config (L_b, L_A, N_c, B, B_c), shape, per-tensor scale s_X;
+//! - one 8-bit E4M3 code per block array (the relative scale ŝ_A, eq. 8);
+//! - one `log2(N_c)`-bit codebook selector per block (eq. 4);
+//! - one `B`-bit codeword index per scalar (eq. 2).
+//!
+//! Codebooks themselves are *not* stored per tensor — they are frozen
+//! universal tables (≤ 0.19 KB) shipped once (paper §3), exactly why the
+//! format is hardware-friendly. `decode` therefore takes the family.
+//!
+//! The measured bits/scalar of an [`EncodedTensor`] matches eq. 9 (tested),
+//! and decode∘encode equals [`fake_quantize`](super::lobcq::fake_quantize)
+//! bit-for-bit (tested) — the packed format and the calibration-path
+//! dequantizer are the same quantizer.
+
+use super::codebook::CodebookFamily;
+use super::lobcq::{normalize, LobcqConfig};
+
+/// MSB-first bit writer.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    bytes: Vec<u8>,
+    /// Bits used in the last byte (0..8; 0 means byte boundary).
+    used: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the low `width` bits of `value` (MSB of the field first).
+    pub fn push(&mut self, value: u32, width: u32) {
+        debug_assert!(width <= 32);
+        debug_assert!(width == 32 || value < (1u32 << width), "value {value} wider than {width} bits");
+        let mut remaining = width;
+        while remaining > 0 {
+            if self.used == 0 {
+                self.bytes.push(0);
+            }
+            let space = 8 - self.used;
+            let take = space.min(remaining);
+            let shift = remaining - take;
+            let chunk = ((value >> shift) & ((1u32 << take) - 1)) as u8;
+            let last = self.bytes.last_mut().unwrap();
+            *last |= chunk << (space - take);
+            self.used = (self.used + take) % 8;
+            remaining -= take;
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    pub fn bit_len(&self) -> usize {
+        if self.used == 0 {
+            self.bytes.len() * 8
+        } else {
+            (self.bytes.len() - 1) * 8 + self.used as usize
+        }
+    }
+}
+
+/// MSB-first bit reader over a byte slice.
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos_bits: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        BitReader { bytes, pos_bits: 0 }
+    }
+
+    /// Read `width` bits; panics past the end (lengths are header-driven).
+    pub fn read(&mut self, width: u32) -> u32 {
+        let mut out = 0u32;
+        for _ in 0..width {
+            let byte = self.bytes[self.pos_bits / 8];
+            let bit = (byte >> (7 - (self.pos_bits % 8))) & 1;
+            out = (out << 1) | bit as u32;
+            self.pos_bits += 1;
+        }
+        out
+    }
+}
+
+/// A tensor encoded in the packed LO-BCQ block format.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncodedTensor {
+    pub cfg: LobcqConfig,
+    pub shape: Vec<usize>,
+    /// Per-tensor scale s_X.
+    pub s_x: f32,
+    /// One E4M3 byte per block array (relative scale codes).
+    pub scale_codes: Vec<u8>,
+    /// Packed selectors, log2(Nc) bits per block (empty when Nc == 1).
+    pub selectors: Vec<u8>,
+    /// Packed indices, B bits per scalar.
+    pub indices: Vec<u8>,
+}
+
+impl EncodedTensor {
+    pub fn num_scalars(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.num_scalars() / self.cfg.lb
+    }
+
+    pub fn num_arrays(&self) -> usize {
+        self.num_scalars() / self.cfg.la
+    }
+
+    /// Measured payload bits per scalar (scales + selectors + indices),
+    /// the quantity eq. 9 accounts analytically.
+    pub fn bits_per_scalar(&self) -> f64 {
+        let bits = self.num_arrays() * 8
+            + self.num_blocks() * self.selector_bits() as usize
+            + self.num_scalars() * self.cfg.b as usize;
+        bits as f64 / self.num_scalars() as f64
+    }
+
+    fn selector_bits(&self) -> u32 {
+        (self.cfg.nc as f64).log2().ceil() as u32
+    }
+}
+
+/// Encode a tensor's data (paper Fig. 5). The family must already be
+/// codeword-quantized (INT-B_c) — the frozen inference tables.
+pub fn encode(data: &[f32], shape: &[usize], cfg: &LobcqConfig, family: &CodebookFamily) -> EncodedTensor {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    assert_eq!(family.nc(), cfg.nc, "family/config Nc mismatch");
+    assert_eq!(family.b, cfg.b, "family/config B mismatch");
+    let norm = normalize(data, cfg.la, cfg);
+    let sel_bits = (cfg.nc as f64).log2().ceil() as u32;
+
+    let mut scale_codes = Vec::with_capacity(norm.scales.len());
+    for &eff in &norm.scales {
+        // Store the E4M3 code of the *relative* scale eff / s_X.
+        scale_codes.push(cfg.scale_format.encode_bits(eff / norm.s_x) as u8);
+    }
+
+    let mut selw = BitWriter::new();
+    let mut idxw = BitWriter::new();
+    for arr in norm.values.chunks_exact(cfg.la) {
+        for block in arr.chunks_exact(cfg.lb) {
+            let sel = family.select(block);
+            if sel_bits > 0 {
+                selw.push(sel as u32, sel_bits);
+            }
+            let book = &family.books[sel];
+            for &v in block {
+                idxw.push(book.encode(v) as u32, cfg.b);
+            }
+        }
+    }
+
+    EncodedTensor {
+        cfg: *cfg,
+        shape: shape.to_vec(),
+        s_x: norm.s_x,
+        scale_codes,
+        selectors: selw.finish(),
+        indices: idxw.finish(),
+    }
+}
+
+/// Decode back to dense f32. Exactly reproduces
+/// [`fake_quantize`](super::lobcq::fake_quantize) output.
+pub fn decode(enc: &EncodedTensor, family: &CodebookFamily) -> Vec<f32> {
+    let cfg = &enc.cfg;
+    let sel_bits = enc.selector_bits();
+    let mut selr = BitReader::new(&enc.selectors);
+    let mut idxr = BitReader::new(&enc.indices);
+    let mut out = Vec::with_capacity(enc.num_scalars());
+    for ai in 0..enc.num_arrays() {
+        let rel = cfg.scale_format.decode_bits(enc.scale_codes[ai] as u16);
+        let eff = rel * enc.s_x;
+        let inv = if eff != 0.0 { 1.0 / eff } else { 0.0 };
+        let blocks_per_array = cfg.la / cfg.lb;
+        for _ in 0..blocks_per_array {
+            let sel = if sel_bits > 0 { selr.read(sel_bits) as usize } else { 0 };
+            let book = &family.books[sel];
+            for _ in 0..cfg.lb {
+                let idx = idxr.read(cfg.b) as usize;
+                out.push(book.decode(idx) * inv);
+            }
+        }
+    }
+    out
+}
+
+// ---- flat byte serialization (artifact / wire format) ----
+
+const MAGIC: u32 = 0x4C_42_43_51; // "LBCQ"
+
+/// Serialize to a self-describing byte buffer.
+pub fn to_bytes(enc: &EncodedTensor) -> Vec<u8> {
+    let mut out = Vec::new();
+    let push_u32 = |out: &mut Vec<u8>, v: u32| out.extend_from_slice(&v.to_le_bytes());
+    push_u32(&mut out, MAGIC);
+    push_u32(&mut out, 1); // version
+    push_u32(&mut out, enc.cfg.lb as u32);
+    push_u32(&mut out, enc.cfg.la as u32);
+    push_u32(&mut out, enc.cfg.nc as u32);
+    push_u32(&mut out, enc.cfg.b);
+    push_u32(&mut out, enc.cfg.bc);
+    push_u32(&mut out, enc.shape.len() as u32);
+    for &d in &enc.shape {
+        push_u32(&mut out, d as u32);
+    }
+    out.extend_from_slice(&enc.s_x.to_le_bytes());
+    push_u32(&mut out, enc.scale_codes.len() as u32);
+    out.extend_from_slice(&enc.scale_codes);
+    push_u32(&mut out, enc.selectors.len() as u32);
+    out.extend_from_slice(&enc.selectors);
+    push_u32(&mut out, enc.indices.len() as u32);
+    out.extend_from_slice(&enc.indices);
+    out
+}
+
+/// Parse a buffer produced by [`to_bytes`].
+pub fn from_bytes(buf: &[u8]) -> anyhow::Result<EncodedTensor> {
+    let mut pos = 0usize;
+    let mut take_u32 = |buf: &[u8]| -> anyhow::Result<u32> {
+        anyhow::ensure!(pos + 4 <= buf.len(), "truncated buffer at {pos}");
+        let v = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
+        pos += 4;
+        Ok(v)
+    };
+    anyhow::ensure!(take_u32(buf)? == MAGIC, "bad magic");
+    anyhow::ensure!(take_u32(buf)? == 1, "unsupported version");
+    let lb = take_u32(buf)? as usize;
+    let la = take_u32(buf)? as usize;
+    let nc = take_u32(buf)? as usize;
+    let b = take_u32(buf)?;
+    let bc = take_u32(buf)?;
+    let rank = take_u32(buf)? as usize;
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        shape.push(take_u32(buf)? as usize);
+    }
+    anyhow::ensure!(pos + 4 <= buf.len(), "truncated s_x");
+    let s_x = f32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
+    pos += 4;
+    let take_vec = |buf: &[u8], pos: &mut usize| -> anyhow::Result<Vec<u8>> {
+        anyhow::ensure!(*pos + 4 <= buf.len(), "truncated length");
+        let n = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap()) as usize;
+        *pos += 4;
+        anyhow::ensure!(*pos + n <= buf.len(), "truncated payload");
+        let v = buf[*pos..*pos + n].to_vec();
+        *pos += n;
+        Ok(v)
+    };
+    let scale_codes = take_vec(buf, &mut pos)?;
+    let selectors = take_vec(buf, &mut pos)?;
+    let indices = take_vec(buf, &mut pos)?;
+    let cfg = LobcqConfig::new(lb, nc, la).with_bits(b).with_codeword_bits(bc);
+    cfg.validate()?;
+    Ok(EncodedTensor { cfg, shape, s_x, scale_codes, selectors, indices })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::lobcq::{calibrate_tensors, fake_quantize, CalibOpts};
+    use crate::tensor::Tensor;
+    use crate::util::prop::{ensure, forall, gen_operand};
+    use crate::util::rng::{llm_like_sample, Pcg32};
+
+    #[test]
+    fn bit_writer_reader_round_trip() {
+        let mut w = BitWriter::new();
+        let fields = [(5u32, 3u32), (0, 1), (255, 8), (1, 1), (1023, 10), (7, 4)];
+        for &(v, width) in &fields {
+            w.push(v, width);
+        }
+        let total: u32 = fields.iter().map(|f| f.1).sum();
+        assert_eq!(w.bit_len(), total as usize);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, width) in &fields {
+            assert_eq!(r.read(width), v);
+        }
+    }
+
+    #[test]
+    fn bit_writer_msb_first_layout() {
+        let mut w = BitWriter::new();
+        w.push(0b101, 3);
+        w.push(0b11, 2);
+        // 10111xxx -> 0b10111000
+        assert_eq!(w.finish(), vec![0b1011_1000]);
+    }
+
+    fn setup(seed: u64, cfg: &LobcqConfig, n: usize) -> (Tensor, CodebookFamily) {
+        let mut rng = Pcg32::seeded(seed);
+        let t = Tensor::new(&[n / cfg.la, cfg.la], llm_like_sample(&mut rng, n, 0.05, 4.0));
+        let calib = calibrate_tensors(&[&t], cfg, CalibOpts::default(), &mut rng);
+        (t, calib.family.quantize_codewords(cfg.bc))
+    }
+
+    #[test]
+    fn decode_matches_fake_quantize_exactly() {
+        let cfg = LobcqConfig::new(8, 8, 64);
+        let (t, fam) = setup(40, &cfg, 4096);
+        let enc = encode(&t.data, &t.shape, &cfg, &fam);
+        let dec = decode(&enc, &fam);
+        let fq = fake_quantize(&t.data, &cfg, &fam);
+        assert_eq!(dec.len(), fq.len());
+        for (i, (a, b)) in dec.iter().zip(&fq).enumerate() {
+            assert_eq!(a, b, "mismatch at {i}: packed {a} vs fake-quant {b}");
+        }
+    }
+
+    #[test]
+    fn bits_per_scalar_matches_eq9() {
+        let cfg = LobcqConfig::new(8, 8, 64);
+        let (t, fam) = setup(41, &cfg, 4096);
+        let enc = encode(&t.data, &t.shape, &cfg, &fam);
+        let analytic = cfg.bitwidth(); // eq. 9 without codebook term
+        assert!(
+            (enc.bits_per_scalar() - analytic).abs() < 1e-9,
+            "measured {} vs eq9 {}",
+            enc.bits_per_scalar(),
+            analytic
+        );
+    }
+
+    #[test]
+    fn byte_serialization_round_trip() {
+        let cfg = LobcqConfig::new(4, 4, 32);
+        let (t, fam) = setup(42, &cfg, 1024);
+        let enc = encode(&t.data, &t.shape, &cfg, &fam);
+        let bytes = to_bytes(&enc);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(enc, back);
+        // And the decoded numerics agree.
+        assert_eq!(decode(&enc, &fam), decode(&back, &fam));
+    }
+
+    #[test]
+    fn from_bytes_rejects_corruption() {
+        let cfg = LobcqConfig::new(8, 2, 64);
+        let (t, fam) = setup(43, &cfg, 512);
+        let bytes = to_bytes(&encode(&t.data, &t.shape, &cfg, &fam));
+        assert!(from_bytes(&bytes[..bytes.len() - 3]).is_err(), "truncation accepted");
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(from_bytes(&bad).is_err(), "bad magic accepted");
+    }
+
+    #[test]
+    fn nc1_stores_no_selectors() {
+        let cfg = LobcqConfig::new(8, 1, 64);
+        let (t, fam) = setup(44, &cfg, 512);
+        let enc = encode(&t.data, &t.shape, &cfg, &fam);
+        assert!(enc.selectors.is_empty());
+        assert_eq!(decode(&enc, &fam).len(), 512);
+    }
+
+    #[test]
+    fn prop_round_trip_idempotent() {
+        forall(45, "decode(encode(x)) == fake_quantize(x)", |rng| {
+            let lb = [2usize, 4, 8][rng.index(3)];
+            let nc = [2usize, 4][rng.index(2)];
+            let la = lb * (1 + rng.index(4)) * 2;
+            let cfg = LobcqConfig::new(lb, nc, la);
+            if cfg.validate().is_err() {
+                return Ok(());
+            }
+            let n = la * (1 + rng.index(8));
+            let data = gen_operand(rng, n);
+            let t = Tensor::new(&[n / la, la], data);
+            let mut crng = Pcg32::seeded(rng.next_u64());
+            let calib = calibrate_tensors(&[&t], &cfg, CalibOpts { max_iters: 5, rel_tol: 1e-6, init: crate::quant::lobcq::InitMethod::KmeansPp }, &mut crng);
+            let fam = calib.family.quantize_codewords(cfg.bc);
+            let enc = encode(&t.data, &t.shape, &cfg, &fam);
+            let dec = decode(&enc, &fam);
+            let fq = fake_quantize(&t.data, &cfg, &fam);
+            for (a, b) in dec.iter().zip(&fq) {
+                ensure(a == b, || format!("packed {a} != fake {b}"))?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,155 @@
+//! K-means++ seeding over blocks (paper §2.3).
+//!
+//! LO-BCQ initializes its `Nc` per-cluster codebooks from `Nc` seed
+//! *blocks* chosen by the k-means++ rule — each successive seed is drawn
+//! with probability proportional to its squared euclidean distance from
+//! the nearest already-chosen seed — which "maximizes pairwise euclidean
+//! distances" (paper's phrasing) and converges to markedly lower NMSE than
+//! random initialization (Fig. 4; reproduced by `benches/fig4_init.rs`).
+
+use crate::util::rng::Pcg32;
+
+/// Squared euclidean distance between equal-length blocks.
+#[inline]
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Choose `k` seed indices from `blocks` (each of equal length) using
+/// k-means++ (D² sampling). Deterministic given the RNG state. If there
+/// are fewer distinct blocks than `k`, duplicates may be returned — the
+/// caller's Lloyd-Max step tolerates identical initial codebooks.
+pub fn kmeanspp_seeds(blocks: &[&[f32]], k: usize, rng: &mut Pcg32) -> Vec<usize> {
+    assert!(k >= 1);
+    assert!(!blocks.is_empty(), "no blocks to seed from");
+    let n = blocks.len();
+    let mut seeds = Vec::with_capacity(k);
+    seeds.push(rng.index(n));
+    // d2[i] = distance to nearest chosen seed.
+    let mut d2: Vec<f64> = blocks.iter().map(|b| dist_sq(b, blocks[seeds[0]])).collect();
+    while seeds.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            // All blocks identical to some seed: fall back to uniform.
+            rng.index(n)
+        } else {
+            let mut x = rng.next_f64() * total;
+            let mut pick = n - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                if x < d {
+                    pick = i;
+                    break;
+                }
+                x -= d;
+            }
+            pick
+        };
+        seeds.push(next);
+        for (i, b) in blocks.iter().enumerate() {
+            let d = dist_sq(b, blocks[next]);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    seeds
+}
+
+/// Assign each block to its nearest seed (hard assignment). Returns the
+/// cluster index per block.
+pub fn assign_to_seeds(blocks: &[&[f32]], seed_idx: &[usize]) -> Vec<usize> {
+    blocks
+        .iter()
+        .map(|b| {
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for (c, &s) in seed_idx.iter().enumerate() {
+                let d = dist_sq(b, blocks[s]);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+
+    fn as_refs(v: &[Vec<f32>]) -> Vec<&[f32]> {
+        v.iter().map(|b| b.as_slice()).collect()
+    }
+
+    #[test]
+    fn seeds_prefer_far_blocks() {
+        // Three tight clusters; with k=3 the seeds should hit all three
+        // clusters in the vast majority of runs.
+        let mut rng = Pcg32::seeded(21);
+        let mut hits = 0;
+        for trial in 0..50 {
+            let mut blocks: Vec<Vec<f32>> = Vec::new();
+            for c in 0..3 {
+                for _ in 0..20 {
+                    let center = c as f32 * 100.0;
+                    blocks.push((0..4).map(|_| center + rng.normal() * 0.1).collect());
+                }
+            }
+            let mut seed_rng = Pcg32::seeded(1000 + trial);
+            let seeds = kmeanspp_seeds(&as_refs(&blocks), 3, &mut seed_rng);
+            let clusters: std::collections::BTreeSet<usize> =
+                seeds.iter().map(|&s| s / 20).collect();
+            if clusters.len() == 3 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 48, "k-means++ hit all clusters only {hits}/50 times");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let blocks: Vec<Vec<f32>> = (0..32).map(|i| vec![i as f32, (i * i) as f32]).collect();
+        let a = kmeanspp_seeds(&as_refs(&blocks), 4, &mut Pcg32::seeded(5));
+        let b = kmeanspp_seeds(&as_refs(&blocks), 4, &mut Pcg32::seeded(5));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn identical_blocks_dont_panic() {
+        let blocks = vec![vec![1.0f32, 2.0]; 10];
+        let seeds = kmeanspp_seeds(&as_refs(&blocks), 4, &mut Pcg32::seeded(6));
+        assert_eq!(seeds.len(), 4);
+    }
+
+    #[test]
+    fn assignment_picks_nearest() {
+        let blocks = vec![vec![0.0f32], vec![10.0], vec![1.0], vec![9.0]];
+        let refs = as_refs(&blocks);
+        let assign = assign_to_seeds(&refs, &[0, 1]);
+        assert_eq!(assign, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn prop_seeds_in_range_and_count() {
+        forall(22, "kmeans++ seed bounds", |rng| {
+            let n = 1 + rng.index(64);
+            let lb = 1 + rng.index(8);
+            let blocks: Vec<Vec<f32>> = (0..n).map(|_| (0..lb).map(|_| rng.normal()).collect()).collect();
+            let refs: Vec<&[f32]> = blocks.iter().map(|b| b.as_slice()).collect();
+            let k = 1 + rng.index(8);
+            let seeds = kmeanspp_seeds(&refs, k, rng);
+            ensure(seeds.len() == k, || "wrong seed count".into())?;
+            ensure(seeds.iter().all(|&s| s < n), || "seed out of range".into())
+        });
+    }
+}

@@ -1,0 +1,441 @@
+//! Lloyd-Max MSE-optimal scalar quantizer (Lloyd 1982; paper appendix A.1).
+//!
+//! Given data and a bitwidth `B`, finds `2^B` quantization levels that
+//! (locally) minimize the mean squared error of rounding each scalar to its
+//! nearest level. Equivalent to 1-D k-means. LO-BCQ invokes this per block
+//! cluster at every iteration (eq. 6), warm-started from the previous
+//! iteration's codebook (paper §2.3).
+
+/// Convergence / iteration controls.
+#[derive(Debug, Clone, Copy)]
+pub struct LloydMaxOpts {
+    pub max_iters: usize,
+    /// Stop when relative MSE improvement falls below this.
+    pub rel_tol: f64,
+}
+
+impl Default for LloydMaxOpts {
+    fn default() -> Self {
+        LloydMaxOpts { max_iters: 100, rel_tol: 1e-9 }
+    }
+}
+
+/// Result of a Lloyd-Max fit: levels sorted ascending + the final MSE.
+#[derive(Debug, Clone)]
+pub struct LloydMaxFit {
+    pub levels: Vec<f32>,
+    pub mse: f64,
+    pub iters: usize,
+}
+
+/// Fit `num_levels` quantization levels to `data`, starting from
+/// `init_levels` (must be sorted ascending, length `num_levels`).
+///
+/// The update is the classic two-step: thresholds at level midpoints, then
+/// each level moves to the conditional mean of its region. Data is sorted
+/// once; each iteration is then O(levels · log n + n) using prefix sums.
+/// Empty regions keep their previous level (standard fix; guarantees
+/// non-increasing MSE is preserved because an unassigned level can't hurt).
+pub fn lloyd_max_with_init(data: &[f32], init_levels: &[f32], opts: LloydMaxOpts) -> LloydMaxFit {
+    assert!(!init_levels.is_empty(), "need at least one level");
+    if data.is_empty() {
+        return LloydMaxFit { levels: init_levels.to_vec(), mse: 0.0, iters: 0 };
+    }
+    let mut sorted: Vec<f32> = data.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Prefix sums for O(1) range means.
+    let mut prefix = Vec::with_capacity(sorted.len() + 1);
+    prefix.push(0.0f64);
+    for &x in &sorted {
+        prefix.push(prefix.last().unwrap() + x as f64);
+    }
+
+    let mut levels: Vec<f32> = init_levels.to_vec();
+    debug_assert!(levels.windows(2).all(|w| w[0] <= w[1]), "init levels must be sorted");
+
+    let mut prev_mse = f64::INFINITY;
+    let mut iters = 0;
+    for it in 0..opts.max_iters {
+        iters = it + 1;
+        // Region boundaries: index of first datum belonging to level i.
+        // Threshold between level i-1 and i is their midpoint.
+        let k = levels.len();
+        let mut bounds = Vec::with_capacity(k + 1);
+        bounds.push(0usize);
+        for i in 1..k {
+            let thr = 0.5 * (levels[i - 1] + levels[i]);
+            bounds.push(sorted.partition_point(|&x| x < thr));
+        }
+        bounds.push(sorted.len());
+
+        // Conditional means.
+        for i in 0..k {
+            let (lo, hi) = (bounds[i], bounds[i + 1]);
+            if hi > lo {
+                levels[i] = ((prefix[hi] - prefix[lo]) / (hi - lo) as f64) as f32;
+            }
+            // else: empty region, keep previous level.
+        }
+        // Conditional means of disjoint ordered regions are ordered, but
+        // empty-region carry-over can break ties; restore order cheaply.
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+        let cur = quantize_mse(&sorted, &levels, &prefix);
+        if prev_mse.is_finite() && (prev_mse - cur) <= opts.rel_tol * prev_mse.max(1e-30) {
+            prev_mse = cur;
+            break;
+        }
+        prev_mse = cur;
+    }
+    LloydMaxFit { levels, mse: prev_mse, iters }
+}
+
+/// Fit with multi-start initialization, keeping the best of three inits:
+///
+/// 1. **Panter–Dite**: levels at equal-mass quantiles of `density^(1/3)`,
+///    the asymptotically MSE-optimal point density (Panter & Dite 1951);
+/// 2. **data quantiles** (robust for light tails);
+/// 3. **symmetric log grid** (FP-style companding over the data range).
+///
+/// Lloyd iterations are monotone non-increasing from any init, so the
+/// log-grid start guarantees the fit is at least as good as a max-scaled
+/// FP grid of the same level count — the paper's Fig. 8 / Table 11 claim,
+/// reproduced in tests. 1-D k-means is riddled with local optima on
+/// heavy-tailed LLM operands; single-init Lloyd-Max measurably loses to
+/// E3M3 there (observed 3–4×), which is why this is multi-start.
+pub fn lloyd_max(data: &[f32], bits: u32, opts: LloydMaxOpts) -> LloydMaxFit {
+    let k = 1usize << bits;
+    let mut inits = vec![panter_dite_init(data, k), quantile_init(data, k), log_grid_init(data, k)];
+    if let Some(fp) = fp_grid_init(data, bits) {
+        inits.push(fp);
+    }
+    inits
+        .iter()
+        .map(|init| lloyd_max_with_init(data, init, opts))
+        .min_by(|a, b| a.mse.partial_cmp(&b.mse).unwrap())
+        .unwrap()
+}
+
+/// Init from an actual max-scaled `EeMm` grid of matching level count
+/// (3 exponent bits, `bits-4` mantissa bits — e.g. E3M3 at 7 bits). One
+/// Lloyd step from this grid can only lower MSE, so the multi-start fit
+/// provably dominates the corresponding per-tensor FP quantizer.
+pub fn fp_grid_init(data: &[f32], bits: u32) -> Option<Vec<f32>> {
+    if !(4..=10).contains(&bits) || data.is_empty() {
+        return None;
+    }
+    let amax = crate::util::stats::amax(data);
+    if amax == 0.0 {
+        return None;
+    }
+    let be = 3u32;
+    let bm = bits - 1 - be;
+    let fmt = crate::formats::FloatFormat::new("lmgrid", be, bm);
+    let scale = amax / fmt.max_value;
+    let mut levels: Vec<f32> = fmt.enumerate_all().into_iter().map(|v| v * scale).collect();
+    // Pad to exactly 2^bits levels (the FP grid has 2^bits - 1 distinct
+    // values since +0/-0 coincide).
+    let k = 1usize << bits;
+    while levels.len() < k {
+        let top = *levels.last().unwrap();
+        levels.push(top + f32::EPSILON * (1.0 + top.abs()));
+    }
+    levels.truncate(k);
+    Some(levels)
+}
+
+/// Symmetric log-spaced init covering ~10 octaves below the data max —
+/// the shape of an `EeMm` floating-point grid.
+pub fn log_grid_init(data: &[f32], k: usize) -> Vec<f32> {
+    assert!(k >= 2);
+    let amax = crate::util::stats::amax(data);
+    if amax == 0.0 || data.is_empty() {
+        return quantile_init(data, k);
+    }
+    let h = k / 2;
+    let mut levels = Vec::with_capacity(k);
+    for i in 0..h {
+        let mag = if h == 1 { amax } else { amax * 2f32.powf(-10.0 * i as f32 / (h - 1) as f32) };
+        levels.push(mag);
+        levels.push(-mag);
+    }
+    if k % 2 == 1 {
+        levels.push(0.0);
+    } else if h >= 1 {
+        // Replace the smallest pair member with 0 for a zero level.
+        levels.pop();
+        levels.push(0.0);
+    }
+    levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for i in 1..k {
+        if levels[i] <= levels[i - 1] {
+            levels[i] = levels[i - 1] + f32::EPSILON * (1.0 + levels[i - 1].abs());
+        }
+    }
+    levels
+}
+
+/// Panter–Dite companding init: histogram the data, weight each bin by
+/// `count^(1/3)`, and place the k levels at centers of equal-weight
+/// segments of the cumulative weight.
+pub fn panter_dite_init(data: &[f32], k: usize) -> Vec<f32> {
+    assert!(k >= 1);
+    if data.is_empty() {
+        return (0..k).map(|i| i as f32).collect();
+    }
+    let lo = data.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !(hi > lo) {
+        // Constant data.
+        return quantile_init(data, k);
+    }
+    let nbins = (k * 64).clamp(256, 8192);
+    let width = (hi - lo) / nbins as f32;
+    let mut counts = vec![0u64; nbins];
+    for &x in data {
+        let b = (((x - lo) / width) as usize).min(nbins - 1);
+        counts[b] += 1;
+    }
+    // Cumulative density^(1/3) mass.
+    let weights: Vec<f64> = counts.iter().map(|&c| (c as f64).cbrt()).collect();
+    let total: f64 = weights.iter().sum();
+    let mut levels = Vec::with_capacity(k);
+    let mut acc = 0.0f64;
+    let mut bin = 0usize;
+    for i in 0..k {
+        let target = total * (i as f64 + 0.5) / k as f64;
+        while bin < nbins - 1 && acc + weights[bin] < target {
+            acc += weights[bin];
+            bin += 1;
+        }
+        // Interpolate within the bin.
+        let frac = if weights[bin] > 0.0 { ((target - acc) / weights[bin]).clamp(0.0, 1.0) } else { 0.5 };
+        levels.push(lo + width * (bin as f32 + frac as f32));
+    }
+    // Enforce strict ordering for downstream threshold logic.
+    for i in 1..k {
+        if levels[i] <= levels[i - 1] {
+            levels[i] = levels[i - 1] + f32::EPSILON * (1.0 + levels[i - 1].abs());
+        }
+    }
+    levels
+}
+
+/// Quantile initialization: k levels at evenly spaced data quantiles.
+pub fn quantile_init(data: &[f32], k: usize) -> Vec<f32> {
+    assert!(k >= 1);
+    if data.is_empty() {
+        return (0..k).map(|i| i as f32).collect();
+    }
+    let mut sorted: Vec<f32> = data.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let mut levels: Vec<f32> = (0..k)
+        .map(|i| {
+            let q = (i as f64 + 0.5) / k as f64;
+            sorted[((q * n as f64) as usize).min(n - 1)]
+        })
+        .collect();
+    // Degenerate data (many duplicates) can produce equal levels; spread
+    // them minimally so regions stay distinct.
+    for i in 1..k {
+        if levels[i] <= levels[i - 1] {
+            levels[i] = levels[i - 1] + f32::EPSILON * (1.0 + levels[i - 1].abs());
+        }
+    }
+    levels
+}
+
+/// Exact MSE of nearest-level quantization, O(k log n + n) given sorted
+/// data + prefix sums (uses sum of squares incrementally).
+fn quantize_mse(sorted: &[f32], levels: &[f32], prefix: &[f64]) -> f64 {
+    let n = sorted.len();
+    let k = levels.len();
+    let mut sq_err = 0.0f64;
+    let mut lo = 0usize;
+    for i in 0..k {
+        let hi = if i + 1 < k {
+            let thr = 0.5 * (levels[i] + levels[i + 1]);
+            sorted.partition_point(|&x| x < thr)
+        } else {
+            n
+        };
+        // sum (x - L)^2 = sum x^2 - 2 L sum x + count L^2
+        // We don't keep prefix x^2, so accumulate directly (still cheap:
+        // single pass over the data across all regions).
+        let l = levels[i] as f64;
+        for &x in &sorted[lo..hi] {
+            let d = x as f64 - l;
+            sq_err += d * d;
+        }
+        let _ = prefix; // kept for the range-mean path above
+        lo = hi;
+    }
+    sq_err / n as f64
+}
+
+/// Quantize a value to its nearest level (levels sorted ascending).
+#[inline]
+pub fn nearest_level(levels: &[f32], x: f32) -> f32 {
+    levels[nearest_level_index(levels, x)]
+}
+
+/// Index of the nearest level (levels sorted ascending). Binary search +
+/// neighbor comparison.
+#[inline]
+pub fn nearest_level_index(levels: &[f32], x: f32) -> usize {
+    let i = levels.partition_point(|&l| l < x);
+    if i == 0 {
+        0
+    } else if i == levels.len() {
+        levels.len() - 1
+    } else if (x - levels[i - 1]).abs() <= (levels[i] - x).abs() {
+        i - 1
+    } else {
+        i
+    }
+}
+
+/// MSE of quantizing `data` with `levels` (unsorted data OK).
+pub fn mse_with_levels(data: &[f32], levels: &[f32]) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    data.iter()
+        .map(|&x| {
+            let d = (x - nearest_level(levels, x)) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / data.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, ensure_le, forall, gen_operand};
+    use crate::util::rng::Pcg32;
+
+    fn opts() -> LloydMaxOpts {
+        LloydMaxOpts::default()
+    }
+
+    #[test]
+    fn two_point_data_exact() {
+        // With 1 bit (2 levels) and two clusters of points, levels land on
+        // the cluster means — the global optimum.
+        let data = [0.0f32, 0.1, -0.1, 10.0, 9.9, 10.1];
+        let fit = lloyd_max(&data, 1, opts());
+        assert!((fit.levels[0] - 0.0).abs() < 1e-6, "{:?}", fit.levels);
+        assert!((fit.levels[1] - 10.0).abs() < 1e-6);
+        // Residual MSE is the within-cluster variance: 4·0.01/6 ≈ 0.0067.
+        assert!((fit.mse - 0.04 / 6.0).abs() < 1e-6, "mse {}", fit.mse);
+    }
+
+    #[test]
+    fn enough_levels_gives_zero_mse() {
+        let data = [1.0f32, 2.0, 3.0, 4.0];
+        let fit = lloyd_max(&data, 2, opts());
+        assert!(fit.mse < 1e-12, "mse {}", fit.mse);
+        for (l, want) in fit.levels.iter().zip([1.0, 2.0, 3.0, 4.0]) {
+            assert!((l - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn nearest_level_correctness() {
+        let levels = [-1.0f32, 0.0, 2.0];
+        assert_eq!(nearest_level(&levels, -5.0), -1.0);
+        assert_eq!(nearest_level(&levels, -0.4), 0.0);
+        assert_eq!(nearest_level(&levels, 0.9), 0.0);
+        assert_eq!(nearest_level(&levels, 1.1), 2.0);
+        assert_eq!(nearest_level(&levels, 99.0), 2.0);
+        // Tie goes to the lower level.
+        assert_eq!(nearest_level(&levels, -0.5), -1.0);
+    }
+
+    #[test]
+    fn beats_uniform_grid_on_gaussian() {
+        let mut rng = Pcg32::seeded(17);
+        let data = rng.normal_vec(20_000);
+        let fit = lloyd_max(&data, 3, opts());
+        // Uniform grid over [-max, max] with 8 levels.
+        let m = crate::util::stats::amax(&data);
+        let uniform: Vec<f32> = (0..8).map(|i| -m + (2.0 * m) * (i as f32 + 0.5) / 8.0).collect();
+        let u_mse = mse_with_levels(&data, &uniform);
+        assert!(
+            fit.mse < u_mse * 0.9,
+            "lloyd-max {} not clearly better than uniform {}",
+            fit.mse,
+            u_mse
+        );
+    }
+
+    #[test]
+    fn warm_start_never_worse_than_init() {
+        let mut rng = Pcg32::seeded(18);
+        let data = crate::util::rng::llm_like_sample(&mut rng, 5_000, 0.05, 4.0);
+        let init = quantile_init(&data, 16);
+        let init_mse = mse_with_levels(&data, &init);
+        let fit = lloyd_max_with_init(&data, &init, opts());
+        assert!(fit.mse <= init_mse + 1e-12, "{} > {}", fit.mse, init_mse);
+    }
+
+    #[test]
+    fn matches_brute_force_on_small_input() {
+        // 1-D k-means with k=2 on 4 points: enumerate all 3 contiguous
+        // splits and compare.
+        let data = [0.0f32, 1.0, 4.0, 5.0];
+        let fit = lloyd_max(&data, 1, opts());
+        let mut best = f64::INFINITY;
+        for split in 1..4 {
+            let (a, b) = data.split_at(split);
+            let ma = a.iter().sum::<f32>() / a.len() as f32;
+            let mb = b.iter().sum::<f32>() / b.len() as f32;
+            let mse: f64 = a.iter().map(|x| ((x - ma) as f64).powi(2)).sum::<f64>()
+                + b.iter().map(|x| ((x - mb) as f64).powi(2)).sum::<f64>();
+            best = best.min(mse / 4.0);
+        }
+        assert!((fit.mse - best).abs() < 1e-9, "{} vs {}", fit.mse, best);
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let fit = lloyd_max(&[], 2, opts());
+        assert_eq!(fit.levels.len(), 4);
+        let fit = lloyd_max(&[3.0; 100], 2, opts());
+        assert!(fit.mse < 1e-12);
+        assert!(fit.levels.iter().any(|&l| (l - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn prop_mse_non_increasing_vs_fewer_iters() {
+        forall(19, "lloyd-max monotone in iterations", |rng| {
+            let n = 512 + rng.index(1024);
+            let data = gen_operand(rng, n);
+            let init = quantile_init(&data, 8);
+            let one = lloyd_max_with_init(&data, &init, LloydMaxOpts { max_iters: 1, rel_tol: 0.0 });
+            let many = lloyd_max_with_init(&data, &init, LloydMaxOpts { max_iters: 20, rel_tol: 0.0 });
+            ensure_le(many.mse, one.mse + 1e-9, "more iterations should not hurt")
+        });
+    }
+
+    #[test]
+    fn prop_levels_sorted_finite_and_no_worse_than_quantile_grid() {
+        forall(20, "levels sorted + dominate quantile init", |rng| {
+            let data = gen_operand(rng, 256);
+            let fit = lloyd_max(&data, 4, opts());
+            for w in fit.levels.windows(2) {
+                ensure(w[0] <= w[1], || format!("unsorted levels {:?}", w))?;
+            }
+            for &l in &fit.levels {
+                ensure(l.is_finite(), || format!("non-finite level {l}"))?;
+            }
+            // Multi-start result must dominate plain nearest-level
+            // quantization with the raw quantile grid.
+            let init = quantile_init(&data, 16);
+            let init_mse = mse_with_levels(&data, &init);
+            ensure_le(fit.mse, init_mse + 1e-12, "fit dominates quantile grid")
+        });
+    }
+}

@@ -1,0 +1,553 @@
+//! LO-BCQ: the paper's core contribution (§2.2–2.4).
+//!
+//! The algorithm alternates two locally optimal steps:
+//!   1. **Block clustering** (eq. 4–5): with codebooks fixed, map each
+//!      block to the codebook quantizing it with minimum squared error.
+//!   2. **Codebook update** (eq. 6): with clusters fixed, refit each
+//!      cluster's codebook by Lloyd-Max, warm-started from the previous
+//!      iteration's levels (paper §2.3).
+//!
+//! Both steps are individually non-increasing in total quantization MSE,
+//! so the objective is monotone (paper A.2); we assert this at runtime in
+//! debug builds and in property tests.
+//!
+//! All calibration and quantization happen in the *normalized domain*:
+//! each block array `A` is scaled by `s_A = (2^{B_c-1}-1)/max|A|` (eq. 7)
+//! so its maximum hits the top INT-`B_c` level, with `s_A` itself stored
+//! as an E4M3 code relative to a per-tensor scale `s_X` (eq. 8).
+
+use crate::formats::{FloatFormat, E4M3};
+use crate::quant::codebook::{Codebook, CodebookFamily};
+use crate::quant::kmeanspp;
+use crate::quant::lloyd_max::{lloyd_max_with_init, quantile_init, LloydMaxOpts};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// LO-BCQ configuration (Table 1 grid + bitwidth generalizations).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LobcqConfig {
+    /// Block length L_b (scalars sharing one codebook selector).
+    pub lb: usize,
+    /// Block-array length L_A (scalars sharing one scale factor).
+    pub la: usize,
+    /// Number of codebooks N_c.
+    pub nc: usize,
+    /// Index bits per scalar B (4 for W4A4; 3/2 for Table 5).
+    pub b: u32,
+    /// Codeword integer bits B_c (6 default; Table 10 ablates 4/6/8).
+    pub bc: u32,
+    /// Scale-factor format (E4M3, 8 bits; paper §2.4).
+    pub scale_format: FloatFormat,
+}
+
+impl LobcqConfig {
+    /// The paper's default shape at a given (L_b, N_c, L_A).
+    pub fn new(lb: usize, nc: usize, la: usize) -> LobcqConfig {
+        LobcqConfig { lb, la, nc, b: 4, bc: 6, scale_format: E4M3 }
+    }
+
+    /// Override index bits (weight-only W3/W2 configs, Table 5).
+    pub fn with_bits(mut self, b: u32) -> LobcqConfig {
+        self.b = b;
+        self
+    }
+
+    /// Override codeword bits (Table 10).
+    pub fn with_codeword_bits(mut self, bc: u32) -> LobcqConfig {
+        self.bc = bc;
+        self
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.lb >= 1, "L_b must be >= 1");
+        anyhow::ensure!(self.la % self.lb == 0, "L_A ({}) must be a multiple of L_b ({})", self.la, self.lb);
+        anyhow::ensure!(self.nc >= 1 && self.nc.is_power_of_two(), "N_c must be a power of two");
+        anyhow::ensure!((2..=8).contains(&self.b), "B out of range");
+        anyhow::ensure!((2..=8).contains(&self.bc), "B_c out of range");
+        Ok(())
+    }
+
+    /// Entries per codebook.
+    pub fn entries(&self) -> usize {
+        1 << self.b
+    }
+
+    /// Top INT-B_c level — the normalization target (eq. 7).
+    pub fn norm_max(&self) -> f32 {
+        ((1i32 << (self.bc - 1)) - 1) as f32
+    }
+
+    /// Effective bitwidth (eq. 9, without the negligible codebook term).
+    pub fn bitwidth(&self) -> f64 {
+        super::metrics::bitwidth_lobcq(self.b, self.nc, self.lb, self.scale_format.bits(), self.la, self.bc, 0)
+    }
+
+    /// Human-readable tag, e.g. `g64_nc8_lb8`.
+    pub fn tag(&self) -> String {
+        format!("g{}_nc{}_lb{}", self.la, self.nc, self.lb)
+    }
+}
+
+/// Codebook initialization strategy (Fig. 4 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitMethod {
+    /// K-means++ seeding over blocks (paper's proposed init).
+    KmeansPp,
+    /// Naive: random codebook levels (paper's baseline in Fig. 4).
+    Random,
+}
+
+/// Per-tensor normalization result: scalars scaled so each block array's
+/// max maps to `norm_max`, using E4M3-quantized relative scales.
+#[derive(Debug, Clone)]
+pub struct Normalized {
+    /// Normalized values, same layout as the source tensor.
+    pub values: Vec<f32>,
+    /// Effective multiplier per block array: `x_norm = x * scale[i]`.
+    /// Dequantization divides by it.
+    pub scales: Vec<f32>,
+    /// Per-tensor scale s_X (eq. 8 denominator).
+    pub s_x: f32,
+    pub la: usize,
+}
+
+/// Normalize a tensor's data per block array (eq. 7–8).
+///
+/// `s_X` is chosen so that the *largest* block-array scale in the tensor
+/// maps near 1.0 in E4M3 space: `s_X = (2^{B_c-1}-1)/max|X|`. Relative
+/// scales `s_A/s_X = max|X|/max|A| ≥ 1` then use E4M3's range upward
+/// (saturating at 448, i.e. block arrays 448× quieter than the tensor max
+/// clip their resolution — matching the paper's observation that E4M3
+/// range/resolution suffices across models, §4.2.1).
+pub fn normalize(data: &[f32], la: usize, cfg: &LobcqConfig) -> Normalized {
+    assert!(data.len() % la == 0, "data length {} not a multiple of L_A {}", data.len(), la);
+    let tensor_amax = crate::util::stats::amax(data);
+    let norm_max = cfg.norm_max();
+    // Degenerate all-zero tensor: identity scales.
+    let s_x = if tensor_amax > 0.0 { norm_max / tensor_amax } else { 1.0 };
+
+    let n_arrays = data.len() / la;
+    let mut scales = Vec::with_capacity(n_arrays);
+    let mut values = Vec::with_capacity(data.len());
+    for a in 0..n_arrays {
+        let arr = &data[a * la..(a + 1) * la];
+        let amax = crate::util::stats::amax(arr);
+        if amax == 0.0 {
+            // All-zero block array: eq. 7 is undefined (max|A| = 0). The
+            // stored scale code is 0, and decode's inverse-scale guard
+            // reproduces exact zeros (bit-exact with python + kernel).
+            scales.push(0.0);
+            values.extend(std::iter::repeat(0.0).take(la));
+            continue;
+        }
+        let s_a = norm_max / amax;
+        // eq. 8: store ŝ_A = Q_E4M3(s_A / s_X); effective scale ŝ_A·s_X.
+        let rel = cfg.scale_format.quantize(s_a / s_x);
+        let eff = rel * s_x;
+        scales.push(eff);
+        for &x in arr {
+            values.push(x * eff);
+        }
+    }
+    Normalized { values, scales, s_x, la }
+}
+
+/// Collect normalized blocks as slices (calibration input).
+pub fn normalized_blocks<'a>(norm: &'a Normalized, lb: usize) -> Vec<&'a [f32]> {
+    norm.values.chunks_exact(lb).collect()
+}
+
+/// Calibration output: the codebook family plus the per-iteration MSE
+/// trace (Fig. 4 / Fig. 9) in the normalized domain.
+#[derive(Debug, Clone)]
+pub struct CalibResult {
+    pub family: CodebookFamily,
+    /// J^(n): total normalized-domain MSE after each iteration.
+    pub trace: Vec<f64>,
+    pub iters: usize,
+}
+
+/// Calibration options.
+#[derive(Debug, Clone, Copy)]
+pub struct CalibOpts {
+    pub max_iters: usize,
+    /// Stop when relative J improvement falls below this.
+    pub rel_tol: f64,
+    pub init: InitMethod,
+}
+
+impl Default for CalibOpts {
+    fn default() -> Self {
+        // Paper: converges at M <= 100.
+        CalibOpts { max_iters: 100, rel_tol: 1e-6, init: InitMethod::KmeansPp }
+    }
+}
+
+/// Run LO-BCQ on normalized calibration blocks, producing `cfg.nc`
+/// codebooks of `2^cfg.b` entries each. Deterministic given `rng`.
+pub fn calibrate_blocks(blocks: &[&[f32]], cfg: &LobcqConfig, opts: CalibOpts, rng: &mut Pcg32) -> CalibResult {
+    cfg.validate().expect("invalid LobcqConfig");
+    assert!(!blocks.is_empty(), "no calibration blocks");
+    let entries = cfg.entries();
+    let lm_opts = LloydMaxOpts::default();
+
+    // ---- initialization (paper §2.3, Fig. 4) ----
+    let mut books: Vec<Codebook> = match opts.init {
+        InitMethod::KmeansPp => {
+            let seeds = kmeanspp::kmeanspp_seeds(blocks, cfg.nc, rng);
+            let assign = kmeanspp::assign_to_seeds(blocks, &seeds);
+            (0..cfg.nc)
+                .map(|c| {
+                    let cluster: Vec<f32> = blocks
+                        .iter()
+                        .zip(&assign)
+                        .filter(|(_, &a)| a == c)
+                        .flat_map(|(b, _)| b.iter().copied())
+                        .collect();
+                    let init = quantile_init(&cluster, entries);
+                    Codebook::new(lloyd_max_with_init(&cluster, &init, lm_opts).levels)
+                })
+                .collect()
+        }
+        InitMethod::Random => {
+            // Naive: levels drawn uniformly over the normalized range.
+            let m = cfg.norm_max();
+            (0..cfg.nc)
+                .map(|_| Codebook::new((0..entries).map(|_| rng.range_f32(-m, m)).collect()))
+                .collect()
+        }
+    };
+
+    let total_scalars: usize = blocks.iter().map(|b| b.len()).sum();
+    let mut trace: Vec<f64> = Vec::new();
+    let mut assign: Vec<usize> = vec![0; blocks.len()];
+
+    for iter in 0..opts.max_iters {
+        // ---- step 1: block clustering (eq. 4–5) ----
+        let fam = CodebookFamily::new(books.clone(), cfg.b);
+        for (bi, block) in blocks.iter().enumerate() {
+            assign[bi] = fam.select(block);
+        }
+
+        // ---- step 2: per-cluster Lloyd-Max (eq. 6), warm-started ----
+        let mut cluster_data: Vec<Vec<f32>> = vec![Vec::new(); cfg.nc];
+        for (bi, block) in blocks.iter().enumerate() {
+            cluster_data[assign[bi]].extend_from_slice(block);
+        }
+        for c in 0..cfg.nc {
+            if cluster_data[c].is_empty() {
+                continue; // empty cluster keeps its codebook (no MSE impact)
+            }
+            let fit = lloyd_max_with_init(&cluster_data[c], &books[c].levels, lm_opts);
+            books[c] = Codebook::new(fit.levels);
+        }
+
+        // ---- J^(n): total MSE over all blocks with updated books ----
+        let mut sq = 0.0f64;
+        for (bi, block) in blocks.iter().enumerate() {
+            sq += books[assign[bi]].block_sq_err(block);
+        }
+        let j = sq / total_scalars as f64;
+        if let Some(&prev) = trace.last() {
+            debug_assert!(
+                j <= prev * (1.0 + 1e-9) + 1e-12,
+                "LO-BCQ MSE increased: {prev} -> {j} at iter {iter}"
+            );
+            if prev - j <= opts.rel_tol * prev.max(1e-30) {
+                trace.push(j);
+                break;
+            }
+        }
+        trace.push(j);
+    }
+
+    let iters = trace.len();
+    CalibResult { family: CodebookFamily::new(books, cfg.b), trace, iters }
+}
+
+/// Calibrate directly from one or more tensors (each normalized
+/// independently, blocks pooled — the universal-calibration path).
+pub fn calibrate_tensors(tensors: &[&Tensor], cfg: &LobcqConfig, opts: CalibOpts, rng: &mut Pcg32) -> CalibResult {
+    let norms: Vec<Normalized> = tensors.iter().map(|t| normalize(&t.data, cfg.la, cfg)).collect();
+    let blocks: Vec<&[f32]> = norms.iter().flat_map(|n| n.values.chunks_exact(cfg.lb)).collect();
+    calibrate_blocks(&blocks, cfg, opts, rng)
+}
+
+/// Fake-quantize a tensor with a (calibrated, codeword-quantized) family:
+/// normalize → select codebook per block → round scalars to codewords →
+/// denormalize. Returns the dequantized tensor. This is numerically
+/// identical to the encode→decode path in `encode.rs` (tested) and to the
+/// Pallas kernel (parity-tested at build time).
+pub fn fake_quantize(data: &[f32], cfg: &LobcqConfig, family: &CodebookFamily) -> Vec<f32> {
+    let norm = normalize(data, cfg.la, cfg);
+    let mut out = vec![0.0f32; data.len()];
+    let la = cfg.la;
+    let lb = cfg.lb;
+
+    // Per-array worker (the §Perf hot loop: threshold-count encode +
+    // early-exit select, no allocation).
+    let run_arrays = |arrays: &[f32], scales: &[f32], out: &mut [f32]| {
+        for (ai, arr) in arrays.chunks_exact(la).enumerate() {
+            let scale = scales[ai];
+            let inv = if scale != 0.0 { 1.0 / scale } else { 0.0 };
+            let out_arr = &mut out[ai * la..(ai + 1) * la];
+            for (bi, block) in arr.chunks_exact(lb).enumerate() {
+                let sel = family.select(block);
+                let book = &family.books[sel];
+                for (j, &v) in block.iter().enumerate() {
+                    out_arr[bi * lb + j] = book.quantize(v) * inv;
+                }
+            }
+        }
+    };
+
+    // Thread-parallel over block arrays for large tensors (§Perf pass 3).
+    let n_arrays = norm.scales.len();
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    if data.len() < 1 << 14 || threads == 1 {
+        run_arrays(&norm.values, &norm.scales, &mut out);
+    } else {
+        let chunk_arrays = n_arrays.div_ceil(threads);
+        std::thread::scope(|s| {
+            let values = &norm.values;
+            let scales = &norm.scales;
+            for (ti, out_chunk) in out.chunks_mut(chunk_arrays * la).enumerate() {
+                let a0 = ti * chunk_arrays;
+                let a1 = (a0 + out_chunk.len() / la).min(n_arrays);
+                let run = &run_arrays;
+                s.spawn(move || {
+                    run(&values[a0 * la..a1 * la], &scales[a0..a1], out_chunk);
+                });
+            }
+        });
+    }
+    out
+}
+
+/// Fake-quantize an entire tensor (shape preserved).
+pub fn fake_quantize_tensor(t: &Tensor, cfg: &LobcqConfig, family: &CodebookFamily) -> Tensor {
+    Tensor::new(&t.shape, fake_quantize(&t.data, cfg, family))
+}
+
+/// End-to-end convenience: calibrate on the tensor itself (weights path)
+/// with codeword quantization, then fake-quantize. Returns (result, NMSE).
+pub fn self_calibrated_quantize(t: &Tensor, cfg: &LobcqConfig, seed: u64) -> (Tensor, f64) {
+    let mut rng = Pcg32::seeded(seed);
+    let calib = calibrate_tensors(&[t], cfg, CalibOpts::default(), &mut rng);
+    let family = calib.family.quantize_codewords(cfg.bc);
+    let q = fake_quantize_tensor(t, cfg, &family);
+    let nmse = crate::util::stats::nmse(&t.data, &q.data);
+    (q, nmse)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, ensure_le, forall, gen_operand};
+    use crate::util::rng::llm_like_sample;
+
+    fn cfg_small() -> LobcqConfig {
+        LobcqConfig::new(8, 4, 64)
+    }
+
+    fn calib_data(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        llm_like_sample(&mut rng, n, 0.05, 4.0)
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(LobcqConfig::new(8, 4, 64).validate().is_ok());
+        assert!(LobcqConfig::new(8, 3, 64).validate().is_err()); // Nc not pow2
+        assert!(LobcqConfig::new(8, 4, 60).validate().is_err()); // La % Lb != 0
+        assert!(LobcqConfig::new(8, 4, 64).with_bits(9).validate().is_err());
+    }
+
+    #[test]
+    fn normalization_hits_norm_max() {
+        let cfg = cfg_small();
+        let data = calib_data(30, 256);
+        let norm = normalize(&data, cfg.la, &cfg);
+        for arr in norm.values.chunks_exact(cfg.la) {
+            let amax = crate::util::stats::amax(arr);
+            // E4M3 relative-scale rounding perturbs by ≤ 2^-4 relative.
+            assert!(amax <= cfg.norm_max() * 1.07, "array max {amax}");
+            assert!(amax >= cfg.norm_max() * 0.9, "array max {amax} too small");
+        }
+    }
+
+    #[test]
+    fn normalization_round_trips() {
+        let cfg = cfg_small();
+        let data = calib_data(31, 256);
+        let norm = normalize(&data, cfg.la, &cfg);
+        for (ai, arr) in norm.values.chunks_exact(cfg.la).enumerate() {
+            for (j, &v) in arr.iter().enumerate() {
+                let back = v / norm.scales[ai];
+                assert!((back - data[ai * cfg.la + j]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn normalize_all_zero_tensor() {
+        let cfg = cfg_small();
+        let norm = normalize(&vec![0.0; 128], cfg.la, &cfg);
+        assert!(norm.values.iter().all(|&v| v == 0.0));
+        // Zero arrays get scale 0 (decode guard reproduces exact zeros).
+        assert!(norm.scales.iter().all(|&s| s == 0.0));
+    }
+
+    #[test]
+    fn zero_arrays_fake_quantize_to_zero() {
+        let cfg = cfg_small();
+        let mut data = calib_data(90, 256);
+        data[..cfg.la].fill(0.0); // first block array all-zero
+        let t = Tensor::new(&[4, 64], data);
+        let (q, _) = self_calibrated_quantize(&t, &cfg, 13);
+        assert!(q.data[..cfg.la].iter().all(|&v| v == 0.0), "zero array leaked values");
+    }
+
+    #[test]
+    fn calibration_trace_monotone() {
+        let cfg = cfg_small();
+        let data = calib_data(32, 8 * 1024);
+        let norm = normalize(&data, cfg.la, &cfg);
+        let blocks = normalized_blocks(&norm, cfg.lb);
+        let mut rng = Pcg32::seeded(1);
+        let res = calibrate_blocks(&blocks, &cfg, CalibOpts { max_iters: 30, rel_tol: 0.0, init: InitMethod::KmeansPp }, &mut rng);
+        assert!(res.trace.len() >= 2);
+        for w in res.trace.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-9) + 1e-12, "MSE increased: {:?}", w);
+        }
+    }
+
+    #[test]
+    fn kmeanspp_init_beats_random() {
+        // Fig. 4's claim: proposed init converges to lower NMSE.
+        let cfg = LobcqConfig::new(8, 16, 64);
+        let data = calib_data(33, 16 * 1024);
+        let norm = normalize(&data, cfg.la, &cfg);
+        let blocks = normalized_blocks(&norm, cfg.lb);
+        let run = |init| {
+            let mut rng = Pcg32::seeded(2);
+            calibrate_blocks(&blocks, &cfg, CalibOpts { max_iters: 25, rel_tol: 0.0, init }, &mut rng)
+                .trace
+                .last()
+                .copied()
+                .unwrap()
+        };
+        let pp = run(InitMethod::KmeansPp);
+        let naive = run(InitMethod::Random);
+        assert!(pp <= naive, "kmeans++ {pp} vs random {naive}");
+    }
+
+    #[test]
+    fn more_codebooks_lower_mse() {
+        // §4.3: larger Nc → better representation.
+        let data = calib_data(34, 16 * 1024);
+        let mut last = f64::INFINITY;
+        for nc in [1usize, 4, 16] {
+            let cfg = LobcqConfig { nc, ..cfg_small() };
+            let norm = normalize(&data, cfg.la, &cfg);
+            let blocks = normalized_blocks(&norm, cfg.lb);
+            let mut rng = Pcg32::seeded(3);
+            let res = calibrate_blocks(&blocks, &cfg, CalibOpts::default(), &mut rng);
+            let j = *res.trace.last().unwrap();
+            assert!(j <= last * 1.02, "Nc={nc}: {j} vs previous {last}");
+            last = j;
+        }
+    }
+
+    #[test]
+    fn fake_quantize_reduces_to_codebook_grid() {
+        let cfg = cfg_small();
+        let t = Tensor::new(&[4, 64], calib_data(35, 256));
+        let (q, nmse) = self_calibrated_quantize(&t, &cfg, 7);
+        assert_eq!(q.shape, t.shape);
+        assert!(nmse > 0.0 && nmse < 0.05, "nmse {nmse}");
+        // Every dequantized value equals codeword / scale: verify the
+        // *normalized* values land exactly on integer INT6 codewords.
+        let norm = normalize(&t.data, cfg.la, &cfg);
+        let qnorm = normalize(&q.data, cfg.la, &cfg);
+        let _ = (norm, qnorm); // scales may re-derive differently; grid check below
+        // Weaker invariant that is exactly true: quantizing twice with the
+        // same family is idempotent.
+        let mut rng = Pcg32::seeded(7);
+        let calib = calibrate_tensors(&[&t], &cfg, CalibOpts::default(), &mut rng);
+        let family = calib.family.quantize_codewords(cfg.bc);
+        let q1 = fake_quantize_tensor(&t, &cfg, &family);
+        let q2 = fake_quantize_tensor(&q1, &cfg, &family);
+        for (a, b) in q1.data.iter().zip(&q2.data) {
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn lobcq_beats_single_codebook() {
+        // The whole point of block clustering: Nc=8 should beat Nc=1
+        // (plain per-block-array Lloyd-Max) on mixture data.
+        let data = calib_data(36, 32 * 1024);
+        let t = Tensor::new(&[32, 1024], data);
+        let (_, nmse_multi) = self_calibrated_quantize(&t, &LobcqConfig::new(8, 8, 64), 9);
+        let (_, nmse_single) = self_calibrated_quantize(&t, &LobcqConfig::new(8, 1, 64), 9);
+        assert!(
+            nmse_multi < nmse_single,
+            "Nc=8 nmse {nmse_multi} should beat Nc=1 {nmse_single}"
+        );
+    }
+
+    #[test]
+    fn sub4bit_configs_work() {
+        let t = Tensor::new(&[8, 128], calib_data(37, 1024));
+        for b in [2u32, 3] {
+            let cfg = LobcqConfig::new(8, 4, 64).with_bits(b);
+            let (_, nmse) = self_calibrated_quantize(&t, &cfg, 11);
+            assert!(nmse.is_finite() && nmse > 0.0, "B={b} nmse {nmse}");
+        }
+        // Fewer index bits must hurt.
+        let cfg4 = LobcqConfig::new(8, 4, 64);
+        let cfg2 = cfg4.with_bits(2);
+        let (_, n4) = self_calibrated_quantize(&t, &cfg4, 11);
+        let (_, n2) = self_calibrated_quantize(&t, &cfg2, 11);
+        assert!(n2 > n4, "B=2 ({n2}) should be worse than B=4 ({n4})");
+    }
+
+    #[test]
+    fn prop_monotone_mse_theorem() {
+        // Paper A.2, as a property over random distributions.
+        forall(38, "J^(n+1) <= J^(n)", |rng| {
+            let cfg = LobcqConfig::new(4, 4, 16);
+            let n = 16 * (8 + rng.index(32));
+            let data = gen_operand(rng, n);
+            let norm = normalize(&data, cfg.la, &cfg);
+            let blocks: Vec<&[f32]> = norm.values.chunks_exact(cfg.lb).collect();
+            let res = calibrate_blocks(
+                &blocks,
+                &cfg,
+                CalibOpts { max_iters: 10, rel_tol: 0.0, init: InitMethod::Random },
+                rng,
+            );
+            for w in res.trace.windows(2) {
+                ensure_le(w[1], w[0] * (1.0 + 1e-9) + 1e-12, "monotone MSE")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fake_quantize_preserves_shape_and_finiteness() {
+        forall(39, "fake-quantize well-formed", |rng| {
+            let cfg = LobcqConfig::new(4, 2, 16);
+            let n = 16 * (1 + rng.index(16));
+            let data = gen_operand(rng, n);
+            let t = Tensor::new(&[n / 16, 16], data);
+            let mut crng = Pcg32::seeded(rng.next_u64());
+            let calib = calibrate_tensors(&[&t], &cfg, CalibOpts { max_iters: 8, rel_tol: 1e-6, init: InitMethod::KmeansPp }, &mut crng);
+            let fam = calib.family.quantize_codewords(cfg.bc);
+            let q = fake_quantize_tensor(&t, &cfg, &fam);
+            ensure(q.data.len() == t.data.len(), || "length changed".into())?;
+            ensure(q.data.iter().all(|v| v.is_finite()), || "non-finite output".into())
+        });
+    }
+}

@@ -1,0 +1,22 @@
+//! The quantization core: LO-BCQ (paper §2) plus every baseline it is
+//! evaluated against (§4.1, appendix A.5).
+//!
+//! Data flow:
+//! ```text
+//! tensor ──normalize (eq.7–8)──► blocks ──calibrate (eq.4–6)──► codebooks
+//!    │                                                            │
+//!    └──encode (Fig.5: scales+selectors+indices) ◄── quantize_codewords
+//! ```
+
+pub mod baselines;
+pub mod calib;
+pub mod codebook;
+pub mod encode;
+pub mod kmeanspp;
+pub mod lloyd_max;
+pub mod lobcq;
+pub mod metrics;
+
+pub use calib::{CalibScope, LobcqQuantizer};
+pub use codebook::{Codebook, CodebookFamily};
+pub use lobcq::{CalibOpts, InitMethod, LobcqConfig};

@@ -1,0 +1,200 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
+//! CPU PJRT client, caches executables and weight literals, and runs
+//! model forwards / standalone ops.
+//!
+//! PJRT wrapper types hold raw pointers (neither `Send` nor `Sync`), so
+//! an [`Engine`] is single-thread-confined; the serving coordinator talks
+//! to it through [`super::service::RuntimeService`], which owns the
+//! engine on a dedicated thread (PJRT-CPU itself multithreads the
+//! compute internally).
+
+use crate::model::ModelConfig;
+use crate::runtime::manifest::{ArtifactEntry, Manifest};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exe_cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    weight_cache: HashMap<String, Vec<xla::Literal>>,
+}
+
+/// Logits result: row-major (batch * t, vocab).
+#[derive(Debug, Clone)]
+pub struct Logits {
+    pub data: Vec<f32>,
+    pub batch: usize,
+    pub t: usize,
+    pub vocab: usize,
+}
+
+impl Logits {
+    /// Log-softmax probability of `token` at (batch row b, position p).
+    pub fn log_prob(&self, b: usize, p: usize, token: u32) -> f64 {
+        let row = &self.data[(b * self.t + p) * self.vocab..(b * self.t + p + 1) * self.vocab];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let logsum: f64 = row.iter().map(|&x| ((x as f64) - max).exp()).sum::<f64>().ln() + max;
+        row[token as usize] as f64 - logsum
+    }
+}
+
+impl Engine {
+    pub fn new(manifest: Manifest) -> anyhow::Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { manifest, client, exe_cache: HashMap::new(), weight_cache: HashMap::new() })
+    }
+
+    pub fn from_dir(dir: &std::path::Path) -> anyhow::Result<Engine> {
+        Engine::new(Manifest::load(dir)?)
+    }
+
+    /// Compile (or fetch from cache) an artifact by registry key.
+    fn executable(&mut self, entry: &ArtifactEntry) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        let key = entry.key();
+        if !self.exe_cache.contains_key(&key) {
+            let path = self.manifest.artifact_path(entry);
+            let proto = xla::HloModuleProto::from_text_file(&path.to_string_lossy().to_string())?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.exe_cache.insert(key.clone(), exe);
+        }
+        Ok(&self.exe_cache[&key])
+    }
+
+    /// Upload a weight set under a cache key (e.g. `m/bf16` or
+    /// `m/w-lobcq-g64nc8`). Order must match `cfg.param_shapes()`.
+    pub fn register_weights(&mut self, key: &str, cfg: &ModelConfig, tensors: &[&Tensor]) -> anyhow::Result<()> {
+        let shapes = cfg.param_shapes();
+        anyhow::ensure!(tensors.len() == shapes.len(), "expected {} weights, got {}", shapes.len(), tensors.len());
+        let mut lits = Vec::with_capacity(tensors.len());
+        for (t, (name, shape)) in tensors.iter().zip(&shapes) {
+            anyhow::ensure!(&t.shape == shape, "weight '{name}' shape {:?} != {:?}", t.shape, shape);
+            lits.push(tensor_literal(t)?);
+        }
+        self.weight_cache.insert(key.to_string(), lits);
+        Ok(())
+    }
+
+    pub fn has_weights(&self, key: &str) -> bool {
+        self.weight_cache.contains_key(key)
+    }
+
+    /// Register the frozen codebook family tensor `(Nc, 16)` for LO-BCQ
+    /// artifacts (the paper's ≤0.19 KB runtime-resident table).
+    pub fn register_books(&mut self, key: &str, books: &Tensor) -> anyhow::Result<()> {
+        anyhow::ensure!(books.rank() == 2, "books must be (Nc, entries)");
+        self.weight_cache.insert(format!("books/{key}"), vec![tensor_literal(books)?]);
+        Ok(())
+    }
+
+    /// Run a model artifact: `tokens` is (batch * t) row-major. The
+    /// weight set (and, for LO-BCQ variants, the `books_key` family)
+    /// must have been registered.
+    pub fn run_model(
+        &mut self,
+        entry: &ArtifactEntry,
+        weights_key: &str,
+        books_key: Option<&str>,
+        tokens: &[u32],
+    ) -> anyhow::Result<Logits> {
+        let (batch, t) = (entry.batch, entry.t);
+        anyhow::ensure!(tokens.len() == batch * t, "need {} tokens, got {}", batch * t, tokens.len());
+        let vocab = self.manifest.vocab;
+        let toks_i32: Vec<i32> = tokens.iter().map(|&x| x as i32).collect();
+        let tok_lit = xla::Literal::vec1(&toks_i32).reshape(&[batch as i64, t as i64])?;
+
+        // Assemble inputs: tokens, [books], then cached weight literals.
+        // (Compile first: `executable` borrows self mutably.)
+        anyhow::ensure!(self.weight_cache.contains_key(weights_key), "weights '{weights_key}' not registered");
+        let books_cache_key = match (entry.books_nc, books_key) {
+            (Some(_), Some(k)) => Some(format!("books/{k}")),
+            (Some(nc), None) => anyhow::bail!("artifact {} needs a books family (Nc={nc})", entry.key()),
+            (None, _) => None,
+        };
+        if let Some(ref bk) = books_cache_key {
+            anyhow::ensure!(self.weight_cache.contains_key(bk), "books '{bk}' not registered");
+        }
+        self.executable(entry)?;
+        let exe = &self.exe_cache[&entry.key()];
+        let weights = &self.weight_cache[weights_key];
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(2 + weights.len());
+        inputs.push(&tok_lit);
+        if let Some(ref bk) = books_cache_key {
+            inputs.push(&self.weight_cache[bk][0]);
+        }
+        inputs.extend(weights.iter());
+
+        let result = exe.execute::<&xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        anyhow::ensure!(data.len() == batch * t * vocab, "logits size {} != {}", data.len(), batch * t * vocab);
+        Ok(Logits { data, batch, t, vocab })
+    }
+
+    /// Run the standalone LO-BCQ quantize op (`op_lobcq_quant`): the
+    /// rust↔kernel parity surface. `x` is (8, 256), `books` (8, 16).
+    pub fn run_quant_op(&mut self, x: &Tensor, books: &Tensor) -> anyhow::Result<Tensor> {
+        let op = self
+            .manifest
+            .ops
+            .get("op_lobcq_quant")
+            .ok_or_else(|| anyhow::anyhow!("op_lobcq_quant missing from manifest"))?
+            .clone();
+        let path = self.manifest.dir.join(&op.file);
+        let key = "op/lobcq_quant".to_string();
+        if !self.exe_cache.contains_key(&key) {
+            let proto = xla::HloModuleProto::from_text_file(&path.to_string_lossy().to_string())?;
+            let exe = self.client.compile(&xla::XlaComputation::from_proto(&proto))?;
+            self.exe_cache.insert(key.clone(), exe);
+        }
+        let xl = tensor_literal(x)?;
+        let bl = tensor_literal(books)?;
+        let exe = &self.exe_cache[&key];
+        let result = exe.execute::<&xla::Literal>(&[&xl, &bl])?[0][0].to_literal_sync()?;
+        let data = result.to_tuple1()?.to_vec::<f32>()?;
+        Ok(Tensor::new(&x.shape, data))
+    }
+
+    /// Run the standalone Pallas GEMM op (`op_gemm`), a (32,256)x(256,128).
+    pub fn run_gemm_op(&mut self, a: &Tensor, b: &Tensor) -> anyhow::Result<Tensor> {
+        let op = self
+            .manifest
+            .ops
+            .get("op_gemm")
+            .ok_or_else(|| anyhow::anyhow!("op_gemm missing from manifest"))?
+            .clone();
+        let key = "op/gemm".to_string();
+        if !self.exe_cache.contains_key(&key) {
+            let path = self.manifest.dir.join(&op.file);
+            let proto = xla::HloModuleProto::from_text_file(&path.to_string_lossy().to_string())?;
+            let exe = self.client.compile(&xla::XlaComputation::from_proto(&proto))?;
+            self.exe_cache.insert(key.clone(), exe);
+        }
+        let al = tensor_literal(a)?;
+        let bl = tensor_literal(b)?;
+        let exe = &self.exe_cache[&key];
+        let result = exe.execute::<&xla::Literal>(&[&al, &bl])?[0][0].to_literal_sync()?;
+        let data = result.to_tuple1()?.to_vec::<f32>()?;
+        Ok(Tensor::new(&[a.shape[0], b.shape[1]], data))
+    }
+}
+
+/// Tensor → PJRT literal with the tensor's shape.
+pub fn tensor_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logits_log_prob_is_normalized() {
+        let l = Logits { data: vec![0.0, 1.0, 2.0, -1.0], batch: 1, t: 1, vocab: 4 };
+        let total: f64 = (0..4u32).map(|tok| l.log_prob(0, 0, tok).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9, "{total}");
+        assert!(l.log_prob(0, 0, 2) > l.log_prob(0, 0, 3));
+    }
+}

@@ -1,0 +1,168 @@
+//! `artifacts/manifest.json` parsing — the contract between the python
+//! build path (`compile/aot.py`) and the Rust runtime.
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lowered model graph.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub size: String,
+    pub variant: String,
+    pub batch: usize,
+    pub t: usize,
+    /// For LO-BCQ activation-quant graphs: the codebook family size; the
+    /// graph takes a `(books_nc, 16)` f32 input right after tokens.
+    pub books_nc: Option<usize>,
+}
+
+impl ArtifactEntry {
+    /// Registry key, e.g. `m/lobcq_g64_nc8/b8`.
+    pub fn key(&self) -> String {
+        format!("{}/{}/b{}", self.size, self.variant, self.batch)
+    }
+}
+
+/// Standalone op artifact metadata.
+#[derive(Debug, Clone)]
+pub struct OpEntry {
+    pub file: String,
+    pub meta: Json,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub max_t: usize,
+    pub val_seed: u64,
+    pub val_tokens: usize,
+    pub val_fingerprint: u64,
+    pub models: BTreeMap<String, ModelConfig>,
+    pub weight_files: BTreeMap<String, String>,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub ops: BTreeMap<String, OpEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::from_file(&dir.join("manifest.json"))?;
+        let corpus = j.get("corpus")?;
+        let mut models = BTreeMap::new();
+        let mut weight_files = BTreeMap::new();
+        if let Json::Obj(m) = j.get("models")? {
+            for (name, entry) in m {
+                models.insert(name.clone(), ModelConfig::from_manifest(name, entry)?);
+                weight_files.insert(name.clone(), entry.get("weights_bin")?.as_str()?.to_string());
+            }
+        }
+        let artifacts = j
+            .get("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactEntry {
+                    file: a.get("file")?.as_str()?.to_string(),
+                    size: a.get("size")?.as_str()?.to_string(),
+                    variant: a.get("variant")?.as_str()?.to_string(),
+                    batch: a.get("batch")?.as_usize()?,
+                    t: a.get("t")?.as_usize()?,
+                    books_nc: a.opt("books_nc").map(|v| v.as_usize()).transpose()?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let mut ops = BTreeMap::new();
+        if let Json::Obj(m) = j.get("ops")? {
+            for (name, entry) in m {
+                ops.insert(
+                    name.clone(),
+                    OpEntry { file: entry.get("file")?.as_str()?.to_string(), meta: entry.clone() },
+                );
+            }
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            vocab: j.get("vocab")?.as_usize()?,
+            max_t: j.get("max_t")?.as_usize()?,
+            val_seed: corpus.get("val_seed")?.as_u64()?,
+            val_tokens: corpus.get("val_tokens")?.as_usize()?,
+            // Stored as a string: u64 fingerprints exceed f64's 2^53
+            // integer range and would be corrupted as JSON numbers.
+            val_fingerprint: corpus.get("val_fingerprint")?.as_str()?.parse()?,
+            models,
+            weight_files,
+            artifacts,
+            ops,
+        })
+    }
+
+    /// Find an artifact by (size, variant, batch).
+    pub fn find(&self, size: &str, variant: &str, batch: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.size == size && a.variant == variant && a.batch == batch)
+    }
+
+    pub fn artifact_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    pub fn weights_path(&self, size: &str) -> anyhow::Result<PathBuf> {
+        Ok(self.dir.join(self.weight_files.get(size).ok_or_else(|| {
+            anyhow::anyhow!("no weights for model size '{size}'")
+        })?))
+    }
+
+    /// Default artifacts directory (next to the binary / repo root).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from("artifacts")
+    }
+
+    /// Verify the corpus generator matches the one the artifacts were
+    /// built with (token-exact cross-language check).
+    pub fn check_corpus_parity(&self) -> anyhow::Result<()> {
+        let toks = crate::data::corpus::generate(self.val_seed, self.val_tokens);
+        let fp = crate::data::corpus::fingerprint(&toks);
+        anyhow::ensure!(
+            fp == self.val_fingerprint,
+            "corpus fingerprint mismatch: rust {fp:#x} vs manifest {:#x} — the \
+             rust and python generators have diverged",
+            self.val_fingerprint
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_available() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        let Some(m) = manifest_available() else {
+            eprintln!("skipping: no artifacts/manifest.json (run `make artifacts`)");
+            return;
+        };
+        assert_eq!(m.vocab, crate::data::corpus::VOCAB as usize);
+        assert!(m.models.contains_key("s"));
+        assert!(m.find("s", "bf16", 8).is_some());
+        assert!(m.ops.contains_key("op_lobcq_quant"));
+    }
+
+    #[test]
+    fn corpus_parity_with_manifest() {
+        let Some(m) = manifest_available() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        m.check_corpus_parity().expect("rust corpus generator diverged from python");
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: HLO-text artifact loading + compilation + execution
+//! (pattern from /opt/xla-example/load_hlo). `Engine` is the single-
+//! threaded core; `RuntimeService` confines it to an executor thread and
+//! hands out `Send + Sync` clients for the coordinator.
+
+pub mod engine;
+pub mod manifest;
+pub mod service;
+
+pub use engine::{Engine, Logits};
+pub use manifest::{ArtifactEntry, Manifest};
+pub use service::{RuntimeClient, RuntimeService};

@@ -1,0 +1,167 @@
+//! Thread-confined runtime service: owns the PJRT [`Engine`] on a
+//! dedicated executor thread and exposes a cloneable, `Send + Sync`
+//! [`RuntimeClient`] for the coordinator. Requests are serialized through
+//! an mpsc channel (PJRT-CPU parallelizes each computation internally,
+//! so a single in-flight computation already saturates the cores; the
+//! dynamic batcher in front of this service is what provides throughput).
+
+use crate::model::ModelConfig;
+use crate::runtime::engine::{Engine, Logits};
+use crate::runtime::manifest::ArtifactEntry;
+use crate::tensor::Tensor;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+enum Request {
+    RunModel {
+        entry: ArtifactEntry,
+        weights_key: String,
+        books_key: Option<String>,
+        tokens: Vec<u32>,
+        reply: mpsc::Sender<anyhow::Result<Logits>>,
+    },
+    RegisterBooks {
+        key: String,
+        books: Tensor,
+        reply: mpsc::Sender<anyhow::Result<()>>,
+    },
+    RegisterWeights {
+        key: String,
+        cfg: ModelConfig,
+        tensors: Vec<Tensor>,
+        reply: mpsc::Sender<anyhow::Result<()>>,
+    },
+    RunQuantOp {
+        x: Tensor,
+        books: Tensor,
+        reply: mpsc::Sender<anyhow::Result<Tensor>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the runtime executor thread. Cloneable; all methods block
+/// until the engine replies.
+#[derive(Clone)]
+pub struct RuntimeClient {
+    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+}
+
+pub struct RuntimeService {
+    client: RuntimeClient,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RuntimeService {
+    /// Spawn the executor thread. Fails fast if the manifest/engine
+    /// cannot be constructed.
+    pub fn start(dir: &std::path::Path) -> anyhow::Result<RuntimeService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let dir = dir.to_path_buf();
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let mut engine = match Engine::from_dir(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::RunModel { entry, weights_key, books_key, tokens, reply } => {
+                            let _ = reply.send(engine.run_model(
+                                &entry, &weights_key, books_key.as_deref(), &tokens));
+                        }
+                        Request::RegisterBooks { key, books, reply } => {
+                            let _ = reply.send(engine.register_books(&key, &books));
+                        }
+                        Request::RegisterWeights { key, cfg, tensors, reply } => {
+                            let refs: Vec<&Tensor> = tensors.iter().collect();
+                            let _ = reply.send(engine.register_weights(&key, &cfg, &refs));
+                        }
+                        Request::RunQuantOp { x, books, reply } => {
+                            let _ = reply.send(engine.run_quant_op(&x, &books));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx.recv().map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+        Ok(RuntimeService { client: RuntimeClient { tx: Arc::new(Mutex::new(tx)) }, join: Some(join) })
+    }
+
+    pub fn client(&self) -> RuntimeClient {
+        self.client.clone()
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        let _ = self.client.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl RuntimeClient {
+    fn send(&self, req: Request) -> anyhow::Result<()> {
+        self.tx
+            .lock()
+            .map_err(|_| anyhow::anyhow!("runtime channel poisoned"))?
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("runtime thread gone"))
+    }
+
+    pub fn run_model(
+        &self,
+        entry: &ArtifactEntry,
+        weights_key: &str,
+        books_key: Option<&str>,
+        tokens: Vec<u32>,
+    ) -> anyhow::Result<Logits> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::RunModel {
+            entry: entry.clone(),
+            weights_key: weights_key.to_string(),
+            books_key: books_key.map(|s| s.to_string()),
+            tokens,
+            reply,
+        })?;
+        rx.recv().map_err(|_| anyhow::anyhow!("runtime dropped reply"))?
+    }
+
+    pub fn register_books(&self, key: &str, books: Tensor) -> anyhow::Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::RegisterBooks { key: key.to_string(), books, reply })?;
+        rx.recv().map_err(|_| anyhow::anyhow!("runtime dropped reply"))?
+    }
+
+    pub fn register_weights(&self, key: &str, cfg: &ModelConfig, tensors: Vec<Tensor>) -> anyhow::Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::RegisterWeights { key: key.to_string(), cfg: cfg.clone(), tensors, reply })?;
+        rx.recv().map_err(|_| anyhow::anyhow!("runtime dropped reply"))?
+    }
+
+    pub fn run_quant_op(&self, x: Tensor, books: Tensor) -> anyhow::Result<Tensor> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::RunQuantOp { x, books, reply })?;
+        rx.recv().map_err(|_| anyhow::anyhow!("runtime dropped reply"))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_fails_cleanly_without_artifacts() {
+        let err = RuntimeService::start(std::path::Path::new("/nonexistent-dir-xyz"));
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,218 @@
+//! Dense f32 tensor with row-major layout, plus the block / block-array
+//! views that the paper's quantizers operate on (§2.1, §2.4, Fig. 5).
+//!
+//! Quantization always decomposes the *reduction dimension* of a GEMM
+//! (appendix A.5, Fig. 10): for weights `[out, in]` and activations
+//! `[tokens, in]`, blocks are contiguous runs of the innermost (in-)
+//! dimension, so a row of length `in` splits into `in / L_A` block arrays
+//! of `L_A` scalars, each splitting into `L_A / L_b` blocks.
+
+/// A dense row-major f32 tensor (rank ≤ 4 in practice; rank-2 on the
+/// quantization paths).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(&mut f).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Number of rows when viewed as 2-D `[rows, cols]` (all leading dims
+    /// folded); `cols` is the innermost dimension.
+    pub fn rows(&self) -> usize {
+        assert!(!self.shape.is_empty());
+        self.len() / self.cols()
+    }
+
+    /// Innermost dimension length.
+    pub fn cols(&self) -> usize {
+        *self.shape.last().expect("rank-0 tensor has no cols")
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    /// 2-D element access (folded view).
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols() + c]
+    }
+
+    /// Iterate contiguous blocks of length `lb` along the innermost dim.
+    /// Requires `cols % lb == 0`.
+    pub fn blocks(&self, lb: usize) -> impl Iterator<Item = &[f32]> {
+        assert!(lb > 0 && self.cols() % lb == 0, "cols {} % L_b {} != 0", self.cols(), lb);
+        self.data.chunks_exact(lb)
+    }
+
+    /// Iterate contiguous block arrays of length `la` along the innermost
+    /// dim (each is later subdivided into blocks). Requires `cols % la == 0`.
+    pub fn block_arrays(&self, la: usize) -> impl Iterator<Item = &[f32]> {
+        assert!(la > 0 && self.cols() % la == 0, "cols {} % L_A {} != 0", self.cols(), la);
+        self.data.chunks_exact(la)
+    }
+
+    pub fn block_arrays_mut(&mut self, la: usize) -> impl Iterator<Item = &mut [f32]> {
+        assert!(la > 0 && self.cols() % la == 0);
+        self.data.chunks_exact_mut(la)
+    }
+
+    /// Number of blocks for a given `L_b`.
+    pub fn num_blocks(&self, lb: usize) -> usize {
+        self.len() / lb
+    }
+
+    /// Max |x| over the whole tensor.
+    pub fn amax(&self) -> f32 {
+        crate::util::stats::amax(&self.data)
+    }
+
+    /// Matrix multiply `self [m,k] @ rhs [k,n] -> [m,n]` — reference
+    /// implementation used by the CPU model forward in tests (the serving
+    /// path uses the PJRT executable instead).
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(rhs.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "matmul inner dim mismatch");
+        let mut out = vec![0.0f32; m * n];
+        // ikj loop order: streams rhs rows, decent cache behaviour without
+        // blocking; fine for the test-path sizes we use.
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = rhs.row(kk);
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Transpose a rank-2 tensor.
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_views() {
+        let t = Tensor::from_fn(&[2, 8], |i| i as f32);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 8);
+        assert_eq!(t.row(1)[0], 8.0);
+        assert_eq!(t.at(1, 3), 11.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        Tensor::new(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn blocks_partition_the_tensor() {
+        let t = Tensor::from_fn(&[2, 8], |i| i as f32);
+        let blocks: Vec<&[f32]> = t.blocks(4).collect();
+        assert_eq!(blocks.len(), 4);
+        assert_eq!(blocks[0], &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(blocks[3], &[12.0, 13.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_block_length_panics() {
+        let t = Tensor::zeros(&[2, 10]);
+        let _ = t.blocks(4).count();
+    }
+
+    #[test]
+    fn folded_rows_over_rank3() {
+        let t = Tensor::from_fn(&[2, 3, 4], |i| i as f32);
+        assert_eq!(t.rows(), 6);
+        assert_eq!(t.cols(), 4);
+        assert_eq!(t.row(5), &[20.0, 21.0, 22.0, 23.0]);
+    }
+
+    #[test]
+    fn matmul_reference() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = crate::util::rng::Pcg32::seeded(14);
+        let a = Tensor::from_fn(&[3, 3], |_| rng.normal());
+        let eye = Tensor::from_fn(&[3, 3], |i| if i % 4 == 0 { 1.0 } else { 0.0 });
+        let c = a.matmul(&eye);
+        for (x, y) in a.data.iter().zip(&c.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = crate::util::rng::Pcg32::seeded(15);
+        let a = Tensor::from_fn(&[3, 5], |_| rng.normal());
+        let back = a.transpose2().transpose2();
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn amax_over_tensor() {
+        let t = Tensor::new(&[1, 4], vec![0.5, -3.0, 2.0, 0.0]);
+        assert_eq!(t.amax(), 3.0);
+    }
+}

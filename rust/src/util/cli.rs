@@ -1,0 +1,216 @@
+//! Tiny declarative CLI argument parser (the vendor set has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, typed accessors with defaults, and auto-generated help.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declarative option spec used for help text and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: '{value}' ({why})")]
+    BadValue { key: String, value: String, why: String },
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+}
+
+impl Args {
+    /// Parse raw argv (excluding program + subcommand names) against specs.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(raw) = tok.strip_prefix("--") {
+                let (key, inline) = match raw.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (raw.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError::UnknownOption(key.clone()))?;
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i).cloned().ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    args.opts.insert(key, value);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError::BadValue {
+                            key,
+                            value: inline.unwrap(),
+                            why: "flag takes no value".into(),
+                        });
+                    }
+                    args.flags.push(key);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults.
+        for spec in specs {
+            if spec.takes_value && !args.opts.contains_key(spec.name) {
+                if let Some(d) = spec.default {
+                    args.opts.insert(spec.name.to_string(), d.to_string());
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn required(&self, name: &str) -> Result<&str, CliError> {
+        self.opt(name).ok_or_else(|| CliError::MissingRequired(name.to_string()))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|e| CliError::BadValue {
+                key: name.to_string(),
+                value: v.to_string(),
+                why: e.to_string(),
+            }),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        Ok(self.get_parsed::<usize>(name)?.unwrap_or(default))
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        Ok(self.get_parsed::<u64>(name)?.unwrap_or(default))
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        Ok(self.get_parsed::<f64>(name)?.unwrap_or(default))
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+}
+
+/// Render help text for a subcommand.
+pub fn render_help(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for spec in specs {
+        let value_hint = if spec.takes_value { " <value>" } else { "" };
+        let default = spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        s.push_str(&format!("  --{}{:<14} {}{}\n", spec.name, value_hint, spec.help, default));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "model", help: "model dir", takes_value: true, default: Some("artifacts") },
+            OptSpec { name: "batch", help: "max batch", takes_value: true, default: Some("8") },
+            OptSpec { name: "verbose", help: "chatty", takes_value: false, default: None },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_kv_and_flags() {
+        let a = Args::parse(&sv(&["--model", "m", "--verbose", "pos1"]), &specs()).unwrap();
+        assert_eq!(a.opt("model"), Some("m"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&sv(&["--batch=32"]), &specs()).unwrap();
+        assert_eq!(a.usize_or("batch", 0).unwrap(), 32);
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = Args::parse(&sv(&[]), &specs()).unwrap();
+        assert_eq!(a.opt("model"), Some("artifacts"));
+        assert_eq!(a.usize_or("batch", 0).unwrap(), 8);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            Args::parse(&sv(&["--nope"]), &specs()),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            Args::parse(&sv(&["--model"]), &specs()),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let a = Args::parse(&sv(&["--batch", "abc"]), &specs()).unwrap();
+        assert!(a.usize_or("batch", 0).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(Args::parse(&sv(&["--verbose=yes"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = render_help("serve", "run the server", &specs());
+        assert!(h.contains("--model"));
+        assert!(h.contains("default: 8"));
+    }
+}

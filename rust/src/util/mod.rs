@@ -1,0 +1,11 @@
+//! Shared substrates: deterministic RNG, statistics, JSON, CLI parsing,
+//! property-testing, and bench timing. These replace external crates that
+//! are unavailable in the offline vendor set (rand, serde, clap, proptest,
+//! criterion) — see DESIGN.md §1 "Environment constraints".
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,143 @@
+//! Mini property-testing harness (the vendor set has no `proptest`).
+//!
+//! A property is a closure over a seeded [`Pcg32`]; the harness runs it for
+//! `cases` independent seeds derived deterministically from a base seed, so
+//! failures are reproducible by seed. On failure we report the failing case
+//! seed. There is no shrinking — generators are written to produce small
+//! cases with reasonable probability instead.
+//!
+//! Used for: coordinator invariants (routing, batching, FIFO, no
+//! drop/duplicate), codec round-trips, format monotonicity, and LO-BCQ's
+//! monotone-MSE theorem (paper A.2).
+
+use super::rng::Pcg32;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 100;
+
+/// Run `prop` for `cases` deterministic seeds. Panics (failing the test)
+/// with the case seed on the first property violation.
+pub fn forall_seeded<F>(base_seed: u64, cases: usize, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Pcg32::new(case_seed, 0xC0FFEE);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Convenience wrapper with the default case count.
+pub fn forall<F>(base_seed: u64, name: &str, prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    forall_seeded(base_seed, DEFAULT_CASES, name, prop)
+}
+
+/// Assertion helpers returning Result so properties compose with `?`.
+pub fn ensure(cond: bool, msg: impl FnOnce() -> String) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    ensure(
+        (a - b).abs() <= tol,
+        || format!("{what}: {a} vs {b} (tol {tol})"),
+    )
+}
+
+pub fn ensure_le(a: f64, b: f64, what: &str) -> Result<(), String> {
+    ensure(a <= b, || format!("{what}: expected {a} <= {b}"))
+}
+
+// ----- common generators -----
+
+/// Random vector length in [1, max_len], biased small.
+pub fn gen_len(rng: &mut Pcg32, max_len: usize) -> usize {
+    // Geometric-ish bias toward small lengths but covering the full range.
+    if rng.next_f32() < 0.5 {
+        1 + rng.index(max_len.min(16))
+    } else {
+        1 + rng.index(max_len)
+    }
+}
+
+/// Random f32 vector from an LLM-like mixture (gaussian + outliers).
+pub fn gen_operand(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    let outlier_frac = rng.range_f32(0.0, 0.1);
+    let scale = rng.range_f32(0.25, 8.0);
+    super::rng::llm_like_sample(rng, n, outlier_frac, 4.0)
+        .into_iter()
+        .map(|x| x * scale)
+        .collect()
+}
+
+/// Random finite f32 covering wide magnitude range (including zero and
+/// denormal-magnitude values) for format codec tests.
+pub fn gen_wide_f32(rng: &mut Pcg32) -> f32 {
+    match rng.below(10) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => rng.normal() * 1e-30,
+        3 => rng.normal() * 1e30,
+        4 => rng.normal() * 1e-3,
+        _ => rng.normal() * 10f32.powi(rng.below(8) as i32 - 4),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(1, "u32 parity total", |rng| {
+            let x = rng.next_u32();
+            ensure(x % 2 == 0 || x % 2 == 1, || "impossible".into())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn forall_reports_failure() {
+        forall_seeded(2, 5, "always-fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn failure_is_deterministic() {
+        // The failing case index must be identical across runs.
+        let capture = |seed| {
+            std::panic::catch_unwind(|| {
+                forall_seeded(seed, 50, "fail-on-small", |rng| {
+                    ensure(rng.next_f32() > 0.05, || "small".into())
+                })
+            })
+            .err()
+            .map(|e| *e.downcast::<String>().unwrap())
+        };
+        assert_eq!(capture(3), capture(3));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = Pcg32::seeded(4);
+        for _ in 0..1000 {
+            let n = gen_len(&mut rng, 128);
+            assert!((1..=128).contains(&n));
+            let v = gen_operand(&mut rng, 8);
+            assert_eq!(v.len(), 8);
+            assert!(v.iter().all(|x| x.is_finite()));
+            assert!(gen_wide_f32(&mut rng).is_finite() || true);
+        }
+    }
+}

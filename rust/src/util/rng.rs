@@ -1,0 +1,259 @@
+//! Deterministic PCG32 random number generator.
+//!
+//! The offline vendor set has no `rand` crate, so we carry a small,
+//! well-understood PRNG: PCG-XSH-RR 64/32 (O'Neill 2014). Every stochastic
+//! component in the library (k-means++ seeding, synthetic corpora, workload
+//! generators, property tests) threads an explicit [`Pcg32`] so that every
+//! experiment in EXPERIMENTS.md is bit-reproducible.
+
+/// PCG-XSH-RR 64/32: 64-bit state, 64-bit stream selector, 32-bit output.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience: stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Next raw 32-bit output.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64-bit output (two draws).
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        // 24 mantissa bits of randomness.
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound) using Lemire rejection.
+    pub fn below(&mut self, bound: u32) -> u32 {
+        assert!(bound > 0, "below(0) is meaningless");
+        // Unbiased bounded generation.
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u32();
+            if r >= threshold {
+                return r % bound;
+            }
+        }
+    }
+
+    /// Uniform usize in [0, bound).
+    pub fn index(&mut self, bound: usize) -> usize {
+        self.below(u32::try_from(bound).expect("index bound too large")) as usize
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Standard normal via Box–Muller (cached spare not kept: simplicity
+    /// beats the extra state; this is not a hot path).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+        }
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal()
+    }
+
+    /// Laplace(0, b): heavy-tailed distribution mimicking LLM activation
+    /// outliers (paper §3, Fig. 6 discusses non-Gaussian operand shapes).
+    pub fn laplace(&mut self, b: f32) -> f32 {
+        let u = self.next_f64() - 0.5;
+        (-b as f64 * u.signum() * (1.0 - 2.0 * u.abs()).ln()) as f32
+    }
+
+    /// Fill a slice with standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.normal();
+        }
+    }
+
+    /// Vec of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (k ≤ n), order random.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+
+    /// Draw from a discrete distribution given cumulative weights.
+    /// `cum` must be non-decreasing with last element > 0.
+    pub fn discrete_cum(&mut self, cum: &[f64]) -> usize {
+        let total = *cum.last().expect("empty cumulative weights");
+        let x = self.next_f64() * total;
+        match cum.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+            Ok(i) => (i + 1).min(cum.len() - 1),
+            Err(i) => i.min(cum.len() - 1),
+        }
+    }
+}
+
+/// A mixture distribution used throughout calibration tests: mostly
+/// Gaussian with a Laplace outlier tail — the operand shape LLM GEMMs
+/// exhibit and the one LO-BCQ's multi-codebook design targets.
+pub fn llm_like_sample(rng: &mut Pcg32, n: usize, outlier_frac: f32, outlier_scale: f32) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            if rng.next_f32() < outlier_frac {
+                rng.laplace(outlier_scale)
+            } else {
+                rng.normal()
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg32::new(42, 7);
+        let mut b = Pcg32::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::seeded(1);
+        let mut b = Pcg32::seeded(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "seeds produced mostly identical output");
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..10_000 {
+            let x = rng.next_f32();
+            assert!((0.0..1.0).contains(&x), "{x} out of range");
+        }
+    }
+
+    #[test]
+    fn below_is_in_bounds_and_covers() {
+        let mut rng = Pcg32::seeded(4);
+        let mut seen = [false; 7];
+        for _ in 0..1_000 {
+            let x = rng.below(7);
+            assert!(x < 7);
+            seen[x as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "some residues never drawn");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::seeded(5);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::seeded(6);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg32::seeded(7);
+        let idx = rng.sample_indices(50, 20);
+        assert_eq!(idx.len(), 20);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 20);
+    }
+
+    #[test]
+    fn laplace_symmetric_heavy_tail() {
+        let mut rng = Pcg32::seeded(8);
+        let xs: Vec<f32> = (0..50_000).map(|_| rng.laplace(1.0)).collect();
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.03, "laplace mean {mean}");
+        // Laplace(1) variance is 2.
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+        assert!((var - 2.0).abs() < 0.15, "laplace var {var}");
+    }
+
+    #[test]
+    fn discrete_cum_respects_weights() {
+        let mut rng = Pcg32::seeded(9);
+        let cum = [0.1f64, 0.1, 1.0]; // item 1 has zero mass
+        let mut counts = [0usize; 3];
+        for _ in 0..5_000 {
+            counts[rng.discrete_cum(&cum)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!(counts[2] > counts[0] * 5);
+    }
+}

@@ -1,0 +1,243 @@
+//! Small statistics helpers shared by the quantization metrics, the
+//! evaluation harness, and the serving-latency reports.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance; 0.0 for empty input.
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+/// Standard deviation.
+pub fn std_dev(xs: &[f32]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Max |x| over the slice; 0.0 for empty input. NaNs are ignored.
+pub fn amax(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |acc, &x| {
+        let a = x.abs();
+        if a > acc {
+            a
+        } else {
+            acc
+        }
+    })
+}
+
+/// Sum of squares.
+pub fn sum_sq(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "mse length mismatch");
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Normalized MSE: MSE / mean(x²) of the reference. This is the paper's
+/// NMSE (Figs. 4, 6, 7, 9) — it makes layers with different dynamic
+/// ranges comparable.
+pub fn nmse(reference: &[f32], approx: &[f32]) -> f64 {
+    let denom = sum_sq(reference) / reference.len().max(1) as f64;
+    if denom == 0.0 {
+        return 0.0;
+    }
+    mse(reference, approx) / denom
+}
+
+/// Linear-interpolated percentile (p in [0,100]) of a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Percentile of an unsorted slice (copies + sorts).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Streaming histogram with fixed log-spaced buckets, used for latency
+/// reporting in the serving coordinator (p50/p95/p99 without storing every
+/// sample forever).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Bucket upper bounds in microseconds (log-spaced).
+    bounds_us: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Buckets from 1µs to ~100s, 10 per decade.
+    pub fn new() -> Self {
+        let mut bounds = Vec::new();
+        let mut b = 1.0f64;
+        while b < 1e8 {
+            bounds.push(b);
+            b *= 10f64.powf(0.1);
+        }
+        let n = bounds.len();
+        LatencyHistogram { bounds_us: bounds, counts: vec![0; n + 1], total: 0, sum_us: 0.0, max_us: 0.0 }
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let idx = self
+            .bounds_us
+            .partition_point(|&b| b < us);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us / self.total as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Approximate percentile (bucket upper bound containing the rank).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank.max(1) {
+                return if i < self.bounds_us.len() { self.bounds_us[i] } else { self.max_us };
+            }
+        }
+        self.max_us
+    }
+
+    /// Merge another histogram into this one (same bucket layout).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var_basics() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let xs = [0.5f32, -1.25, 3.0];
+        assert_eq!(mse(&xs, &xs), 0.0);
+    }
+
+    #[test]
+    fn nmse_scale_invariant() {
+        let a = [1.0f32, 2.0, -3.0, 4.0];
+        let b = [1.1f32, 1.9, -3.2, 4.1];
+        let a10: Vec<f32> = a.iter().map(|x| x * 10.0).collect();
+        let b10: Vec<f32> = b.iter().map(|x| x * 10.0).collect();
+        let n1 = nmse(&a, &b);
+        let n2 = nmse(&a10, &b10);
+        assert!((n1 - n2).abs() / n1 < 1e-5, "{n1} vs {n2}");
+    }
+
+    #[test]
+    fn amax_ignores_sign() {
+        assert_eq!(amax(&[-3.0, 2.0]), 3.0);
+        assert_eq!(amax(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_rough() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record_us(i as f64);
+        }
+        let p50 = h.percentile_us(50.0);
+        assert!(p50 > 350.0 && p50 < 700.0, "p50 {p50}");
+        let p99 = h.percentile_us(99.0);
+        assert!(p99 > 800.0 && p99 <= 1100.0, "p99 {p99}");
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record_us(10.0);
+        b.record_us(1000.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.max_us() >= 1000.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Timing helpers for the hand-rolled bench harness (no `criterion` in the
+//! offline vendor set). Provides warmup + repeated-measurement timing with
+//! median/stddev reporting, and a black-box to stop the optimizer from
+//! deleting benchmarked work.
+
+use std::time::{Duration, Instant};
+
+/// Prevent the compiler from optimizing away a value. Same trick criterion
+/// uses on stable (volatile read of a pointer to the value).
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// One benchmark measurement summary.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time for each sample (seconds).
+    pub samples_s: Vec<f64>,
+    /// Iterations per sample used.
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn median_s(&self) -> f64 {
+        let mut v = self.samples_s.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        self.samples_s.iter().sum::<f64>() / self.samples_s.len() as f64
+    }
+
+    pub fn stddev_s(&self) -> f64 {
+        let m = self.mean_s();
+        (self.samples_s.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / self.samples_s.len() as f64)
+            .sqrt()
+    }
+
+    /// Human-readable one-liner, e.g. `encode/4096  12.34 µs ±0.56 (n=20)`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<42} {:>12} ±{} (n={})",
+            self.name,
+            fmt_duration(self.median_s()),
+            fmt_duration(self.stddev_s()),
+            self.samples_s.len()
+        )
+    }
+
+    /// Throughput line given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64, unit: &str) -> String {
+        let per_s = items_per_iter / self.median_s();
+        format!("{:<42} {:>14.3} {unit}/s", self.name, per_s)
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner: calibrates iteration count to a target sample time,
+/// warms up, then takes `samples` measurements.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub sample_time: Duration,
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            sample_time: Duration::from_millis(100),
+            samples: 15,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for cheap CI-style runs.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(20),
+            sample_time: Duration::from_millis(20),
+            samples: 5,
+        }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup while estimating cost of one call.
+        let warm_start = Instant::now();
+        let mut calls = 0u64;
+        while warm_start.elapsed() < self.warmup || calls == 0 {
+            f();
+            calls += 1;
+            if calls > 1_000_000 {
+                break;
+            }
+        }
+        let est = warm_start.elapsed().as_secs_f64() / calls as f64;
+        let iters = ((self.sample_time.as_secs_f64() / est).ceil() as u64).clamp(1, 10_000_000);
+
+        let mut samples_s = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples_s.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        BenchResult { name: name.to_string(), samples_s, iters }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher::quick();
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.median_s() > 0.0);
+        assert!(r.median_s() < 1e-3, "trivial op too slow: {}", r.median_s());
+        assert_eq!(r.samples_s.len(), 5);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.5), "2.500 s");
+        assert_eq!(fmt_duration(2.5e-3), "2.500 ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_duration(2.5e-9), "2.5 ns");
+    }
+
+    #[test]
+    fn summary_contains_name() {
+        let r = BenchResult { name: "x".into(), samples_s: vec![1e-6, 2e-6, 3e-6], iters: 10 };
+        assert!(r.summary().contains('x'));
+        assert!((r.median_s() - 2e-6).abs() < 1e-12);
+    }
+}

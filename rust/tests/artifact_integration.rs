@@ -1,0 +1,160 @@
+//! Integration tests over the real AOT artifacts: PJRT load + execute,
+//! cross-layer parity (rust quantizer ↔ Pallas kernel ↔ CPU forward).
+//!
+//! These tests skip (with a notice) when `artifacts/` has not been built
+//! — `make artifacts` first. They are the proof that L1/L2/L3 compose.
+
+use lobcq::data::corpus;
+use lobcq::model::{forward, Weights};
+use lobcq::quant::codebook::CodebookFamily;
+use lobcq::quant::lobcq::{fake_quantize, LobcqConfig};
+use lobcq::runtime::{Engine, Manifest};
+use lobcq::tensor::Tensor;
+use lobcq::util::json::Json;
+use lobcq::util::rng::{llm_like_sample, Pcg32};
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::from_dir(dir).expect("engine construction"))
+}
+
+fn load_family(nc: usize, b: u32, bc: u32) -> CodebookFamily {
+    let j = Json::from_file(std::path::Path::new("artifacts/codebooks.json")).unwrap();
+    let fam = j.get("families").unwrap().get(&format!("nc{nc}_b{b}")).unwrap();
+    CodebookFamily::from_json(fam).unwrap().quantize_codewords(bc)
+}
+
+#[test]
+fn bf16_artifact_matches_cpu_forward() {
+    let Some(mut eng) = engine() else { return };
+    let cfg = eng.manifest.models["s"].clone();
+    let weights = Weights::load(&eng.manifest.weights_path("s").unwrap()).unwrap();
+    weights.validate(&cfg).unwrap();
+
+    let entry = eng.manifest.find("s", "bf16", 1).expect("s/bf16/b1 artifact").clone();
+    let ordered: Vec<Tensor> = weights.ordered(&cfg).unwrap().into_iter().cloned().collect();
+    let refs: Vec<&Tensor> = ordered.iter().collect();
+    eng.register_weights("s/bf16", &cfg, &refs).unwrap();
+
+    let tokens = corpus::generate(42, entry.batch * entry.t);
+    let logits = eng.run_model(&entry, "s/bf16", None, &tokens).unwrap();
+    assert_eq!(logits.data.len(), entry.batch * entry.t * cfg.vocab);
+    assert!(logits.data.iter().all(|v| v.is_finite()));
+
+    // Cross-check vs the rust CPU reference forward.
+    let cpu = forward(&cfg, &weights, &tokens, entry.batch, None).unwrap();
+    let mut max_abs = 0.0f32;
+    let mut max_rel = 0.0f32;
+    for (a, b) in logits.data.iter().zip(&cpu.data) {
+        max_abs = max_abs.max((a - b).abs());
+        max_rel = max_rel.max((a - b).abs() / (b.abs() + 1.0));
+    }
+    assert!(
+        max_rel < 5e-3,
+        "PJRT vs CPU forward diverged: max_abs {max_abs}, max_rel {max_rel}"
+    );
+}
+
+#[test]
+fn quant_op_artifact_matches_rust_quantizer() {
+    let Some(mut eng) = engine() else { return };
+    // The op takes (8, 256) x and (8, 16) books as INPUTS — feed the
+    // frozen universal family and compare against the rust fake-quantizer.
+    let fam = load_family(8, 4, 6);
+    let books_rows: Vec<f32> = fam.books.iter().flat_map(|b| b.levels.clone()).collect();
+    let books = Tensor::new(&[8, 16], books_rows);
+
+    let mut rng = Pcg32::seeded(777);
+    let x = Tensor::new(&[8, 256], llm_like_sample(&mut rng, 8 * 256, 0.05, 4.0));
+
+    let got = eng.run_quant_op(&x, &books).unwrap();
+    let cfg = LobcqConfig::new(8, 8, 64);
+    let want = fake_quantize(&x.data, &cfg, &fam);
+
+    let mismatched = got.data.iter().zip(&want).filter(|(a, b)| a != b).count();
+    let frac = mismatched as f64 / want.len() as f64;
+    assert!(
+        frac < 5e-3,
+        "kernel vs rust quantizer: {mismatched}/{} scalars differ ({frac})",
+        want.len()
+    );
+    let nmse_a = lobcq::util::stats::nmse(&x.data, &got.data);
+    let nmse_b = lobcq::util::stats::nmse(&x.data, &want);
+    assert!((nmse_a - nmse_b).abs() < 1e-5, "nmse {nmse_a} vs {nmse_b}");
+}
+
+#[test]
+fn gemm_op_artifact_matches_cpu_matmul() {
+    let Some(mut eng) = engine() else { return };
+    let mut rng = Pcg32::seeded(778);
+    let a = Tensor::from_fn(&[32, 256], |_| rng.normal());
+    let b = Tensor::from_fn(&[256, 128], |_| rng.normal());
+    let got = eng.run_gemm_op(&a, &b).unwrap();
+    let want = a.matmul(&b);
+    for (x, y) in got.data.iter().zip(&want.data) {
+        assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn quantized_variant_ppl_close_to_bf16() {
+    // The Table 2 shape in miniature: bf16 PPL <= LO-BCQ PPL, and the
+    // LO-BCQ delta is small.
+    let Some(mut eng) = engine() else { return };
+    let cfg = eng.manifest.models["s"].clone();
+    let weights = Weights::load(&eng.manifest.weights_path("s").unwrap()).unwrap();
+    let ordered: Vec<Tensor> = weights.ordered(&cfg).unwrap().into_iter().cloned().collect();
+
+    // bf16 weights for both variants (isolates the activation-quant effect).
+    let refs: Vec<&Tensor> = ordered.iter().collect();
+    eng.register_weights("s/bf16", &cfg, &refs).unwrap();
+
+    let val = corpus::generate(eng.manifest.val_seed, 16 * 65);
+    // Register the frozen universal family for the LO-BCQ variant.
+    let fam = load_family(8, 4, 6);
+    let books_rows: Vec<f32> = fam.books.iter().flat_map(|b| b.levels.clone()).collect();
+    eng.register_books("nc8", &Tensor::new(&[8, 16], books_rows)).unwrap();
+
+    let eval_ppl = |eng: &mut Engine, variant: &str| -> f64 {
+        let entry = eng.manifest.find("s", variant, 8).unwrap().clone();
+        let books_key = entry.books_nc.map(|_| "nc8");
+        let mut nll = 0.0f64;
+        let mut count = 0usize;
+        let windows: Vec<&[u32]> = val.chunks_exact(65).take(8).collect();
+        let mut tokens = Vec::with_capacity(8 * 64);
+        for w in &windows {
+            tokens.extend_from_slice(&w[..64]);
+        }
+        let logits = eng.run_model(&entry, "s/bf16", books_key, &tokens).unwrap();
+        for (b, w) in windows.iter().enumerate() {
+            for p in 0..63 {
+                nll -= logits.log_prob(b, p, w[p + 1]);
+                count += 1;
+            }
+        }
+        (nll / count as f64).exp()
+    };
+
+    let ppl_bf16 = eval_ppl(&mut eng, "bf16");
+    let ppl_lobcq = eval_ppl(&mut eng, "lobcq_g64_nc8");
+    assert!(ppl_bf16 > 1.0 && ppl_bf16 < 100.0, "bf16 ppl {ppl_bf16}");
+    assert!(ppl_lobcq >= ppl_bf16 * 0.99, "quantized beat baseline?! {ppl_lobcq} vs {ppl_bf16}");
+    assert!(
+        ppl_lobcq < ppl_bf16 * 1.25,
+        "W4A4 LO-BCQ ppl {ppl_lobcq} too far from bf16 {ppl_bf16}"
+    );
+}
+
+#[test]
+fn corpus_fingerprint_matches_manifest() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let m = Manifest::load(dir).unwrap();
+    m.check_corpus_parity().unwrap();
+}
