@@ -5,13 +5,16 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use lobcq::quant::baselines::{Mx4Quantizer, Mxfp4Quantizer, Quantizer, VsqQuantizer};
+use lobcq::quant::baselines::{Mx4Quantizer, Mxfp4Quantizer, VsqQuantizer};
+use lobcq::quant::calib::LobcqQuantizer;
 use lobcq::quant::encode::{decode, encode, to_bytes};
 use lobcq::quant::lobcq as lq;
 use lobcq::quant::lobcq::{CalibOpts, LobcqConfig};
+use lobcq::quant::pipeline::{QuantPipeline, QuantPool, QuantScheme};
 use lobcq::tensor::Tensor;
 use lobcq::util::rng::{llm_like_sample, Pcg32};
 use lobcq::util::stats::nmse;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     // An LLM-like operand: mostly Gaussian with a heavy outlier tail.
@@ -36,16 +39,23 @@ fn main() -> anyhow::Result<()> {
     println!("codebook footprint: {} bytes (paper: ≤ 0.19 KB)\n", family.footprint_bytes(cfg.bc));
 
     // 2. Compare NMSE against the paper's baselines at similar bitwidths.
-    let q = lq::fake_quantize(&tensor.data, &cfg, &family);
-    println!("{:<16} {:>8} {:>12}", "method", "bits", "NMSE");
-    println!("{:<16} {:>8.3} {:>12.3e}", "LO-BCQ", cfg.bitwidth(), nmse(&tensor.data, &q));
-    for b in [
-        Box::new(Mx4Quantizer::paper_default()) as Box<dyn Quantizer>,
-        Box::new(VsqQuantizer::paper_default()),
-        Box::new(Mxfp4Quantizer::paper_default()),
-    ] {
-        let dq = b.quantize(&tensor.data);
-        println!("{:<16} {:>8.3} {:>12.3e}", b.name(), b.bits_per_scalar(), nmse(&tensor.data, &dq));
+    //    Every method — LO-BCQ included — is one `QuantScheme` behind the
+    //    unified parallel pipeline, so this loop is the whole swap.
+    let schemes: Vec<Arc<dyn QuantScheme>> = vec![
+        Arc::new(LobcqQuantizer::universal(cfg, family.clone())),
+        Arc::new(Mx4Quantizer::paper_default()),
+        Arc::new(VsqQuantizer::paper_default()),
+        Arc::new(Mxfp4Quantizer::paper_default()),
+    ];
+    println!("{:<28} {:>8} {:>12}", "method", "bits", "NMSE");
+    let mut q = Vec::new();
+    for s in &schemes {
+        let pipe = QuantPipeline::new(s.clone(), QuantPool::default());
+        let dq = pipe.quantize(&tensor.data);
+        println!("{:<28} {:>8.3} {:>12.3e}", s.name(), s.bits_per_scalar(), nmse(&tensor.data, &dq));
+        if q.is_empty() {
+            q = dq; // keep the LO-BCQ output for the packed-format check
+        }
     }
 
     // 3. The packed block format (Fig. 5): encode → bytes → decode.

@@ -1,0 +1,44 @@
+//! Unified experiment bench harness: one target replacing the former 16
+//! per-table/figure stub files. Dispatches by experiment id through
+//! `eval::experiments::run` (see DESIGN.md §3 for the experiment index
+//! and EXPERIMENTS.md for recorded results).
+//!
+//! Selection and workload:
+//! - `LOBCQ_EXP=tab2,fig4 cargo bench` runs a subset (default: all);
+//! - quick workloads by default, `LOBCQ_BENCH_FULL=1` for paper scale;
+//! - experiments whose artifacts are missing are reported as SKIPPED
+//!   (exit stays 0 so `cargo bench` is usable pre-`make artifacts`);
+//!   `LOBCQ_BENCH_STRICT=1` turns any failure into a non-zero exit.
+
+use lobcq::eval::experiments::ALL_EXPERIMENTS;
+use lobcq::eval::{experiments, Env};
+
+fn main() {
+    let quick = std::env::var("LOBCQ_BENCH_FULL").map(|v| v != "1").unwrap_or(true);
+    let strict = std::env::var("LOBCQ_BENCH_STRICT").map(|v| v == "1").unwrap_or(false);
+    let filter = std::env::var("LOBCQ_EXP").ok();
+    let ids: Vec<String> = match &filter {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+        None => ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect(),
+    };
+
+    let env = Env::load();
+    let mut failures = 0usize;
+    for id in &ids {
+        let t0 = std::time::Instant::now();
+        match experiments::run(id, &env, quick) {
+            Ok(report) => {
+                println!("{report}");
+                println!("[{id}] completed in {:.2}s (quick={quick})\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                failures += 1;
+                println!("[{id}] SKIPPED/FAILED: {e:#}\n");
+            }
+        }
+    }
+    println!("== {}/{} experiments completed ==", ids.len() - failures, ids.len());
+    if strict && failures > 0 {
+        std::process::exit(1);
+    }
+}

@@ -6,11 +6,19 @@
 //! codebooks make dynamic activation quantization cheap. Target
 //! (DESIGN.md §8): ≥ 100 M scalars/s/core for the fake-quantize path.
 //! Before/after numbers live in EXPERIMENTS.md §Perf.
+//!
+//! The final section compares the legacy serving shape (single-thread,
+//! one fresh Vec per call) against the unified pipeline (8 workers,
+//! pooled in-place buffers) on a [4096 × 4096] fake-quantize, and checks
+//! the zero-allocation steady state via the scratch pool's counter.
 
+use lobcq::quant::calib::LobcqQuantizer;
 use lobcq::quant::encode::{decode, encode};
 use lobcq::quant::lobcq::{fake_quantize, LobcqConfig};
+use lobcq::quant::pipeline::{QuantPipeline, QuantPool, QuantScheme};
 use lobcq::util::rng::{llm_like_sample, Pcg32};
 use lobcq::util::timer::{black_box, Bencher};
+use std::sync::Arc;
 
 fn main() {
     let env = lobcq::eval::Env::load();
@@ -55,4 +63,39 @@ fn main() {
         black_box(acc);
     });
     println!("{}", r.throughput(x.len() as f64, "scalars"));
+
+    // ---- pipeline vs legacy serving shape (ISSUE 1 acceptance) ----
+    // [4096 x 4096] activation tensor; legacy = 1 worker + a fresh Vec
+    // per call, pipeline = 8 workers + pooled in-place buffers.
+    let n = 4096 * 4096;
+    println!("\n# pipeline vs legacy — [4096 x 4096] fake-quantize\n");
+    let x = llm_like_sample(&mut rng, n, 0.05, 4.0);
+    let scheme: Arc<dyn QuantScheme> = Arc::new(LobcqQuantizer::universal(cfg, fam.clone()));
+    let qb = Bencher::quick();
+
+    let serial = QuantPool::serial();
+    let legacy = qb.run("legacy: 1 worker, alloc per call", || {
+        let mut out = vec![0.0f32; n];
+        serial.quantize_into(&*scheme, black_box(&x), &mut out);
+        black_box(out);
+    });
+    println!("{}", legacy.throughput(n as f64, "scalars"));
+
+    let pipe = QuantPipeline::new(scheme.clone(), QuantPool::with_workers(8));
+    // Warm up the scratch pool, then verify steady-state allocations.
+    let buf = pipe.quantize_pooled(&x);
+    pipe.recycle(buf);
+    let allocs_warm = pipe.scratch_allocations();
+    let par = qb.run("pipeline: 8 workers, pooled in-place", || {
+        let buf = pipe.quantize_pooled(black_box(&x));
+        pipe.recycle(black_box(buf));
+    });
+    println!("{}", par.throughput(n as f64, "scalars"));
+    let allocs_delta = pipe.scratch_allocations() - allocs_warm;
+
+    let speedup = legacy.median_s() / par.median_s();
+    println!("\nspeedup: {speedup:.2}x (target >= 2x), steady-state allocations: {allocs_delta} (target 0)");
+    if speedup < 2.0 || allocs_delta != 0 {
+        eprintln!("WARNING: pipeline acceptance target missed on this host");
+    }
 }

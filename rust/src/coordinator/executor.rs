@@ -1,8 +1,13 @@
 //! Step executor abstraction: one fixed-shape forward pass per decode
-//! step. The production impl wraps the PJRT [`RuntimeClient`]; the mock
-//! drives coordinator unit/property tests with no artifacts required.
+//! step. The production impl wraps the PJRT `RuntimeClient` (behind the
+//! `pjrt` feature); [`CpuExecutor`] serves through the CPU reference
+//! forward with on-the-fly activation quantization from the unified
+//! pipeline; the mock drives coordinator unit/property tests with no
+//! artifacts required.
 
-use crate::runtime::{ArtifactEntry, Logits, RuntimeClient};
+#[cfg(feature = "pjrt")]
+use crate::runtime::{ArtifactEntry, RuntimeClient};
+use crate::runtime::Logits;
 
 /// Executes a (batch, t) token forward and returns logits. `tokens` is
 /// row-major batch*t; implementations have a FIXED (batch, t) shape —
@@ -16,6 +21,7 @@ pub trait StepExecutor: Send {
 
 /// PJRT-backed executor bound to one artifact + registered weight/book
 /// keys (see `RuntimeClient::register_weights` / `register_books`).
+#[cfg(feature = "pjrt")]
 pub struct PjrtExecutor {
     pub client: RuntimeClient,
     pub entry: ArtifactEntry,
@@ -24,6 +30,7 @@ pub struct PjrtExecutor {
     pub vocab: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl StepExecutor for PjrtExecutor {
     fn batch(&self) -> usize {
         self.entry.batch
@@ -39,6 +46,70 @@ impl StepExecutor for PjrtExecutor {
 
     fn step(&self, tokens: &[u32]) -> anyhow::Result<Logits> {
         self.client.run_model(&self.entry, &self.weights_key, self.books_key.as_deref(), tokens.to_vec())
+    }
+}
+
+/// CPU serving executor: the reference forward with weights pre-quantized
+/// offline and activations quantized **on the fly** at every GEMM input
+/// through the shared [`QuantPipeline`] — the same `QuantScheme` object
+/// calibration and every eval table exercise (paper §3's deployment mode,
+/// artifact-free). The pipeline's scratch pool is retained across steps,
+/// so steady-state serving performs zero quantization allocations.
+pub struct CpuExecutor {
+    cfg: crate::model::ModelConfig,
+    /// Pre-quantized weights (scheme applied once at construction).
+    weights: crate::model::Weights,
+    act: Option<crate::quant::pipeline::QuantPipeline>,
+    batch: usize,
+    t: usize,
+}
+
+impl CpuExecutor {
+    /// Build from a model + scheme: quantizes the GEMM weights offline
+    /// and binds the activation pipeline (None for BF16).
+    pub fn new(
+        cfg: crate::model::ModelConfig,
+        weights: &crate::model::Weights,
+        scheme: &crate::eval::Scheme,
+        pool: crate::quant::pipeline::QuantPool,
+        batch: usize,
+        t: usize,
+    ) -> anyhow::Result<CpuExecutor> {
+        anyhow::ensure!(batch >= 1 && t >= 1 && t <= cfg.max_t, "bad executor shape ({batch}, {t})");
+        let qw = scheme.quantize_weights_with(&cfg, weights, pool);
+        let act = scheme.act_pipeline(pool);
+        Ok(CpuExecutor { cfg, weights: qw, act, batch, t })
+    }
+
+    /// Name of the bound activation pipeline (serving logs).
+    pub fn act_scheme_name(&self) -> String {
+        self.act.as_ref().map(|p| p.name()).unwrap_or_else(|| "BF16".into())
+    }
+}
+
+impl StepExecutor for CpuExecutor {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn step(&self, tokens: &[u32]) -> anyhow::Result<Logits> {
+        anyhow::ensure!(tokens.len() == self.batch * self.t, "bad token count");
+        let logits = crate::model::forward::forward(
+            &self.cfg,
+            &self.weights,
+            tokens,
+            self.batch,
+            self.act.as_ref(),
+        )?;
+        Ok(Logits { data: logits.data, batch: self.batch, t: self.t, vocab: self.cfg.vocab })
     }
 }
 
@@ -119,5 +190,62 @@ mod tests {
     fn mock_validates_shape() {
         let m = MockExecutor::new(2, 4, 10);
         assert!(m.step(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn cpu_executor_serves_quantized_forward() {
+        use crate::eval::scheme::mx4;
+        use crate::model::forward::tests_support::{random_weights, tiny_cfg};
+        use crate::quant::pipeline::QuantPool;
+
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 31);
+        let t = 8;
+        let exec =
+            CpuExecutor::new(cfg.clone(), &w, &mx4(), QuantPool::serial(), 2, t).unwrap();
+        assert_eq!(exec.vocab(), cfg.vocab);
+        assert_eq!(exec.act_scheme_name(), "MX4 (g16)");
+        let tokens: Vec<u32> = (0..2 * t).map(|i| (i % cfg.vocab) as u32).collect();
+        let logits = exec.step(&tokens).unwrap();
+        assert_eq!(logits.data.len(), 2 * t * cfg.vocab);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+
+        // The quantized executor must differ from the BF16 one (the
+        // activation hook is live) but stay finite and bounded.
+        let base = CpuExecutor::new(cfg.clone(), &w, &crate::eval::Scheme::Bf16, QuantPool::serial(), 2, t)
+            .unwrap();
+        let base_logits = base.step(&tokens).unwrap();
+        let diff: f32 =
+            logits.data.iter().zip(&base_logits.data).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 0.0, "quantization had no effect");
+    }
+
+    #[test]
+    fn cpu_executor_through_full_server() {
+        use crate::coordinator::{BatchPolicy, Limits, Sampling, Server};
+        use crate::model::forward::tests_support::{random_weights, tiny_cfg};
+        use crate::quant::pipeline::QuantPool;
+
+        let cfg = tiny_cfg();
+        let vocab = cfg.vocab as u32;
+        let w = random_weights(&cfg, 32);
+        let scheme = crate::eval::scheme::vsq();
+        let exec = CpuExecutor::new(cfg, &w, &scheme, QuantPool::serial(), 4, 16).unwrap();
+        let s = Server::start(
+            exec,
+            BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(2) },
+            Limits { max_prompt: 8, max_new: 4, vocab },
+            Sampling::Greedy,
+        );
+        let mut tickets = Vec::new();
+        for i in 0..6u32 {
+            tickets.push(s.submit(vec![i % vocab, (i + 3) % vocab], 3).unwrap());
+        }
+        for t in tickets {
+            let resp = t.wait().unwrap();
+            assert_eq!(resp.tokens.len(), 3);
+            assert!(resp.tokens.iter().all(|&tok| tok < vocab));
+        }
+        s.shutdown();
     }
 }

@@ -12,7 +12,9 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use executor::{MockExecutor, PjrtExecutor, StepExecutor};
+#[cfg(feature = "pjrt")]
+pub use executor::PjrtExecutor;
+pub use executor::{CpuExecutor, MockExecutor, StepExecutor};
 pub use metrics::{MetricsSnapshot, ServerMetrics};
 pub use request::{AdmitError, Limits, Request, Response};
 pub use scheduler::{run_batch, Sampling};

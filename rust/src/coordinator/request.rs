@@ -35,19 +35,28 @@ pub struct Limits {
     pub vocab: u32,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum AdmitError {
-    #[error("empty prompt")]
     EmptyPrompt,
-    #[error("prompt length {0} exceeds limit {1}")]
     PromptTooLong(usize, usize),
-    #[error("max_new {0} exceeds limit {1}")]
     TooManyTokens(usize, usize),
-    #[error("token {0} outside vocabulary {1}")]
     BadToken(u32, u32),
-    #[error("server shutting down")]
     Shutdown,
 }
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::EmptyPrompt => write!(f, "empty prompt"),
+            AdmitError::PromptTooLong(n, lim) => write!(f, "prompt length {n} exceeds limit {lim}"),
+            AdmitError::TooManyTokens(n, lim) => write!(f, "max_new {n} exceeds limit {lim}"),
+            AdmitError::BadToken(tok, vocab) => write!(f, "token {tok} outside vocabulary {vocab}"),
+            AdmitError::Shutdown => write!(f, "server shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
 
 /// Validate a request against the limits (router admission check).
 pub fn validate(prompt: &[u32], max_new: usize, limits: &Limits) -> Result<(), AdmitError> {

@@ -12,14 +12,14 @@ use crate::eval::setup::Env;
 use crate::eval::tasks_eval::{harness_suite, mmlu_accuracy};
 use crate::formats::{E1M2, E2M1, E3M0, E3M2, E3M3, E4M0};
 use crate::model::{forward, Weights};
-use crate::quant::baselines::Quantizer;
 use crate::quant::calib::{CalibScope, LobcqQuantizer};
 use crate::quant::lobcq::{calibrate_blocks, normalize, normalized_blocks, CalibOpts, InitMethod, LobcqConfig};
 use crate::quant::metrics::{bitwidth_table1, compression_factor};
-use crate::tensor::Tensor;
+use crate::quant::pipeline::{QuantPipeline, QuantScheme};
 use crate::util::rng::Pcg32;
 use crate::util::stats::nmse;
 use std::fmt::Write as _;
+use std::sync::Arc;
 
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "tab1", "tab2", "tab3", "tab4", "tab5", "tab6", "tab7", "tab8", "tab9", "tab10", "tab11",
@@ -305,23 +305,17 @@ pub fn tab9(env: &Env, quick: bool) -> anyhow::Result<String> {
         for scope in ["universal", "layerwise"] {
             write!(s, "| {la} | {scope} |")?;
             for &nc in &ncs {
-                let ppl = match scope {
-                    "universal" => {
-                        let scheme = env.lobcq(8, nc, la)?;
-                        ppl_cpu(&cfg, &w, &scheme, &scheme, &opts(quick))?
-                    }
-                    _ => {
-                        // Layerwise: refit codebooks per tensor via the
-                        // self-calibrating quantizer.
-                        let lcfg = LobcqConfig::new(8, nc, la);
-                        let q = LobcqQuantizer::layerwise(lcfg, 0xCA11B);
-                        let scheme = LayerwiseScheme { q };
-                        let wq = scheme.quantize_weights(&cfg, &w);
-                        let hook = |x: &[f32]| scheme.q.quantize(x);
-                        let windows = opts(quick);
-                        ppl_cpu_with_hook(&cfg, &wq, &hook, &windows)?
-                    }
+                let scheme = match scope {
+                    "universal" => env.lobcq(8, nc, la)?,
+                    // Layerwise: the same QuantScheme impl, refitting
+                    // codebooks per tensor in its prepare() pass — the
+                    // unified pipeline makes this a one-line swap.
+                    _ => Scheme::quant(Arc::new(LobcqQuantizer::layerwise(
+                        LobcqConfig::new(8, nc, la),
+                        0xCA11B,
+                    ))),
                 };
+                let ppl = ppl_cpu(&cfg, &w, &scheme, &scheme, &opts(quick))?;
                 write!(s, " {ppl:.3} |")?;
             }
             s.push('\n');
@@ -329,57 +323,6 @@ pub fn tab9(env: &Env, quick: bool) -> anyhow::Result<String> {
     }
     s.push_str("\nShape: layerwise ≈ universal for Nc > 4 (paper's justification for freezing universal books).\n");
     Ok(s)
-}
-
-/// Thin adapter for layerwise evaluation (Table 9).
-struct LayerwiseScheme {
-    q: LobcqQuantizer,
-}
-
-impl LayerwiseScheme {
-    fn quantize_weights(&self, cfg: &crate::model::ModelConfig, w: &Weights) -> Weights {
-        let mut out = w.clone();
-        for (name, _) in cfg.param_shapes() {
-            if !is_gemm_weight(&name) {
-                continue;
-            }
-            let t = out.tensors.get(&name).unwrap();
-            let tt = t.transpose2();
-            let q = self.q.quantize(&tt.data);
-            out.tensors.insert(name, Tensor::new(&tt.shape, q).transpose2());
-        }
-        out
-    }
-}
-
-/// ppl_cpu for an arbitrary activation hook (layerwise path).
-fn ppl_cpu_with_hook(
-    cfg: &crate::model::ModelConfig,
-    w: &Weights,
-    hook: &(dyn Fn(&[f32]) -> Vec<f32> + Sync),
-    opts: &EvalOpts,
-) -> anyhow::Result<f64> {
-    let toks = corpus::generate(opts.val_seed, opts.n_windows * opts.t + 1 + opts.t);
-    let mut windows = corpus::windows(&toks, opts.t);
-    windows.truncate(opts.n_windows);
-    let mut nll = 0.0f64;
-    let mut count = 0usize;
-    for chunk in windows.chunks(opts.batch) {
-        let batch = chunk.len();
-        let mut tokens = Vec::with_capacity(batch * opts.t);
-        for win in chunk {
-            tokens.extend_from_slice(&win[..opts.t]);
-        }
-        let logits = forward(cfg, w, &tokens, batch, Some(hook))?;
-        for (b, win) in chunk.iter().enumerate() {
-            for p in 0..opts.t {
-                let row = logits.row(b * opts.t + p);
-                nll -= crate::eval::perplexity::log_softmax_at(row, win[p + 1] as usize);
-                count += 1;
-            }
-        }
-    }
-    Ok((nll / count as f64).exp())
 }
 
 /// ---- Table 10: codeword bits (INT4 vs INT6 vs INT8) ----
@@ -414,8 +357,8 @@ pub fn tab11_fig8(env: &Env, quick: bool) -> anyhow::Result<String> {
     // Weight NMSE measured on the first GEMM tensor (Fig. 8's lens).
     let probe = w.get("l0.attn.wqkv")?;
     for (bits, fmt) in [(7u32, E3M3), (6, E3M2), (5, E4M0)] {
-        let fp = Scheme::FpTensor(fmt);
-        let lm = Scheme::LloydMax { bits };
+        let fp = Scheme::fp_tensor(fmt);
+        let lm = Scheme::lloyd_max(bits);
         let fp_ppl = ppl_cpu(&cfg, &w, &fp, &Scheme::Bf16, &opts(quick))?;
         let lm_ppl = ppl_cpu(&cfg, &w, &lm, &Scheme::Bf16, &opts(quick))?;
         let fp_nmse = nmse(&probe.data, &fp.quantize_flat(&probe.data));
@@ -540,15 +483,19 @@ pub fn fig6(env: &Env) -> anyhow::Result<String> {
 /// ---- Fig 7: universal vs layerwise NMSE on activations ----
 pub fn fig7(env: &Env) -> anyhow::Result<String> {
     let (cfg, w) = need_weights(env, "m")?;
-    // Capture every GEMM input activation on one corpus batch.
-    let taps: std::sync::Mutex<Vec<Vec<f32>>> = std::sync::Mutex::new(Vec::new());
-    let capture = |x: &[f32]| -> Vec<f32> {
-        taps.lock().unwrap().push(x.to_vec());
-        x.to_vec()
-    };
+    // Capture every GEMM input activation on one corpus batch, via an
+    // identity pipeline hook (the capture tap sees whole tensors: the
+    // FnScheme adapter is marked unshardable).
+    let taps: Arc<std::sync::Mutex<Vec<Vec<f32>>>> = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let tap_sink = taps.clone();
+    let capture = QuantPipeline::from_fn("capture", move |src, dst| {
+        tap_sink.lock().unwrap().push(src.to_vec());
+        dst.copy_from_slice(src);
+    });
     let tokens = corpus::generate(1234, 8 * 64);
     forward(&cfg, &w, &tokens, 8, Some(&capture))?;
-    let taps = taps.into_inner().unwrap();
+    drop(capture);
+    let taps = std::mem::take(&mut *taps.lock().unwrap());
 
     let univ = env.lobcq(8, 8, 64)?;
     let lcfg = LobcqConfig::new(8, 8, 64);

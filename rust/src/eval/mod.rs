@@ -9,6 +9,8 @@ pub mod scheme;
 pub mod setup;
 pub mod tasks_eval;
 
-pub use perplexity::{ppl_cpu, ppl_pjrt, EvalOpts};
+#[cfg(feature = "pjrt")]
+pub use perplexity::ppl_pjrt;
+pub use perplexity::{ppl_cpu, EvalOpts};
 pub use scheme::Scheme;
 pub use setup::Env;

@@ -5,6 +5,8 @@
 use crate::data::corpus;
 use crate::eval::scheme::Scheme;
 use crate::model::{forward, ModelConfig, Weights};
+use crate::quant::pipeline::QuantPool;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
 
 /// Evaluation workload: windows of `t` tokens from the validation stream.
@@ -45,8 +47,10 @@ pub fn ppl_cpu(
     opts: &EvalOpts,
 ) -> anyhow::Result<f64> {
     let qw = weight_scheme.quantize_weights(cfg, weights);
-    let hook = act_scheme.act_hook();
-    let hook_ref: crate::model::forward::ActQuant = hook.as_deref().map(|h| h as &(dyn Fn(&[f32]) -> Vec<f32> + Sync));
+    // One pipeline for the whole eval: its scratch pool is reused across
+    // every window batch, so only the first forward allocates.
+    let pipe = act_scheme.act_pipeline(QuantPool::default());
+    let hook_ref: crate::model::forward::ActQuant = pipe.as_ref();
     let windows = val_windows(opts);
     let mut nll = 0.0f64;
     let mut count = 0usize;
@@ -76,6 +80,7 @@ pub fn ppl_cpu(
 
 /// Perplexity via a PJRT artifact (weights must be registered; LO-BCQ
 /// variants additionally need a registered books key).
+#[cfg(feature = "pjrt")]
 pub fn ppl_pjrt(
     eng: &mut Engine,
     size: &str,

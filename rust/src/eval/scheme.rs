@@ -1,44 +1,58 @@
-//! Quantization scheme registry for the evaluation harness: one enum
-//! that can (a) fake-quantize a model's GEMM weights offline and (b)
-//! provide the on-the-fly activation hook for the CPU forward — so every
-//! table swaps schemes uniformly.
+//! Quantization scheme registry for the evaluation harness and the
+//! serving coordinator: a thin constructor layer over
+//! `Arc<dyn QuantScheme>` (the one trait LO-BCQ and every baseline
+//! implement) that can (a) fake-quantize a model's GEMM weights offline
+//! and (b) hand out the parallel activation [`QuantPipeline`] consumed by
+//! the CPU forward and the CPU executor — so every table and the serving
+//! path exercise identical quantization code.
 
 use crate::formats::FloatFormat;
 use crate::model::{ModelConfig, Weights};
 use crate::quant::baselines::{
-    FpTensorQuantizer, LloydMaxTensorQuantizer, Mx4Quantizer, Mxfp4Quantizer, Quantizer, VsqQuantizer,
+    FpTensorQuantizer, LloydMaxTensorQuantizer, Mx4Quantizer, Mxfp4Quantizer, VsqQuantizer,
 };
+use crate::quant::calib::LobcqQuantizer;
 use crate::quant::codebook::CodebookFamily;
-use crate::quant::lobcq::{fake_quantize, LobcqConfig};
+use crate::quant::lobcq::LobcqConfig;
+use crate::quant::pipeline::{Bf16Scheme, QuantPipeline, QuantPool, QuantScheme};
 use crate::tensor::Tensor;
+use std::sync::Arc;
 
 /// A weight/activation quantization scheme instance.
 #[derive(Clone)]
 pub enum Scheme {
+    /// The 16-bit eval baseline: weights untouched, no activation hook
+    /// (matching the BF16 artifacts).
     Bf16,
-    /// LO-BCQ with a frozen (universal) family.
-    Lobcq { cfg: LobcqConfig, family: CodebookFamily },
-    Mx4(Mx4Quantizer),
-    Vsq(VsqQuantizer),
-    Mxfp4(Mxfp4Quantizer),
-    /// Per-tensor FP format (Table 11 / Fig. 8).
-    FpTensor(FloatFormat),
-    /// Per-tensor Lloyd-Max (Table 11 / Fig. 8).
-    LloydMax { bits: u32 },
+    /// Any scheme from the unified pipeline (LO-BCQ + all baselines).
+    Quant(Arc<dyn QuantScheme>),
 }
 
 impl Scheme {
+    /// Wrap an arbitrary pipeline scheme.
+    pub fn quant(q: Arc<dyn QuantScheme>) -> Scheme {
+        Scheme::Quant(q)
+    }
+
+    /// LO-BCQ with a frozen (universal) family.
+    pub fn lobcq(cfg: LobcqConfig, family: CodebookFamily) -> Scheme {
+        Scheme::Quant(Arc::new(LobcqQuantizer::universal(cfg, family)))
+    }
+
+    /// Per-tensor FP format (Table 11 / Fig. 8).
+    pub fn fp_tensor(format: FloatFormat) -> Scheme {
+        Scheme::Quant(Arc::new(FpTensorQuantizer::new(format)))
+    }
+
+    /// Per-tensor Lloyd-Max (Table 11 / Fig. 8).
+    pub fn lloyd_max(bits: u32) -> Scheme {
+        Scheme::Quant(Arc::new(LloydMaxTensorQuantizer::new(bits)))
+    }
+
     pub fn name(&self) -> String {
         match self {
             Scheme::Bf16 => "BF16".into(),
-            Scheme::Lobcq { cfg, .. } => {
-                format!("LO-BCQ (g{}, Nc={}, Lb={}, B={})", cfg.la, cfg.nc, cfg.lb, cfg.b)
-            }
-            Scheme::Mx4(q) => q.name(),
-            Scheme::Vsq(q) => q.name(),
-            Scheme::Mxfp4(q) => q.name(),
-            Scheme::FpTensor(f) => format!("FP per-tensor ({})", f.name),
-            Scheme::LloydMax { bits } => format!("Lloyd-Max per-tensor ({bits}b)"),
+            Scheme::Quant(q) => q.name(),
         }
     }
 
@@ -46,63 +60,84 @@ impl Scheme {
     pub fn bits(&self) -> f64 {
         match self {
             Scheme::Bf16 => 16.0,
-            Scheme::Lobcq { cfg, .. } => cfg.bitwidth(),
-            Scheme::Mx4(q) => q.bits_per_scalar(),
-            Scheme::Vsq(q) => q.bits_per_scalar(),
-            Scheme::Mxfp4(q) => q.bits_per_scalar(),
-            Scheme::FpTensor(f) => f.bits() as f64,
-            Scheme::LloydMax { bits } => *bits as f64,
+            Scheme::Quant(q) => q.bits_per_scalar(),
         }
     }
 
-    /// Fake-quantize a flat slice along contiguous groups (reduction dim).
+    /// Fake-quantize a flat slice along contiguous groups (reduction
+    /// dim). Allocating convenience over the serial pipeline path.
     pub fn quantize_flat(&self, data: &[f32]) -> Vec<f32> {
         match self {
-            Scheme::Bf16 => {
-                let mut v = data.to_vec();
-                crate::formats::bf16_round_slice(&mut v);
-                v
-            }
-            Scheme::Lobcq { cfg, family } => fake_quantize(data, cfg, family),
-            Scheme::Mx4(q) => q.quantize(data),
-            Scheme::Vsq(q) => q.quantize(data),
-            Scheme::Mxfp4(q) => q.quantize(data),
-            Scheme::FpTensor(f) => FpTensorQuantizer::new(*f).quantize(data),
-            Scheme::LloydMax { bits } => LloydMaxTensorQuantizer::new(*bits).quantize(data),
+            Scheme::Bf16 => Bf16Scheme.quantize(data),
+            Scheme::Quant(q) => q.quantize(data),
         }
     }
 
     /// Fake-quantize all GEMM weights of a model along the reduction
-    /// dimension (mirror of python `quantize_weight_np`): transpose so K
-    /// is contiguous, quantize, transpose back. Embeddings / LN params
-    /// are untouched (paper §4.1 quantizes GEMM layers only).
+    /// dimension (mirror of python `quantize_weight_np`). Embeddings /
+    /// LN params are untouched (paper §4.1 quantizes GEMM layers only).
+    ///
+    /// The reduction dim (K) is the row index of a `[k, n]` GEMM weight,
+    /// so quantization groups run down columns: we gather the K-major
+    /// strided view into one reused scratch buffer, run the parallel
+    /// in-place pipeline on it, and scatter straight back — replacing the
+    /// old transpose → Vec → transpose chain (three full-tensor
+    /// allocations per weight) with two pooled buffers for the whole
+    /// model.
     pub fn quantize_weights(&self, cfg: &ModelConfig, w: &Weights) -> Weights {
-        if matches!(self, Scheme::Bf16) {
-            return w.clone();
-        }
+        self.quantize_weights_with(cfg, w, QuantPool::default())
+    }
+
+    /// [`quantize_weights`](Self::quantize_weights) with an explicit
+    /// worker pool (serving honors its configured `--workers` here too).
+    pub fn quantize_weights_with(&self, cfg: &ModelConfig, w: &Weights, pool: QuantPool) -> Weights {
+        let q = match self {
+            Scheme::Bf16 => return w.clone(),
+            Scheme::Quant(q) => q,
+        };
         let mut out = w.clone();
+        let mut gathered: Vec<f32> = Vec::new();
+        let mut quantized: Vec<f32> = Vec::new();
         for (name, _) in cfg.param_shapes() {
             if !is_gemm_weight(&name) {
                 continue;
             }
             let t = out.tensors.get(&name).unwrap();
-            let tt = t.transpose2();
-            let q = self.quantize_flat(&tt.data);
-            let qt = Tensor::new(&tt.shape, q).transpose2();
+            let (k, n) = (t.shape[0], t.shape[1]);
+            let len = k * n;
+            gathered.clear();
+            gathered.resize(len, 0.0);
+            quantized.clear();
+            quantized.resize(len, 0.0);
+            // Gather: gathered[c*k + r] = t[r, c] (K contiguous per column).
+            for r in 0..k {
+                let row = &t.data[r * n..(r + 1) * n];
+                for (c, &v) in row.iter().enumerate() {
+                    gathered[c * k + r] = v;
+                }
+            }
+            pool.quantize_into(&**q, &gathered, &mut quantized);
+            let mut qt = Tensor::zeros(&t.shape);
+            for c in 0..n {
+                let col = &quantized[c * k..(c + 1) * k];
+                for (r, &v) in col.iter().enumerate() {
+                    qt.data[r * n + c] = v;
+                }
+            }
             out.tensors.insert(name, qt);
         }
         out
     }
 
-    /// Activation hook for the CPU forward (None for BF16 — the eval
-    /// baseline leaves activations in f32/BF16, matching the artifacts).
-    pub fn act_hook(&self) -> Option<Box<dyn Fn(&[f32]) -> Vec<f32> + Sync + Send>> {
+    /// Activation pipeline for the CPU forward / CPU executor (None for
+    /// BF16 — the eval baseline leaves activations in f32/BF16, matching
+    /// the artifacts). The returned pipeline owns a scratch pool, so a
+    /// caller that keeps it across forwards quantizes with zero
+    /// steady-state allocations.
+    pub fn act_pipeline(&self, pool: QuantPool) -> Option<QuantPipeline> {
         match self {
             Scheme::Bf16 => None,
-            other => {
-                let s = other.clone();
-                Some(Box::new(move |x: &[f32]| s.quantize_flat(x)))
-            }
+            Scheme::Quant(q) => Some(QuantPipeline::new(q.clone(), pool)),
         }
     }
 }
@@ -114,15 +149,15 @@ pub fn is_gemm_weight(name: &str) -> bool {
 
 /// Paper-default baseline instances.
 pub fn mx4() -> Scheme {
-    Scheme::Mx4(Mx4Quantizer::paper_default())
+    Scheme::Quant(Arc::new(Mx4Quantizer::paper_default()))
 }
 
 pub fn vsq() -> Scheme {
-    Scheme::Vsq(VsqQuantizer::paper_default())
+    Scheme::Quant(Arc::new(VsqQuantizer::paper_default()))
 }
 
 pub fn mxfp4() -> Scheme {
-    Scheme::Mxfp4(Mxfp4Quantizer::paper_default())
+    Scheme::Quant(Arc::new(Mxfp4Quantizer::paper_default()))
 }
 
 #[cfg(test)]
@@ -149,8 +184,32 @@ mod tests {
             q.get("l0.attn.wqkv").unwrap().data,
             w.get("l0.attn.wqkv").unwrap().data
         );
-        // Shapes preserved through the transpose round trip.
+        // Shapes preserved through the gather/scatter round trip.
         assert_eq!(q.get("l0.mlp.w1").unwrap().shape, w.get("l0.mlp.w1").unwrap().shape);
+    }
+
+    #[test]
+    fn quantize_weights_matches_transpose_reference() {
+        // The strided gather/scatter path must equal the original
+        // transpose → quantize_flat → transpose composition bit-for-bit.
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 21);
+        for scheme in [mx4(), vsq(), mxfp4()] {
+            let fast = scheme.quantize_weights(&cfg, &w);
+            for (name, _) in cfg.param_shapes() {
+                if !is_gemm_weight(&name) {
+                    continue;
+                }
+                let t = w.get(&name).unwrap();
+                let tt = t.transpose2();
+                let want = Tensor::new(&tt.shape, scheme.quantize_flat(&tt.data)).transpose2();
+                let got = fast.get(&name).unwrap();
+                assert_eq!(got.shape, want.shape);
+                for (a, b) in got.data.iter().zip(&want.data) {
+                    assert!(a == b, "{}: {} vs {} ({})", scheme.name(), a, b, name);
+                }
+            }
+        }
     }
 
     #[test]
@@ -158,5 +217,13 @@ mod tests {
         assert_eq!(mx4().bits(), 4.5);
         assert_eq!(mxfp4().bits(), 4.25);
         assert_eq!(Scheme::Bf16.bits(), 16.0);
+    }
+
+    #[test]
+    fn act_pipeline_gating() {
+        assert!(Scheme::Bf16.act_pipeline(QuantPool::serial()).is_none());
+        let p = mx4().act_pipeline(QuantPool::serial()).unwrap();
+        let x: Vec<f32> = (0..64).map(|i| i as f32 / 7.0 - 4.0).collect();
+        assert_eq!(p.quantize(&x), mx4().quantize_flat(&x));
     }
 }

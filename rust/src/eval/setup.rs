@@ -139,7 +139,7 @@ impl Env {
     pub fn lobcq_bits(&self, lb: usize, nc: usize, la: usize, b: u32, bc: u32) -> anyhow::Result<crate::eval::scheme::Scheme> {
         let cfg = LobcqConfig::new(lb, nc, la).with_bits(b).with_codeword_bits(bc);
         cfg.validate()?;
-        Ok(crate::eval::scheme::Scheme::Lobcq { cfg, family: self.family_for_eval(nc, b, bc)? })
+        Ok(crate::eval::scheme::Scheme::lobcq(cfg, self.family_for_eval(nc, b, bc)?))
     }
 
     /// Flatten a family into the (Nc, entries) tensor the PJRT graphs take.

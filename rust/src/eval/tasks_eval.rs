@@ -18,8 +18,8 @@ pub fn task_accuracy(
 ) -> anyhow::Result<f64> {
     anyhow::ensure!(!items.is_empty(), "no task items");
     let qw = weight_scheme.quantize_weights(cfg, weights);
-    let hook = act_scheme.act_hook();
-    let hook_ref: crate::model::forward::ActQuant = hook.as_deref().map(|h| h as &(dyn Fn(&[f32]) -> Vec<f32> + Sync));
+    let pipe = act_scheme.act_pipeline(crate::quant::pipeline::QuantPool::default());
+    let hook_ref: crate::model::forward::ActQuant = pipe.as_ref();
 
     let mut correct = 0usize;
     // Batch items: each item needs logits at its prefix frontier. Pack up

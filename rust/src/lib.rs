@@ -8,12 +8,34 @@
 //! - **L2** (`python/compile/model.py`): tiny-GPT forward in JAX, lowered
 //!   AOT to HLO text artifacts.
 //! - **L3** (this crate): the serving coordinator (router → dynamic
-//!   batcher → scheduler → PJRT executor pool) with on-the-fly activation
+//!   batcher → scheduler → executor pool) with on-the-fly activation
 //!   quantization, the full LO-BCQ algorithm + baselines, and the
 //!   experiment harness reproducing every table and figure in the paper.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
-//! paper-vs-measured results.
+//! Every quantizer — LO-BCQ and all five baselines — implements the one
+//! [`QuantScheme`](quant::pipeline::QuantScheme) trait and runs through
+//! the shared parallel in-place pipeline (`quant::pipeline`), so
+//! calibration, every eval table, and the serving path exercise identical
+//! code. The PJRT execution layer sits behind the off-by-default `pjrt`
+//! cargo feature.
+//!
+//! See DESIGN.md for the system inventory (including the pipeline's
+//! threading/buffer model) and EXPERIMENTS.md for paper-vs-measured
+//! results.
+
+// Style lints tuned for numeric-kernel code: indexed loops mirror the
+// paper's equations and the Pallas kernels they must stay diffable with.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::identity_op,
+    clippy::excessive_precision,
+    clippy::uninlined_format_args,
+    clippy::new_without_default,
+    clippy::len_without_is_empty,
+    clippy::type_complexity,
+    clippy::manual_memcpy
+)]
 
 pub mod formats;
 pub mod tensor;

@@ -2,13 +2,13 @@
 //! experiment harness, all over the AOT artifacts (Python never runs on
 //! the request path).
 
-use lobcq::coordinator::{BatchPolicy, Limits, PjrtExecutor, Sampling, Server};
+use lobcq::coordinator::{BatchPolicy, CpuExecutor, Limits, Sampling, Server};
 use lobcq::data::corpus;
 use lobcq::eval::{experiments, Env};
-use lobcq::model::Weights;
 use lobcq::quant::calib::calibrate_universal;
 use lobcq::quant::lobcq::{CalibOpts, LobcqConfig};
-use lobcq::runtime::{Manifest, RuntimeService};
+use lobcq::quant::pipeline::QuantPool;
+use lobcq::runtime::Manifest;
 use lobcq::tensor::Tensor;
 use lobcq::util::cli::{render_help, Args, OptSpec};
 use lobcq::util::json::Json;
@@ -33,6 +33,7 @@ fn dispatch(argv: &[String]) -> anyhow::Result<()> {
     let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
     match cmd {
         "serve" => serve(rest),
+        "serve-cpu" => serve_cpu(rest),
         "bench" => bench(rest),
         "eval" => eval(rest),
         "calibrate" => calibrate(rest),
@@ -50,7 +51,9 @@ fn print_help() {
     println!(
         "lobcq — LO-BCQ W4A4 serving + experiment harness\n\n\
          commands:\n\
-         \x20 serve       run the serving coordinator on a synthetic workload\n\
+         \x20 serve       run the serving coordinator on a synthetic workload (PJRT)\n\
+         \x20 serve-cpu   serve through the CPU executor with on-the-fly W4A4\n\
+         \x20             activation quantization (no artifacts needed)\n\
          \x20 bench       run a paper experiment (--exp tab1..tab11, fig1..fig9, all)\n\
          \x20 eval        perplexity of one artifact variant via PJRT\n\
          \x20 calibrate   run LO-BCQ calibration in rust, dump codebooks\n\
@@ -65,7 +68,16 @@ fn artifacts_opt() -> OptSpec {
 
 // ---- serve ----
 
+#[cfg(not(feature = "pjrt"))]
+fn serve(_argv: &[String]) -> anyhow::Result<()> {
+    anyhow::bail!("`serve` needs the PJRT runtime: rebuild with --features pjrt (or use `serve-cpu`)")
+}
+
+#[cfg(feature = "pjrt")]
 fn serve(argv: &[String]) -> anyhow::Result<()> {
+    use lobcq::coordinator::PjrtExecutor;
+    use lobcq::model::Weights;
+    use lobcq::runtime::RuntimeService;
     let specs = [
         artifacts_opt(),
         OptSpec { name: "size", help: "model size (s|m|l)", takes_value: true, default: Some("m") },
@@ -155,6 +167,127 @@ fn serve(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+// ---- serve-cpu ----
+
+/// Serve through the CPU executor: weights quantized offline, activations
+/// quantized on the fly at every GEMM by the unified pipeline — the
+/// artifact-free demonstration of paper §3's deployment mode. The whole
+/// request path (router → batcher → scheduler → executor) is identical to
+/// the PJRT `serve`; only the step executor differs.
+fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
+    let specs = [
+        artifacts_opt(),
+        OptSpec { name: "scheme", help: "bf16|lobcq|mx4|vsq|mxfp4", takes_value: true, default: Some("lobcq") },
+        OptSpec { name: "requests", help: "synthetic request count", takes_value: true, default: Some("32") },
+        OptSpec { name: "max-new", help: "tokens to generate per request", takes_value: true, default: Some("4") },
+        OptSpec { name: "max-batch", help: "dynamic batch limit", takes_value: true, default: Some("8") },
+        OptSpec { name: "max-wait-ms", help: "batcher wait", takes_value: true, default: Some("4") },
+        OptSpec { name: "workers", help: "quantization worker threads (0 = all cores)", takes_value: true, default: Some("0") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        println!("{}", render_help("serve-cpu", "serve via the CPU executor + quant pipeline", &specs));
+        return Ok(());
+    }
+    let env = Env::load_from(PathBuf::from(args.str_or("artifacts", "artifacts")));
+    let n_requests = args.usize_or("requests", 32)?;
+    let max_new = args.usize_or("max-new", 4)?;
+    let max_batch = args.usize_or("max-batch", 8)?.max(1);
+    let workers = args.usize_or("workers", 0)?;
+    let pool = if workers == 0 { QuantPool::default() } else { QuantPool::with_workers(workers) };
+
+    let scheme = match args.str_or("scheme", "lobcq") {
+        "bf16" => lobcq::eval::Scheme::Bf16,
+        "lobcq" => env.lobcq(8, 8, 64)?,
+        "mx4" => lobcq::eval::scheme::mx4(),
+        "vsq" => lobcq::eval::scheme::vsq(),
+        "mxfp4" => lobcq::eval::scheme::mxfp4(),
+        other => anyhow::bail!("unknown scheme '{other}'"),
+    };
+
+    // Model: trained artifacts when present, else a deterministic random
+    // tiny-GPT over the corpus vocabulary.
+    let (cfg, weights) = match (env.model_config("s"), env.weights("s")) {
+        (Ok(c), Ok(w)) => (c, w),
+        _ => {
+            println!("[serve-cpu] no artifacts — using a random tiny-GPT");
+            synthetic_model()
+        }
+    };
+
+    let t = 32.min(cfg.max_t);
+    let exec = CpuExecutor::new(cfg.clone(), &weights, &scheme, pool, max_batch, t)?;
+    println!(
+        "[serve-cpu] model {} ({} params), scheme {}, batch {max_batch}, t {t}",
+        cfg.name,
+        cfg.param_count(),
+        exec.act_scheme_name()
+    );
+    let vocab = cfg.vocab as u32;
+    let server = Server::start(
+        exec,
+        BatchPolicy {
+            max_batch,
+            max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 4)?),
+        },
+        Limits { max_prompt: t, max_new: max_new.max(1), vocab },
+        Sampling::Greedy,
+    );
+
+    println!("[serve-cpu] firing {n_requests} requests (max_new {max_new})");
+    let t0 = Instant::now();
+    let server = std::sync::Arc::new(server);
+    let mut handles = Vec::new();
+    for i in 0..n_requests {
+        let s = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let prompt: Vec<u32> =
+                corpus::generate(9100 + i as u64, 12).into_iter().map(|x| x % vocab).collect();
+            s.submit(prompt, max_new).unwrap().wait()
+        }));
+    }
+    let mut ok = 0;
+    for h in handles {
+        if h.join().unwrap().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("[serve-cpu] {ok}/{n_requests} ok in {wall:.2}s");
+    println!("[serve-cpu] {}", server.metrics.snapshot().report());
+    if let Ok(s) = std::sync::Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+    Ok(())
+}
+
+/// Deterministic random tiny-GPT over the corpus vocab (no artifacts).
+fn synthetic_model() -> (lobcq::model::ModelConfig, lobcq::model::Weights) {
+    let cfg = lobcq::model::ModelConfig {
+        name: "cpu-demo".into(),
+        d: 64,
+        n_layers: 2,
+        n_heads: 2,
+        vocab: corpus::VOCAB as usize,
+        max_t: 64,
+    };
+    let mut rng = Pcg32::seeded(0xCDE);
+    let mut tensors = std::collections::BTreeMap::new();
+    for (name, shape) in cfg.param_shapes() {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with(".g") {
+            vec![1.0; n]
+        } else if name.ends_with(".b") {
+            vec![0.0; n]
+        } else {
+            (0..n).map(|_| rng.normal() * 0.05).collect()
+        };
+        tensors.insert(name, Tensor::new(&shape, data));
+    }
+    (cfg, lobcq::model::Weights { tensors })
+}
+
 // ---- bench (experiments) ----
 
 fn bench(argv: &[String]) -> anyhow::Result<()> {
@@ -197,6 +330,12 @@ fn bench(argv: &[String]) -> anyhow::Result<()> {
 
 // ---- eval (PJRT perplexity) ----
 
+#[cfg(not(feature = "pjrt"))]
+fn eval(_argv: &[String]) -> anyhow::Result<()> {
+    anyhow::bail!("`eval` needs the PJRT runtime: rebuild with --features pjrt (CPU-path tables run via `bench`)")
+}
+
+#[cfg(feature = "pjrt")]
 fn eval(argv: &[String]) -> anyhow::Result<()> {
     let specs = [
         artifacts_opt(),

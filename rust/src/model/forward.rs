@@ -11,11 +11,17 @@
 
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
+use crate::quant::pipeline::QuantPipeline;
 use crate::tensor::Tensor;
 
 /// Activation fake-quantizer applied at every GEMM input (the in-graph
 /// counterpart of the actq artifact variants). `None` = bf16 path.
-pub type ActQuant<'a> = Option<&'a (dyn Fn(&[f32]) -> Vec<f32> + Sync)>;
+///
+/// The pipeline's scratch pool makes the steady-state forward
+/// allocation-free on the quantization path: each GEMM input is
+/// quantized into a pooled buffer that is recycled right after the
+/// matmul.
+pub type ActQuant<'a> = Option<&'a QuantPipeline>;
 
 /// Parallel matmul: `a [m,k] @ b [k,n]`, rows split across threads.
 pub fn matmul_par(a: &Tensor, b: &Tensor) -> Tensor {
@@ -91,9 +97,11 @@ fn softmax_rows(x: &mut [f32], cols: usize) {
 fn qmatmul(x: &Tensor, w: &Tensor, act_q: ActQuant) -> Tensor {
     match act_q {
         None => matmul_par(x, w),
-        Some(q) => {
-            let xq = Tensor::new(&x.shape, q(&x.data));
-            matmul_par(&xq, w)
+        Some(pipe) => {
+            let xq = Tensor::new(&x.shape, pipe.quantize_pooled(&x.data));
+            let out = matmul_par(&xq, w);
+            pipe.recycle(xq.data);
+            out
         }
     }
 }
@@ -265,10 +273,12 @@ mod tests {
         let w = random_weights(&cfg, 4);
         let tokens: Vec<u32> = (0..8).map(|i| (i % 40) as u32).collect();
         let base = forward(&cfg, &w, &tokens, 1, None).unwrap();
-        let crush = |x: &[f32]| -> Vec<f32> {
-            // Coarse 3-bit-ish quantizer as a stand-in hook.
-            x.iter().map(|&v| (v * 4.0).round() / 4.0).collect()
-        };
+        // Coarse 3-bit-ish quantizer as a stand-in hook.
+        let crush = QuantPipeline::from_fn("crush", |src, dst| {
+            for (o, &v) in dst.iter_mut().zip(src) {
+                *o = (v * 4.0).round() / 4.0;
+            }
+        });
         let q = forward(&cfg, &w, &tokens, 1, Some(&crush)).unwrap();
         let num: f64 = base.data.iter().zip(&q.data).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
         let den: f64 = base.data.iter().map(|a| (*a as f64).powi(2)).sum();

@@ -5,8 +5,8 @@
 //! nearest (eq. 14), rescale. Used for the Fig. 8 / Table 11 comparison
 //! against per-tensor Lloyd-Max.
 
-use super::Quantizer;
 use crate::formats::FloatFormat;
+use crate::quant::pipeline::{PrepState, QuantScheme};
 
 #[derive(Debug, Clone, Copy)]
 pub struct FpTensorQuantizer {
@@ -19,7 +19,7 @@ impl FpTensorQuantizer {
     }
 }
 
-impl Quantizer for FpTensorQuantizer {
+impl QuantScheme for FpTensorQuantizer {
     fn name(&self) -> String {
         format!("FP per-tensor ({})", self.format.name)
     }
@@ -29,14 +29,27 @@ impl Quantizer for FpTensorQuantizer {
         self.format.bits() as f64
     }
 
-    fn quantize(&self, data: &[f32]) -> Vec<f32> {
-        let amax = crate::util::stats::amax(data);
-        if amax == 0.0 {
-            return data.to_vec();
+    fn group_len(&self) -> usize {
+        1
+    }
+
+    /// eq. 13: s_X = max|X| / max(format) — we store the inverse (0 for
+    /// the all-zero tensor, which quantizes to identity).
+    fn prepare(&self, src: &[f32]) -> PrepState {
+        let amax = crate::util::stats::amax(src);
+        let scale = if amax > 0.0 { self.format.max_value / amax } else { 0.0 };
+        PrepState { scale, ..Default::default() }
+    }
+
+    fn quantize_groups(&self, prep: &PrepState, src: &[f32], dst: &mut [f32]) {
+        let scale = prep.scale;
+        if scale == 0.0 {
+            dst.copy_from_slice(src);
+            return;
         }
-        // eq. 13: s_X = max|X| / max(format) — we apply the inverse.
-        let scale = self.format.max_value / amax;
-        data.iter().map(|&x| self.format.quantize(x * scale) / scale).collect()
+        for (o, &x) in dst.iter_mut().zip(src) {
+            *o = self.format.quantize(x * scale) / scale;
+        }
     }
 }
 

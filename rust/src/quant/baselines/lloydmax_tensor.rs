@@ -5,8 +5,8 @@
 //! quantization at coarse granularity is insufficient (motivating the
 //! per-block design of LO-BCQ).
 
-use super::Quantizer;
 use crate::quant::lloyd_max::{lloyd_max, nearest_level, LloydMaxOpts};
+use crate::quant::pipeline::{PrepState, QuantScheme};
 
 #[derive(Debug, Clone, Copy)]
 pub struct LloydMaxTensorQuantizer {
@@ -19,7 +19,7 @@ impl LloydMaxTensorQuantizer {
     }
 }
 
-impl Quantizer for LloydMaxTensorQuantizer {
+impl QuantScheme for LloydMaxTensorQuantizer {
     fn name(&self) -> String {
         format!("Lloyd-Max per-tensor ({}b)", self.bits)
     }
@@ -28,9 +28,21 @@ impl Quantizer for LloydMaxTensorQuantizer {
         self.bits as f64
     }
 
-    fn quantize(&self, data: &[f32]) -> Vec<f32> {
-        let fit = lloyd_max(data, self.bits, LloydMaxOpts::default());
-        data.iter().map(|&x| nearest_level(&fit.levels, x)).collect()
+    fn group_len(&self) -> usize {
+        1
+    }
+
+    /// The expensive whole-tensor part: the MSE-optimal level fit. The
+    /// nearest-level application below is then embarrassingly parallel.
+    fn prepare(&self, src: &[f32]) -> PrepState {
+        let fit = lloyd_max(src, self.bits, LloydMaxOpts::default());
+        PrepState { levels: fit.levels, ..Default::default() }
+    }
+
+    fn quantize_groups(&self, prep: &PrepState, src: &[f32], dst: &mut [f32]) {
+        for (o, &x) in dst.iter_mut().zip(src) {
+            *o = nearest_level(&prep.levels, x);
+        }
     }
 }
 

@@ -1,9 +1,12 @@
 //! Baseline quantizers the paper compares against (§4.1, appendix A.5):
 //! VSQ, MX4, MXFP4, per-tensor FP formats, and per-tensor Lloyd-Max.
 //!
-//! All baselines implement [`Quantizer`], a fake-quantize interface over
-//! flat data (the evaluation harness swaps them uniformly, Tables 2/6/7
-//! and Fig. 1).
+//! All baselines implement the unified
+//! [`QuantScheme`](crate::quant::pipeline::QuantScheme) trait — the same
+//! interface LO-BCQ serves through — so the evaluation harness, the CPU
+//! forward's activation hook, and the serving coordinator swap them
+//! uniformly (Tables 2/6/7 and Fig. 1) and all ride the shared parallel
+//! in-place pipeline.
 
 pub mod fp_tensor;
 pub mod lloydmax_tensor;
@@ -17,21 +20,10 @@ pub use mx::Mx4Quantizer;
 pub use mxfp::Mxfp4Quantizer;
 pub use vsq::VsqQuantizer;
 
-/// A fake-quantizer over flat f32 data: returns the dequantized values
-/// (quantize→dequantize), leaving the caller to compute error metrics.
-pub trait Quantizer {
-    /// Human-readable name (report rows).
-    fn name(&self) -> String;
-    /// Effective bits per scalar including metadata overheads.
-    fn bits_per_scalar(&self) -> f64;
-    /// Fake-quantize: data length must be a multiple of the scheme's
-    /// group size.
-    fn quantize(&self, data: &[f32]) -> Vec<f32>;
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::pipeline::QuantScheme;
     use crate::util::rng::{llm_like_sample, Pcg32};
     use crate::util::stats::nmse;
 
@@ -46,7 +38,7 @@ mod tests {
     #[test]
     fn baseline_nmse_ordering_vs_lobcq() {
         let data = sample(64 * 256);
-        let baselines: Vec<Box<dyn Quantizer>> = vec![
+        let baselines: Vec<Box<dyn QuantScheme>> = vec![
             Box::new(VsqQuantizer::paper_default()),
             Box::new(Mx4Quantizer::paper_default()),
             Box::new(Mxfp4Quantizer::paper_default()),

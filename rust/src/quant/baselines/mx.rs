@@ -5,9 +5,12 @@
 //! shared per 2-element sub-block) with a per-16-element block scale in
 //! E8M0 (power of two, floor mode) and no per-tensor scaling. Effective
 //! bitwidth 4 + 8/16 = 4.5 bits ("MX4 (g16)" rows).
+//!
+//! Fully block-local — no per-tensor statistic — so the pipeline driver
+//! shards it freely.
 
-use super::Quantizer;
 use crate::formats::{FloatFormat, E1M2, E8M0};
+use crate::quant::pipeline::{PrepState, QuantScheme};
 
 #[derive(Debug, Clone, Copy)]
 pub struct Mx4Quantizer {
@@ -23,7 +26,7 @@ impl Mx4Quantizer {
     }
 }
 
-impl Quantizer for Mx4Quantizer {
+impl QuantScheme for Mx4Quantizer {
     fn name(&self) -> String {
         format!("MX4 (g{})", self.block_len)
     }
@@ -32,13 +35,15 @@ impl Quantizer for Mx4Quantizer {
         self.scalar.bits() as f64 + E8M0::BITS as f64 / self.block_len as f64
     }
 
-    fn quantize(&self, data: &[f32]) -> Vec<f32> {
-        assert!(data.len() % self.block_len == 0);
-        let mut out = Vec::with_capacity(data.len());
-        for block in data.chunks_exact(self.block_len) {
+    fn group_len(&self) -> usize {
+        self.block_len
+    }
+
+    fn quantize_groups(&self, _prep: &PrepState, src: &[f32], dst: &mut [f32]) {
+        for (block, out) in src.chunks_exact(self.block_len).zip(dst.chunks_exact_mut(self.block_len)) {
             let amax = crate::util::stats::amax(block);
             if amax == 0.0 {
-                out.extend(std::iter::repeat(0.0).take(self.block_len));
+                out.fill(0.0);
                 continue;
             }
             // E8M0 floor scale: largest power of two with
@@ -46,11 +51,10 @@ impl Quantizer for Mx4Quantizer {
             // is 2^floor(log2(amax)) / 2^emax_elem).
             let ideal = self.scalar.max_value / amax;
             let scale = E8M0::quantize_floor(ideal);
-            for &x in block {
-                out.push(self.scalar.quantize(x * scale) / scale);
+            for (o, &x) in out.iter_mut().zip(block) {
+                *o = self.scalar.quantize(x * scale) / scale;
             }
         }
-        out
     }
 }
 

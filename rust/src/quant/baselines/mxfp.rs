@@ -4,8 +4,8 @@
 //! (power-of-two, floor) scale, no per-tensor scale. Effective bitwidth
 //! 4 + 8/32 = 4.25 bits ("MXFP4 (g32)" rows).
 
-use super::Quantizer;
 use crate::formats::{FloatFormat, E2M1, E8M0};
+use crate::quant::pipeline::{PrepState, QuantScheme};
 
 #[derive(Debug, Clone, Copy)]
 pub struct Mxfp4Quantizer {
@@ -19,7 +19,7 @@ impl Mxfp4Quantizer {
     }
 }
 
-impl Quantizer for Mxfp4Quantizer {
+impl QuantScheme for Mxfp4Quantizer {
     fn name(&self) -> String {
         format!("MXFP4 (g{})", self.block_len)
     }
@@ -28,21 +28,22 @@ impl Quantizer for Mxfp4Quantizer {
         self.scalar.bits() as f64 + E8M0::BITS as f64 / self.block_len as f64
     }
 
-    fn quantize(&self, data: &[f32]) -> Vec<f32> {
-        assert!(data.len() % self.block_len == 0);
-        let mut out = Vec::with_capacity(data.len());
-        for block in data.chunks_exact(self.block_len) {
+    fn group_len(&self) -> usize {
+        self.block_len
+    }
+
+    fn quantize_groups(&self, _prep: &PrepState, src: &[f32], dst: &mut [f32]) {
+        for (block, out) in src.chunks_exact(self.block_len).zip(dst.chunks_exact_mut(self.block_len)) {
             let amax = crate::util::stats::amax(block);
             if amax == 0.0 {
-                out.extend(std::iter::repeat(0.0).take(self.block_len));
+                out.fill(0.0);
                 continue;
             }
             let scale = E8M0::quantize_floor(self.scalar.max_value / amax);
-            for &x in block {
-                out.push(self.scalar.quantize(x * scale) / scale);
+            for (o, &x) in out.iter_mut().zip(block) {
+                *o = self.scalar.quantize(x * scale) / scale;
             }
         }
-        out
     }
 }
 

@@ -11,8 +11,8 @@
 //! — our implementation reproduces that failure shape on synthetic
 //! wide-range operands (see tests).
 
-use super::Quantizer;
 use crate::formats::IntFormat;
+use crate::quant::pipeline::{PrepState, QuantScheme};
 
 #[derive(Debug, Clone, Copy)]
 pub struct VsqQuantizer {
@@ -34,7 +34,7 @@ impl VsqQuantizer {
     }
 }
 
-impl Quantizer for VsqQuantizer {
+impl QuantScheme for VsqQuantizer {
     fn name(&self) -> String {
         format!("VSQ (g{})", self.vec_len)
     }
@@ -43,42 +43,45 @@ impl Quantizer for VsqQuantizer {
         self.scalar.bits as f64 + self.scale_bits as f64 / self.vec_len as f64
     }
 
-    fn quantize(&self, data: &[f32]) -> Vec<f32> {
-        assert!(
-            data.len() % self.vec_len == 0,
-            "data length {} not a multiple of vector length {}",
-            data.len(),
-            self.vec_len
-        );
+    fn group_len(&self) -> usize {
+        self.vec_len
+    }
+
+    /// Per-tensor pass: the second-level scale grid `s2`. The per-vector
+    /// ideal scales s_v = smax / amax(v) are recomputed locally in
+    /// `quantize_groups` — only their maximum is a tensor-global
+    /// statistic (Dai et al. §IV: per-tensor max-scaled linear grid).
+    fn prepare(&self, src: &[f32]) -> PrepState {
         let smax = self.scalar.max_level() as f32;
-        // First pass: per-vector ideal scales s_v = smax / amax(v).
-        let n_vec = data.len() / self.vec_len;
-        let mut scales = Vec::with_capacity(n_vec);
-        for v in data.chunks_exact(self.vec_len) {
+        let mut scale_max = 0.0f32;
+        for v in src.chunks_exact(self.vec_len) {
             let amax = crate::util::stats::amax(v);
-            scales.push(if amax > 0.0 { smax / amax } else { 0.0 });
+            let s = if amax > 0.0 { smax / amax } else { 0.0 };
+            scale_max = scale_max.max(s);
         }
-        // Second level: quantize the scales to unsigned INT-`scale_bits`
-        // with a per-tensor max-scaled linear grid (Dai et al. §IV).
-        let scale_max = scales.iter().cloned().fold(0.0f32, f32::max);
         let levels = ((1u32 << self.scale_bits) - 1) as f32;
         let s2 = if scale_max > 0.0 { levels / scale_max } else { 0.0 };
+        PrepState { scale: s2, ..Default::default() }
+    }
 
-        let mut out = Vec::with_capacity(data.len());
-        for (vi, v) in data.chunks_exact(self.vec_len).enumerate() {
+    fn quantize_groups(&self, prep: &PrepState, src: &[f32], dst: &mut [f32]) {
+        let smax = self.scalar.max_level() as f32;
+        let s2 = prep.scale;
+        for (v, out) in src.chunks_exact(self.vec_len).zip(dst.chunks_exact_mut(self.vec_len)) {
+            let amax = crate::util::stats::amax(v);
+            let s_v = if amax > 0.0 { smax / amax } else { 0.0 };
             // Quantized per-vector scale (round to the UINT8 grid).
-            let qs = if s2 > 0.0 { (scales[vi] * s2).round().max(0.0) / s2 } else { 0.0 };
+            let qs = if s2 > 0.0 { (s_v * s2).round().max(0.0) / s2 } else { 0.0 };
             if qs == 0.0 {
                 // Scale underflow: the whole vector collapses to zero —
                 // the VSQ failure mode on wide-dynamic-range tensors.
-                out.extend(std::iter::repeat(0.0).take(self.vec_len));
+                out.fill(0.0);
                 continue;
             }
-            for &x in v {
-                out.push(self.scalar.quantize(x * qs) / qs);
+            for (o, &x) in out.iter_mut().zip(v) {
+                *o = self.scalar.quantize(x * qs) / qs;
             }
         }
-        out
     }
 }
 

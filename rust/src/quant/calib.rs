@@ -1,6 +1,7 @@
 //! Calibration drivers: universal vs layerwise codebooks (paper §3, §4.3,
-//! Fig. 7, Table 9) and the [`Quantizer`] adapter for LO-BCQ so the
-//! evaluation harness can swap it against the baselines uniformly.
+//! Fig. 7, Table 9) and the [`QuantScheme`] adapter for LO-BCQ so the
+//! evaluation harness and the serving coordinator swap it against the
+//! baselines uniformly over the shared parallel pipeline.
 //!
 //! *Universal* calibration pools normalized blocks sampled from a proxy
 //! model's weights and activations (the paper uses GPT3-126M on
@@ -9,9 +10,9 @@
 //! mode. *Layerwise* calibration refits per tensor (more effort, Table 9
 //! shows little benefit for Nc > 4).
 
-use super::baselines::Quantizer;
 use super::codebook::CodebookFamily;
 use super::lobcq::{self, CalibOpts, LobcqConfig};
+use super::pipeline::{PrepState, QuantScheme};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 
@@ -38,8 +39,9 @@ pub fn calibrate_universal(
     calib.family.quantize_codewords(cfg.bc)
 }
 
-/// LO-BCQ as a [`Quantizer`]: either a frozen universal family or
-/// layerwise self-calibration on each quantize call.
+/// LO-BCQ as a [`QuantScheme`]: either a frozen universal family or
+/// layerwise self-calibration (refit once per tensor in `prepare`, then
+/// group-parallel application like every other scheme).
 pub struct LobcqQuantizer {
     pub cfg: LobcqConfig,
     pub scope: CalibScope,
@@ -62,38 +64,55 @@ impl LobcqQuantizer {
     }
 }
 
-impl Quantizer for LobcqQuantizer {
+impl QuantScheme for LobcqQuantizer {
     fn name(&self) -> String {
-        let scope = match self.scope {
-            CalibScope::Universal => "univ",
-            CalibScope::Layerwise => "layer",
-        };
-        format!("LO-BCQ (g{}, Nc={}, {scope})", self.cfg.la, self.cfg.nc, scope = scope)
+        match self.scope {
+            CalibScope::Universal => format!(
+                "LO-BCQ (g{}, Nc={}, Lb={}, B={})",
+                self.cfg.la, self.cfg.nc, self.cfg.lb, self.cfg.b
+            ),
+            CalibScope::Layerwise => {
+                format!("LO-BCQ (g{}, Nc={}, layer)", self.cfg.la, self.cfg.nc)
+            }
+        }
     }
 
     fn bits_per_scalar(&self) -> f64 {
         self.cfg.bitwidth()
     }
 
-    fn quantize(&self, data: &[f32]) -> Vec<f32> {
-        match self.scope {
-            CalibScope::Universal => {
-                let family = self.family.as_ref().expect("universal scope requires a family");
-                lobcq::fake_quantize(data, &self.cfg, family)
-            }
+    fn group_len(&self) -> usize {
+        self.cfg.la
+    }
+
+    /// Universal scope: the per-tensor scale s_X (eq. 8). Layerwise
+    /// scope additionally refits the codebook family on the tensor —
+    /// bounded (subsampled rows, capped iterations) so per-tensor
+    /// calibration stays cheap inside eval sweeps (Table 9 / Fig. 7 run
+    /// this once per GEMM tensor).
+    fn prepare(&self, src: &[f32]) -> PrepState {
+        let s_x = lobcq::tensor_scale(src, &self.cfg);
+        let family = match self.scope {
+            CalibScope::Universal => None,
             CalibScope::Layerwise => {
-                // Bounded refit: subsample rows and cap iterations so the
-                // per-tensor calibration stays cheap inside eval sweeps
-                // (Table 9 / Fig. 7 run this once per GEMM call).
-                let t = Tensor::new(&[data.len() / self.cfg.la, self.cfg.la], data.to_vec());
+                let t = Tensor::new(&[src.len() / self.cfg.la, self.cfg.la], src.to_vec());
                 let rows = 2048 / self.cfg.la.max(1) + 8;
                 let sampled = sample_rows(&[&t], rows.max(16), self.seed ^ 0xA5);
                 let refs: Vec<&Tensor> = sampled.iter().collect();
                 let opts = CalibOpts { max_iters: 15, ..CalibOpts::default() };
-                let family = calibrate_universal(&refs, &self.cfg, opts, self.seed);
-                lobcq::fake_quantize(data, &self.cfg, &family)
+                Some(calibrate_universal(&refs, &self.cfg, opts, self.seed))
             }
-        }
+        };
+        PrepState { scale: s_x, family, ..Default::default() }
+    }
+
+    fn quantize_groups(&self, prep: &PrepState, src: &[f32], dst: &mut [f32]) {
+        let family = prep
+            .family
+            .as_ref()
+            .or(self.family.as_ref())
+            .expect("universal scope requires a frozen family");
+        lobcq::quantize_arrays_into(&self.cfg, family, prep.scale, src, dst);
     }
 }
 

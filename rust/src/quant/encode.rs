@@ -105,6 +105,55 @@ pub struct EncodedTensor {
 }
 
 impl EncodedTensor {
+    /// Construct with shape/config divisibility validation: a scalar
+    /// count that is not a multiple of `L_b`/`L_A` would silently
+    /// truncate `num_blocks`/`num_arrays` (and therefore the bitstream),
+    /// so it is rejected here instead.
+    pub fn try_new(
+        cfg: LobcqConfig,
+        shape: Vec<usize>,
+        s_x: f32,
+        scale_codes: Vec<u8>,
+        selectors: Vec<u8>,
+        indices: Vec<u8>,
+    ) -> anyhow::Result<EncodedTensor> {
+        cfg.validate()?;
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n > 0, "empty tensor shape {shape:?}");
+        anyhow::ensure!(
+            n % cfg.lb == 0,
+            "scalar count {n} (shape {shape:?}) not a multiple of L_b {}",
+            cfg.lb
+        );
+        anyhow::ensure!(
+            n % cfg.la == 0,
+            "scalar count {n} (shape {shape:?}) not a multiple of L_A {}",
+            cfg.la
+        );
+        let enc = EncodedTensor { cfg, shape, s_x, scale_codes, selectors, indices };
+        anyhow::ensure!(
+            enc.scale_codes.len() == enc.num_arrays(),
+            "{} scale codes for {} block arrays",
+            enc.scale_codes.len(),
+            enc.num_arrays()
+        );
+        // Bitstream payloads must match the header-derived bit counts —
+        // a short buffer would panic inside decode's BitReader instead.
+        let sel_bytes = (enc.num_blocks() * enc.selector_bits() as usize).div_ceil(8);
+        anyhow::ensure!(
+            enc.selectors.len() == sel_bytes,
+            "{} selector bytes, expected {sel_bytes}",
+            enc.selectors.len()
+        );
+        let idx_bytes = (n * enc.cfg.b as usize).div_ceil(8);
+        anyhow::ensure!(
+            enc.indices.len() == idx_bytes,
+            "{} index bytes, expected {idx_bytes}",
+            enc.indices.len()
+        );
+        Ok(enc)
+    }
+
     pub fn num_scalars(&self) -> usize {
         self.shape.iter().product()
     }
@@ -161,14 +210,15 @@ pub fn encode(data: &[f32], shape: &[usize], cfg: &LobcqConfig, family: &Codeboo
         }
     }
 
-    EncodedTensor {
-        cfg: *cfg,
-        shape: shape.to_vec(),
-        s_x: norm.s_x,
+    EncodedTensor::try_new(
+        *cfg,
+        shape.to_vec(),
+        norm.s_x,
         scale_codes,
-        selectors: selw.finish(),
-        indices: idxw.finish(),
-    }
+        selw.finish(),
+        idxw.finish(),
+    )
+    .expect("encode inputs pre-validated by normalize")
 }
 
 /// Decode back to dense f32. Exactly reproduces
@@ -262,8 +312,7 @@ pub fn from_bytes(buf: &[u8]) -> anyhow::Result<EncodedTensor> {
     let selectors = take_vec(buf, &mut pos)?;
     let indices = take_vec(buf, &mut pos)?;
     let cfg = LobcqConfig::new(lb, nc, la).with_bits(b).with_codeword_bits(bc);
-    cfg.validate()?;
-    Ok(EncodedTensor { cfg, shape, s_x, scale_codes, selectors, indices })
+    EncodedTensor::try_new(cfg, shape, s_x, scale_codes, selectors, indices)
 }
 
 #[cfg(test)]
@@ -354,6 +403,32 @@ mod tests {
         let mut bad = bytes.clone();
         bad[0] ^= 0xFF;
         assert!(from_bytes(&bad).is_err(), "bad magic accepted");
+    }
+
+    #[test]
+    fn from_bytes_rejects_non_divisible_shape() {
+        // A corrupted shape whose scalar count is not a multiple of L_A
+        // must be an error, not a silently truncated block count.
+        let cfg = LobcqConfig::new(8, 2, 64);
+        let (t, fam) = setup(46, &cfg, 512);
+        let mut bytes = to_bytes(&encode(&t.data, &t.shape, &cfg, &fam));
+        // Layout: magic|ver|lb|la|nc|b|bc|rank|dims... — dims[1] at 36..40.
+        bytes[36..40].copy_from_slice(&63u32.to_le_bytes());
+        let err = from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("not a multiple"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn try_new_validates_divisibility_and_payload_lengths() {
+        let cfg = LobcqConfig::new(8, 2, 64);
+        assert!(EncodedTensor::try_new(cfg, vec![3, 7], 1.0, vec![], vec![], vec![]).is_err());
+        // [2, 64] → 128 scalars, 2 arrays, 16 blocks × 1 selector bit = 2
+        // bytes, 128 × 4 index bits = 64 bytes.
+        assert!(EncodedTensor::try_new(cfg, vec![2, 64], 1.0, vec![0, 0], vec![0, 0], vec![0; 64]).is_ok());
+        // Short selector / index payloads are rejected, not deferred to a
+        // decode-time panic.
+        assert!(EncodedTensor::try_new(cfg, vec![2, 64], 1.0, vec![0, 0], vec![0], vec![0; 64]).is_err());
+        assert!(EncodedTensor::try_new(cfg, vec![2, 64], 1.0, vec![0, 0], vec![0, 0], vec![0; 63]).is_err());
     }
 
     #[test]

@@ -273,55 +273,112 @@ pub fn calibrate_tensors(tensors: &[&Tensor], cfg: &LobcqConfig, opts: CalibOpts
     calibrate_blocks(&blocks, cfg, opts, rng)
 }
 
+/// The per-tensor scale `s_X` (eq. 8 denominator): the whole-tensor
+/// statistic the group-local quantization kernel needs. This is the
+/// `prepare` half of the unified pipeline contract
+/// (`quant::pipeline::QuantScheme`).
+pub fn tensor_scale(data: &[f32], cfg: &LobcqConfig) -> f32 {
+    let tensor_amax = crate::util::stats::amax(data);
+    if tensor_amax > 0.0 {
+        cfg.norm_max() / tensor_amax
+    } else {
+        1.0
+    }
+}
+
+/// In-place per-block-array LO-BCQ kernel: normalize (given the
+/// per-tensor scale `s_x`), select a codebook per block (eq. 4), round
+/// scalars to codewords, denormalize — writing into `dst` (same layout
+/// as `src`). Given `s_x`, every `L_A` block array is independent, so
+/// any `L_A`-aligned shard of a tensor may run concurrently. The §Perf
+/// hot loop: threshold-count encode + early-exit select, zero
+/// allocations (the normalized values stage through `dst` itself).
+pub fn quantize_arrays_into(
+    cfg: &LobcqConfig,
+    family: &CodebookFamily,
+    s_x: f32,
+    src: &[f32],
+    dst: &mut [f32],
+) {
+    let la = cfg.la;
+    let lb = cfg.lb;
+    let norm_max = cfg.norm_max();
+    debug_assert_eq!(src.len(), dst.len());
+    debug_assert!(src.len() % la == 0);
+    for (arr, out_arr) in src.chunks_exact(la).zip(dst.chunks_exact_mut(la)) {
+        let amax = crate::util::stats::amax(arr);
+        if amax == 0.0 {
+            // All-zero block array: eq. 7 undefined, decode guard gives 0.
+            out_arr.fill(0.0);
+            continue;
+        }
+        let s_a = norm_max / amax;
+        // eq. 8: effective scale ŝ_A·s_X with ŝ_A = Q_E4M3(s_A / s_X).
+        let rel = cfg.scale_format.quantize(s_a / s_x);
+        let eff = rel * s_x;
+        let inv = if eff != 0.0 { 1.0 / eff } else { 0.0 };
+        for (o, &x) in out_arr.iter_mut().zip(arr) {
+            *o = x * eff;
+        }
+        for start in (0..la).step_by(lb) {
+            let sel = family.select(&out_arr[start..start + lb]);
+            let book = &family.books[sel];
+            for v in &mut out_arr[start..start + lb] {
+                *v = book.quantize(*v) * inv;
+            }
+        }
+    }
+}
+
+/// Borrowed `QuantScheme` view over a frozen family — lets `fake_quantize`
+/// ride the shared parallel driver without cloning the family.
+struct FrozenLobcq<'a> {
+    cfg: LobcqConfig,
+    family: &'a CodebookFamily,
+}
+
+impl crate::quant::pipeline::QuantScheme for FrozenLobcq<'_> {
+    fn name(&self) -> String {
+        format!("LO-BCQ ({})", self.cfg.tag())
+    }
+
+    fn bits_per_scalar(&self) -> f64 {
+        self.cfg.bitwidth()
+    }
+
+    fn group_len(&self) -> usize {
+        self.cfg.la
+    }
+
+    fn prepare(&self, src: &[f32]) -> crate::quant::pipeline::PrepState {
+        crate::quant::pipeline::PrepState {
+            scale: tensor_scale(src, &self.cfg),
+            ..Default::default()
+        }
+    }
+
+    fn quantize_groups(&self, prep: &crate::quant::pipeline::PrepState, src: &[f32], dst: &mut [f32]) {
+        quantize_arrays_into(&self.cfg, self.family, prep.scale, src, dst);
+    }
+}
+
 /// Fake-quantize a tensor with a (calibrated, codeword-quantized) family:
 /// normalize → select codebook per block → round scalars to codewords →
 /// denormalize. Returns the dequantized tensor. This is numerically
 /// identical to the encode→decode path in `encode.rs` (tested) and to the
-/// Pallas kernel (parity-tested at build time).
+/// Pallas kernel (parity-tested at build time). Runs through the unified
+/// parallel pipeline (`quant::pipeline`).
 pub fn fake_quantize(data: &[f32], cfg: &LobcqConfig, family: &CodebookFamily) -> Vec<f32> {
-    let norm = normalize(data, cfg.la, cfg);
     let mut out = vec![0.0f32; data.len()];
-    let la = cfg.la;
-    let lb = cfg.lb;
-
-    // Per-array worker (the §Perf hot loop: threshold-count encode +
-    // early-exit select, no allocation).
-    let run_arrays = |arrays: &[f32], scales: &[f32], out: &mut [f32]| {
-        for (ai, arr) in arrays.chunks_exact(la).enumerate() {
-            let scale = scales[ai];
-            let inv = if scale != 0.0 { 1.0 / scale } else { 0.0 };
-            let out_arr = &mut out[ai * la..(ai + 1) * la];
-            for (bi, block) in arr.chunks_exact(lb).enumerate() {
-                let sel = family.select(block);
-                let book = &family.books[sel];
-                for (j, &v) in block.iter().enumerate() {
-                    out_arr[bi * lb + j] = book.quantize(v) * inv;
-                }
-            }
-        }
-    };
-
-    // Thread-parallel over block arrays for large tensors (§Perf pass 3).
-    let n_arrays = norm.scales.len();
-    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-    if data.len() < 1 << 14 || threads == 1 {
-        run_arrays(&norm.values, &norm.scales, &mut out);
-    } else {
-        let chunk_arrays = n_arrays.div_ceil(threads);
-        std::thread::scope(|s| {
-            let values = &norm.values;
-            let scales = &norm.scales;
-            for (ti, out_chunk) in out.chunks_mut(chunk_arrays * la).enumerate() {
-                let a0 = ti * chunk_arrays;
-                let a1 = (a0 + out_chunk.len() / la).min(n_arrays);
-                let run = &run_arrays;
-                s.spawn(move || {
-                    run(&values[a0 * la..a1 * la], &scales[a0..a1], out_chunk);
-                });
-            }
-        });
-    }
+    fake_quantize_into(data, cfg, family, &mut out);
     out
+}
+
+/// In-place variant of [`fake_quantize`], sharded across the default
+/// worker pool for large tensors.
+pub fn fake_quantize_into(data: &[f32], cfg: &LobcqConfig, family: &CodebookFamily, out: &mut [f32]) {
+    let scheme = FrozenLobcq { cfg: *cfg, family };
+    crate::quant::pipeline::QuantPool::default().quantize_into(&scheme, data, out);
 }
 
 /// Fake-quantize an entire tensor (shape preserved).
@@ -406,6 +463,31 @@ mod tests {
         let t = Tensor::new(&[4, 64], data);
         let (q, _) = self_calibrated_quantize(&t, &cfg, 13);
         assert!(q.data[..cfg.la].iter().all(|&v| v == 0.0), "zero array leaked values");
+    }
+
+    #[test]
+    fn fake_quantize_matches_normalize_reference() {
+        // The pipeline-backed kernel must reproduce the original
+        // normalize → select → round → denormalize composition exactly.
+        let cfg = cfg_small();
+        let t = Tensor::new(&[16, 64], calib_data(91, 1024));
+        let mut rng = Pcg32::seeded(5);
+        let calib = calibrate_tensors(&[&t], &cfg, CalibOpts::default(), &mut rng);
+        let fam = calib.family.quantize_codewords(cfg.bc);
+        let got = fake_quantize(&t.data, &cfg, &fam);
+        let norm = normalize(&t.data, cfg.la, &cfg);
+        for (ai, arr) in norm.values.chunks_exact(cfg.la).enumerate() {
+            let scale = norm.scales[ai];
+            let inv = if scale != 0.0 { 1.0 / scale } else { 0.0 };
+            for (bi, block) in arr.chunks_exact(cfg.lb).enumerate() {
+                let book = &fam.books[fam.select(block)];
+                for (j, &v) in block.iter().enumerate() {
+                    let want = book.quantize(v) * inv;
+                    let g = got[ai * cfg.la + bi * cfg.lb + j];
+                    assert!(g == want, "mismatch at ({ai},{bi},{j}): {g} vs {want}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -16,7 +16,9 @@ pub mod kmeanspp;
 pub mod lloyd_max;
 pub mod lobcq;
 pub mod metrics;
+pub mod pipeline;
 
 pub use calib::{CalibScope, LobcqQuantizer};
 pub use codebook::{Codebook, CodebookFamily};
 pub use lobcq::{CalibOpts, InitMethod, LobcqConfig};
+pub use pipeline::{QuantPipeline, QuantPool, QuantScheme, ScratchPool};

@@ -1,0 +1,448 @@
+//! Unified parallel quantization pipeline.
+//!
+//! One [`QuantScheme`] trait spans every quantizer in the repo — LO-BCQ
+//! (universal and layerwise), all five paper baselines, and the BF16
+//! rounding reference — so calibration, the evaluation harness, the CPU
+//! forward's activation hook, and the serving coordinator all exercise
+//! identical code (DESIGN.md §Pipeline).
+//!
+//! Why the two-phase shape: several schemes carry a *per-tensor*
+//! statistic (LO-BCQ's `s_X` from eq. 8, VSQ's second-level scale grid,
+//! per-tensor FP max-scaling, a per-tensor Lloyd-Max fit). Group-sharded
+//! parallelism is only sound once that statistic is fixed, so the trait
+//! splits into:
+//!
+//! 1. [`QuantScheme::prepare`] — one cheap whole-tensor pass producing a
+//!    [`PrepState`] (a scalar, a level table, or a refit codebook family);
+//! 2. [`QuantScheme::quantize_groups`] — pure group-local work given that
+//!    state, safe to run on any group-aligned shard concurrently.
+//!
+//! [`QuantPool`] is the shared driver: it shards a tensor on
+//! `group_len()` boundaries across `std::thread::scope` workers.
+//! [`QuantPipeline`] bundles a scheme, a pool, and a [`ScratchPool`] of
+//! reusable buffers so the steady-state serving path (on-the-fly
+//! activation quantization at every GEMM input) performs **zero**
+//! allocations after warm-up.
+
+use crate::quant::codebook::CodebookFamily;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Per-tensor context computed by [`QuantScheme::prepare`]: the global
+/// statistics a scheme needs before group-local quantization can run.
+/// A deliberately small closed set (instead of `dyn Any`) keeps the trait
+/// object-safe and the drivers allocation-free on the hot path.
+#[derive(Debug, Clone, Default)]
+pub struct PrepState {
+    /// Per-tensor scalar statistic: `s_X` for LO-BCQ (eq. 8), the
+    /// second-level scale grid `s2` for VSQ, the max-scale for per-tensor
+    /// FP formats. Unused schemes leave it 0.
+    pub scale: f32,
+    /// Per-tensor fitted levels (per-tensor Lloyd-Max). Empty otherwise.
+    pub levels: Vec<f32>,
+    /// Per-tensor refit codebook family (layerwise LO-BCQ). `None` for
+    /// schemes with frozen/universal state.
+    pub family: Option<CodebookFamily>,
+}
+
+/// A fake-quantizer over flat f32 data with an in-place core API.
+///
+/// `quantize_into` writes quantize→dequantize values into `dst`
+/// (same length as `src`), leaving callers to compute error metrics —
+/// the contract every paper table/figure and the serving activation path
+/// share. Implementations must write *every* element of `dst`.
+pub trait QuantScheme: Send + Sync {
+    /// Human-readable name (report rows).
+    fn name(&self) -> String;
+
+    /// Effective bits per scalar including metadata overheads.
+    fn bits_per_scalar(&self) -> f64;
+
+    /// The independent quantization unit once [`prepare`](Self::prepare)
+    /// has run: shard boundaries must align to it, and `src.len()` must
+    /// be a multiple of it.
+    fn group_len(&self) -> usize;
+
+    /// Whether group-aligned shards may be quantized concurrently.
+    /// `false` forces the driver to run the whole tensor on one worker
+    /// (used by function adapters like capture hooks whose semantics are
+    /// whole-tensor).
+    fn shardable(&self) -> bool {
+        true
+    }
+
+    /// One whole-tensor pass computing the per-tensor context. Default:
+    /// stateless.
+    fn prepare(&self, _src: &[f32]) -> PrepState {
+        PrepState::default()
+    }
+
+    /// Quantize a group-aligned shard of the tensor `prepare` saw. Must
+    /// be pure with respect to `prep` (no interior mutability) so shards
+    /// can run concurrently.
+    fn quantize_groups(&self, prep: &PrepState, src: &[f32], dst: &mut [f32]);
+
+    /// Serial whole-tensor in-place fake-quantize: the core API.
+    fn quantize_into(&self, src: &[f32], dst: &mut [f32]) {
+        assert_eq!(src.len(), dst.len(), "{}: src/dst length mismatch", self.name());
+        check_group_multiple(self, src.len());
+        let prep = self.prepare(src);
+        self.quantize_groups(&prep, src, dst);
+    }
+
+    /// Allocating convenience (tests, offline one-off calls): quantize
+    /// into a fresh Vec.
+    fn quantize(&self, src: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; src.len()];
+        self.quantize_into(src, &mut out);
+        out
+    }
+}
+
+fn check_group_multiple<S: QuantScheme + ?Sized>(scheme: &S, len: usize) {
+    let g = scheme.group_len().max(1);
+    assert!(
+        len % g == 0,
+        "{}: data length {len} not a multiple of group length {g}",
+        scheme.name()
+    );
+}
+
+/// Worker configuration for the shared parallel quantization driver.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantPool {
+    /// Maximum concurrent workers (1 = serial).
+    pub workers: usize,
+    /// Tensors below this many scalars run serially (spawn cost
+    /// dominates small operands).
+    pub min_parallel: usize,
+}
+
+impl Default for QuantPool {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        QuantPool { workers, min_parallel: 1 << 14 }
+    }
+}
+
+impl QuantPool {
+    /// Serial driver (reference path; also what property tests compare
+    /// the parallel path against).
+    pub fn serial() -> QuantPool {
+        QuantPool { workers: 1, min_parallel: usize::MAX }
+    }
+
+    /// Fixed worker count, parallel regardless of size (benchmarks).
+    pub fn with_workers(workers: usize) -> QuantPool {
+        QuantPool { workers: workers.max(1), min_parallel: 0 }
+    }
+
+    /// Quantize `src` into `dst` through `scheme`, sharding group-aligned
+    /// chunks across scoped threads. Bit-identical to the serial path:
+    /// the per-tensor `prepare` runs once up front and every group is
+    /// quantized by the same pure kernel regardless of which worker owns
+    /// it.
+    pub fn quantize_into(&self, scheme: &dyn QuantScheme, src: &[f32], dst: &mut [f32]) {
+        assert_eq!(src.len(), dst.len(), "{}: src/dst length mismatch", scheme.name());
+        if src.is_empty() {
+            return;
+        }
+        check_group_multiple(scheme, src.len());
+        let g = scheme.group_len().max(1);
+        let n_groups = src.len() / g;
+        let prep = scheme.prepare(src);
+        if !scheme.shardable() || self.workers <= 1 || src.len() < self.min_parallel || n_groups <= 1 {
+            scheme.quantize_groups(&prep, src, dst);
+            return;
+        }
+        let chunk = n_groups.div_ceil(self.workers) * g;
+        std::thread::scope(|s| {
+            let prep = &prep;
+            for (src_chunk, dst_chunk) in src.chunks(chunk).zip(dst.chunks_mut(chunk)) {
+                s.spawn(move || scheme.quantize_groups(prep, src_chunk, dst_chunk));
+            }
+        });
+    }
+}
+
+/// Thread-safe pool of reusable f32 buffers. Steady-state callers that
+/// `take` and `put` buffers of a stable size perform zero allocations
+/// after warm-up (tracked by [`allocations`](Self::allocations), which
+/// the perf bench asserts on).
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    bufs: Mutex<Vec<Vec<f32>>>,
+    allocations: AtomicUsize,
+}
+
+/// Buffers retained per pool; more than this are dropped on `put`.
+const SCRATCH_POOL_CAP: usize = 8;
+
+impl ScratchPool {
+    pub fn new() -> ScratchPool {
+        ScratchPool::default()
+    }
+
+    /// A buffer of exactly `len` elements (contents unspecified but
+    /// initialized). Reuses pooled capacity when available.
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        let mut buf = self.bufs.lock().unwrap().pop().unwrap_or_default();
+        if buf.capacity() < len {
+            self.allocations.fetch_add(1, Ordering::Relaxed);
+        }
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer for reuse.
+    pub fn put(&self, buf: Vec<f32>) {
+        let mut bufs = self.bufs.lock().unwrap();
+        if bufs.len() < SCRATCH_POOL_CAP {
+            bufs.push(buf);
+        }
+    }
+
+    /// Number of times `take` had to grow/allocate backing storage.
+    /// Constant across calls = zero-allocation steady state.
+    pub fn allocations(&self) -> usize {
+        self.allocations.load(Ordering::Relaxed)
+    }
+}
+
+/// A scheme bound to a worker pool and a scratch-buffer pool: the
+/// steady-state quantization unit shared by the CPU forward's activation
+/// hook, the coordinator's CPU executor, and the evaluation harness.
+pub struct QuantPipeline {
+    scheme: Arc<dyn QuantScheme>,
+    pool: QuantPool,
+    scratch: ScratchPool,
+}
+
+impl QuantPipeline {
+    pub fn new(scheme: Arc<dyn QuantScheme>, pool: QuantPool) -> QuantPipeline {
+        QuantPipeline { scheme, pool, scratch: ScratchPool::new() }
+    }
+
+    /// Pipeline over an ad-hoc per-slice function (test taps, capture
+    /// hooks). Runs unsharded: the function sees whole tensors.
+    pub fn from_fn<F>(name: &str, f: F) -> QuantPipeline
+    where
+        F: Fn(&[f32], &mut [f32]) + Send + Sync + 'static,
+    {
+        QuantPipeline::new(
+            Arc::new(FnScheme { name: name.to_string(), f: Box::new(f) }),
+            QuantPool::serial(),
+        )
+    }
+
+    pub fn scheme(&self) -> &dyn QuantScheme {
+        &*self.scheme
+    }
+
+    pub fn name(&self) -> String {
+        self.scheme.name()
+    }
+
+    /// Parallel in-place quantize through the shared driver.
+    pub fn quantize_into(&self, src: &[f32], dst: &mut [f32]) {
+        self.pool.quantize_into(&*self.scheme, src, dst);
+    }
+
+    /// Quantize into a pooled buffer. Return it with
+    /// [`recycle`](Self::recycle) for the zero-allocation steady state.
+    pub fn quantize_pooled(&self, src: &[f32]) -> Vec<f32> {
+        let mut dst = self.scratch.take(src.len());
+        self.quantize_into(src, &mut dst);
+        dst
+    }
+
+    /// Hand a buffer from [`quantize_pooled`](Self::quantize_pooled) back
+    /// to the pool.
+    pub fn recycle(&self, buf: Vec<f32>) {
+        self.scratch.put(buf);
+    }
+
+    /// Fresh-allocation convenience (tests, one-off calls).
+    pub fn quantize(&self, src: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; src.len()];
+        self.quantize_into(src, &mut out);
+        out
+    }
+
+    /// Allocation count of the scratch pool (perf assertions).
+    pub fn scratch_allocations(&self) -> usize {
+        self.scratch.allocations()
+    }
+}
+
+/// BF16 rounding as a scheme: the 16-bit reference point every table
+/// reports deltas against.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Bf16Scheme;
+
+impl QuantScheme for Bf16Scheme {
+    fn name(&self) -> String {
+        "BF16".into()
+    }
+
+    fn bits_per_scalar(&self) -> f64 {
+        16.0
+    }
+
+    fn group_len(&self) -> usize {
+        1
+    }
+
+    fn quantize_groups(&self, _prep: &PrepState, src: &[f32], dst: &mut [f32]) {
+        dst.copy_from_slice(src);
+        crate::formats::bf16_round_slice(dst);
+    }
+}
+
+/// Adapter: an arbitrary per-slice function as a scheme. Unshardable —
+/// the function's semantics may be whole-tensor (e.g. activation taps).
+struct FnScheme {
+    name: String,
+    f: Box<dyn Fn(&[f32], &mut [f32]) + Send + Sync>,
+}
+
+impl QuantScheme for FnScheme {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn bits_per_scalar(&self) -> f64 {
+        32.0
+    }
+
+    fn group_len(&self) -> usize {
+        1
+    }
+
+    fn shardable(&self) -> bool {
+        false
+    }
+
+    fn quantize_groups(&self, _prep: &PrepState, src: &[f32], dst: &mut [f32]) {
+        (self.f)(src, dst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy per-group max-scaled rounding scheme with a per-tensor prep,
+    /// exercising the sharding contract without the real quantizers.
+    struct ToyScheme {
+        group: usize,
+    }
+
+    impl QuantScheme for ToyScheme {
+        fn name(&self) -> String {
+            "toy".into()
+        }
+
+        fn bits_per_scalar(&self) -> f64 {
+            4.0
+        }
+
+        fn group_len(&self) -> usize {
+            self.group
+        }
+
+        fn prepare(&self, src: &[f32]) -> PrepState {
+            let amax = src.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            PrepState { scale: if amax > 0.0 { 7.0 / amax } else { 0.0 }, ..Default::default() }
+        }
+
+        fn quantize_groups(&self, prep: &PrepState, src: &[f32], dst: &mut [f32]) {
+            let s = prep.scale;
+            for (o, &x) in dst.iter_mut().zip(src) {
+                *o = if s > 0.0 { (x * s).round() / s } else { 0.0 };
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let scheme = ToyScheme { group: 8 };
+        for n_groups in [1usize, 2, 3, 7, 17, 64] {
+            let n = n_groups * 8;
+            let src: Vec<f32> = (0..n).map(|i| ((i * 37 % 100) as f32 - 50.0) / 9.0).collect();
+            let serial = QuantPool::serial();
+            let mut a = vec![0.0f32; n];
+            serial.quantize_into(&scheme, &src, &mut a);
+            for workers in [2usize, 3, 8] {
+                let mut b = vec![0.0f32; n];
+                QuantPool::with_workers(workers).quantize_into(&scheme, &src, &mut b);
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "workers={workers} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple of group length")]
+    fn rejects_misaligned_length() {
+        let scheme = ToyScheme { group: 8 };
+        let mut out = vec![0.0f32; 12];
+        QuantPool::serial().quantize_into(&scheme, &vec![1.0; 12], &mut out);
+    }
+
+    #[test]
+    fn scratch_pool_reuses_capacity() {
+        let pool = ScratchPool::new();
+        let b = pool.take(1024);
+        pool.put(b);
+        let before = pool.allocations();
+        for _ in 0..10 {
+            let b = pool.take(1024);
+            pool.put(b);
+        }
+        assert_eq!(pool.allocations(), before, "steady-state take/put allocated");
+        // A larger request grows.
+        let b = pool.take(4096);
+        pool.put(b);
+        assert_eq!(pool.allocations(), before + 1);
+    }
+
+    #[test]
+    fn pipeline_pooled_zero_alloc_steady_state() {
+        let pipe = QuantPipeline::new(Arc::new(ToyScheme { group: 8 }), QuantPool::serial());
+        let src: Vec<f32> = (0..512).map(|i| i as f32 / 17.0).collect();
+        let buf = pipe.quantize_pooled(&src);
+        pipe.recycle(buf);
+        let warm = pipe.scratch_allocations();
+        for _ in 0..20 {
+            let buf = pipe.quantize_pooled(&src);
+            pipe.recycle(buf);
+        }
+        assert_eq!(pipe.scratch_allocations(), warm);
+    }
+
+    #[test]
+    fn fn_scheme_runs_whole_tensor() {
+        let seen = Arc::new(Mutex::new(Vec::<usize>::new()));
+        let s2 = seen.clone();
+        let pipe = QuantPipeline::from_fn("tap", move |src, dst| {
+            s2.lock().unwrap().push(src.len());
+            dst.copy_from_slice(src);
+        });
+        let src = vec![1.0f32; 4096];
+        let out = pipe.quantize(&src);
+        assert_eq!(out, src);
+        assert_eq!(*seen.lock().unwrap(), vec![4096], "tap saw shards, not the tensor");
+    }
+
+    #[test]
+    fn bf16_scheme_rounds() {
+        let src = vec![1.0f32, 1.0000001, -3.25, 0.1];
+        let q = Bf16Scheme.quantize(&src);
+        let mut want = src.clone();
+        crate::formats::bf16_round_slice(&mut want);
+        assert_eq!(q, want);
+        assert_eq!(Bf16Scheme.bits_per_scalar(), 16.0);
+    }
+}

@@ -10,6 +10,7 @@
 
 use crate::model::ModelConfig;
 use crate::runtime::manifest::{ArtifactEntry, Manifest};
+pub use crate::runtime::logits::Logits;
 use crate::tensor::Tensor;
 use std::collections::HashMap;
 
@@ -18,25 +19,6 @@ pub struct Engine {
     client: xla::PjRtClient,
     exe_cache: HashMap<String, xla::PjRtLoadedExecutable>,
     weight_cache: HashMap<String, Vec<xla::Literal>>,
-}
-
-/// Logits result: row-major (batch * t, vocab).
-#[derive(Debug, Clone)]
-pub struct Logits {
-    pub data: Vec<f32>,
-    pub batch: usize,
-    pub t: usize,
-    pub vocab: usize,
-}
-
-impl Logits {
-    /// Log-softmax probability of `token` at (batch row b, position p).
-    pub fn log_prob(&self, b: usize, p: usize, token: u32) -> f64 {
-        let row = &self.data[(b * self.t + p) * self.vocab..(b * self.t + p + 1) * self.vocab];
-        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
-        let logsum: f64 = row.iter().map(|&x| ((x as f64) - max).exp()).sum::<f64>().ln() + max;
-        row[token as usize] as f64 - logsum
-    }
 }
 
 impl Engine {
@@ -186,15 +168,3 @@ pub fn tensor_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
     Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn logits_log_prob_is_normalized() {
-        let l = Logits { data: vec![0.0, 1.0, 2.0, -1.0], batch: 1, t: 1, vocab: 4 };
-        let total: f64 = (0..4u32).map(|tok| l.log_prob(0, 0, tok).exp()).sum();
-        assert!((total - 1.0).abs() < 1e-9, "{total}");
-        assert!(l.log_prob(0, 0, 2) > l.log_prob(0, 0, 3));
-    }
-}

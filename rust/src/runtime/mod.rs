@@ -2,11 +2,22 @@
 //! (pattern from /opt/xla-example/load_hlo). `Engine` is the single-
 //! threaded core; `RuntimeService` confines it to an executor thread and
 //! hands out `Send + Sync` clients for the coordinator.
+//!
+//! The PJRT-backed modules (`engine`, `service`) need the `xla` bindings
+//! and sit behind the off-by-default `pjrt` cargo feature; `Manifest`,
+//! `ArtifactEntry`, and `Logits` are plain data and stay available so the
+//! coordinator, evaluation harness, and CPU executor build without PJRT.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
+pub mod logits;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod service;
 
-pub use engine::{Engine, Logits};
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
+pub use logits::Logits;
 pub use manifest::{ArtifactEntry, Manifest};
+#[cfg(feature = "pjrt")]
 pub use service::{RuntimeClient, RuntimeService};

@@ -22,17 +22,28 @@ pub struct OptSpec {
     pub default: Option<&'static str>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     UnknownOption(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{key}: '{value}' ({why})")]
     BadValue { key: String, value: String, why: String },
-    #[error("missing required option --{0}")]
     MissingRequired(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownOption(k) => write!(f, "unknown option --{k}"),
+            CliError::MissingValue(k) => write!(f, "option --{k} requires a value"),
+            CliError::BadValue { key, value, why } => {
+                write!(f, "invalid value for --{key}: '{value}' ({why})")
+            }
+            CliError::MissingRequired(k) => write!(f, "missing required option --{k}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse raw argv (excluding program + subcommand names) against specs.

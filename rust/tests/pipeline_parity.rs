@@ -1,0 +1,269 @@
+//! Pipeline parity suite (ISSUE 1 satellite): for every scheme behind the
+//! unified `QuantScheme` trait, the new in-place `quantize_into` path
+//! must be bit-for-bit identical to the legacy allocate-per-call
+//! algorithms (reimplemented here as independent references), and the
+//! parallel driver (N workers) must equal the serial driver (1 worker)
+//! exactly, across odd row counts and group sizes.
+
+use lobcq::formats::{FloatFormat, E3M2, E3M3, E8M0};
+use lobcq::quant::baselines::{
+    FpTensorQuantizer, LloydMaxTensorQuantizer, Mx4Quantizer, Mxfp4Quantizer, VsqQuantizer,
+};
+use lobcq::quant::calib::{calibrate_universal, LobcqQuantizer};
+use lobcq::quant::codebook::CodebookFamily;
+use lobcq::quant::lloyd_max::{lloyd_max, nearest_level, LloydMaxOpts};
+use lobcq::quant::lobcq::{normalize, CalibOpts, LobcqConfig};
+use lobcq::quant::pipeline::{QuantPipeline, QuantPool, QuantScheme};
+use lobcq::tensor::Tensor;
+use lobcq::util::prop::{ensure, forall_seeded, gen_operand};
+use lobcq::util::rng::{llm_like_sample, Pcg32};
+use lobcq::util::stats::amax;
+use std::sync::Arc;
+
+// ---- independent reference implementations (the pre-pipeline code) ----
+
+fn ref_block_fp(block_len: usize, scalar: FloatFormat, data: &[f32]) -> Vec<f32> {
+    // Shared MX4/MXFP4 shape: per-block E8M0 floor scale + FP grid.
+    assert!(data.len() % block_len == 0);
+    let mut out = Vec::with_capacity(data.len());
+    for block in data.chunks_exact(block_len) {
+        let a = amax(block);
+        if a == 0.0 {
+            out.extend(std::iter::repeat(0.0).take(block_len));
+            continue;
+        }
+        let scale = E8M0::quantize_floor(scalar.max_value / a);
+        for &x in block {
+            out.push(scalar.quantize(x * scale) / scale);
+        }
+    }
+    out
+}
+
+fn ref_vsq(q: &VsqQuantizer, data: &[f32]) -> Vec<f32> {
+    let smax = q.scalar.max_level() as f32;
+    let mut scales = Vec::new();
+    for v in data.chunks_exact(q.vec_len) {
+        let a = amax(v);
+        scales.push(if a > 0.0 { smax / a } else { 0.0 });
+    }
+    let scale_max = scales.iter().cloned().fold(0.0f32, f32::max);
+    let levels = ((1u32 << q.scale_bits) - 1) as f32;
+    let s2 = if scale_max > 0.0 { levels / scale_max } else { 0.0 };
+    let mut out = Vec::with_capacity(data.len());
+    for (vi, v) in data.chunks_exact(q.vec_len).enumerate() {
+        let qs = if s2 > 0.0 { (scales[vi] * s2).round().max(0.0) / s2 } else { 0.0 };
+        if qs == 0.0 {
+            out.extend(std::iter::repeat(0.0).take(q.vec_len));
+            continue;
+        }
+        for &x in v {
+            out.push(q.scalar.quantize(x * qs) / qs);
+        }
+    }
+    out
+}
+
+fn ref_fp_tensor(fmt: FloatFormat, data: &[f32]) -> Vec<f32> {
+    let a = amax(data);
+    if a == 0.0 {
+        return data.to_vec();
+    }
+    let scale = fmt.max_value / a;
+    data.iter().map(|&x| fmt.quantize(x * scale) / scale).collect()
+}
+
+fn ref_lloydmax(bits: u32, data: &[f32]) -> Vec<f32> {
+    let fit = lloyd_max(data, bits, LloydMaxOpts::default());
+    data.iter().map(|&x| nearest_level(&fit.levels, x)).collect()
+}
+
+fn ref_lobcq(cfg: &LobcqConfig, family: &CodebookFamily, data: &[f32]) -> Vec<f32> {
+    // The original composition: normalize (eq. 7–8) → select (eq. 4) →
+    // round to codewords → denormalize.
+    let norm = normalize(data, cfg.la, cfg);
+    let mut out = vec![0.0f32; data.len()];
+    for (ai, arr) in norm.values.chunks_exact(cfg.la).enumerate() {
+        let scale = norm.scales[ai];
+        let inv = if scale != 0.0 { 1.0 / scale } else { 0.0 };
+        for (bi, block) in arr.chunks_exact(cfg.lb).enumerate() {
+            let book = &family.books[family.select(block)];
+            for (j, &v) in block.iter().enumerate() {
+                out[ai * cfg.la + bi * cfg.lb + j] = book.quantize(v) * inv;
+            }
+        }
+    }
+    out
+}
+
+// ---- fixtures ----
+
+fn sample(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    llm_like_sample(&mut rng, n, 0.05, 4.0)
+}
+
+fn lobcq_fixture(seed: u64) -> (LobcqConfig, CodebookFamily) {
+    let cfg = LobcqConfig::new(8, 4, 64);
+    let t = Tensor::new(&[32, 64], sample(seed, 32 * 64));
+    let fam = calibrate_universal(&[&t], &cfg, CalibOpts::default(), seed);
+    (cfg, fam)
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{what}: bit mismatch at {i}: {x} ({:#x}) vs {y} ({:#x})",
+            x.to_bits(),
+            y.to_bits()
+        );
+    }
+}
+
+/// Every scheme paired with its independent legacy reference.
+fn all_schemes(seed: u64) -> Vec<(Arc<dyn QuantScheme>, Box<dyn Fn(&[f32]) -> Vec<f32>>)> {
+    let (cfg, fam) = lobcq_fixture(seed);
+    let mx4 = Mx4Quantizer::paper_default();
+    let mxfp4 = Mxfp4Quantizer::paper_default();
+    let vsq = VsqQuantizer::paper_default();
+    vec![
+        (
+            Arc::new(LobcqQuantizer::universal(cfg, fam.clone())) as Arc<dyn QuantScheme>,
+            Box::new(move |d: &[f32]| ref_lobcq(&cfg, &fam, d)) as Box<dyn Fn(&[f32]) -> Vec<f32>>,
+        ),
+        (
+            Arc::new(mx4),
+            Box::new(move |d: &[f32]| ref_block_fp(mx4.block_len, mx4.scalar, d)),
+        ),
+        (
+            Arc::new(mxfp4),
+            Box::new(move |d: &[f32]| ref_block_fp(mxfp4.block_len, mxfp4.scalar, d)),
+        ),
+        (Arc::new(vsq), Box::new(move |d: &[f32]| ref_vsq(&vsq, d))),
+        (
+            Arc::new(FpTensorQuantizer::new(E3M3)),
+            Box::new(|d: &[f32]| ref_fp_tensor(E3M3, d)),
+        ),
+        (
+            Arc::new(LloydMaxTensorQuantizer::new(4)),
+            Box::new(|d: &[f32]| ref_lloydmax(4, d)),
+        ),
+    ]
+}
+
+// ---- the parity properties ----
+
+#[test]
+fn quantize_into_matches_legacy_bit_for_bit() {
+    for (scheme, reference) in all_schemes(0xA11CE) {
+        let g = scheme.group_len().max(1);
+        // Group counts chosen odd/awkward on purpose.
+        for n_groups in [1usize, 3, 7, 33] {
+            let lcm = if 64 % g == 0 { 64 } else { g * 64 / gcd(g, 64) };
+            let n = n_groups * lcm;
+            let data = sample(7 + n as u64, n);
+            let mut got = vec![0.0f32; n];
+            scheme.quantize_into(&data, &mut got);
+            let want = reference(&data);
+            assert_bits_eq(&got, &want, &scheme.name());
+        }
+    }
+}
+
+#[test]
+fn parallel_workers_match_serial_bit_for_bit() {
+    for (scheme, _) in all_schemes(0xBEE) {
+        let g = scheme.group_len().max(1);
+        let lcm = if 64 % g == 0 { 64 } else { g * 64 / gcd(g, 64) };
+        for n_groups in [1usize, 2, 5, 13, 31] {
+            let n = n_groups * lcm;
+            let data = sample(11 + n as u64, n);
+            let mut serial = vec![0.0f32; n];
+            QuantPool::serial().quantize_into(&*scheme, &data, &mut serial);
+            for workers in [2usize, 3, 8] {
+                let mut par = vec![0.0f32; n];
+                QuantPool::with_workers(workers).quantize_into(&*scheme, &data, &mut par);
+                assert_bits_eq(&par, &serial, &format!("{} x{workers}", scheme.name()));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lobcq_parallel_equals_serial_random_shapes() {
+    // Heavier randomized sweep on the serving-critical scheme: random
+    // (odd) array counts, worker counts, and operand distributions.
+    let (cfg, fam) = lobcq_fixture(0xF00D);
+    let scheme = LobcqQuantizer::universal(cfg, fam);
+    forall_seeded(0x51DE, 40, "lobcq parallel == serial", |rng| {
+        let n = cfg.la * (1 + rng.index(40));
+        let data = gen_operand(rng, n);
+        let mut serial = vec![0.0f32; n];
+        QuantPool::serial().quantize_into(&scheme, &data, &mut serial);
+        let workers = 2 + rng.index(7);
+        let mut par = vec![0.0f32; n];
+        QuantPool::with_workers(workers).quantize_into(&scheme, &data, &mut par);
+        for (i, (a, b)) in par.iter().zip(&serial).enumerate() {
+            ensure(a.to_bits() == b.to_bits(), || {
+                format!("workers={workers} n={n}: mismatch at {i}: {a} vs {b}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fake_quantize_wrapper_matches_trait_path() {
+    // The compat API (`lobcq::fake_quantize`) and the trait route through
+    // the same kernel — pin that equivalence.
+    let (cfg, fam) = lobcq_fixture(0xCAFE);
+    let data = sample(99, 16 * cfg.la);
+    let via_fn = lobcq::quant::lobcq::fake_quantize(&data, &cfg, &fam);
+    let via_trait = LobcqQuantizer::universal(cfg, fam).quantize(&data);
+    assert_bits_eq(&via_fn, &via_trait, "fake_quantize vs trait");
+}
+
+#[test]
+fn pipeline_steady_state_is_allocation_free() {
+    let (cfg, fam) = lobcq_fixture(0xD00F);
+    let pipe = QuantPipeline::new(
+        Arc::new(LobcqQuantizer::universal(cfg, fam)),
+        QuantPool::with_workers(4),
+    );
+    let data = sample(5, 64 * cfg.la);
+    let buf = pipe.quantize_pooled(&data);
+    pipe.recycle(buf);
+    let warm = pipe.scratch_allocations();
+    for _ in 0..25 {
+        let buf = pipe.quantize_pooled(&data);
+        pipe.recycle(buf);
+    }
+    assert_eq!(pipe.scratch_allocations(), warm, "steady-state serving allocated");
+}
+
+#[test]
+fn scheme_registry_agrees_with_trait() {
+    // The eval-facing Scheme wrapper must hand out the same numerics as
+    // the raw trait objects.
+    use lobcq::eval::scheme::{mx4, mxfp4, vsq, Scheme};
+    let data = sample(123, 4096);
+    for (scheme, raw) in [
+        (mx4(), Mx4Quantizer::paper_default().quantize(&data)),
+        (mxfp4(), Mxfp4Quantizer::paper_default().quantize(&data)),
+        (vsq(), VsqQuantizer::paper_default().quantize(&data)),
+        (Scheme::fp_tensor(E3M2), FpTensorQuantizer::new(E3M2).quantize(&data)),
+        (Scheme::lloyd_max(5), LloydMaxTensorQuantizer::new(5).quantize(&data)),
+    ] {
+        assert_bits_eq(&scheme.quantize_flat(&data), &raw, &scheme.name());
+    }
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}

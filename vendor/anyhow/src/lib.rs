@@ -1,0 +1,176 @@
+//! Minimal offline shim of the `anyhow` error-handling API.
+//!
+//! The build environment has no crates.io access, so this workspace
+//! vendors the subset of `anyhow` the `lobcq` crate uses:
+//!
+//! - [`Error`]: a message plus an optional source chain, `Send + Sync`,
+//!   convertible from any `std::error::Error` via `?`;
+//! - [`Result`]: `Result<T, Error>` alias with a default type parameter;
+//! - [`anyhow!`], [`bail!`], [`ensure!`] macros with `format!`-style
+//!   arguments (including inline captures).
+//!
+//! Display mirrors anyhow: `{e}` prints the top-level message, `{e:#}`
+//! prints the message followed by the `: `-joined source chain. Debug
+//! prints the message and a `Caused by:` list, so `unwrap`/`expect`
+//! failures stay readable.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Error type: an owned message plus an optional boxed source.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// `Result` alias defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// The chain of sources, outermost first (excludes the message).
+    fn chain(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut cur: Option<&(dyn StdError + 'static)> =
+            self.source.as_deref().map(|s| s as &(dyn StdError + 'static));
+        while let Some(e) = cur {
+            out.push(e.to_string());
+            cur = e.source();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for cause in self.chain() {
+                // Skip causes already folded into the message by From.
+                if cause != self.msg {
+                    write!(f, ": {cause}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let chain = self.chain();
+        let tail: Vec<&String> = chain.iter().filter(|c| **c != self.msg).collect();
+        if !tail.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in tail {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// Build an [`Error`] from format arguments (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/nonexistent-path-for-anyhow-shim-test")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format() {
+        fn f(x: usize) -> Result<()> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+        let e: Error = anyhow!("plain {} and {}", 1, 2);
+        assert_eq!(format!("{e}"), "plain 1 and 2");
+        assert_eq!(format!("{e:#}"), "plain 1 and 2");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn f() -> Result<()> {
+            ensure!(1 + 1 == 3);
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("condition failed"));
+    }
+
+    #[test]
+    fn double_question_mark_identity() {
+        fn inner() -> Result<u32> {
+            Err(anyhow!("inner boom"))
+        }
+        fn outer() -> Result<u32> {
+            let v = inner()?;
+            Ok(v)
+        }
+        assert_eq!(outer().unwrap_err().to_string(), "inner boom");
+    }
+}
