@@ -55,18 +55,27 @@ impl StepExecutor for PjrtExecutor {
 /// calibration and every eval table exercise (paper §3's deployment mode,
 /// artifact-free). The pipeline's scratch pool is retained across steps,
 /// so steady-state serving performs zero quantization allocations.
+///
+/// Weight handling prefers the **encoded domain**: schemes with a packed
+/// code format (LO-BCQ) compile every GEMM weight to `QuantLinear` codes
+/// at construction and the forward runs `qgemm` directly on them — the
+/// quantized weights never exist as f32 tensors, matching the W4A4
+/// deployment story (§1, §5). Schemes without a code format fall back to
+/// fake-quantized dense weights; logits are bit-exact between the paths.
 pub struct CpuExecutor {
     cfg: crate::model::ModelConfig,
-    /// Pre-quantized weights (scheme applied once at construction).
+    /// Pre-quantized weights: encoded-domain codes when the scheme
+    /// supports them, fake-quantized dense tensors otherwise.
     weights: crate::model::Weights,
     act: Option<crate::quant::pipeline::QuantPipeline>,
     batch: usize,
     t: usize,
+    encoded: bool,
 }
 
 impl CpuExecutor {
-    /// Build from a model + scheme: quantizes the GEMM weights offline
-    /// and binds the activation pipeline (None for BF16).
+    /// Build from a model + scheme: compiles/quantizes the GEMM weights
+    /// offline and binds the activation pipeline (None for BF16).
     pub fn new(
         cfg: crate::model::ModelConfig,
         weights: &crate::model::Weights,
@@ -76,14 +85,26 @@ impl CpuExecutor {
         t: usize,
     ) -> anyhow::Result<CpuExecutor> {
         anyhow::ensure!(batch >= 1 && t >= 1 && t <= cfg.max_t, "bad executor shape ({batch}, {t})");
-        let qw = scheme.quantize_weights_with(&cfg, weights, pool);
+        let (qw, encoded) = match scheme.encode_weights(&cfg, weights) {
+            Some(qw) => (qw, true),
+            None => (scheme.quantize_weights_with(&cfg, weights, pool), false),
+        };
         let act = scheme.act_pipeline(pool);
-        Ok(CpuExecutor { cfg, weights: qw, act, batch, t })
+        Ok(CpuExecutor { cfg, weights: qw, act, batch, t, encoded })
     }
 
     /// Name of the bound activation pipeline (serving logs).
     pub fn act_scheme_name(&self) -> String {
         self.act.as_ref().map(|p| p.name()).unwrap_or_else(|| "BF16".into())
+    }
+
+    /// How GEMM weights are held (serving logs).
+    pub fn weight_mode(&self) -> &'static str {
+        if self.encoded {
+            "encoded-domain (qgemm on LO-BCQ codes)"
+        } else {
+            "dense (fake-quantized f32)"
+        }
     }
 }
 
@@ -218,6 +239,33 @@ mod tests {
         let diff: f32 =
             logits.data.iter().zip(&base_logits.data).map(|(a, b)| (a - b).abs()).sum();
         assert!(diff > 0.0, "quantization had no effect");
+    }
+
+    #[test]
+    fn cpu_executor_serves_encoded_domain_lobcq() {
+        use crate::model::forward::tests_support::{random_weights, tiny_cfg};
+        use crate::quant::calib::calibrate_universal;
+        use crate::quant::lobcq::{CalibOpts, LobcqConfig};
+        use crate::quant::pipeline::QuantPool;
+
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 33);
+        let qcfg = LobcqConfig::new(8, 4, 64);
+        let fam = calibrate_universal(
+            &[w.get("l0.mlp.w1").unwrap()],
+            &qcfg,
+            CalibOpts { max_iters: 8, ..Default::default() },
+            3,
+        );
+        let scheme = crate::eval::Scheme::lobcq(qcfg, fam);
+        let exec = CpuExecutor::new(cfg.clone(), &w, &scheme, QuantPool::serial(), 1, 8).unwrap();
+        assert_eq!(exec.weight_mode(), "encoded-domain (qgemm on LO-BCQ codes)");
+        let tokens: Vec<u32> = (0..8).map(|i| (i % cfg.vocab) as u32).collect();
+        let logits = exec.step(&tokens).unwrap();
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+        // Baselines without a code format fall back to dense weights.
+        let dense = CpuExecutor::new(cfg, &w, &crate::eval::scheme::mx4(), QuantPool::serial(), 1, 8).unwrap();
+        assert_eq!(dense.weight_mode(), "dense (fake-quantized f32)");
     }
 
     #[test]

@@ -67,15 +67,15 @@ pub fn inject_outliers(cfg: &ModelConfig, w: &Weights, spec: OutlierSpec) -> Wei
         // (1) ln1 gain/bias channel j × α  ⇒  wqkv row j × 1/α.
         let chans = pick_channels(&mut rng, d, spec.frac);
         {
-            let g = out.tensors.get_mut(&format!("l{i}.ln1.g")).unwrap();
+            let g = out.tensor_mut(&format!("l{i}.ln1.g")).unwrap();
             for &j in &chans {
                 g.data[j] *= spec.alpha;
             }
-            let b = out.tensors.get_mut(&format!("l{i}.ln1.b")).unwrap();
+            let b = out.tensor_mut(&format!("l{i}.ln1.b")).unwrap();
             for &j in &chans {
                 b.data[j] *= spec.alpha;
             }
-            let wqkv = out.tensors.get_mut(&format!("l{i}.attn.wqkv")).unwrap();
+            let wqkv = out.tensor_mut(&format!("l{i}.attn.wqkv")).unwrap();
             for &j in &chans {
                 scale_row(wqkv, j, 1.0 / spec.alpha);
             }
@@ -85,11 +85,11 @@ pub fn inject_outliers(cfg: &ModelConfig, w: &Weights, spec: OutlierSpec) -> Wei
         // so the scale rides through to wo's input rows.)
         let chans = pick_channels(&mut rng, d, spec.frac);
         {
-            let wqkv = out.tensors.get_mut(&format!("l{i}.attn.wqkv")).unwrap();
+            let wqkv = out.tensor_mut(&format!("l{i}.attn.wqkv")).unwrap();
             for &j in &chans {
                 scale_col(wqkv, 2 * d + j, spec.alpha);
             }
-            let wo = out.tensors.get_mut(&format!("l{i}.attn.wo")).unwrap();
+            let wo = out.tensor_mut(&format!("l{i}.attn.wo")).unwrap();
             for &j in &chans {
                 scale_row(wo, j, 1.0 / spec.alpha);
             }
@@ -97,15 +97,15 @@ pub fn inject_outliers(cfg: &ModelConfig, w: &Weights, spec: OutlierSpec) -> Wei
         // (3) ln2 channel j × α  ⇒  mlp.w1 row j × 1/α.
         let chans = pick_channels(&mut rng, d, spec.frac);
         {
-            let g = out.tensors.get_mut(&format!("l{i}.ln2.g")).unwrap();
+            let g = out.tensor_mut(&format!("l{i}.ln2.g")).unwrap();
             for &j in &chans {
                 g.data[j] *= spec.alpha;
             }
-            let b = out.tensors.get_mut(&format!("l{i}.ln2.b")).unwrap();
+            let b = out.tensor_mut(&format!("l{i}.ln2.b")).unwrap();
             for &j in &chans {
                 b.data[j] *= spec.alpha;
             }
-            let w1 = out.tensors.get_mut(&format!("l{i}.mlp.w1")).unwrap();
+            let w1 = out.tensor_mut(&format!("l{i}.mlp.w1")).unwrap();
             for &j in &chans {
                 scale_row(w1, j, 1.0 / spec.alpha);
             }

@@ -46,7 +46,17 @@ pub fn ppl_cpu(
     act_scheme: &Scheme,
     opts: &EvalOpts,
 ) -> anyhow::Result<f64> {
-    let qw = weight_scheme.quantize_weights(cfg, weights);
+    // Warm the tied-LM-head panel on the *source* weights before the
+    // per-scheme clone: clones share cached panels by Arc, so a config
+    // sweep calling ppl_cpu per grid point transposes-and-packs the
+    // [vocab, d] embedding exactly once instead of once per grid point.
+    let _ = weights.packed_transposed("embed");
+    let qw = match weight_scheme.encode_weights(cfg, weights) {
+        // Encoded-domain weights when the scheme has a code format (the
+        // same path serving takes; logits are bit-exact either way).
+        Some(enc) => enc,
+        None => weight_scheme.quantize_weights(cfg, weights),
+    };
     // One pipeline for the whole eval: its scratch pool is reused across
     // every window batch, so only the first forward allocates.
     let pipe = act_scheme.act_pipeline(QuantPool::default());

@@ -102,7 +102,7 @@ impl Scheme {
             if !is_gemm_weight(&name) {
                 continue;
             }
-            let t = out.tensors.get(&name).unwrap();
+            let t = out.get(&name).unwrap();
             let (k, n) = (t.shape[0], t.shape[1]);
             let len = k * n;
             gathered.clear();
@@ -124,9 +124,52 @@ impl Scheme {
                     qt.data[r * n + c] = v;
                 }
             }
-            out.tensors.insert(name, qt);
+            // Through the invalidating insert: any packed panel cached
+            // for the unquantized tensor must not survive the swap.
+            out.insert(&name, qt);
         }
         out
+    }
+
+    /// Compile every GEMM weight to the **encoded domain**: the dense
+    /// tensor is replaced by a `kernels::QuantLinear` (packed LO-BCQ
+    /// codes + planar metadata), so the quantized weights never exist as
+    /// f32 tensors — the forward computes GEMMs straight from the codes.
+    /// Returns `None` when the scheme has no packed code format (the
+    /// caller falls back to [`quantize_weights`](Self::quantize_weights));
+    /// logits are bit-exact between the two paths (kernel parity suite).
+    pub fn encode_weights(&self, cfg: &ModelConfig, w: &Weights) -> Option<Weights> {
+        let q = match self {
+            Scheme::Bf16 => return None,
+            Scheme::Quant(q) => q,
+        };
+        // Cheap capability gate before cloning anything: the dense
+        // fallback path (all baselines) pays zero cost here.
+        if !q.supports_encoded_weights() {
+            return None;
+        }
+        let mut out = w.clone();
+        let mut gathered: Vec<f32> = Vec::new();
+        for (name, _) in cfg.param_shapes() {
+            if !is_gemm_weight(&name) {
+                continue;
+            }
+            let t = w.get(&name).ok()?;
+            let (k, n) = (t.shape[0], t.shape[1]);
+            gathered.clear();
+            gathered.resize(k * n, 0.0);
+            for r in 0..k {
+                let row = &t.data[r * n..(r + 1) * n];
+                for (c, &v) in row.iter().enumerate() {
+                    gathered[c * k + r] = v;
+                }
+            }
+            let ql = q.encode_weight(&gathered, k, n)?;
+            out.set_encoded(&name, Arc::new(ql));
+            // The codes ARE the weight now; drop the dense copy.
+            out.remove_tensor(&name);
+        }
+        Some(out)
     }
 
     /// Activation pipeline for the CPU forward / CPU executor (None for
@@ -210,6 +253,32 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn encode_weights_gated_on_scheme_support() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 33);
+        // Baselines have no packed code format.
+        assert!(mx4().encode_weights(&cfg, &w).is_none());
+        assert!(Scheme::Bf16.encode_weights(&cfg, &w).is_none());
+        // LO-BCQ compiles every GEMM weight to codes and drops the dense
+        // tensors; non-GEMM params are untouched.
+        let qcfg = crate::quant::lobcq::LobcqConfig::new(8, 4, 64);
+        let fam = crate::quant::calib::calibrate_universal(
+            &[w.get("l0.mlp.w1").unwrap()],
+            &qcfg,
+            crate::quant::lobcq::CalibOpts { max_iters: 8, ..Default::default() },
+            7,
+        );
+        let scheme = Scheme::lobcq(qcfg, fam);
+        let enc = scheme.encode_weights(&cfg, &w).unwrap();
+        assert!(enc.has_encoded());
+        assert!(enc.get("l0.attn.wqkv").is_err(), "dense GEMM tensor survived");
+        assert!(enc.encoded("l0.attn.wqkv").is_some());
+        assert_eq!(enc.get("embed").unwrap().data, w.get("embed").unwrap().data);
+        // Shape bookkeeping still validates.
+        enc.validate(&cfg).unwrap();
     }
 
     #[test]

@@ -1,0 +1,388 @@
+//! Cache-blocked, register-tiled f32 GEMM (`C = A · B`).
+//!
+//! Replaces the branchy scalar triple-loop that used to live in
+//! `model::forward::matmul_par`: the inner loop here is a fixed-shape
+//! `MR × NR` tile update over a packed B panel — no per-element branch,
+//! constant trip counts, contiguous loads — which LLVM unrolls and
+//! autovectorizes on every target (no intrinsics, no `unsafe`).
+//!
+//! Layout:
+//! - B is packed once into [`PackedB`] panels of `NR` columns: panel `p`
+//!   stores `B[k, p·NR + j]` at `p·K·NR + k·NR + j`, zero-padding the last
+//!   panel. A row of a panel is exactly the `NR` values one tile update
+//!   consumes, so the micro-kernel streams it linearly.
+//! - The driver walks `panel → KC-block → MR-row-tile`, accumulating an
+//!   `MR × NR` register tile and adding it into C after each `KC` block.
+//!   `KC · NR` floats (16 KB at the defaults) is the only working set
+//!   besides the A rows, so panels stay L1/L2-resident.
+//!
+//! The same driver serves the encoded-domain path: [`PanelProvider`]
+//! abstracts "give me the f32 panel for (columns j0.., rows k0..)" — the
+//! f32 path borrows a pre-packed slice, the quantized path
+//! (`kernels::qgemm`) decodes LO-BCQ codes into a scratch panel. Both run
+//! the identical micro-kernel in the identical order, so encoded-domain
+//! GEMM is **bit-exact** with dense GEMM over the fake-quantized weights
+//! (asserted in `rust/tests/kernel_parity.rs`).
+//!
+//! Threading splits B's panels across `std::thread::scope` workers, each
+//! computing a private column stripe that is merged at the end (C is
+//! row-major, so column stripes cannot be handed out as `&mut` chunks).
+//! Column-parallelism keeps panel decode work disjoint per worker on the
+//! encoded path and parallelizes the `m = 1` decode shape, which
+//! row-splitting cannot.
+
+use crate::tensor::Tensor;
+
+/// Micro-kernel rows (register-tile height).
+pub const MR: usize = 4;
+/// Micro-kernel columns (register-tile width = packed panel width).
+pub const NR: usize = 16;
+/// K-dimension cache block: one panel block is `KC × NR` floats (16 KB).
+pub const KC: usize = 256;
+
+/// Problems below this many multiply-adds run single-threaded (spawn cost
+/// dominates small operands; same rationale as `QuantPool::min_parallel`).
+const PAR_THRESHOLD: usize = 1 << 17;
+
+/// Source of packed B panels for the shared GEMM driver.
+///
+/// `panel` returns the `kc × NR` slice for panel column block `j0`
+/// (a multiple of `NR`) and reduction rows `k0 .. k0 + kc`, laid out
+/// row-major (`row k, then NR columns`), with columns `>= n` zero-filled.
+/// Implementations either borrow from pre-packed storage ([`PackedB`]) or
+/// materialize into `scratch` (the encoded-domain decoder).
+pub trait PanelProvider: Sync {
+    /// Reduction length (rows of B).
+    fn k(&self) -> usize;
+    /// Output columns (columns of B).
+    fn n(&self) -> usize;
+    /// The f32 panel for `(j0, k0, kc)`; `scratch` has room for `KC * NR`.
+    fn panel<'a>(&'a self, j0: usize, k0: usize, kc: usize, scratch: &'a mut Vec<f32>) -> &'a [f32];
+}
+
+/// B packed into `NR`-column panels (see module docs for the layout).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedB {
+    k: usize,
+    n: usize,
+    /// `ceil(n / NR)` panels, each `k × NR`, last panel zero-padded.
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack a row-major `[k, n]` matrix.
+    pub fn pack(b: &Tensor) -> PackedB {
+        assert_eq!(b.rank(), 2, "PackedB::pack needs rank-2, got {:?}", b.shape);
+        Self::pack_flat(&b.data, b.shape[0], b.shape[1])
+    }
+
+    /// Pack flat row-major `[k, n]` data.
+    pub fn pack_flat(data: &[f32], k: usize, n: usize) -> PackedB {
+        assert_eq!(data.len(), k * n);
+        Self::pack_from(k, n, |kk, j| data[kk * n + j])
+    }
+
+    /// Pack `B = btᵀ` from a row-major `[n, k]` matrix — row `j` of `bt`
+    /// becomes column `j` of B. This is how the tied LM head packs the
+    /// embedding (`logits = x · embedᵀ`) without materializing a
+    /// transposed copy.
+    pub fn from_rows(bt: &Tensor) -> PackedB {
+        assert_eq!(bt.rank(), 2, "PackedB::from_rows needs rank-2, got {:?}", bt.shape);
+        Self::from_rows_flat(&bt.data, bt.shape[0], bt.shape[1])
+    }
+
+    /// [`from_rows`](Self::from_rows) over flat data: `n` rows of length
+    /// `k`, each row a column of B.
+    pub fn from_rows_flat(data: &[f32], n: usize, k: usize) -> PackedB {
+        assert_eq!(data.len(), n * k);
+        Self::pack_from(k, n, |kk, j| data[j * k + kk])
+    }
+
+    fn pack_from(k: usize, n: usize, at: impl Fn(usize, usize) -> f32) -> PackedB {
+        assert!(k > 0 && n > 0, "empty B ({k} x {n})");
+        let n_panels = n.div_ceil(NR);
+        let mut data = vec![0.0f32; n_panels * k * NR];
+        for pj in 0..n_panels {
+            let base = pj * k * NR;
+            let j0 = pj * NR;
+            let jmax = NR.min(n - j0);
+            for kk in 0..k {
+                let row = &mut data[base + kk * NR..base + kk * NR + jmax];
+                for (jr, slot) in row.iter_mut().enumerate() {
+                    *slot = at(kk, j0 + jr);
+                }
+            }
+        }
+        PackedB { k, n, data }
+    }
+
+    /// Packed footprint in f32 elements (zero-padding included).
+    pub fn packed_len(&self) -> usize {
+        self.data.len()
+    }
+}
+
+impl PanelProvider for PackedB {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn panel<'a>(&'a self, j0: usize, k0: usize, kc: usize, _scratch: &'a mut Vec<f32>) -> &'a [f32] {
+        let base = (j0 / NR) * self.k * NR + k0 * NR;
+        &self.data[base..base + kc * NR]
+    }
+}
+
+/// One `MR × NR` register-tile update over `kc` reduction steps.
+///
+/// `a` is the full (row-major, leading dimension `lda`) A operand; the
+/// tile covers rows `i0 .. i0 + mr`, reduction columns `k0 .. k0 + kc`.
+/// Accumulation per C element is a plain sequential `acc += a * b` over
+/// `k` (no `mul_add`): f32 adds/muls are exactly specified by IEEE-754,
+/// so every caller of this kernel — f32-packed or encoded-domain — gets
+/// bitwise identical results for bitwise identical panels.
+#[inline]
+fn microkernel(
+    a: &[f32],
+    lda: usize,
+    i0: usize,
+    k0: usize,
+    kc: usize,
+    panel: &[f32],
+    acc: &mut [[f32; NR]; MR],
+    mr: usize,
+) {
+    debug_assert!(panel.len() >= kc * NR);
+    if mr == MR {
+        // Fast path: constant trip counts, four rows live in registers.
+        let r0 = &a[i0 * lda + k0..i0 * lda + k0 + kc];
+        let r1 = &a[(i0 + 1) * lda + k0..(i0 + 1) * lda + k0 + kc];
+        let r2 = &a[(i0 + 2) * lda + k0..(i0 + 2) * lda + k0 + kc];
+        let r3 = &a[(i0 + 3) * lda + k0..(i0 + 3) * lda + k0 + kc];
+        for (kk, b) in panel.chunks_exact(NR).take(kc).enumerate() {
+            let b: &[f32; NR] = b.try_into().unwrap();
+            let (a0, a1, a2, a3) = (r0[kk], r1[kk], r2[kk], r3[kk]);
+            for j in 0..NR {
+                acc[0][j] += a0 * b[j];
+                acc[1][j] += a1 * b[j];
+                acc[2][j] += a2 * b[j];
+                acc[3][j] += a3 * b[j];
+            }
+        }
+    } else {
+        // Edge tile (m % MR rows): same update order, variable row count.
+        for (i, acc_row) in acc.iter_mut().enumerate().take(mr) {
+            let ri = &a[(i0 + i) * lda + k0..(i0 + i) * lda + k0 + kc];
+            for (kk, b) in panel.chunks_exact(NR).take(kc).enumerate() {
+                let ai = ri[kk];
+                for j in 0..NR {
+                    acc_row[j] += ai * b[j];
+                }
+            }
+        }
+    }
+}
+
+/// Serial driver over a panel range: `out` is an `m × ldc` column stripe
+/// whose first column corresponds to panel `panels.start` (so `ldc` is
+/// the stripe width, `n` for a full-width call). `out` must be zeroed (or
+/// hold a partial sum to accumulate onto).
+fn gemm_block<P: PanelProvider + ?Sized>(
+    a: &[f32],
+    lda: usize,
+    m: usize,
+    p: &P,
+    panels: std::ops::Range<usize>,
+    out: &mut [f32],
+    ldc: usize,
+    scratch: &mut Vec<f32>,
+) {
+    let k = p.k();
+    let n = p.n();
+    let col0 = panels.start * NR;
+    for pj in panels {
+        let j0 = pj * NR;
+        let jmax = NR.min(n - j0);
+        let mut k0 = 0;
+        while k0 < k {
+            let kc = KC.min(k - k0);
+            let panel = p.panel(j0, k0, kc, scratch);
+            let mut i0 = 0;
+            while i0 < m {
+                let mr = MR.min(m - i0);
+                let mut acc = [[0.0f32; NR]; MR];
+                microkernel(a, lda, i0, k0, kc, panel, &mut acc, mr);
+                for (i, acc_row) in acc.iter().enumerate().take(mr) {
+                    let orow = &mut out[(i0 + i) * ldc + (j0 - col0)..(i0 + i) * ldc + (j0 - col0) + jmax];
+                    for (o, &v) in orow.iter_mut().zip(acc_row) {
+                        *o += v;
+                    }
+                }
+                i0 += mr;
+            }
+            k0 += kc;
+        }
+    }
+}
+
+/// `out = a [m,k] · B [k,n]` through any panel provider; `out` is
+/// overwritten. The workhorse behind [`gemm`], [`gemm_packed`], and
+/// `QuantLinear::qgemm` — flat-slice API so the attention loops can reuse
+/// caller-owned buffers without allocating.
+pub fn gemm_into_flat<P: PanelProvider + ?Sized>(a: &[f32], m: usize, k: usize, p: &P, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "A is {m} x {k} but has {} elements", a.len());
+    assert_eq!(k, p.k(), "inner dim mismatch: A cols {k} vs B rows {}", p.k());
+    let n = p.n();
+    assert_eq!(out.len(), m * n, "C is {m} x {n} but has {} elements", out.len());
+    out.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let n_panels = n.div_ceil(NR);
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    if threads <= 1 || n_panels <= 1 || m * n * k < PAR_THRESHOLD {
+        let mut scratch = vec![0.0f32; KC * NR];
+        gemm_block(a, k, m, p, 0..n_panels, out, n, &mut scratch);
+        return;
+    }
+    // Column-parallel: each worker owns a contiguous panel range and a
+    // private stripe; stripes are merged serially below (a memcpy-speed
+    // pass, negligible next to the 2mnk flops).
+    let workers = threads.min(n_panels);
+    let chunk = n_panels.div_ceil(workers);
+    let stripes: Vec<(usize, Vec<f32>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let p_lo = w * chunk;
+                let p_hi = ((w + 1) * chunk).min(n_panels);
+                s.spawn(move || {
+                    if p_lo >= p_hi {
+                        return (0usize, Vec::new());
+                    }
+                    let col0 = p_lo * NR;
+                    let cols = (p_hi * NR).min(n) - col0;
+                    let mut stripe = vec![0.0f32; m * cols];
+                    let mut scratch = vec![0.0f32; KC * NR];
+                    gemm_block(a, k, m, p, p_lo..p_hi, &mut stripe, cols, &mut scratch);
+                    (col0, stripe)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (col0, stripe) in stripes {
+        if stripe.is_empty() {
+            continue;
+        }
+        let cols = stripe.len() / m;
+        for i in 0..m {
+            out[i * n + col0..i * n + col0 + cols].copy_from_slice(&stripe[i * cols..(i + 1) * cols]);
+        }
+    }
+}
+
+/// Blocked GEMM against a pre-packed B: `a [m,k] · B -> [m,n]`. Leading
+/// dims of `a` are folded (rank > 2 activations multiply per row, same as
+/// the old `matmul_par`).
+pub fn gemm_packed(a: &Tensor, b: &PackedB) -> Tensor {
+    let k = a.cols();
+    let m = a.len() / k;
+    let mut out = vec![0.0f32; m * b.n()];
+    gemm_into_flat(&a.data, m, k, b, &mut out);
+    Tensor::new(&[m, b.n()], out)
+}
+
+/// One-shot blocked GEMM (packs B, then multiplies). Drop-in for the old
+/// `matmul_par`; callers that reuse B should pack once and call
+/// [`gemm_packed`].
+pub fn gemm(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(b.rank(), 2);
+    gemm_packed(a, &PackedB::pack(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_tensor(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+        Tensor::from_fn(shape, |_| rng.normal())
+    }
+
+    fn assert_close(got: &Tensor, want: &Tensor, tag: &str) {
+        assert_eq!(got.shape, want.shape, "{tag}: shape");
+        for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+            assert!(
+                (g - w).abs() <= 2e-4 * (1.0 + w.abs()),
+                "{tag}: element {i}: {g} vs {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matches_reference_across_ragged_shapes() {
+        let mut rng = Pcg32::seeded(0x6E77);
+        // m, k, n deliberately not multiples of MR/NR/KC; m=1 = decode.
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (1, 64, 48),
+            (3, 17, 5),
+            (4, 16, 16),
+            (7, 33, 19),
+            (37, 64, 53),
+            (64, 300, 21),
+            (5, 257, 129),
+        ] {
+            let a = rand_tensor(&mut rng, &[m, k]);
+            let b = rand_tensor(&mut rng, &[k, n]);
+            assert_close(&gemm(&a, &b), &a.matmul(&b), &format!("{m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn from_rows_is_pack_of_transpose() {
+        let mut rng = Pcg32::seeded(0x6E78);
+        let bt = rand_tensor(&mut rng, &[13, 29]); // B = btᵀ is 29 x 13
+        assert_eq!(PackedB::from_rows(&bt), PackedB::pack(&bt.transpose2()));
+    }
+
+    #[test]
+    fn rank3_a_folds_rows() {
+        let mut rng = Pcg32::seeded(0x6E79);
+        let a3 = rand_tensor(&mut rng, &[2, 3, 8]);
+        let b = rand_tensor(&mut rng, &[8, 5]);
+        let a2 = Tensor::new(&[6, 8], a3.data.clone());
+        assert_eq!(gemm(&a3, &b).data, gemm(&a2, &b).data);
+    }
+
+    #[test]
+    fn parallel_equals_serial_block() {
+        // Big enough to cross PAR_THRESHOLD; the column-split + merge must
+        // be bitwise identical to one serial full-width pass (threading
+        // never changes any element's accumulation order).
+        let mut rng = Pcg32::seeded(0x6E7A);
+        let (m, k, n) = (24, 130, 200);
+        let a = rand_tensor(&mut rng, &[m, k]);
+        let b = rand_tensor(&mut rng, &[k, n]);
+        let pb = PackedB::pack(&b);
+        let par = gemm_packed(&a, &pb);
+        let mut serial = vec![0.0f32; m * n];
+        let mut scratch = vec![0.0f32; KC * NR];
+        gemm_block(&a.data, k, m, &pb, 0..n.div_ceil(NR), &mut serial, n, &mut scratch);
+        for (x, y) in par.data.iter().zip(&serial) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dim mismatch")]
+    fn dim_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        let _ = gemm(&a, &b);
+    }
+}

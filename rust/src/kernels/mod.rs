@@ -1,0 +1,24 @@
+//! CPU GEMM kernel subsystem: the fast path every forward-pass matmul in
+//! the repo goes through (DESIGN.md §Kernels).
+//!
+//! Two entry tiers over one shared blocked driver:
+//!
+//! - [`gemm`] / [`gemm_packed`] / [`gemm_into_flat`]: cache-blocked,
+//!   register-tiled f32 GEMM over packed B panels ([`PackedB`]). Replaces
+//!   the old scalar `matmul_par` triple-loop everywhere — projections,
+//!   attention score/context products, and the tied LM head.
+//! - [`QuantLinear::qgemm`]: the encoded-domain path — GEMM computed
+//!   directly on packed LO-BCQ codes through per-block 16-entry value
+//!   LUTs; the quantized weight never materializes as a full f32 tensor.
+//!   Bit-exact with `gemm` over fake-quantized weights because both feed
+//!   the identical micro-kernel (the paper's Fig. 1 dataflow: codes +
+//!   tiny frozen codebooks in, scaled products out).
+//!
+//! Every later backend (SIMD intrinsics, PJRT custom calls) plugs in at
+//! the [`PanelProvider`] seam.
+
+pub mod gemm;
+pub mod qgemm;
+
+pub use gemm::{gemm, gemm_into_flat, gemm_packed, PackedB, PanelProvider, KC, MR, NR};
+pub use qgemm::QuantLinear;

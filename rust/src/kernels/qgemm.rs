@@ -1,0 +1,299 @@
+//! Encoded-domain GEMM: compute `x · W` directly on packed LO-BCQ codes.
+//!
+//! [`QuantLinear`] is a GEMM weight compiled to the planar encoded layout
+//! (`quant::encode::PlanarCodes`) in **K-major** order: flat position
+//! `p = col · k + row` for a `[k, n]` weight, i.e. each output column's
+//! reduction run is contiguous — the same orientation the quantization
+//! pipeline groups on (blocks decompose the reduction dimension, paper
+//! A.5). The quantized weight exists only as
+//!
+//! - one u8 codeword index per scalar (`codes`),
+//! - one u8 codebook selector per block (`sels`),
+//! - one f32 *inverse* effective scale per block array (`inv_scales`,
+//!   decoded once from the E4M3 codes at build time),
+//!
+//! ~9 bits/scalar of state versus 32 for a dequantized tensor. At GEMM
+//! time the shared blocked driver (`kernels::gemm`) asks for one
+//! `KC × NR` panel at a time and [`QuantLinear`] materializes it by
+//! expanding each block's 4-bit codes through a 16-entry value LUT —
+//! the block's codebook levels times the array's inverse scale (the
+//! eq. 2/7/8 dequantization, fused) — into a 16 KB scratch buffer that
+//! never leaves L1/L2. A full f32 weight tensor is never materialized.
+//!
+//! Because panel values are computed with exactly the operations
+//! `fake_quantize` uses (`level * inv`, `0.0` for all-zero arrays) and
+//! the panels then flow through the *same* micro-kernel as the f32 path,
+//! `qgemm` is bit-exact with `gemm(x, fake_quantize(W))` — the W4A4
+//! serving path and every eval table agree to the last bit
+//! (`rust/tests/kernel_parity.rs`).
+
+use super::gemm::{gemm_into_flat, PanelProvider, NR};
+use crate::quant::codebook::CodebookFamily;
+use crate::quant::encode::{encode_planar, EncodedTensor, PlanarCodes};
+use crate::quant::lobcq::LobcqConfig;
+use crate::tensor::Tensor;
+
+/// A `[k, n]` GEMM weight held entirely in encoded form (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantLinear {
+    k: usize,
+    n: usize,
+    cfg: LobcqConfig,
+    family: CodebookFamily,
+    /// One codeword index per scalar, K-major (`p = col * k + row`).
+    codes: Vec<u8>,
+    /// One codebook selector per block (`p / L_b`).
+    sels: Vec<u8>,
+    /// Effective inverse scale per block array (`p / L_A`); 0.0 for
+    /// all-zero arrays (the eq. 7 degenerate case — decodes to exact 0).
+    inv_scales: Vec<f32>,
+}
+
+impl QuantLinear {
+    /// Encode a K-major gathered weight (`kmajor[c*k + r] = W[r, c]`).
+    pub fn from_kmajor(
+        kmajor: &[f32],
+        k: usize,
+        n: usize,
+        cfg: LobcqConfig,
+        family: &CodebookFamily,
+    ) -> anyhow::Result<QuantLinear> {
+        cfg.validate()?;
+        anyhow::ensure!(kmajor.len() == k * n, "kmajor len {} != {k} x {n}", kmajor.len());
+        anyhow::ensure!(
+            kmajor.len() % cfg.la == 0,
+            "weight size {} not a multiple of L_A {}",
+            kmajor.len(),
+            cfg.la
+        );
+        let planar = encode_planar(kmajor, &cfg, family);
+        Ok(Self::from_planar(planar, k, n, cfg, family.clone()))
+    }
+
+    /// Rehydrate from a wire-format artifact whose shape is the K-major
+    /// gathered view `[n, k]` (row `c` = column `c` of the `[k, n]`
+    /// GEMM weight).
+    pub fn from_encoded(enc: &EncodedTensor, family: &CodebookFamily) -> anyhow::Result<QuantLinear> {
+        anyhow::ensure!(enc.shape.len() == 2, "expected K-major [n, k] shape, got {:?}", enc.shape);
+        anyhow::ensure!(family.nc() == enc.cfg.nc, "family Nc {} != cfg Nc {}", family.nc(), enc.cfg.nc);
+        anyhow::ensure!(family.b == enc.cfg.b, "family B {} != cfg B {}", family.b, enc.cfg.b);
+        let (n, k) = (enc.shape[0], enc.shape[1]);
+        Ok(Self::from_planar(enc.to_planar(), k, n, enc.cfg, family.clone()))
+    }
+
+    fn from_planar(planar: PlanarCodes, k: usize, n: usize, cfg: LobcqConfig, family: CodebookFamily) -> QuantLinear {
+        // Decode each array's effective scale exactly the way
+        // `encode::decode` / `quantize_arrays_into` do, so panel values
+        // match the fake-quantize path bit-for-bit.
+        let inv_scales = planar
+            .scale_codes
+            .iter()
+            .map(|&c| {
+                let rel = cfg.scale_format.decode_bits(c as u16);
+                let eff = rel * planar.s_x;
+                if eff != 0.0 {
+                    1.0 / eff
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        QuantLinear {
+            k,
+            n,
+            cfg,
+            family,
+            codes: planar.codes,
+            sels: planar.selectors,
+            inv_scales,
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+
+    pub fn cfg(&self) -> &LobcqConfig {
+        &self.cfg
+    }
+
+    /// Encoded-state bytes (codes + selectors + scales) — what actually
+    /// sits in memory instead of `4 * k * n` for a dense f32 weight.
+    pub fn state_bytes(&self) -> usize {
+        self.codes.len() + self.sels.len() + self.inv_scales.len() * 4
+    }
+
+    /// `x [m,k] · W [k,n] -> [m,n]` computed straight from the codes via
+    /// the shared blocked driver. Leading dims of `x` are folded.
+    pub fn qgemm(&self, x: &Tensor) -> Tensor {
+        let k = x.cols();
+        let m = x.len() / k;
+        let mut out = vec![0.0f32; m * self.n];
+        gemm_into_flat(&x.data, m, k, self, &mut out);
+        Tensor::new(&[m, self.n], out)
+    }
+}
+
+impl PanelProvider for QuantLinear {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Decode the `(j0, k0, kc)` panel: for each of the NR columns, walk
+    /// the contiguous K-major code segment block by block, refresh the
+    /// 16-entry scaled LUT at block boundaries, and gather values at
+    /// panel stride. Cost is one LUT build (≤ 16 muls) per `L_b` scalars
+    /// plus one table load per scalar, amortized over every A row that
+    /// reuses the panel.
+    fn panel<'a>(&'a self, j0: usize, k0: usize, kc: usize, scratch: &'a mut Vec<f32>) -> &'a [f32] {
+        let lb = self.cfg.lb;
+        let la = self.cfg.la;
+        scratch.resize(kc * NR, 0.0);
+        for jr in 0..NR {
+            let j = j0 + jr;
+            if j >= self.n {
+                // Zero-pad columns past the edge (matches PackedB).
+                for kk in 0..kc {
+                    scratch[kk * NR + jr] = 0.0;
+                }
+                continue;
+            }
+            let mut p = j * self.k + k0; // flat K-major position
+            let end = p + kc;
+            let mut kk = 0usize;
+            while p < end {
+                // One block-aligned segment: selector and array scale are
+                // constant across it (L_A is a multiple of L_b).
+                let seg_end = end.min((p / lb + 1) * lb);
+                let inv = self.inv_scales[p / la];
+                if inv == 0.0 {
+                    // All-zero block array: exact +0.0, like fake_quantize.
+                    for _ in p..seg_end {
+                        scratch[kk * NR + jr] = 0.0;
+                        kk += 1;
+                    }
+                } else {
+                    let levels = &self.family.books[self.sels[p / lb] as usize].levels;
+                    let mut lut = [0.0f32; 16];
+                    for (slot, &lv) in lut.iter_mut().zip(levels) {
+                        *slot = lv * inv;
+                    }
+                    for q in p..seg_end {
+                        scratch[kk * NR + jr] = lut[(self.codes[q] & 15) as usize];
+                        kk += 1;
+                    }
+                }
+                p = seg_end;
+            }
+        }
+        &scratch[..kc * NR]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemm::{gemm_packed, PackedB};
+    use crate::quant::encode::encode;
+    use crate::quant::lobcq::{calibrate_tensors, fake_quantize, CalibOpts};
+    use crate::util::rng::{llm_like_sample, Pcg32};
+
+    /// Random K-major weight + calibrated INT-B_c family.
+    fn setup(seed: u64, cfg: &LobcqConfig, k: usize, n: usize) -> (Vec<f32>, CodebookFamily) {
+        let mut rng = Pcg32::seeded(seed);
+        let kmajor = llm_like_sample(&mut rng, k * n, 0.05, 4.0);
+        let t = Tensor::new(&[k * n / cfg.la, cfg.la], kmajor.clone());
+        let calib = calibrate_tensors(&[&t], cfg, CalibOpts { max_iters: 10, ..CalibOpts::default() }, &mut rng);
+        (kmajor, calib.family.quantize_codewords(cfg.bc))
+    }
+
+    /// Dense reference: fake-quantize the K-major buffer, scatter to the
+    /// `[k, n]` orientation, run the f32 blocked path.
+    fn dense_reference(kmajor: &[f32], k: usize, n: usize, cfg: &LobcqConfig, fam: &CodebookFamily, x: &Tensor) -> Tensor {
+        let fq = fake_quantize(kmajor, cfg, fam);
+        let mut w = Tensor::zeros(&[k, n]);
+        for c in 0..n {
+            for r in 0..k {
+                w.data[r * n + c] = fq[c * k + r];
+            }
+        }
+        gemm_packed(x, &PackedB::pack(&w))
+    }
+
+    #[test]
+    fn qgemm_bitexact_with_dense_fakequant_path() {
+        let cfg = LobcqConfig::new(8, 8, 64);
+        let (k, n) = (128, 96);
+        let (kmajor, fam) = setup(0x96E1, &cfg, k, n);
+        let ql = QuantLinear::from_kmajor(&kmajor, k, n, cfg, &fam).unwrap();
+        let mut rng = Pcg32::seeded(0x96E2);
+        for m in [1usize, 7, 33] {
+            let x = Tensor::from_fn(&[m, k], |_| rng.normal());
+            let got = ql.qgemm(&x);
+            let want = dense_reference(&kmajor, k, n, &cfg, &fam, &x);
+            assert_eq!(got.shape, want.shape);
+            for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "m={m}, element {i}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn qgemm_handles_ragged_n_and_column_straddling_arrays() {
+        // k = 32 < L_A = 64: block arrays straddle column boundaries in
+        // the K-major stream (exactly what the tiny test model produces);
+        // n = 50 is not a multiple of NR.
+        let cfg = LobcqConfig::new(8, 4, 64);
+        let (k, n) = (32, 50);
+        let (kmajor, fam) = setup(0x96E3, &cfg, k, n);
+        let ql = QuantLinear::from_kmajor(&kmajor, k, n, cfg, &fam).unwrap();
+        let mut rng = Pcg32::seeded(0x96E4);
+        let x = Tensor::from_fn(&[5, k], |_| rng.normal());
+        let got = ql.qgemm(&x);
+        let want = dense_reference(&kmajor, k, n, &cfg, &fam, &x);
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_arrays_decode_to_exact_zero_products() {
+        let cfg = LobcqConfig::new(8, 2, 64);
+        let (k, n) = (64, 16);
+        let (mut kmajor, fam) = setup(0x96E5, &cfg, k, n);
+        kmajor[..cfg.la].fill(0.0); // first array (column 0) all-zero
+        let ql = QuantLinear::from_kmajor(&kmajor, k, n, cfg, &fam).unwrap();
+        let x = Tensor::new(&[1, k], vec![1.0; k]);
+        let got = ql.qgemm(&x);
+        assert_eq!(got.data[0].to_bits(), 0.0f32.to_bits(), "zero column leaked {}", got.data[0]);
+    }
+
+    #[test]
+    fn from_encoded_round_trips() {
+        let cfg = LobcqConfig::new(8, 8, 64);
+        let (k, n) = (64, 32);
+        let (kmajor, fam) = setup(0x96E6, &cfg, k, n);
+        let enc = encode(&kmajor, &[n, k], &cfg, &fam);
+        let a = QuantLinear::from_kmajor(&kmajor, k, n, cfg, &fam).unwrap();
+        let b = QuantLinear::from_encoded(&enc, &fam).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn state_is_many_times_smaller_than_f32() {
+        let cfg = LobcqConfig::new(8, 8, 64);
+        let (k, n) = (128, 128);
+        let (kmajor, fam) = setup(0x96E7, &cfg, k, n);
+        let ql = QuantLinear::from_kmajor(&kmajor, k, n, cfg, &fam).unwrap();
+        assert!(
+            (ql.state_bytes() as f64) < (4 * k * n) as f64 / 2.5,
+            "encoded state {} bytes vs dense {}",
+            ql.state_bytes(),
+            4 * k * n
+        );
+    }
+}

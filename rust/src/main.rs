@@ -219,10 +219,11 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
     let t = 32.min(cfg.max_t);
     let exec = CpuExecutor::new(cfg.clone(), &weights, &scheme, pool, max_batch, t)?;
     println!(
-        "[serve-cpu] model {} ({} params), scheme {}, batch {max_batch}, t {t}",
+        "[serve-cpu] model {} ({} params), scheme {}, weights {}, batch {max_batch}, t {t}",
         cfg.name,
         cfg.param_count(),
-        exec.act_scheme_name()
+        exec.act_scheme_name(),
+        exec.weight_mode()
     );
     let vocab = cfg.vocab as u32;
     let server = Server::start(
@@ -285,7 +286,7 @@ fn synthetic_model() -> (lobcq::model::ModelConfig, lobcq::model::Weights) {
         };
         tensors.insert(name, Tensor::new(&shape, data));
     }
-    (cfg, lobcq::model::Weights { tensors })
+    (cfg, lobcq::model::Weights::new(tensors))
 }
 
 // ---- bench (experiments) ----

@@ -9,8 +9,9 @@
 //! integration test cross-checks its logits against the executed PJRT
 //! artifact to ~1e-4 (`rust/tests/artifact_integration.rs`).
 
+use crate::kernels::{self, PackedB};
 use crate::model::config::ModelConfig;
-use crate::model::weights::Weights;
+use crate::model::weights::{Linear, Weights};
 use crate::quant::pipeline::QuantPipeline;
 use crate::tensor::Tensor;
 
@@ -23,39 +24,13 @@ use crate::tensor::Tensor;
 /// matmul.
 pub type ActQuant<'a> = Option<&'a QuantPipeline>;
 
-/// Parallel matmul: `a [m,k] @ b [k,n]`, rows split across threads.
+/// Parallel matmul: `a [m,k] @ b [k,n]`. Now a thin wrapper over the
+/// blocked kernel (`kernels::gemm`) — the branchy scalar triple-loop it
+/// used to be (including its `a == 0.0` skip, which defeated
+/// vectorization for a near-zero hit rate on dense activations) is gone.
+/// Callers that reuse B should pack once and call `kernels::gemm_packed`.
 pub fn matmul_par(a: &Tensor, b: &Tensor) -> Tensor {
-    let (m, k) = (a.shape[0], a.shape[1]);
-    let (k2, n) = (b.shape[0], b.shape[1]);
-    assert_eq!(k, k2);
-    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    if m * n * k < 1 << 18 || threads == 1 {
-        return a.matmul(b);
-    }
-    let mut out = vec![0.0f32; m * n];
-    let chunk = m.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (ti, out_chunk) in out.chunks_mut(chunk * n).enumerate() {
-            let a = &a;
-            let b = &b;
-            s.spawn(move || {
-                let row0 = ti * chunk;
-                for (r, orow) in out_chunk.chunks_mut(n).enumerate() {
-                    let arow = a.row(row0 + r);
-                    for (kk, &av) in arow.iter().enumerate() {
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let brow = b.row(kk);
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += av * bv;
-                        }
-                    }
-                }
-            });
-        }
-    });
-    Tensor::new(&[m, n], out)
+    kernels::gemm(a, b)
 }
 
 fn layer_norm(x: &mut Tensor, g: &Tensor, b: &Tensor, eps: f32) {
@@ -92,18 +67,26 @@ fn softmax_rows(x: &mut [f32], cols: usize) {
     }
 }
 
-/// GEMM with optional activation fake-quantization (weights are expected
-/// to be pre-quantized by the caller when evaluating weight quant).
-fn qmatmul(x: &Tensor, w: &Tensor, act_q: ActQuant) -> Tensor {
-    match act_q {
-        None => matmul_par(x, w),
+/// GEMM against a named weight, with optional activation
+/// fake-quantization. Resolves through `Weights::linear`: packed f32
+/// panels for dense weights (pre-quantized by the caller when evaluating
+/// weight quant), or the encoded-domain `qgemm` when the weight is bound
+/// as LO-BCQ codes — in which case no f32 copy of the weight ever exists.
+fn qmatmul(x: &Tensor, w: &Weights, name: &str, act_q: ActQuant) -> anyhow::Result<Tensor> {
+    let lin = w.linear(name)?;
+    let run = |xq: &Tensor| match &lin {
+        Linear::Dense(pb) => kernels::gemm_packed(xq, pb),
+        Linear::Encoded(ql) => ql.qgemm(xq),
+    };
+    Ok(match act_q {
+        None => run(x),
         Some(pipe) => {
             let xq = Tensor::new(&x.shape, pipe.quantize_pooled(&x.data));
-            let out = matmul_par(&xq, w);
+            let out = run(&xq);
             pipe.recycle(xq.data);
             out
         }
-    }
+    })
 }
 
 /// Forward pass: `tokens` is (B, T) with T ≤ cfg.max_t; returns logits
@@ -130,42 +113,53 @@ pub fn forward(cfg: &ModelConfig, w: &Weights, tokens: &[u32], batch: usize, act
 
     let hd = cfg.head_dim();
     let scale = 1.0 / (hd as f32).sqrt();
+    // Per-(batch, head) scratch, reused across layers: contiguous Q/K/V
+    // head slices so the score/context products run through the blocked
+    // kernel instead of strided scalar loops.
+    let mut qh = vec![0.0f32; t * hd];
+    let mut kh = vec![0.0f32; t * hd];
+    let mut vh = vec![0.0f32; t * hd];
+    let mut scores = vec![0.0f32; t * t];
+    let mut ctx = vec![0.0f32; t * hd];
     for i in 0..cfg.n_layers {
         // --- attention block ---
         let mut h = x.clone();
         layer_norm(&mut h, w.get(&format!("l{i}.ln1.g"))?, w.get(&format!("l{i}.ln1.b"))?, 1e-5);
-        let qkv = qmatmul(&h, w.get(&format!("l{i}.attn.wqkv"))?, act_q); // (B*T, 3D)
+        let qkv = qmatmul(&h, w, &format!("l{i}.attn.wqkv"), act_q)?; // (B*T, 3D)
         let mut attn_out = Tensor::zeros(&[batch * t, d]);
         for b in 0..batch {
             for head in 0..cfg.n_heads {
                 let off = head * hd;
-                // scores (T, T)
-                let mut scores = vec![f32::NEG_INFINITY; t * t];
                 for qi in 0..t {
-                    let qrow = &qkv.row(b * t + qi)[off..off + hd];
-                    for ki in 0..=qi {
-                        let krow = &qkv.row(b * t + ki)[d + off..d + off + hd];
-                        let dot: f32 = qrow.iter().zip(krow).map(|(a, c)| a * c).sum();
-                        scores[qi * t + ki] = dot * scale;
+                    let row = qkv.row(b * t + qi);
+                    qh[qi * hd..(qi + 1) * hd].copy_from_slice(&row[off..off + hd]);
+                    kh[qi * hd..(qi + 1) * hd].copy_from_slice(&row[d + off..d + off + hd]);
+                    vh[qi * hd..(qi + 1) * hd].copy_from_slice(&row[2 * d + off..2 * d + off + hd]);
+                }
+                // scores = Qh · Khᵀ (rows of Kh are columns of Khᵀ),
+                // then causal mask + scale before the softmax.
+                let kt = PackedB::from_rows_flat(&kh, t, hd);
+                kernels::gemm_into_flat(&qh, t, hd, &kt, &mut scores);
+                for qi in 0..t {
+                    let srow = &mut scores[qi * t..(qi + 1) * t];
+                    for s in srow[..=qi].iter_mut() {
+                        *s *= scale;
+                    }
+                    for s in srow[qi + 1..].iter_mut() {
+                        *s = f32::NEG_INFINITY;
                     }
                 }
                 softmax_rows(&mut scores, t);
+                // ctx = P · Vh.
+                let vp = PackedB::pack_flat(&vh, t, hd);
+                kernels::gemm_into_flat(&scores, t, t, &vp, &mut ctx);
                 for qi in 0..t {
-                    let out_row = &mut attn_out.row_mut(b * t + qi)[off..off + hd];
-                    for ki in 0..=qi {
-                        let p = scores[qi * t + ki];
-                        if p == 0.0 {
-                            continue;
-                        }
-                        let vrow = &qkv.row(b * t + ki)[2 * d + off..2 * d + off + hd];
-                        for (o, &v) in out_row.iter_mut().zip(vrow) {
-                            *o += p * v;
-                        }
-                    }
+                    attn_out.row_mut(b * t + qi)[off..off + hd]
+                        .copy_from_slice(&ctx[qi * hd..(qi + 1) * hd]);
                 }
             }
         }
-        let proj = qmatmul(&attn_out, w.get(&format!("l{i}.attn.wo"))?, act_q);
+        let proj = qmatmul(&attn_out, w, &format!("l{i}.attn.wo"), act_q)?;
         for (xv, pv) in x.data.iter_mut().zip(&proj.data) {
             *xv += pv;
         }
@@ -173,18 +167,20 @@ pub fn forward(cfg: &ModelConfig, w: &Weights, tokens: &[u32], batch: usize, act
         // --- MLP block ---
         let mut h = x.clone();
         layer_norm(&mut h, w.get(&format!("l{i}.ln2.g"))?, w.get(&format!("l{i}.ln2.b"))?, 1e-5);
-        let mut ff = qmatmul(&h, w.get(&format!("l{i}.mlp.w1"))?, act_q);
+        let mut ff = qmatmul(&h, w, &format!("l{i}.mlp.w1"), act_q)?;
         gelu(&mut ff.data);
-        let down = qmatmul(&ff, w.get(&format!("l{i}.mlp.w2"))?, act_q);
+        let down = qmatmul(&ff, w, &format!("l{i}.mlp.w2"), act_q)?;
         for (xv, dv) in x.data.iter_mut().zip(&down.data) {
             *xv += dv;
         }
     }
 
     layer_norm(&mut x, w.get("lnf.g")?, w.get("lnf.b")?, 1e-5);
-    // Tied LM head: logits = x @ embed^T (unquantized, as in python).
-    let embed_t = embed.transpose2();
-    Ok(matmul_par(&x, &embed_t))
+    // Tied LM head: logits = x @ embedᵀ (unquantized, as in python). The
+    // transposed panel is packed once and cached in `Weights` — no
+    // per-forward re-materialization of the [d, vocab] transpose.
+    let head = w.packed_transposed("embed")?;
+    Ok(kernels::gemm_packed(&x, &head))
 }
 
 /// Test-only fixtures shared by eval/coordinator unit tests.
@@ -212,7 +208,7 @@ pub mod tests_support {
             };
             tensors.insert(name, Tensor::new(&shape, data));
         }
-        Weights { tensors }
+        Weights::new(tensors)
     }
 }
 

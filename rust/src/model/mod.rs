@@ -9,4 +9,4 @@ pub mod weights;
 
 pub use config::ModelConfig;
 pub use forward::{forward, matmul_par};
-pub use weights::Weights;
+pub use weights::{Linear, Weights};

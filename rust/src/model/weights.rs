@@ -6,21 +6,146 @@
 //! per tensor: u32 name_len | name | u32 rank | u32 dims[rank] | f32 data (LE)
 //! ```
 
+use crate::kernels::{PackedB, QuantLinear};
 use crate::model::config::ModelConfig;
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::io::Read;
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 
-/// Named weight collection for one model.
-#[derive(Debug, Clone)]
+/// Named weight collection for one model, plus the kernel-ready forms the
+/// forward pass consumes:
+///
+/// - a lazy cache of packed GEMM panels (`kernels::PackedB`), keyed by
+///   tensor name — including the pre-transposed tied-LM-head panel
+///   (`"embed^T"`), so the embedding is never re-transposed per forward;
+/// - encoded-domain GEMM weights (`kernels::QuantLinear`): LO-BCQ codes
+///   that take precedence over `tensors` on the forward's GEMM path and
+///   replace the dense tensor entirely (serving never dequantizes).
+///
+/// Cached panels are `Arc`-shared across clones (a config sweep that
+/// clones the base weights per grid point packs the LM head once).
+/// `tensors` is private so mutation *must* go through
+/// [`insert`](Self::insert) / [`tensor_mut`](Self::tensor_mut) /
+/// [`remove_tensor`](Self::remove_tensor), which invalidate the cached
+/// forms for that name — a stale panel can never be served.
+#[derive(Debug)]
 pub struct Weights {
-    pub tensors: BTreeMap<String, Tensor>,
+    tensors: BTreeMap<String, Tensor>,
+    packs: Mutex<BTreeMap<String, Arc<PackedB>>>,
+    encoded: BTreeMap<String, Arc<QuantLinear>>,
+}
+
+/// A GEMM right-hand side resolved by [`Weights::linear`]: either packed
+/// f32 panels or an encoded-domain weight.
+#[derive(Debug, Clone)]
+pub enum Linear {
+    Dense(Arc<PackedB>),
+    Encoded(Arc<QuantLinear>),
+}
+
+impl Clone for Weights {
+    fn clone(&self) -> Weights {
+        Weights {
+            tensors: self.tensors.clone(),
+            // Panels are immutable once built — clones share the Arcs.
+            packs: Mutex::new(self.packs.lock().unwrap().clone()),
+            encoded: self.encoded.clone(),
+        }
+    }
 }
 
 impl Weights {
+    pub fn new(tensors: BTreeMap<String, Tensor>) -> Weights {
+        Weights { tensors, packs: Mutex::new(BTreeMap::new()), encoded: BTreeMap::new() }
+    }
+
     pub fn get(&self, name: &str) -> anyhow::Result<&Tensor> {
         self.tensors.get(name).ok_or_else(|| anyhow::anyhow!("missing weight '{name}'"))
+    }
+
+    /// Read-only view of the dense tensor map (encoded weights excluded).
+    pub fn tensors(&self) -> &BTreeMap<String, Tensor> {
+        &self.tensors
+    }
+
+    /// Insert/replace a tensor, invalidating any cached packed/encoded
+    /// forms under the same name.
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.invalidate(name);
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    /// Mutable access to a tensor's data; invalidates cached forms.
+    pub fn tensor_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        self.invalidate(name);
+        self.tensors.get_mut(name)
+    }
+
+    /// Remove a dense tensor (used when an encoded form replaces it).
+    pub fn remove_tensor(&mut self, name: &str) -> Option<Tensor> {
+        self.invalidate(name);
+        self.tensors.remove(name)
+    }
+
+    fn invalidate(&mut self, name: &str) {
+        let tkey = transpose_key(name);
+        self.packs.get_mut().unwrap().retain(|key, _| key != name && *key != tkey);
+        self.encoded.remove(name);
+    }
+
+    /// Bind an encoded-domain weight: the forward's GEMM for `name` will
+    /// run `QuantLinear::qgemm` on the codes instead of a dense matmul.
+    pub fn set_encoded(&mut self, name: &str, ql: Arc<QuantLinear>) {
+        let tkey = transpose_key(name);
+        self.packs.get_mut().unwrap().retain(|key, _| key != name && *key != tkey);
+        self.encoded.insert(name.to_string(), ql);
+    }
+
+    pub fn encoded(&self, name: &str) -> Option<&Arc<QuantLinear>> {
+        self.encoded.get(name)
+    }
+
+    /// Whether any GEMM weight is held in encoded form.
+    pub fn has_encoded(&self) -> bool {
+        !self.encoded.is_empty()
+    }
+
+    /// Packed panels for a `[k, n]` GEMM weight, built once and cached.
+    pub fn packed(&self, name: &str) -> anyhow::Result<Arc<PackedB>> {
+        if let Some(p) = self.packs.lock().unwrap().get(name) {
+            return Ok(p.clone());
+        }
+        let t = self.get(name)?;
+        anyhow::ensure!(t.rank() == 2, "cannot pack rank-{} weight '{name}'", t.rank());
+        let p = Arc::new(PackedB::pack(t));
+        self.packs.lock().unwrap().insert(name.to_string(), p.clone());
+        Ok(p)
+    }
+
+    /// Packed panels for the *transpose* of a `[n, k]` tensor — the tied
+    /// LM head (`logits = x · embedᵀ`). Cached under `"{name}^T"`, so the
+    /// embedding is transposed-and-packed exactly once per weight set.
+    pub fn packed_transposed(&self, name: &str) -> anyhow::Result<Arc<PackedB>> {
+        let key = transpose_key(name);
+        if let Some(p) = self.packs.lock().unwrap().get(&key) {
+            return Ok(p.clone());
+        }
+        let t = self.get(name)?;
+        anyhow::ensure!(t.rank() == 2, "cannot pack rank-{} weight '{name}'", t.rank());
+        let p = Arc::new(PackedB::from_rows(t));
+        self.packs.lock().unwrap().insert(key, p.clone());
+        Ok(p)
+    }
+
+    /// Resolve the GEMM operator for `name`: encoded codes when bound,
+    /// packed f32 panels otherwise.
+    pub fn linear(&self, name: &str) -> anyhow::Result<Linear> {
+        if let Some(q) = self.encoded.get(name) {
+            return Ok(Linear::Encoded(q.clone()));
+        }
+        Ok(Linear::Dense(self.packed(name)?))
     }
 
     /// Weights in the model's calling-convention order.
@@ -28,9 +153,18 @@ impl Weights {
         cfg.param_shapes().iter().map(|(name, _)| self.get(name)).collect()
     }
 
-    /// Validate every tensor against the config's expected shapes.
+    /// Validate every parameter against the config's expected shapes.
+    /// Encoded-domain GEMM weights validate against their `(k, n)` shape.
     pub fn validate(&self, cfg: &ModelConfig) -> anyhow::Result<()> {
         for (name, shape) in cfg.param_shapes() {
+            if let Some(ql) = self.encoded.get(&name) {
+                let (k, n) = ql.shape();
+                anyhow::ensure!(
+                    shape == vec![k, n],
+                    "encoded weight '{name}': shape [{k}, {n}] != expected {shape:?}"
+                );
+                continue;
+            }
             let t = self.get(&name)?;
             anyhow::ensure!(
                 t.shape == shape,
@@ -84,10 +218,12 @@ impl Weights {
             tensors.insert(name, Tensor::new(&shape, data));
         }
         anyhow::ensure!(pos == buf.len(), "trailing bytes in weights file");
-        Ok(Weights { tensors })
+        Ok(Weights::new(tensors))
     }
 
     /// Serialize back to LWTS bytes (round-trip tests + tooling).
+    /// Dense tensors only — encoded weights have their own wire format
+    /// (`quant::encode::to_bytes`).
     pub fn to_bytes(&self, order: &[String]) -> Vec<u8> {
         let mut out = Vec::new();
         out.extend_from_slice(b"LWTS");
@@ -109,6 +245,11 @@ impl Weights {
     }
 }
 
+/// Pack-cache key for the transposed view of `name`.
+fn transpose_key(name: &str) -> String {
+    format!("{name}^T")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,7 +258,7 @@ mod tests {
         let mut tensors = BTreeMap::new();
         tensors.insert("a".to_string(), Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
         tensors.insert("b.c".to_string(), Tensor::new(&[4], vec![0.5, -0.5, 0.0, 1e-9]));
-        Weights { tensors }
+        Weights::new(tensors)
     }
 
     #[test]
@@ -144,5 +285,40 @@ mod tests {
     fn missing_weight_error() {
         let w = sample();
         assert!(w.get("nope").is_err());
+    }
+
+    #[test]
+    fn pack_cache_builds_once_and_shares_across_clones() {
+        let w = sample();
+        let p1 = w.packed("a").unwrap();
+        let p2 = w.packed("a").unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "repacked on second call");
+        // The tied-LM-head transpose is cached under its own key…
+        let t1 = w.packed_transposed("a").unwrap();
+        assert!(!Arc::ptr_eq(&p1, &t1));
+        // …and clones share every panel (config sweeps pack once).
+        let c = w.clone();
+        assert!(Arc::ptr_eq(&t1, &c.packed_transposed("a").unwrap()));
+    }
+
+    #[test]
+    fn insert_invalidates_cached_forms() {
+        let mut w = sample();
+        let stale = w.packed("a").unwrap();
+        let stale_t = w.packed_transposed("a").unwrap();
+        w.insert("a", Tensor::new(&[2, 3], vec![9.0; 6]));
+        let fresh = w.packed("a").unwrap();
+        assert!(!Arc::ptr_eq(&stale, &fresh), "stale panel served after insert");
+        assert!(!Arc::ptr_eq(&stale_t, &w.packed_transposed("a").unwrap()));
+        // tensor_mut invalidates too.
+        let before = w.packed("a").unwrap();
+        w.tensor_mut("a").unwrap().data[0] = -1.0;
+        assert!(!Arc::ptr_eq(&before, &w.packed("a").unwrap()));
+    }
+
+    #[test]
+    fn packed_rejects_non_rank2() {
+        let w = sample();
+        assert!(w.packed("b.c").is_err(), "rank-1 tensor packed");
     }
 }

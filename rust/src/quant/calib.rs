@@ -114,6 +114,31 @@ impl QuantScheme for LobcqQuantizer {
             .expect("universal scope requires a frozen family");
         lobcq::quantize_arrays_into(&self.cfg, family, prep.scale, src, dst);
     }
+
+    fn supports_encoded_weights(&self) -> bool {
+        true
+    }
+
+    /// LO-BCQ has a packed code format, so GEMM weights compile to the
+    /// encoded domain: universal scope encodes against the frozen family
+    /// directly; layerwise scope refits per tensor first (the same
+    /// bounded refit [`prepare`](Self::prepare) runs, so the codes match
+    /// what fake-quantize would have produced bit-for-bit).
+    fn encode_weight(&self, kmajor: &[f32], k: usize, n: usize) -> Option<crate::kernels::QuantLinear> {
+        if kmajor.len() != k * n || kmajor.is_empty() || kmajor.len() % self.cfg.la != 0 {
+            return None;
+        }
+        let refit;
+        let family = match self.scope {
+            // encode_planar derives s_X itself — no prepare() scan needed.
+            CalibScope::Universal => self.family.as_ref()?,
+            CalibScope::Layerwise => {
+                refit = self.prepare(kmajor).family;
+                refit.as_ref()?
+            }
+        };
+        crate::kernels::QuantLinear::from_kmajor(kmajor, k, n, self.cfg, family).ok()
+    }
 }
 
 /// Sample calibration tensors: random rows from a set of larger tensors

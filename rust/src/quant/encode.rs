@@ -178,16 +178,56 @@ impl EncodedTensor {
     fn selector_bits(&self) -> u32 {
         (self.cfg.nc as f64).log2().ceil() as u32
     }
+
+    /// Unpack the bitstreams back to the planar layout (the inverse of
+    /// [`pack_planar`]) — how artifacts loaded from disk enter the
+    /// encoded-domain GEMM path.
+    pub fn to_planar(&self) -> PlanarCodes {
+        let sel_bits = self.selector_bits();
+        let mut selr = BitReader::new(&self.selectors);
+        let selectors = (0..self.num_blocks())
+            .map(|_| if sel_bits > 0 { selr.read(sel_bits) as u8 } else { 0 })
+            .collect();
+        let mut idxr = BitReader::new(&self.indices);
+        let codes = (0..self.num_scalars()).map(|_| idxr.read(self.cfg.b) as u8).collect();
+        PlanarCodes {
+            s_x: self.s_x,
+            scale_codes: self.scale_codes.clone(),
+            selectors,
+            codes,
+        }
+    }
 }
 
-/// Encode a tensor's data (paper Fig. 5). The family must already be
-/// codeword-quantized (INT-B_c) — the frozen inference tables.
-pub fn encode(data: &[f32], shape: &[usize], cfg: &LobcqConfig, family: &CodebookFamily) -> EncodedTensor {
-    assert_eq!(shape.iter().product::<usize>(), data.len());
+/// Planar (de-interleaved) encoded layout: one byte per block-array scale
+/// code, per block selector, and per scalar index. This is the
+/// random-access form the encoded-domain GEMM (`kernels::qgemm`) consumes
+/// directly — `codes[p]`, `selectors[p / L_b]`, `scale_codes[p / L_A]`
+/// address any scalar position `p` without bitstream walking. The Fig. 5
+/// bit-packed wire format ([`EncodedTensor`]) is produced by packing this
+/// planar form ([`pack_planar`]); the two are lossless views of the same
+/// quantization.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanarCodes {
+    /// Per-tensor scale s_X (eq. 8).
+    pub s_x: f32,
+    /// One E4M3 byte per block array.
+    pub scale_codes: Vec<u8>,
+    /// One codebook selector per block (all zero when Nc == 1).
+    pub selectors: Vec<u8>,
+    /// One codeword index per scalar (low B bits used).
+    pub codes: Vec<u8>,
+}
+
+/// Encode to the planar layout (normalize → select per block → index per
+/// scalar). This is the de-interleaving step of the encode path: blocks
+/// and arrays are walked once and the three planes written separately, so
+/// downstream consumers (bit-packing, the encoded-domain GEMM) never
+/// re-interleave.
+pub fn encode_planar(data: &[f32], cfg: &LobcqConfig, family: &CodebookFamily) -> PlanarCodes {
     assert_eq!(family.nc(), cfg.nc, "family/config Nc mismatch");
     assert_eq!(family.b, cfg.b, "family/config B mismatch");
     let norm = normalize(data, cfg.la, cfg);
-    let sel_bits = (cfg.nc as f64).log2().ceil() as u32;
 
     let mut scale_codes = Vec::with_capacity(norm.scales.len());
     for &eff in &norm.scales {
@@ -195,30 +235,50 @@ pub fn encode(data: &[f32], shape: &[usize], cfg: &LobcqConfig, family: &Codeboo
         scale_codes.push(cfg.scale_format.encode_bits(eff / norm.s_x) as u8);
     }
 
-    let mut selw = BitWriter::new();
-    let mut idxw = BitWriter::new();
+    let mut selectors = Vec::with_capacity(data.len() / cfg.lb);
+    let mut codes = Vec::with_capacity(data.len());
     for arr in norm.values.chunks_exact(cfg.la) {
         for block in arr.chunks_exact(cfg.lb) {
             let sel = family.select(block);
-            if sel_bits > 0 {
-                selw.push(sel as u32, sel_bits);
-            }
+            selectors.push(sel as u8);
             let book = &family.books[sel];
             for &v in block {
-                idxw.push(book.encode(v) as u32, cfg.b);
+                codes.push(book.encode(v) as u8);
             }
         }
     }
+    PlanarCodes { s_x: norm.s_x, scale_codes, selectors, codes }
+}
 
+/// Bit-pack a planar encoding into the Fig. 5 wire format.
+pub fn pack_planar(planar: &PlanarCodes, shape: &[usize], cfg: &LobcqConfig) -> EncodedTensor {
+    let sel_bits = (cfg.nc as f64).log2().ceil() as u32;
+    let mut selw = BitWriter::new();
+    if sel_bits > 0 {
+        for &s in &planar.selectors {
+            selw.push(s as u32, sel_bits);
+        }
+    }
+    let mut idxw = BitWriter::new();
+    for &c in &planar.codes {
+        idxw.push(c as u32, cfg.b);
+    }
     EncodedTensor::try_new(
         *cfg,
         shape.to_vec(),
-        norm.s_x,
-        scale_codes,
+        planar.s_x,
+        planar.scale_codes.clone(),
         selw.finish(),
         idxw.finish(),
     )
     .expect("encode inputs pre-validated by normalize")
+}
+
+/// Encode a tensor's data (paper Fig. 5). The family must already be
+/// codeword-quantized (INT-B_c) — the frozen inference tables.
+pub fn encode(data: &[f32], shape: &[usize], cfg: &LobcqConfig, family: &CodebookFamily) -> EncodedTensor {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    pack_planar(&encode_planar(data, cfg, family), shape, cfg)
 }
 
 /// Decode back to dense f32. Exactly reproduces
@@ -429,6 +489,21 @@ mod tests {
         // decode-time panic.
         assert!(EncodedTensor::try_new(cfg, vec![2, 64], 1.0, vec![0, 0], vec![0], vec![0; 64]).is_err());
         assert!(EncodedTensor::try_new(cfg, vec![2, 64], 1.0, vec![0, 0], vec![0, 0], vec![0; 63]).is_err());
+    }
+
+    #[test]
+    fn planar_and_bitstream_are_lossless_views() {
+        let cfg = LobcqConfig::new(8, 8, 64);
+        let (t, fam) = setup(47, &cfg, 2048);
+        let planar = encode_planar(&t.data, &cfg, &fam);
+        let enc = encode(&t.data, &t.shape, &cfg, &fam);
+        // encode == pack(planar), and unpacking recovers the planes.
+        assert_eq!(pack_planar(&planar, &t.shape, &cfg), enc);
+        assert_eq!(enc.to_planar(), planar);
+        // One byte per scalar / block / array.
+        assert_eq!(planar.codes.len(), 2048);
+        assert_eq!(planar.selectors.len(), 2048 / cfg.lb);
+        assert_eq!(planar.scale_codes.len(), 2048 / cfg.la);
     }
 
     #[test]

@@ -82,6 +82,25 @@ pub trait QuantScheme: Send + Sync {
     /// can run concurrently.
     fn quantize_groups(&self, prep: &PrepState, src: &[f32], dst: &mut [f32]);
 
+    /// Whether this scheme can compile weights to the encoded domain
+    /// ([`encode_weight`](Self::encode_weight)). Callers check this
+    /// *before* doing any per-model work, so the common dense fallback
+    /// pays nothing.
+    fn supports_encoded_weights(&self) -> bool {
+        false
+    }
+
+    /// Encoded-domain weight compilation: schemes with a packed code
+    /// format (LO-BCQ) turn a K-major gathered GEMM weight
+    /// (`kmajor[c*k + r] = W[r, c]` for a `[k, n]` weight) into a
+    /// [`QuantLinear`](crate::kernels::QuantLinear) whose GEMM runs
+    /// directly on the codes — bit-exact with `quantize_into` + f32 GEMM
+    /// (`kernels::qgemm`). Default: no encoded-domain support, and the
+    /// caller falls back to fake-quantized dense weights.
+    fn encode_weight(&self, _kmajor: &[f32], _k: usize, _n: usize) -> Option<crate::kernels::QuantLinear> {
+        None
+    }
+
     /// Serial whole-tensor in-place fake-quantize: the core API.
     fn quantize_into(&self, src: &[f32], dst: &mut [f32]) {
         assert_eq!(src.len(), dst.len(), "{}: src/dst length mismatch", self.name());

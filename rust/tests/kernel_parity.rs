@@ -1,0 +1,214 @@
+//! Kernel parity suite (ISSUE 2): the blocked f32 GEMM and the
+//! encoded-domain qgemm against the serial `Tensor::matmul` reference and
+//! against each other.
+//!
+//! Invariants:
+//! 1. blocked GEMM ≈ serial reference across ragged shapes (m, n, k not
+//!    multiples of MR/NR/KC, and the m = 1 decode shape) — f32 tolerance,
+//!    the two paths sum in different orders;
+//! 2. encoded-domain qgemm is **bit-exact** with the blocked f32 GEMM
+//!    over the fake-quantized weights, both at the single-GEMM level and
+//!    for end-to-end model logits (the W4A4 serving path never decodes a
+//!    weight tensor, yet reproduces the eval path to the last bit);
+//! 3. the encoded `Weights` hold no dense f32 copy of any GEMM weight.
+
+#![allow(clippy::needless_range_loop)]
+
+use lobcq::eval::scheme::Scheme;
+use lobcq::kernels::{gemm, gemm_packed, PackedB, QuantLinear};
+use lobcq::model::forward::forward;
+use lobcq::model::{ModelConfig, Weights};
+use lobcq::quant::calib::calibrate_universal;
+use lobcq::quant::lobcq::{fake_quantize, CalibOpts, LobcqConfig};
+use lobcq::tensor::Tensor;
+use lobcq::util::rng::{llm_like_sample, Pcg32};
+use std::collections::BTreeMap;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig { name: "t".into(), d: 32, n_layers: 2, n_heads: 2, vocab: 40, max_t: 16 }
+}
+
+fn random_weights(cfg: &ModelConfig, seed: u64) -> Weights {
+    let mut rng = Pcg32::seeded(seed);
+    let mut tensors = BTreeMap::new();
+    for (name, shape) in cfg.param_shapes() {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with(".g") {
+            vec![1.0; n]
+        } else if name.ends_with(".b") {
+            vec![0.0; n]
+        } else {
+            (0..n).map(|_| rng.normal() * 0.05).collect()
+        };
+        tensors.insert(name, Tensor::new(&shape, data));
+    }
+    Weights::new(tensors)
+}
+
+// ---- 1. blocked f32 kernel vs the serial reference ----
+
+#[test]
+fn blocked_gemm_matches_serial_reference_on_ragged_shapes() {
+    let mut rng = Pcg32::seeded(0xB10C);
+    for &(m, k, n) in &[
+        (1usize, 1usize, 1usize), // degenerate
+        (1, 512, 384),            // decode shape: one token row
+        (1, 300, 77),             // decode, nothing tile-aligned
+        (2, 64, 16),
+        (7, 33, 19),
+        (13, 257, 31), // k crosses a KC-block boundary + ragged everything
+        (37, 64, 53),
+        (64, 128, 100),
+    ] {
+        let a = Tensor::from_fn(&[m, k], |_| rng.normal());
+        let b = Tensor::from_fn(&[k, n], |_| rng.normal());
+        let got = gemm(&a, &b);
+        let want = a.matmul(&b);
+        assert_eq!(got.shape, want.shape);
+        for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+            assert!(
+                (g - w).abs() <= 2e-4 * (1.0 + w.abs()),
+                "{m}x{k}x{n} element {i}: blocked {g} vs serial {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn blocked_gemm_handles_zero_activations_without_skip_branch() {
+    // The seed kernel special-cased a == 0.0; the blocked kernel must get
+    // identical math with no branch (softmax rows after causal masking
+    // are exactly this: leading zeros).
+    let mut rng = Pcg32::seeded(0xB10D);
+    let mut a = Tensor::from_fn(&[6, 40], |_| rng.normal());
+    for r in 0..6 {
+        for c in (r * 3)..40 {
+            a.data[r * 40 + c] = 0.0;
+        }
+    }
+    let b = Tensor::from_fn(&[40, 24], |_| rng.normal());
+    let got = gemm(&a, &b);
+    let want = a.matmul(&b);
+    for (g, w) in got.data.iter().zip(&want.data) {
+        assert!((g - w).abs() <= 1e-4 * (1.0 + w.abs()));
+    }
+}
+
+// ---- 2. encoded-domain qgemm vs dense-on-fake-quant, single GEMM ----
+
+/// K-major random weight + calibrated family + QuantLinear + the dense
+/// fake-quantized `[k, n]` tensor it must agree with.
+fn encoded_fixture(seed: u64, cfg: &LobcqConfig, k: usize, n: usize) -> (QuantLinear, Tensor) {
+    let mut rng = Pcg32::seeded(seed);
+    let kmajor = llm_like_sample(&mut rng, k * n, 0.05, 4.0);
+    let sample = Tensor::new(&[k * n / cfg.la, cfg.la], kmajor.clone());
+    let fam = calibrate_universal(&[&sample], cfg, CalibOpts { max_iters: 10, ..Default::default() }, seed);
+    let ql = QuantLinear::from_kmajor(&kmajor, k, n, *cfg, &fam).unwrap();
+    let fq = fake_quantize(&kmajor, cfg, &fam);
+    let mut dense = Tensor::zeros(&[k, n]);
+    for c in 0..n {
+        for r in 0..k {
+            dense.data[r * n + c] = fq[c * k + r];
+        }
+    }
+    (ql, dense)
+}
+
+#[test]
+fn qgemm_bitexact_with_blocked_gemm_over_fakequant_weights() {
+    let cfg = LobcqConfig::new(8, 8, 64);
+    let (ql, dense) = encoded_fixture(0xE4C1, &cfg, 256, 96);
+    let pb = PackedB::pack(&dense);
+    let mut rng = Pcg32::seeded(0xE4C2);
+    // m = 1 decode shape and ragged prefill shapes.
+    for m in [1usize, 3, 17, 40] {
+        let x = Tensor::from_fn(&[m, 256], |_| rng.normal());
+        let got = ql.qgemm(&x);
+        let want = gemm_packed(&x, &pb);
+        assert_eq!(got.shape, want.shape);
+        for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "m={m} element {i}: {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn qgemm_bitexact_on_sub4bit_and_small_k() {
+    // B = 2 index bits, k = 32 < L_A (arrays straddle columns in the
+    // K-major stream — the tiny model shape), ragged n.
+    let cfg = LobcqConfig::new(8, 4, 64).with_bits(2);
+    let (ql, dense) = encoded_fixture(0xE4C3, &cfg, 32, 46); // 32·46 = 23 arrays
+    let pb = PackedB::pack(&dense);
+    let mut rng = Pcg32::seeded(0xE4C4);
+    let x = Tensor::from_fn(&[9, 32], |_| rng.normal());
+    for (g, w) in ql.qgemm(&x).data.iter().zip(&gemm_packed(&x, &pb).data) {
+        assert_eq!(g.to_bits(), w.to_bits());
+    }
+}
+
+// ---- 3. end-to-end logits parity: encoded vs fake-quant forward ----
+
+#[test]
+fn encoded_forward_logits_bitexact_with_fakequant_forward() {
+    let cfg = tiny_cfg();
+    let w = random_weights(&cfg, 0xF0);
+    let qcfg = LobcqConfig::new(8, 4, 64);
+    let fam = calibrate_universal(
+        &[w.get("l0.mlp.w1").unwrap(), w.get("l1.attn.wqkv").unwrap()],
+        &qcfg,
+        CalibOpts { max_iters: 10, ..Default::default() },
+        11,
+    );
+    let scheme = Scheme::lobcq(qcfg, fam);
+
+    let w_enc = scheme.encode_weights(&cfg, &w).expect("LO-BCQ supports encoded weights");
+    let w_fq = scheme.quantize_weights(&cfg, &w);
+
+    // The encoded weight set holds no dense f32 copy of any GEMM weight.
+    for l in 0..cfg.n_layers {
+        for name in [format!("l{l}.attn.wqkv"), format!("l{l}.attn.wo"), format!("l{l}.mlp.w1"), format!("l{l}.mlp.w2")] {
+            assert!(w_enc.get(&name).is_err(), "{name} still dense");
+            assert!(w_enc.encoded(&name).is_some(), "{name} not encoded");
+        }
+    }
+
+    let tokens: Vec<u32> = (0..2 * 8).map(|i| ((i * 7) % cfg.vocab) as u32).collect();
+    // W4A16 (no activation hook) and W4A4 (the scheme's own hook): both
+    // must be bit-exact between the encoded and fake-quant weight paths.
+    for with_act in [false, true] {
+        let pipe = scheme.act_pipeline(lobcq::quant::pipeline::QuantPool::serial());
+        let act = if with_act { pipe.as_ref() } else { None };
+        let le = forward(&cfg, &w_enc, &tokens, 2, act).unwrap();
+        let lf = forward(&cfg, &w_fq, &tokens, 2, act).unwrap();
+        assert_eq!(le.shape, lf.shape);
+        for (i, (a, b)) in le.data.iter().zip(&lf.data).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "act={with_act} logit {i}: encoded {a} vs fake-quant {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn decode_step_shape_parity_through_model() {
+    // batch = 1, t = 1: the pure decode shape end to end.
+    let cfg = tiny_cfg();
+    let w = random_weights(&cfg, 0xF1);
+    let qcfg = LobcqConfig::new(8, 2, 64);
+    let fam = calibrate_universal(
+        &[w.get("l0.mlp.w1").unwrap()],
+        &qcfg,
+        CalibOpts { max_iters: 8, ..Default::default() },
+        13,
+    );
+    let scheme = Scheme::lobcq(qcfg, fam);
+    let w_enc = scheme.encode_weights(&cfg, &w).unwrap();
+    let w_fq = scheme.quantize_weights(&cfg, &w);
+    let le = forward(&cfg, &w_enc, &[5], 1, None).unwrap();
+    let lf = forward(&cfg, &w_fq, &[5], 1, None).unwrap();
+    for (a, b) in le.data.iter().zip(&lf.data) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
