@@ -1,0 +1,242 @@
+//! §Perf decode bench — emits `BENCH_decode.json`.
+//!
+//! Measures decode tokens/sec at generation shapes for three engines
+//! over the same model and token stream (teacher-forced from the
+//! deterministic corpus):
+//!
+//! - `full_recompute`: the pre-ISSUE-3 serving behaviour — every decode
+//!   step re-runs the full fixed-shape forward over the whole history
+//!   (O(t²) attention per token, `batch·t·vocab` logits materialized);
+//! - `cached_f32`: prefill + `decode_step` against the paged KV16 cache
+//!   (O(t) attention per token, frontier-only logits);
+//! - `cached_bcq`: same, with the cache stored LO-BCQ-encoded (KV4,
+//!   ~4.9 bits/scalar at head_dim 64).
+//!
+//! Also reports peak cache bytes for both cache modes, a `batch4` lane
+//! throughput for the cached-encoded engine, and a KV4-vs-KV16
+//! perplexity ablation (teacher-forced NLL over a corpus stream — the
+//! EXPERIMENTS.md "KV cache" entry).
+//!
+//! Acceptance (ISSUE 3): cached decode beats full recompute at T ≥ 256,
+//! and the encoded cache stores K/V at ≤ 5 bits/scalar.
+
+#![allow(clippy::needless_range_loop)]
+
+use lobcq::data::corpus;
+use lobcq::kvcache::{KvLayout, KvQuantizer, KvStore, PagedKvCache};
+use lobcq::model::decode::{decode_step, prefill, DecodeScratch};
+use lobcq::model::forward::{forward, forward_logits_at};
+use lobcq::model::{ModelConfig, Weights};
+use lobcq::tensor::Tensor;
+use lobcq::util::json::Json;
+use lobcq::util::rng::Pcg32;
+use std::time::Instant;
+
+/// Serving-shaped toy model: head_dim 64 (the ≤5 bits/scalar shape).
+fn model() -> (ModelConfig, Weights) {
+    let cfg = ModelConfig {
+        name: "decode-bench".into(),
+        d: 128,
+        n_layers: 2,
+        n_heads: 2,
+        vocab: corpus::VOCAB as usize,
+        max_t: 384,
+    };
+    let mut rng = Pcg32::seeded(0xDECB);
+    let mut tensors = std::collections::BTreeMap::new();
+    for (name, shape) in cfg.param_shapes() {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with(".g") {
+            vec![1.0; n]
+        } else if name.ends_with(".b") {
+            vec![0.0; n]
+        } else {
+            (0..n).map(|_| rng.normal() * 0.05).collect()
+        };
+        tensors.insert(name, Tensor::new(&shape, data));
+    }
+    (cfg, Weights::new(tensors))
+}
+
+fn kv_quantizer(cfg: &ModelConfig, w: &Weights) -> KvQuantizer {
+    let hd = cfg.head_dim();
+    let sample = &w.get("l0.attn.wqkv").unwrap().data;
+    KvQuantizer::calibrated(hd, &sample[..hd * 128], 0xDECC).unwrap()
+}
+
+fn cache(cfg: &ModelConfig, w: &Weights, encoded: bool, slots: usize) -> PagedKvCache {
+    let store = if encoded { KvStore::Encoded(kv_quantizer(cfg, w)) } else { KvStore::F32 };
+    PagedKvCache::new(KvLayout::for_model(cfg, 16, slots), store).unwrap()
+}
+
+/// Generate `gen` tokens after a `t0`-token prompt by re-running the full
+/// forward each step (frontier logits only — even the baseline gets the
+/// PR's logits slimming, so the win measured is the attention recompute).
+fn run_full_recompute(cfg: &ModelConfig, w: &Weights, stream: &[u32], t0: usize, gen: usize) -> f64 {
+    let start = Instant::now();
+    for s in 0..gen {
+        let len = t0 + s;
+        let frontier = [len - 1];
+        let logits = forward_logits_at(cfg, w, &stream[..len], 1, None, &frontier).unwrap();
+        assert!(logits.data[0].is_finite());
+    }
+    gen as f64 / start.elapsed().as_secs_f64()
+}
+
+/// Prefill `t0` tokens, then decode `gen` teacher-forced tokens.
+/// Returns (tokens/sec over the decode phase, peak cache bytes).
+fn run_cached(cfg: &ModelConfig, w: &Weights, stream: &[u32], t0: usize, gen: usize, encoded: bool) -> (f64, usize) {
+    let mut kv = cache(cfg, w, encoded, 1);
+    let slot = kv.alloc_slot().unwrap();
+    let mut scratch = DecodeScratch::new();
+    prefill(cfg, w, &mut kv, slot, &stream[..t0], None).unwrap();
+    let start = Instant::now();
+    for s in 0..gen {
+        let logits = decode_step(cfg, w, &mut kv, slot, stream[t0 + s], None, &mut scratch).unwrap();
+        assert!(logits[0].is_finite());
+    }
+    let tps = gen as f64 / start.elapsed().as_secs_f64();
+    (tps, kv.peak_bytes())
+}
+
+/// 4 lanes decoding round-robin (the continuous-batching inner shape).
+fn run_cached_batch4(cfg: &ModelConfig, w: &Weights, stream: &[u32], t0: usize, gen: usize) -> f64 {
+    let mut kv = cache(cfg, w, true, 4);
+    let mut scratch = DecodeScratch::new();
+    let slots: Vec<_> = (0..4)
+        .map(|_| {
+            let s = kv.alloc_slot().unwrap();
+            prefill(cfg, w, &mut kv, s, &stream[..t0], None).unwrap();
+            s
+        })
+        .collect();
+    let start = Instant::now();
+    for s in 0..gen {
+        for &slot in &slots {
+            decode_step(cfg, w, &mut kv, slot, stream[t0 + s], None, &mut scratch).unwrap();
+        }
+    }
+    (4 * gen) as f64 / start.elapsed().as_secs_f64()
+}
+
+/// Teacher-forced perplexity of a corpus stream through prefill + decode
+/// (positions `t0-1 .. t0+gen-1` score the next stream token).
+fn decode_ppl(cfg: &ModelConfig, w: &Weights, stream: &[u32], t0: usize, gen: usize, encoded: bool) -> f64 {
+    let mut kv = cache(cfg, w, encoded, 1);
+    let slot = kv.alloc_slot().unwrap();
+    let mut scratch = DecodeScratch::new();
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    let first = prefill(cfg, w, &mut kv, slot, &stream[..t0], None).unwrap();
+    nll -= lobcq::eval::perplexity::log_softmax_at(&first, stream[t0] as usize);
+    count += 1;
+    for s in 0..gen {
+        let logits = decode_step(cfg, w, &mut kv, slot, stream[t0 + s], None, &mut scratch).unwrap();
+        nll -= lobcq::eval::perplexity::log_softmax_at(&logits, stream[t0 + s + 1] as usize);
+        count += 1;
+    }
+    (nll / count as f64).exp()
+}
+
+fn main() {
+    let (cfg, w) = model();
+    // Pre-warm the shared LM-head panel so no engine pays the one-time
+    // transpose+pack inside its timed region.
+    let _ = w.packed_transposed("embed");
+    let stream: Vec<u32> = corpus::generate(0xDECD, 384).into_iter().map(|t| t % cfg.vocab as u32).collect();
+
+    println!("# perf_decode — full-recompute vs cached (f32) vs cached (BCQ)\n");
+    let mut shapes_json = Vec::new();
+    let mut acceptance = Json::obj();
+    let gen = 24usize;
+    let mut peak_f32 = 0usize;
+    let mut peak_bcq = 0usize;
+    for &t0 in &[64usize, 256] {
+        // Sanity: cached f32 logits equal the full forward at this shape
+        // (cheap spot check so the bench can't silently measure a
+        // divergent path).
+        {
+            let mut kv = cache(&cfg, &w, false, 1);
+            let slot = kv.alloc_slot().unwrap();
+            let mut scr = DecodeScratch::new();
+            prefill(&cfg, &w, &mut kv, slot, &stream[..t0], None).unwrap();
+            let got = decode_step(&cfg, &w, &mut kv, slot, stream[t0], None, &mut scr).unwrap();
+            let full = forward(&cfg, &w, &stream[..t0 + 1], 1, None).unwrap();
+            for (c, &g) in got.iter().enumerate() {
+                let want = full.at(t0, c);
+                assert!((g - want).abs() <= 1e-4 * (1.0 + want.abs()), "parity drift at t0={t0} col {c}");
+            }
+        }
+
+        let full_tps = run_full_recompute(&cfg, &w, &stream, t0, gen);
+        let (f32_tps, f32_peak) = run_cached(&cfg, &w, &stream, t0, gen, false);
+        let (bcq_tps, bcq_peak) = run_cached(&cfg, &w, &stream, t0, gen, true);
+        peak_f32 = peak_f32.max(f32_peak);
+        peak_bcq = peak_bcq.max(bcq_peak);
+        println!(
+            "T0={t0:>4} gen={gen}:  full {full_tps:8.1} tok/s   cached-f32 {f32_tps:8.1}   cached-bcq {bcq_tps:8.1}   (cache {f32_peak} vs {bcq_peak} bytes)"
+        );
+        shapes_json.push(
+            Json::obj()
+                .with("prompt_tokens", Json::Num(t0 as f64))
+                .with("gen_tokens", Json::Num(gen as f64))
+                .with(
+                    "tokens_per_s",
+                    Json::obj()
+                        .with("full_recompute", Json::Num(full_tps))
+                        .with("cached_f32", Json::Num(f32_tps))
+                        .with("cached_bcq", Json::Num(bcq_tps)),
+                )
+                .with(
+                    "peak_cache_bytes",
+                    Json::obj().with("f32", Json::Num(f32_peak as f64)).with("bcq", Json::Num(bcq_peak as f64)),
+                ),
+        );
+        if t0 == 256 {
+            let speedup = f32_tps / full_tps;
+            acceptance.set("cached_vs_full_recompute_t256", Json::Num(speedup));
+            acceptance.set("cached_target", Json::Num(1.0));
+            println!("\ncached-f32 vs full-recompute @T0=256: {speedup:.2}x (target > 1x)");
+            if speedup <= 1.0 {
+                eprintln!("WARNING: cached decode not faster than full recompute on this host");
+            }
+        }
+    }
+
+    let batch4_tps = run_cached_batch4(&cfg, &w, &stream, 64, gen);
+    println!("batch4 cached-bcq @T0=64: {batch4_tps:.1} tok/s (4 lanes round-robin)");
+
+    // Encoded-cache bit budget (analytic and measured).
+    let kv_bits = kv_quantizer(&cfg, &w).bits_per_scalar();
+    acceptance.set("kv_bits_per_scalar", Json::Num(kv_bits));
+    acceptance.set("kv_bits_target", Json::Num(5.0));
+    println!("encoded KV bits/scalar: {kv_bits:.3} (target <= 5)");
+    if kv_bits > 5.0 {
+        eprintln!("WARNING: encoded KV cache exceeds the 5 bits/scalar budget");
+    }
+
+    // KV4-vs-KV16 perplexity ablation (teacher-forced corpus stream).
+    let ppl16 = decode_ppl(&cfg, &w, &stream, 32, 96, false);
+    let ppl4 = decode_ppl(&cfg, &w, &stream, 32, 96, true);
+    println!("decode ppl: KV16 {ppl16:.4}  KV4 {ppl4:.4}  (delta {:+.4})", ppl4 - ppl16);
+
+    let report = Json::obj()
+        .with("bench", Json::Str("perf_decode".into()))
+        .with("shapes", Json::Arr(shapes_json))
+        .with("batch4_cached_bcq_tokens_per_s", Json::Num(batch4_tps))
+        .with(
+            "kv_ablation",
+            Json::obj()
+                .with("kv16_ppl", Json::Num(ppl16))
+                .with("kv4_ppl", Json::Num(ppl4))
+                .with("delta", Json::Num(ppl4 - ppl16)),
+        )
+        .with(
+            "peak_cache_bytes",
+            Json::obj().with("f32", Json::Num(peak_f32 as f64)).with("bcq", Json::Num(peak_bcq as f64)),
+        )
+        .with("acceptance", acceptance);
+    let path = std::path::Path::new("BENCH_decode.json");
+    report.to_file(path).expect("write BENCH_decode.json");
+    println!("\nreport written to {}", path.display());
+}

@@ -108,8 +108,8 @@ fn main() {
         });
         let decode_then = b.run(&format!("decode_then_gemm/{tag}"), || {
             // Materialize f32 weights from the packed format on every
-            // call, then run the new blocked kernel (matmul_par now
-            // delegates to it) — the strongest decode-first baseline.
+            // call, then run the blocked kernel — the strongest
+            // decode-first baseline.
             let w = Tensor::new(&[k, n], {
                 let flat = decode(black_box(&enc), &fam);
                 let mut out = vec![0.0f32; k * n];
@@ -120,7 +120,7 @@ fn main() {
                 }
                 out
             });
-            black_box(lobcq::model::matmul_par(black_box(&a), &w));
+            black_box(lobcq::kernels::gemm(black_box(&a), &w));
         });
 
         let gf = |r: &lobcq::util::timer::BenchResult| gflops(m, n, k, r.median_s());

@@ -74,6 +74,28 @@ impl Batcher {
         self.len() == 0
     }
 
+    /// Blocking single-request pop (continuous-batching admission: the
+    /// worker blocks here only when it has no active lanes). Returns
+    /// `None` when the queue is closed and drained.
+    pub fn pop(&self) -> Option<Request> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = st.queue.pop_front() {
+                return Some(r);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking single-request pop (mid-batch backfill into a freed
+    /// lane: never stall live lanes waiting for new arrivals).
+    pub fn try_pop(&self) -> Option<Request> {
+        self.state.lock().unwrap().queue.pop_front()
+    }
+
     /// Take the next batch (consumer side). Blocks until at least one
     /// request is available, then waits up to `max_wait` for the batch to
     /// fill (returning early if it does). Returns `None` when closed and
@@ -179,6 +201,25 @@ mod tests {
         b.push(req(9));
         let got = h.join().unwrap().unwrap();
         assert_eq!(got[0].id, 9);
+    }
+
+    #[test]
+    fn pop_and_try_pop_are_fifo_and_respect_close() {
+        let b = Batcher::new(policy(4, 0));
+        assert!(b.try_pop().is_none(), "empty try_pop returned a request");
+        b.push(req(1));
+        b.push(req(2));
+        assert_eq!(b.try_pop().unwrap().id, 1);
+        assert_eq!(b.pop().unwrap().id, 2);
+        b.close();
+        assert!(b.pop().is_none(), "pop after close+drain should be None");
+        // Blocking pop wakes on push from another thread.
+        let b = Arc::new(Batcher::new(policy(4, 0)));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        b.push(req(9));
+        assert_eq!(h.join().unwrap().unwrap().id, 9);
     }
 
     #[test]

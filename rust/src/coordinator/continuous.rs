@@ -1,0 +1,256 @@
+//! Continuous-batching decode loop (vLLM-style iteration-level
+//! scheduling) over a [`DecodeEngine`].
+//!
+//! Unlike [`run_batch`](super::scheduler::run_batch) — which holds every
+//! lane until the *longest* request's `max_new` — this loop interleaves
+//! requests at token granularity: each iteration steps every active lane
+//! by one token, finished requests release their KV-cache slot
+//! immediately, and the freed lane is **backfilled** from the admission
+//! queue mid-batch (`Batcher::try_pop`, non-blocking, so live lanes are
+//! never stalled waiting for arrivals). The worker blocks only when it
+//! has nothing to decode at all.
+//!
+//! Engine errors are per-lane: a failed prefill or decode fails that one
+//! request and frees its lane; the rest of the batch keeps decoding
+//! (the fixed-batch path can only fail the whole batch).
+
+use super::batcher::Batcher;
+use super::request::{Request, Response};
+use super::scheduler::{sample_from_logits, Sampling};
+use super::session::DecodeEngine;
+use std::time::Instant;
+
+/// One in-flight request bound to an engine lane.
+struct Lane {
+    req: Request,
+    lane: usize,
+    /// Number of tokens this request may generate (its `max_new`, capped
+    /// by the engine's per-lane token capacity).
+    budget: usize,
+    generated: Vec<u32>,
+    picked_at: Instant,
+    first_token_at: Instant,
+    last_step_at: Instant,
+    decode_us: f64,
+    max_batch_seen: usize,
+}
+
+/// Drive the engine until the batcher is closed and drained and every
+/// active lane has finished. `deliver` receives each request's terminal
+/// event — `Ok(Response)` or the per-request error.
+pub fn run_continuous<E: DecodeEngine + ?Sized>(
+    engine: &mut E,
+    batcher: &Batcher,
+    sampling: Sampling,
+    mut deliver: impl FnMut(u64, anyhow::Result<Response>),
+) {
+    let mut active: Vec<Lane> = Vec::new();
+    loop {
+        // ---- admission: fill free lanes. Block only when idle. ----
+        while active.len() < engine.max_concurrency() {
+            let next = if active.is_empty() { batcher.pop() } else { batcher.try_pop() };
+            let Some(req) = next else {
+                if active.is_empty() {
+                    // pop() returned None => closed and drained => done.
+                    return;
+                }
+                break; // nothing queued right now; keep decoding
+            };
+            admit(engine, req, sampling, &mut active, &mut deliver);
+        }
+        if active.is_empty() {
+            // Admission failed (e.g. prefill error on the only request);
+            // loop back to blocking pop.
+            continue;
+        }
+        let cur = active.len();
+        for lane in active.iter_mut() {
+            lane.max_batch_seen = lane.max_batch_seen.max(cur);
+        }
+
+        // ---- one decode step per active lane ----
+        let mut finished: Vec<usize> = Vec::new();
+        for (idx, lane) in active.iter_mut().enumerate() {
+            if lane.generated.len() >= lane.budget {
+                finished.push(idx);
+                continue;
+            }
+            let last = *lane.generated.last().unwrap();
+            let t0 = Instant::now();
+            match engine.decode(lane.lane, last) {
+                Ok(logits) => {
+                    lane.decode_us += t0.elapsed().as_secs_f64() * 1e6;
+                    lane.last_step_at = Instant::now();
+                    let step = lane.req.prompt.len() + lane.generated.len();
+                    lane.generated.push(sample_from_logits(&logits, sampling, lane.req.id, step));
+                    if lane.generated.len() >= lane.budget {
+                        finished.push(idx);
+                    }
+                }
+                Err(e) => {
+                    deliver(lane.req.id, Err(anyhow::anyhow!("decode failed: {e}")));
+                    lane.generated.clear(); // mark dead: the retire loop below
+                    finished.push(idx); // releases the lane, delivers nothing
+                }
+            }
+        }
+
+        // ---- retire finished lanes (slots free => next admission pass
+        // backfills them) ----
+        for idx in finished.into_iter().rev() {
+            let lane = active.swap_remove(idx);
+            engine.release(lane.lane);
+            if lane.generated.is_empty() {
+                continue; // errored above; already delivered
+            }
+            let done = Instant::now();
+            let n = lane.generated.len();
+            let itl_us = if n > 1 {
+                (lane.last_step_at - lane.first_token_at).as_secs_f64() * 1e6 / (n - 1) as f64
+            } else {
+                0.0
+            };
+            deliver(
+                lane.req.id,
+                Ok(Response {
+                    id: lane.req.id,
+                    tokens: lane.generated,
+                    queue_us: (lane.picked_at - lane.req.submitted_at).as_secs_f64() * 1e6,
+                    execute_us: lane.decode_us,
+                    ttft_us: (lane.first_token_at - lane.req.submitted_at).as_secs_f64() * 1e6,
+                    itl_us,
+                    total_us: (done - lane.req.submitted_at).as_secs_f64() * 1e6,
+                    batch_size: lane.max_batch_seen,
+                }),
+            );
+        }
+    }
+}
+
+fn admit<E: DecodeEngine + ?Sized>(
+    engine: &mut E,
+    req: Request,
+    sampling: Sampling,
+    active: &mut Vec<Lane>,
+    deliver: &mut impl FnMut(u64, anyhow::Result<Response>),
+) {
+    let picked_at = Instant::now();
+    // Generating n tokens appends cache positions up to
+    // prompt + n - 1; cap the budget at the engine's lane capacity.
+    let cap = engine.max_tokens().saturating_sub(req.prompt.len()) + 1;
+    let budget = req.max_new.min(cap).max(1);
+    let t0 = Instant::now();
+    match engine.prefill(&req.prompt) {
+        Ok((lane, logits)) => {
+            let prefill_us = t0.elapsed().as_secs_f64() * 1e6;
+            let first_token_at = Instant::now();
+            let first = sample_from_logits(&logits, sampling, req.id, req.prompt.len());
+            active.push(Lane {
+                req,
+                lane,
+                budget,
+                generated: vec![first],
+                picked_at,
+                first_token_at,
+                last_step_at: first_token_at,
+                decode_us: prefill_us,
+                max_batch_seen: 0,
+            });
+        }
+        Err(e) => deliver(req.id, Err(anyhow::anyhow!("prefill failed: {e}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::session::MockDecodeEngine;
+    use std::time::{Duration, Instant};
+
+    fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+        Request { id, prompt, max_new, submitted_at: Instant::now() }
+    }
+
+    fn drive(engine: &mut MockDecodeEngine, reqs: Vec<Request>) -> Vec<(u64, anyhow::Result<Response>)> {
+        let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
+        for r in reqs {
+            assert!(b.push(r));
+        }
+        b.close();
+        let mut out = Vec::new();
+        run_continuous(engine, &b, Sampling::Greedy, |id, r| out.push((id, r)));
+        out
+    }
+
+    #[test]
+    fn follows_successor_rule_and_answers_everything() {
+        let mut e = MockDecodeEngine::new(4, 32);
+        let out = drive(
+            &mut e,
+            vec![req(1, vec![5], 4), req(2, vec![9, 10], 3), req(3, vec![1], 1)],
+        );
+        assert_eq!(out.len(), 3);
+        let get = |id: u64| {
+            out.iter().find(|(i, _)| *i == id).unwrap().1.as_ref().unwrap().clone()
+        };
+        // Mock predicts tok+1: prefill samples the first token.
+        assert_eq!(get(1).tokens, vec![6, 7, 8, 9]);
+        assert_eq!(get(2).tokens, vec![11, 12, 13]);
+        assert_eq!(get(3).tokens, vec![2]);
+        assert_eq!(get(3).itl_us, 0.0, "single-token response has an ITL");
+        assert!(get(1).ttft_us > 0.0);
+        assert_eq!(e.releases, 3);
+        // 3 prefills + decodes: req1 needs 3 steps, req2 needs 2, req3 0.
+        assert_eq!(e.prefills, 3);
+        assert_eq!(e.decodes, 5);
+    }
+
+    #[test]
+    fn backfills_freed_lanes_mid_batch() {
+        // 2 lanes, 5 requests: short requests finish and free lanes that
+        // later requests reuse while the long one is still decoding.
+        let mut e = MockDecodeEngine::new(2, 64);
+        let reqs = vec![
+            req(1, vec![1], 8), // long
+            req(2, vec![2], 1), // finishes at admission
+            req(3, vec![3], 2),
+            req(4, vec![4], 2),
+            req(5, vec![5], 1),
+        ];
+        let out = drive(&mut e, reqs);
+        assert_eq!(out.len(), 5);
+        assert!(out.iter().all(|(_, r)| r.is_ok()));
+        assert_eq!(e.max_live_seen, 2, "never used both lanes");
+        assert_eq!(e.releases, 5, "lanes leaked");
+        // The long request saw company: batch_size reflects sharing.
+        let long = out.iter().find(|(i, _)| *i == 1).unwrap().1.as_ref().unwrap();
+        assert_eq!(long.tokens.len(), 8);
+        assert!(long.batch_size >= 2, "no backfill observed");
+        // FIFO admission: request 5 must not be answered before 2.
+        let pos = |id: u64| out.iter().position(|(i, _)| *i == id).unwrap();
+        assert!(pos(2) < pos(5));
+    }
+
+    #[test]
+    fn poisoned_request_fails_alone() {
+        let mut e = MockDecodeEngine::new(2, 32);
+        // Request 1 decodes from token 5 -> 6 -> poisoned at decode(6).
+        e.poison_token = Some(6);
+        let out = drive(&mut e, vec![req(1, vec![5], 4), req(2, vec![20], 3)]);
+        let r1 = &out.iter().find(|(i, _)| *i == 1).unwrap().1;
+        let r2 = &out.iter().find(|(i, _)| *i == 2).unwrap().1;
+        assert!(r1.is_err(), "poisoned request succeeded");
+        assert_eq!(r2.as_ref().unwrap().tokens, vec![21, 22, 23], "healthy lane dragged down");
+        assert_eq!(e.releases, 2, "errored lane leaked");
+    }
+
+    #[test]
+    fn budget_is_capped_by_engine_capacity() {
+        let mut e = MockDecodeEngine::new(1, 32);
+        e.max_tokens = 4;
+        // prompt 3 tokens + budget cap => 4 - 3 + 1 = 2 tokens max.
+        let out = drive(&mut e, vec![req(1, vec![1, 2, 3], 10)]);
+        assert_eq!(out[0].1.as_ref().unwrap().tokens.len(), 2);
+    }
+}

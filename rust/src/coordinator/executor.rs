@@ -17,6 +17,25 @@ pub trait StepExecutor: Send {
     fn t(&self) -> usize;
     fn vocab(&self) -> usize;
     fn step(&self, tokens: &[u32]) -> anyhow::Result<Logits>;
+
+    /// Last-position-only step: logits for each lane's frontier position
+    /// (`frontier[i]` for lane `i`, `frontier.len() ≤ batch`), returned
+    /// as a `(frontier.len(), 1, vocab)` container. The decode loop
+    /// samples only the frontier, so the full `batch·t·vocab` logits of
+    /// [`step`](Self::step) are waste there. Default: full step + row
+    /// gather (mocks, PJRT); the CPU executor overrides with a forward
+    /// that skips the non-frontier LM-head rows entirely.
+    fn step_last(&self, tokens: &[u32], frontier: &[usize]) -> anyhow::Result<Logits> {
+        anyhow::ensure!(frontier.len() <= self.batch(), "more frontier lanes than batch");
+        let full = self.step(tokens)?;
+        let v = self.vocab();
+        let mut data = Vec::with_capacity(frontier.len() * v);
+        for (i, &p) in frontier.iter().enumerate() {
+            anyhow::ensure!(p < full.t, "frontier {p} >= t {}", full.t);
+            data.extend_from_slice(&full.data[(i * full.t + p) * v..(i * full.t + p + 1) * v]);
+        }
+        Ok(Logits { data, batch: frontier.len(), t: 1, vocab: v })
+    }
 }
 
 /// PJRT-backed executor bound to one artifact + registered weight/book
@@ -85,10 +104,7 @@ impl CpuExecutor {
         t: usize,
     ) -> anyhow::Result<CpuExecutor> {
         anyhow::ensure!(batch >= 1 && t >= 1 && t <= cfg.max_t, "bad executor shape ({batch}, {t})");
-        let (qw, encoded) = match scheme.encode_weights(&cfg, weights) {
-            Some(qw) => (qw, true),
-            None => (scheme.quantize_weights_with(&cfg, weights, pool), false),
-        };
+        let (qw, encoded) = scheme.serving_weights(&cfg, weights, pool);
         let act = scheme.act_pipeline(pool);
         Ok(CpuExecutor { cfg, weights: qw, act, batch, t, encoded })
     }
@@ -100,11 +116,7 @@ impl CpuExecutor {
 
     /// How GEMM weights are held (serving logs).
     pub fn weight_mode(&self) -> &'static str {
-        if self.encoded {
-            "encoded-domain (qgemm on LO-BCQ codes)"
-        } else {
-            "dense (fake-quantized f32)"
-        }
+        crate::eval::scheme::weight_mode_name(self.encoded)
     }
 }
 
@@ -131,6 +143,24 @@ impl StepExecutor for CpuExecutor {
             self.act.as_ref(),
         )?;
         Ok(Logits { data: logits.data, batch: self.batch, t: self.t, vocab: self.cfg.vocab })
+    }
+
+    /// Logits-slimming path: the transformer stack runs full-shape, but
+    /// the tied-LM-head GEMM — the largest single product at decode
+    /// shapes (`d × vocab`) — runs over one row per lane instead of
+    /// `batch·t`.
+    fn step_last(&self, tokens: &[u32], frontier: &[usize]) -> anyhow::Result<Logits> {
+        anyhow::ensure!(tokens.len() == self.batch * self.t, "bad token count");
+        anyhow::ensure!(frontier.len() <= self.batch, "more frontier lanes than batch");
+        let logits = crate::model::forward::forward_logits_at(
+            &self.cfg,
+            &self.weights,
+            tokens,
+            self.batch,
+            self.act.as_ref(),
+            frontier,
+        )?;
+        Ok(Logits { data: logits.data, batch: frontier.len(), t: 1, vocab: self.cfg.vocab })
     }
 }
 
@@ -266,6 +296,38 @@ mod tests {
         // Baselines without a code format fall back to dense weights.
         let dense = CpuExecutor::new(cfg, &w, &crate::eval::scheme::mx4(), QuantPool::serial(), 1, 8).unwrap();
         assert_eq!(dense.weight_mode(), "dense (fake-quantized f32)");
+    }
+
+    #[test]
+    fn step_last_matches_full_step_rows_bitwise() {
+        use crate::eval::scheme::mx4;
+        use crate::model::forward::tests_support::{random_weights, tiny_cfg};
+        use crate::quant::pipeline::QuantPool;
+
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 35);
+        let t = 8;
+        // Quantized executor: the slim path must agree even with the
+        // activation hook live (same whole-tensor prepare, same rows).
+        let exec = CpuExecutor::new(cfg.clone(), &w, &mx4(), QuantPool::serial(), 2, t).unwrap();
+        let tokens: Vec<u32> = (0..2 * t).map(|i| (i * 3 % cfg.vocab) as u32).collect();
+        let full = exec.step(&tokens).unwrap();
+        let frontier = [2usize, 7];
+        let slim = exec.step_last(&tokens, &frontier).unwrap();
+        assert_eq!((slim.batch, slim.t, slim.vocab), (2, 1, cfg.vocab));
+        for (i, &p) in frontier.iter().enumerate() {
+            for c in 0..cfg.vocab {
+                let a = slim.data[i * cfg.vocab + c];
+                let b = full.data[(i * t + p) * cfg.vocab + c];
+                assert_eq!(a.to_bits(), b.to_bits(), "lane {i} pos {p} col {c}");
+            }
+        }
+        // Default-impl path (mock) gathers the same rows.
+        let m = MockExecutor::new(2, t, cfg.vocab);
+        let slim = m.step_last(&tokens, &frontier).unwrap();
+        let full = m.step(&tokens).unwrap();
+        assert_eq!(slim.data[0..cfg.vocab], full.data[2 * cfg.vocab..3 * cfg.vocab]);
+        assert!(m.step_last(&tokens, &[99, 0]).is_err(), "frontier past t accepted");
     }
 
     #[test]

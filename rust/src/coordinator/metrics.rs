@@ -1,7 +1,13 @@
 //! Serving metrics: latency histograms per stage, token throughput, and
 //! batch-occupancy statistics — the quantities the §Perf serving bench
-//! reports (p50/p95/p99 latency, tokens/s, batch fill).
+//! reports (p50/p95/p99 latency, tokens/s, batch fill), plus the two
+//! decode-engine stage latencies: **time-to-first-token** (submit →
+//! first sampled token, i.e. queue + prefill) and **inter-token
+//! latency** (mean decode-step spacing) — recorded separately so the
+//! decode bench and `serve-cpu` logs can report prefill and decode
+//! behaviour independently.
 
+use super::request::Response;
 use crate::util::stats::LatencyHistogram;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -10,6 +16,8 @@ use std::time::Instant;
 struct Inner {
     queue: LatencyHistogram,
     execute: LatencyHistogram,
+    ttft: LatencyHistogram,
+    itl: LatencyHistogram,
     total: LatencyHistogram,
     batch_sizes: Vec<usize>,
     tokens_out: u64,
@@ -34,6 +42,8 @@ impl ServerMetrics {
             inner: Mutex::new(Inner {
                 queue: LatencyHistogram::new(),
                 execute: LatencyHistogram::new(),
+                ttft: LatencyHistogram::new(),
+                itl: LatencyHistogram::new(),
                 total: LatencyHistogram::new(),
                 batch_sizes: Vec::new(),
                 tokens_out: 0,
@@ -43,14 +53,19 @@ impl ServerMetrics {
         }
     }
 
-    pub fn record_response(&self, queue_us: f64, execute_us: f64, total_us: f64, tokens: usize, batch: usize) {
+    pub fn record_response(&self, resp: &Response) {
         let mut g = self.inner.lock().unwrap();
         g.started.get_or_insert_with(Instant::now);
-        g.queue.record_us(queue_us);
-        g.execute.record_us(execute_us);
-        g.total.record_us(total_us);
-        g.batch_sizes.push(batch);
-        g.tokens_out += tokens as u64;
+        g.queue.record_us(resp.queue_us);
+        g.execute.record_us(resp.execute_us);
+        g.ttft.record_us(resp.ttft_us);
+        if resp.tokens.len() > 1 {
+            // ITL is undefined for single-token responses.
+            g.itl.record_us(resp.itl_us);
+        }
+        g.total.record_us(resp.total_us);
+        g.batch_sizes.push(resp.batch_size);
+        g.tokens_out += resp.tokens.len() as u64;
         g.requests_done += 1;
     }
 
@@ -70,6 +85,10 @@ impl ServerMetrics {
             queue_p99_us: g.queue.percentile_us(99.0),
             exec_p50_us: g.execute.percentile_us(50.0),
             exec_p99_us: g.execute.percentile_us(99.0),
+            ttft_p50_us: g.ttft.percentile_us(50.0),
+            ttft_p99_us: g.ttft.percentile_us(99.0),
+            itl_p50_us: g.itl.percentile_us(50.0),
+            itl_p99_us: g.itl.percentile_us(99.0),
             total_p50_us: g.total.percentile_us(50.0),
             total_p95_us: g.total.percentile_us(95.0),
             total_p99_us: g.total.percentile_us(99.0),
@@ -87,6 +106,10 @@ pub struct MetricsSnapshot {
     pub queue_p99_us: f64,
     pub exec_p50_us: f64,
     pub exec_p99_us: f64,
+    pub ttft_p50_us: f64,
+    pub ttft_p99_us: f64,
+    pub itl_p50_us: f64,
+    pub itl_p99_us: f64,
     pub total_p50_us: f64,
     pub total_p95_us: f64,
     pub total_p99_us: f64,
@@ -97,7 +120,8 @@ impl MetricsSnapshot {
     pub fn report(&self) -> String {
         format!(
             "requests={} tokens={} throughput={:.1} tok/s | total p50={:.0}µs p95={:.0}µs p99={:.0}µs | \
-             queue p50={:.0}µs p99={:.0}µs | exec p50={:.0}µs p99={:.0}µs | mean batch={:.2}",
+             queue p50={:.0}µs p99={:.0}µs | exec p50={:.0}µs p99={:.0}µs | \
+             ttft p50={:.0}µs p99={:.0}µs | itl p50={:.0}µs p99={:.0}µs | mean batch={:.2}",
             self.requests,
             self.tokens,
             self.tokens_per_s,
@@ -108,6 +132,10 @@ impl MetricsSnapshot {
             self.queue_p99_us,
             self.exec_p50_us,
             self.exec_p99_us,
+            self.ttft_p50_us,
+            self.ttft_p99_us,
+            self.itl_p50_us,
+            self.itl_p99_us,
             self.mean_batch
         )
     }
@@ -117,16 +145,42 @@ impl MetricsSnapshot {
 mod tests {
     use super::*;
 
+    fn resp(tokens: usize, queue: f64, exec: f64, ttft: f64, itl: f64, total: f64, batch: usize) -> Response {
+        Response {
+            id: 1,
+            tokens: vec![0; tokens],
+            queue_us: queue,
+            execute_us: exec,
+            ttft_us: ttft,
+            itl_us: itl,
+            total_us: total,
+            batch_size: batch,
+        }
+    }
+
     #[test]
     fn records_and_snapshots() {
         let m = ServerMetrics::new();
-        m.record_response(100.0, 2000.0, 2200.0, 8, 4);
-        m.record_response(200.0, 2100.0, 2400.0, 8, 4);
+        m.record_response(&resp(8, 100.0, 2000.0, 700.0, 180.0, 2200.0, 4));
+        m.record_response(&resp(8, 200.0, 2100.0, 800.0, 190.0, 2400.0, 4));
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.tokens, 16);
         assert!(s.total_p50_us >= 2000.0);
+        assert!(s.ttft_p50_us >= 700.0 && s.ttft_p99_us >= s.ttft_p50_us);
+        assert!(s.itl_p50_us >= 180.0);
         assert_eq!(s.mean_batch, 4.0);
-        assert!(s.report().contains("requests=2"));
+        let r = s.report();
+        assert!(r.contains("requests=2") && r.contains("ttft") && r.contains("itl"), "{r}");
+    }
+
+    #[test]
+    fn single_token_responses_skip_itl() {
+        let m = ServerMetrics::new();
+        m.record_response(&resp(1, 10.0, 50.0, 60.0, 0.0, 80.0, 1));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.itl_p50_us, 0.0, "single-token response polluted the ITL histogram");
+        assert!(s.ttft_p50_us > 0.0);
     }
 }

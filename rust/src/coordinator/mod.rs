@@ -5,13 +5,16 @@
 //! "activation quantization on the fly" deployment).
 
 pub mod batcher;
+pub mod continuous;
 pub mod executor;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
 pub mod server;
+pub mod session;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use continuous::run_continuous;
 #[cfg(feature = "pjrt")]
 pub use executor::PjrtExecutor;
 pub use executor::{CpuExecutor, MockExecutor, StepExecutor};
@@ -19,3 +22,4 @@ pub use metrics::{MetricsSnapshot, ServerMetrics};
 pub use request::{AdmitError, Limits, Request, Response};
 pub use scheduler::{run_batch, Sampling};
 pub use server::{Server, Ticket};
+pub use session::{DecodeEngine, DecodeSession, KvCacheOpts, MockDecodeEngine};

@@ -21,6 +21,11 @@ pub struct Response {
     pub queue_us: f64,
     /// Time spent in model execution (sum over decode steps).
     pub execute_us: f64,
+    /// Time from submit to the first generated token (queue + prefill).
+    pub ttft_us: f64,
+    /// Mean inter-token latency across the decode phase (0 when a single
+    /// token was generated).
+    pub itl_us: f64,
     /// End-to-end latency.
     pub total_us: f64,
     /// Batch size this request was served in.

@@ -4,9 +4,12 @@
 //!
 //! Decode uses a sliding context window of the executor's `t`: the model
 //! artifacts are full-sequence forwards, so each step re-scores the
-//! window and we read the logits at each sequence's frontier position.
-//! (A KV-cache decode artifact is a documented extension — DESIGN.md; for
-//! the tiny models here the full-window step is already sub-10ms.)
+//! window and reads only each sequence's frontier logits
+//! (`StepExecutor::step_last` — the full `batch·t·vocab` tensor is never
+//! materialized). This is the fixed-shape PJRT-compatible path; the CPU
+//! serving default is the incremental KV-cached engine in
+//! `coordinator::continuous` / `coordinator::session`, which makes
+//! per-token work O(current length) instead of a full-window re-score.
 
 use super::executor::StepExecutor;
 use super::request::{Request, Response};
@@ -37,6 +40,8 @@ pub fn run_batch<E: StepExecutor + ?Sized>(
     let mut seqs: Vec<Vec<u32>> = batch.iter().map(|r| r.prompt.clone()).collect();
     let max_new = batch.iter().map(|r| r.max_new).max().unwrap();
     let mut execute_us = 0.0f64;
+    // End time of each decode step (TTFT = step 0, ITL = later spacing).
+    let mut step_ends: Vec<Instant> = Vec::with_capacity(max_new);
 
     for _step in 0..max_new {
         // Build the fixed-shape token tensor: right-aligned... we LEFT-pack
@@ -49,14 +54,17 @@ pub fn run_batch<E: StepExecutor + ?Sized>(
             frontier[i] = ctx.len() - 1;
         }
         let t0 = Instant::now();
-        let logits = exec.step(&tokens)?;
+        // Frontier-only logits: only the sampled positions materialize
+        // (the executor skips the other batch·t LM-head rows).
+        let logits = exec.step_last(&tokens, &frontier)?;
         execute_us += t0.elapsed().as_secs_f64() * 1e6;
+        step_ends.push(Instant::now());
 
         for (i, req) in batch.iter().enumerate() {
             if seqs[i].len() - req.prompt.len() >= req.max_new {
                 continue; // this sequence is done; others may still decode
             }
-            let next = pick_token(&logits, i, frontier[i], sampling, req.id, seqs[i].len());
+            let next = pick_token(&logits, i, 0, sampling, req.id, seqs[i].len());
             seqs[i].push(next);
         }
     }
@@ -67,11 +75,26 @@ pub fn run_batch<E: StepExecutor + ?Sized>(
         .enumerate()
         .map(|(i, req)| {
             let queue_us = (picked_at - req.submitted_at).as_secs_f64() * 1e6;
+            let n = req.max_new;
+            // First sampled token lands at the end of step 0. (step_ends
+            // is empty only for a degenerate all-max_new=0 batch, which
+            // the router rejects but this public fn must not panic on.)
+            let ttft_us = step_ends
+                .first()
+                .map(|e| (*e - req.submitted_at).as_secs_f64() * 1e6)
+                .unwrap_or(0.0);
+            let itl_us = if n > 1 {
+                (step_ends[n - 1] - step_ends[0]).as_secs_f64() * 1e6 / (n - 1) as f64
+            } else {
+                0.0
+            };
             Response {
                 id: req.id,
                 tokens: seqs[i][req.prompt.len()..].to_vec(),
                 queue_us,
                 execute_us,
+                ttft_us,
+                itl_us,
                 total_us: (done - req.submitted_at).as_secs_f64() * 1e6,
                 batch_size: batch.len(),
             }
@@ -89,6 +112,14 @@ fn pick_token(
 ) -> u32 {
     let v = logits.vocab;
     let slice = &logits.data[(row * logits.t + pos) * v..(row * logits.t + pos + 1) * v];
+    sample_from_logits(slice, sampling, req_id, step)
+}
+
+/// Sample one token from a vocab-length logits slice — shared by the
+/// fixed-batch scheduler above and the continuous decode loop
+/// (`coordinator::continuous`). Deterministic per (request, step).
+pub(crate) fn sample_from_logits(slice: &[f32], sampling: Sampling, req_id: u64, step: usize) -> u32 {
+    let v = slice.len();
     match sampling {
         Sampling::Greedy => argmax(slice) as u32,
         Sampling::TopK(k) => {

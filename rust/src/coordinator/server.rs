@@ -4,10 +4,12 @@
 //! workers make sense with multiple executors/variants).
 
 use super::batcher::{BatchPolicy, Batcher};
+use super::continuous::run_continuous;
 use super::executor::StepExecutor;
 use super::metrics::ServerMetrics;
 use super::request::{validate, AdmitError, Limits, Request, Response};
 use super::scheduler::{run_batch, Sampling};
+use super::session::DecodeEngine;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -63,13 +65,7 @@ impl Server {
                     match result {
                         Ok(responses) => {
                             for resp in responses {
-                                m.record_response(
-                                    resp.queue_us,
-                                    resp.execute_us,
-                                    resp.total_us,
-                                    resp.tokens.len(),
-                                    resp.batch_size,
-                                );
+                                m.record_response(&resp);
                                 if let Some(tx) = guard.remove(&resp.id) {
                                     let _ = tx.send(Ok(resp));
                                 }
@@ -87,6 +83,40 @@ impl Server {
                 }
             })
             .expect("spawn worker");
+
+        Server { batcher, replies, next_id: AtomicU64::new(1), limits, metrics, workers: vec![worker] }
+    }
+
+    /// Start a server over a stateful [`DecodeEngine`] with the
+    /// continuous-batching scheduler: requests are admitted into engine
+    /// lanes as they free up (token-granular backfill) instead of being
+    /// held in fixed batches. No `BatchPolicy` — concurrency is the
+    /// engine's lane count and admission is immediate.
+    pub fn start_continuous<E: DecodeEngine + 'static>(
+        mut engine: E,
+        limits: Limits,
+        sampling: Sampling,
+    ) -> Server {
+        let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
+        let replies: ReplyMap = Arc::new(Mutex::new(HashMap::new()));
+        let metrics = Arc::new(ServerMetrics::new());
+
+        let b = batcher.clone();
+        let r = replies.clone();
+        let m = metrics.clone();
+        let worker = std::thread::Builder::new()
+            .name("lobcq-decode-worker".into())
+            .spawn(move || {
+                run_continuous(&mut engine, &b, sampling, |id, result| {
+                    if let Ok(resp) = &result {
+                        m.record_response(resp);
+                    }
+                    if let Some(tx) = r.lock().unwrap().remove(&id) {
+                        let _ = tx.send(result);
+                    }
+                });
+            })
+            .expect("spawn decode worker");
 
         Server { batcher, replies, next_id: AtomicU64::new(1), limits, metrics, workers: vec![worker] }
     }
@@ -165,6 +195,36 @@ mod tests {
         let snap = s.metrics.snapshot();
         assert_eq!(snap.requests, 24);
         assert!(snap.mean_batch > 1.0, "batching never kicked in: {}", snap.mean_batch);
+        match Arc::try_unwrap(s) {
+            Ok(s) => s.shutdown(),
+            Err(_) => panic!("server still referenced"),
+        }
+    }
+
+    #[test]
+    fn continuous_server_end_to_end() {
+        use crate::coordinator::session::MockDecodeEngine;
+        let s = Arc::new(Server::start_continuous(
+            MockDecodeEngine::new(2, 64),
+            Limits { max_prompt: 12, max_new: 8, vocab: 64 },
+            Sampling::Greedy,
+        ));
+        let mut handles = Vec::new();
+        for i in 0..9u32 {
+            let s2 = s.clone();
+            handles.push(std::thread::spawn(move || {
+                s2.submit(vec![(i % 60) as u32], 3).unwrap().wait().unwrap()
+            }));
+        }
+        for h in handles {
+            let resp = h.join().unwrap();
+            assert_eq!(resp.tokens.len(), 3);
+            // Successor rule: first token = prompt+1.
+            assert_eq!(resp.tokens[1], (resp.tokens[0] + 1) % 64);
+            assert!(resp.ttft_us > 0.0 && resp.ttft_us <= resp.total_us);
+        }
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.requests, 9);
         match Arc::try_unwrap(s) {
             Ok(s) => s.shutdown(),
             Err(_) => panic!("server still referenced"),

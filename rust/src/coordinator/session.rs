@@ -1,0 +1,290 @@
+//! Stateful decode engines: the lane-oriented counterpart of
+//! [`StepExecutor`](super::executor::StepExecutor). A [`DecodeEngine`]
+//! owns per-lane sequence state (for the CPU engine, a slot in the paged
+//! KV cache), so generating a token is **O(current length)** — prefill
+//! once, then one `decode` call per token — instead of the fixed-shape
+//! executor's full-window re-score. Lanes are released the moment a
+//! request finishes, which is what the continuous batcher exploits to
+//! backfill admitted requests mid-batch.
+
+use crate::eval::Scheme;
+use crate::kvcache::{KvLayout, KvQuantizer, KvStore, PagedKvCache, SlotId};
+use crate::model::decode::{decode_step, prefill, DecodeScratch};
+use crate::model::{ModelConfig, Weights};
+use crate::quant::pipeline::{QuantPipeline, QuantPool};
+
+/// A stateful incremental decoder with `max_concurrency` independent
+/// lanes. `prefill` claims a lane and returns the prompt's last-position
+/// logits; `decode` advances one lane by one token and returns the new
+/// position's logits; `release` frees the lane for the next request.
+pub trait DecodeEngine: Send {
+    /// Concurrent lanes (the continuous scheduler's admission bound).
+    fn max_concurrency(&self) -> usize;
+    fn vocab(&self) -> usize;
+    /// Per-lane token capacity (prompt + generated).
+    fn max_tokens(&self) -> usize;
+    /// Claim a lane, run the prompt, return `(lane, last-position logits)`.
+    fn prefill(&mut self, prompt: &[u32]) -> anyhow::Result<(usize, Vec<f32>)>;
+    /// Feed `token` to `lane`; returns the next position's logits.
+    fn decode(&mut self, lane: usize, token: u32) -> anyhow::Result<Vec<f32>>;
+    /// Free a lane (idempotent).
+    fn release(&mut self, lane: usize);
+}
+
+/// KV-cache configuration for [`DecodeSession`].
+#[derive(Debug, Clone)]
+pub struct KvCacheOpts {
+    /// Tokens per page.
+    pub page_tokens: usize,
+    /// Store cached K/V LO-BCQ-encoded (~4.9 bits/scalar at head_dim 64)
+    /// instead of f32.
+    pub encoded: bool,
+}
+
+impl Default for KvCacheOpts {
+    fn default() -> Self {
+        KvCacheOpts { page_tokens: 16, encoded: false }
+    }
+}
+
+/// CPU decode engine: quantized weights (encoded-domain when the scheme
+/// supports it), on-the-fly activation quantization, and a paged —
+/// optionally BCQ-encoded — KV cache shared by all lanes.
+pub struct DecodeSession {
+    cfg: ModelConfig,
+    weights: Weights,
+    act: Option<QuantPipeline>,
+    cache: PagedKvCache,
+    scratch: DecodeScratch,
+    encoded_weights: bool,
+}
+
+impl DecodeSession {
+    /// Build from a model + scheme, mirroring `CpuExecutor::new`'s weight
+    /// handling, plus the KV cache. In encoded-KV mode the cache's
+    /// codebooks are calibrated once from rows of the first QKV
+    /// projection (the proxy-statistics protocol of §4.1 — K/V entries
+    /// are projections of the same distribution).
+    pub fn new(
+        cfg: ModelConfig,
+        weights: &Weights,
+        scheme: &Scheme,
+        pool: QuantPool,
+        max_concurrency: usize,
+        kv: KvCacheOpts,
+    ) -> anyhow::Result<DecodeSession> {
+        anyhow::ensure!(max_concurrency >= 1, "need at least one lane");
+        let store = if kv.encoded {
+            let hd = cfg.head_dim();
+            let wqkv = weights.get("l0.attn.wqkv")?;
+            let n = (hd * 256).min(wqkv.data.len() / hd * hd);
+            anyhow::ensure!(n >= hd, "wqkv too small to calibrate a KV quantizer");
+            KvStore::Encoded(KvQuantizer::calibrated(hd, &wqkv.data[..n], 0xCA11)?)
+        } else {
+            KvStore::F32
+        };
+        let layout = KvLayout::for_model(&cfg, kv.page_tokens, max_concurrency);
+        let cache = PagedKvCache::new(layout, store)?;
+        let (qw, encoded_weights) = scheme.serving_weights(&cfg, weights, pool);
+        let act = scheme.act_pipeline(pool);
+        Ok(DecodeSession { cfg, weights: qw, act, cache, scratch: DecodeScratch::new(), encoded_weights })
+    }
+
+    pub fn act_scheme_name(&self) -> String {
+        self.act.as_ref().map(|p| p.name()).unwrap_or_else(|| "BF16".into())
+    }
+
+    pub fn weight_mode(&self) -> &'static str {
+        crate::eval::scheme::weight_mode_name(self.encoded_weights)
+    }
+
+    /// "KV16 (f32 pages)" / "KV4 (BCQ-encoded pages, …)".
+    pub fn kv_mode(&self) -> String {
+        self.cache.store_name()
+    }
+
+    pub fn cache(&self) -> &PagedKvCache {
+        &self.cache
+    }
+}
+
+impl DecodeEngine for DecodeSession {
+    fn max_concurrency(&self) -> usize {
+        self.cache.layout().max_slots
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn max_tokens(&self) -> usize {
+        self.cache.layout().max_tokens
+    }
+
+    fn prefill(&mut self, prompt: &[u32]) -> anyhow::Result<(usize, Vec<f32>)> {
+        let slot: SlotId = self.cache.alloc_slot()?;
+        match prefill(&self.cfg, &self.weights, &mut self.cache, slot, prompt, self.act.as_ref()) {
+            Ok(logits) => Ok((slot, logits)),
+            Err(e) => {
+                // A failed prefill must not leak the lane.
+                self.cache.free_slot(slot);
+                Err(e)
+            }
+        }
+    }
+
+    fn decode(&mut self, lane: usize, token: u32) -> anyhow::Result<Vec<f32>> {
+        decode_step(&self.cfg, &self.weights, &mut self.cache, lane, token, self.act.as_ref(), &mut self.scratch)
+    }
+
+    fn release(&mut self, lane: usize) {
+        self.cache.free_slot(lane);
+    }
+}
+
+/// Deterministic mock engine for continuous-scheduler tests: logits
+/// prefer `(last_token + 1) % vocab`, lanes are bounded, and every
+/// lifecycle event is recorded so tests can assert backfill behaviour.
+pub struct MockDecodeEngine {
+    pub lanes: usize,
+    pub vocab: usize,
+    pub max_tokens: usize,
+    live: Vec<bool>,
+    /// Running count of live lanes, and the high-water mark.
+    pub max_live_seen: usize,
+    pub prefills: usize,
+    pub decodes: usize,
+    pub releases: usize,
+    /// Token the engine should fail decode on (error-path tests).
+    pub poison_token: Option<u32>,
+}
+
+impl MockDecodeEngine {
+    pub fn new(lanes: usize, vocab: usize) -> MockDecodeEngine {
+        MockDecodeEngine {
+            lanes,
+            vocab,
+            max_tokens: usize::MAX,
+            live: vec![false; lanes],
+            max_live_seen: 0,
+            prefills: 0,
+            decodes: 0,
+            releases: 0,
+            poison_token: None,
+        }
+    }
+
+    fn successor_logits(&self, token: u32) -> Vec<f32> {
+        let mut l = vec![0.0f32; self.vocab];
+        l[(token as usize + 1) % self.vocab] = 10.0;
+        l
+    }
+}
+
+impl DecodeEngine for MockDecodeEngine {
+    fn max_concurrency(&self) -> usize {
+        self.lanes
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn max_tokens(&self) -> usize {
+        self.max_tokens
+    }
+
+    fn prefill(&mut self, prompt: &[u32]) -> anyhow::Result<(usize, Vec<f32>)> {
+        let lane = self
+            .live
+            .iter()
+            .position(|l| !l)
+            .ok_or_else(|| anyhow::anyhow!("no free mock lanes"))?;
+        self.live[lane] = true;
+        self.prefills += 1;
+        let live_now = self.live.iter().filter(|&&l| l).count();
+        self.max_live_seen = self.max_live_seen.max(live_now);
+        Ok((lane, self.successor_logits(*prompt.last().unwrap())))
+    }
+
+    fn decode(&mut self, lane: usize, token: u32) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(self.live[lane], "decode on a dead mock lane");
+        if self.poison_token == Some(token) {
+            anyhow::bail!("poisoned token {token}");
+        }
+        self.decodes += 1;
+        Ok(self.successor_logits(token))
+    }
+
+    fn release(&mut self, lane: usize) {
+        if self.live[lane] {
+            self.live[lane] = false;
+            self.releases += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::tests_support::{random_weights, tiny_cfg};
+
+    #[test]
+    fn session_generates_and_recycles_lanes() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 51);
+        let scheme = crate::eval::scheme::mx4();
+        let mut s =
+            DecodeSession::new(cfg.clone(), &w, &scheme, QuantPool::serial(), 2, KvCacheOpts::default())
+                .unwrap();
+        assert_eq!(s.vocab(), cfg.vocab);
+        assert_eq!(s.max_concurrency(), 2);
+        let (a, la) = s.prefill(&[1, 2, 3]).unwrap();
+        let (b, _) = s.prefill(&[4]).unwrap();
+        assert_ne!(a, b);
+        assert!(s.prefill(&[5]).is_err(), "over-admitted");
+        assert_eq!(la.len(), cfg.vocab);
+        let step = s.decode(a, 7).unwrap();
+        assert_eq!(step.len(), cfg.vocab);
+        assert!(step.iter().all(|x| x.is_finite()));
+        s.release(a);
+        s.release(a); // idempotent
+        let (c, _) = s.prefill(&[6, 7]).unwrap();
+        assert_eq!(c, a, "freed lane not reused");
+        s.release(b);
+        s.release(c);
+        assert_eq!(s.cache().live_slot_count(), 0);
+    }
+
+    #[test]
+    fn session_encoded_kv_mode_reports_and_serves() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 52);
+        let mut s = DecodeSession::new(
+            cfg,
+            &w,
+            &Scheme::Bf16,
+            QuantPool::serial(),
+            1,
+            KvCacheOpts { page_tokens: 4, encoded: true },
+        )
+        .unwrap();
+        assert!(s.kv_mode().starts_with("KV4"), "{}", s.kv_mode());
+        let (lane, _) = s.prefill(&[1, 2, 3, 4, 5]).unwrap();
+        let out = s.decode(lane, 9).unwrap();
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert!(s.cache().bits_per_scalar() <= 8.0);
+    }
+
+    #[test]
+    fn failed_prefill_releases_its_lane() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 53);
+        let mut s =
+            DecodeSession::new(cfg, &w, &Scheme::Bf16, QuantPool::serial(), 1, KvCacheOpts::default())
+                .unwrap();
+        assert!(s.prefill(&[9999]).is_err(), "out-of-vocab prompt accepted");
+        assert_eq!(s.cache().live_slot_count(), 0, "failed prefill leaked its lane");
+        assert!(s.prefill(&[1]).is_ok());
+    }
+}

@@ -172,6 +172,18 @@ impl Scheme {
         Some(out)
     }
 
+    /// Compile this scheme's GEMM weights for serving: the encoded
+    /// domain when the scheme has a packed code format, fake-quantized
+    /// dense tensors otherwise. Returns the weight set and whether the
+    /// encoded path was taken — the one decision both serving engines
+    /// (`CpuExecutor` and `DecodeSession`) share.
+    pub fn serving_weights(&self, cfg: &ModelConfig, w: &Weights, pool: QuantPool) -> (Weights, bool) {
+        match self.encode_weights(cfg, w) {
+            Some(qw) => (qw, true),
+            None => (self.quantize_weights_with(cfg, w, pool), false),
+        }
+    }
+
     /// Activation pipeline for the CPU forward / CPU executor (None for
     /// BF16 — the eval baseline leaves activations in f32/BF16, matching
     /// the artifacts). The returned pipeline owns a scratch pool, so a
@@ -188,6 +200,16 @@ impl Scheme {
 /// GEMM weights are the 2-D non-embedding parameters.
 pub fn is_gemm_weight(name: &str) -> bool {
     name.contains(".attn.w") || name.contains(".mlp.w")
+}
+
+/// Serving-log label for [`Scheme::serving_weights`]' second return —
+/// one definition so the batch and continuous engines can't drift.
+pub fn weight_mode_name(encoded: bool) -> &'static str {
+    if encoded {
+        "encoded-domain (qgemm on LO-BCQ codes)"
+    } else {
+        "dense (fake-quantized f32)"
+    }
 }
 
 /// Paper-default baseline instances.

@@ -344,6 +344,21 @@ mod tests {
     }
 
     #[test]
+    fn gemm_matches_scalar_matmul_reference() {
+        // Ported from the old `model::forward::matmul_par` test when that
+        // wrapper was removed: the one-shot kernel entry point against
+        // the scalar `Tensor::matmul` reference at its historical shape.
+        let mut rng = Pcg32::seeded(5);
+        let a = rand_tensor(&mut rng, &[37, 64]);
+        let b = rand_tensor(&mut rng, &[64, 53]);
+        let serial = a.matmul(&b);
+        let par = gemm(&a, &b);
+        for (x, y) in serial.data.iter().zip(&par.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
     fn from_rows_is_pack_of_transpose() {
         let mut rng = Pcg32::seeded(0x6E78);
         let bt = rand_tensor(&mut rng, &[13, 29]); // B = btᵀ is 29 x 13

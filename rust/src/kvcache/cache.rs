@@ -1,0 +1,386 @@
+//! The paged KV cache: per-sequence slots mapping (layer, head, token
+//! range) to pool pages.
+//!
+//! Lifecycle: a decode session [`alloc_slot`](PagedKvCache::alloc_slot)s
+//! one slot per admitted request, [`append`](PagedKvCache::append)s one
+//! K/V row per layer per token (prefill appends the whole prompt, each
+//! decode step appends one token), attention
+//! [`gather`](PagedKvCache::gather)s a head's contiguous `[len,
+//! head_dim]` history, and [`free_slot`](PagedKvCache::free_slot) returns
+//! every page to the pool's free list the moment the request finishes —
+//! which is what lets the continuous batcher backfill a new request into
+//! the freed slot mid-batch.
+//!
+//! Storage is either exact f32 ("KV16"-style reference) or LO-BCQ
+//! encoded ("KV4", ~4.9 bits/scalar at head_dim 64) — see
+//! [`KvQuantizer`](super::quant::KvQuantizer) for the format.
+
+use super::pool::{PageId, PagePool, Plane};
+use super::quant::KvQuantizer;
+
+/// Index of a live sequence slot.
+pub type SlotId = usize;
+
+/// Cache geometry, derived from the model config + serving shape.
+#[derive(Debug, Clone)]
+pub struct KvLayout {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    /// Tokens per page.
+    pub page_tokens: usize,
+    /// Per-sequence token capacity (the model's position-table limit).
+    pub max_tokens: usize,
+    /// Concurrent sequences (lanes) the cache serves.
+    pub max_slots: usize,
+}
+
+impl KvLayout {
+    pub fn for_model(cfg: &crate::model::ModelConfig, page_tokens: usize, max_slots: usize) -> KvLayout {
+        KvLayout {
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads,
+            head_dim: cfg.head_dim(),
+            page_tokens,
+            max_tokens: cfg.max_t,
+            max_slots,
+        }
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_layers >= 1 && self.n_heads >= 1 && self.head_dim >= 1, "degenerate layout");
+        anyhow::ensure!(self.page_tokens >= 1, "page_tokens must be >= 1");
+        anyhow::ensure!(self.max_tokens >= 1, "max_tokens must be >= 1");
+        anyhow::ensure!(self.max_slots >= 1, "max_slots must be >= 1");
+        Ok(())
+    }
+}
+
+/// Storage mode for cached K/V.
+pub enum KvStore {
+    /// Exact f32 (32 bits/scalar) — the parity reference.
+    F32,
+    /// LO-BCQ encoded pages.
+    Encoded(KvQuantizer),
+}
+
+#[derive(Debug, Default)]
+struct SlotState {
+    live: bool,
+    /// Tokens appended per layer (all equal between whole tokens; they
+    /// drift by one transiently while a token's layers are processed).
+    lens: Vec<usize>,
+    /// Page table per layer: `pages[layer][page_idx * n_heads + head]`.
+    pages: Vec<Vec<PageId>>,
+}
+
+/// Paged, optionally BCQ-encoded KV cache (see module docs).
+pub struct PagedKvCache {
+    layout: KvLayout,
+    quant: Option<KvQuantizer>,
+    pool: PagePool,
+    slots: Vec<SlotState>,
+    free_slots: Vec<SlotId>,
+    peak_bytes: usize,
+}
+
+impl PagedKvCache {
+    pub fn new(layout: KvLayout, store: KvStore) -> anyhow::Result<PagedKvCache> {
+        layout.validate()?;
+        let quant = match store {
+            KvStore::F32 => None,
+            KvStore::Encoded(q) => {
+                anyhow::ensure!(
+                    q.head_dim() == layout.head_dim,
+                    "KV quantizer head_dim {} != layout head_dim {}",
+                    q.head_dim(),
+                    layout.head_dim
+                );
+                Some(q)
+            }
+        };
+        let pool = PagePool::new(layout.page_tokens, layout.head_dim, quant.is_some());
+        let slots = (0..layout.max_slots).map(|_| SlotState::default()).collect();
+        let free_slots = (0..layout.max_slots).rev().collect();
+        Ok(PagedKvCache { layout, quant, pool, slots, free_slots, peak_bytes: 0 })
+    }
+
+    pub fn layout(&self) -> &KvLayout {
+        &self.layout
+    }
+
+    /// "KV16 (f32 pages)" / "KV4 (BCQ-encoded pages, x.xx bits/scalar)".
+    pub fn store_name(&self) -> String {
+        match &self.quant {
+            None => "KV16 (f32 pages)".into(),
+            Some(q) => format!("KV4 (BCQ-encoded pages, {:.2} bits/scalar)", q.bits_per_scalar()),
+        }
+    }
+
+    /// Stored bits per cached scalar (32 for f32 pages).
+    pub fn bits_per_scalar(&self) -> f64 {
+        self.quant.as_ref().map(|q| q.bits_per_scalar()).unwrap_or(32.0)
+    }
+
+    pub fn free_slot_count(&self) -> usize {
+        self.free_slots.len()
+    }
+
+    pub fn live_slot_count(&self) -> usize {
+        self.layout.max_slots - self.free_slots.len()
+    }
+
+    /// Claim a slot for a new sequence. Errors when every lane is live —
+    /// the scheduler checks [`free_slot_count`](Self::free_slot_count)
+    /// before admitting, so this firing means a bookkeeping bug.
+    pub fn alloc_slot(&mut self) -> anyhow::Result<SlotId> {
+        let id = self.free_slots.pop().ok_or_else(|| {
+            anyhow::anyhow!("no free KV slots ({} live)", self.layout.max_slots)
+        })?;
+        let st = &mut self.slots[id];
+        st.live = true;
+        st.lens = vec![0; self.layout.n_layers];
+        st.pages = vec![Vec::new(); self.layout.n_layers];
+        Ok(id)
+    }
+
+    /// Release a slot, returning every page it owns to the free list.
+    /// Tolerates double-free (no-op on a dead slot).
+    pub fn free_slot(&mut self, slot: SlotId) {
+        if !self.slots[slot].live {
+            return;
+        }
+        // Cached bytes only ever shrink here, so sampling the high-water
+        // mark once per release (plus on query) captures the true peak
+        // without walking the pages on the per-token append path.
+        self.peak_bytes = self.peak_bytes.max(self.state_bytes());
+        let st = &mut self.slots[slot];
+        st.live = false;
+        for layer_pages in st.pages.iter() {
+            for &p in layer_pages {
+                self.pool.free(p);
+            }
+        }
+        st.pages.clear();
+        st.lens.clear();
+        self.free_slots.push(slot);
+    }
+
+    /// Tokens cached for `slot` (valid between whole tokens; during a
+    /// token's layer sweep the per-layer counters transiently differ).
+    pub fn seq_len(&self, slot: SlotId) -> usize {
+        let st = &self.slots[slot];
+        assert!(st.live, "seq_len of a dead slot");
+        st.lens.last().copied().unwrap_or(0)
+    }
+
+    /// Append one token's K and V rows (`d = n_heads * head_dim` floats
+    /// each) for `layer`. Returns the layer's new token count — the
+    /// attention span for this layer's gather.
+    pub fn append(&mut self, slot: SlotId, layer: usize, k_row: &[f32], v_row: &[f32]) -> anyhow::Result<usize> {
+        let (nh, hd, pt) = (self.layout.n_heads, self.layout.head_dim, self.layout.page_tokens);
+        anyhow::ensure!(layer < self.layout.n_layers, "layer {layer} out of range");
+        anyhow::ensure!(k_row.len() == nh * hd && v_row.len() == nh * hd, "K/V row length != n_heads * head_dim");
+        {
+            let st = &self.slots[slot];
+            anyhow::ensure!(st.live, "append to dead slot {slot}");
+            anyhow::ensure!(
+                st.lens[layer] < self.layout.max_tokens,
+                "slot {slot} full ({} tokens)",
+                self.layout.max_tokens
+            );
+        }
+        let pos = self.slots[slot].lens[layer];
+        if pos % pt == 0 {
+            // Page boundary: claim one fresh page per head.
+            for _ in 0..nh {
+                let id = self.pool.alloc();
+                self.slots[slot].pages[layer].push(id);
+            }
+        }
+        let page_base = (pos / pt) * nh;
+        for head in 0..nh {
+            let id = self.slots[slot].pages[layer][page_base + head];
+            let o = head * hd;
+            self.pool.get_mut(id).append(pt, hd, self.quant.as_ref(), &k_row[o..o + hd], &v_row[o..o + hd]);
+        }
+        self.slots[slot].lens[layer] = pos + 1;
+        Ok(pos + 1)
+    }
+
+    /// Decode the full cached history of one (slot, layer, head, plane)
+    /// into `out` as a contiguous `[len, head_dim]` matrix (resized to
+    /// fit). Returns `len`. f32 pages copy; encoded pages decode through
+    /// the 16-entry codebook LUTs.
+    pub fn gather(&self, slot: SlotId, layer: usize, head: usize, plane: Plane, out: &mut Vec<f32>) -> usize {
+        let (nh, hd, pt) = (self.layout.n_heads, self.layout.head_dim, self.layout.page_tokens);
+        let st = &self.slots[slot];
+        assert!(st.live, "gather from dead slot {slot}");
+        let len = st.lens[layer];
+        out.resize(len * hd, 0.0);
+        let mut done = 0usize;
+        let mut page_idx = 0usize;
+        while done < len {
+            let id = st.pages[layer][page_idx * nh + head];
+            let page = self.pool.get(id);
+            let take = page.filled.min(len - done);
+            debug_assert_eq!(take, page.filled.min(pt));
+            page.gather(hd, self.quant.as_ref(), plane, &mut out[done * hd..(done + take) * hd]);
+            done += take;
+            page_idx += 1;
+        }
+        len
+    }
+
+    /// Page ids owned by a slot (aliasing introspection for tests and
+    /// debugging; order is layer-major then page-major then head).
+    pub fn page_ids(&self, slot: SlotId) -> Vec<PageId> {
+        let st = &self.slots[slot];
+        assert!(st.live, "page_ids of a dead slot");
+        st.pages.iter().flat_map(|ps| ps.iter().copied()).collect()
+    }
+
+    /// Actual bytes of cached state across all live pages.
+    pub fn state_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.live)
+            .flat_map(|s| s.pages.iter())
+            .flat_map(|ps| ps.iter())
+            .map(|&id| self.pool.get(id).state_bytes())
+            .sum()
+    }
+
+    /// High-water mark of [`state_bytes`](Self::state_bytes). Bytes grow
+    /// monotonically between slot releases, so sampling at `free_slot`
+    /// and on query is exact.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes.max(self.state_bytes())
+    }
+
+    /// Pages ever allocated by the underlying pool.
+    pub fn capacity_pages(&self) -> usize {
+        self.pool.capacity_pages()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{llm_like_sample, Pcg32};
+
+    fn layout(pt: usize) -> KvLayout {
+        KvLayout { n_layers: 2, n_heads: 2, head_dim: 16, page_tokens: pt, max_tokens: 16, max_slots: 3 }
+    }
+
+    fn rows(rng: &mut Pcg32, d: usize) -> (Vec<f32>, Vec<f32>) {
+        (llm_like_sample(rng, d, 0.05, 4.0), llm_like_sample(rng, d, 0.05, 4.0))
+    }
+
+    #[test]
+    fn f32_round_trip_across_page_boundaries() {
+        let lay = layout(4);
+        let (nh, hd) = (lay.n_heads, lay.head_dim);
+        let mut cache = PagedKvCache::new(lay, KvStore::F32).unwrap();
+        let slot = cache.alloc_slot().unwrap();
+        let mut rng = Pcg32::seeded(0x9A6E);
+        let mut want_k: Vec<Vec<f32>> = vec![Vec::new(); 2]; // per layer, flat [t, d]
+        for _tok in 0..10 {
+            for layer in 0..2 {
+                let (k, v) = rows(&mut rng, nh * hd);
+                cache.append(slot, layer, &k, &v).unwrap();
+                want_k[layer].extend_from_slice(&k);
+            }
+        }
+        assert_eq!(cache.seq_len(slot), 10);
+        let mut out = Vec::new();
+        for layer in 0..2 {
+            for head in 0..nh {
+                let n = cache.gather(slot, layer, head, Plane::K, &mut out);
+                assert_eq!(n, 10);
+                for t in 0..n {
+                    let want = &want_k[layer][t * nh * hd + head * hd..t * nh * hd + (head + 1) * hd];
+                    assert_eq!(&out[t * hd..(t + 1) * hd], want, "layer {layer} head {head} tok {t}");
+                }
+            }
+        }
+        // 10 tokens at 4 tokens/page = 3 pages per (layer, head).
+        assert_eq!(cache.page_ids(slot).len(), 3 * 2 * nh);
+    }
+
+    #[test]
+    fn encoded_gather_matches_per_vector_fake_quantize() {
+        use crate::quant::lobcq::fake_quantize;
+        let lay = layout(4);
+        let (nh, hd) = (lay.n_heads, lay.head_dim);
+        let mut rng = Pcg32::seeded(0x9A6F);
+        let sample = llm_like_sample(&mut rng, hd * 32, 0.05, 4.0);
+        let q = KvQuantizer::calibrated(hd, &sample, 11).unwrap();
+        let reference = q.clone();
+        let mut cache = PagedKvCache::new(lay, KvStore::Encoded(q)).unwrap();
+        let slot = cache.alloc_slot().unwrap();
+        let mut appended: Vec<Vec<f32>> = Vec::new();
+        for _tok in 0..6 {
+            let (k, v) = rows(&mut rng, nh * hd);
+            cache.append(slot, 0, &k, &v).unwrap();
+            cache.append(slot, 1, &k, &v).unwrap();
+            appended.push(k);
+        }
+        let mut out = Vec::new();
+        let n = cache.gather(slot, 0, 1, Plane::K, &mut out);
+        assert_eq!(n, 6);
+        for (t, krow) in appended.iter().enumerate() {
+            let vec = &krow[hd..2 * hd]; // head 1
+            let want = fake_quantize(vec, reference.cfg(), reference.family());
+            for (g, w) in out[t * hd..(t + 1) * hd].iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "tok {t}");
+            }
+        }
+        assert!(cache.state_bytes() > 0);
+        assert!(cache.state_bytes() < 6 * 2 * 2 * hd * 2 * 4, "encoded cache not smaller than f32");
+    }
+
+    #[test]
+    fn slot_free_recycles_pages_without_aliasing_live_slots() {
+        let lay = layout(2);
+        let d = lay.n_heads * lay.head_dim;
+        let mut cache = PagedKvCache::new(lay, KvStore::F32).unwrap();
+        let a = cache.alloc_slot().unwrap();
+        let b = cache.alloc_slot().unwrap();
+        let mut rng = Pcg32::seeded(0x9A70);
+        let (ka, va) = rows(&mut rng, d);
+        let (kb, vb) = rows(&mut rng, d);
+        for layer in 0..2 {
+            cache.append(a, layer, &ka, &va).unwrap();
+            cache.append(b, layer, &kb, &vb).unwrap();
+        }
+        let a_pages = cache.page_ids(a);
+        let b_pages = cache.page_ids(b);
+        assert!(a_pages.iter().all(|p| !b_pages.contains(p)), "live slots share a page");
+        cache.free_slot(a);
+        cache.free_slot(a); // double free is a no-op
+        let c = cache.alloc_slot().unwrap();
+        for layer in 0..2 {
+            cache.append(c, layer, &ka, &va).unwrap();
+        }
+        // c reuses a's freed pages, but b's contents must be untouched.
+        assert!(cache.page_ids(c).iter().all(|p| a_pages.contains(p)), "free list not reused");
+        let mut out = Vec::new();
+        cache.gather(b, 0, 0, Plane::K, &mut out);
+        assert_eq!(&out[..], &kb[..16], "live slot b corrupted by reuse (head 0 = first head_dim of the row)");
+    }
+
+    #[test]
+    fn capacity_limits_enforced() {
+        let lay = KvLayout { n_layers: 1, n_heads: 1, head_dim: 4, page_tokens: 2, max_tokens: 3, max_slots: 1 };
+        let mut cache = PagedKvCache::new(lay, KvStore::F32).unwrap();
+        let s = cache.alloc_slot().unwrap();
+        assert!(cache.alloc_slot().is_err(), "over-allocated slots");
+        for _ in 0..3 {
+            cache.append(s, 0, &[1.0; 4], &[2.0; 4]).unwrap();
+        }
+        assert!(cache.append(s, 0, &[1.0; 4], &[2.0; 4]).is_err(), "exceeded max_tokens");
+        cache.free_slot(s);
+        assert!(cache.alloc_slot().is_ok(), "slot not recycled");
+    }
+}

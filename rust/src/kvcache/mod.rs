@@ -1,0 +1,18 @@
+//! Paged, BCQ-quantized KV cache (DESIGN.md §KV cache).
+//!
+//! The paper's block-cluster-codebook machinery extended from GEMM
+//! operands to the attention state: cached K/V head vectors are stored
+//! **encoded** (~4.9 bits/scalar at head_dim 64) in fixed-size pages with
+//! free-list reuse, decoded per page through the same 16-entry codebook
+//! LUTs `kernels::qgemm` uses. The incremental decode path
+//! (`model::decode::{prefill, decode_step}`) appends to and attends
+//! against this cache, so per-token attention work is O(current length)
+//! instead of the full-forward O(t²) re-score.
+
+pub mod cache;
+pub mod pool;
+pub mod quant;
+
+pub use cache::{KvLayout, KvStore, PagedKvCache, SlotId};
+pub use pool::{Page, PageId, PagePool, Plane};
+pub use quant::{kv_cfg, KvQuantizer};

@@ -1,0 +1,230 @@
+//! Fixed-size KV pages and the free-list page pool.
+//!
+//! One [`Page`] holds the K and V vectors of **one (layer, head)** for up
+//! to `page_tokens` consecutive sequence positions — so a page's K plane
+//! is exactly the contiguous `[tokens, head_dim]` matrix attention
+//! consumes, with no per-head gather. Pages are append-only while owned
+//! by a slot; freeing returns them to the pool's free list where the
+//! next allocation reuses the storage (allocation-free steady state once
+//! the pool has grown to the working set).
+
+use super::quant::KvQuantizer;
+use crate::quant::encode::BitWriter;
+
+/// Index into the pool's page table.
+pub type PageId = u32;
+
+/// Which cached plane to address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Plane {
+    K,
+    V,
+}
+
+/// Bit-packed encoded storage for one plane of one page: codeword and
+/// selector streams (same `BitWriter` the Fig. 5 wire format uses) plus
+/// one f32 inverse effective scale per stored vector.
+#[derive(Debug, Default)]
+pub struct EncPlane {
+    pub codes: BitWriter,
+    pub sels: BitWriter,
+    pub invs: Vec<f32>,
+}
+
+impl EncPlane {
+    fn clear(&mut self) {
+        self.codes.clear();
+        self.sels.clear();
+        self.invs.clear();
+    }
+
+    fn bytes(&self) -> usize {
+        self.codes.as_bytes().len() + self.sels.as_bytes().len() + self.invs.len() * 4
+    }
+}
+
+/// Page payload: raw f32 vectors or LO-BCQ-encoded planes.
+#[derive(Debug)]
+pub enum PageStore {
+    /// `page_tokens * head_dim` floats per plane, filled prefix valid.
+    F32 { k: Vec<f32>, v: Vec<f32> },
+    /// Encoded planes (see [`EncPlane`]).
+    Encoded { k: EncPlane, v: EncPlane },
+}
+
+/// One (layer, head) page: storage plus the number of tokens written.
+#[derive(Debug)]
+pub struct Page {
+    pub store: PageStore,
+    /// Tokens written so far (≤ `page_tokens`).
+    pub filled: usize,
+}
+
+impl Page {
+    /// Actual bytes of cached state held by this page (encoded pages
+    /// grow with fill; f32 pages are fully pre-sized).
+    pub fn state_bytes(&self) -> usize {
+        match &self.store {
+            PageStore::F32 { k, v } => (k.len() + v.len()) * 4,
+            PageStore::Encoded { k, v } => k.bytes() + v.bytes(),
+        }
+    }
+
+    /// Append one token's K and V head vectors. Panics if full (the
+    /// cache allocates a fresh page at every `page_tokens` boundary).
+    pub fn append(&mut self, page_tokens: usize, head_dim: usize, quant: Option<&KvQuantizer>, kv: &[f32], vv: &[f32]) {
+        assert!(self.filled < page_tokens, "append to a full page");
+        assert_eq!(kv.len(), head_dim);
+        assert_eq!(vv.len(), head_dim);
+        match (&mut self.store, quant) {
+            (PageStore::F32 { k, v }, None) => {
+                let o = self.filled * head_dim;
+                k[o..o + head_dim].copy_from_slice(kv);
+                v[o..o + head_dim].copy_from_slice(vv);
+            }
+            (PageStore::Encoded { k, v }, Some(q)) => {
+                q.encode_vector(kv, &mut k.codes, &mut k.sels, &mut k.invs);
+                q.encode_vector(vv, &mut v.codes, &mut v.sels, &mut v.invs);
+            }
+            _ => panic!("page store / quantizer mode mismatch"),
+        }
+        self.filled += 1;
+    }
+
+    /// Decode this page's filled prefix of `plane` into `out`
+    /// (`filled * head_dim` floats).
+    pub fn gather(&self, head_dim: usize, quant: Option<&KvQuantizer>, plane: Plane, out: &mut [f32]) {
+        assert_eq!(out.len(), self.filled * head_dim);
+        match (&self.store, quant) {
+            (PageStore::F32 { k, v }, None) => {
+                let src = if plane == Plane::K { k } else { v };
+                out.copy_from_slice(&src[..self.filled * head_dim]);
+            }
+            (PageStore::Encoded { k, v }, Some(q)) => {
+                let p = if plane == Plane::K { k } else { v };
+                q.decode_vectors(self.filled, p.codes.as_bytes(), p.sels.as_bytes(), &p.invs, out);
+            }
+            _ => panic!("page store / quantizer mode mismatch"),
+        }
+    }
+}
+
+/// Page allocator with free-list reuse. Grows on demand; never shrinks
+/// (freed pages keep their storage for the next request).
+#[derive(Debug)]
+pub struct PagePool {
+    pages: Vec<Page>,
+    free: Vec<PageId>,
+    page_tokens: usize,
+    head_dim: usize,
+    encoded: bool,
+}
+
+impl PagePool {
+    pub fn new(page_tokens: usize, head_dim: usize, encoded: bool) -> PagePool {
+        assert!(page_tokens >= 1 && head_dim >= 1);
+        PagePool { pages: Vec::new(), free: Vec::new(), page_tokens, head_dim, encoded }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Allocate a page, reusing a freed one when available.
+    pub fn alloc(&mut self) -> PageId {
+        if let Some(id) = self.free.pop() {
+            debug_assert_eq!(self.pages[id as usize].filled, 0, "freed page not cleared");
+            return id;
+        }
+        let store = if self.encoded {
+            PageStore::Encoded { k: EncPlane::default(), v: EncPlane::default() }
+        } else {
+            let n = self.page_tokens * self.head_dim;
+            PageStore::F32 { k: vec![0.0; n], v: vec![0.0; n] }
+        };
+        self.pages.push(Page { store, filled: 0 });
+        (self.pages.len() - 1) as PageId
+    }
+
+    /// Return a page to the free list (contents cleared, storage kept).
+    pub fn free(&mut self, id: PageId) {
+        let page = &mut self.pages[id as usize];
+        page.filled = 0;
+        match &mut page.store {
+            PageStore::F32 { .. } => {} // overwritten by the next owner's appends
+            PageStore::Encoded { k, v } => {
+                k.clear();
+                v.clear();
+            }
+        }
+        debug_assert!(!self.free.contains(&id), "double free of page {id}");
+        self.free.push(id);
+    }
+
+    pub fn get(&self, id: PageId) -> &Page {
+        &self.pages[id as usize]
+    }
+
+    pub fn get_mut(&mut self, id: PageId) -> &mut Page {
+        &mut self.pages[id as usize]
+    }
+
+    /// Pages ever created.
+    pub fn capacity_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Pages currently owned by live slots.
+    pub fn live_pages(&self) -> usize {
+        self.pages.len() - self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_reuses_freed_pages() {
+        let mut pool = PagePool::new(4, 8, false);
+        let a = pool.alloc();
+        let b = pool.alloc();
+        assert_ne!(a, b);
+        assert_eq!(pool.capacity_pages(), 2);
+        pool.free(a);
+        assert_eq!(pool.live_pages(), 1);
+        let c = pool.alloc();
+        assert_eq!(c, a, "free list not reused");
+        assert_eq!(pool.capacity_pages(), 2, "pool grew despite free page");
+    }
+
+    #[test]
+    fn f32_page_round_trip_and_partial_fill() {
+        let (pt, hd) = (4usize, 8usize);
+        let mut pool = PagePool::new(pt, hd, false);
+        let id = pool.alloc();
+        let k0: Vec<f32> = (0..hd).map(|i| i as f32).collect();
+        let v0: Vec<f32> = (0..hd).map(|i| -(i as f32)).collect();
+        pool.get_mut(id).append(pt, hd, None, &k0, &v0);
+        let k1: Vec<f32> = (0..hd).map(|i| 10.0 + i as f32).collect();
+        pool.get_mut(id).append(pt, hd, None, &k1, &v0);
+        let page = pool.get(id);
+        assert_eq!(page.filled, 2);
+        let mut out = vec![0.0f32; 2 * hd];
+        page.gather(hd, None, Plane::K, &mut out);
+        assert_eq!(&out[..hd], &k0[..]);
+        assert_eq!(&out[hd..], &k1[..]);
+        page.gather(hd, None, Plane::V, &mut out);
+        assert_eq!(&out[..hd], &v0[..]);
+        assert_eq!(page.state_bytes(), 2 * pt * hd * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "append to a full page")]
+    fn overfull_page_panics() {
+        let mut pool = PagePool::new(1, 4, false);
+        let id = pool.alloc();
+        pool.get_mut(id).append(1, 4, None, &[1.0; 4], &[2.0; 4]);
+        pool.get_mut(id).append(1, 4, None, &[1.0; 4], &[2.0; 4]);
+    }
+}

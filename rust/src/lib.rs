@@ -41,6 +41,7 @@ pub mod formats;
 pub mod tensor;
 pub mod util;
 pub mod kernels;
+pub mod kvcache;
 pub mod quant;
 pub mod data;
 pub mod model;

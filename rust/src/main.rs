@@ -2,7 +2,7 @@
 //! experiment harness, all over the AOT artifacts (Python never runs on
 //! the request path).
 
-use lobcq::coordinator::{BatchPolicy, CpuExecutor, Limits, Sampling, Server};
+use lobcq::coordinator::{BatchPolicy, CpuExecutor, DecodeSession, KvCacheOpts, Limits, Sampling, Server};
 use lobcq::data::corpus;
 use lobcq::eval::{experiments, Env};
 use lobcq::quant::calib::calibrate_universal;
@@ -52,8 +52,9 @@ fn print_help() {
         "lobcq — LO-BCQ W4A4 serving + experiment harness\n\n\
          commands:\n\
          \x20 serve       run the serving coordinator on a synthetic workload (PJRT)\n\
-         \x20 serve-cpu   serve through the CPU executor with on-the-fly W4A4\n\
-         \x20             activation quantization (no artifacts needed)\n\
+         \x20 serve-cpu   serve through the CPU decode engine: incremental decode\n\
+         \x20             over a paged BCQ-quantized KV cache, continuous batching,\n\
+         \x20             on-the-fly W4A4 activation quantization (no artifacts)\n\
          \x20 bench       run a paper experiment (--exp tab1..tab11, fig1..fig9, all)\n\
          \x20 eval        perplexity of one artifact variant via PJRT\n\
          \x20 calibrate   run LO-BCQ calibration in rust, dump codebooks\n\
@@ -169,25 +170,30 @@ fn serve(argv: &[String]) -> anyhow::Result<()> {
 
 // ---- serve-cpu ----
 
-/// Serve through the CPU executor: weights quantized offline, activations
-/// quantized on the fly at every GEMM by the unified pipeline — the
-/// artifact-free demonstration of paper §3's deployment mode. The whole
-/// request path (router → batcher → scheduler → executor) is identical to
-/// the PJRT `serve`; only the step executor differs.
+/// Serve through the CPU decode engine: weights quantized offline,
+/// activations quantized on the fly at every GEMM by the unified
+/// pipeline, and the attention state held in the paged — by default
+/// BCQ-encoded — KV cache. The default `--engine continuous` path runs
+/// the incremental `prefill`/`decode_step` forward with token-granular
+/// backfill; `--engine batch` keeps the fixed-shape full-window executor
+/// (the PJRT-compatible reference path).
 fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
     let specs = [
         artifacts_opt(),
         OptSpec { name: "scheme", help: "bf16|lobcq|mx4|vsq|mxfp4", takes_value: true, default: Some("lobcq") },
+        OptSpec { name: "engine", help: "continuous (cached decode) | batch (full-window executor)", takes_value: true, default: Some("continuous") },
+        OptSpec { name: "kv", help: "KV cache store: bcq (~4.9 bits/scalar) | f32", takes_value: true, default: Some("bcq") },
+        OptSpec { name: "page-tokens", help: "KV cache page size in tokens", takes_value: true, default: Some("16") },
         OptSpec { name: "requests", help: "synthetic request count", takes_value: true, default: Some("32") },
         OptSpec { name: "max-new", help: "tokens to generate per request", takes_value: true, default: Some("4") },
-        OptSpec { name: "max-batch", help: "dynamic batch limit", takes_value: true, default: Some("8") },
-        OptSpec { name: "max-wait-ms", help: "batcher wait", takes_value: true, default: Some("4") },
+        OptSpec { name: "max-batch", help: "dynamic batch limit / decode lanes", takes_value: true, default: Some("8") },
+        OptSpec { name: "max-wait-ms", help: "batcher wait (batch engine only)", takes_value: true, default: Some("4") },
         OptSpec { name: "workers", help: "quantization worker threads (0 = all cores)", takes_value: true, default: Some("0") },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
     let args = Args::parse(argv, &specs)?;
     if args.flag("help") {
-        println!("{}", render_help("serve-cpu", "serve via the CPU executor + quant pipeline", &specs));
+        println!("{}", render_help("serve-cpu", "serve via the CPU decode engine + quant pipeline", &specs));
         return Ok(());
     }
     let env = Env::load_from(PathBuf::from(args.str_or("artifacts", "artifacts")));
@@ -217,24 +223,56 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
     };
 
     let t = 32.min(cfg.max_t);
-    let exec = CpuExecutor::new(cfg.clone(), &weights, &scheme, pool, max_batch, t)?;
-    println!(
-        "[serve-cpu] model {} ({} params), scheme {}, weights {}, batch {max_batch}, t {t}",
-        cfg.name,
-        cfg.param_count(),
-        exec.act_scheme_name(),
-        exec.weight_mode()
-    );
     let vocab = cfg.vocab as u32;
-    let server = Server::start(
-        exec,
-        BatchPolicy {
-            max_batch,
-            max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 4)?),
-        },
-        Limits { max_prompt: t, max_new: max_new.max(1), vocab },
-        Sampling::Greedy,
-    );
+    let engine = args.str_or("engine", "continuous");
+    let server = match engine {
+        "continuous" => {
+            let kv = match args.str_or("kv", "bcq") {
+                "bcq" => KvCacheOpts { page_tokens: args.usize_or("page-tokens", 16)?.max(1), encoded: true },
+                "f32" => KvCacheOpts { page_tokens: args.usize_or("page-tokens", 16)?.max(1), encoded: false },
+                other => anyhow::bail!("unknown kv store '{other}' (bcq|f32)"),
+            };
+            let session = DecodeSession::new(cfg.clone(), &weights, &scheme, pool, max_batch, kv)?;
+            println!(
+                "[serve-cpu] model {} ({} params), scheme {}, weights {}, kv {}, lanes {max_batch}",
+                cfg.name,
+                cfg.param_count(),
+                session.act_scheme_name(),
+                session.weight_mode(),
+                session.kv_mode()
+            );
+            // The cached engine holds full histories (no sliding window);
+            // any prompt up to `t` prefills, and the scheduler caps each
+            // request's generation budget at the lane's remaining token
+            // capacity, so prompt+max_new past max_t shortens the output
+            // instead of rejecting the request.
+            Server::start_continuous(
+                session,
+                Limits { max_prompt: t, max_new: max_new.max(1), vocab },
+                Sampling::Greedy,
+            )
+        }
+        "batch" => {
+            let exec = CpuExecutor::new(cfg.clone(), &weights, &scheme, pool, max_batch, t)?;
+            println!(
+                "[serve-cpu] model {} ({} params), scheme {}, weights {}, batch {max_batch}, t {t}",
+                cfg.name,
+                cfg.param_count(),
+                exec.act_scheme_name(),
+                exec.weight_mode()
+            );
+            Server::start(
+                exec,
+                BatchPolicy {
+                    max_batch,
+                    max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 4)?),
+                },
+                Limits { max_prompt: t, max_new: max_new.max(1), vocab },
+                Sampling::Greedy,
+            )
+        }
+        other => anyhow::bail!("unknown engine '{other}' (continuous|batch)"),
+    };
 
     println!("[serve-cpu] firing {n_requests} requests (max_new {max_new})");
     let t0 = Instant::now();

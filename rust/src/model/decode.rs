@@ -1,0 +1,306 @@
+//! Incremental forward: `prefill` fills the KV cache for a prompt,
+//! `decode_step` runs **one token** against the cached history — O(len)
+//! attention work per token instead of the full forward's O(t²)
+//! re-score, and only the frontier row of logits is ever materialized.
+//!
+//! Numerics: with an f32 (KV16) cache the pair (prefill, decode_step)
+//! reproduces [`forward`](super::forward::forward) — every sub-step is
+//! row-independent in the reference forward (layer norm, GELU, per-row
+//! GEMM accumulation, causal softmax whose masked tail contributes exact
+//! `+0.0`), and the attention reductions here mirror the blocked
+//! kernel's accumulation order (scores reduce over `head_dim < KC` in
+//! one block; context reduces over tokens in the same `KC`-sized chunks
+//! `kernels::gemm` uses). The decode-parity suite pins this. With a
+//! BCQ-encoded (KV4) cache the gathered history is the quantized
+//! decode of each vector — the KV4-vs-KV16 ablation in EXPERIMENTS.md.
+
+use crate::kernels::KC;
+use crate::kvcache::{PagedKvCache, Plane, SlotId};
+use crate::model::config::ModelConfig;
+use crate::model::forward::{gelu, layer_norm, qmatmul, softmax_rows, ActQuant};
+use crate::model::weights::Weights;
+use crate::tensor::Tensor;
+
+/// Reusable state for [`decode_step`]: gathered K/V history, score row,
+/// context accumulators, and the pre-rendered per-layer weight names
+/// (decode runs per token, so the `format!` allocations are hoisted out
+/// of the hot loop). A session that keeps one across steps performs no
+/// per-step attention or name allocations once the buffers reach the
+/// sequence's working size.
+#[derive(Debug, Default)]
+pub struct DecodeScratch {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    scores: Vec<f32>,
+    ctx: Vec<f32>,
+    acc: Vec<f32>,
+    names: Vec<LayerNames>,
+}
+
+impl DecodeScratch {
+    pub fn new() -> DecodeScratch {
+        DecodeScratch::default()
+    }
+}
+
+/// One layer's weight-map keys, rendered once.
+#[derive(Debug)]
+struct LayerNames {
+    ln1_g: String,
+    ln1_b: String,
+    wqkv: String,
+    wo: String,
+    ln2_g: String,
+    ln2_b: String,
+    w1: String,
+    w2: String,
+}
+
+impl LayerNames {
+    fn new(i: usize) -> LayerNames {
+        LayerNames {
+            ln1_g: format!("l{i}.ln1.g"),
+            ln1_b: format!("l{i}.ln1.b"),
+            wqkv: format!("l{i}.attn.wqkv"),
+            wo: format!("l{i}.attn.wo"),
+            ln2_g: format!("l{i}.ln2.g"),
+            ln2_b: format!("l{i}.ln2.b"),
+            w1: format!("l{i}.mlp.w1"),
+            w2: format!("l{i}.mlp.w2"),
+        }
+    }
+}
+
+/// Embed one token at `pos` into a `(1, d)` tensor.
+fn embed_token(cfg: &ModelConfig, w: &Weights, token: u32, pos: usize) -> anyhow::Result<Tensor> {
+    anyhow::ensure!((token as usize) < cfg.vocab, "token {token} out of vocab");
+    anyhow::ensure!(pos < cfg.max_t, "position {pos} >= max_t {}", cfg.max_t);
+    let embed = w.get("embed")?;
+    let ppos = w.get("pos")?;
+    let e = embed.row(token as usize);
+    let p = ppos.row(pos);
+    let mut x = Tensor::zeros(&[1, cfg.d]);
+    for (o, (&a, &b)) in x.data.iter_mut().zip(e.iter().zip(p)) {
+        *o = a + b;
+    }
+    Ok(x)
+}
+
+/// Fill `slot` with a prompt: runs the **reference transformer stack
+/// itself** (`forward_hidden_with`, batch = 1) with a per-layer K/V sink
+/// that appends every position's K/V rows to the cache as each layer's
+/// QKV projection completes — attention runs over the exact in-flight
+/// values, decode steps are what read the cache back (quantized, in
+/// encoded mode). Because the layer code is shared rather than
+/// mirrored, prefill cannot drift numerically from the full forward.
+/// Returns the **last position's** logits (`vocab` floats) — the only
+/// row the decode loop samples. Requires an empty slot (chunked prefill
+/// is future work).
+pub fn prefill(
+    cfg: &ModelConfig,
+    w: &Weights,
+    cache: &mut PagedKvCache,
+    slot: SlotId,
+    tokens: &[u32],
+    act_q: ActQuant,
+) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(!tokens.is_empty(), "empty prompt");
+    anyhow::ensure!(cache.seq_len(slot) == 0, "prefill into a non-empty slot");
+    let lay = cache.layout();
+    anyhow::ensure!(
+        lay.n_layers == cfg.n_layers && lay.n_heads == cfg.n_heads && lay.head_dim == cfg.head_dim(),
+        "cache layout does not match model config"
+    );
+    anyhow::ensure!(tokens.len() <= lay.max_tokens, "prompt {} > cache capacity {}", tokens.len(), lay.max_tokens);
+    let (t, d) = (tokens.len(), cfg.d);
+
+    let mut sink = |layer: usize, qkv: &Tensor| -> anyhow::Result<()> {
+        for r in 0..t {
+            let row = qkv.row(r);
+            cache.append(slot, layer, &row[d..2 * d], &row[2 * d..3 * d])?;
+        }
+        Ok(())
+    };
+    let x = crate::model::forward::forward_hidden_with(cfg, w, tokens, 1, act_q, &mut sink)?;
+
+    // Frontier-only LM head: one (1, d) row against the cached panel.
+    let last = Tensor::new(&[1, d], x.row(t - 1).to_vec());
+    let head = w.packed_transposed("embed")?;
+    Ok(crate::kernels::gemm_packed(&last, &head).data)
+}
+
+/// Decode one token against the cached history: appends its K/V per
+/// layer, attends over the cache (O(len) per head), and returns the new
+/// position's logits (`vocab` floats). Attention reductions follow the
+/// blocked kernel's accumulation order, so with an f32 cache the result
+/// is bit-exact with the corresponding row of the full forward.
+pub fn decode_step(
+    cfg: &ModelConfig,
+    w: &Weights,
+    cache: &mut PagedKvCache,
+    slot: SlotId,
+    token: u32,
+    act_q: ActQuant,
+    scratch: &mut DecodeScratch,
+) -> anyhow::Result<Vec<f32>> {
+    let pos = cache.seq_len(slot);
+    anyhow::ensure!(pos > 0, "decode_step before prefill");
+    anyhow::ensure!(pos < cache.layout().max_tokens, "cache slot full ({pos} tokens)");
+    let (d, hd) = (cfg.d, cfg.head_dim());
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut x = embed_token(cfg, w, token, pos)?;
+
+    scratch.ctx.resize(hd, 0.0);
+    scratch.acc.resize(hd, 0.0);
+    if scratch.names.len() != cfg.n_layers {
+        scratch.names = (0..cfg.n_layers).map(LayerNames::new).collect();
+    }
+    for i in 0..cfg.n_layers {
+        let names = &scratch.names[i];
+        let mut h = x.clone();
+        layer_norm(&mut h, w.get(&names.ln1_g)?, w.get(&names.ln1_b)?, 1e-5);
+        let qkv = qmatmul(&h, w, &names.wqkv, act_q)?; // (1, 3D)
+        let row = qkv.row(0);
+        let n = cache.append(slot, i, &row[d..2 * d], &row[2 * d..3 * d])?;
+        let mut attn_out = Tensor::zeros(&[1, d]);
+        for head in 0..cfg.n_heads {
+            let off = head * hd;
+            let q = &row[off..off + hd];
+            cache.gather(slot, i, head, Plane::K, &mut scratch.k);
+            cache.gather(slot, i, head, Plane::V, &mut scratch.v);
+            // scores[j] = (q · K[j]) * scale — reduction over head_dim,
+            // ascending, one KC block (head_dim < KC always here).
+            scratch.scores.resize(n, 0.0);
+            for (j, s) in scratch.scores.iter_mut().enumerate() {
+                let krow = &scratch.k[j * hd..(j + 1) * hd];
+                let mut acc = 0.0f32;
+                for (a, b) in q.iter().zip(krow) {
+                    acc += a * b;
+                }
+                *s = acc * scale;
+            }
+            softmax_rows(&mut scratch.scores, n);
+            // ctx = p · V, reduced over tokens in KC-sized chunks with a
+            // fresh accumulator per chunk — the blocked driver's order.
+            scratch.ctx.fill(0.0);
+            let mut j0 = 0usize;
+            while j0 < n {
+                let jc = KC.min(n - j0);
+                scratch.acc.fill(0.0);
+                for j in j0..j0 + jc {
+                    let p = scratch.scores[j];
+                    let vrow = &scratch.v[j * hd..(j + 1) * hd];
+                    for (a, &b) in scratch.acc.iter_mut().zip(vrow) {
+                        *a += p * b;
+                    }
+                }
+                for (c, &a) in scratch.ctx.iter_mut().zip(scratch.acc.iter()) {
+                    *c += a;
+                }
+                j0 += jc;
+            }
+            attn_out.data[off..off + hd].copy_from_slice(&scratch.ctx);
+        }
+        let proj = qmatmul(&attn_out, w, &names.wo, act_q)?;
+        for (xv, pv) in x.data.iter_mut().zip(&proj.data) {
+            *xv += pv;
+        }
+
+        let mut h = x.clone();
+        layer_norm(&mut h, w.get(&names.ln2_g)?, w.get(&names.ln2_b)?, 1e-5);
+        let mut ff = qmatmul(&h, w, &names.w1, act_q)?;
+        gelu(&mut ff.data);
+        let down = qmatmul(&ff, w, &names.w2, act_q)?;
+        for (xv, dv) in x.data.iter_mut().zip(&down.data) {
+            *xv += dv;
+        }
+    }
+
+    layer_norm(&mut x, w.get("lnf.g")?, w.get("lnf.b")?, 1e-5);
+    let head = w.packed_transposed("embed")?;
+    Ok(crate::kernels::gemm_packed(&x, &head).data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{KvLayout, KvQuantizer, KvStore};
+    use crate::model::forward::forward;
+    use crate::model::forward::tests_support::{random_weights, tiny_cfg};
+
+    fn f32_cache(cfg: &ModelConfig, slots: usize) -> PagedKvCache {
+        PagedKvCache::new(KvLayout::for_model(cfg, 4, slots), KvStore::F32).unwrap()
+    }
+
+    #[test]
+    fn prefill_plus_decode_matches_full_forward_bitwise() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 41);
+        let tokens: Vec<u32> = (0..12).map(|i| (i * 7 % 40) as u32).collect();
+        let full = forward(&cfg, &w, &tokens, 1, None).unwrap();
+        for split in [1usize, 5, 11] {
+            let mut cache = f32_cache(&cfg, 1);
+            let slot = cache.alloc_slot().unwrap();
+            let mut scratch = DecodeScratch::new();
+            let mut got = vec![prefill(&cfg, &w, &mut cache, slot, &tokens[..split], None).unwrap()];
+            for &tok in &tokens[split..] {
+                got.push(decode_step(&cfg, &w, &mut cache, slot, tok, None, &mut scratch).unwrap());
+            }
+            // got[0] is logits at position split-1; got[k] at split-1+k.
+            for (k, logits) in got.iter().enumerate() {
+                let pos = split - 1 + k;
+                for (c, &g) in logits.iter().enumerate() {
+                    let want = full.at(pos, c);
+                    assert_eq!(
+                        g.to_bits(),
+                        want.to_bits(),
+                        "split {split} pos {pos} col {c}: {g} vs {want}"
+                    );
+                }
+            }
+            assert_eq!(cache.seq_len(slot), tokens.len());
+        }
+    }
+
+    #[test]
+    fn encoded_cache_decodes_finitely_and_differs_from_f32() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 42);
+        let hd = cfg.head_dim();
+        let sample: Vec<f32> = w.get("l0.attn.wqkv").unwrap().data.clone();
+        let quant = KvQuantizer::calibrated(hd, &sample[..hd * 64], 17).unwrap();
+        let mut enc_cache =
+            PagedKvCache::new(KvLayout::for_model(&cfg, 4, 1), KvStore::Encoded(quant)).unwrap();
+        let mut f32_cache = f32_cache(&cfg, 1);
+        let se = enc_cache.alloc_slot().unwrap();
+        let sf = f32_cache.alloc_slot().unwrap();
+        let tokens: Vec<u32> = (0..6).map(|i| (i * 3 % 40) as u32).collect();
+        let mut scratch = DecodeScratch::new();
+        prefill(&cfg, &w, &mut enc_cache, se, &tokens[..2], None).unwrap();
+        prefill(&cfg, &w, &mut f32_cache, sf, &tokens[..2], None).unwrap();
+        let mut diff = 0.0f32;
+        for &tok in &tokens[2..] {
+            let a = decode_step(&cfg, &w, &mut enc_cache, se, tok, None, &mut scratch).unwrap();
+            let b = decode_step(&cfg, &w, &mut f32_cache, sf, tok, None, &mut scratch).unwrap();
+            assert!(a.iter().all(|x| x.is_finite()), "encoded-cache logits not finite");
+            diff += a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum::<f32>();
+        }
+        assert!(diff > 0.0, "KV4 cache had no effect at all");
+        assert!(enc_cache.state_bytes() < f32_cache.state_bytes(), "encoded cache not smaller");
+    }
+
+    #[test]
+    fn decode_rejects_misuse() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 43);
+        let mut cache = f32_cache(&cfg, 1);
+        let slot = cache.alloc_slot().unwrap();
+        let mut scratch = DecodeScratch::new();
+        // decode before prefill, bad token, over-capacity prompt
+        assert!(decode_step(&cfg, &w, &mut cache, slot, 0, None, &mut scratch).is_err());
+        assert!(prefill(&cfg, &w, &mut cache, slot, &[999], None).is_err());
+        assert!(prefill(&cfg, &w, &mut cache, slot, &vec![0; cfg.max_t + 1], None).is_err());
+        prefill(&cfg, &w, &mut cache, slot, &[1, 2], None).unwrap();
+        assert!(prefill(&cfg, &w, &mut cache, slot, &[1], None).is_err(), "re-prefill of a live slot");
+    }
+}

@@ -24,16 +24,7 @@ use crate::tensor::Tensor;
 /// matmul.
 pub type ActQuant<'a> = Option<&'a QuantPipeline>;
 
-/// Parallel matmul: `a [m,k] @ b [k,n]`. Now a thin wrapper over the
-/// blocked kernel (`kernels::gemm`) — the branchy scalar triple-loop it
-/// used to be (including its `a == 0.0` skip, which defeated
-/// vectorization for a near-zero hit rate on dense activations) is gone.
-/// Callers that reuse B should pack once and call `kernels::gemm_packed`.
-pub fn matmul_par(a: &Tensor, b: &Tensor) -> Tensor {
-    kernels::gemm(a, b)
-}
-
-fn layer_norm(x: &mut Tensor, g: &Tensor, b: &Tensor, eps: f32) {
+pub(crate) fn layer_norm(x: &mut Tensor, g: &Tensor, b: &Tensor, eps: f32) {
     let d = x.cols();
     for row in x.data.chunks_exact_mut(d) {
         let mean = row.iter().sum::<f32>() / d as f32;
@@ -45,14 +36,14 @@ fn layer_norm(x: &mut Tensor, g: &Tensor, b: &Tensor, eps: f32) {
     }
 }
 
-fn gelu(x: &mut [f32]) {
+pub(crate) fn gelu(x: &mut [f32]) {
     for v in x.iter_mut() {
         let c = 0.797_884_56_f32;
         *v = 0.5 * *v * (1.0 + (c * (*v + 0.044715 * *v * *v * *v)).tanh());
     }
 }
 
-fn softmax_rows(x: &mut [f32], cols: usize) {
+pub(crate) fn softmax_rows(x: &mut [f32], cols: usize) {
     for row in x.chunks_exact_mut(cols) {
         let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut sum = 0.0f32;
@@ -72,7 +63,7 @@ fn softmax_rows(x: &mut [f32], cols: usize) {
 /// panels for dense weights (pre-quantized by the caller when evaluating
 /// weight quant), or the encoded-domain `qgemm` when the weight is bound
 /// as LO-BCQ codes — in which case no f32 copy of the weight ever exists.
-fn qmatmul(x: &Tensor, w: &Weights, name: &str, act_q: ActQuant) -> anyhow::Result<Tensor> {
+pub(crate) fn qmatmul(x: &Tensor, w: &Weights, name: &str, act_q: ActQuant) -> anyhow::Result<Tensor> {
     let lin = w.linear(name)?;
     let run = |xq: &Tensor| match &lin {
         Linear::Dense(pb) => kernels::gemm_packed(xq, pb),
@@ -92,6 +83,65 @@ fn qmatmul(x: &Tensor, w: &Weights, name: &str, act_q: ActQuant) -> anyhow::Resu
 /// Forward pass: `tokens` is (B, T) with T ≤ cfg.max_t; returns logits
 /// as a (B*T, vocab) tensor (row r = batch r/T, position r%T).
 pub fn forward(cfg: &ModelConfig, w: &Weights, tokens: &[u32], batch: usize, act_q: ActQuant) -> anyhow::Result<Tensor> {
+    let x = forward_hidden(cfg, w, tokens, batch, act_q)?;
+    // Tied LM head: logits = x @ embedᵀ (unquantized, as in python). The
+    // transposed panel is packed once and cached in `Weights` — no
+    // per-forward re-materialization of the [d, vocab] transpose.
+    let head = w.packed_transposed("embed")?;
+    Ok(kernels::gemm_packed(&x, &head))
+}
+
+/// Last-position-only forward: full transformer stack, but the tied LM
+/// head runs over **one row per lane** (`positions[i]` for lane `i`)
+/// instead of all `B·T` rows — the decode loop samples only each
+/// sequence's frontier, so materializing `batch·t·vocab` logits there is
+/// pure waste (the LM-head GEMM is the largest single product in the
+/// step). Returns a `(positions.len(), vocab)` tensor whose row `i` is
+/// bit-exact with row `i·t + positions[i]` of [`forward`] (same hidden
+/// states, same panel, same kernel — rows of a GEMM are independent).
+pub fn forward_logits_at(
+    cfg: &ModelConfig,
+    w: &Weights,
+    tokens: &[u32],
+    batch: usize,
+    act_q: ActQuant,
+    positions: &[usize],
+) -> anyhow::Result<Tensor> {
+    let t = tokens.len() / batch.max(1);
+    anyhow::ensure!(positions.len() <= batch, "{} positions for {batch} lanes", positions.len());
+    let x = forward_hidden(cfg, w, tokens, batch, act_q)?;
+    let mut picked = Tensor::zeros(&[positions.len(), cfg.d]);
+    for (i, &p) in positions.iter().enumerate() {
+        anyhow::ensure!(p < t, "position {p} >= sequence length {t}");
+        picked.row_mut(i).copy_from_slice(x.row(i * t + p));
+    }
+    let head = w.packed_transposed("embed")?;
+    Ok(kernels::gemm_packed(&picked, &head))
+}
+
+/// The transformer stack up to and including the final layer norm:
+/// returns hidden states `(B*T, d)`. Shared by [`forward`] (full LM
+/// head), [`forward_logits_at`] (frontier-only LM head), and — through
+/// [`forward_hidden_with`]'s K/V sink — `model::decode::prefill`.
+pub(crate) fn forward_hidden(cfg: &ModelConfig, w: &Weights, tokens: &[u32], batch: usize, act_q: ActQuant) -> anyhow::Result<Tensor> {
+    forward_hidden_with(cfg, w, tokens, batch, act_q, &mut |_, _| Ok(()))
+}
+
+/// [`forward_hidden`] with a per-layer observer: `kv_sink(layer, qkv)`
+/// fires right after each layer's QKV projection, before attention.
+/// This is the seam `model::decode::prefill` uses to append the
+/// prompt's K/V rows to the paged cache while running the **identical**
+/// reference layer code — no duplicated transformer loop, so cached
+/// prefill cannot drift numerically from the full forward.
+pub(crate) fn forward_hidden_with(
+    cfg: &ModelConfig,
+    w: &Weights,
+    tokens: &[u32],
+    batch: usize,
+    act_q: ActQuant,
+    kv_sink: &mut dyn FnMut(usize, &Tensor) -> anyhow::Result<()>,
+) -> anyhow::Result<Tensor> {
+    anyhow::ensure!(batch >= 1, "batch must be >= 1");
     anyhow::ensure!(tokens.len() % batch == 0, "tokens not divisible by batch");
     let t = tokens.len() / batch;
     anyhow::ensure!(t <= cfg.max_t, "sequence {t} > max_t {}", cfg.max_t);
@@ -126,6 +176,7 @@ pub fn forward(cfg: &ModelConfig, w: &Weights, tokens: &[u32], batch: usize, act
         let mut h = x.clone();
         layer_norm(&mut h, w.get(&format!("l{i}.ln1.g"))?, w.get(&format!("l{i}.ln1.b"))?, 1e-5);
         let qkv = qmatmul(&h, w, &format!("l{i}.attn.wqkv"), act_q)?; // (B*T, 3D)
+        kv_sink(i, &qkv)?;
         let mut attn_out = Tensor::zeros(&[batch * t, d]);
         for b in 0..batch {
             for head in 0..cfg.n_heads {
@@ -176,11 +227,7 @@ pub fn forward(cfg: &ModelConfig, w: &Weights, tokens: &[u32], batch: usize, act
     }
 
     layer_norm(&mut x, w.get("lnf.g")?, w.get("lnf.b")?, 1e-5);
-    // Tied LM head: logits = x @ embedᵀ (unquantized, as in python). The
-    // transposed panel is packed once and cached in `Weights` — no
-    // per-forward re-materialization of the [d, vocab] transpose.
-    let head = w.packed_transposed("embed")?;
-    Ok(kernels::gemm_packed(&x, &head))
+    Ok(x)
 }
 
 /// Test-only fixtures shared by eval/coordinator unit tests.
@@ -216,7 +263,6 @@ pub mod tests_support {
 mod tests {
     use super::tests_support::{random_weights, tiny_cfg};
     use super::*;
-    use crate::util::rng::Pcg32;
 
     #[test]
     fn forward_shapes_and_finite() {
@@ -283,15 +329,25 @@ mod tests {
     }
 
     #[test]
-    fn matmul_par_matches_serial() {
-        let mut rng = Pcg32::seeded(5);
-        let a = Tensor::from_fn(&[37, 64], |_| rng.normal());
-        let b = Tensor::from_fn(&[64, 53], |_| rng.normal());
-        let serial = a.matmul(&b);
-        let par = matmul_par(&a, &b);
-        for (x, y) in serial.data.iter().zip(&par.data) {
-            assert!((x - y).abs() < 1e-5);
+    fn logits_at_matches_full_forward_rows() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 7);
+        let t = 8;
+        let tokens: Vec<u32> = (0..2 * t).map(|i| (i * 5 % 40) as u32).collect();
+        let full = forward(&cfg, &w, &tokens, 2, None).unwrap();
+        let positions = [3usize, 7];
+        let slim = forward_logits_at(&cfg, &w, &tokens, 2, None, &positions).unwrap();
+        assert_eq!(slim.shape, vec![2, 40]);
+        for (i, &p) in positions.iter().enumerate() {
+            for c in 0..40 {
+                assert_eq!(
+                    slim.at(i, c).to_bits(),
+                    full.at(i * t + p, c).to_bits(),
+                    "lane {i} pos {p} col {c}"
+                );
+            }
         }
+        assert!(forward_logits_at(&cfg, &w, &tokens, 2, None, &[0, 99]).is_err());
     }
 
     #[test]

@@ -4,9 +4,11 @@
 //! artifacts in integration tests).
 
 pub mod config;
+pub mod decode;
 pub mod forward;
 pub mod weights;
 
 pub use config::ModelConfig;
-pub use forward::{forward, matmul_par};
+pub use decode::{decode_step, prefill, DecodeScratch};
+pub use forward::{forward, forward_logits_at};
 pub use weights::{Linear, Weights};

@@ -55,6 +55,20 @@ impl BitWriter {
         self.bytes
     }
 
+    /// Bytes written so far (the last byte may be partially filled).
+    /// Incremental consumers — the KV cache's page planes — decode the
+    /// stream with a [`BitReader`] while it is still being appended to.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Reset to empty, keeping the allocation (page reuse in the KV
+    /// cache's free list).
+    pub fn clear(&mut self) {
+        self.bytes.clear();
+        self.used = 0;
+    }
+
     pub fn bit_len(&self) -> usize {
         if self.used == 0 {
             self.bytes.len() * 8

@@ -1,0 +1,293 @@
+//! Decode-engine parity suite (ISSUE 3):
+//!
+//! 1. **Incremental == full**: prefill + N × `decode_step` with an
+//!    unquantized (f32) KV cache reproduces the full-forward logits at
+//!    every generated position, to tight tolerance, for several
+//!    prefill/decode split points and through the `DecodeSession` lane
+//!    API — including under weight quantization (encoded domain).
+//! 2. **Slot safety**: a randomized alloc/append/free/realloc workload
+//!    never aliases live pages across requests — every live slot always
+//!    reads back exactly what was appended to it, and no two live slots
+//!    ever share a page id.
+//! 3. **Encoded cache**: KV4 decode stays finite, differs from KV16 (the
+//!    quantizer is live), and stores ≤ 5 bits/scalar at serving head
+//!    dims.
+
+#![allow(clippy::needless_range_loop)]
+
+use lobcq::coordinator::{DecodeEngine, DecodeSession, KvCacheOpts};
+use lobcq::kvcache::{KvLayout, KvQuantizer, KvStore, PagedKvCache, Plane};
+use lobcq::model::decode::{decode_step, prefill, DecodeScratch};
+use lobcq::model::forward::forward;
+use lobcq::model::{ModelConfig, Weights};
+use lobcq::quant::pipeline::QuantPool;
+use lobcq::tensor::Tensor;
+use lobcq::util::prop::{ensure, forall};
+use lobcq::util::rng::Pcg32;
+use std::collections::BTreeMap;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig { name: "t".into(), d: 32, n_layers: 2, n_heads: 2, vocab: 40, max_t: 16 }
+}
+
+fn random_weights(cfg: &ModelConfig, seed: u64) -> Weights {
+    let mut rng = Pcg32::seeded(seed);
+    let mut tensors = BTreeMap::new();
+    for (name, shape) in cfg.param_shapes() {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with(".g") {
+            vec![1.0; n]
+        } else if name.ends_with(".b") {
+            vec![0.0; n]
+        } else {
+            (0..n).map(|_| rng.normal() * 0.05).collect()
+        };
+        tensors.insert(name, Tensor::new(&shape, data));
+    }
+    Weights::new(tensors)
+}
+
+// ---- 1. cached decode reproduces the full forward ----
+
+#[test]
+fn cached_decode_matches_full_forward_at_every_position() {
+    let cfg = tiny_cfg();
+    let w = random_weights(&cfg, 0xDEC0);
+    let tokens: Vec<u32> = (0..14).map(|i| ((i * 11 + 3) % cfg.vocab as usize) as u32).collect();
+    let full = forward(&cfg, &w, &tokens, 1, None).unwrap();
+    for split in [1usize, 4, 13] {
+        let mut cache =
+            PagedKvCache::new(KvLayout::for_model(&cfg, 4, 1), KvStore::F32).unwrap();
+        let slot = cache.alloc_slot().unwrap();
+        let mut scratch = DecodeScratch::new();
+        let mut logits_seq = vec![prefill(&cfg, &w, &mut cache, slot, &tokens[..split], None).unwrap()];
+        for &tok in &tokens[split..] {
+            logits_seq.push(decode_step(&cfg, &w, &mut cache, slot, tok, None, &mut scratch).unwrap());
+        }
+        for (k, logits) in logits_seq.iter().enumerate() {
+            let pos = split - 1 + k; // prefill returns position split-1
+            for (c, &g) in logits.iter().enumerate() {
+                let want = full.at(pos, c);
+                assert!(
+                    (g - want).abs() <= 1e-5 * (1.0 + want.abs()),
+                    "split {split} pos {pos} col {c}: cached {g} vs full {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_session_matches_full_forward_with_encoded_weights() {
+    // The session path: encoded-domain weights (qgemm), f32 KV cache.
+    // Logits must match the full forward over the SAME encoded weights.
+    use lobcq::eval::scheme::Scheme;
+    use lobcq::quant::calib::calibrate_universal;
+    use lobcq::quant::lobcq::{CalibOpts, LobcqConfig};
+
+    let cfg = tiny_cfg();
+    let w = random_weights(&cfg, 0xDEC1);
+    let qcfg = LobcqConfig::new(8, 4, 64);
+    let fam = calibrate_universal(
+        &[w.get("l0.mlp.w1").unwrap()],
+        &qcfg,
+        CalibOpts { max_iters: 8, ..Default::default() },
+        5,
+    );
+    let scheme = Scheme::lobcq(qcfg, fam);
+    let w_enc = scheme.encode_weights(&cfg, &w).unwrap();
+    let mut session = DecodeSession::new(
+        cfg.clone(),
+        &w,
+        &scheme,
+        QuantPool::serial(),
+        1,
+        KvCacheOpts { page_tokens: 4, encoded: false },
+    )
+    .unwrap();
+    assert_eq!(session.weight_mode(), "encoded-domain (qgemm on LO-BCQ codes)");
+
+    let tokens: Vec<u32> = (0..10).map(|i| ((i * 7 + 1) % cfg.vocab as usize) as u32).collect();
+    let full = forward(&cfg, &w_enc, &tokens, 1, None).unwrap();
+    let (lane, first) = session.prefill(&tokens[..3]).unwrap();
+    let mut got = vec![first];
+    for &tok in &tokens[3..] {
+        got.push(session.decode(lane, tok).unwrap());
+    }
+    for (k, logits) in got.iter().enumerate() {
+        let pos = 2 + k;
+        for (c, &g) in logits.iter().enumerate() {
+            let want = full.at(pos, c);
+            assert!(
+                (g - want).abs() <= 1e-5 * (1.0 + want.abs()),
+                "pos {pos} col {c}: session {g} vs full {want}"
+            );
+        }
+    }
+    session.release(lane);
+}
+
+// ---- 2. slot free/reuse never aliases live pages ----
+
+#[test]
+fn prop_slot_reuse_never_aliases_live_pages() {
+    forall(0x5107, "paged-cache slot aliasing", |rng| {
+        let lay = KvLayout {
+            n_layers: 1 + rng.index(2),
+            n_heads: 1 + rng.index(2),
+            head_dim: 8,
+            page_tokens: 1 + rng.index(4),
+            max_tokens: 12,
+            max_slots: 1 + rng.index(4),
+        };
+        let d = lay.n_heads * lay.head_dim;
+        let n_layers = lay.n_layers;
+        let max_slots = lay.max_slots;
+        let mut cache = PagedKvCache::new(lay, KvStore::F32).unwrap();
+        // Per live slot: the expected flat K history per layer.
+        let mut live: Vec<(usize, Vec<Vec<f32>>)> = Vec::new();
+        let mut stamp = 0.0f32;
+        for _op in 0..30 {
+            match rng.index(3) {
+                // alloc + first append
+                0 if live.len() < max_slots => {
+                    let slot = cache.alloc_slot().map_err(|e| e.to_string())?;
+                    live.push((slot, vec![Vec::new(); n_layers]));
+                }
+                // append one token to a random live slot
+                1 if !live.is_empty() => {
+                    let i = rng.index(live.len());
+                    let (slot, hist) = &mut live[i];
+                    if hist[0].len() / d >= 12 {
+                        continue; // full
+                    }
+                    for (layer, h) in hist.iter_mut().enumerate() {
+                        stamp += 1.0;
+                        let row: Vec<f32> = (0..d).map(|j| stamp + j as f32 * 0.01).collect();
+                        cache.append(*slot, layer, &row, &row).map_err(|e| e.to_string())?;
+                        h.extend_from_slice(&row);
+                    }
+                }
+                // free a random live slot
+                2 if !live.is_empty() => {
+                    let i = rng.index(live.len());
+                    let (slot, _) = live.swap_remove(i);
+                    cache.free_slot(slot);
+                }
+                _ => {}
+            }
+            // Invariant A: no two live slots share a page id.
+            for a in 0..live.len() {
+                for b in a + 1..live.len() {
+                    let pa = cache.page_ids(live[a].0);
+                    let pb = cache.page_ids(live[b].0);
+                    ensure(pa.iter().all(|p| !pb.contains(p)), || {
+                        format!("slots {} and {} share a page", live[a].0, live[b].0)
+                    })?;
+                }
+            }
+            // Invariant B: every live slot reads back exactly its own
+            // appended history on every (layer, head).
+            let mut out = Vec::new();
+            for (slot, hist) in &live {
+                for (layer, h) in hist.iter().enumerate() {
+                    let want_tokens = h.len() / d;
+                    let n = cache.gather(*slot, layer, 0, Plane::K, &mut out);
+                    ensure(n == want_tokens, || {
+                        format!("slot {slot} layer {layer}: {n} tokens cached, {want_tokens} appended")
+                    })?;
+                    let hd = 8;
+                    for t in 0..n {
+                        let want = &h[t * d..t * d + hd]; // head 0
+                        let got = &out[t * hd..(t + 1) * hd];
+                        ensure(got == want, || {
+                            format!("slot {slot} layer {layer} tok {t}: cache corrupted")
+                        })?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- 3. encoded (KV4) cache behaviour ----
+
+#[test]
+fn encoded_cache_is_within_bit_budget_and_changes_logits_boundedly() {
+    // head_dim 64 — the serving shape the ≤5 bits/scalar claim is about.
+    let cfg = ModelConfig { name: "kv".into(), d: 128, n_layers: 1, n_heads: 2, vocab: 64, max_t: 32 };
+    let w = random_weights(&cfg, 0xDEC2);
+    let hd = cfg.head_dim();
+    let sample = &w.get("l0.attn.wqkv").unwrap().data;
+    let quant = KvQuantizer::calibrated(hd, &sample[..hd * 64], 23).unwrap();
+    assert!(quant.bits_per_scalar() <= 5.0, "{} bits/scalar", quant.bits_per_scalar());
+
+    let mut kv4 = PagedKvCache::new(KvLayout::for_model(&cfg, 8, 1), KvStore::Encoded(quant)).unwrap();
+    let mut kv16 = PagedKvCache::new(KvLayout::for_model(&cfg, 8, 1), KvStore::F32).unwrap();
+    let s4 = kv4.alloc_slot().unwrap();
+    let s16 = kv16.alloc_slot().unwrap();
+    let tokens: Vec<u32> = (0..20).map(|i| ((i * 13 + 5) % cfg.vocab as usize) as u32).collect();
+    let mut scr = DecodeScratch::new();
+    prefill(&cfg, &w, &mut kv4, s4, &tokens[..4], None).unwrap();
+    prefill(&cfg, &w, &mut kv16, s16, &tokens[..4], None).unwrap();
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for &tok in &tokens[4..] {
+        let a = decode_step(&cfg, &w, &mut kv4, s4, tok, None, &mut scr).unwrap();
+        let b = decode_step(&cfg, &w, &mut kv16, s16, tok, None, &mut scr).unwrap();
+        assert!(a.iter().all(|x| x.is_finite()), "KV4 logits not finite");
+        num += a.iter().zip(&b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>();
+        den += b.iter().map(|x| (*x as f64).powi(2)).sum::<f64>();
+    }
+    let rel = (num / den).sqrt();
+    assert!(rel > 0.0, "KV4 quantization had no effect");
+    assert!(rel < 0.5, "KV4 diverged from KV16: rel err {rel}");
+
+    // Measured storage: the encoded cache is several times smaller, and
+    // its measured bits/scalar (excluding page-rounding slack) ≤ 5.
+    let cached_scalars = 2 * tokens.len() * cfg.n_layers * cfg.d; // K+V, all layers
+    let measured_bits = kv4.state_bytes() as f64 * 8.0 / cached_scalars as f64;
+    assert!(measured_bits <= 5.0, "measured {measured_bits} bits/scalar");
+    assert!(kv4.state_bytes() * 4 < kv16.state_bytes(), "KV4 not ≥4x smaller than KV16");
+}
+
+#[test]
+fn continuous_session_backfills_and_stays_consistent() {
+    // End-to-end through the real model session: 1 lane, requests served
+    // strictly one after another, each reproducing its own full forward.
+    let cfg = tiny_cfg();
+    let w = random_weights(&cfg, 0xDEC3);
+    let mut session = DecodeSession::new(
+        cfg.clone(),
+        &w,
+        &lobcq::eval::Scheme::Bf16,
+        QuantPool::serial(),
+        1,
+        KvCacheOpts { page_tokens: 4, encoded: false },
+    )
+    .unwrap();
+    for r in 0..3u32 {
+        let prompt: Vec<u32> = (0..3).map(|i| (r * 9 + i) % cfg.vocab as u32).collect();
+        let (lane, mut logits) = session.prefill(&prompt).unwrap();
+        let mut seq = prompt.clone();
+        for _ in 0..4 {
+            let next = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as u32;
+            seq.push(next);
+            logits = session.decode(lane, next).unwrap();
+        }
+        // The full forward over the realized sequence must agree with the
+        // final incremental logits.
+        let full = forward(&cfg, &w, &seq, 1, None).unwrap();
+        let last = full.row(seq.len() - 1);
+        for (c, (&g, &want)) in logits.iter().zip(last).enumerate() {
+            assert!((g - want).abs() <= 1e-5 * (1.0 + want.abs()), "req {r} col {c}");
+        }
+        session.release(lane);
+    }
+}
