@@ -13,18 +13,24 @@
 //!   ~4.9 bits/scalar at head_dim 64).
 //!
 //! Also reports peak cache bytes for both cache modes, a `batch4` lane
-//! throughput for the cached-encoded engine, and a KV4-vs-KV16
-//! perplexity ablation (teacher-forced NLL over a corpus stream — the
-//! EXPERIMENTS.md "KV cache" entry).
+//! throughput for the cached-encoded engine, a KV4-vs-KV16 perplexity
+//! ablation (teacher-forced NLL over a corpus stream — the
+//! EXPERIMENTS.md "KV cache" entry), and the ISSUE-4 **lane sweep**:
+//! {1, 4, 16} live lanes decoding in lockstep, per-lane serial
+//! `decode_step` loop vs one fused `decode_step_batch` per step — the
+//! batched step streams each packed weight panel once per step instead
+//! of once per lane, which is where decode throughput scaling with
+//! batch size comes from (EXPERIMENTS.md lane-scaling table).
 //!
-//! Acceptance (ISSUE 3): cached decode beats full recompute at T ≥ 256,
-//! and the encoded cache stores K/V at ≤ 5 bits/scalar.
+//! Acceptance: cached decode beats full recompute at T ≥ 256, the
+//! encoded cache stores K/V at ≤ 5 bits/scalar (ISSUE 3), and the
+//! fused batched step beats the per-lane loop at ≥ 4 lanes (ISSUE 4).
 
 #![allow(clippy::needless_range_loop)]
 
 use lobcq::data::corpus;
 use lobcq::kvcache::{KvLayout, KvQuantizer, KvStore, PagedKvCache};
-use lobcq::model::decode::{decode_step, prefill, DecodeScratch};
+use lobcq::model::decode::{decode_step, decode_step_batch, prefill, DecodeScratch};
 use lobcq::model::forward::{forward, forward_logits_at};
 use lobcq::model::{ModelConfig, Weights};
 use lobcq::tensor::Tensor;
@@ -119,6 +125,42 @@ fn run_cached_batch4(cfg: &ModelConfig, w: &Weights, stream: &[u32], t0: usize, 
     (4 * gen) as f64 / start.elapsed().as_secs_f64()
 }
 
+/// `lanes` requests decoding in lockstep after identical `t0`-token
+/// prefills, f32 KV cache: either the per-lane serial loop (`batched =
+/// false`: one `decode_step` per lane per step — the pre-ISSUE-4
+/// scheduler shape) or one fused `decode_step_batch` per step. Returns
+/// aggregate tokens/sec over the decode phase. (`main` cross-checks the
+/// fused step bit-exact against the per-lane engine before timing, so
+/// the bench can't silently measure a divergent path.)
+fn run_lanes(cfg: &ModelConfig, w: &Weights, stream: &[u32], t0: usize, gen: usize, lanes: usize, batched: bool) -> f64 {
+    let mut kv = cache(cfg, w, false, lanes);
+    let mut scratch = DecodeScratch::new();
+    let slots: Vec<_> = (0..lanes)
+        .map(|_| {
+            let s = kv.alloc_slot().unwrap();
+            prefill(cfg, w, &mut kv, s, &stream[..t0], None).unwrap();
+            s
+        })
+        .collect();
+    let start = Instant::now();
+    if batched {
+        let mut tokens = vec![0u32; lanes];
+        for s in 0..gen {
+            tokens.fill(stream[t0 + s]);
+            let logits = decode_step_batch(cfg, w, &mut kv, &slots, &tokens, None, &mut scratch).unwrap();
+            assert!(logits[0].is_finite());
+        }
+    } else {
+        for s in 0..gen {
+            for &slot in &slots {
+                let logits = decode_step(cfg, w, &mut kv, slot, stream[t0 + s], None, &mut scratch).unwrap();
+                assert!(logits[0].is_finite());
+            }
+        }
+    }
+    (lanes * gen) as f64 / start.elapsed().as_secs_f64()
+}
+
 /// Teacher-forced perplexity of a corpus stream through prefill + decode
 /// (positions `t0-1 .. t0+gen-1` score the next stream token).
 fn decode_ppl(cfg: &ModelConfig, w: &Weights, stream: &[u32], t0: usize, gen: usize, encoded: bool) -> f64 {
@@ -206,6 +248,58 @@ fn main() {
     let batch4_tps = run_cached_batch4(&cfg, &w, &stream, 64, gen);
     println!("batch4 cached-bcq @T0=64: {batch4_tps:.1} tok/s (4 lanes round-robin)");
 
+    // ---- lane sweep: per-lane serial loop vs one fused step ----
+    // Parity gate first: one fused step over 2 ragged lanes must be
+    // bit-identical to the per-lane engine.
+    {
+        let mut kv_a = cache(&cfg, &w, false, 2);
+        let mut kv_b = cache(&cfg, &w, false, 2);
+        let (mut sa, mut sb) = (DecodeScratch::new(), DecodeScratch::new());
+        let mut slots = Vec::new();
+        for t0 in [24usize, 40] {
+            let a = kv_a.alloc_slot().unwrap();
+            let b = kv_b.alloc_slot().unwrap();
+            prefill(&cfg, &w, &mut kv_a, a, &stream[..t0], None).unwrap();
+            prefill(&cfg, &w, &mut kv_b, b, &stream[..t0], None).unwrap();
+            slots.push(a);
+        }
+        let toks = [stream[40], stream[41]];
+        let fused = decode_step_batch(&cfg, &w, &mut kv_b, &slots, &toks, None, &mut sb)
+            .unwrap()
+            .to_vec();
+        for (i, &slot) in slots.iter().enumerate() {
+            let lone = decode_step(&cfg, &w, &mut kv_a, slot, toks[i], None, &mut sa).unwrap();
+            for (c, (&g, &want)) in fused[i * cfg.vocab..(i + 1) * cfg.vocab].iter().zip(&lone).enumerate() {
+                assert_eq!(g.to_bits(), want.to_bits(), "lane-sweep parity drift: lane {i} col {c}");
+            }
+        }
+    }
+    println!("\n# lane sweep — per-lane serial vs fused batched step (f32 KV, T0=64)");
+    let mut lane_json = Vec::new();
+    let mut batched_x4 = 0.0f64;
+    for &lanes in &[1usize, 4, 16] {
+        let serial_tps = run_lanes(&cfg, &w, &stream, 64, gen, lanes, false);
+        let batched_tps = run_lanes(&cfg, &w, &stream, 64, gen, lanes, true);
+        let speedup = batched_tps / serial_tps;
+        if lanes == 4 {
+            batched_x4 = speedup;
+        }
+        println!("lanes={lanes:>2}: per-lane {serial_tps:8.1} tok/s   batched {batched_tps:8.1} tok/s   ({speedup:.2}x)");
+        lane_json.push(
+            Json::obj()
+                .with("lanes", Json::Num(lanes as f64))
+                .with("per_lane_tokens_per_s", Json::Num(serial_tps))
+                .with("batched_tokens_per_s", Json::Num(batched_tps))
+                .with("speedup", Json::Num(speedup)),
+        );
+    }
+    acceptance.set("batched_vs_per_lane_x4", Json::Num(batched_x4));
+    acceptance.set("batched_target", Json::Num(1.0));
+    println!("batched vs per-lane @4 lanes: {batched_x4:.2}x (target > 1x)");
+    if batched_x4 <= 1.0 {
+        eprintln!("WARNING: fused batched decode not faster than the per-lane loop at 4 lanes");
+    }
+
     // Encoded-cache bit budget (analytic and measured).
     let kv_bits = kv_quantizer(&cfg, &w).bits_per_scalar();
     acceptance.set("kv_bits_per_scalar", Json::Num(kv_bits));
@@ -224,6 +318,7 @@ fn main() {
         .with("bench", Json::Str("perf_decode".into()))
         .with("shapes", Json::Arr(shapes_json))
         .with("batch4_cached_bcq_tokens_per_s", Json::Num(batch4_tps))
+        .with("lane_sweep", Json::Arr(lane_json))
         .with(
             "kv_ablation",
             Json::obj()

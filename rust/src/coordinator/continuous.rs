@@ -3,18 +3,24 @@
 //!
 //! Unlike [`run_batch`](super::scheduler::run_batch) — which holds every
 //! lane until the *longest* request's `max_new` — this loop interleaves
-//! requests at token granularity: each iteration steps every active lane
-//! by one token, finished requests release their KV-cache slot
-//! immediately, and the freed lane is **backfilled** from the admission
-//! queue mid-batch (`Batcher::try_pop`, non-blocking, so live lanes are
-//! never stalled waiting for arrivals). The worker blocks only when it
-//! has nothing to decode at all.
+//! requests at token granularity: each iteration advances **every**
+//! active lane by one token through a single fused
+//! [`decode_batch`](DecodeEngine::decode_batch) call (one activation
+//! quantization, each projection GEMM launched once per step — the
+//! packed weight panels stream once for the whole batch, not once per
+//! lane). Finished requests release their KV-cache slot immediately,
+//! and the freed lane is **backfilled** from the admission queue
+//! mid-batch (`Batcher::try_pop`, non-blocking, so live lanes are never
+//! stalled waiting for arrivals). The worker blocks only when it has
+//! nothing to decode at all.
 //!
-//! Engine errors are per-lane: a failed prefill or decode fails that one
-//! request and frees its lane; the rest of the batch keeps decoding
-//! (the fixed-batch path can only fail the whole batch).
+//! Engine errors are per-lane: a failed prefill or a lane's slot in the
+//! fused step fails that one request and frees its lane; the rest of
+//! the batch keeps decoding (the fixed-batch path can only fail the
+//! whole batch).
 
 use super::batcher::Batcher;
+use super::metrics::ServerMetrics;
 use super::request::{Request, Response};
 use super::scheduler::{sample_from_logits, Sampling};
 use super::session::DecodeEngine;
@@ -37,14 +43,21 @@ struct Lane {
 
 /// Drive the engine until the batcher is closed and drained and every
 /// active lane has finished. `deliver` receives each request's terminal
-/// event — `Ok(Response)` or the per-request error.
+/// event — `Ok(Response)` or the per-request error. When `metrics` is
+/// given, every fused step records its batch occupancy and the engine's
+/// KV-cache page stats.
 pub fn run_continuous<E: DecodeEngine + ?Sized>(
     engine: &mut E,
     batcher: &Batcher,
     sampling: Sampling,
+    metrics: Option<&ServerMetrics>,
     mut deliver: impl FnMut(u64, anyhow::Result<Response>),
 ) {
     let mut active: Vec<Lane> = Vec::new();
+    // Per-step staging, reused across iterations.
+    let mut step_idx: Vec<usize> = Vec::new(); // indices into `active`
+    let mut step_lanes: Vec<usize> = Vec::new(); // engine lane ids
+    let mut step_tokens: Vec<u32> = Vec::new();
     loop {
         // ---- admission: fill free lanes. Block only when idle. ----
         while active.len() < engine.max_concurrency() {
@@ -68,35 +81,62 @@ pub fn run_continuous<E: DecodeEngine + ?Sized>(
             lane.max_batch_seen = lane.max_batch_seen.max(cur);
         }
 
-        // ---- one decode step per active lane ----
+        // ---- ONE fused decode step across every live lane ----
         let mut finished: Vec<usize> = Vec::new();
-        for (idx, lane) in active.iter_mut().enumerate() {
+        step_idx.clear();
+        step_lanes.clear();
+        step_tokens.clear();
+        for (idx, lane) in active.iter().enumerate() {
             if lane.generated.len() >= lane.budget {
                 finished.push(idx);
                 continue;
             }
-            let last = *lane.generated.last().unwrap();
+            step_idx.push(idx);
+            step_lanes.push(lane.lane);
+            step_tokens.push(*lane.generated.last().unwrap());
+        }
+        if !step_idx.is_empty() {
+            if let Some(m) = metrics {
+                m.record_step_occupancy(step_idx.len());
+            }
             let t0 = Instant::now();
-            match engine.decode(lane.lane, last) {
-                Ok(logits) => {
-                    lane.decode_us += t0.elapsed().as_secs_f64() * 1e6;
-                    lane.last_step_at = Instant::now();
-                    let step = lane.req.prompt.len() + lane.generated.len();
-                    lane.generated.push(sample_from_logits(&logits, sampling, lane.req.id, step));
-                    if lane.generated.len() >= lane.budget {
-                        finished.push(idx);
+            let results = engine.decode_batch(&step_lanes, &step_tokens);
+            // The step's wall time is shared work; attribute an equal
+            // share to each participating lane.
+            let share_us = t0.elapsed().as_secs_f64() * 1e6 / step_idx.len() as f64;
+            let stepped_at = Instant::now();
+            debug_assert_eq!(results.len(), step_idx.len());
+            for (&idx, result) in step_idx.iter().zip(results) {
+                let lane = &mut active[idx];
+                match result {
+                    Ok(logits) => {
+                        lane.decode_us += share_us;
+                        lane.last_step_at = stepped_at;
+                        let step = lane.req.prompt.len() + lane.generated.len();
+                        lane.generated.push(sample_from_logits(&logits, sampling, lane.req.id, step));
+                        if lane.generated.len() >= lane.budget {
+                            finished.push(idx);
+                        }
+                    }
+                    Err(e) => {
+                        deliver(lane.req.id, Err(anyhow::anyhow!("decode failed: {e}")));
+                        lane.generated.clear(); // mark dead: the retire loop below
+                        finished.push(idx); // releases the lane, delivers nothing
                     }
                 }
-                Err(e) => {
-                    deliver(lane.req.id, Err(anyhow::anyhow!("decode failed: {e}")));
-                    lane.generated.clear(); // mark dead: the retire loop below
-                    finished.push(idx); // releases the lane, delivers nothing
+            }
+            if let Some(m) = metrics {
+                if let Some(kv) = engine.kv_stats() {
+                    m.record_kv_stats(kv);
                 }
             }
         }
 
         // ---- retire finished lanes (slots free => next admission pass
-        // backfills them) ----
+        // backfills them). Budget-finished and step-finished indices
+        // interleave, so order them before the descending swap_remove
+        // sweep. ----
+        finished.sort_unstable();
         for idx in finished.into_iter().rev() {
             let lane = active.swap_remove(idx);
             engine.release(lane.lane);
@@ -179,7 +219,7 @@ mod tests {
         }
         b.close();
         let mut out = Vec::new();
-        run_continuous(engine, &b, Sampling::Greedy, |id, r| out.push((id, r)));
+        run_continuous(engine, &b, Sampling::Greedy, None, |id, r| out.push((id, r)));
         out
     }
 
@@ -204,6 +244,30 @@ mod tests {
         // 3 prefills + decodes: req1 needs 3 steps, req2 needs 2, req3 0.
         assert_eq!(e.prefills, 3);
         assert_eq!(e.decodes, 5);
+        // Fused stepping: co-live lanes decode in ONE engine call per
+        // step, never one call per lane. Step 1 ran lanes 1+2 together.
+        assert!(e.batch_calls < e.decodes, "every decode got its own engine call");
+        assert_eq!(e.max_batch_lanes, 2, "co-live lanes not stepped together");
+    }
+
+    #[test]
+    fn records_occupancy_and_shares_step_time() {
+        use crate::coordinator::metrics::ServerMetrics;
+        let m = ServerMetrics::new();
+        let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
+        assert!(b.push(req(1, vec![1], 3)));
+        assert!(b.push(req(2, vec![2], 3)));
+        b.close();
+        let mut e = MockDecodeEngine::new(4, 32);
+        let mut out = Vec::new();
+        run_continuous(&mut e, &b, Sampling::Greedy, Some(&m), |id, r| out.push((id, r)));
+        assert_eq!(out.len(), 2);
+        let s = m.snapshot();
+        // Both lanes admitted before the first step: 2 steps at
+        // occupancy 2 (each generates 2 more tokens after prefill).
+        assert_eq!(s.occupancy_hist, vec![(2, 2)]);
+        assert!((s.mean_occupancy - 2.0).abs() < 1e-9);
+        assert!(s.kv.is_none(), "mock engine grew a KV cache");
     }
 
     #[test]

@@ -6,8 +6,16 @@
 //! latency** (mean decode-step spacing) — recorded separately so the
 //! decode bench and `serve-cpu` logs can report prefill and decode
 //! behaviour independently.
+//!
+//! Both scheduling paths additionally record a **decode batch-occupancy
+//! histogram** — live lanes per decode step — the number that tells you
+//! how much of the fused step's panel-streaming amortization the
+//! workload actually realized — and the continuous path samples the
+//! paged KV cache's page occupancy (pages in use / high-water mark),
+//! all printed in the `serve-cpu` summary.
 
 use super::request::Response;
+use crate::kvcache::KvStats;
 use crate::util::stats::LatencyHistogram;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -20,6 +28,10 @@ struct Inner {
     itl: LatencyHistogram,
     total: LatencyHistogram,
     batch_sizes: Vec<usize>,
+    /// `occupancy[n-1]` = decode steps that ran with `n` live lanes.
+    occupancy: Vec<u64>,
+    /// Latest KV-cache snapshot (peaks are cumulative inside it).
+    kv: Option<KvStats>,
     tokens_out: u64,
     requests_done: u64,
     started: Option<Instant>,
@@ -46,11 +58,32 @@ impl ServerMetrics {
                 itl: LatencyHistogram::new(),
                 total: LatencyHistogram::new(),
                 batch_sizes: Vec::new(),
+                occupancy: Vec::new(),
+                kv: None,
                 tokens_out: 0,
                 requests_done: 0,
                 started: None,
             }),
         }
+    }
+
+    /// One decode step ran with `live_lanes` lanes (both scheduling
+    /// paths call this once per step).
+    pub fn record_step_occupancy(&self, live_lanes: usize) {
+        if live_lanes == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.occupancy.len() < live_lanes {
+            g.occupancy.resize(live_lanes, 0);
+        }
+        g.occupancy[live_lanes - 1] += 1;
+    }
+
+    /// Latest KV-cache occupancy snapshot (the stats carry their own
+    /// high-water marks, so keeping the most recent one is lossless).
+    pub fn record_kv_stats(&self, stats: KvStats) {
+        self.inner.lock().unwrap().kv = Some(stats);
     }
 
     pub fn record_response(&self, resp: &Response) {
@@ -77,7 +110,23 @@ impl ServerMetrics {
         } else {
             g.batch_sizes.iter().sum::<usize>() as f64 / g.batch_sizes.len() as f64
         };
+        let steps: u64 = g.occupancy.iter().sum();
+        let mean_occupancy = if steps == 0 {
+            0.0
+        } else {
+            g.occupancy.iter().enumerate().map(|(i, &c)| (i + 1) as u64 * c).sum::<u64>() as f64
+                / steps as f64
+        };
         MetricsSnapshot {
+            occupancy_hist: g
+                .occupancy
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(i, &c)| (i + 1, c))
+                .collect(),
+            mean_occupancy,
+            kv: g.kv,
             requests: g.requests_done,
             tokens: g.tokens_out,
             tokens_per_s: if elapsed > 0.0 { g.tokens_out as f64 / elapsed } else { 0.0 },
@@ -99,6 +148,11 @@ impl ServerMetrics {
 
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// `(live_lanes, steps)` pairs, ascending, zero-count rows dropped.
+    pub occupancy_hist: Vec<(usize, u64)>,
+    pub mean_occupancy: f64,
+    /// Latest KV-cache occupancy (continuous engine only).
+    pub kv: Option<KvStats>,
     pub requests: u64,
     pub tokens: u64,
     pub tokens_per_s: f64,
@@ -118,7 +172,7 @@ pub struct MetricsSnapshot {
 
 impl MetricsSnapshot {
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} tokens={} throughput={:.1} tok/s | total p50={:.0}µs p95={:.0}µs p99={:.0}µs | \
              queue p50={:.0}µs p99={:.0}µs | exec p50={:.0}µs p99={:.0}µs | \
              ttft p50={:.0}µs p99={:.0}µs | itl p50={:.0}µs p99={:.0}µs | mean batch={:.2}",
@@ -137,7 +191,24 @@ impl MetricsSnapshot {
             self.itl_p50_us,
             self.itl_p99_us,
             self.mean_batch
-        )
+        );
+        if !self.occupancy_hist.is_empty() {
+            s.push_str(&format!(" | decode occupancy mean={:.2} [", self.mean_occupancy));
+            for (i, (lanes, steps)) in self.occupancy_hist.iter().enumerate() {
+                if i > 0 {
+                    s.push(' ');
+                }
+                s.push_str(&format!("{lanes}:{steps}"));
+            }
+            s.push(']');
+        }
+        if let Some(kv) = &self.kv {
+            s.push_str(&format!(
+                " | kv pages={}/{} (peak {}) bytes={} (peak {})",
+                kv.pages_in_use, kv.pages_capacity, kv.pages_peak, kv.state_bytes, kv.peak_bytes
+            ));
+        }
+        s
     }
 }
 
@@ -182,5 +253,30 @@ mod tests {
         assert_eq!(s.requests, 1);
         assert_eq!(s.itl_p50_us, 0.0, "single-token response polluted the ITL histogram");
         assert!(s.ttft_p50_us > 0.0);
+    }
+
+    #[test]
+    fn occupancy_histogram_and_kv_stats_flow_to_report() {
+        let m = ServerMetrics::new();
+        assert!(m.snapshot().occupancy_hist.is_empty());
+        for lanes in [1usize, 4, 4, 4, 2, 0] {
+            m.record_step_occupancy(lanes); // 0 is ignored
+        }
+        m.record_kv_stats(crate::kvcache::KvStats {
+            live_slots: 2,
+            pages_in_use: 6,
+            pages_peak: 8,
+            pages_capacity: 8,
+            state_bytes: 1024,
+            peak_bytes: 2048,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.occupancy_hist, vec![(1, 1), (2, 1), (4, 3)]);
+        assert!((s.mean_occupancy - 15.0 / 5.0).abs() < 1e-9);
+        let kv = s.kv.unwrap();
+        assert_eq!((kv.pages_in_use, kv.pages_peak), (6, 8));
+        let r = s.report();
+        assert!(r.contains("occupancy mean=3.00") && r.contains("4:3"), "{r}");
+        assert!(r.contains("kv pages=6/8 (peak 8)"), "{r}");
     }
 }

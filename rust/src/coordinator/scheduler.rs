@@ -12,6 +12,7 @@
 //! per-token work O(current length) instead of a full-window re-score.
 
 use super::executor::StepExecutor;
+use super::metrics::ServerMetrics;
 use super::request::{Request, Response};
 use crate::data::corpus::PAD;
 use std::time::Instant;
@@ -25,11 +26,15 @@ pub enum Sampling {
 }
 
 /// Decode one batch of requests to completion. Returns responses in the
-/// same order as `batch`.
+/// same order as `batch`. When `metrics` is given, every executor step
+/// records its batch occupancy (sequences still generating — the same
+/// live-lanes-per-step histogram the continuous path keeps, so the two
+/// scheduling paths are directly comparable in the serve summary).
 pub fn run_batch<E: StepExecutor + ?Sized>(
     exec: &E,
     batch: &[Request],
     sampling: Sampling,
+    metrics: Option<&ServerMetrics>,
 ) -> anyhow::Result<Vec<Response>> {
     assert!(!batch.is_empty());
     assert!(batch.len() <= exec.batch(), "batch {} exceeds executor {}", batch.len(), exec.batch());
@@ -44,6 +49,14 @@ pub fn run_batch<E: StepExecutor + ?Sized>(
     let mut step_ends: Vec<Instant> = Vec::with_capacity(max_new);
 
     for _step in 0..max_new {
+        if let Some(m) = metrics {
+            let live = batch
+                .iter()
+                .enumerate()
+                .filter(|(i, r)| seqs[*i].len() - r.prompt.len() < r.max_new)
+                .count();
+            m.record_step_occupancy(live);
+        }
         // Build the fixed-shape token tensor: right-aligned... we LEFT-pack
         // each sequence's last `t` tokens and remember frontier positions.
         let mut tokens = vec![PAD; b_exec * t];
@@ -169,7 +182,7 @@ mod tests {
     fn greedy_decode_follows_mock_successor_rule() {
         let exec = MockExecutor::new(4, 16, 32);
         let batch = vec![req(1, vec![5], 4), req(2, vec![9, 10], 3)];
-        let out = run_batch(&exec, &batch, Sampling::Greedy).unwrap();
+        let out = run_batch(&exec, &batch, Sampling::Greedy, None).unwrap();
         // Mock predicts tok+1: from 5 -> 6,7,8,9; from 10 -> 11,12,13.
         assert_eq!(out[0].tokens, vec![6, 7, 8, 9]);
         assert_eq!(out[1].tokens, vec![11, 12, 13]);
@@ -182,7 +195,7 @@ mod tests {
     fn shorter_requests_stop_early() {
         let exec = MockExecutor::new(2, 8, 32);
         let batch = vec![req(1, vec![1], 1), req(2, vec![1], 5)];
-        let out = run_batch(&exec, &batch, Sampling::Greedy).unwrap();
+        let out = run_batch(&exec, &batch, Sampling::Greedy, None).unwrap();
         assert_eq!(out[0].tokens.len(), 1);
         assert_eq!(out[1].tokens.len(), 5);
     }
@@ -192,16 +205,28 @@ mod tests {
         // Prompt longer than t still decodes (uses last t tokens).
         let exec = MockExecutor::new(1, 4, 32);
         let batch = vec![req(1, vec![1, 2, 3, 4, 5, 6], 2)];
-        let out = run_batch(&exec, &batch, Sampling::Greedy).unwrap();
+        let out = run_batch(&exec, &batch, Sampling::Greedy, None).unwrap();
         assert_eq!(out[0].tokens, vec![7, 8]);
+    }
+
+    #[test]
+    fn run_batch_records_step_occupancy() {
+        use crate::coordinator::metrics::ServerMetrics;
+        let exec = MockExecutor::new(4, 16, 32);
+        let m = ServerMetrics::new();
+        let batch = vec![req(1, vec![5], 3), req(2, vec![9], 1)];
+        run_batch(&exec, &batch, Sampling::Greedy, Some(&m)).unwrap();
+        // 3 executor steps: both sequences live at step 0, only the
+        // longer request still generating at steps 1-2.
+        assert_eq!(m.snapshot().occupancy_hist, vec![(1, 2), (2, 1)]);
     }
 
     #[test]
     fn topk_is_deterministic_and_valid() {
         let exec = MockExecutor::new(1, 8, 32);
         let batch = vec![req(7, vec![3], 6)];
-        let a = run_batch(&exec, &batch, Sampling::TopK(3)).unwrap();
-        let b = run_batch(&exec, &batch, Sampling::TopK(3)).unwrap();
+        let a = run_batch(&exec, &batch, Sampling::TopK(3), None).unwrap();
+        let b = run_batch(&exec, &batch, Sampling::TopK(3), None).unwrap();
         assert_eq!(a[0].tokens, b[0].tokens);
         assert!(a[0].tokens.iter().all(|&t| t < 32));
     }
@@ -218,7 +243,7 @@ mod tests {
                     req(i as u64, prompt, 1 + rng.index(6))
                 })
                 .collect();
-            let out = run_batch(&exec, &batch, Sampling::Greedy).map_err(|e| e.to_string())?;
+            let out = run_batch(&exec, &batch, Sampling::Greedy, None).map_err(|e| e.to_string())?;
             ensure(out.len() == n, || "response count".into())?;
             for (r, q) in out.iter().zip(&batch) {
                 ensure(r.id == q.id, || "id mismatch".into())?;

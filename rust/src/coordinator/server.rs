@@ -60,7 +60,7 @@ impl Server {
             .name("lobcq-worker".into())
             .spawn(move || {
                 while let Some(batch) = b.next_batch() {
-                    let result = run_batch(&exec, &batch, sampling);
+                    let result = run_batch(&exec, &batch, sampling, Some(&m));
                     let mut guard = r.lock().unwrap();
                     match result {
                         Ok(responses) => {
@@ -107,7 +107,7 @@ impl Server {
         let worker = std::thread::Builder::new()
             .name("lobcq-decode-worker".into())
             .spawn(move || {
-                run_continuous(&mut engine, &b, sampling, |id, result| {
+                run_continuous(&mut engine, &b, sampling, Some(&m), |id, result| {
                     if let Ok(resp) = &result {
                         m.record_response(resp);
                     }
@@ -225,6 +225,8 @@ mod tests {
         }
         let snap = s.metrics.snapshot();
         assert_eq!(snap.requests, 9);
+        assert!(snap.mean_occupancy >= 1.0, "no decode-step occupancy recorded: {}", snap.mean_occupancy);
+        assert!(!snap.occupancy_hist.is_empty());
         match Arc::try_unwrap(s) {
             Ok(s) => s.shutdown(),
             Err(_) => panic!("server still referenced"),

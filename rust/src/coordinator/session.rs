@@ -2,14 +2,19 @@
 //! [`StepExecutor`](super::executor::StepExecutor). A [`DecodeEngine`]
 //! owns per-lane sequence state (for the CPU engine, a slot in the paged
 //! KV cache), so generating a token is **O(current length)** — prefill
-//! once, then one `decode` call per token — instead of the fixed-shape
+//! once, then one decode call per token — instead of the fixed-shape
 //! executor's full-window re-score. Lanes are released the moment a
 //! request finishes, which is what the continuous batcher exploits to
 //! backfill admitted requests mid-batch.
+//!
+//! The scheduler's hot call is [`DecodeEngine::decode_batch`]: one
+//! **fused** forward advancing every live lane by one token (single
+//! activation-quantization pass, each projection GEMM launched once per
+//! step), with per-lane results so one bad request fails alone.
 
 use crate::eval::Scheme;
-use crate::kvcache::{KvLayout, KvQuantizer, KvStore, PagedKvCache, SlotId};
-use crate::model::decode::{decode_step, prefill, DecodeScratch};
+use crate::kvcache::{KvLayout, KvQuantizer, KvStats, KvStore, PagedKvCache, SlotId};
+use crate::model::decode::{decode_step, decode_step_batch, prefill, validate_decode_lane, DecodeScratch};
 use crate::model::{ModelConfig, Weights};
 use crate::quant::pipeline::{QuantPipeline, QuantPool};
 
@@ -27,8 +32,24 @@ pub trait DecodeEngine: Send {
     fn prefill(&mut self, prompt: &[u32]) -> anyhow::Result<(usize, Vec<f32>)>;
     /// Feed `token` to `lane`; returns the next position's logits.
     fn decode(&mut self, lane: usize, token: u32) -> anyhow::Result<Vec<f32>>;
+    /// Advance **every** listed lane by one token in one scheduler step,
+    /// returning one result per lane (order-aligned with `lanes`) so an
+    /// errored lane fails alone. Engines with a fused forward
+    /// ([`DecodeSession`]) override this to run a **single batched
+    /// step** — one activation-quantization pass, each projection GEMM
+    /// once per step instead of once per lane. The default is the
+    /// serial per-lane loop (same results, lane by lane).
+    fn decode_batch(&mut self, lanes: &[usize], tokens: &[u32]) -> Vec<anyhow::Result<Vec<f32>>> {
+        assert_eq!(lanes.len(), tokens.len(), "lanes/tokens length mismatch");
+        lanes.iter().zip(tokens).map(|(&l, &t)| self.decode(l, t)).collect()
+    }
     /// Free a lane (idempotent).
     fn release(&mut self, lane: usize);
+    /// KV-cache occupancy snapshot for the serving metrics (engines
+    /// without a paged cache return `None`).
+    fn kv_stats(&self) -> Option<KvStats> {
+        None
+    }
 }
 
 /// KV-cache configuration for [`DecodeSession`].
@@ -106,6 +127,7 @@ impl DecodeSession {
     pub fn cache(&self) -> &PagedKvCache {
         &self.cache
     }
+
 }
 
 impl DecodeEngine for DecodeSession {
@@ -137,8 +159,65 @@ impl DecodeEngine for DecodeSession {
         decode_step(&self.cfg, &self.weights, &mut self.cache, lane, token, self.act.as_ref(), &mut self.scratch)
     }
 
+    /// The serving hot path: one fused forward over every live lane.
+    /// Lane-local failures (dead/full lane, bad token, duplicate) are
+    /// screened out **per lane** first, so the fused step runs over the
+    /// healthy subset and a bad request never poisons its step-mates.
+    fn decode_batch(&mut self, lanes: &[usize], tokens: &[u32]) -> Vec<anyhow::Result<Vec<f32>>> {
+        assert_eq!(lanes.len(), tokens.len(), "lanes/tokens length mismatch");
+        let mut out: Vec<anyhow::Result<Vec<f32>>> = Vec::with_capacity(lanes.len());
+        let mut valid: Vec<usize> = Vec::new(); // indices into `lanes`
+        // Screen each lane with the SAME check the fused step enforces
+        // (one source of truth — `model::decode::validate_decode_lane`),
+        // so a lane that would fail the batched call fails alone here.
+        for (i, &tok) in tokens.iter().enumerate() {
+            match validate_decode_lane(&self.cfg, &self.cache, lanes, i, tok) {
+                Ok(_pos) => {
+                    valid.push(i);
+                    out.push(Ok(Vec::new())); // placeholder, filled below
+                }
+                Err(e) => out.push(Err(e)),
+            }
+        }
+        if valid.is_empty() {
+            return out;
+        }
+        let slots: Vec<SlotId> = valid.iter().map(|&i| lanes[i]).collect();
+        let toks: Vec<u32> = valid.iter().map(|&i| tokens[i]).collect();
+        let fused = decode_step_batch(
+            &self.cfg,
+            &self.weights,
+            &mut self.cache,
+            &slots,
+            &toks,
+            self.act.as_ref(),
+            &mut self.scratch,
+        );
+        match fused {
+            Ok(logits) => {
+                let v = self.cfg.vocab;
+                for (j, &i) in valid.iter().enumerate() {
+                    out[i] = Ok(logits[j * v..(j + 1) * v].to_vec());
+                }
+            }
+            Err(e) => {
+                // Post-screening the fused step can only fail on an
+                // engine-level fault; surface it on every participant
+                // (screened-out lanes keep their own errors).
+                for &i in &valid {
+                    out[i] = Err(anyhow::anyhow!("batched decode failed: {e}"));
+                }
+            }
+        }
+        out
+    }
+
     fn release(&mut self, lane: usize) {
         self.cache.free_slot(lane);
+    }
+
+    fn kv_stats(&self) -> Option<KvStats> {
+        Some(self.cache.stats())
     }
 }
 
@@ -155,6 +234,10 @@ pub struct MockDecodeEngine {
     pub prefills: usize,
     pub decodes: usize,
     pub releases: usize,
+    /// Fused `decode_batch` calls, and the widest one seen — scheduler
+    /// tests assert the loop steps lanes in one call, not one-by-one.
+    pub batch_calls: usize,
+    pub max_batch_lanes: usize,
     /// Token the engine should fail decode on (error-path tests).
     pub poison_token: Option<u32>,
 }
@@ -170,6 +253,8 @@ impl MockDecodeEngine {
             prefills: 0,
             decodes: 0,
             releases: 0,
+            batch_calls: 0,
+            max_batch_lanes: 0,
             poison_token: None,
         }
     }
@@ -214,6 +299,16 @@ impl DecodeEngine for MockDecodeEngine {
         }
         self.decodes += 1;
         Ok(self.successor_logits(token))
+    }
+
+    /// Records the fused-call shape (one call per scheduler step) while
+    /// keeping the default's per-lane isolation semantics: a poisoned
+    /// lane errors alone, its step-mates still decode.
+    fn decode_batch(&mut self, lanes: &[usize], tokens: &[u32]) -> Vec<anyhow::Result<Vec<f32>>> {
+        assert_eq!(lanes.len(), tokens.len(), "lanes/tokens length mismatch");
+        self.batch_calls += 1;
+        self.max_batch_lanes = self.max_batch_lanes.max(lanes.len());
+        lanes.iter().zip(tokens).map(|(&l, &t)| self.decode(l, t)).collect()
     }
 
     fn release(&mut self, lane: usize) {
@@ -274,6 +369,82 @@ mod tests {
         let out = s.decode(lane, 9).unwrap();
         assert!(out.iter().all(|x| x.is_finite()));
         assert!(s.cache().bits_per_scalar() <= 8.0);
+    }
+
+    #[test]
+    fn batched_decode_matches_per_lane_decode_bitwise() {
+        // Twin sessions over the same weights/scheme: one stepped lane
+        // by lane, one through the fused decode_batch. Logits must agree
+        // to the bit, and the fused step must resolve each projection
+        // GEMM once (not once per lane).
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 54);
+        let scheme = crate::eval::scheme::mx4();
+        let mk = || {
+            DecodeSession::new(cfg.clone(), &w, &scheme, QuantPool::serial(), 3, KvCacheOpts::default())
+                .unwrap()
+        };
+        let mut serial = mk();
+        let mut batched = mk();
+        let prompts: [&[u32]; 3] = [&[1, 2, 3], &[4], &[5, 6]];
+        let mut lanes_s = Vec::new();
+        let mut lanes_b = Vec::new();
+        for p in prompts {
+            lanes_s.push(serial.prefill(p).unwrap().0);
+            lanes_b.push(batched.prefill(p).unwrap().0);
+        }
+        for step in 0..3u32 {
+            let tokens: Vec<u32> = (0..3).map(|i| (step * 5 + i + 7) % 40).collect();
+            let before = batched.weights.gemm_resolutions();
+            let fused = batched.decode_batch(&lanes_b, &tokens);
+            assert_eq!(
+                batched.weights.gemm_resolutions() - before,
+                cfg.n_layers * 4,
+                "fused step launched per-lane GEMMs"
+            );
+            for (i, r) in fused.iter().enumerate() {
+                let lone = serial.decode(lanes_s[i], tokens[i]).unwrap();
+                let got = r.as_ref().unwrap();
+                for (c, (&g, &want)) in got.iter().zip(&lone).enumerate() {
+                    assert_eq!(g.to_bits(), want.to_bits(), "step {step} lane {i} col {c}");
+                }
+            }
+        }
+        let stats = batched.kv_stats().unwrap();
+        assert_eq!(stats.live_slots, 3);
+        assert!(stats.pages_in_use > 0 && stats.pages_peak >= stats.pages_in_use);
+    }
+
+    #[test]
+    fn batched_decode_isolates_bad_lanes() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 55);
+        let mut s =
+            DecodeSession::new(cfg.clone(), &w, &Scheme::Bf16, QuantPool::serial(), 3, KvCacheOpts::default())
+                .unwrap();
+        let (a, _) = s.prefill(&[1, 2]).unwrap();
+        let (b, _) = s.prefill(&[3]).unwrap();
+        s.release(b); // dead lane in the middle of the step
+        let out = s.decode_batch(&[a, b, 99], &[5, 6, 7]);
+        assert_eq!(out.len(), 3);
+        assert!(out[0].is_ok(), "healthy lane dragged down: {:?}", out[0].as_ref().err());
+        assert!(out[1].is_err(), "dead lane decoded");
+        assert!(out[2].is_err(), "out-of-range lane decoded");
+        assert_eq!(out[0].as_ref().unwrap().len(), cfg.vocab);
+        // The healthy lane advanced exactly one position.
+        assert_eq!(s.cache().seq_len(a), 3);
+    }
+
+    #[test]
+    fn mock_decode_batch_records_and_isolates() {
+        let mut e = MockDecodeEngine::new(3, 16);
+        e.poison_token = Some(9);
+        let (a, _) = e.prefill(&[1]).unwrap();
+        let (b, _) = e.prefill(&[2]).unwrap();
+        let out = e.decode_batch(&[a, b], &[3, 9]);
+        assert_eq!(e.batch_calls, 1);
+        assert_eq!(e.max_batch_lanes, 2);
+        assert!(out[0].is_ok() && out[1].is_err(), "poison not isolated");
     }
 
     #[test]

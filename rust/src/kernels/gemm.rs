@@ -234,6 +234,24 @@ fn gemm_block<P: PanelProvider + ?Sized>(
 /// `QuantLinear::qgemm` — flat-slice API so the attention loops can reuse
 /// caller-owned buffers without allocating.
 pub fn gemm_into_flat<P: PanelProvider + ?Sized>(a: &[f32], m: usize, k: usize, p: &P, out: &mut [f32]) {
+    let mut scratch = Vec::new();
+    gemm_into_flat_with(a, m, k, p, out, &mut scratch);
+}
+
+/// [`gemm_into_flat`] with a caller-owned panel-scratch buffer: the
+/// serial path (every decode-shaped product) reuses `scratch` instead of
+/// allocating a `KC × NR` panel buffer per call, which is what makes the
+/// batched decode loop allocation-free in steady state. Problems above
+/// the parallel threshold still fan out across threads (worker stripes
+/// are per-call); results are bitwise identical either way.
+pub fn gemm_into_flat_with<P: PanelProvider + ?Sized>(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    p: &P,
+    out: &mut [f32],
+    scratch: &mut Vec<f32>,
+) {
     assert_eq!(a.len(), m * k, "A is {m} x {k} but has {} elements", a.len());
     assert_eq!(k, p.k(), "inner dim mismatch: A cols {k} vs B rows {}", p.k());
     let n = p.n();
@@ -245,8 +263,8 @@ pub fn gemm_into_flat<P: PanelProvider + ?Sized>(a: &[f32], m: usize, k: usize, 
     let n_panels = n.div_ceil(NR);
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     if threads <= 1 || n_panels <= 1 || m * n * k < PAR_THRESHOLD {
-        let mut scratch = vec![0.0f32; KC * NR];
-        gemm_block(a, k, m, p, 0..n_panels, out, n, &mut scratch);
+        scratch.resize(KC * NR, 0.0);
+        gemm_block(a, k, m, p, 0..n_panels, out, n, scratch);
         return;
     }
     // Column-parallel: each worker owns a contiguous panel range and a
@@ -391,6 +409,26 @@ mod tests {
         for (x, y) in par.data.iter().zip(&serial) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    #[test]
+    fn scratch_threaded_entry_matches_and_reuses_capacity() {
+        let mut rng = Pcg32::seeded(0x6E7B);
+        let (m, k, n) = (4, 48, 33);
+        let a = rand_tensor(&mut rng, &[m, k]);
+        let b = rand_tensor(&mut rng, &[k, n]);
+        let pb = PackedB::pack(&b);
+        let want = gemm_packed(&a, &pb);
+        let mut out = vec![0.0f32; m * n];
+        let mut scratch = Vec::new();
+        gemm_into_flat_with(&a.data, m, k, &pb, &mut out, &mut scratch);
+        for (x, y) in out.iter().zip(&want.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // Second call must not grow the scratch buffer again.
+        let cap = scratch.capacity();
+        gemm_into_flat_with(&a.data, m, k, &pb, &mut out, &mut scratch);
+        assert_eq!(scratch.capacity(), cap, "panel scratch reallocated on reuse");
     }
 
     #[test]

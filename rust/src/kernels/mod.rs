@@ -20,5 +20,5 @@
 pub mod gemm;
 pub mod qgemm;
 
-pub use gemm::{gemm, gemm_into_flat, gemm_packed, PackedB, PanelProvider, KC, MR, NR};
+pub use gemm::{gemm, gemm_into_flat, gemm_into_flat_with, gemm_packed, PackedB, PanelProvider, KC, MR, NR};
 pub use qgemm::QuantLinear;

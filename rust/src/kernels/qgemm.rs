@@ -132,6 +132,13 @@ impl QuantLinear {
         gemm_into_flat(&x.data, m, k, self, &mut out);
         Tensor::new(&[m, self.n], out)
     }
+
+    /// Flat-slice [`qgemm`](Self::qgemm) with caller-owned output and
+    /// panel-decode scratch — the batched decode loop's entry point
+    /// (`out` must hold `m * n` elements). Bitwise identical to `qgemm`.
+    pub fn qgemm_into(&self, x: &[f32], m: usize, out: &mut [f32], scratch: &mut Vec<f32>) {
+        crate::kernels::gemm::gemm_into_flat_with(x, m, self.k, self, out, scratch);
+    }
 }
 
 impl PanelProvider for QuantLinear {

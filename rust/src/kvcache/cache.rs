@@ -56,6 +56,22 @@ impl KvLayout {
     }
 }
 
+/// Occupancy snapshot of the paged cache: pages in use, their
+/// high-water mark, and cached-state bytes — the numbers the serving
+/// metrics surface so capacity planning can see the page working set
+/// (`coordinator::metrics` records one per decode step).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvStats {
+    pub live_slots: usize,
+    pub pages_in_use: usize,
+    /// High-water mark of `pages_in_use` over the cache's lifetime.
+    pub pages_peak: usize,
+    /// Pages ever allocated (the pool never shrinks).
+    pub pages_capacity: usize,
+    pub state_bytes: usize,
+    pub peak_bytes: usize,
+}
+
 /// Storage mode for cached K/V.
 pub enum KvStore {
     /// Exact f32 (32 bits/scalar) — the parity reference.
@@ -81,6 +97,12 @@ pub struct PagedKvCache {
     pool: PagePool,
     slots: Vec<SlotState>,
     free_slots: Vec<SlotId>,
+    /// Running total of live-page state bytes, maintained incrementally
+    /// on append/claim/free so [`state_bytes`](Self::state_bytes) — and
+    /// the per-step metrics snapshot built on it — is O(1) instead of a
+    /// walk over every page of every live slot. Debug builds cross-check
+    /// it against the full walk.
+    cached_bytes: usize,
     peak_bytes: usize,
 }
 
@@ -102,7 +124,7 @@ impl PagedKvCache {
         let pool = PagePool::new(layout.page_tokens, layout.head_dim, quant.is_some());
         let slots = (0..layout.max_slots).map(|_| SlotState::default()).collect();
         let free_slots = (0..layout.max_slots).rev().collect();
-        Ok(PagedKvCache { layout, quant, pool, slots, free_slots, peak_bytes: 0 })
+        Ok(PagedKvCache { layout, quant, pool, slots, free_slots, cached_bytes: 0, peak_bytes: 0 })
     }
 
     pub fn layout(&self) -> &KvLayout {
@@ -158,12 +180,20 @@ impl PagedKvCache {
         st.live = false;
         for layer_pages in st.pages.iter() {
             for &p in layer_pages {
+                self.cached_bytes -= self.pool.get(p).state_bytes();
                 self.pool.free(p);
             }
         }
         st.pages.clear();
         st.lens.clear();
         self.free_slots.push(slot);
+    }
+
+    /// Whether `slot` currently holds a live sequence (out-of-range ids
+    /// are simply not live) — the graceful pre-check batched callers use
+    /// where the accessors below assert.
+    pub fn is_live(&self, slot: SlotId) -> bool {
+        self.slots.get(slot).map(|s| s.live).unwrap_or(false)
     }
 
     /// Tokens cached for `slot` (valid between whole tokens; during a
@@ -195,6 +225,9 @@ impl PagedKvCache {
             // Page boundary: claim one fresh page per head.
             for _ in 0..nh {
                 let id = self.pool.alloc();
+                // f32 pages carry their full pre-sized storage from the
+                // moment they are claimed; encoded pages start at 0.
+                self.cached_bytes += self.pool.get(id).state_bytes();
                 self.slots[slot].pages[layer].push(id);
             }
         }
@@ -202,10 +235,56 @@ impl PagedKvCache {
         for head in 0..nh {
             let id = self.slots[slot].pages[layer][page_base + head];
             let o = head * hd;
-            self.pool.get_mut(id).append(pt, hd, self.quant.as_ref(), &k_row[o..o + hd], &v_row[o..o + hd]);
+            let quant = self.quant.as_ref();
+            let page = self.pool.get_mut(id);
+            let before = page.state_bytes();
+            page.append(pt, hd, quant, &k_row[o..o + hd], &v_row[o..o + hd]);
+            self.cached_bytes += page.state_bytes() - before;
         }
         self.slots[slot].lens[layer] = pos + 1;
         Ok(pos + 1)
+    }
+
+    /// Multi-slot append for one fused decode step: row `i` of the
+    /// stacked row-major `rows` buffer (`stride` floats per row) carries
+    /// lane `i`'s K head vectors at `[k_off, k_off + d)` and V at
+    /// `[v_off, v_off + d)`, `d = n_heads * head_dim` — exactly the
+    /// layout of a batched QKV projection output, so the decode loop
+    /// appends straight from the GEMM result with no staging copy.
+    /// Validates **every** lane (live, distinct, within capacity, row in
+    /// bounds) before mutating anything: a failed call leaves the cache
+    /// untouched, which is what lets the batched engine keep per-lane
+    /// error isolation.
+    pub fn append_batch(
+        &mut self,
+        slots: &[SlotId],
+        layer: usize,
+        rows: &[f32],
+        stride: usize,
+        k_off: usize,
+        v_off: usize,
+    ) -> anyhow::Result<()> {
+        let d = self.layout.n_heads * self.layout.head_dim;
+        anyhow::ensure!(layer < self.layout.n_layers, "layer {layer} out of range");
+        anyhow::ensure!(k_off + d <= stride && v_off + d <= stride, "K/V offsets past row stride {stride}");
+        anyhow::ensure!(rows.len() >= slots.len() * stride, "rows buffer shorter than {} lanes", slots.len());
+        for (i, &slot) in slots.iter().enumerate() {
+            anyhow::ensure!(self.is_live(slot), "append to dead slot {slot}");
+            anyhow::ensure!(
+                self.slots[slot].lens[layer] < self.layout.max_tokens,
+                "slot {slot} full ({} tokens)",
+                self.layout.max_tokens
+            );
+            anyhow::ensure!(
+                !slots[..i].contains(&slot),
+                "slot {slot} appears twice in one batched append"
+            );
+        }
+        for (i, &slot) in slots.iter().enumerate() {
+            let row = &rows[i * stride..(i + 1) * stride];
+            self.append(slot, layer, &row[k_off..k_off + d], &row[v_off..v_off + d])?;
+        }
+        Ok(())
     }
 
     /// Decode the full cached history of one (slot, layer, head, plane)
@@ -232,6 +311,40 @@ impl PagedKvCache {
         len
     }
 
+    /// Gather **both planes** of one (slot, layer, head) in a single
+    /// page-table walk: `k_out` and `v_out` are resized to the
+    /// contiguous `[len, head_dim]` history. Returns `len`. Bitwise
+    /// identical to two [`gather`](Self::gather) calls — the batched
+    /// decode path uses it to halve the page lookups per head per step.
+    pub fn gather_kv(
+        &self,
+        slot: SlotId,
+        layer: usize,
+        head: usize,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+    ) -> usize {
+        let (nh, hd, pt) = (self.layout.n_heads, self.layout.head_dim, self.layout.page_tokens);
+        let st = &self.slots[slot];
+        assert!(st.live, "gather from dead slot {slot}");
+        let len = st.lens[layer];
+        k_out.resize(len * hd, 0.0);
+        v_out.resize(len * hd, 0.0);
+        let mut done = 0usize;
+        let mut page_idx = 0usize;
+        while done < len {
+            let id = st.pages[layer][page_idx * nh + head];
+            let page = self.pool.get(id);
+            let take = page.filled.min(len - done);
+            debug_assert_eq!(take, page.filled.min(pt));
+            page.gather(hd, self.quant.as_ref(), Plane::K, &mut k_out[done * hd..(done + take) * hd]);
+            page.gather(hd, self.quant.as_ref(), Plane::V, &mut v_out[done * hd..(done + take) * hd]);
+            done += take;
+            page_idx += 1;
+        }
+        len
+    }
+
     /// Page ids owned by a slot (aliasing introspection for tests and
     /// debugging; order is layer-major then page-major then head).
     pub fn page_ids(&self, slot: SlotId) -> Vec<PageId> {
@@ -240,8 +353,24 @@ impl PagedKvCache {
         st.pages.iter().flat_map(|ps| ps.iter().copied()).collect()
     }
 
-    /// Actual bytes of cached state across all live pages.
+    /// Actual bytes of cached state across all live pages — O(1), read
+    /// from the incrementally-maintained counter (the serving metrics
+    /// sample this once per decode step). Debug builds cross-check it
+    /// against the full page walk.
     pub fn state_bytes(&self) -> usize {
+        debug_assert_eq!(
+            self.cached_bytes,
+            self.walk_state_bytes(),
+            "incremental byte counter drifted from the page walk"
+        );
+        self.cached_bytes
+    }
+
+    /// Reference implementation of [`state_bytes`](Self::state_bytes):
+    /// the exhaustive live-page walk the counter is validated against.
+    /// (Unreferenced in release builds, where the debug assert melts.)
+    #[allow(dead_code)]
+    fn walk_state_bytes(&self) -> usize {
         self.slots
             .iter()
             .filter(|s| s.live)
@@ -261,6 +390,19 @@ impl PagedKvCache {
     /// Pages ever allocated by the underlying pool.
     pub fn capacity_pages(&self) -> usize {
         self.pool.capacity_pages()
+    }
+
+    /// Occupancy snapshot (pages in use / high-water mark / bytes) for
+    /// the serving metrics.
+    pub fn stats(&self) -> KvStats {
+        KvStats {
+            live_slots: self.live_slot_count(),
+            pages_in_use: self.pool.live_pages(),
+            pages_peak: self.pool.peak_live_pages(),
+            pages_capacity: self.pool.capacity_pages(),
+            state_bytes: self.state_bytes(),
+            peak_bytes: self.peak_bytes(),
+        }
     }
 }
 
@@ -368,6 +510,88 @@ mod tests {
         let mut out = Vec::new();
         cache.gather(b, 0, 0, Plane::K, &mut out);
         assert_eq!(&out[..], &kb[..16], "live slot b corrupted by reuse (head 0 = first head_dim of the row)");
+    }
+
+    #[test]
+    fn append_batch_matches_serial_appends_and_is_atomic() {
+        let lay = layout(4);
+        let (nh, hd) = (lay.n_heads, lay.head_dim);
+        let d = nh * hd;
+        let stride = 3 * d; // a (lanes, 3d) QKV row: Q | K | V
+        let mut batched = PagedKvCache::new(lay.clone(), KvStore::F32).unwrap();
+        let mut serial = PagedKvCache::new(lay, KvStore::F32).unwrap();
+        let sb: Vec<SlotId> = (0..2).map(|_| batched.alloc_slot().unwrap()).collect();
+        let ss: Vec<SlotId> = (0..2).map(|_| serial.alloc_slot().unwrap()).collect();
+        let mut rng = Pcg32::seeded(0x9A71);
+        for _tok in 0..5 {
+            let rows = llm_like_sample(&mut rng, 2 * stride, 0.05, 4.0);
+            for layer in 0..2 {
+                batched.append_batch(&sb, layer, &rows, stride, d, 2 * d).unwrap();
+                for (i, &slot) in ss.iter().enumerate() {
+                    let row = &rows[i * stride..(i + 1) * stride];
+                    serial.append(slot, layer, &row[d..2 * d], &row[2 * d..3 * d]).unwrap();
+                }
+            }
+        }
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        let (mut k2, mut v2) = (Vec::new(), Vec::new());
+        for lane in 0..2 {
+            for layer in 0..2 {
+                for head in 0..nh {
+                    // gather_kv == two gathers, and batched == serial.
+                    let n = batched.gather_kv(sb[lane], layer, head, &mut a, &mut b);
+                    assert_eq!(n, 5);
+                    serial.gather(ss[lane], layer, head, Plane::K, &mut k2);
+                    serial.gather(ss[lane], layer, head, Plane::V, &mut v2);
+                    assert_eq!(a, k2, "K mismatch lane {lane} layer {layer} head {head}");
+                    assert_eq!(b, v2, "V mismatch lane {lane} layer {layer} head {head}");
+                }
+            }
+        }
+        // Atomicity: one dead lane fails the whole call before mutation.
+        let rows = llm_like_sample(&mut rng, 2 * stride, 0.05, 4.0);
+        batched.free_slot(sb[1]);
+        let before = batched.seq_len(sb[0]);
+        assert!(batched.append_batch(&sb, 0, &rows, stride, d, 2 * d).is_err());
+        assert_eq!(batched.seq_len(sb[0]), before, "failed batched append mutated a live lane");
+        // Duplicate slots rejected.
+        assert!(batched.append_batch(&[sb[0], sb[0]], 0, &rows, stride, d, 2 * d).is_err());
+    }
+
+    #[test]
+    fn stats_report_page_occupancy_and_peak() {
+        let lay = layout(2);
+        let d = lay.n_heads * lay.head_dim;
+        let mut cache = PagedKvCache::new(lay, KvStore::F32).unwrap();
+        assert_eq!(cache.stats(), KvStats::default());
+        let s = cache.alloc_slot().unwrap();
+        for _ in 0..3 {
+            for layer in 0..2 {
+                cache.append(s, layer, &vec![1.0; d], &vec![2.0; d]).unwrap();
+            }
+        }
+        let st = cache.stats();
+        // 3 tokens at 2 tokens/page = 2 pages per (layer, head) = 8.
+        assert_eq!(st.pages_in_use, 8);
+        assert_eq!(st.pages_peak, 8);
+        assert_eq!(st.live_slots, 1);
+        assert!(st.state_bytes > 0 && st.peak_bytes >= st.state_bytes);
+        cache.free_slot(s);
+        let st = cache.stats();
+        assert_eq!(st.pages_in_use, 0);
+        assert_eq!(st.pages_peak, 8, "peak lost on release");
+        assert_eq!(st.pages_capacity, 8);
+    }
+
+    #[test]
+    fn is_live_is_graceful_on_any_id() {
+        let mut cache = PagedKvCache::new(layout(4), KvStore::F32).unwrap();
+        assert!(!cache.is_live(0));
+        assert!(!cache.is_live(999), "out-of-range id must not panic");
+        let s = cache.alloc_slot().unwrap();
+        assert!(cache.is_live(s));
+        cache.free_slot(s);
+        assert!(!cache.is_live(s));
     }
 
     #[test]

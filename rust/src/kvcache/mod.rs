@@ -13,6 +13,6 @@ pub mod cache;
 pub mod pool;
 pub mod quant;
 
-pub use cache::{KvLayout, KvStore, PagedKvCache, SlotId};
+pub use cache::{KvLayout, KvStats, KvStore, PagedKvCache, SlotId};
 pub use pool::{Page, PageId, PagePool, Plane};
 pub use quant::{kv_cfg, KvQuantizer};

@@ -118,12 +118,14 @@ pub struct PagePool {
     page_tokens: usize,
     head_dim: usize,
     encoded: bool,
+    /// High-water mark of pages simultaneously owned by live slots.
+    peak_live: usize,
 }
 
 impl PagePool {
     pub fn new(page_tokens: usize, head_dim: usize, encoded: bool) -> PagePool {
         assert!(page_tokens >= 1 && head_dim >= 1);
-        PagePool { pages: Vec::new(), free: Vec::new(), page_tokens, head_dim, encoded }
+        PagePool { pages: Vec::new(), free: Vec::new(), page_tokens, head_dim, encoded, peak_live: 0 }
     }
 
     pub fn page_tokens(&self) -> usize {
@@ -132,18 +134,23 @@ impl PagePool {
 
     /// Allocate a page, reusing a freed one when available.
     pub fn alloc(&mut self) -> PageId {
-        if let Some(id) = self.free.pop() {
+        let id = if let Some(id) = self.free.pop() {
             debug_assert_eq!(self.pages[id as usize].filled, 0, "freed page not cleared");
-            return id;
-        }
-        let store = if self.encoded {
-            PageStore::Encoded { k: EncPlane::default(), v: EncPlane::default() }
+            id
         } else {
-            let n = self.page_tokens * self.head_dim;
-            PageStore::F32 { k: vec![0.0; n], v: vec![0.0; n] }
+            let store = if self.encoded {
+                PageStore::Encoded { k: EncPlane::default(), v: EncPlane::default() }
+            } else {
+                let n = self.page_tokens * self.head_dim;
+                PageStore::F32 { k: vec![0.0; n], v: vec![0.0; n] }
+            };
+            self.pages.push(Page { store, filled: 0 });
+            (self.pages.len() - 1) as PageId
         };
-        self.pages.push(Page { store, filled: 0 });
-        (self.pages.len() - 1) as PageId
+        // Live count only grows inside alloc, so sampling here keeps the
+        // high-water mark exact without a counter on the free path.
+        self.peak_live = self.peak_live.max(self.live_pages());
+        id
     }
 
     /// Return a page to the free list (contents cleared, storage kept).
@@ -178,6 +185,12 @@ impl PagePool {
     pub fn live_pages(&self) -> usize {
         self.pages.len() - self.free.len()
     }
+
+    /// High-water mark of [`live_pages`](Self::live_pages) — the page
+    /// working set a deployment must provision for.
+    pub fn peak_live_pages(&self) -> usize {
+        self.peak_live
+    }
 }
 
 #[cfg(test)]
@@ -196,6 +209,20 @@ mod tests {
         let c = pool.alloc();
         assert_eq!(c, a, "free list not reused");
         assert_eq!(pool.capacity_pages(), 2, "pool grew despite free page");
+    }
+
+    #[test]
+    fn peak_live_pages_tracks_high_water_not_current() {
+        let mut pool = PagePool::new(4, 8, false);
+        let a = pool.alloc();
+        let b = pool.alloc();
+        assert_eq!(pool.peak_live_pages(), 2);
+        pool.free(a);
+        pool.free(b);
+        assert_eq!(pool.live_pages(), 0);
+        assert_eq!(pool.peak_live_pages(), 2, "peak forgot the high-water mark");
+        let _ = pool.alloc();
+        assert_eq!(pool.peak_live_pages(), 2, "peak moved without a new high");
     }
 
     #[test]

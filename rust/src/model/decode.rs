@@ -1,7 +1,9 @@
 //! Incremental forward: `prefill` fills the KV cache for a prompt,
-//! `decode_step` runs **one token** against the cached history — O(len)
-//! attention work per token instead of the full forward's O(t²)
-//! re-score, and only the frontier row of logits is ever materialized.
+//! `decode_step` runs **one token** against the cached history, and
+//! `decode_step_batch` runs **one fused forward for every live lane** of
+//! a scheduler step — O(len) attention work per token instead of the
+//! full forward's O(t²) re-score, and only the frontier rows of logits
+//! are ever materialized.
 //!
 //! Numerics: with an f32 (KV16) cache the pair (prefill, decode_step)
 //! reproduces [`forward`](super::forward::forward) — every sub-step is
@@ -13,33 +15,115 @@
 //! `kernels::gemm` uses). The decode-parity suite pins this. With a
 //! BCQ-encoded (KV4) cache the gathered history is the quantized
 //! decode of each vector — the KV4-vs-KV16 ablation in EXPERIMENTS.md.
+//!
+//! Batching (DESIGN.md §Batched decode): `decode_step_batch` stacks the
+//! per-lane frontier tokens into a `(lanes, d)` activation matrix and
+//! runs each projection / FFN / LM-head GEMM **once per step** with
+//! `M = lanes`, so the packed (or LO-BCQ-encoded) B panel is streamed
+//! once per step instead of once per lane — the weight-traffic
+//! amortization that makes W4A4 decode throughput scale with batch
+//! size. Only attention splits per lane, against each lane's own paged
+//! KV history at its own (ragged) position. Activations are quantized
+//! **per lane row**, and GEMM rows accumulate independently in the
+//! blocked kernel, so one batched step is **bit-identical** to running
+//! `decode_step` once per lane — a lane's numerics never depend on
+//! which other lanes are co-scheduled (`tests/decode_parity.rs`).
 
-use crate::kernels::KC;
-use crate::kvcache::{PagedKvCache, Plane, SlotId};
+use crate::kernels::{self, KC};
+use crate::kvcache::{PagedKvCache, SlotId};
 use crate::model::config::ModelConfig;
-use crate::model::forward::{gelu, layer_norm, qmatmul, softmax_rows, ActQuant};
+use crate::model::forward::{gelu, layer_norm_flat, qmatmul_rows_into, softmax_rows, ActQuant};
 use crate::model::weights::Weights;
 use crate::tensor::Tensor;
 
-/// Reusable state for [`decode_step`]: gathered K/V history, score row,
-/// context accumulators, and the pre-rendered per-layer weight names
+/// Reusable state for [`decode_step`] / [`decode_step_batch`]: every
+/// per-token temporary of the decode hot loop — the stacked activation
+/// matrices (residual stream, layer-norm copy, QKV, attention output,
+/// projection, FFN hidden, logits), the activation-quantization staging
+/// buffer, the GEMM panel scratch (the encoded path's LUT-decode
+/// target), the gathered K/V history with score/context accumulators,
+/// per-lane positions, and the pre-rendered per-layer weight names
 /// (decode runs per token, so the `format!` allocations are hoisted out
-/// of the hot loop). A session that keeps one across steps performs no
-/// per-step attention or name allocations once the buffers reach the
-/// sequence's working size.
+/// of the hot loop). A session that keeps one across steps performs
+/// **no steady-state allocations** once the buffers reach the working
+/// size — [`footprint`](Self::footprint) exposes the total capacity so
+/// the zero-alloc property test can pin that.
 #[derive(Debug, Default)]
 pub struct DecodeScratch {
+    /// Residual stream, `(lanes, d)`.
+    x: Vec<f32>,
+    /// Layer-norm input copy, `(lanes, d)`.
+    h: Vec<f32>,
+    /// QKV projection output, `(lanes, 3d)`.
+    qkv: Vec<f32>,
+    /// Attention output, `(lanes, d)`.
+    attn: Vec<f32>,
+    /// Projection / FFN-down output, `(lanes, d)`.
+    proj: Vec<f32>,
+    /// FFN hidden, `(lanes, d_ff)`.
+    ff: Vec<f32>,
+    /// Frontier logits, `(lanes, vocab)`.
+    logits: Vec<f32>,
+    /// Per-row activation-quantization staging.
+    aq: Vec<f32>,
+    /// Kernel panel scratch (`KC × NR`; the encoded path's LUT target).
+    panel: Vec<f32>,
+    /// Gathered K/V history for one (lane, head).
     k: Vec<f32>,
     v: Vec<f32>,
     scores: Vec<f32>,
     ctx: Vec<f32>,
     acc: Vec<f32>,
+    /// Per-lane cache positions for the current step.
+    pos: Vec<usize>,
     names: Vec<LayerNames>,
 }
 
 impl DecodeScratch {
     pub fn new() -> DecodeScratch {
         DecodeScratch::default()
+    }
+
+    /// Total f32/usize capacity (in elements) held across every scratch
+    /// buffer. Constant across steps once the working set is reached —
+    /// any hidden steady-state allocation in the decode loop would grow
+    /// it, which the zero-alloc property test asserts never happens.
+    pub fn footprint(&self) -> usize {
+        self.x.capacity()
+            + self.h.capacity()
+            + self.qkv.capacity()
+            + self.attn.capacity()
+            + self.proj.capacity()
+            + self.ff.capacity()
+            + self.logits.capacity()
+            + self.aq.capacity()
+            + self.panel.capacity()
+            + self.k.capacity()
+            + self.v.capacity()
+            + self.scores.capacity()
+            + self.ctx.capacity()
+            + self.acc.capacity()
+            + self.pos.capacity()
+    }
+
+    fn ensure_names(&mut self, n_layers: usize) {
+        if self.names.len() != n_layers {
+            self.names = (0..n_layers).map(LayerNames::new).collect();
+        }
+    }
+
+    /// Pin the length-proportional attention buffers (gathered K/V,
+    /// score row) at the cache's per-slot token capacity once, so the
+    /// decode loop never reallocates them at **any** sequence length —
+    /// the zero-steady-state-allocation property holds by construction
+    /// instead of by amortized-doubling luck. Gathers only ever resize
+    /// within this capacity afterwards.
+    fn pin_attention_capacity(&mut self, max_tokens: usize, head_dim: usize) {
+        if self.k.capacity() < max_tokens * head_dim {
+            self.k.resize(max_tokens * head_dim, 0.0);
+            self.v.resize(max_tokens * head_dim, 0.0);
+            self.scores.resize(max_tokens, 0.0);
+        }
     }
 }
 
@@ -69,21 +153,6 @@ impl LayerNames {
             w2: format!("l{i}.mlp.w2"),
         }
     }
-}
-
-/// Embed one token at `pos` into a `(1, d)` tensor.
-fn embed_token(cfg: &ModelConfig, w: &Weights, token: u32, pos: usize) -> anyhow::Result<Tensor> {
-    anyhow::ensure!((token as usize) < cfg.vocab, "token {token} out of vocab");
-    anyhow::ensure!(pos < cfg.max_t, "position {pos} >= max_t {}", cfg.max_t);
-    let embed = w.get("embed")?;
-    let ppos = w.get("pos")?;
-    let e = embed.row(token as usize);
-    let p = ppos.row(pos);
-    let mut x = Tensor::zeros(&[1, cfg.d]);
-    for (o, (&a, &b)) in x.data.iter_mut().zip(e.iter().zip(p)) {
-        *o = a + b;
-    }
-    Ok(x)
 }
 
 /// Fill `slot` with a prompt: runs the **reference transformer stack
@@ -129,11 +198,39 @@ pub fn prefill(
     Ok(crate::kernels::gemm_packed(&last, &head).data)
 }
 
+/// Per-lane admission check for a decode step, shared by
+/// [`decode_step_batch`] (whole-call validation) and the engine layer's
+/// per-lane screening (`DecodeSession::decode_batch`) — **one source of
+/// truth**, so the screen can never drift from what the fused step
+/// enforces and let a bad lane poison its step-mates. Returns the
+/// lane's current cache position.
+pub fn validate_decode_lane(
+    cfg: &ModelConfig,
+    cache: &PagedKvCache,
+    slots: &[SlotId],
+    i: usize,
+    token: u32,
+) -> anyhow::Result<usize> {
+    let slot = slots[i];
+    anyhow::ensure!(cache.is_live(slot), "decode on dead slot {slot}");
+    anyhow::ensure!(!slots[..i].contains(&slot), "slot {slot} appears twice in one batched step");
+    let pos = cache.seq_len(slot);
+    anyhow::ensure!(pos > 0, "decode_step before prefill (slot {slot})");
+    anyhow::ensure!(pos < cache.layout().max_tokens, "cache slot {slot} full ({pos} tokens)");
+    anyhow::ensure!(pos < cfg.max_t, "position {pos} >= max_t {} (slot {slot})", cfg.max_t);
+    anyhow::ensure!((token as usize) < cfg.vocab, "token {token} out of vocab");
+    Ok(pos)
+}
+
 /// Decode one token against the cached history: appends its K/V per
 /// layer, attends over the cache (O(len) per head), and returns the new
 /// position's logits (`vocab` floats). Attention reductions follow the
 /// blocked kernel's accumulation order, so with an f32 cache the result
 /// is bit-exact with the corresponding row of the full forward.
+///
+/// This is the single-lane **reference** the batched step is verified
+/// against — it shares the scratch buffers and row-level helpers but
+/// keeps the straightforward one-lane control flow.
 pub fn decode_step(
     cfg: &ModelConfig,
     w: &Weights,
@@ -143,35 +240,40 @@ pub fn decode_step(
     act_q: ActQuant,
     scratch: &mut DecodeScratch,
 ) -> anyhow::Result<Vec<f32>> {
-    let pos = cache.seq_len(slot);
-    anyhow::ensure!(pos > 0, "decode_step before prefill");
-    anyhow::ensure!(pos < cache.layout().max_tokens, "cache slot full ({pos} tokens)");
+    let pos = validate_decode_lane(cfg, cache, &[slot], 0, token)?;
     let (d, hd) = (cfg.d, cfg.head_dim());
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut x = embed_token(cfg, w, token, pos)?;
+    scratch.pin_attention_capacity(cache.layout().max_tokens, hd);
+
+    // Embed the frontier token at its position.
+    let embed = w.get("embed")?;
+    let ppos = w.get("pos")?;
+    scratch.x.resize(d, 0.0);
+    let (e, p) = (embed.row(token as usize), ppos.row(pos));
+    for (o, (&a, &b)) in scratch.x.iter_mut().zip(e.iter().zip(p)) {
+        *o = a + b;
+    }
 
     scratch.ctx.resize(hd, 0.0);
     scratch.acc.resize(hd, 0.0);
-    if scratch.names.len() != cfg.n_layers {
-        scratch.names = (0..cfg.n_layers).map(LayerNames::new).collect();
-    }
+    scratch.ensure_names(cfg.n_layers);
     for i in 0..cfg.n_layers {
         let names = &scratch.names[i];
-        let mut h = x.clone();
-        layer_norm(&mut h, w.get(&names.ln1_g)?, w.get(&names.ln1_b)?, 1e-5);
-        let qkv = qmatmul(&h, w, &names.wqkv, act_q)?; // (1, 3D)
-        let row = qkv.row(0);
-        let n = cache.append(slot, i, &row[d..2 * d], &row[2 * d..3 * d])?;
-        let mut attn_out = Tensor::zeros(&[1, d]);
+        // --- attention block ---
+        scratch.h.clear();
+        scratch.h.extend_from_slice(&scratch.x);
+        layer_norm_flat(&mut scratch.h, d, w.get(&names.ln1_g)?, w.get(&names.ln1_b)?, 1e-5);
+        qmatmul_rows_into(w, &names.wqkv, &scratch.h, 1, d, act_q, &mut scratch.qkv, &mut scratch.aq, &mut scratch.panel)?; // (1, 3D)
+        let n = cache.append(slot, i, &scratch.qkv[d..2 * d], &scratch.qkv[2 * d..3 * d])?;
+        scratch.attn.resize(d, 0.0);
         for head in 0..cfg.n_heads {
             let off = head * hd;
-            let q = &row[off..off + hd];
-            cache.gather(slot, i, head, Plane::K, &mut scratch.k);
-            cache.gather(slot, i, head, Plane::V, &mut scratch.v);
+            cache.gather_kv(slot, i, head, &mut scratch.k, &mut scratch.v);
             // scores[j] = (q · K[j]) * scale — reduction over head_dim,
             // ascending, one KC block (head_dim < KC always here).
             scratch.scores.resize(n, 0.0);
             for (j, s) in scratch.scores.iter_mut().enumerate() {
+                let q = &scratch.qkv[off..off + hd];
                 let krow = &scratch.k[j * hd..(j + 1) * hd];
                 let mut acc = 0.0f32;
                 for (a, b) in q.iter().zip(krow) {
@@ -188,10 +290,10 @@ pub fn decode_step(
                 let jc = KC.min(n - j0);
                 scratch.acc.fill(0.0);
                 for j in j0..j0 + jc {
-                    let p = scratch.scores[j];
+                    let pj = scratch.scores[j];
                     let vrow = &scratch.v[j * hd..(j + 1) * hd];
                     for (a, &b) in scratch.acc.iter_mut().zip(vrow) {
-                        *a += p * b;
+                        *a += pj * b;
                     }
                 }
                 for (c, &a) in scratch.ctx.iter_mut().zip(scratch.acc.iter()) {
@@ -199,26 +301,158 @@ pub fn decode_step(
                 }
                 j0 += jc;
             }
-            attn_out.data[off..off + hd].copy_from_slice(&scratch.ctx);
+            scratch.attn[off..off + hd].copy_from_slice(&scratch.ctx);
         }
-        let proj = qmatmul(&attn_out, w, &names.wo, act_q)?;
-        for (xv, pv) in x.data.iter_mut().zip(&proj.data) {
+        qmatmul_rows_into(w, &names.wo, &scratch.attn, 1, d, act_q, &mut scratch.proj, &mut scratch.aq, &mut scratch.panel)?;
+        for (xv, pv) in scratch.x.iter_mut().zip(&scratch.proj) {
             *xv += pv;
         }
 
-        let mut h = x.clone();
-        layer_norm(&mut h, w.get(&names.ln2_g)?, w.get(&names.ln2_b)?, 1e-5);
-        let mut ff = qmatmul(&h, w, &names.w1, act_q)?;
-        gelu(&mut ff.data);
-        let down = qmatmul(&ff, w, &names.w2, act_q)?;
-        for (xv, dv) in x.data.iter_mut().zip(&down.data) {
+        // --- MLP block ---
+        scratch.h.clear();
+        scratch.h.extend_from_slice(&scratch.x);
+        layer_norm_flat(&mut scratch.h, d, w.get(&names.ln2_g)?, w.get(&names.ln2_b)?, 1e-5);
+        let d_ff = qmatmul_rows_into(w, &names.w1, &scratch.h, 1, d, act_q, &mut scratch.ff, &mut scratch.aq, &mut scratch.panel)?;
+        gelu(&mut scratch.ff);
+        qmatmul_rows_into(w, &names.w2, &scratch.ff, 1, d_ff, act_q, &mut scratch.proj, &mut scratch.aq, &mut scratch.panel)?;
+        for (xv, dv) in scratch.x.iter_mut().zip(&scratch.proj) {
             *xv += dv;
         }
     }
 
-    layer_norm(&mut x, w.get("lnf.g")?, w.get("lnf.b")?, 1e-5);
+    layer_norm_flat(&mut scratch.x, d, w.get("lnf.g")?, w.get("lnf.b")?, 1e-5);
     let head = w.packed_transposed("embed")?;
-    Ok(crate::kernels::gemm_packed(&x, &head).data)
+    scratch.logits.resize(cfg.vocab, 0.0);
+    kernels::gemm_into_flat_with(&scratch.x, 1, d, &*head, &mut scratch.logits, &mut scratch.panel);
+    Ok(scratch.logits.clone())
+}
+
+/// One **fused decode step across every listed lane**: stacks the
+/// frontier tokens into a `(lanes, d)` activation matrix, runs each
+/// projection / FFN / LM-head GEMM once with `M = lanes` (the packed or
+/// encoded weight panel is streamed **once per step**, not once per
+/// lane), and splits per lane only for attention against each lane's
+/// paged KV history at its own ragged position. Appends one K/V row per
+/// lane per layer through the cache's multi-slot
+/// [`append_batch`](crate::kvcache::PagedKvCache::append_batch).
+///
+/// Returns the stacked `(lanes, vocab)` frontier logits, row `i` for
+/// `slots[i]`, borrowed from `scratch` (zero-copy; callers that need
+/// owned per-lane vectors split it). **Bit-identical** to calling
+/// [`decode_step`] once per lane in any order: activations are
+/// quantized per row, GEMM rows accumulate independently, and each
+/// lane's attention reads only its own slot.
+///
+/// Validates every lane **before** touching the cache, so a bad lane
+/// (dead slot, full slot, out-of-vocab token, duplicate) fails the call
+/// with the cache unmodified — the engine layer uses that to fail one
+/// request without poisoning its batch.
+pub fn decode_step_batch<'s>(
+    cfg: &ModelConfig,
+    w: &Weights,
+    cache: &mut PagedKvCache,
+    slots: &[SlotId],
+    tokens: &[u32],
+    act_q: ActQuant,
+    scratch: &'s mut DecodeScratch,
+) -> anyhow::Result<&'s [f32]> {
+    let lanes = slots.len();
+    anyhow::ensure!(lanes >= 1, "decode_step_batch with no lanes");
+    anyhow::ensure!(tokens.len() == lanes, "{} tokens for {lanes} lanes", tokens.len());
+    let (d, hd) = (cfg.d, cfg.head_dim());
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    // ---- validate everything up front (shared per-lane check); no
+    // cache mutation on failure ----
+    scratch.pos.clear();
+    for (i, &tok) in tokens.iter().enumerate() {
+        let pos = validate_decode_lane(cfg, cache, slots, i, tok)?;
+        scratch.pos.push(pos);
+    }
+    scratch.pin_attention_capacity(cache.layout().max_tokens, hd);
+
+    // ---- embed all frontier tokens: x[i] = embed[tok_i] + pos[p_i] ----
+    let embed = w.get("embed")?;
+    let ppos = w.get("pos")?;
+    scratch.x.resize(lanes * d, 0.0);
+    for i in 0..lanes {
+        let (e, p) = (embed.row(tokens[i] as usize), ppos.row(scratch.pos[i]));
+        for (o, (&a, &b)) in scratch.x[i * d..(i + 1) * d].iter_mut().zip(e.iter().zip(p)) {
+            *o = a + b;
+        }
+    }
+
+    scratch.ctx.resize(hd, 0.0);
+    scratch.acc.resize(hd, 0.0);
+    scratch.ensure_names(cfg.n_layers);
+    for li in 0..cfg.n_layers {
+        let names = &scratch.names[li];
+        // --- attention block: one fused QKV GEMM, per-lane attention ---
+        scratch.h.clear();
+        scratch.h.extend_from_slice(&scratch.x);
+        layer_norm_flat(&mut scratch.h, d, w.get(&names.ln1_g)?, w.get(&names.ln1_b)?, 1e-5);
+        qmatmul_rows_into(w, &names.wqkv, &scratch.h, lanes, d, act_q, &mut scratch.qkv, &mut scratch.aq, &mut scratch.panel)?; // (lanes, 3D)
+        cache.append_batch(slots, li, &scratch.qkv, 3 * d, d, 2 * d)?;
+        scratch.attn.resize(lanes * d, 0.0);
+        for i in 0..lanes {
+            let n = scratch.pos[i] + 1; // this lane's attention span
+            let qbase = i * 3 * d;
+            for head in 0..cfg.n_heads {
+                let off = head * hd;
+                cache.gather_kv(slots[i], li, head, &mut scratch.k, &mut scratch.v);
+                scratch.scores.resize(n, 0.0);
+                for (j, s) in scratch.scores.iter_mut().enumerate() {
+                    let q = &scratch.qkv[qbase + off..qbase + off + hd];
+                    let krow = &scratch.k[j * hd..(j + 1) * hd];
+                    let mut acc = 0.0f32;
+                    for (a, b) in q.iter().zip(krow) {
+                        acc += a * b;
+                    }
+                    *s = acc * scale;
+                }
+                softmax_rows(&mut scratch.scores, n);
+                scratch.ctx.fill(0.0);
+                let mut j0 = 0usize;
+                while j0 < n {
+                    let jc = KC.min(n - j0);
+                    scratch.acc.fill(0.0);
+                    for j in j0..j0 + jc {
+                        let pj = scratch.scores[j];
+                        let vrow = &scratch.v[j * hd..(j + 1) * hd];
+                        for (a, &b) in scratch.acc.iter_mut().zip(vrow) {
+                            *a += pj * b;
+                        }
+                    }
+                    for (c, &a) in scratch.ctx.iter_mut().zip(scratch.acc.iter()) {
+                        *c += a;
+                    }
+                    j0 += jc;
+                }
+                scratch.attn[i * d + off..i * d + off + hd].copy_from_slice(&scratch.ctx);
+            }
+        }
+        qmatmul_rows_into(w, &names.wo, &scratch.attn, lanes, d, act_q, &mut scratch.proj, &mut scratch.aq, &mut scratch.panel)?;
+        for (xv, pv) in scratch.x.iter_mut().zip(&scratch.proj) {
+            *xv += pv;
+        }
+
+        // --- MLP block: two fused GEMMs over all lanes ---
+        scratch.h.clear();
+        scratch.h.extend_from_slice(&scratch.x);
+        layer_norm_flat(&mut scratch.h, d, w.get(&names.ln2_g)?, w.get(&names.ln2_b)?, 1e-5);
+        let d_ff = qmatmul_rows_into(w, &names.w1, &scratch.h, lanes, d, act_q, &mut scratch.ff, &mut scratch.aq, &mut scratch.panel)?;
+        gelu(&mut scratch.ff);
+        qmatmul_rows_into(w, &names.w2, &scratch.ff, lanes, d_ff, act_q, &mut scratch.proj, &mut scratch.aq, &mut scratch.panel)?;
+        for (xv, dv) in scratch.x.iter_mut().zip(&scratch.proj) {
+            *xv += dv;
+        }
+    }
+
+    layer_norm_flat(&mut scratch.x, d, w.get("lnf.g")?, w.get("lnf.b")?, 1e-5);
+    let head = w.packed_transposed("embed")?;
+    scratch.logits.resize(lanes * cfg.vocab, 0.0);
+    kernels::gemm_into_flat_with(&scratch.x, lanes, d, &*head, &mut scratch.logits, &mut scratch.panel);
+    Ok(&scratch.logits[..lanes * cfg.vocab])
 }
 
 #[cfg(test)]
@@ -260,6 +494,63 @@ mod tests {
             }
             assert_eq!(cache.seq_len(slot), tokens.len());
         }
+    }
+
+    #[test]
+    fn batched_step_matches_single_lane_bitwise() {
+        // Twin caches: one driven per-lane by decode_step, one by the
+        // fused batch step, over ragged prefill lengths. Every lane's
+        // logits must agree to the bit at every step.
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 44);
+        let prompts: [&[u32]; 3] = [&[1, 2, 3, 4, 5], &[7], &[9, 10, 11]];
+        let mut serial = f32_cache(&cfg, 3);
+        let mut batched = f32_cache(&cfg, 3);
+        let mut ss = DecodeScratch::new();
+        let mut sb = DecodeScratch::new();
+        let mut slots_s = Vec::new();
+        let mut slots_b = Vec::new();
+        for p in prompts {
+            let a = serial.alloc_slot().unwrap();
+            let b = batched.alloc_slot().unwrap();
+            prefill(&cfg, &w, &mut serial, a, p, None).unwrap();
+            prefill(&cfg, &w, &mut batched, b, p, None).unwrap();
+            slots_s.push(a);
+            slots_b.push(b);
+        }
+        for step in 0..4u32 {
+            let tokens: Vec<u32> = (0..3).map(|i| (step * 3 + i + 12) % 40).collect();
+            let fused = decode_step_batch(&cfg, &w, &mut batched, &slots_b, &tokens, None, &mut sb)
+                .unwrap()
+                .to_vec();
+            for (i, &slot) in slots_s.iter().enumerate() {
+                let lone = decode_step(&cfg, &w, &mut serial, slot, tokens[i], None, &mut ss).unwrap();
+                for (c, (&g, &want)) in fused[i * cfg.vocab..(i + 1) * cfg.vocab].iter().zip(&lone).enumerate() {
+                    assert_eq!(g.to_bits(), want.to_bits(), "step {step} lane {i} col {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_step_rejects_misuse_without_mutating() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 45);
+        let mut cache = f32_cache(&cfg, 2);
+        let a = cache.alloc_slot().unwrap();
+        let b = cache.alloc_slot().unwrap();
+        let mut scratch = DecodeScratch::new();
+        prefill(&cfg, &w, &mut cache, a, &[1, 2], None).unwrap();
+        // b has no prefill; duplicate slots; token/lane count mismatch;
+        // out-of-vocab token — all rejected, none advance slot a.
+        assert!(decode_step_batch(&cfg, &w, &mut cache, &[a, b], &[3, 4], None, &mut scratch).is_err());
+        assert!(decode_step_batch(&cfg, &w, &mut cache, &[a, a], &[3, 4], None, &mut scratch).is_err());
+        assert!(decode_step_batch(&cfg, &w, &mut cache, &[a], &[3, 4], None, &mut scratch).is_err());
+        assert!(decode_step_batch(&cfg, &w, &mut cache, &[a], &[999], None, &mut scratch).is_err());
+        assert!(decode_step_batch(&cfg, &w, &mut cache, &[], &[], None, &mut scratch).is_err());
+        assert_eq!(cache.seq_len(a), 2, "failed batched step mutated the cache");
+        let ok = decode_step_batch(&cfg, &w, &mut cache, &[a], &[3], None, &mut scratch).unwrap();
+        assert_eq!(ok.len(), cfg.vocab);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! integration test cross-checks its logits against the executed PJRT
 //! artifact to ~1e-4 (`rust/tests/artifact_integration.rs`).
 
-use crate::kernels::{self, PackedB};
+use crate::kernels::{self, PackedB, PanelProvider};
 use crate::model::config::ModelConfig;
 use crate::model::weights::{Linear, Weights};
 use crate::quant::pipeline::QuantPipeline;
@@ -26,7 +26,13 @@ pub type ActQuant<'a> = Option<&'a QuantPipeline>;
 
 pub(crate) fn layer_norm(x: &mut Tensor, g: &Tensor, b: &Tensor, eps: f32) {
     let d = x.cols();
-    for row in x.data.chunks_exact_mut(d) {
+    layer_norm_flat(&mut x.data, d, g, b, eps);
+}
+
+/// [`layer_norm`] over a flat row-major `(rows, d)` buffer — the decode
+/// loop's allocation-free entry point (same arithmetic, same order).
+pub(crate) fn layer_norm_flat(x: &mut [f32], d: usize, g: &Tensor, b: &Tensor, eps: f32) {
+    for row in x.chunks_exact_mut(d) {
         let mean = row.iter().sum::<f32>() / d as f32;
         let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
         let inv = 1.0 / (var + eps).sqrt();
@@ -78,6 +84,53 @@ pub(crate) fn qmatmul(x: &Tensor, w: &Weights, name: &str, act_q: ActQuant) -> a
             out
         }
     })
+}
+
+/// Row-batched GEMM against a named weight **into caller-owned
+/// buffers** — the decode hot loop's flavour of [`qmatmul`]. `x` is a
+/// stacked `(m, k)` activation (one row per live lane). Activations are
+/// quantized **per row**, so each lane's numerics are bit-identical to
+/// that lane quantizing its own `(1, k)` activation alone — a lane's
+/// output never depends on which other lanes share the step — while the
+/// GEMM itself runs **once**, streaming the packed/encoded B panel once
+/// per step instead of once per lane. `out` is resized to `(m, n)`;
+/// `aq` stages the quantized rows; `panel` is the kernel's panel
+/// scratch. Returns `n`. Zero allocations once the buffers reach their
+/// working size.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn qmatmul_rows_into(
+    w: &Weights,
+    name: &str,
+    x: &[f32],
+    m: usize,
+    k: usize,
+    act_q: ActQuant,
+    out: &mut Vec<f32>,
+    aq: &mut Vec<f32>,
+    panel: &mut Vec<f32>,
+) -> anyhow::Result<usize> {
+    debug_assert_eq!(x.len(), m * k);
+    let lin = w.linear(name)?;
+    let n = match &lin {
+        Linear::Dense(pb) => pb.n(),
+        Linear::Encoded(ql) => ql.shape().1,
+    };
+    out.resize(m * n, 0.0);
+    let src: &[f32] = match act_q {
+        None => x,
+        Some(pipe) => {
+            aq.resize(m * k, 0.0);
+            for (sr, dr) in x.chunks_exact(k).zip(aq.chunks_exact_mut(k)) {
+                pipe.quantize_into(sr, dr);
+            }
+            &aq[..]
+        }
+    };
+    match &lin {
+        Linear::Dense(pb) => kernels::gemm_into_flat_with(src, m, k, &**pb, out, panel),
+        Linear::Encoded(ql) => ql.qgemm_into(src, m, out, panel),
+    }
+    Ok(n)
 }
 
 /// Forward pass: `tokens` is (B, T) with T ≤ cfg.max_t; returns logits

@@ -12,6 +12,7 @@ use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::io::Read;
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Named weight collection for one model, plus the kernel-ready forms the
@@ -35,6 +36,11 @@ pub struct Weights {
     tensors: BTreeMap<String, Tensor>,
     packs: Mutex<BTreeMap<String, Arc<PackedB>>>,
     encoded: BTreeMap<String, Arc<QuantLinear>>,
+    /// Count of [`linear`](Self::linear) resolutions — one per GEMM
+    /// launched against a named weight. The batched-decode parity suite
+    /// uses it to prove one fused step runs each projection **once**,
+    /// not once per lane. Fresh (zero) on clone.
+    gemm_resolutions: AtomicUsize,
 }
 
 /// A GEMM right-hand side resolved by [`Weights::linear`]: either packed
@@ -52,13 +58,19 @@ impl Clone for Weights {
             // Panels are immutable once built — clones share the Arcs.
             packs: Mutex::new(self.packs.lock().unwrap().clone()),
             encoded: self.encoded.clone(),
+            gemm_resolutions: AtomicUsize::new(0),
         }
     }
 }
 
 impl Weights {
     pub fn new(tensors: BTreeMap<String, Tensor>) -> Weights {
-        Weights { tensors, packs: Mutex::new(BTreeMap::new()), encoded: BTreeMap::new() }
+        Weights {
+            tensors,
+            packs: Mutex::new(BTreeMap::new()),
+            encoded: BTreeMap::new(),
+            gemm_resolutions: AtomicUsize::new(0),
+        }
     }
 
     pub fn get(&self, name: &str) -> anyhow::Result<&Tensor> {
@@ -142,10 +154,17 @@ impl Weights {
     /// Resolve the GEMM operator for `name`: encoded codes when bound,
     /// packed f32 panels otherwise.
     pub fn linear(&self, name: &str) -> anyhow::Result<Linear> {
+        self.gemm_resolutions.fetch_add(1, Ordering::Relaxed);
         if let Some(q) = self.encoded.get(name) {
             return Ok(Linear::Encoded(q.clone()));
         }
         Ok(Linear::Dense(self.packed(name)?))
+    }
+
+    /// GEMM launches against this weight set since construction/clone
+    /// (see the field docs — the batched-decode acceptance check).
+    pub fn gemm_resolutions(&self) -> usize {
+        self.gemm_resolutions.load(Ordering::Relaxed)
     }
 
     /// Weights in the model's calling-convention order.
@@ -320,5 +339,18 @@ mod tests {
     fn packed_rejects_non_rank2() {
         let w = sample();
         assert!(w.packed("b.c").is_err(), "rank-1 tensor packed");
+    }
+
+    #[test]
+    fn gemm_resolutions_count_linear_calls() {
+        let w = sample();
+        assert_eq!(w.gemm_resolutions(), 0);
+        let _ = w.linear("a").unwrap();
+        let _ = w.linear("a").unwrap();
+        assert_eq!(w.gemm_resolutions(), 2);
+        // packed/packed_transposed are not GEMM launches.
+        let _ = w.packed("a").unwrap();
+        assert_eq!(w.gemm_resolutions(), 2);
+        assert_eq!(w.clone().gemm_resolutions(), 0, "clone inherited the counter");
     }
 }

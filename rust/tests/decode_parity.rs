@@ -1,4 +1,4 @@
-//! Decode-engine parity suite (ISSUE 3):
+//! Decode-engine parity suite (ISSUE 3 + ISSUE 4):
 //!
 //! 1. **Incremental == full**: prefill + N × `decode_step` with an
 //!    unquantized (f32) KV cache reproduces the full-forward logits at
@@ -12,12 +12,19 @@
 //! 3. **Encoded cache**: KV4 decode stays finite, differs from KV16 (the
 //!    quantizer is live), and stores ≤ 5 bits/scalar at serving head
 //!    dims.
+//! 4. **Batched == serial** (ISSUE 4): one `decode_step_batch` over N
+//!    live lanes is **bit-identical** to N independent `decode_step`
+//!    calls — on the f32-KV and the BCQ-encoded-weights paths, across
+//!    ragged lane lengths and a mid-batch slot free/backfill — while
+//!    launching each per-projection GEMM **once per step** (not once
+//!    per lane), and performing **zero steady-state allocations** in
+//!    the batched decode loop.
 
 #![allow(clippy::needless_range_loop)]
 
 use lobcq::coordinator::{DecodeEngine, DecodeSession, KvCacheOpts};
 use lobcq::kvcache::{KvLayout, KvQuantizer, KvStore, PagedKvCache, Plane};
-use lobcq::model::decode::{decode_step, prefill, DecodeScratch};
+use lobcq::model::decode::{decode_step, decode_step_batch, prefill, DecodeScratch};
 use lobcq::model::forward::forward;
 use lobcq::model::{ModelConfig, Weights};
 use lobcq::quant::pipeline::QuantPool;
@@ -125,6 +132,152 @@ fn decode_session_matches_full_forward_with_encoded_weights() {
         }
     }
     session.release(lane);
+}
+
+// ---- 1b. batched decode == serial per-lane decode, to the bit ----
+
+/// Advance every serial-cache lane with `decode_step` and the twin
+/// batched cache with one `decode_step_batch`, asserting bit-identical
+/// logits per lane. Returns the fused `(lanes, vocab)` logits.
+#[allow(clippy::too_many_arguments)]
+fn step_both_and_compare(
+    cfg: &ModelConfig,
+    w_serial: &Weights,
+    w_batched: &Weights,
+    serial: &mut PagedKvCache,
+    batched: &mut PagedKvCache,
+    slots: &[usize],
+    tokens: &[u32],
+    ss: &mut DecodeScratch,
+    sb: &mut DecodeScratch,
+    tag: &str,
+) -> Vec<f32> {
+    // The fused step must resolve each projection GEMM exactly once —
+    // 4 per layer (wqkv, wo, w1, w2) — regardless of lane count.
+    let before = w_batched.gemm_resolutions();
+    let fused = decode_step_batch(cfg, w_batched, batched, slots, tokens, None, sb)
+        .unwrap()
+        .to_vec();
+    assert_eq!(
+        w_batched.gemm_resolutions() - before,
+        cfg.n_layers * 4,
+        "{tag}: batched step did not run each projection GEMM once per step"
+    );
+    for (i, &slot) in slots.iter().enumerate() {
+        let lone = decode_step(cfg, w_serial, serial, slot, tokens[i], None, ss).unwrap();
+        for (c, (&g, &want)) in fused[i * cfg.vocab..(i + 1) * cfg.vocab].iter().zip(&lone).enumerate() {
+            assert_eq!(g.to_bits(), want.to_bits(), "{tag}: lane {i} col {c}: {g} vs {want}");
+        }
+    }
+    fused
+}
+
+#[test]
+fn batched_decode_bit_identical_to_serial_lanes_with_free_backfill() {
+    // Both weight modes of the acceptance criterion: dense f32 weights
+    // and the BCQ-encoded-weights (qgemm) path, each over an f32 KV
+    // cache, with ragged lane lengths and a mid-batch free/backfill.
+    use lobcq::eval::scheme::Scheme;
+    use lobcq::quant::calib::calibrate_universal;
+    use lobcq::quant::lobcq::{CalibOpts, LobcqConfig};
+
+    let cfg = tiny_cfg();
+    let w_dense = random_weights(&cfg, 0xDEC4);
+    let qcfg = LobcqConfig::new(8, 4, 64);
+    let fam = calibrate_universal(
+        &[w_dense.get("l0.mlp.w1").unwrap()],
+        &qcfg,
+        CalibOpts { max_iters: 8, ..Default::default() },
+        5,
+    );
+    let w_encoded = Scheme::lobcq(qcfg, fam).encode_weights(&cfg, &w_dense).unwrap();
+
+    for (w, mode) in [(&w_dense, "dense"), (&w_encoded, "encoded")] {
+        // Clone for the batched side: shares the packed/encoded weight
+        // Arcs (identical numerics) but starts a fresh GEMM counter.
+        let wb = w.clone();
+        let mut serial =
+            PagedKvCache::new(KvLayout::for_model(&cfg, 4, 3), KvStore::F32).unwrap();
+        let mut batched =
+            PagedKvCache::new(KvLayout::for_model(&cfg, 4, 3), KvStore::F32).unwrap();
+        let mut ss = DecodeScratch::new();
+        let mut sb = DecodeScratch::new();
+
+        // Ragged prefills: lanes at positions 4, 1, 3.
+        let prompts: [&[u32]; 3] = [&[1, 2, 3, 4], &[7], &[9, 10, 11]];
+        let mut slots = Vec::new();
+        for p in prompts {
+            let a = serial.alloc_slot().unwrap();
+            let b = batched.alloc_slot().unwrap();
+            assert_eq!(a, b, "twin caches allocated differently");
+            prefill(&cfg, w, &mut serial, a, p, None).unwrap();
+            prefill(&cfg, &wb, &mut batched, b, p, None).unwrap();
+            slots.push(a);
+        }
+        for step in 0..3u32 {
+            let tokens: Vec<u32> = (0..3).map(|i| (step * 7 + i * 3 + 12) % 40).collect();
+            step_both_and_compare(
+                &cfg, w, &wb, &mut serial, &mut batched, &slots, &tokens, &mut ss, &mut sb,
+                &format!("{mode} step {step}"),
+            );
+        }
+
+        // Mid-batch retirement: free the middle lane in both caches and
+        // backfill its slot with a fresh (shorter) request.
+        serial.free_slot(slots[1]);
+        batched.free_slot(slots[1]);
+        let a = serial.alloc_slot().unwrap();
+        let b = batched.alloc_slot().unwrap();
+        assert_eq!(a, slots[1], "freed slot not reused");
+        assert_eq!(b, slots[1]);
+        prefill(&cfg, w, &mut serial, a, &[20, 21], None).unwrap();
+        prefill(&cfg, &wb, &mut batched, b, &[20, 21], None).unwrap();
+        for step in 0..2u32 {
+            let tokens: Vec<u32> = (0..3).map(|i| (step * 5 + i + 25) % 40).collect();
+            step_both_and_compare(
+                &cfg, w, &wb, &mut serial, &mut batched, &slots, &tokens, &mut ss, &mut sb,
+                &format!("{mode} post-backfill step {step}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_decode_loop_is_allocation_free_in_steady_state() {
+    // The zero-alloc harness (pipeline_parity) pins the activation
+    // pipeline's scratch pool; this extends it to the whole batched
+    // decode loop: once warm, neither the DecodeScratch working set nor
+    // the activation pipeline may allocate again (KV pages still grow
+    // with the sequences — that is cache state, not scratch).
+    let cfg = tiny_cfg();
+    let w = random_weights(&cfg, 0xDEC5);
+    let act = lobcq::eval::scheme::mx4().act_pipeline(QuantPool::serial()).unwrap();
+    let mut cache = PagedKvCache::new(KvLayout::for_model(&cfg, 4, 3), KvStore::F32).unwrap();
+    let mut scratch = DecodeScratch::new();
+    let slots: Vec<usize> = (0..3)
+        .map(|i| {
+            let s = cache.alloc_slot().unwrap();
+            let prompt: Vec<u32> = (0..4).map(|j| (i as u32 * 9 + j + 1) % 40).collect();
+            prefill(&cfg, &w, &mut cache, s, &prompt, Some(&act)).unwrap();
+            s
+        })
+        .collect();
+    let step = |cache: &mut PagedKvCache, scratch: &mut DecodeScratch, k: u32| {
+        let tokens: Vec<u32> = (0..3).map(|i| (k * 3 + i + 2) % 40).collect();
+        let logits =
+            decode_step_batch(&cfg, &w, cache, &slots, &tokens, Some(&act), scratch).unwrap();
+        assert!(logits.iter().all(|x| x.is_finite()));
+    };
+    for k in 0..3 {
+        step(&mut cache, &mut scratch, k); // warm-up: buffers reach working size
+    }
+    let footprint = scratch.footprint();
+    let pipe_allocs = act.scratch_allocations();
+    for k in 3..6 {
+        step(&mut cache, &mut scratch, k);
+    }
+    assert_eq!(scratch.footprint(), footprint, "batched decode scratch grew in steady state");
+    assert_eq!(act.scratch_allocations(), pipe_allocs, "activation pipeline allocated in steady state");
 }
 
 // ---- 2. slot free/reuse never aliases live pages ----
