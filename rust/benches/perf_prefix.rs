@@ -1,0 +1,185 @@
+//! §Perf prefix-cache bench — emits `BENCH_prefix.json`.
+//!
+//! Measures **time-to-first-token** (≈ prefill wall time through the
+//! `DecodeSession` engine, admission matching included) on the
+//! shared-prefix workload `data::corpus::shared_prefix_workload`
+//! generates: N requests drawing from K system prompts of 256 tokens
+//! plus request-unique suffixes — the traffic shape where cross-request
+//! KV reuse pays.
+//!
+//! Protocol per K ∈ {1, 8}: a **cold** engine (prefix cache off) serves
+//! every request paying the full prefill; a **warm** engine (prefix
+//! cache on) is seeded with one un-timed request per distinct prefix,
+//! then serves the same N requests — each should adopt ~256 cached
+//! tokens and prefill only its suffix. Before timing, the bench
+//! cross-checks one warm-hit prefill bit-exact against the cold engine
+//! (f32 and BCQ KV stores), so it can never silently measure a
+//! divergent path.
+//!
+//! Acceptance: `warm_ttft_speedup` (K=1, BCQ KV) ≥ 2× — with a
+//! 256-token prefix and a 16-token suffix the warm engine computes
+//! ~6% of the positions, and attention over the adopted prefix is the
+//! only O(prefix) work left.
+
+#![allow(clippy::needless_range_loop)]
+
+use lobcq::coordinator::{DecodeEngine, DecodeSession, KvCacheOpts};
+use lobcq::data::corpus;
+use lobcq::eval::Scheme;
+use lobcq::model::{ModelConfig, Weights};
+use lobcq::quant::pipeline::QuantPool;
+use lobcq::tensor::Tensor;
+use lobcq::util::json::Json;
+use lobcq::util::rng::Pcg32;
+use std::time::Instant;
+
+const PREFIX_TOKENS: usize = 256;
+const SUFFIX_TOKENS: usize = 16;
+const REQUESTS: usize = 12;
+const PAGE_TOKENS: usize = 16;
+
+/// Serving-shaped toy model: head_dim 64 (the ≤5 bits/scalar shape).
+fn model() -> (ModelConfig, Weights) {
+    let cfg = ModelConfig {
+        name: "prefix-bench".into(),
+        d: 128,
+        n_layers: 2,
+        n_heads: 2,
+        vocab: corpus::VOCAB as usize,
+        max_t: 384,
+    };
+    let mut rng = Pcg32::seeded(0x9F1C);
+    let mut tensors = std::collections::BTreeMap::new();
+    for (name, shape) in cfg.param_shapes() {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with(".g") {
+            vec![1.0; n]
+        } else if name.ends_with(".b") {
+            vec![0.0; n]
+        } else {
+            (0..n).map(|_| rng.normal() * 0.05).collect()
+        };
+        tensors.insert(name, Tensor::new(&shape, data));
+    }
+    (cfg, Weights::new(tensors))
+}
+
+fn session(cfg: &ModelConfig, w: &Weights, encoded_kv: bool, prefix_budget: Option<usize>) -> DecodeSession {
+    let kv = KvCacheOpts { page_tokens: PAGE_TOKENS, encoded: encoded_kv, prefix_cache_bytes: prefix_budget };
+    DecodeSession::new(cfg.clone(), w, &Scheme::Bf16, QuantPool::serial(), 1, kv).unwrap()
+}
+
+/// Serve each prompt once (prefill + release), returning the mean
+/// prefill wall time in µs.
+fn serve_all(s: &mut DecodeSession, prompts: &[Vec<u32>]) -> f64 {
+    let mut total_us = 0.0f64;
+    for p in prompts {
+        let t0 = Instant::now();
+        let (lane, logits) = s.prefill(p).unwrap();
+        total_us += t0.elapsed().as_secs_f64() * 1e6;
+        assert!(logits[0].is_finite());
+        s.release(lane);
+    }
+    total_us / prompts.len() as f64
+}
+
+fn main() {
+    let (cfg, w) = model();
+    let _ = w.packed_transposed("embed"); // pre-warm the shared LM-head panel
+
+    // ---- parity gate: a warm hit must be bit-identical to cold ----
+    for encoded_kv in [false, true] {
+        let mut warm = session(&cfg, &w, encoded_kv, Some(64 << 20));
+        let mut cold = session(&cfg, &w, encoded_kv, None);
+        let wl = corpus::shared_prefix_workload(0x9F1D, 1, 2, 64, 8);
+        let seed_prompt = &wl.requests[0].1;
+        let (lane, _) = warm.prefill(seed_prompt).unwrap();
+        warm.release(lane);
+        let probe = &wl.requests[1].1;
+        let (wl_lane, wlog) = warm.prefill(probe).unwrap();
+        assert!(warm.prefix_stats().unwrap().hits >= 1, "parity probe missed the cache");
+        let (cl_lane, clog) = cold.prefill(probe).unwrap();
+        for (c, (&g, &x)) in wlog.iter().zip(&clog).enumerate() {
+            assert_eq!(g.to_bits(), x.to_bits(), "warm/cold divergence (encoded_kv={encoded_kv}) at col {c}");
+        }
+        warm.release(wl_lane);
+        cold.release(cl_lane);
+    }
+    println!("# perf_prefix — warm (prefix-cache hit) vs cold TTFT, prefix {PREFIX_TOKENS} suffix {SUFFIX_TOKENS}\n");
+
+    let mut shapes_json = Vec::new();
+    let mut acceptance = Json::obj();
+    let mut speedup_k1 = 0.0f64;
+    for &k in &[1usize, 8] {
+        let wl = corpus::shared_prefix_workload(0x9F1E + k as u64, k, REQUESTS, PREFIX_TOKENS, SUFFIX_TOKENS);
+        let prompts: Vec<Vec<u32>> = wl.requests.iter().map(|(_, p)| p.clone()).collect();
+
+        // Cold: no prefix cache, every request pays the full prefill.
+        let mut cold = session(&cfg, &w, true, None);
+        let cold_ttft_us = serve_all(&mut cold, &prompts);
+
+        // Warm: seed one request per distinct prefix (un-timed), then
+        // serve the same N requests off the tree.
+        let mut warm = session(&cfg, &w, true, Some(64 << 20));
+        for prefix in &wl.prefixes {
+            let mut seed_prompt = prefix.clone();
+            seed_prompt.push(corpus::PERIOD);
+            let (lane, _) = warm.prefill(&seed_prompt).unwrap();
+            warm.release(lane);
+        }
+        let before = warm.prefix_stats().unwrap();
+        let warm_ttft_us = serve_all(&mut warm, &prompts);
+        let after = warm.prefix_stats().unwrap();
+        let hits = after.hits - before.hits;
+        let saved = after.saved_tokens - before.saved_tokens;
+        let hit_rate = hits as f64 / REQUESTS as f64;
+        let saved_per_req = saved as f64 / REQUESTS as f64;
+
+        let speedup = cold_ttft_us / warm_ttft_us;
+        if k == 1 {
+            speedup_k1 = speedup;
+        }
+        println!(
+            "K={k}: cold {cold_ttft_us:9.0}µs  warm {warm_ttft_us:9.0}µs  ({speedup:.2}x)  hit-rate {hit_rate:.2}  saved {saved_per_req:.0} tok/req"
+        );
+        assert!(hits as usize == REQUESTS, "K={k}: {hits}/{REQUESTS} warm requests hit");
+        assert!(
+            saved_per_req >= (PREFIX_TOKENS - PAGE_TOKENS) as f64,
+            "K={k}: warm requests adopted only {saved_per_req} tokens"
+        );
+        shapes_json.push(
+            Json::obj()
+                .with("k_prefixes", Json::Num(k as f64))
+                .with("requests", Json::Num(REQUESTS as f64))
+                .with("prefix_tokens", Json::Num(PREFIX_TOKENS as f64))
+                .with("suffix_tokens", Json::Num(SUFFIX_TOKENS as f64))
+                .with("cold_ttft_us", Json::Num(cold_ttft_us))
+                .with("warm_ttft_us", Json::Num(warm_ttft_us))
+                .with("warm_speedup", Json::Num(speedup))
+                .with("hit_rate", Json::Num(hit_rate))
+                .with("saved_prefill_tokens_per_request", Json::Num(saved_per_req))
+                .with(
+                    "prefix_cache",
+                    Json::obj()
+                        .with("resident_bytes", Json::Num(after.resident_bytes as f64))
+                        .with("resident_chunks", Json::Num(after.resident_chunks as f64))
+                        .with("evicted_bytes", Json::Num(after.evicted_bytes as f64)),
+                ),
+        );
+    }
+
+    acceptance.set("warm_ttft_speedup", Json::Num(speedup_k1));
+    acceptance.set("warm_ttft_target", Json::Num(2.0));
+    println!("\nwarm vs cold TTFT @K=1: {speedup_k1:.2}x (target >= 2x)");
+    if speedup_k1 < 2.0 {
+        eprintln!("WARNING: warm-hit prefill less than 2x faster than cold on this host");
+    }
+
+    let report = Json::obj()
+        .with("bench", Json::Str("perf_prefix".into()))
+        .with("shapes", Json::Arr(shapes_json))
+        .with("acceptance", acceptance);
+    let path = std::path::Path::new("BENCH_prefix.json");
+    report.to_file(path).expect("write BENCH_prefix.json");
+    println!("\nreport written to {}", path.display());
+}

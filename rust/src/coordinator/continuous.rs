@@ -65,6 +65,12 @@ pub fn run_continuous<E: DecodeEngine + ?Sized>(
             let Some(req) = next else {
                 if active.is_empty() {
                     // pop() returned None => closed and drained => done.
+                    // Snapshot the caches one last time: the final lane
+                    // releases freed pages and published prefixes after
+                    // the last step's metrics were recorded, so without
+                    // this the summary would print pre-shutdown
+                    // occupancy.
+                    record_engine_stats(engine, metrics);
                     return;
                 }
                 break; // nothing queued right now; keep decoding
@@ -125,11 +131,7 @@ pub fn run_continuous<E: DecodeEngine + ?Sized>(
                     }
                 }
             }
-            if let Some(m) = metrics {
-                if let Some(kv) = engine.kv_stats() {
-                    m.record_kv_stats(kv);
-                }
-            }
+            record_engine_stats(engine, metrics);
         }
 
         // ---- retire finished lanes (slots free => next admission pass
@@ -164,6 +166,20 @@ pub fn run_continuous<E: DecodeEngine + ?Sized>(
                 }),
             );
         }
+    }
+}
+
+/// Record the engine's cache snapshots (KV occupancy + prefix-cache
+/// counters) — one definition shared by the per-step and final-drain
+/// sites, so a new engine-side stat can't be wired into one and
+/// silently skew the other.
+fn record_engine_stats<E: DecodeEngine + ?Sized>(engine: &E, metrics: Option<&ServerMetrics>) {
+    let Some(m) = metrics else { return };
+    if let Some(kv) = engine.kv_stats() {
+        m.record_kv_stats(kv);
+    }
+    if let Some(ps) = engine.prefix_stats() {
+        m.record_prefix_stats(ps);
     }
 }
 

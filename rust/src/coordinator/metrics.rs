@@ -11,11 +11,13 @@
 //! histogram** — live lanes per decode step — the number that tells you
 //! how much of the fused step's panel-streaming amortization the
 //! workload actually realized — and the continuous path samples the
-//! paged KV cache's page occupancy (pages in use / high-water mark),
-//! all printed in the `serve-cpu` summary.
+//! paged KV cache's page occupancy (pages in use / high-water mark)
+//! plus, when the prefix cache is on, its hit-rate / saved-prefill /
+//! eviction counters, all printed in the `serve-cpu` summary.
 
 use super::request::Response;
 use crate::kvcache::KvStats;
+use crate::prefixcache::PrefixStats;
 use crate::util::stats::LatencyHistogram;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -32,6 +34,8 @@ struct Inner {
     occupancy: Vec<u64>,
     /// Latest KV-cache snapshot (peaks are cumulative inside it).
     kv: Option<KvStats>,
+    /// Latest prefix-cache snapshot (counters are cumulative inside it).
+    prefix: Option<PrefixStats>,
     tokens_out: u64,
     requests_done: u64,
     started: Option<Instant>,
@@ -60,6 +64,7 @@ impl ServerMetrics {
                 batch_sizes: Vec::new(),
                 occupancy: Vec::new(),
                 kv: None,
+                prefix: None,
                 tokens_out: 0,
                 requests_done: 0,
                 started: None,
@@ -84,6 +89,12 @@ impl ServerMetrics {
     /// high-water marks, so keeping the most recent one is lossless).
     pub fn record_kv_stats(&self, stats: KvStats) {
         self.inner.lock().unwrap().kv = Some(stats);
+    }
+
+    /// Latest prefix-cache snapshot (hit/saved/evicted counters are
+    /// cumulative inside it, so the most recent one is lossless).
+    pub fn record_prefix_stats(&self, stats: PrefixStats) {
+        self.inner.lock().unwrap().prefix = Some(stats);
     }
 
     pub fn record_response(&self, resp: &Response) {
@@ -127,6 +138,7 @@ impl ServerMetrics {
                 .collect(),
             mean_occupancy,
             kv: g.kv,
+            prefix: g.prefix,
             requests: g.requests_done,
             tokens: g.tokens_out,
             tokens_per_s: if elapsed > 0.0 { g.tokens_out as f64 / elapsed } else { 0.0 },
@@ -153,6 +165,9 @@ pub struct MetricsSnapshot {
     pub mean_occupancy: f64,
     /// Latest KV-cache occupancy (continuous engine only).
     pub kv: Option<KvStats>,
+    /// Latest prefix-cache counters (continuous engine with the prefix
+    /// cache on).
+    pub prefix: Option<PrefixStats>,
     pub requests: u64,
     pub tokens: u64,
     pub tokens_per_s: f64,
@@ -206,6 +221,18 @@ impl MetricsSnapshot {
             s.push_str(&format!(
                 " | kv pages={}/{} (peak {}) bytes={} (peak {})",
                 kv.pages_in_use, kv.pages_capacity, kv.pages_peak, kv.state_bytes, kv.peak_bytes
+            ));
+        }
+        if let Some(p) = &self.prefix {
+            s.push_str(&format!(
+                " | prefix hits={}/{} ({:.0}%) saved-tokens={} evicted-bytes={} resident={}B in {} chunks",
+                p.hits,
+                p.lookups,
+                100.0 * p.hit_rate(),
+                p.saved_tokens,
+                p.evicted_bytes,
+                p.resident_bytes,
+                p.resident_chunks
             ));
         }
         s
@@ -278,5 +305,27 @@ mod tests {
         let r = s.report();
         assert!(r.contains("occupancy mean=3.00") && r.contains("4:3"), "{r}");
         assert!(r.contains("kv pages=6/8 (peak 8)"), "{r}");
+    }
+
+    #[test]
+    fn prefix_stats_flow_to_report() {
+        let m = ServerMetrics::new();
+        assert!(m.snapshot().prefix.is_none());
+        assert!(!m.snapshot().report().contains("prefix"), "prefix line printed with no prefix cache");
+        m.record_prefix_stats(crate::prefixcache::PrefixStats {
+            lookups: 8,
+            hits: 6,
+            saved_tokens: 96,
+            published_chunks: 5,
+            evicted_bytes: 4096,
+            resident_bytes: 2048,
+            resident_chunks: 3,
+        });
+        let s = m.snapshot();
+        let p = s.prefix.unwrap();
+        assert!((p.hit_rate() - 0.75).abs() < 1e-12);
+        let r = s.report();
+        assert!(r.contains("prefix hits=6/8 (75%)"), "{r}");
+        assert!(r.contains("saved-tokens=96") && r.contains("evicted-bytes=4096"), "{r}");
     }
 }

@@ -9,7 +9,11 @@
 //! materialized). This is the fixed-shape PJRT-compatible path; the CPU
 //! serving default is the incremental KV-cached engine in
 //! `coordinator::continuous` / `coordinator::session`, which makes
-//! per-token work O(current length) instead of a full-window re-score.
+//! per-token work O(current length) instead of a full-window re-score —
+//! and, with the prefix cache on, skips prefill for prompt prefixes
+//! another request already paid for (admission-time longest-prefix
+//! match; no equivalent exists here, since this path keeps no KV state
+//! between steps at all).
 
 use super::executor::StepExecutor;
 use super::metrics::ServerMetrics;

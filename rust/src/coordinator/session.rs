@@ -14,8 +14,9 @@
 
 use crate::eval::Scheme;
 use crate::kvcache::{KvLayout, KvQuantizer, KvStats, KvStore, PagedKvCache, SlotId};
-use crate::model::decode::{decode_step, decode_step_batch, prefill, validate_decode_lane, DecodeScratch};
+use crate::model::decode::{decode_step, decode_step_batch, prefill_from, validate_decode_lane, DecodeScratch};
 use crate::model::{ModelConfig, Weights};
+use crate::prefixcache::{PrefixCache, PrefixStats};
 use crate::quant::pipeline::{QuantPipeline, QuantPool};
 
 /// A stateful incremental decoder with `max_concurrency` independent
@@ -50,6 +51,12 @@ pub trait DecodeEngine: Send {
     fn kv_stats(&self) -> Option<KvStats> {
         None
     }
+    /// Prefix-cache counters (hit rate / saved prefill tokens / evicted
+    /// bytes) for the serving metrics; `None` when the engine has no
+    /// prefix cache.
+    fn prefix_stats(&self) -> Option<PrefixStats> {
+        None
+    }
 }
 
 /// KV-cache configuration for [`DecodeSession`].
@@ -60,22 +67,37 @@ pub struct KvCacheOpts {
     /// Store cached K/V LO-BCQ-encoded (~4.9 bits/scalar at head_dim 64)
     /// instead of f32.
     pub encoded: bool,
+    /// Byte budget for the cross-request prefix cache (`None` = off):
+    /// released slots publish their full KV pages into a radix tree and
+    /// admissions adopt the longest cached prefix, prefilling only the
+    /// uncached suffix.
+    pub prefix_cache_bytes: Option<usize>,
 }
 
 impl Default for KvCacheOpts {
     fn default() -> Self {
-        KvCacheOpts { page_tokens: 16, encoded: false }
+        KvCacheOpts { page_tokens: 16, encoded: false, prefix_cache_bytes: None }
     }
 }
 
 /// CPU decode engine: quantized weights (encoded-domain when the scheme
 /// supports it), on-the-fly activation quantization, and a paged —
-/// optionally BCQ-encoded — KV cache shared by all lanes.
+/// optionally BCQ-encoded — KV cache shared by all lanes, with optional
+/// cross-request prefix reuse through a radix tree over published
+/// pages.
 pub struct DecodeSession {
     cfg: ModelConfig,
     weights: Weights,
     act: Option<QuantPipeline>,
     cache: PagedKvCache,
+    /// Cross-request prefix tree (admission-time longest-prefix match,
+    /// publish on release). `None` when disabled.
+    prefix: Option<PrefixCache>,
+    /// Tokens fed to each slot so far (prompt + generated tokens whose
+    /// K/V has been appended) — the key material a release publishes
+    /// alongside the slot's pages. Indexed by slot id; empty when the
+    /// slot is dead.
+    slot_tokens: Vec<Vec<u32>>,
     scratch: DecodeScratch,
     encoded_weights: bool,
 }
@@ -106,9 +128,21 @@ impl DecodeSession {
         };
         let layout = KvLayout::for_model(&cfg, kv.page_tokens, max_concurrency);
         let cache = PagedKvCache::new(layout, store)?;
+        let prefix = kv
+            .prefix_cache_bytes
+            .map(|budget| PrefixCache::new(kv.page_tokens, cfg.n_layers * cfg.n_heads, budget));
         let (qw, encoded_weights) = scheme.serving_weights(&cfg, weights, pool);
         let act = scheme.act_pipeline(pool);
-        Ok(DecodeSession { cfg, weights: qw, act, cache, scratch: DecodeScratch::new(), encoded_weights })
+        Ok(DecodeSession {
+            cfg,
+            weights: qw,
+            act,
+            cache,
+            prefix,
+            slot_tokens: vec![Vec::new(); max_concurrency],
+            scratch: DecodeScratch::new(),
+            encoded_weights,
+        })
     }
 
     pub fn act_scheme_name(&self) -> String {
@@ -124,10 +158,17 @@ impl DecodeSession {
         self.cache.store_name()
     }
 
+    /// "off" / "on (budget N bytes)" — for the serve startup line.
+    pub fn prefix_mode(&self) -> String {
+        match &self.prefix {
+            None => "off".into(),
+            Some(t) => format!("on (budget {} bytes)", t.budget_bytes()),
+        }
+    }
+
     pub fn cache(&self) -> &PagedKvCache {
         &self.cache
     }
-
 }
 
 impl DecodeEngine for DecodeSession {
@@ -143,12 +184,48 @@ impl DecodeEngine for DecodeSession {
         self.cache.layout().max_tokens
     }
 
+    /// Admission: match the longest cached prefix (when the prefix
+    /// cache is on), pin its pages into the fresh slot, and prefill
+    /// **only the uncached suffix** — a warm hit turns an O(prompt²)
+    /// prefill into an O(suffix) one, bit-identical to the cold path.
     fn prefill(&mut self, prompt: &[u32]) -> anyhow::Result<(usize, Vec<f32>)> {
         let slot: SlotId = self.cache.alloc_slot()?;
-        match prefill(&self.cfg, &self.weights, &mut self.cache, slot, prompt, self.act.as_ref()) {
-            Ok(logits) => Ok((slot, logits)),
+        let mut offset = 0usize;
+        if let Some(tree) = self.prefix.as_mut() {
+            let m = tree.match_prefix(prompt);
+            if m.matched_tokens > 0 {
+                let partial = m.partial.as_ref().map(|(g, n)| (g.as_slice(), *n));
+                if let Err(e) = self.cache.adopt_prefix(slot, &m.full, partial) {
+                    // Frees any references the partial adoption took.
+                    self.cache.free_slot(slot);
+                    return Err(e);
+                }
+                offset = m.matched_tokens;
+            }
+        }
+        match prefill_from(
+            &self.cfg,
+            &self.weights,
+            &mut self.cache,
+            slot,
+            prompt,
+            offset,
+            self.act.as_ref(),
+            &mut self.scratch,
+        ) {
+            Ok(logits) => {
+                if offset > 0 {
+                    // Only now was the prefill work actually saved.
+                    if let Some(tree) = self.prefix.as_mut() {
+                        tree.record_hit(offset);
+                    }
+                }
+                self.slot_tokens[slot] = prompt.to_vec();
+                Ok((slot, logits))
+            }
             Err(e) => {
-                // A failed prefill must not leak the lane.
+                // A failed prefill must not leak the lane (or publish a
+                // half-filled history).
                 self.cache.free_slot(slot);
                 Err(e)
             }
@@ -156,7 +233,11 @@ impl DecodeEngine for DecodeSession {
     }
 
     fn decode(&mut self, lane: usize, token: u32) -> anyhow::Result<Vec<f32>> {
-        decode_step(&self.cfg, &self.weights, &mut self.cache, lane, token, self.act.as_ref(), &mut self.scratch)
+        let out = decode_step(&self.cfg, &self.weights, &mut self.cache, lane, token, self.act.as_ref(), &mut self.scratch)?;
+        // The fed token's K/V is now cached: record it so a later
+        // publish pairs every cached position with its token id.
+        self.slot_tokens[lane].push(token);
+        Ok(out)
     }
 
     /// The serving hot path: one fused forward over every live lane.
@@ -198,6 +279,7 @@ impl DecodeEngine for DecodeSession {
                 let v = self.cfg.vocab;
                 for (j, &i) in valid.iter().enumerate() {
                     out[i] = Ok(logits[j * v..(j + 1) * v].to_vec());
+                    self.slot_tokens[lanes[i]].push(tokens[i]);
                 }
             }
             Err(e) => {
@@ -212,12 +294,42 @@ impl DecodeEngine for DecodeSession {
         out
     }
 
+    /// Free a lane — but first publish its full KV pages into the
+    /// prefix tree, so the history this request paid to compute serves
+    /// the next request with the same prefix. Publishing happens while
+    /// the slot still holds its references (the tree retains novel
+    /// pages; `free_slot` then drops the slot's references, leaving the
+    /// tree as the surviving holder), after which the tree is trimmed
+    /// back to its byte budget.
     fn release(&mut self, lane: usize) {
+        if self.cache.is_live(lane) {
+            if let Some(tree) = self.prefix.as_mut() {
+                let tokens = &self.slot_tokens[lane];
+                // Only a history whose every cached position has a known
+                // token id is publishable (a mid-token engine fault can
+                // leave them out of step — then the pages just die with
+                // the slot as before).
+                if tokens.len() == self.cache.seq_len(lane) {
+                    let groups = self.cache.full_page_groups(lane);
+                    if !groups.is_empty() {
+                        tree.publish(tokens, &groups, self.cache.pool_mut());
+                    }
+                }
+            }
+            self.slot_tokens[lane].clear();
+        }
         self.cache.free_slot(lane);
+        if let Some(tree) = self.prefix.as_mut() {
+            tree.evict_to_budget(self.cache.pool_mut());
+        }
     }
 
     fn kv_stats(&self) -> Option<KvStats> {
         Some(self.cache.stats())
+    }
+
+    fn prefix_stats(&self) -> Option<PrefixStats> {
+        self.prefix.as_ref().map(|t| t.stats())
     }
 }
 
@@ -361,7 +473,7 @@ mod tests {
             &Scheme::Bf16,
             QuantPool::serial(),
             1,
-            KvCacheOpts { page_tokens: 4, encoded: true },
+            KvCacheOpts { page_tokens: 4, encoded: true, prefix_cache_bytes: None },
         )
         .unwrap();
         assert!(s.kv_mode().starts_with("KV4"), "{}", s.kv_mode());
@@ -445,6 +557,82 @@ mod tests {
         assert_eq!(e.batch_calls, 1);
         assert_eq!(e.max_batch_lanes, 2);
         assert!(out[0].is_ok() && out[1].is_err(), "poison not isolated");
+    }
+
+    #[test]
+    fn prefix_cache_reuses_published_pages_across_requests() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 56);
+        let kv = KvCacheOpts { page_tokens: 4, encoded: false, prefix_cache_bytes: Some(1 << 20) };
+        let mut warm =
+            DecodeSession::new(cfg.clone(), &w, &Scheme::Bf16, QuantPool::serial(), 1, kv.clone()).unwrap();
+        let mut cold = DecodeSession::new(
+            cfg.clone(),
+            &w,
+            &Scheme::Bf16,
+            QuantPool::serial(),
+            1,
+            KvCacheOpts { prefix_cache_bytes: None, ..kv },
+        )
+        .unwrap();
+        assert!(warm.prefix_mode().starts_with("on"), "{}", warm.prefix_mode());
+        assert_eq!(cold.prefix_mode(), "off");
+
+        let shared: Vec<u32> = (0..9).map(|i| (i * 3 + 1) % 40).collect();
+        let mk_prompt = |suffix: &[u32]| -> Vec<u32> {
+            shared.iter().copied().chain(suffix.iter().copied()).collect()
+        };
+        // Request A seeds the tree (2 full pages published on release).
+        let (a, _) = warm.prefill(&mk_prompt(&[20, 21])).unwrap();
+        let tok = warm.decode(a, 22).unwrap();
+        assert!(tok.iter().all(|x| x.is_finite()));
+        warm.release(a);
+        let s = warm.prefix_stats().unwrap();
+        assert_eq!(s.published_chunks, 3, "9+2 prompt +1 decode at pt=4: 3 full pages");
+        assert_eq!((s.lookups, s.hits), (1, 0), "first request can't hit an empty tree");
+
+        // Request B shares the 9-token prefix: the match covers the two
+        // full shared pages plus one CoW token, and the logits are
+        // bit-identical to the cold engine.
+        let prompt_b = mk_prompt(&[30, 31, 32]);
+        let (b, warm_logits) = warm.prefill(&prompt_b).unwrap();
+        let s = warm.prefix_stats().unwrap();
+        assert_eq!((s.lookups, s.hits), (2, 1), "shared prefix missed");
+        assert_eq!(s.saved_tokens, 9, "2 full pages + 1 CoW token should be adopted");
+        let (c, cold_logits) = cold.prefill(&prompt_b).unwrap();
+        for (col, (&g, &x)) in warm_logits.iter().zip(&cold_logits).enumerate() {
+            assert_eq!(g.to_bits(), x.to_bits(), "warm-hit logits diverged at col {col}");
+        }
+        // Decode after a warm hit stays bit-identical too.
+        let wd = warm.decode(b, 33).unwrap();
+        let cd = cold.decode(c, 33).unwrap();
+        for (col, (&g, &x)) in wd.iter().zip(&cd).enumerate() {
+            assert_eq!(g.to_bits(), x.to_bits(), "post-hit decode diverged at col {col}");
+        }
+        warm.release(b);
+        cold.release(c);
+        assert_eq!(warm.cache().live_slot_count(), 0);
+    }
+
+    #[test]
+    fn prefix_cache_eviction_respects_budget() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 57);
+        // A zero-byte budget: everything published is evicted as soon as
+        // no slot holds it, so every request misses but nothing leaks
+        // and nothing double-frees.
+        let kv = KvCacheOpts { page_tokens: 4, encoded: false, prefix_cache_bytes: Some(0) };
+        let mut s = DecodeSession::new(cfg, &w, &Scheme::Bf16, QuantPool::serial(), 1, kv).unwrap();
+        let prompt: Vec<u32> = (0..8).map(|i| i % 40).collect();
+        for _ in 0..3 {
+            let (lane, _) = s.prefill(&prompt).unwrap();
+            s.release(lane);
+        }
+        let st = s.prefix_stats().unwrap();
+        assert_eq!(st.hits, 0, "zero-budget tree retained pages");
+        assert_eq!(st.resident_bytes, 0);
+        assert!(st.evicted_bytes > 0);
+        assert_eq!(s.cache().stats().pages_in_use, 0, "pages leaked past eviction");
     }
 
     #[test]

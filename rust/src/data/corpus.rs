@@ -86,6 +86,49 @@ pub fn fingerprint(tokens: &[u32]) -> u64 {
     h
 }
 
+/// A deterministic serving workload with shared system prompts: `k`
+/// distinct prefixes and `n` requests, each a sampled prefix plus a
+/// request-unique suffix — the traffic shape the prefix cache exists
+/// for (`benches/perf_prefix.rs`, `tests/prefix_parity.rs`, and the
+/// `serve-cpu` synthetic swarm all draw from here, so they measure the
+/// same distribution).
+pub struct SharedPrefixWorkload {
+    /// The `k` system prompts, each `prefix_len` tokens.
+    pub prefixes: Vec<Vec<u32>>,
+    /// Per request: (index into `prefixes`, full prompt of
+    /// `prefix_len + suffix_len` tokens).
+    pub requests: Vec<(usize, Vec<u32>)>,
+}
+
+/// Build a [`SharedPrefixWorkload`]: prefixes and suffixes come from
+/// the grammar generator on seed-derived streams, and each request
+/// samples its prefix with the seeded RNG — fully deterministic in
+/// `(seed, k, n, prefix_len, suffix_len)`.
+pub fn shared_prefix_workload(
+    seed: u64,
+    k: usize,
+    n: usize,
+    prefix_len: usize,
+    suffix_len: usize,
+) -> SharedPrefixWorkload {
+    assert!(k >= 1 && prefix_len >= 1 && suffix_len >= 1);
+    let prefixes: Vec<Vec<u32>> =
+        (0..k).map(|j| generate(seed ^ (0x5151 + j as u64), prefix_len)).collect();
+    let mut rng = Pcg32::new(seed, 0x5AFE);
+    let requests = (0..n)
+        .map(|i| {
+            let j = (rng.next_u32() as usize) % k;
+            let mut prompt = prefixes[j].clone();
+            // Suffixes start past the generator's BOS so they diverge
+            // from token one.
+            let suffix = generate(seed ^ 0xD1FF ^ ((i as u64) << 8), suffix_len + 1);
+            prompt.extend_from_slice(&suffix[1..]);
+            (j, prompt)
+        })
+        .collect();
+    SharedPrefixWorkload { prefixes, requests }
+}
+
 /// Split a token stream into (N, t+1) next-token windows (stride = t).
 pub fn windows(tokens: &[u32], t: usize) -> Vec<Vec<u32>> {
     let mut out = Vec::new();
@@ -148,6 +191,33 @@ mod tests {
         let fp = fingerprint(&generate(5678, 10_000));
         assert_eq!(fp, fingerprint(&generate(5678, 10_000)));
         assert_ne!(fp, fingerprint(&generate(5678, 9_999)));
+    }
+
+    #[test]
+    fn shared_prefix_workload_is_deterministic_and_shares_exactly() {
+        let a = shared_prefix_workload(42, 3, 16, 12, 5);
+        let b = shared_prefix_workload(42, 3, 16, 12, 5);
+        assert_eq!(a.prefixes, b.prefixes);
+        assert_eq!(a.requests, b.requests);
+        assert_ne!(shared_prefix_workload(43, 3, 16, 12, 5).requests, a.requests);
+        assert_eq!(a.prefixes.len(), 3);
+        assert_eq!(a.requests.len(), 16);
+        let mut used = [false; 3];
+        for (j, prompt) in &a.requests {
+            assert_eq!(prompt.len(), 17);
+            assert!(prompt.iter().all(|&t| t < VOCAB));
+            assert_eq!(&prompt[..12], &a.prefixes[*j][..], "request lost its system prompt");
+            used[*j] = true;
+        }
+        // 16 draws over 3 prefixes must spread (a constant sampler
+        // would collapse onto one).
+        assert!(used.iter().filter(|&&u| u).count() >= 2, "sampler never varied its prefix");
+        // Same-prefix requests differ (unique suffixes).
+        let same: Vec<&Vec<u32>> =
+            a.requests.iter().filter(|(j, _)| *j == 0).map(|(_, p)| p).collect();
+        if same.len() >= 2 {
+            assert_ne!(same[0], same[1], "suffixes not unique");
+        }
     }
 
     #[test]

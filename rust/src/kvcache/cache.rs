@@ -11,6 +11,13 @@
 //! which is what lets the continuous batcher backfill a new request into
 //! the freed slot mid-batch.
 //!
+//! Cross-request reuse (DESIGN.md §Prefix cache): a new slot can
+//! [`adopt_prefix`](PagedKvCache::adopt_prefix) pages already holding
+//! its prompt's prefix — shared full pages are pinned by refcount,
+//! a divergence inside a page is copied-on-write — and on release
+//! [`full_page_groups`](PagedKvCache::full_page_groups) hands the
+//! slot's whole pages to the prefix tree instead of dropping them.
+//!
 //! Storage is either exact f32 ("KV16"-style reference) or LO-BCQ
 //! encoded ("KV4", ~4.9 bits/scalar at head_dim 64) — see
 //! [`KvQuantizer`](super::quant::KvQuantizer) for the format.
@@ -166,10 +173,13 @@ impl PagedKvCache {
         Ok(id)
     }
 
-    /// Release a slot, returning every page it owns to the free list.
-    /// Tolerates double-free (no-op on a dead slot).
+    /// Release a slot, dropping one reference on every page it holds
+    /// (exclusively-owned pages return to the free list; pages shared
+    /// with the prefix tree or other slots survive until their last
+    /// holder lets go). Tolerates double-free and out-of-range ids
+    /// (no-op on a dead slot).
     pub fn free_slot(&mut self, slot: SlotId) {
-        if !self.slots[slot].live {
+        if !self.is_live(slot) {
             return;
         }
         // Cached bytes only ever shrink here, so sampling the high-water
@@ -287,16 +297,23 @@ impl PagedKvCache {
         Ok(())
     }
 
-    /// Decode the full cached history of one (slot, layer, head, plane)
-    /// into `out` as a contiguous `[len, head_dim]` matrix (resized to
-    /// fit). Returns `len`. f32 pages copy; encoded pages decode through
-    /// the 16-entry codebook LUTs.
-    pub fn gather(&self, slot: SlotId, layer: usize, head: usize, plane: Plane, out: &mut Vec<f32>) -> usize {
-        let (nh, hd, pt) = (self.layout.n_heads, self.layout.head_dim, self.layout.page_tokens);
+    /// The one page-table walk every gather flavour shares: visits each
+    /// page of (slot, layer, head) covering the layer's cached history
+    /// in order, handing the visitor the page plus the token range it
+    /// contributes (`done..done + take`). Keeping the walk in one place
+    /// means the single-plane and both-planes gathers cannot drift on
+    /// page-boundary arithmetic.
+    fn walk_pages(
+        &self,
+        slot: SlotId,
+        layer: usize,
+        head: usize,
+        mut visit: impl FnMut(&super::pool::Page, usize, usize),
+    ) -> usize {
+        let (nh, pt) = (self.layout.n_heads, self.layout.page_tokens);
         let st = &self.slots[slot];
         assert!(st.live, "gather from dead slot {slot}");
         let len = st.lens[layer];
-        out.resize(len * hd, 0.0);
         let mut done = 0usize;
         let mut page_idx = 0usize;
         while done < len {
@@ -304,11 +321,26 @@ impl PagedKvCache {
             let page = self.pool.get(id);
             let take = page.filled.min(len - done);
             debug_assert_eq!(take, page.filled.min(pt));
-            page.gather(hd, self.quant.as_ref(), plane, &mut out[done * hd..(done + take) * hd]);
+            visit(page, done, take);
             done += take;
             page_idx += 1;
         }
         len
+    }
+
+    /// Decode the full cached history of one (slot, layer, head, plane)
+    /// into `out` as a contiguous `[len, head_dim]` matrix (resized to
+    /// fit). Returns `len`. f32 pages copy; encoded pages decode through
+    /// the 16-entry codebook LUTs.
+    pub fn gather(&self, slot: SlotId, layer: usize, head: usize, plane: Plane, out: &mut Vec<f32>) -> usize {
+        let hd = self.layout.head_dim;
+        let st = &self.slots[slot];
+        assert!(st.live, "gather from dead slot {slot}");
+        out.resize(st.lens[layer] * hd, 0.0);
+        let quant = self.quant.as_ref();
+        self.walk_pages(slot, layer, head, |page, done, take| {
+            page.gather(hd, quant, plane, &mut out[done * hd..(done + take) * hd]);
+        })
     }
 
     /// Gather **both planes** of one (slot, layer, head) in a single
@@ -324,25 +356,16 @@ impl PagedKvCache {
         k_out: &mut Vec<f32>,
         v_out: &mut Vec<f32>,
     ) -> usize {
-        let (nh, hd, pt) = (self.layout.n_heads, self.layout.head_dim, self.layout.page_tokens);
+        let hd = self.layout.head_dim;
         let st = &self.slots[slot];
         assert!(st.live, "gather from dead slot {slot}");
-        let len = st.lens[layer];
-        k_out.resize(len * hd, 0.0);
-        v_out.resize(len * hd, 0.0);
-        let mut done = 0usize;
-        let mut page_idx = 0usize;
-        while done < len {
-            let id = st.pages[layer][page_idx * nh + head];
-            let page = self.pool.get(id);
-            let take = page.filled.min(len - done);
-            debug_assert_eq!(take, page.filled.min(pt));
-            page.gather(hd, self.quant.as_ref(), Plane::K, &mut k_out[done * hd..(done + take) * hd]);
-            page.gather(hd, self.quant.as_ref(), Plane::V, &mut v_out[done * hd..(done + take) * hd]);
-            done += take;
-            page_idx += 1;
-        }
-        len
+        k_out.resize(st.lens[layer] * hd, 0.0);
+        v_out.resize(st.lens[layer] * hd, 0.0);
+        let quant = self.quant.as_ref();
+        self.walk_pages(slot, layer, head, |page, done, take| {
+            page.gather(hd, quant, Plane::K, &mut k_out[done * hd..(done + take) * hd]);
+            page.gather(hd, quant, Plane::V, &mut v_out[done * hd..(done + take) * hd]);
+        })
     }
 
     /// Page ids owned by a slot (aliasing introspection for tests and
@@ -353,10 +376,142 @@ impl PagedKvCache {
         st.pages.iter().flat_map(|ps| ps.iter().copied()).collect()
     }
 
-    /// Actual bytes of cached state across all live pages — O(1), read
-    /// from the incrementally-maintained counter (the serving metrics
-    /// sample this once per decode step). Debug builds cross-check it
-    /// against the full page walk.
+    /// Pin an already-cached token prefix into a freshly-allocated empty
+    /// slot (the prefix cache's admission-time hit path). `full` holds
+    /// one **page group** per fully-matched page of tokens — `n_layers *
+    /// n_heads` pool page ids, layer-major then head — and `partial`
+    /// optionally names the group and token count of a divergence
+    /// *inside* a page (the request shares only the first `m <
+    /// page_tokens` tokens of that page).
+    ///
+    /// Fully-matched pages are **shared**: each gets one more pool
+    /// reference and is never written through this slot (it is full, and
+    /// appends only ever touch the last, non-full page). The partial
+    /// group is **copy-on-write**: each page's first `m` vectors are
+    /// copied bit-exactly into a fresh exclusively-owned page the slot
+    /// can keep appending into. On success the slot reads as holding
+    /// `full.len() * page_tokens + m` tokens and `prefill_from` computes
+    /// only the suffix. Validates everything before mutating; on error
+    /// the caller frees the slot, which releases any references already
+    /// taken.
+    pub fn adopt_prefix(
+        &mut self,
+        slot: SlotId,
+        full: &[Vec<PageId>],
+        partial: Option<(&[PageId], usize)>,
+    ) -> anyhow::Result<()> {
+        let (nl, nh, pt) = (self.layout.n_layers, self.layout.n_heads, self.layout.page_tokens);
+        let group = nl * nh;
+        anyhow::ensure!(self.is_live(slot), "adopt into dead slot {slot}");
+        anyhow::ensure!(
+            self.slots[slot].lens.iter().all(|&l| l == 0),
+            "adopt into a non-empty slot {slot}"
+        );
+        let m_extra = match partial {
+            Some((g, m)) => {
+                anyhow::ensure!(g.len() == group, "partial group has {} pages, layout needs {group}", g.len());
+                anyhow::ensure!(m >= 1 && m < pt, "partial adoption of {m} tokens in a {pt}-token page");
+                for &id in g {
+                    anyhow::ensure!(
+                        self.pool.get(id).filled >= m,
+                        "partial source page {id} holds {} tokens, need {m}",
+                        self.pool.get(id).filled
+                    );
+                }
+                m
+            }
+            None => 0,
+        };
+        for g in full {
+            anyhow::ensure!(g.len() == group, "page group has {} pages, layout needs {group}", g.len());
+            for &id in g {
+                anyhow::ensure!(
+                    self.pool.get(id).filled == pt,
+                    "adopted page {id} holds {} tokens, not a full page",
+                    self.pool.get(id).filled
+                );
+            }
+        }
+        let total = full.len() * pt + m_extra;
+        anyhow::ensure!(total >= 1, "adopting an empty prefix");
+        anyhow::ensure!(total <= self.layout.max_tokens, "adopted prefix {total} > slot capacity {}", self.layout.max_tokens);
+
+        for g in full {
+            for layer in 0..nl {
+                for head in 0..nh {
+                    let id = g[layer * nh + head];
+                    self.pool.retain(id);
+                    self.cached_bytes += self.pool.get(id).state_bytes();
+                    self.slots[slot].pages[layer].push(id);
+                }
+            }
+        }
+        if let Some((g, m)) = partial {
+            for layer in 0..nl {
+                for head in 0..nh {
+                    let src = g[layer * nh + head];
+                    let dst = self.pool.alloc();
+                    self.pool.copy_prefix(src, dst, m, self.quant.as_ref());
+                    self.cached_bytes += self.pool.get(dst).state_bytes();
+                    self.slots[slot].pages[layer].push(dst);
+                }
+            }
+        }
+        for l in self.slots[slot].lens.iter_mut() {
+            *l = total;
+        }
+        Ok(())
+    }
+
+    /// Page groups of the slot's fully-filled page chunks, in prefix
+    /// order — what the prefix tree ingests when the slot is released.
+    /// Group `c` covers tokens `[c * page_tokens, (c+1) * page_tokens)`
+    /// and lists `n_layers * n_heads` page ids (layer-major then head),
+    /// mirroring [`adopt_prefix`](Self::adopt_prefix)'s expectation. A
+    /// slot caught mid-token (per-layer lengths ragged after a failed
+    /// append) publishes nothing.
+    pub fn full_page_groups(&self, slot: SlotId) -> Vec<Vec<PageId>> {
+        let (nl, nh, pt) = (self.layout.n_layers, self.layout.n_heads, self.layout.page_tokens);
+        let st = &self.slots[slot];
+        assert!(st.live, "page groups of a dead slot");
+        let len = st.lens.last().copied().unwrap_or(0);
+        if st.lens.iter().any(|&l| l != len) {
+            return Vec::new();
+        }
+        let chunks = len / pt;
+        let mut out = Vec::with_capacity(chunks);
+        for c in 0..chunks {
+            let mut g = Vec::with_capacity(nl * nh);
+            for layer in 0..nl {
+                for head in 0..nh {
+                    g.push(st.pages[layer][c * nh + head]);
+                }
+            }
+            out.push(g);
+        }
+        out
+    }
+
+    /// The underlying page pool — read access for refcount inspection.
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+
+    /// Mutable pool access for the prefix tree's retain/release
+    /// bookkeeping (publish and eviction). The tree only adjusts
+    /// refcounts through this; slot page tables stay cache-private.
+    pub fn pool_mut(&mut self) -> &mut PagePool {
+        &mut self.pool
+    }
+
+    /// Bytes of cached state summed over every live slot's page
+    /// references — O(1), read from the incrementally-maintained counter
+    /// (the serving metrics sample this once per decode step). A page
+    /// shared by several slots via prefix adoption counts once **per
+    /// slot** — this is the logical footprint the slots would need
+    /// without sharing; physical residency is what the prefix cache's
+    /// own `resident_bytes` plus the pool's live pages describe. Debug
+    /// builds cross-check the counter against the full page walk.
     pub fn state_bytes(&self) -> usize {
         debug_assert_eq!(
             self.cached_bytes,
@@ -581,6 +736,75 @@ mod tests {
         assert_eq!(st.pages_in_use, 0);
         assert_eq!(st.pages_peak, 8, "peak lost on release");
         assert_eq!(st.pages_capacity, 8);
+    }
+
+    #[test]
+    fn adopt_prefix_shares_full_pages_and_cows_the_partial_one() {
+        let lay = layout(4); // 2 layers, 2 heads, pt 4, max 16 tokens
+        let (nh, hd) = (lay.n_heads, lay.head_dim);
+        let d = nh * hd;
+        let mut cache = PagedKvCache::new(lay, KvStore::F32).unwrap();
+        let donor = cache.alloc_slot().unwrap();
+        let mut rng = Pcg32::seeded(0x9A80);
+        let mut appended: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        for _tok in 0..6 {
+            // 6 tokens at pt 4 = 1 full page + 2 tokens per (layer, head)
+            let (k, v) = rows(&mut rng, d);
+            for layer in 0..2 {
+                cache.append(donor, layer, &k, &v).unwrap();
+            }
+            appended.push((k, v));
+        }
+        let groups = cache.full_page_groups(donor);
+        assert_eq!(groups.len(), 1, "6 tokens at pt=4 should yield one full group");
+        assert_eq!(groups[0].len(), 2 * nh);
+        // The donor's second (partial) page group, layer-major × head.
+        let mut partial_group = Vec::new();
+        for layer in 0..2 {
+            for head in 0..nh {
+                partial_group.push(cache.page_ids(donor)[layer * 2 * nh + nh + head]);
+            }
+        }
+
+        let adopter = cache.alloc_slot().unwrap();
+        cache.adopt_prefix(adopter, &groups, Some((&partial_group, 2))).unwrap();
+        assert_eq!(cache.seq_len(adopter), 6);
+        // Full pages are shared (refcount 2), CoW pages are private.
+        for &id in &groups[0] {
+            assert_eq!(cache.pool().ref_count(id), 2, "full page not shared");
+        }
+        let adopter_pages = cache.page_ids(adopter);
+        for &id in &partial_group {
+            assert!(!adopter_pages.contains(&id), "partial page aliased instead of copied");
+        }
+        // The adopted history reads back exactly what the donor wrote.
+        let mut out = Vec::new();
+        for layer in 0..2 {
+            for head in 0..nh {
+                let n = cache.gather(adopter, layer, head, Plane::K, &mut out);
+                assert_eq!(n, 6);
+                for (t, (k, _)) in appended.iter().enumerate() {
+                    let want = &k[head * hd..(head + 1) * hd];
+                    assert_eq!(&out[t * hd..(t + 1) * hd], want, "layer {layer} head {head} tok {t}");
+                }
+            }
+        }
+        // Divergence: appending to the adopter fills its CoW page and
+        // must not disturb the donor.
+        let (k7, v7) = rows(&mut rng, d);
+        for layer in 0..2 {
+            cache.append(adopter, layer, &k7, &v7).unwrap();
+        }
+        let n = cache.gather(donor, 0, 0, Plane::K, &mut out);
+        assert_eq!(n, 6, "donor grew via the adopter's append");
+        assert_eq!(&out[5 * hd..6 * hd], &appended[5].0[..hd], "donor history corrupted");
+        // Donor release keeps the shared pages alive for the adopter.
+        cache.free_slot(donor);
+        let n = cache.gather(adopter, 1, 1, Plane::K, &mut out);
+        assert_eq!(n, 7);
+        assert_eq!(&out[..hd], &appended[0].0[hd..2 * hd], "shared page died with the donor");
+        // Misuse: adopting into a non-empty slot is rejected.
+        assert!(cache.adopt_prefix(adopter, &groups, None).is_err());
     }
 
     #[test]

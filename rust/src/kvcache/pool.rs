@@ -7,9 +7,20 @@
 //! by a slot; freeing returns them to the pool's free list where the
 //! next allocation reuses the storage (allocation-free steady state once
 //! the pool has grown to the working set).
+//!
+//! Pages are **refcounted** so the prefix cache can share one physical
+//! page between the radix tree and any number of adopted slots:
+//! [`alloc`](PagePool::alloc) hands out a page with one reference,
+//! [`retain`](PagePool::retain) adds a reference, and
+//! [`free`](PagePool::free) drops one — storage only returns to the free
+//! list when the last reference goes. A page with a single reference is
+//! **owned** (mutable: its holder may append); with more it is **shared**
+//! (immutable — [`get_mut`](PagePool::get_mut) debug-asserts exclusive
+//! ownership, so a write to a page another slot can see is caught in
+//! debug builds rather than silently corrupting a neighbour's history).
 
 use super::quant::KvQuantizer;
-use crate::quant::encode::BitWriter;
+use crate::quant::encode::{BitReader, BitWriter};
 
 /// Index into the pool's page table.
 pub type PageId = u32;
@@ -107,13 +118,66 @@ impl Page {
             _ => panic!("page store / quantizer mode mismatch"),
         }
     }
+
+    /// Copy-on-write seed: fill this (empty) page with the first `m`
+    /// token vectors of `src` — the divergence-inside-a-page case of
+    /// prefix adoption, where a request shares only part of a cached
+    /// page and must append into a private copy. f32 planes memcpy;
+    /// encoded planes copy the **bit streams** field by field (codes,
+    /// selectors, inverse scales), so the copy is bit-identical to the
+    /// source prefix with no decode/re-encode round trip (a re-encode
+    /// would recompute the effective scale from already-quantized values
+    /// and break bit-exactness).
+    fn copy_prefix_from(&mut self, src: &Page, m: usize, head_dim: usize, quant: Option<&KvQuantizer>) {
+        assert_eq!(self.filled, 0, "CoW copy into a non-empty page");
+        assert!(m <= src.filled, "copy {m} tokens from a page holding {}", src.filled);
+        match (&mut self.store, &src.store, quant) {
+            (PageStore::F32 { k, v }, PageStore::F32 { k: sk, v: sv }, None) => {
+                let n = m * head_dim;
+                k[..n].copy_from_slice(&sk[..n]);
+                v[..n].copy_from_slice(&sv[..n]);
+            }
+            (PageStore::Encoded { k, v }, PageStore::Encoded { k: sk, v: sv }, Some(q)) => {
+                copy_plane_prefix(k, sk, m, q);
+                copy_plane_prefix(v, sv, m, q);
+            }
+            _ => panic!("page store / quantizer mode mismatch"),
+        }
+        self.filled = m;
+    }
 }
 
-/// Page allocator with free-list reuse. Grows on demand; never shrinks
-/// (freed pages keep their storage for the next request).
+/// Copy the first `m` vectors of an encoded plane: vector `i`'s codes
+/// start at bit `i * head_dim * B` and its selectors at bit
+/// `i * (head_dim / L_b) * sel_bits` (the append-only stream layout
+/// `KvQuantizer::encode_vector` guarantees), so replaying the fields
+/// through a `BitReader` reproduces the source prefix bit for bit even
+/// when `m` vectors end mid-byte.
+fn copy_plane_prefix(dst: &mut EncPlane, src: &EncPlane, m: usize, q: &KvQuantizer) {
+    let (hd, lb, b) = (q.head_dim(), q.cfg().lb, q.cfg().b);
+    let sel_bits = q.sel_bits();
+    let mut cr = BitReader::new(src.codes.as_bytes());
+    for _ in 0..m * hd {
+        dst.codes.push(cr.read(b), b);
+    }
+    if sel_bits > 0 {
+        let mut sr = BitReader::new(src.sels.as_bytes());
+        for _ in 0..m * (hd / lb) {
+            dst.sels.push(sr.read(sel_bits), sel_bits);
+        }
+    }
+    dst.invs.extend_from_slice(&src.invs[..m]);
+}
+
+/// Page allocator with free-list reuse and per-page refcounts. Grows on
+/// demand; never shrinks (freed pages keep their storage for the next
+/// request).
 #[derive(Debug)]
 pub struct PagePool {
     pages: Vec<Page>,
+    /// References per page: 0 = on the free list, 1 = exclusively owned
+    /// (mutable), >1 = shared between the prefix tree and/or slots.
+    refs: Vec<u32>,
     free: Vec<PageId>,
     page_tokens: usize,
     head_dim: usize,
@@ -125,17 +189,27 @@ pub struct PagePool {
 impl PagePool {
     pub fn new(page_tokens: usize, head_dim: usize, encoded: bool) -> PagePool {
         assert!(page_tokens >= 1 && head_dim >= 1);
-        PagePool { pages: Vec::new(), free: Vec::new(), page_tokens, head_dim, encoded, peak_live: 0 }
+        PagePool {
+            pages: Vec::new(),
+            refs: Vec::new(),
+            free: Vec::new(),
+            page_tokens,
+            head_dim,
+            encoded,
+            peak_live: 0,
+        }
     }
 
     pub fn page_tokens(&self) -> usize {
         self.page_tokens
     }
 
-    /// Allocate a page, reusing a freed one when available.
+    /// Allocate a page (one reference), reusing a freed one when
+    /// available.
     pub fn alloc(&mut self) -> PageId {
         let id = if let Some(id) = self.free.pop() {
             debug_assert_eq!(self.pages[id as usize].filled, 0, "freed page not cleared");
+            debug_assert_eq!(self.refs[id as usize], 0, "free-listed page still referenced");
             id
         } else {
             let store = if self.encoded {
@@ -145,16 +219,50 @@ impl PagePool {
                 PageStore::F32 { k: vec![0.0; n], v: vec![0.0; n] }
             };
             self.pages.push(Page { store, filled: 0 });
+            self.refs.push(0);
             (self.pages.len() - 1) as PageId
         };
+        self.refs[id as usize] = 1;
         // Live count only grows inside alloc, so sampling here keeps the
         // high-water mark exact without a counter on the free path.
         self.peak_live = self.peak_live.max(self.live_pages());
         id
     }
 
-    /// Return a page to the free list (contents cleared, storage kept).
+    /// Add a reference to a live page (prefix-tree publish / slot
+    /// adoption). The page becomes shared and therefore immutable until
+    /// references drop back to one.
+    pub fn retain(&mut self, id: PageId) {
+        assert!(self.refs[id as usize] > 0, "retain of a free page {id}");
+        self.refs[id as usize] += 1;
+    }
+
+    /// References currently held on `id` (0 = free-listed).
+    pub fn ref_count(&self, id: PageId) -> u32 {
+        self.refs[id as usize]
+    }
+
+    /// Whether more than one holder references `id`.
+    pub fn is_shared(&self, id: PageId) -> bool {
+        self.refs[id as usize] > 1
+    }
+
+    /// Drop one reference. Storage returns to the free list (contents
+    /// cleared, allocation kept) only when the **last** reference goes.
+    /// Releasing a page that has no references is a double free — the
+    /// debug assert below turns the silent pool corruption (one page
+    /// handed to two owners) into an immediate failure; the refcount
+    /// floor at zero keeps release builds from wrapping.
     pub fn free(&mut self, id: PageId) {
+        let rc = &mut self.refs[id as usize];
+        debug_assert!(*rc > 0, "double free of page {id} (no references held)");
+        if *rc == 0 {
+            return; // release-build double free: refuse rather than corrupt
+        }
+        *rc -= 1;
+        if *rc > 0 {
+            return; // still referenced by the tree or another slot
+        }
         let page = &mut self.pages[id as usize];
         page.filled = 0;
         match &mut page.store {
@@ -164,7 +272,7 @@ impl PagePool {
                 v.clear();
             }
         }
-        debug_assert!(!self.free.contains(&id), "double free of page {id}");
+        debug_assert!(!self.free.contains(&id), "double free of page {id} (already free-listed)");
         self.free.push(id);
     }
 
@@ -172,8 +280,36 @@ impl PagePool {
         &self.pages[id as usize]
     }
 
+    /// Mutable page access — only legal on an exclusively-owned page
+    /// (refcount exactly 1): shared pages may be read by other slots or
+    /// the prefix tree, so mutating one would corrupt a neighbour's
+    /// history.
     pub fn get_mut(&mut self, id: PageId) -> &mut Page {
+        debug_assert_eq!(
+            self.refs[id as usize],
+            1,
+            "mutable access to page {id} with {} references",
+            self.refs[id as usize]
+        );
         &mut self.pages[id as usize]
+    }
+
+    /// Seed `dst` (a fresh, empty, exclusively-owned page) with the
+    /// first `m` token vectors of `src` — the copy-on-write step of
+    /// prefix adoption. Bit-identical to the source prefix (see
+    /// [`Page::copy_prefix_from`]).
+    pub fn copy_prefix(&mut self, src: PageId, dst: PageId, m: usize, quant: Option<&KvQuantizer>) {
+        assert_ne!(src, dst, "CoW copy onto the source page");
+        debug_assert_eq!(self.refs[dst as usize], 1, "CoW target must be exclusively owned");
+        let (s, d) = (src as usize, dst as usize);
+        let (from, to) = if s < d {
+            let (lo, hi) = self.pages.split_at_mut(d);
+            (&lo[s], &mut hi[0])
+        } else {
+            let (lo, hi) = self.pages.split_at_mut(s);
+            (&hi[0], &mut lo[d])
+        };
+        to.copy_prefix_from(from, m, self.head_dim, quant);
     }
 
     /// Pages ever created.
@@ -253,5 +389,100 @@ mod tests {
         let id = pool.alloc();
         pool.get_mut(id).append(1, 4, None, &[1.0; 4], &[2.0; 4]);
         pool.get_mut(id).append(1, 4, None, &[1.0; 4], &[2.0; 4]);
+    }
+
+    #[test]
+    fn retained_page_survives_one_free_and_dies_on_the_last() {
+        let mut pool = PagePool::new(2, 4, false);
+        let id = pool.alloc();
+        pool.get_mut(id).append(2, 4, None, &[1.0; 4], &[2.0; 4]);
+        pool.retain(id);
+        assert_eq!(pool.ref_count(id), 2);
+        assert!(pool.is_shared(id));
+        pool.free(id); // first holder lets go
+        assert_eq!(pool.ref_count(id), 1);
+        assert_eq!(pool.live_pages(), 1, "shared page freed too early");
+        assert_eq!(pool.get(id).filled, 1, "contents cleared while still referenced");
+        pool.free(id); // last holder
+        assert_eq!(pool.ref_count(id), 0);
+        assert_eq!(pool.live_pages(), 0);
+        let again = pool.alloc();
+        assert_eq!(again, id, "storage not recycled after last release");
+        assert_eq!(pool.get(again).filled, 0);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_is_caught_in_debug_builds() {
+        let mut pool = PagePool::new(2, 4, false);
+        let id = pool.alloc();
+        pool.free(id);
+        pool.free(id);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "mutable access")]
+    fn shared_pages_reject_mutation_in_debug_builds() {
+        let mut pool = PagePool::new(2, 4, false);
+        let id = pool.alloc();
+        pool.retain(id);
+        let _ = pool.get_mut(id);
+    }
+
+    #[test]
+    fn f32_copy_prefix_is_exact() {
+        let (pt, hd) = (4usize, 8usize);
+        let mut pool = PagePool::new(pt, hd, false);
+        let src = pool.alloc();
+        let rows: Vec<Vec<f32>> = (0..3).map(|t| (0..hd).map(|j| (t * hd + j) as f32).collect()).collect();
+        for r in &rows {
+            let neg: Vec<f32> = r.iter().map(|x| -x).collect();
+            pool.get_mut(src).append(pt, hd, None, r, &neg);
+        }
+        let dst = pool.alloc();
+        pool.copy_prefix(src, dst, 2, None);
+        let page = pool.get(dst);
+        assert_eq!(page.filled, 2);
+        let mut out = vec![0.0f32; 2 * hd];
+        page.gather(hd, None, Plane::K, &mut out);
+        assert_eq!(&out[..hd], &rows[0][..]);
+        assert_eq!(&out[hd..], &rows[1][..]);
+        page.gather(hd, None, Plane::V, &mut out);
+        assert_eq!(out[0], -rows[0][0]);
+    }
+
+    #[test]
+    fn encoded_copy_prefix_is_bit_identical_and_appendable() {
+        use crate::util::rng::{llm_like_sample, Pcg32};
+        // head_dim 16, L_b 8 → 6 selector bits per vector: vectors end
+        // mid-byte, exercising the unaligned bit-stream copy.
+        let (pt, hd) = (4usize, 16usize);
+        let mut rng = Pcg32::seeded(0xC0E);
+        let sample = llm_like_sample(&mut rng, hd * 32, 0.05, 4.0);
+        let q = KvQuantizer::calibrated(hd, &sample, 7).unwrap();
+        let mut pool = PagePool::new(pt, hd, true);
+        let src = pool.alloc();
+        let rows: Vec<Vec<f32>> = (0..3).map(|_| llm_like_sample(&mut rng, hd, 0.05, 4.0)).collect();
+        for r in &rows {
+            pool.get_mut(src).append(pt, hd, Some(&q), r, r);
+        }
+        let dst = pool.alloc();
+        pool.copy_prefix(src, dst, 2, Some(&q));
+        let (mut a, mut b) = (vec![0.0f32; 2 * hd], vec![0.0f32; 3 * hd]);
+        pool.get(dst).gather(hd, Some(&q), Plane::K, &mut a);
+        pool.get(src).gather(hd, Some(&q), Plane::K, &mut b);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "copied vector diverged at scalar {i}");
+        }
+        // The copy must be appendable: continue it with a new row and
+        // check the appended vector decodes exactly like a fresh encode.
+        pool.get_mut(dst).append(pt, hd, Some(&q), &rows[2], &rows[2]);
+        let mut c = vec![0.0f32; 3 * hd];
+        pool.get(dst).gather(hd, Some(&q), Plane::K, &mut c);
+        for (i, (x, y)) in c.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "post-copy append diverged at scalar {i}");
+        }
     }
 }

@@ -42,6 +42,7 @@ pub mod tensor;
 pub mod util;
 pub mod kernels;
 pub mod kvcache;
+pub mod prefixcache;
 pub mod quant;
 pub mod data;
 pub mod model;

@@ -184,6 +184,8 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
         OptSpec { name: "engine", help: "continuous (cached decode) | batch (full-window executor)", takes_value: true, default: Some("continuous") },
         OptSpec { name: "kv", help: "KV cache store: bcq (~4.9 bits/scalar) | f32", takes_value: true, default: Some("bcq") },
         OptSpec { name: "page-tokens", help: "KV cache page size in tokens", takes_value: true, default: Some("16") },
+        OptSpec { name: "prefix-cache", help: "cross-request prefix cache budget (bytes, k/m/g suffix ok) or 'off'", takes_value: true, default: Some("16m") },
+        OptSpec { name: "prefix-k", help: "distinct system prompts in the synthetic workload", takes_value: true, default: Some("4") },
         OptSpec { name: "requests", help: "synthetic request count", takes_value: true, default: Some("32") },
         OptSpec { name: "max-new", help: "tokens to generate per request", takes_value: true, default: Some("4") },
         OptSpec { name: "max-batch", help: "dynamic batch limit / decode lanes", takes_value: true, default: Some("8") },
@@ -224,22 +226,29 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
 
     let t = 32.min(cfg.max_t);
     let vocab = cfg.vocab as u32;
+    let page_tokens = args.usize_or("page-tokens", 16)?.max(1);
     let engine = args.str_or("engine", "continuous");
     let server = match engine {
         "continuous" => {
-            let kv = match args.str_or("kv", "bcq") {
-                "bcq" => KvCacheOpts { page_tokens: args.usize_or("page-tokens", 16)?.max(1), encoded: true },
-                "f32" => KvCacheOpts { page_tokens: args.usize_or("page-tokens", 16)?.max(1), encoded: false },
+            let encoded = match args.str_or("kv", "bcq") {
+                "bcq" => true,
+                "f32" => false,
                 other => anyhow::bail!("unknown kv store '{other}' (bcq|f32)"),
+            };
+            let kv = KvCacheOpts {
+                page_tokens,
+                encoded,
+                prefix_cache_bytes: args.bytes_opt("prefix-cache")?,
             };
             let session = DecodeSession::new(cfg.clone(), &weights, &scheme, pool, max_batch, kv)?;
             println!(
-                "[serve-cpu] model {} ({} params), scheme {}, weights {}, kv {}, lanes {max_batch}",
+                "[serve-cpu] model {} ({} params), scheme {}, weights {}, kv {}, lanes {max_batch}, prefix cache {}",
                 cfg.name,
                 cfg.param_count(),
                 session.act_scheme_name(),
                 session.weight_mode(),
-                session.kv_mode()
+                session.kv_mode(),
+                session.prefix_mode()
             );
             // The cached engine holds full histories (no sliding window);
             // any prompt up to `t` prefills, and the scheduler caps each
@@ -274,17 +283,33 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown engine '{other}' (continuous|batch)"),
     };
 
-    println!("[serve-cpu] firing {n_requests} requests (max_new {max_new})");
+    // Shared-prefix swarm: K distinct system prompts, request-unique
+    // suffixes — the traffic shape that exercises the prefix cache (the
+    // batch engine serves the same prompts, just without reuse). The
+    // shared prefix spans at least one full page (else no page would
+    // ever be publishable), capped so prefix + suffix still fits the
+    // prompt limit.
+    let prefix_k = args.usize_or("prefix-k", 4)?.max(1);
+    let suffix_len = 8usize.min(t.saturating_sub(2).max(1));
+    let prefix_len = page_tokens.clamp(1, t.saturating_sub(suffix_len).max(1));
+    if prefix_len < page_tokens {
+        // The shared prefix must span one whole page to ever be
+        // published/adopted; with this page size and prompt limit it
+        // can't, so the run would report 0% hits by construction.
+        println!(
+            "[serve-cpu] WARNING: --page-tokens {page_tokens} exceeds the {prefix_len}-token shared \
+             prefix that fits max_prompt {t}; the prefix cache cannot get hits at this page size"
+        );
+    }
+    let workload = corpus::shared_prefix_workload(9100, prefix_k, n_requests, prefix_len, suffix_len);
+    println!("[serve-cpu] firing {n_requests} requests (max_new {max_new}, {prefix_k} shared prefixes)");
     let t0 = Instant::now();
     let server = std::sync::Arc::new(server);
     let mut handles = Vec::new();
-    for i in 0..n_requests {
+    for (_, prompt) in workload.requests {
         let s = server.clone();
-        handles.push(std::thread::spawn(move || {
-            let prompt: Vec<u32> =
-                corpus::generate(9100 + i as u64, 12).into_iter().map(|x| x % vocab).collect();
-            s.submit(prompt, max_new).unwrap().wait()
-        }));
+        let prompt: Vec<u32> = prompt.into_iter().map(|x| x % vocab).collect();
+        handles.push(std::thread::spawn(move || s.submit(prompt, max_new).unwrap().wait()));
     }
     let mut ok = 0;
     for h in handles {

@@ -1,9 +1,10 @@
-//! Incremental forward: `prefill` fills the KV cache for a prompt,
-//! `decode_step` runs **one token** against the cached history, and
-//! `decode_step_batch` runs **one fused forward for every live lane** of
-//! a scheduler step — O(len) attention work per token instead of the
-//! full forward's O(t²) re-score, and only the frontier rows of logits
-//! are ever materialized.
+//! Incremental forward: `prefill_from` fills the KV cache for the
+//! uncached part of a prompt (all of it when cold; only the suffix
+//! after a prefix-cache hit), `decode_step` runs **one token** against
+//! the cached history, and `decode_step_batch` runs **one fused forward
+//! for every live lane** of a scheduler step — O(len) attention work
+//! per token instead of the full forward's O(t²) re-score, and only the
+//! frontier rows of logits are ever materialized.
 //!
 //! Numerics: with an f32 (KV16) cache the pair (prefill, decode_step)
 //! reproduces [`forward`](super::forward::forward) — every sub-step is
@@ -13,8 +14,12 @@
 //! kernel's accumulation order (scores reduce over `head_dim < KC` in
 //! one block; context reduces over tokens in the same `KC`-sized chunks
 //! `kernels::gemm` uses). The decode-parity suite pins this. With a
-//! BCQ-encoded (KV4) cache the gathered history is the quantized
-//! decode of each vector — the KV4-vs-KV16 ablation in EXPERIMENTS.md.
+//! BCQ-encoded (KV4) cache **all** attention — prefill included — reads
+//! the quantized history back from the cache, so the K/V at a position
+//! depends only on the token prefix, never on where the prefill/decode
+//! boundary fell: the invariant that lets the prefix cache share pages
+//! across requests bit-exactly (see `prefill_from`), and the KV4-vs-KV16
+//! ablation in EXPERIMENTS.md.
 //!
 //! Batching (DESIGN.md §Batched decode): `decode_step_batch` stacks the
 //! per-lane frontier tokens into a `(lanes, d)` activation matrix and
@@ -34,7 +39,6 @@ use crate::kvcache::{PagedKvCache, SlotId};
 use crate::model::config::ModelConfig;
 use crate::model::forward::{gelu, layer_norm_flat, qmatmul_rows_into, softmax_rows, ActQuant};
 use crate::model::weights::Weights;
-use crate::tensor::Tensor;
 
 /// Reusable state for [`decode_step`] / [`decode_step_batch`]: every
 /// per-token temporary of the decode hot loop — the stacked activation
@@ -155,16 +159,11 @@ impl LayerNames {
     }
 }
 
-/// Fill `slot` with a prompt: runs the **reference transformer stack
-/// itself** (`forward_hidden_with`, batch = 1) with a per-layer K/V sink
-/// that appends every position's K/V rows to the cache as each layer's
-/// QKV projection completes — attention runs over the exact in-flight
-/// values, decode steps are what read the cache back (quantized, in
-/// encoded mode). Because the layer code is shared rather than
-/// mirrored, prefill cannot drift numerically from the full forward.
-/// Returns the **last position's** logits (`vocab` floats) — the only
-/// row the decode loop samples. Requires an empty slot (chunked prefill
-/// is future work).
+/// Fill `slot` with a whole prompt — [`prefill_from`] at offset 0 with
+/// a scratch of its own. Kept as the convenience entry point for tests
+/// and benches; the serving session calls [`prefill_from`] directly so
+/// prefix-cache hits skip the cached tokens and the session's scratch
+/// is reused across requests.
 pub fn prefill(
     cfg: &ModelConfig,
     w: &Weights,
@@ -173,29 +172,169 @@ pub fn prefill(
     tokens: &[u32],
     act_q: ActQuant,
 ) -> anyhow::Result<Vec<f32>> {
+    let mut scratch = DecodeScratch::new();
+    prefill_from(cfg, w, cache, slot, tokens, 0, act_q, &mut scratch)
+}
+
+/// Prefill `slot` with the **uncached suffix** of a prompt: the cache
+/// already holds `offset` tokens (0 for a cold prompt; the adopted
+/// prefix length on a prefix-cache hit), and this computes positions
+/// `offset..tokens.len()` only — the saved prefill work is exactly what
+/// the prefix cache exists to harvest. Returns the **last position's**
+/// logits (`vocab` floats), the only row the decode loop samples.
+///
+/// Numerics: the suffix runs as one `(m, d)` stacked forward — each
+/// projection/FFN GEMM once over all suffix rows — and attention is
+/// computed **against the cache** (per row, over the gathered history at
+/// that row's position), in the same accumulation order `decode_step`
+/// uses. Consequences, both load-bearing:
+///
+/// - With an f32 cache the gathered history equals the in-flight values,
+///   so prefill reproduces the full forward bit for bit (pinned by the
+///   decode-parity suite).
+/// - With a BCQ (KV4) cache, attention reads the **quantized** history —
+///   the same values any later decode step would read. The K/V appended
+///   at position `p` is therefore a deterministic function of
+///   `tokens[..=p]` and the weights alone, independent of where the
+///   prefill/decode boundary fell or which pages were adopted — which is
+///   what makes a warm (adopted-prefix) prefill bit-identical to a cold
+///   one (`tests/prefix_parity.rs`) and cached pages safe to share
+///   across requests.
+///
+/// Known tradeoff: the per-row score/context reductions here are the
+/// scalar decode-mirror of the blocked kernel, not the packed-GEMM
+/// attention the old full-prompt prefill ran — bit-identical by the
+/// kernel's KC-accumulation contract, but without its SIMD constants,
+/// so a cold prefill's O(t²·hd) attention runs slower than the PR2
+/// kernels could make it. Routing the gathered history through
+/// `PackedB` panels (plus a causal mask) would keep the same bits and
+/// recover that speed; it is left as follow-up rather than risked
+/// here.
+#[allow(clippy::too_many_arguments)]
+pub fn prefill_from(
+    cfg: &ModelConfig,
+    w: &Weights,
+    cache: &mut PagedKvCache,
+    slot: SlotId,
+    tokens: &[u32],
+    offset: usize,
+    act_q: ActQuant,
+    scratch: &mut DecodeScratch,
+) -> anyhow::Result<Vec<f32>> {
     anyhow::ensure!(!tokens.is_empty(), "empty prompt");
-    anyhow::ensure!(cache.seq_len(slot) == 0, "prefill into a non-empty slot");
+    anyhow::ensure!(offset < tokens.len(), "prefill offset {offset} >= prompt length {}", tokens.len());
     let lay = cache.layout();
     anyhow::ensure!(
         lay.n_layers == cfg.n_layers && lay.n_heads == cfg.n_heads && lay.head_dim == cfg.head_dim(),
         "cache layout does not match model config"
     );
     anyhow::ensure!(tokens.len() <= lay.max_tokens, "prompt {} > cache capacity {}", tokens.len(), lay.max_tokens);
-    let (t, d) = (tokens.len(), cfg.d);
+    anyhow::ensure!(tokens.len() <= cfg.max_t, "prompt {} > max_t {}", tokens.len(), cfg.max_t);
+    let max_tokens = lay.max_tokens;
+    anyhow::ensure!(
+        cache.seq_len(slot) == offset,
+        "cache holds {} tokens for slot {slot}, prefill expects {offset}",
+        cache.seq_len(slot)
+    );
+    for &tok in &tokens[offset..] {
+        anyhow::ensure!((tok as usize) < cfg.vocab, "token {tok} out of vocab");
+    }
+    let (d, hd) = (cfg.d, cfg.head_dim());
+    let m = tokens.len() - offset;
+    let scale = 1.0 / (hd as f32).sqrt();
+    scratch.pin_attention_capacity(max_tokens, hd);
 
-    let mut sink = |layer: usize, qkv: &Tensor| -> anyhow::Result<()> {
-        for r in 0..t {
-            let row = qkv.row(r);
-            cache.append(slot, layer, &row[d..2 * d], &row[2 * d..3 * d])?;
+    // ---- embed the suffix: x[r] = embed[tok_{offset+r}] + pos[offset+r] ----
+    let embed = w.get("embed")?;
+    let ppos = w.get("pos")?;
+    scratch.x.resize(m * d, 0.0);
+    for r in 0..m {
+        let (e, p) = (embed.row(tokens[offset + r] as usize), ppos.row(offset + r));
+        for (o, (&a, &b)) in scratch.x[r * d..(r + 1) * d].iter_mut().zip(e.iter().zip(p)) {
+            *o = a + b;
         }
-        Ok(())
-    };
-    let x = crate::model::forward::forward_hidden_with(cfg, w, tokens, 1, act_q, &mut sink)?;
+    }
 
-    // Frontier-only LM head: one (1, d) row against the cached panel.
-    let last = Tensor::new(&[1, d], x.row(t - 1).to_vec());
+    scratch.ctx.resize(hd, 0.0);
+    scratch.acc.resize(hd, 0.0);
+    scratch.ensure_names(cfg.n_layers);
+    for li in 0..cfg.n_layers {
+        let names = &scratch.names[li];
+        // --- attention block: one fused QKV GEMM over the suffix, then
+        // append every row's K/V before attending, so one gather per
+        // head serves all suffix rows (row r reads its causal prefix of
+        // the gathered history) ---
+        scratch.h.clear();
+        scratch.h.extend_from_slice(&scratch.x);
+        layer_norm_flat(&mut scratch.h, d, w.get(&names.ln1_g)?, w.get(&names.ln1_b)?, 1e-5);
+        qmatmul_rows_into(w, &names.wqkv, &scratch.h, m, d, act_q, &mut scratch.qkv, &mut scratch.aq, &mut scratch.panel)?; // (m, 3D)
+        for r in 0..m {
+            let row = &scratch.qkv[r * 3 * d..(r + 1) * 3 * d];
+            cache.append(slot, li, &row[d..2 * d], &row[2 * d..3 * d])?;
+        }
+        scratch.attn.resize(m * d, 0.0);
+        for head in 0..cfg.n_heads {
+            let off = head * hd;
+            let len = cache.gather_kv(slot, li, head, &mut scratch.k, &mut scratch.v);
+            debug_assert_eq!(len, offset + m);
+            for r in 0..m {
+                let n = offset + r + 1; // this row's causal span
+                let qbase = r * 3 * d;
+                scratch.scores.resize(n, 0.0);
+                for (j, s) in scratch.scores.iter_mut().enumerate() {
+                    let q = &scratch.qkv[qbase + off..qbase + off + hd];
+                    let krow = &scratch.k[j * hd..(j + 1) * hd];
+                    let mut acc = 0.0f32;
+                    for (a, b) in q.iter().zip(krow) {
+                        acc += a * b;
+                    }
+                    *s = acc * scale;
+                }
+                softmax_rows(&mut scratch.scores, n);
+                scratch.ctx.fill(0.0);
+                let mut j0 = 0usize;
+                while j0 < n {
+                    let jc = KC.min(n - j0);
+                    scratch.acc.fill(0.0);
+                    for j in j0..j0 + jc {
+                        let pj = scratch.scores[j];
+                        let vrow = &scratch.v[j * hd..(j + 1) * hd];
+                        for (a, &b) in scratch.acc.iter_mut().zip(vrow) {
+                            *a += pj * b;
+                        }
+                    }
+                    for (c, &a) in scratch.ctx.iter_mut().zip(scratch.acc.iter()) {
+                        *c += a;
+                    }
+                    j0 += jc;
+                }
+                scratch.attn[r * d + off..r * d + off + hd].copy_from_slice(&scratch.ctx);
+            }
+        }
+        qmatmul_rows_into(w, &names.wo, &scratch.attn, m, d, act_q, &mut scratch.proj, &mut scratch.aq, &mut scratch.panel)?;
+        for (xv, pv) in scratch.x.iter_mut().zip(&scratch.proj) {
+            *xv += pv;
+        }
+
+        // --- MLP block: two fused GEMMs over the suffix ---
+        scratch.h.clear();
+        scratch.h.extend_from_slice(&scratch.x);
+        layer_norm_flat(&mut scratch.h, d, w.get(&names.ln2_g)?, w.get(&names.ln2_b)?, 1e-5);
+        let d_ff = qmatmul_rows_into(w, &names.w1, &scratch.h, m, d, act_q, &mut scratch.ff, &mut scratch.aq, &mut scratch.panel)?;
+        gelu(&mut scratch.ff);
+        qmatmul_rows_into(w, &names.w2, &scratch.ff, m, d_ff, act_q, &mut scratch.proj, &mut scratch.aq, &mut scratch.panel)?;
+        for (xv, dv) in scratch.x.iter_mut().zip(&scratch.proj) {
+            *xv += dv;
+        }
+    }
+
+    // Frontier-only LM head: layer-norm is row-independent, so norm the
+    // whole suffix (cheap) but run the vocab GEMM on the last row only.
+    layer_norm_flat(&mut scratch.x, d, w.get("lnf.g")?, w.get("lnf.b")?, 1e-5);
     let head = w.packed_transposed("embed")?;
-    Ok(crate::kernels::gemm_packed(&last, &head).data)
+    scratch.logits.resize(cfg.vocab, 0.0);
+    kernels::gemm_into_flat_with(&scratch.x[(m - 1) * d..m * d], 1, d, &*head, &mut scratch.logits, &mut scratch.panel);
+    Ok(scratch.logits[..cfg.vocab].to_vec())
 }
 
 /// Per-lane admission check for a decode step, shared by
@@ -493,6 +632,46 @@ mod tests {
                 }
             }
             assert_eq!(cache.seq_len(slot), tokens.len());
+        }
+    }
+
+    #[test]
+    fn suffix_prefill_matches_whole_prompt_prefill_bitwise() {
+        // prefill(tokens[..k]) then prefill_from(tokens, k) must equal
+        // prefill(tokens) to the bit — the property a prefix-cache warm
+        // hit relies on (the adopted prefix plays the role of the first
+        // chunk). Checked on f32 and BCQ-encoded KV stores.
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 46);
+        let tokens: Vec<u32> = (0..12).map(|i| (i * 5 % 40) as u32).collect();
+        let hd = cfg.head_dim();
+        let sample: Vec<f32> = w.get("l0.attn.wqkv").unwrap().data.clone();
+        for encoded in [false, true] {
+            let mk = || {
+                let store = if encoded {
+                    KvStore::Encoded(KvQuantizer::calibrated(hd, &sample[..hd * 32], 9).unwrap())
+                } else {
+                    KvStore::F32
+                };
+                PagedKvCache::new(KvLayout::for_model(&cfg, 4, 1), store).unwrap()
+            };
+            let mut cold = mk();
+            let cs = cold.alloc_slot().unwrap();
+            let want = prefill(&cfg, &w, &mut cold, cs, &tokens, None).unwrap();
+            for split in [1usize, 4, 6, 11] {
+                let mut warm = mk();
+                let ws = warm.alloc_slot().unwrap();
+                let mut scratch = DecodeScratch::new();
+                prefill(&cfg, &w, &mut warm, ws, &tokens[..split], None).unwrap();
+                let got =
+                    prefill_from(&cfg, &w, &mut warm, ws, &tokens, split, None, &mut scratch).unwrap();
+                assert_eq!(warm.seq_len(ws), tokens.len());
+                for (c, (&g, &x)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.to_bits(), x.to_bits(), "encoded={encoded} split {split} col {c}");
+                }
+                // Misuse: wrong offset for the cache position.
+                assert!(prefill_from(&cfg, &w, &mut warm, ws, &tokens, 3, None, &mut scratch).is_err());
+            }
         }
     }
 

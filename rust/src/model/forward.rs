@@ -174,26 +174,11 @@ pub fn forward_logits_at(
 
 /// The transformer stack up to and including the final layer norm:
 /// returns hidden states `(B*T, d)`. Shared by [`forward`] (full LM
-/// head), [`forward_logits_at`] (frontier-only LM head), and — through
-/// [`forward_hidden_with`]'s K/V sink — `model::decode::prefill`.
+/// head) and [`forward_logits_at`] (frontier-only LM head). The cached
+/// serving path (`model::decode::prefill_from`) runs its own stacked
+/// suffix forward that attends against the paged KV cache; the
+/// decode-parity suite pins the two bit-identical on an f32 cache.
 pub(crate) fn forward_hidden(cfg: &ModelConfig, w: &Weights, tokens: &[u32], batch: usize, act_q: ActQuant) -> anyhow::Result<Tensor> {
-    forward_hidden_with(cfg, w, tokens, batch, act_q, &mut |_, _| Ok(()))
-}
-
-/// [`forward_hidden`] with a per-layer observer: `kv_sink(layer, qkv)`
-/// fires right after each layer's QKV projection, before attention.
-/// This is the seam `model::decode::prefill` uses to append the
-/// prompt's K/V rows to the paged cache while running the **identical**
-/// reference layer code — no duplicated transformer loop, so cached
-/// prefill cannot drift numerically from the full forward.
-pub(crate) fn forward_hidden_with(
-    cfg: &ModelConfig,
-    w: &Weights,
-    tokens: &[u32],
-    batch: usize,
-    act_q: ActQuant,
-    kv_sink: &mut dyn FnMut(usize, &Tensor) -> anyhow::Result<()>,
-) -> anyhow::Result<Tensor> {
     anyhow::ensure!(batch >= 1, "batch must be >= 1");
     anyhow::ensure!(tokens.len() % batch == 0, "tokens not divisible by batch");
     let t = tokens.len() / batch;
@@ -229,7 +214,6 @@ pub(crate) fn forward_hidden_with(
         let mut h = x.clone();
         layer_norm(&mut h, w.get(&format!("l{i}.ln1.g"))?, w.get(&format!("l{i}.ln1.b"))?, 1e-5);
         let qkv = qmatmul(&h, w, &format!("l{i}.attn.wqkv"), act_q)?; // (B*T, 3D)
-        kv_sink(i, &qkv)?;
         let mut attn_out = Tensor::zeros(&[batch * t, d]);
         for b in 0..batch {
             for head in 0..cfg.n_heads {

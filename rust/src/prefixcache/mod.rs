@@ -1,0 +1,32 @@
+//! Cross-request prefix cache over BCQ-encoded KV pages (DESIGN.md
+//! §Prefix cache).
+//!
+//! High-traffic serving repeats itself: system prompts, few-shot
+//! preambles, and templated instructions put the same token prefix in
+//! front of many requests. Because a KV page is a **deterministic
+//! function of the token prefix and the weights** — prefill reads its
+//! own (quantized, in KV4 mode) cache back for attention, so the K/V at
+//! position `p` does not depend on *how* the history was computed —
+//! a page cached by one request is bit-identical to what any other
+//! request with the same prefix would recompute. That makes reuse free
+//! of accuracy risk, and LO-BCQ's ~4.9 bits/scalar KV encoding makes a
+//! cached token ~6.5× cheaper to keep resident than f32, so the same
+//! byte budget holds far more shared history.
+//!
+//! The structure is a page-granular radix tree: every edge/node covers
+//! exactly `page_tokens` token ids and references one **page group**
+//! (`n_layers * n_heads` refcounted pool pages — the pages that jointly
+//! hold those tokens' K/V across the whole model). On admission the
+//! scheduler matches the longest cached prefix and the new slot adopts
+//! the matched pages ([`PagedKvCache::adopt_prefix`]); on release a
+//! slot's full pages are published back into the tree instead of
+//! dropped. Refcount-0 subtrees (no live adopter) are LRU-evicted under
+//! a byte budget; a subtree some slot still holds is never evicted and
+//! no page is ever freed twice (the pool's refcounts + debug asserts
+//! enforce both).
+//!
+//! [`PagedKvCache::adopt_prefix`]: crate::kvcache::PagedKvCache::adopt_prefix
+
+mod tree;
+
+pub use tree::{PrefixCache, PrefixMatch, PrefixStats};

@@ -141,6 +141,33 @@ impl Args {
     pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.opt(name).unwrap_or(default)
     }
+
+    /// Byte-budget option: a plain integer with an optional binary
+    /// `k`/`m`/`g` suffix (`64m` = 64 MiB), or `off` → `None`. Absent
+    /// options (no default in the spec) also parse as `None`.
+    pub fn bytes_opt(&self, name: &str) -> Result<Option<usize>, CliError> {
+        let Some(v) = self.opt(name) else { return Ok(None) };
+        if v.eq_ignore_ascii_case("off") {
+            return Ok(None);
+        }
+        let bad = |why: &str| CliError::BadValue {
+            key: name.to_string(),
+            value: v.to_string(),
+            why: why.into(),
+        };
+        let (digits, shift) = match v.chars().last() {
+            Some('k') | Some('K') => (&v[..v.len() - 1], 10u32),
+            Some('m') | Some('M') => (&v[..v.len() - 1], 20),
+            Some('g') | Some('G') => (&v[..v.len() - 1], 30),
+            Some(_) => (v, 0),
+            None => return Err(bad("empty value")),
+        };
+        let n: usize = digits.parse().map_err(|e| bad(&format!("{e}")))?;
+        n.checked_shl(shift)
+            .filter(|&b| b >> shift == n)
+            .map(Some)
+            .ok_or_else(|| bad("byte budget overflows usize"))
+    }
 }
 
 /// Render help text for a subcommand.
@@ -216,6 +243,26 @@ mod tests {
     #[test]
     fn flag_with_value_rejected() {
         assert!(Args::parse(&sv(&["--verbose=yes"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bytes_opt_parses_suffixes_and_off() {
+        let specs = vec![OptSpec { name: "budget", help: "bytes", takes_value: true, default: Some("16m") }];
+        let parse = |v: &str| Args::parse(&sv(&["--budget", v]), &specs).unwrap().bytes_opt("budget");
+        assert_eq!(parse("1024").unwrap(), Some(1024));
+        assert_eq!(parse("4k").unwrap(), Some(4 << 10));
+        assert_eq!(parse("16m").unwrap(), Some(16 << 20));
+        assert_eq!(parse("2G").unwrap(), Some(2 << 30));
+        assert_eq!(parse("off").unwrap(), None);
+        assert_eq!(parse("OFF").unwrap(), None);
+        assert!(parse("16q").is_err());
+        assert!(parse("m").is_err());
+        // Default applies when the option is omitted.
+        let a = Args::parse(&sv(&[]), &specs).unwrap();
+        assert_eq!(a.bytes_opt("budget").unwrap(), Some(16 << 20));
+        // Absent option with no default → None.
+        let bare = vec![OptSpec { name: "budget", help: "bytes", takes_value: true, default: None }];
+        assert_eq!(Args::parse(&sv(&[]), &bare).unwrap().bytes_opt("budget").unwrap(), None);
     }
 
     #[test]
