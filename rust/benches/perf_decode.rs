@@ -23,14 +23,17 @@
 //! batch size comes from (EXPERIMENTS.md lane-scaling table).
 //!
 //! Acceptance: cached decode beats full recompute at T ≥ 256, the
-//! encoded cache stores K/V at ≤ 5 bits/scalar (ISSUE 3), and the
-//! fused batched step beats the per-lane loop at ≥ 4 lanes (ISSUE 4).
+//! encoded cache stores K/V at ≤ 5 bits/scalar (ISSUE 3), the fused
+//! batched step beats the per-lane loop at ≥ 4 lanes (ISSUE 4), and
+//! encoded-domain attention (per-page K^T/V panels scored through the
+//! SIMD GEMM driver) beats gather-then-dot on the BCQ cache (ISSUE 6 —
+//! both paths bit-verified against each other before timing).
 
 #![allow(clippy::needless_range_loop)]
 
 use lobcq::data::corpus;
 use lobcq::kvcache::{KvLayout, KvQuantizer, KvStore, PagedKvCache};
-use lobcq::model::decode::{decode_step, decode_step_batch, prefill, DecodeScratch};
+use lobcq::model::decode::{decode_step, decode_step_batch, prefill, AttnPath, DecodeScratch};
 use lobcq::model::forward::{forward, forward_logits_at};
 use lobcq::model::{ModelConfig, Weights};
 use lobcq::tensor::Tensor;
@@ -159,6 +162,25 @@ fn run_lanes(cfg: &ModelConfig, w: &Weights, stream: &[u32], t0: usize, gen: usi
         }
     }
     (lanes * gen) as f64 / start.elapsed().as_secs_f64()
+}
+
+/// Cached-BCQ decode with the attention path pinned: encoded-domain
+/// per-page panels through the SIMD GEMM driver vs gather-then-dot
+/// (the ISSUE 6 ablation). Prefill runs outside the timed region; the
+/// decode loop reuses one scratch so the panel cache reaches steady
+/// state (frontier-page-only re-decodes) before most timed steps.
+fn run_attn_path(cfg: &ModelConfig, w: &Weights, stream: &[u32], t0: usize, gen: usize, path: AttnPath) -> f64 {
+    let mut kv = cache(cfg, w, true, 1);
+    let slot = kv.alloc_slot().unwrap();
+    let mut scratch = DecodeScratch::new();
+    scratch.set_attn_path(path);
+    prefill(cfg, w, &mut kv, slot, &stream[..t0], None).unwrap();
+    let start = Instant::now();
+    for s in 0..gen {
+        let logits = decode_step(cfg, w, &mut kv, slot, stream[t0 + s], None, &mut scratch).unwrap();
+        assert!(logits[0].is_finite());
+    }
+    gen as f64 / start.elapsed().as_secs_f64()
 }
 
 /// Teacher-forced perplexity of a corpus stream through prefill + decode
@@ -300,6 +322,38 @@ fn main() {
         eprintln!("WARNING: fused batched decode not faster than the per-lane loop at 4 lanes");
     }
 
+    // ---- encoded-domain attention vs gather-then-dot (BCQ cache) ----
+    // Parity gate first: both attention paths must produce bit-identical
+    // logits over a prefill + multi-step decode on the encoded cache.
+    {
+        let mut kv_e = cache(&cfg, &w, true, 1);
+        let mut kv_g = cache(&cfg, &w, true, 1);
+        let se = kv_e.alloc_slot().unwrap();
+        let sg = kv_g.alloc_slot().unwrap();
+        let (mut scr_e, mut scr_g) = (DecodeScratch::new(), DecodeScratch::new());
+        scr_e.set_attn_path(AttnPath::Encoded);
+        scr_g.set_attn_path(AttnPath::Gather);
+        prefill(&cfg, &w, &mut kv_e, se, &stream[..40], None).unwrap();
+        prefill(&cfg, &w, &mut kv_g, sg, &stream[..40], None).unwrap();
+        for s in 0..8 {
+            let enc = decode_step(&cfg, &w, &mut kv_e, se, stream[40 + s], None, &mut scr_e).unwrap();
+            let gat = decode_step(&cfg, &w, &mut kv_g, sg, stream[40 + s], None, &mut scr_g).unwrap();
+            for (c, (&x, &y)) in enc.iter().zip(&gat).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "attn-path parity drift: step {s} col {c}");
+            }
+        }
+    }
+    let enc_attn_tps = run_attn_path(&cfg, &w, &stream, 256, gen, AttnPath::Encoded);
+    let gat_attn_tps = run_attn_path(&cfg, &w, &stream, 256, gen, AttnPath::Gather);
+    let attn_ratio = enc_attn_tps / gat_attn_tps;
+    println!(
+        "\nencoded-attn vs gather-attn @T0=256 (bcq cache): encoded {enc_attn_tps:8.1} tok/s   gather {gat_attn_tps:8.1} tok/s   ({attn_ratio:.2}x)"
+    );
+    acceptance.set("encoded_attn_vs_decode_attn", Json::Num(attn_ratio));
+    if attn_ratio < 1.0 {
+        eprintln!("WARNING: encoded-domain attention slower than gather-then-dot on this host");
+    }
+
     // Encoded-cache bit budget (analytic and measured).
     let kv_bits = kv_quantizer(&cfg, &w).bits_per_scalar();
     acceptance.set("kv_bits_per_scalar", Json::Num(kv_bits));
@@ -316,6 +370,14 @@ fn main() {
 
     let report = Json::obj()
         .with("bench", Json::Str("perf_decode".into()))
+        .with("kernel_backend", Json::Str(lobcq::kernels::backend_name().into()))
+        .with(
+            "attn_path",
+            Json::obj()
+                .with("encoded_tokens_per_s", Json::Num(enc_attn_tps))
+                .with("gather_tokens_per_s", Json::Num(gat_attn_tps))
+                .with("speedup", Json::Num(attn_ratio)),
+        )
         .with("shapes", Json::Arr(shapes_json))
         .with("batch4_cached_bcq_tokens_per_s", Json::Num(batch4_tps))
         .with("lane_sweep", Json::Arr(lane_json))

@@ -15,14 +15,20 @@
 //!   deliberately the strongest f32 alternative (not the seed scalar
 //!   loop), so "encoded beats decode-then-f32-matmul" is a conservative
 //!   claim: qgemm wins by skipping the full-tensor materialization +
-//!   pack, not by racing a slow matmul.
+//!   pack, not by racing a slow matmul;
+//! - `blocked_scalar`: the same blocked driver pinned to the scalar
+//!   micro-kernel oracle — the SIMD dispatch speedup is
+//!   `blocked / blocked_scalar` (bit-identical outputs, gated below).
 //!
 //! Acceptance (ISSUE 2): blocked ≥ 4x naive at 1024³, and encoded beats
-//! decode-then-f32-matmul.
+//! decode-then-f32-matmul. ISSUE 6 adds `simd_vs_scalar` (informative
+//! when the host has no SIMD backend: the ratio is ~1.0 by definition).
 
 #![allow(clippy::needless_range_loop)]
 
-use lobcq::kernels::{gemm_packed, PackedB, QuantLinear};
+use lobcq::kernels::{
+    backend_name, gemm_into_flat_with_backend, gemm_packed, KernelBackend, PackedB, QuantLinear,
+};
 use lobcq::quant::calib::calibrate_universal;
 use lobcq::quant::encode::{decode, encode};
 use lobcq::quant::lobcq::{CalibOpts, LobcqConfig};
@@ -103,6 +109,29 @@ fn main() {
         let blocked = b.run(&format!("blocked/{tag}"), || {
             black_box(gemm_packed(black_box(&a), black_box(&packed)));
         });
+        // Same driver, scalar micro-kernel pinned — and gate the
+        // dispatch contract (bitwise identity) before trusting either
+        // timing.
+        let mut out_simd = vec![0.0f32; m * n];
+        let mut out_scalar = vec![0.0f32; m * n];
+        let mut scratch = Vec::new();
+        gemm_into_flat_with_backend(lobcq::kernels::active_backend(), &a.data, m, k, &packed, &mut out_simd, &mut scratch);
+        gemm_into_flat_with_backend(KernelBackend::Scalar, &a.data, m, k, &packed, &mut out_scalar, &mut scratch);
+        for (i, (x, y)) in out_simd.iter().zip(&out_scalar).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "SIMD/scalar divergence at {tag} elem {i}");
+        }
+        let blocked_scalar = b.run(&format!("blocked_scalar/{tag}"), || {
+            gemm_into_flat_with_backend(
+                KernelBackend::Scalar,
+                black_box(&a.data),
+                m,
+                k,
+                black_box(&packed),
+                &mut out_scalar,
+                &mut scratch,
+            );
+            black_box(&out_scalar);
+        });
         let encoded = b.run(&format!("encoded/{tag}"), || {
             black_box(ql.qgemm(black_box(&a)));
         });
@@ -124,9 +153,9 @@ fn main() {
         });
 
         let gf = |r: &lobcq::util::timer::BenchResult| gflops(m, n, k, r.median_s());
-        let (g_naive, g_blocked, g_encoded, g_decode) =
-            (gf(&naive), gf(&blocked), gf(&encoded), gf(&decode_then));
-        println!("{tag:>8} (m={m:>4}):  naive {g_naive:7.2}  blocked {g_blocked:7.2}  encoded {g_encoded:7.2}  decode-then-gemm {g_decode:7.2}  GFLOP/s");
+        let (g_naive, g_blocked, g_scalar, g_encoded, g_decode) =
+            (gf(&naive), gf(&blocked), gf(&blocked_scalar), gf(&encoded), gf(&decode_then));
+        println!("{tag:>8} (m={m:>4}):  naive {g_naive:7.2}  blocked {g_blocked:7.2}  blocked-scalar {g_scalar:7.2}  encoded {g_encoded:7.2}  decode-then-gemm {g_decode:7.2}  GFLOP/s");
 
         shapes_json.push(
             Json::obj()
@@ -139,6 +168,7 @@ fn main() {
                     Json::obj()
                         .with("naive", Json::Num(g_naive))
                         .with("blocked", Json::Num(g_blocked))
+                        .with("blocked_scalar", Json::Num(g_scalar))
                         .with("encoded", Json::Num(g_encoded))
                         .with("decode_then_gemm", Json::Num(g_decode)),
                 ),
@@ -152,6 +182,12 @@ fn main() {
             if speedup < 4.0 {
                 eprintln!("WARNING: blocked-kernel acceptance target missed on this host");
             }
+            let simd_ratio = g_blocked / g_scalar;
+            acceptance.set("simd_vs_scalar", Json::Num(simd_ratio));
+            println!("simd ({}) vs scalar @1024^3: {simd_ratio:.2}x", backend_name());
+            if simd_ratio < 0.95 {
+                eprintln!("WARNING: SIMD micro-kernel slower than the scalar oracle on this host");
+            }
         }
         if tag == "decode" {
             let ratio = g_encoded / g_decode;
@@ -164,6 +200,7 @@ fn main() {
 
     let report = Json::obj()
         .with("bench", Json::Str("perf_gemm".into()))
+        .with("kernel_backend", Json::Str(backend_name().into()))
         .with("shapes", Json::Arr(shapes_json))
         .with("acceptance", acceptance);
     let path = std::path::Path::new("BENCH_gemm.json");

@@ -1,0 +1,362 @@
+//! Runtime-dispatched SIMD micro-kernels (DESIGN.md §SIMD dispatch).
+//!
+//! The blocked GEMM driver (`kernels::gemm`) funnels every tile update
+//! through one micro-kernel: an `MR × NR` accumulator tile updated as
+//! `acc[i][j] += a[i][k] * b[k][j]` for `k` ascending. This module
+//! provides three implementations of that update and picks one at
+//! runtime:
+//!
+//! - [`KernelBackend::Scalar`] — the original portable kernel, kept
+//!   verbatim as the **parity oracle** every SIMD path is tested
+//!   against;
+//! - [`KernelBackend::Avx2`] — x86-64, two 8-lane `__m256` registers per
+//!   tile row;
+//! - [`KernelBackend::Neon`] — aarch64, four 4-lane `float32x4_t`
+//!   registers per tile row.
+//!
+//! **Bit-exactness contract.** The SIMD kernels vectorize across the
+//! `NR` *column* lanes only. Each C element still sees the exact scalar
+//! recurrence — one IEEE-754 f32 multiply and one add per `k` step, `k`
+//! strictly ascending — because lanes of a vector multiply/add round
+//! independently and no `k` reduction is ever split across lanes. Two
+//! things would silently break this and are deliberately avoided:
+//! FMA-style fused intrinsics (`_mm256_fmadd_ps`, `vfmaq_f32`), which
+//! skip the intermediate rounding of the product, and horizontal-sum
+//! reassociation (accumulating partial sums per lane and folding at the
+//! end). With both ruled out, scalar and SIMD paths produce bitwise
+//! identical output for bitwise identical inputs — pinned by the
+//! microkernel tests here, `tests/simd_parity.rs`, and every existing
+//! parity suite run under `LOBCQ_FORCE_SCALAR=1` in CI.
+//!
+//! Selection: [`active_backend`] probes the CPU once (`OnceLock`) via
+//! `is_x86_feature_detected!` / `is_aarch64_feature_detected!`, with the
+//! `LOBCQ_FORCE_SCALAR=1` environment override forcing the oracle.
+//! Explicitly requested backends (benches, parity tests) are sanitized
+//! through [`KernelBackend::sanitize`] so a backend value for a feature
+//! the CPU lacks can never reach an intrinsic.
+
+use super::gemm::{MR, NR};
+use std::sync::OnceLock;
+
+// The SIMD kernels hardcode the register split of an NR-wide tile row
+// (2 × 8 lanes on AVX2, 4 × 4 lanes on NEON).
+const _: () = assert!(NR == 16 && MR == 4, "SIMD micro-kernels assume the 4x16 tile");
+
+/// Which micro-kernel implementation the GEMM driver runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Portable scalar kernel — the parity oracle, available everywhere.
+    Scalar,
+    /// x86-64 AVX2 (8-lane f32 vectors).
+    Avx2,
+    /// aarch64 NEON (4-lane f32 vectors).
+    Neon,
+}
+
+impl KernelBackend {
+    /// Lowercase name for logs / bench JSON (`scalar` / `avx2` / `neon`).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Avx2 => "avx2",
+            KernelBackend::Neon => "neon",
+        }
+    }
+
+    /// Whether the current CPU can run this backend.
+    pub fn supported(self) -> bool {
+        match self {
+            KernelBackend::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelBackend::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            KernelBackend::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// This backend if the CPU supports it, else the scalar oracle. The
+    /// GEMM driver entry sanitizes every explicit backend request through
+    /// this, so [`microkernel`] can assume `Avx2`/`Neon` imply the
+    /// feature is present.
+    pub fn sanitize(self) -> KernelBackend {
+        if self.supported() {
+            self
+        } else {
+            KernelBackend::Scalar
+        }
+    }
+}
+
+/// `LOBCQ_FORCE_SCALAR` semantics: set-and-nonzero forces the scalar
+/// path (unset, empty, or `0` leave detection on).
+fn force_scalar(val: Option<&str>) -> bool {
+    matches!(val, Some(v) if !v.is_empty() && v != "0")
+}
+
+/// The backend every default GEMM entry point uses: best supported ISA,
+/// probed once per process, honoring `LOBCQ_FORCE_SCALAR=1`.
+pub fn active_backend() -> KernelBackend {
+    static ACTIVE: OnceLock<KernelBackend> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        if force_scalar(std::env::var("LOBCQ_FORCE_SCALAR").ok().as_deref()) {
+            return KernelBackend::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if KernelBackend::Avx2.supported() {
+            return KernelBackend::Avx2;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if KernelBackend::Neon.supported() {
+            return KernelBackend::Neon;
+        }
+        KernelBackend::Scalar
+    })
+}
+
+/// Name of the active backend, for the serve summary and bench JSON.
+pub fn backend_name() -> &'static str {
+    active_backend().name()
+}
+
+/// One `MR × NR` register-tile update over `kc` reduction steps, routed
+/// to the selected backend. `a` is the full row-major A operand with
+/// leading dimension `lda`; the tile covers rows `i0 .. i0 + mr`,
+/// reduction columns `k0 .. k0 + kc`, against a `kc × NR` row-major
+/// `panel` of B. All backends accumulate per element as sequential
+/// `acc += a * b` over ascending `k` — see the module docs for why that
+/// makes them bitwise interchangeable.
+#[inline]
+pub(crate) fn microkernel(
+    backend: KernelBackend,
+    a: &[f32],
+    lda: usize,
+    i0: usize,
+    k0: usize,
+    kc: usize,
+    panel: &[f32],
+    acc: &mut [[f32; NR]; MR],
+    mr: usize,
+) {
+    debug_assert!(panel.len() >= kc * NR);
+    debug_assert!(mr >= 1 && mr <= MR);
+    debug_assert!(kc == 0 || a.len() >= (i0 + mr - 1) * lda + k0 + kc);
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: backend values reach the driver through `sanitize`, so
+        // Avx2 implies the CPU reports avx2; bounds are checked above.
+        KernelBackend::Avx2 => unsafe { avx2_microkernel(a, lda, i0, k0, kc, panel, acc, mr) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above for NEON.
+        KernelBackend::Neon => unsafe { neon_microkernel(a, lda, i0, k0, kc, panel, acc, mr) },
+        _ => scalar_microkernel(a, lda, i0, k0, kc, panel, acc, mr),
+    }
+}
+
+/// The portable kernel (moved verbatim from `kernels::gemm`): plain
+/// sequential `acc += a * b` over `k` (no `mul_add`) — f32 adds/muls are
+/// exactly specified by IEEE-754, so every caller gets bitwise identical
+/// results for bitwise identical panels.
+#[inline]
+pub(crate) fn scalar_microkernel(
+    a: &[f32],
+    lda: usize,
+    i0: usize,
+    k0: usize,
+    kc: usize,
+    panel: &[f32],
+    acc: &mut [[f32; NR]; MR],
+    mr: usize,
+) {
+    debug_assert!(panel.len() >= kc * NR);
+    if mr == MR {
+        // Fast path: constant trip counts, four rows live in registers.
+        let r0 = &a[i0 * lda + k0..i0 * lda + k0 + kc];
+        let r1 = &a[(i0 + 1) * lda + k0..(i0 + 1) * lda + k0 + kc];
+        let r2 = &a[(i0 + 2) * lda + k0..(i0 + 2) * lda + k0 + kc];
+        let r3 = &a[(i0 + 3) * lda + k0..(i0 + 3) * lda + k0 + kc];
+        for (kk, b) in panel.chunks_exact(NR).take(kc).enumerate() {
+            let b: &[f32; NR] = b.try_into().unwrap();
+            let (a0, a1, a2, a3) = (r0[kk], r1[kk], r2[kk], r3[kk]);
+            for j in 0..NR {
+                acc[0][j] += a0 * b[j];
+                acc[1][j] += a1 * b[j];
+                acc[2][j] += a2 * b[j];
+                acc[3][j] += a3 * b[j];
+            }
+        }
+    } else {
+        // Edge tile (m % MR rows): same update order, variable row count.
+        for (i, acc_row) in acc.iter_mut().enumerate().take(mr) {
+            let ri = &a[(i0 + i) * lda + k0..(i0 + i) * lda + k0 + kc];
+            for (kk, b) in panel.chunks_exact(NR).take(kc).enumerate() {
+                let ai = ri[kk];
+                for j in 0..NR {
+                    acc_row[j] += ai * b[j];
+                }
+            }
+        }
+    }
+}
+
+/// AVX2 tile update: each of the `mr` rows keeps its 16 accumulator
+/// columns in two `__m256` registers; per `k` step the broadcast A
+/// element multiplies the panel row with separate `_mm256_mul_ps` +
+/// `_mm256_add_ps` (never `_mm256_fmadd_ps` — fusing would skip the
+/// product rounding and break scalar parity).
+///
+/// # Safety
+/// Caller must guarantee the CPU supports AVX2 and that the slice bounds
+/// asserted in [`microkernel`] hold.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn avx2_microkernel(
+    a: &[f32],
+    lda: usize,
+    i0: usize,
+    k0: usize,
+    kc: usize,
+    panel: &[f32],
+    acc: &mut [[f32; NR]; MR],
+    mr: usize,
+) {
+    use std::arch::x86_64::*;
+    let mut c = [[_mm256_setzero_ps(); 2]; MR];
+    for i in 0..mr {
+        c[i][0] = _mm256_loadu_ps(acc[i].as_ptr());
+        c[i][1] = _mm256_loadu_ps(acc[i].as_ptr().add(8));
+    }
+    for kk in 0..kc {
+        let bp = panel.as_ptr().add(kk * NR);
+        let b0 = _mm256_loadu_ps(bp);
+        let b1 = _mm256_loadu_ps(bp.add(8));
+        for i in 0..mr {
+            let ai = _mm256_set1_ps(*a.get_unchecked((i0 + i) * lda + k0 + kk));
+            c[i][0] = _mm256_add_ps(c[i][0], _mm256_mul_ps(ai, b0));
+            c[i][1] = _mm256_add_ps(c[i][1], _mm256_mul_ps(ai, b1));
+        }
+    }
+    for i in 0..mr {
+        _mm256_storeu_ps(acc[i].as_mut_ptr(), c[i][0]);
+        _mm256_storeu_ps(acc[i].as_mut_ptr().add(8), c[i][1]);
+    }
+}
+
+/// NEON tile update: four `float32x4_t` registers per row; separate
+/// `vmulq_f32` + `vaddq_f32` (never `vmlaq_f32`/`vfmaq_f32`, which fuse
+/// into FMLA and change rounding).
+///
+/// # Safety
+/// Caller must guarantee the CPU supports NEON and that the slice bounds
+/// asserted in [`microkernel`] hold.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn neon_microkernel(
+    a: &[f32],
+    lda: usize,
+    i0: usize,
+    k0: usize,
+    kc: usize,
+    panel: &[f32],
+    acc: &mut [[f32; NR]; MR],
+    mr: usize,
+) {
+    use std::arch::aarch64::*;
+    let mut c = [[vdupq_n_f32(0.0); 4]; MR];
+    for i in 0..mr {
+        for r in 0..4 {
+            c[i][r] = vld1q_f32(acc[i].as_ptr().add(4 * r));
+        }
+    }
+    for kk in 0..kc {
+        let bp = panel.as_ptr().add(kk * NR);
+        let b = [vld1q_f32(bp), vld1q_f32(bp.add(4)), vld1q_f32(bp.add(8)), vld1q_f32(bp.add(12))];
+        for i in 0..mr {
+            let ai = vdupq_n_f32(*a.get_unchecked((i0 + i) * lda + k0 + kk));
+            for r in 0..4 {
+                c[i][r] = vaddq_f32(c[i][r], vmulq_f32(ai, b[r]));
+            }
+        }
+    }
+    for i in 0..mr {
+        for r in 0..4 {
+            vst1q_f32(acc[i].as_mut_ptr().add(4 * r), c[i][r]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KC;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn force_scalar_env_semantics() {
+        assert!(!force_scalar(None));
+        assert!(!force_scalar(Some("")));
+        assert!(!force_scalar(Some("0")));
+        assert!(force_scalar(Some("1")));
+        assert!(force_scalar(Some("true")));
+    }
+
+    #[test]
+    fn active_backend_is_supported_and_named() {
+        let b = active_backend();
+        assert!(b.supported(), "active backend {b:?} not supported on this CPU");
+        assert!(["scalar", "avx2", "neon"].contains(&backend_name()));
+    }
+
+    #[test]
+    fn sanitize_keeps_scalar_and_demotes_unsupported() {
+        assert_eq!(KernelBackend::Scalar.sanitize(), KernelBackend::Scalar);
+        for b in [KernelBackend::Avx2, KernelBackend::Neon] {
+            let s = b.sanitize();
+            assert!(s.supported());
+            if !b.supported() {
+                assert_eq!(s, KernelBackend::Scalar);
+            }
+        }
+    }
+
+    #[test]
+    fn simd_microkernels_bitwise_match_scalar_oracle() {
+        // Every supported SIMD backend against the oracle, across edge
+        // row counts, ragged kc (including kc = KC), and a nonzero
+        // starting accumulator (the driver accumulates across KC blocks).
+        let mut rng = Pcg32::seeded(0x51D0);
+        for backend in [KernelBackend::Avx2, KernelBackend::Neon] {
+            if !backend.supported() {
+                continue;
+            }
+            for &kc in &[1usize, 2, 7, 33, 255, KC] {
+                for mr in 1..=MR {
+                    let lda = kc + 3; // exercise lda > kc addressing
+                    let a: Vec<f32> = (0..MR * lda + kc).map(|_| rng.normal()).collect();
+                    let panel: Vec<f32> = (0..kc * NR).map(|_| rng.normal()).collect();
+                    let mut want = [[0.0f32; NR]; MR];
+                    for row in want.iter_mut() {
+                        for v in row.iter_mut() {
+                            *v = rng.normal();
+                        }
+                    }
+                    let mut got = want;
+                    scalar_microkernel(&a, lda, 0, 0, kc, &panel, &mut want, mr);
+                    microkernel(backend, &a, lda, 0, 0, kc, &panel, &mut got, mr);
+                    for i in 0..MR {
+                        for j in 0..NR {
+                            assert_eq!(
+                                got[i][j].to_bits(),
+                                want[i][j].to_bits(),
+                                "{backend:?} kc={kc} mr={mr} acc[{i}][{j}]: {} vs {}",
+                                got[i][j],
+                                want[i][j]
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

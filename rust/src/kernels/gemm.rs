@@ -3,8 +3,11 @@
 //! Replaces the branchy scalar triple-loop that used to live in
 //! `model::forward::matmul_par`: the inner loop here is a fixed-shape
 //! `MR × NR` tile update over a packed B panel — no per-element branch,
-//! constant trip counts, contiguous loads — which LLVM unrolls and
-//! autovectorizes on every target (no intrinsics, no `unsafe`).
+//! constant trip counts, contiguous loads. The tile update itself lives
+//! in `kernels::dispatch`, which picks a hand-written AVX2/NEON
+//! micro-kernel at runtime (scalar fallback kept as the parity oracle);
+//! every backend follows the same per-element accumulation order, so the
+//! choice never changes a bit of output.
 //!
 //! Layout:
 //! - B is packed once into [`PackedB`] panels of `NR` columns: panel `p`
@@ -31,6 +34,7 @@
 //! encoded path and parallelizes the `m = 1` decode shape, which
 //! row-splitting cannot.
 
+use super::dispatch::{self, KernelBackend};
 use crate::tensor::Tensor;
 
 /// Micro-kernel rows (register-tile height).
@@ -137,61 +141,15 @@ impl PanelProvider for PackedB {
     }
 }
 
-/// One `MR × NR` register-tile update over `kc` reduction steps.
-///
-/// `a` is the full (row-major, leading dimension `lda`) A operand; the
-/// tile covers rows `i0 .. i0 + mr`, reduction columns `k0 .. k0 + kc`.
-/// Accumulation per C element is a plain sequential `acc += a * b` over
-/// `k` (no `mul_add`): f32 adds/muls are exactly specified by IEEE-754,
-/// so every caller of this kernel — f32-packed or encoded-domain — gets
-/// bitwise identical results for bitwise identical panels.
-#[inline]
-fn microkernel(
-    a: &[f32],
-    lda: usize,
-    i0: usize,
-    k0: usize,
-    kc: usize,
-    panel: &[f32],
-    acc: &mut [[f32; NR]; MR],
-    mr: usize,
-) {
-    debug_assert!(panel.len() >= kc * NR);
-    if mr == MR {
-        // Fast path: constant trip counts, four rows live in registers.
-        let r0 = &a[i0 * lda + k0..i0 * lda + k0 + kc];
-        let r1 = &a[(i0 + 1) * lda + k0..(i0 + 1) * lda + k0 + kc];
-        let r2 = &a[(i0 + 2) * lda + k0..(i0 + 2) * lda + k0 + kc];
-        let r3 = &a[(i0 + 3) * lda + k0..(i0 + 3) * lda + k0 + kc];
-        for (kk, b) in panel.chunks_exact(NR).take(kc).enumerate() {
-            let b: &[f32; NR] = b.try_into().unwrap();
-            let (a0, a1, a2, a3) = (r0[kk], r1[kk], r2[kk], r3[kk]);
-            for j in 0..NR {
-                acc[0][j] += a0 * b[j];
-                acc[1][j] += a1 * b[j];
-                acc[2][j] += a2 * b[j];
-                acc[3][j] += a3 * b[j];
-            }
-        }
-    } else {
-        // Edge tile (m % MR rows): same update order, variable row count.
-        for (i, acc_row) in acc.iter_mut().enumerate().take(mr) {
-            let ri = &a[(i0 + i) * lda + k0..(i0 + i) * lda + k0 + kc];
-            for (kk, b) in panel.chunks_exact(NR).take(kc).enumerate() {
-                let ai = ri[kk];
-                for j in 0..NR {
-                    acc_row[j] += ai * b[j];
-                }
-            }
-        }
-    }
-}
-
 /// Serial driver over a panel range: `out` is an `m × ldc` column stripe
 /// whose first column corresponds to panel `panels.start` (so `ldc` is
 /// the stripe width, `n` for a full-width call). `out` must be zeroed (or
-/// hold a partial sum to accumulate onto).
+/// hold a partial sum to accumulate onto). Every tile update runs the
+/// `backend` micro-kernel (`kernels::dispatch`); all backends are
+/// bitwise interchangeable by the accumulation-order contract.
+#[allow(clippy::too_many_arguments)]
 fn gemm_block<P: PanelProvider + ?Sized>(
+    backend: KernelBackend,
     a: &[f32],
     lda: usize,
     m: usize,
@@ -215,7 +173,7 @@ fn gemm_block<P: PanelProvider + ?Sized>(
             while i0 < m {
                 let mr = MR.min(m - i0);
                 let mut acc = [[0.0f32; NR]; MR];
-                microkernel(a, lda, i0, k0, kc, panel, &mut acc, mr);
+                dispatch::microkernel(backend, a, lda, i0, k0, kc, panel, &mut acc, mr);
                 for (i, acc_row) in acc.iter().enumerate().take(mr) {
                     let orow = &mut out[(i0 + i) * ldc + (j0 - col0)..(i0 + i) * ldc + (j0 - col0) + jmax];
                     for (o, &v) in orow.iter_mut().zip(acc_row) {
@@ -243,7 +201,8 @@ pub fn gemm_into_flat<P: PanelProvider + ?Sized>(a: &[f32], m: usize, k: usize, 
 /// allocating a `KC × NR` panel buffer per call, which is what makes the
 /// batched decode loop allocation-free in steady state. Problems above
 /// the parallel threshold still fan out across threads (worker stripes
-/// are per-call); results are bitwise identical either way.
+/// are per-call); results are bitwise identical either way. Runs the
+/// runtime-detected micro-kernel ([`dispatch::active_backend`]).
 pub fn gemm_into_flat_with<P: PanelProvider + ?Sized>(
     a: &[f32],
     m: usize,
@@ -252,6 +211,24 @@ pub fn gemm_into_flat_with<P: PanelProvider + ?Sized>(
     out: &mut [f32],
     scratch: &mut Vec<f32>,
 ) {
+    gemm_into_flat_with_backend(dispatch::active_backend(), a, m, k, p, out, scratch)
+}
+
+/// [`gemm_into_flat_with`] with an explicit micro-kernel backend — the
+/// entry the scalar-vs-SIMD parity tests and benches pin both paths
+/// through. Unsupported backends are demoted to the scalar oracle, so
+/// this is safe to call with any [`KernelBackend`] on any CPU; all
+/// backends are bitwise interchangeable (`tests/simd_parity.rs`).
+pub fn gemm_into_flat_with_backend<P: PanelProvider + ?Sized>(
+    backend: KernelBackend,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    p: &P,
+    out: &mut [f32],
+    scratch: &mut Vec<f32>,
+) {
+    let backend = backend.sanitize();
     assert_eq!(a.len(), m * k, "A is {m} x {k} but has {} elements", a.len());
     assert_eq!(k, p.k(), "inner dim mismatch: A cols {k} vs B rows {}", p.k());
     let n = p.n();
@@ -264,7 +241,7 @@ pub fn gemm_into_flat_with<P: PanelProvider + ?Sized>(
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     if threads <= 1 || n_panels <= 1 || m * n * k < PAR_THRESHOLD {
         scratch.resize(KC * NR, 0.0);
-        gemm_block(a, k, m, p, 0..n_panels, out, n, scratch);
+        gemm_block(backend, a, k, m, p, 0..n_panels, out, n, scratch);
         return;
     }
     // Column-parallel: each worker owns a contiguous panel range and a
@@ -285,7 +262,7 @@ pub fn gemm_into_flat_with<P: PanelProvider + ?Sized>(
                     let cols = (p_hi * NR).min(n) - col0;
                     let mut stripe = vec![0.0f32; m * cols];
                     let mut scratch = vec![0.0f32; KC * NR];
-                    gemm_block(a, k, m, p, p_lo..p_hi, &mut stripe, cols, &mut scratch);
+                    gemm_block(backend, a, k, m, p, p_lo..p_hi, &mut stripe, cols, &mut scratch);
                     (col0, stripe)
                 })
             })
@@ -405,7 +382,7 @@ mod tests {
         let par = gemm_packed(&a, &pb);
         let mut serial = vec![0.0f32; m * n];
         let mut scratch = vec![0.0f32; KC * NR];
-        gemm_block(&a.data, k, m, &pb, 0..n.div_ceil(NR), &mut serial, n, &mut scratch);
+        gemm_block(dispatch::active_backend(), &a.data, k, m, &pb, 0..n.div_ceil(NR), &mut serial, n, &mut scratch);
         for (x, y) in par.data.iter().zip(&serial) {
             assert_eq!(x.to_bits(), y.to_bits());
         }

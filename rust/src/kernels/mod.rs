@@ -14,11 +14,19 @@
 //!   the identical micro-kernel (the paper's Fig. 1 dataflow: codes +
 //!   tiny frozen codebooks in, scaled products out).
 //!
-//! Every later backend (SIMD intrinsics, PJRT custom calls) plugs in at
-//! the [`PanelProvider`] seam.
+//! The tile update itself is runtime-dispatched ([`dispatch`]): scalar
+//! oracle everywhere, hand-written AVX2 (x86-64) / NEON (aarch64)
+//! micro-kernels when the CPU has them, all bitwise interchangeable by
+//! the accumulation-order contract. Every later backend (PJRT custom
+//! calls) plugs in at the [`PanelProvider`] seam.
 
+pub mod dispatch;
 pub mod gemm;
 pub mod qgemm;
 
-pub use gemm::{gemm, gemm_into_flat, gemm_into_flat_with, gemm_packed, PackedB, PanelProvider, KC, MR, NR};
+pub use dispatch::{active_backend, backend_name, KernelBackend};
+pub use gemm::{
+    gemm, gemm_into_flat, gemm_into_flat_with, gemm_into_flat_with_backend, gemm_packed, PackedB,
+    PanelProvider, KC, MR, NR,
+};
 pub use qgemm::QuantLinear;

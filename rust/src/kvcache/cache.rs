@@ -504,6 +504,29 @@ impl PagedKvCache {
         &mut self.pool
     }
 
+    /// The KV quantizer, if this cache stores encoded pages. The decode
+    /// panel cache decodes pages through this so its cached panels are
+    /// bit-identical to what [`gather`](Self::gather) would produce.
+    pub fn quantizer(&self) -> Option<&KvQuantizer> {
+        self.quant.as_ref()
+    }
+
+    /// Fill `out` with the page-id run of (slot, layer, head) in token
+    /// order and return the layer's cached token count. The
+    /// encoded-domain attention path scores against these pages via the
+    /// panel cache instead of gathering the decoded f32 history.
+    pub fn page_run(&self, slot: SlotId, layer: usize, head: usize, out: &mut Vec<PageId>) -> usize {
+        let (nh, pt) = (self.layout.n_heads, self.layout.page_tokens);
+        let st = &self.slots[slot];
+        assert!(st.live, "page_run of a dead slot {slot}");
+        let len = st.lens[layer];
+        out.clear();
+        for page_idx in 0..len.div_ceil(pt) {
+            out.push(st.pages[layer][page_idx * nh + head]);
+        }
+        len
+    }
+
     /// Bytes of cached state summed over every live slot's page
     /// references — O(1), read from the incrementally-maintained counter
     /// (the serving metrics sample this once per decode step). A page

@@ -1,0 +1,493 @@
+//! Encoded-domain decode attention: the per-page panel cache
+//! (DESIGN.md §Encoded-domain attention).
+//!
+//! The gather-based decode path re-materializes the **entire** f32 K/V
+//! history of a (slot, layer, head) from BCQ codes on every step —
+//! O(len · head_dim) LUT decodes per head per token, even though every
+//! page but the frontier one is immutable. This module applies the PR 2
+//! qgemm trick to the KV cache instead: each encoded K page is expanded
+//! **once** through its 16-entry scaled LUTs into a `[head_dim,
+//! page_tokens]` transposed panel (`K^T`, exactly the B-panel layout the
+//! blocked GEMM micro-kernel streams), the V plane into `[page_tokens,
+//! head_dim]` rows for the context product, and both are cached per
+//! `PageId` until the page's pool **generation** changes (append, CoW
+//! seed, or free/realloc — see `PagePool::gen`). Steady-state decode
+//! then re-decodes only the frontier page; full pages are scored
+//! straight from the cache through the [`PanelProvider`] seam, SIMD
+//! micro-kernel included.
+//!
+//! Bit-exactness: panels are decoded by the **same**
+//! `KvQuantizer::decode_vectors` path `gather` uses (f32 pages memcpy),
+//! and [`KtView`] feeds them to the same blocked driver in the same
+//! per-element accumulation order as the scalar q·K loop — so
+//! encoded-domain attention is bit-identical to the decode-then-dot
+//! path (pinned in `model::decode` tests and `tests/decode_parity.rs`).
+//!
+//! Budgeting: decoded panels are cache state, not per-step scratch —
+//! the cache holds at most [`budget_bytes`](KvPanelCache::set_budget_bytes)
+//! of them, evicting least-recently-touched entries (never one touched
+//! in the current attention call) and recycling their buffers through a
+//! free list, so steady-state decode performs no panel allocations once
+//! the working set is warm.
+
+use super::pool::{PageId, PagePool, Plane};
+use super::quant::KvQuantizer;
+use crate::kernels::{PanelProvider, NR};
+
+/// Default decoded-panel budget (32 MiB ≈ 4096 pages at hd 64, pt 16).
+const DEFAULT_BUDGET_BYTES: usize = 32 << 20;
+
+/// One page's cached decode.
+#[derive(Debug)]
+struct PageEntry {
+    /// Pool generation the decode was taken at; stale when it drifts.
+    gen: u64,
+    /// Tokens decoded (the page's `filled` at decode time).
+    filled: usize,
+    /// Last-touched clock tick (LRU victim selection).
+    stamp: u64,
+    /// `K^T`: `[head_dim, page_tokens]` row-major (stride `page_tokens`),
+    /// columns `>= filled` zeroed. When `page_tokens == NR` a full page
+    /// is byte-for-byte a GEMM B-panel and is lent out with no copy.
+    kt: Vec<f32>,
+    /// V rows: `[page_tokens, head_dim]` row-major, rows `>= filled`
+    /// zeroed.
+    v: Vec<f32>,
+}
+
+/// Per-page decoded K^T/V panel cache, keyed by [`PageId`] and owned by
+/// `DecodeScratch` (it rides along with the session, like the rest of
+/// the decode working set, but its size scales with **cache state**, so
+/// it is budgeted and excluded from the scratch footprint).
+#[derive(Debug)]
+pub struct KvPanelCache {
+    /// `PagePool::instance_id` the entries belong to (0 = unset). A
+    /// scratch reused against a different cache drops everything rather
+    /// than serve another pool's pages under aliasing ids.
+    pool_id: u64,
+    /// Geometry the buffers are shaped for.
+    pt: usize,
+    hd: usize,
+    budget_bytes: usize,
+    /// Entry per `PageId` (dense: pool ids are table indices).
+    entries: Vec<Option<PageEntry>>,
+    /// Bytes across live entries (each `2 * hd * pt * 4`).
+    bytes: usize,
+    /// Monotonic touch clock.
+    clock: u64,
+    /// Recycled (kt, v) buffer pairs from evicted entries.
+    free: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Row-major decode staging for the K transpose.
+    tmp: Vec<f32>,
+    /// Pages decoded since construction (cache-effectiveness metric).
+    decodes: u64,
+    /// Revalidated hits since construction.
+    hits: u64,
+    /// Fresh buffer-pair allocations (steady state: stops growing).
+    buffer_allocs: u64,
+}
+
+impl Default for KvPanelCache {
+    fn default() -> KvPanelCache {
+        KvPanelCache {
+            pool_id: 0,
+            pt: 0,
+            hd: 0,
+            budget_bytes: DEFAULT_BUDGET_BYTES,
+            entries: Vec::new(),
+            bytes: 0,
+            clock: 0,
+            free: Vec::new(),
+            tmp: Vec::new(),
+            decodes: 0,
+            hits: 0,
+            buffer_allocs: 0,
+        }
+    }
+}
+
+impl KvPanelCache {
+    pub fn new() -> KvPanelCache {
+        KvPanelCache::default()
+    }
+
+    /// Cap on decoded-panel bytes (existing entries over a lowered
+    /// budget are evicted on the next [`ensure`](Self::ensure)).
+    pub fn set_budget_bytes(&mut self, bytes: usize) {
+        self.budget_bytes = bytes;
+    }
+
+    /// Pages decoded since construction.
+    pub fn decode_count(&self) -> u64 {
+        self.decodes
+    }
+
+    /// Cache hits (revalidated entries) since construction.
+    pub fn hit_count(&self) -> u64 {
+        self.hits
+    }
+
+    /// Fresh buffer-pair allocations since construction — constant once
+    /// the budgeted working set is warm (eviction recycles buffers).
+    pub fn buffer_alloc_count(&self) -> u64 {
+        self.buffer_allocs
+    }
+
+    /// Bytes of decoded panels currently held.
+    pub fn resident_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    fn entry_bytes(&self) -> usize {
+        2 * self.hd * self.pt * 4
+    }
+
+    /// Drop every entry (pool switch / geometry change), recycling the
+    /// buffers.
+    fn reset(&mut self) {
+        for slot in self.entries.iter_mut() {
+            if let Some(e) = slot.take() {
+                self.free.push((e.kt, e.v));
+            }
+        }
+        self.bytes = 0;
+    }
+
+    /// Make the decoded panels of every page in `ids` current: entries
+    /// whose pool generation still matches are touched (a hit), the rest
+    /// are (re)decoded through the same path `gather` uses. Evicts down
+    /// to the byte budget afterwards, never evicting a page touched by
+    /// **this** call (mid-attention eviction of a page the in-flight
+    /// [`KtView`] still needs would be a correctness bug, so tiny
+    /// budgets run over rather than break).
+    pub fn ensure(
+        &mut self,
+        pool: &PagePool,
+        quant: Option<&KvQuantizer>,
+        hd: usize,
+        ids: &[PageId],
+    ) {
+        let pt = pool.page_tokens();
+        if self.pool_id != pool.instance_id() || self.pt != pt || self.hd != hd {
+            self.reset();
+            self.pool_id = pool.instance_id();
+            self.pt = pt;
+            self.hd = hd;
+        }
+        if self.entries.len() < pool.capacity_pages() {
+            self.entries.resize_with(pool.capacity_pages(), || None);
+        }
+        let eb = self.entry_bytes();
+        let floor = self.clock; // entries touched below get stamp > floor
+        for &id in ids {
+            let gen = pool.gen(id);
+            self.clock += 1;
+            let stamp = self.clock;
+            let slot = &mut self.entries[id as usize];
+            if let Some(e) = slot {
+                if e.gen == gen {
+                    e.stamp = stamp;
+                    self.hits += 1;
+                    continue;
+                }
+            }
+            // Miss or stale: decode the page into (possibly recycled)
+            // buffers.
+            let (mut kt, mut v) = match slot.take() {
+                Some(e) => {
+                    self.bytes -= eb;
+                    (e.kt, e.v)
+                }
+                None => match self.free.pop() {
+                    Some(pair) => pair,
+                    None => {
+                        self.buffer_allocs += 1;
+                        (Vec::new(), Vec::new())
+                    }
+                },
+            };
+            let page = pool.get(id);
+            let filled = page.filled;
+            // V rows decode straight into place; the tail stays zero.
+            v.clear();
+            v.resize(pt * hd, 0.0);
+            page.gather(hd, quant, Plane::V, &mut v[..filled * hd]);
+            // K decodes row-major into staging, then transposes into the
+            // [hd, pt] panel layout (values untouched — bit-exact).
+            self.tmp.resize(filled * hd, 0.0);
+            page.gather(hd, quant, Plane::K, &mut self.tmp[..filled * hd]);
+            kt.clear();
+            kt.resize(hd * pt, 0.0);
+            for (r, row) in self.tmp[..filled * hd].chunks_exact(hd).enumerate() {
+                for (c, &x) in row.iter().enumerate() {
+                    kt[c * pt + r] = x;
+                }
+            }
+            *slot = Some(PageEntry { gen, filled, stamp, kt, v });
+            self.bytes += eb;
+            self.decodes += 1;
+        }
+        // Evict least-recently-touched entries not part of this call.
+        while self.bytes > self.budget_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| s.as_ref().map(|e| (i, e.stamp)))
+                .filter(|&(_, stamp)| stamp <= floor)
+                .min_by_key(|&(_, stamp)| stamp)
+                .map(|(i, _)| i);
+            match victim {
+                Some(i) => {
+                    let e = self.entries[i].take().expect("victim vanished");
+                    self.free.push((e.kt, e.v));
+                    self.bytes -= eb;
+                }
+                None => break, // everything left is pinned by this call
+            }
+        }
+    }
+
+    /// The decoded entry for `id` — must have been covered by the
+    /// current attention call's [`ensure`](Self::ensure).
+    fn entry(&self, id: PageId) -> &PageEntry {
+        self.entries[id as usize]
+            .as_ref()
+            .expect("panel cache entry missing — ensure() not called for this page run")
+    }
+
+    /// Decoded V row of token `j` within a page run (`ids[j / pt]`,
+    /// local row `j % pt`) — the context product reads these in the same
+    /// token order the gathered history had.
+    pub fn v_row(&self, ids: &[PageId], j: usize) -> &[f32] {
+        let e = self.entry(ids[j / self.pt]);
+        let c = j % self.pt;
+        debug_assert!(c < e.filled, "token {j} past the decoded fill");
+        &e.v[c * self.hd..(c + 1) * self.hd]
+    }
+
+    /// Panel view over a page run: `K^T` as a [`PanelProvider`] with
+    /// `k() = head_dim`, `n() = n` tokens — score rows `q · K[j]` come
+    /// out of the blocked GEMM driver bit-identical to the scalar dot.
+    pub fn kt_view<'a>(&'a self, ids: &'a [PageId], n: usize) -> KtView<'a> {
+        debug_assert!(ids.len() >= n.div_ceil(self.pt.max(1)), "page run shorter than the token span");
+        KtView { cache: self, ids, n }
+    }
+}
+
+/// Borrowed `K^T` panel source over one (slot, layer, head) page run —
+/// the KV-cache analogue of `QuantLinear`'s panel provider. Immutable
+/// (`ensure` ran first), so it is `Sync` and the parallel GEMM driver
+/// can share it across workers.
+pub struct KtView<'a> {
+    cache: &'a KvPanelCache,
+    ids: &'a [PageId],
+    /// Token span (B columns); tokens past `n` in a panel are masked by
+    /// the driver's `jmax` write-back, same as packed zero-padding.
+    n: usize,
+}
+
+impl PanelProvider for KtView<'_> {
+    fn k(&self) -> usize {
+        self.cache.hd
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn panel<'a>(&'a self, j0: usize, k0: usize, kc: usize, scratch: &'a mut Vec<f32>) -> &'a [f32] {
+        let pt = self.cache.pt;
+        if pt == NR {
+            // Page-aligned fast path (the serving default, pt = 16): a
+            // full page's kt IS the `kc × NR` panel — zero copies.
+            let e = self.cache.entry(self.ids[j0 / pt]);
+            if e.filled == pt {
+                return &e.kt[k0 * NR..(k0 + kc) * NR];
+            }
+        }
+        // General path: assemble the NR columns from (page, local-row)
+        // coordinates, zero-filling columns past the span — exactly
+        // PackedB's padding convention.
+        scratch.resize(kc * NR, 0.0);
+        for jr in 0..NR {
+            let j = j0 + jr;
+            if j >= self.n {
+                for kk in 0..kc {
+                    scratch[kk * NR + jr] = 0.0;
+                }
+                continue;
+            }
+            let e = self.cache.entry(self.ids[j / pt]);
+            let c = j % pt;
+            if c >= e.filled {
+                for kk in 0..kc {
+                    scratch[kk * NR + jr] = 0.0;
+                }
+                continue;
+            }
+            for kk in 0..kc {
+                scratch[kk * NR + jr] = e.kt[(k0 + kk) * pt + c];
+            }
+        }
+        scratch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KC;
+    use crate::util::rng::{llm_like_sample, Pcg32};
+
+    fn filled_pool(pt: usize, hd: usize, tokens: usize, seed: u64) -> (PagePool, Vec<PageId>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let mut rng = Pcg32::seeded(seed);
+        let mut pool = PagePool::new(pt, hd, false);
+        let mut ids = Vec::new();
+        let (mut ks, mut vs) = (Vec::new(), Vec::new());
+        for t in 0..tokens {
+            if t % pt == 0 {
+                ids.push(pool.alloc());
+            }
+            let k = llm_like_sample(&mut rng, hd, 0.05, 4.0);
+            let v = llm_like_sample(&mut rng, hd, 0.05, 4.0);
+            pool.get_mut(*ids.last().unwrap()).append(pt, hd, None, &k, &v);
+            ks.push(k);
+            vs.push(v);
+        }
+        (pool, ids, ks, vs)
+    }
+
+    #[test]
+    fn panels_match_history_and_revalidate_without_redecoding() {
+        let (pt, hd, tokens) = (4usize, 8usize, 10usize);
+        let (mut pool, ids, ks, vs) = filled_pool(pt, hd, tokens, 0x17A);
+        let mut pc = KvPanelCache::new();
+        pc.ensure(&pool, None, hd, &ids);
+        assert_eq!(pc.decode_count(), ids.len() as u64);
+
+        // V rows and K^T panels reproduce the appended history exactly.
+        let view = pc.kt_view(&ids, tokens);
+        let mut scratch = Vec::new();
+        for j in 0..tokens {
+            assert_eq!(pc.v_row(&ids, j), &vs[j][..], "v row {j}");
+        }
+        for j0 in (0..tokens).step_by(NR) {
+            let panel = view.panel(j0, 0, hd, &mut scratch).to_vec();
+            for kk in 0..hd {
+                for jr in 0..NR {
+                    let want = if j0 + jr < tokens { ks[j0 + jr][kk] } else { 0.0 };
+                    assert_eq!(panel[kk * NR + jr].to_bits(), want.to_bits(), "k^T[{kk}][{}]", j0 + jr);
+                }
+            }
+        }
+
+        // Re-ensure: pure hits, no decodes.
+        pc.ensure(&pool, None, hd, &ids);
+        assert_eq!(pc.decode_count(), ids.len() as u64, "unchanged pages re-decoded");
+        assert!(pc.hit_count() >= ids.len() as u64);
+
+        // Append to the frontier page → only that page re-decodes.
+        let k = vec![1.5f32; hd];
+        pool.get_mut(*ids.last().unwrap()).append(pt, hd, None, &k, &k);
+        pc.ensure(&pool, None, hd, &ids);
+        assert_eq!(pc.decode_count(), ids.len() as u64 + 1, "append should stale exactly one page");
+        assert_eq!(pc.v_row(&ids, tokens), &k[..]);
+    }
+
+    #[test]
+    fn realloc_and_pool_switch_invalidate() {
+        let (pt, hd) = (2usize, 4usize);
+        let (mut pool, ids, _, _) = filled_pool(pt, hd, 4, 0x17B);
+        let mut pc = KvPanelCache::new();
+        pc.ensure(&pool, None, hd, &ids);
+        let base = pc.decode_count();
+
+        // Free + realloc reuses the id; the entry must not survive.
+        pool.free(ids[0]);
+        let again = pool.alloc();
+        assert_eq!(again, ids[0]);
+        pool.get_mut(again).append(pt, hd, None, &[9.0; 4], &[8.0; 4]);
+        pc.ensure(&pool, None, hd, &[again]);
+        assert_eq!(pc.decode_count(), base + 1, "recycled page served from stale cache");
+        assert_eq!(pc.v_row(&[again], 0), &[8.0; 4]);
+
+        // A different pool under the same ids drops everything.
+        let (pool2, ids2, _, vs2) = filled_pool(pt, hd, 4, 0x17C);
+        pc.ensure(&pool2, None, hd, &ids2);
+        assert_eq!(pc.v_row(&ids2, 0), &vs2[0][..], "entries leaked across pools");
+    }
+
+    #[test]
+    fn encoded_panels_bit_match_gather() {
+        let (pt, hd) = (4usize, 16usize);
+        let mut rng = Pcg32::seeded(0x17D);
+        let sample = llm_like_sample(&mut rng, hd * 32, 0.05, 4.0);
+        let q = KvQuantizer::calibrated(hd, &sample, 5).unwrap();
+        let mut pool = PagePool::new(pt, hd, true);
+        let id = pool.alloc();
+        for _ in 0..3 {
+            let k = llm_like_sample(&mut rng, hd, 0.05, 4.0);
+            let v = llm_like_sample(&mut rng, hd, 0.05, 4.0);
+            pool.get_mut(id).append(pt, hd, Some(&q), &k, &v);
+        }
+        let mut pc = KvPanelCache::new();
+        pc.ensure(&pool, Some(&q), hd, &[id]);
+        let (mut gk, mut gv) = (vec![0.0f32; 3 * hd], vec![0.0f32; 3 * hd]);
+        pool.get(id).gather(hd, Some(&q), Plane::K, &mut gk);
+        pool.get(id).gather(hd, Some(&q), Plane::V, &mut gv);
+        let view = pc.kt_view(&[id], 3);
+        let mut scratch = Vec::new();
+        let panel = view.panel(0, 0, hd, &mut scratch);
+        for j in 0..3 {
+            for kk in 0..hd {
+                assert_eq!(panel[kk * NR + j].to_bits(), gk[j * hd + kk].to_bits(), "K tok {j} dim {kk}");
+            }
+            for kk in 0..hd {
+                assert_eq!(pc.v_row(&[id], j)[kk].to_bits(), gv[j * hd + kk].to_bits(), "V tok {j} dim {kk}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_page_at_nr_tokens_lends_its_panel_without_copying() {
+        let (pt, hd) = (NR, 8usize);
+        let (pool, ids, ks, _) = filled_pool(pt, hd, NR, 0x17E);
+        let mut pc = KvPanelCache::new();
+        pc.ensure(&pool, None, hd, &ids);
+        let view = pc.kt_view(&ids, NR);
+        let mut scratch = Vec::new();
+        let panel = view.panel(0, 0, hd, &mut scratch);
+        assert!(scratch.is_empty(), "fast path materialized into scratch");
+        assert!(hd <= KC);
+        for kk in 0..hd {
+            for j in 0..NR {
+                assert_eq!(panel[kk * NR + j].to_bits(), ks[j][kk].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn budget_evicts_lru_and_recycles_buffers_but_never_the_current_run() {
+        let (pt, hd) = (2usize, 4usize);
+        let (pool, ids, _, vs) = filled_pool(pt, hd, 8, 0x17F); // 4 pages
+        let mut pc = KvPanelCache::new();
+        let entry_bytes = 2 * hd * pt * 4;
+        pc.set_budget_bytes(2 * entry_bytes);
+
+        // A run larger than the budget stays resident (round pinning)…
+        pc.ensure(&pool, None, hd, &ids);
+        assert_eq!(pc.resident_bytes(), 4 * entry_bytes, "current run must not be evicted");
+        for j in 0..8 {
+            assert_eq!(pc.v_row(&ids, j), &vs[j][..]);
+        }
+        // …and the next smaller run evicts down to budget, recycling.
+        let allocs = pc.buffer_alloc_count();
+        pc.ensure(&pool, None, hd, &ids[..1]);
+        assert!(pc.resident_bytes() <= 2 * entry_bytes, "budget not enforced");
+        let decodes = pc.decode_count();
+        pc.ensure(&pool, None, hd, &ids); // evicted pages re-decode from recycled buffers
+        assert!(pc.decode_count() > decodes);
+        assert_eq!(pc.buffer_alloc_count(), allocs, "eviction churn allocated fresh buffers");
+    }
+}

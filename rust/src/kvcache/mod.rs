@@ -8,11 +8,18 @@
 //! (`model::decode::{prefill, decode_step}`) appends to and attends
 //! against this cache, so per-token attention work is O(current length)
 //! instead of the full-forward O(t²) re-score.
+//!
+//! [`lut`] adds the encoded-domain attention seam: a per-page cache of
+//! decoded `K^T`/V panels ([`KvPanelCache`]) that lets decode score
+//! q·K straight off encoded pages through the blocked GEMM driver,
+//! re-decoding only pages whose pool generation moved.
 
 pub mod cache;
+pub mod lut;
 pub mod pool;
 pub mod quant;
 
 pub use cache::{KvLayout, KvStats, KvStore, PagedKvCache, SlotId};
+pub use lut::{KtView, KvPanelCache};
 pub use pool::{Page, PageId, PagePool, Plane};
 pub use quant::{kv_cfg, KvQuantizer};

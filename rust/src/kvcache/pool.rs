@@ -21,9 +21,15 @@
 
 use super::quant::KvQuantizer;
 use crate::quant::encode::{BitReader, BitWriter};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Index into the pool's page table.
 pub type PageId = u32;
+
+/// Process-wide pool id source — every [`PagePool`] gets a distinct
+/// nonzero [`instance_id`](PagePool::instance_id), so caches keyed on
+/// `PageId` (the decode panel cache) can tell two pools' ids apart.
+static POOL_INSTANCES: AtomicU64 = AtomicU64::new(1);
 
 /// Which cached plane to address.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -178,12 +184,19 @@ pub struct PagePool {
     /// References per page: 0 = on the free list, 1 = exclusively owned
     /// (mutable), >1 = shared between the prefix tree and/or slots.
     refs: Vec<u32>,
+    /// Monotonic generation per page, bumped on every mutation path
+    /// (realloc, mutable access, CoW seed) — how the decode panel cache
+    /// detects that a cached decode of a page went stale.
+    gens: Vec<u64>,
+    gen_clock: u64,
     free: Vec<PageId>,
     page_tokens: usize,
     head_dim: usize,
     encoded: bool,
     /// High-water mark of pages simultaneously owned by live slots.
     peak_live: usize,
+    /// Process-unique nonzero id (see [`instance_id`](Self::instance_id)).
+    instance: u64,
 }
 
 impl PagePool {
@@ -192,16 +205,39 @@ impl PagePool {
         PagePool {
             pages: Vec::new(),
             refs: Vec::new(),
+            gens: Vec::new(),
+            gen_clock: 0,
             free: Vec::new(),
             page_tokens,
             head_dim,
             encoded,
             peak_live: 0,
+            instance: POOL_INSTANCES.fetch_add(1, Ordering::Relaxed),
         }
     }
 
     pub fn page_tokens(&self) -> usize {
         self.page_tokens
+    }
+
+    /// Process-unique nonzero id for this pool. `PageId`s are indices,
+    /// so a cache keyed on them (the decode panel cache survives across
+    /// `PagedKvCache` instances inside one `DecodeScratch`) must also
+    /// compare pool identity to avoid reading another pool's entries.
+    pub fn instance_id(&self) -> u64 {
+        self.instance
+    }
+
+    /// Current generation of `id` — changes whenever the page *may* have
+    /// been mutated (fresh allocation, `get_mut` access, CoW seed). A
+    /// cache holding a decoded copy of a page revalidates against this.
+    pub fn gen(&self, id: PageId) -> u64 {
+        self.gens[id as usize]
+    }
+
+    fn bump_gen(&mut self, id: PageId) {
+        self.gen_clock += 1;
+        self.gens[id as usize] = self.gen_clock;
     }
 
     /// Allocate a page (one reference), reusing a freed one when
@@ -220,9 +256,13 @@ impl PagePool {
             };
             self.pages.push(Page { store, filled: 0 });
             self.refs.push(0);
+            self.gens.push(0);
             (self.pages.len() - 1) as PageId
         };
         self.refs[id as usize] = 1;
+        // A recycled id is a different logical page: invalidate any
+        // cached decode of the previous owner's contents.
+        self.bump_gen(id);
         // Live count only grows inside alloc, so sampling here keeps the
         // high-water mark exact without a counter on the free path.
         self.peak_live = self.peak_live.max(self.live_pages());
@@ -291,6 +331,10 @@ impl PagePool {
             "mutable access to page {id} with {} references",
             self.refs[id as usize]
         );
+        // Conservative: any mutable access may append, so stale any
+        // cached decode. Full (immutable-in-practice) pages are never
+        // handed out mutably by the cache layer, so their gens settle.
+        self.bump_gen(id);
         &mut self.pages[id as usize]
     }
 
@@ -301,6 +345,8 @@ impl PagePool {
     pub fn copy_prefix(&mut self, src: PageId, dst: PageId, m: usize, quant: Option<&KvQuantizer>) {
         assert_ne!(src, dst, "CoW copy onto the source page");
         debug_assert_eq!(self.refs[dst as usize], 1, "CoW target must be exclusively owned");
+        // This path writes dst without going through get_mut.
+        self.bump_gen(dst);
         let (s, d) = (src as usize, dst as usize);
         let (from, to) = if s < d {
             let (lo, hi) = self.pages.split_at_mut(d);
@@ -429,6 +475,36 @@ mod tests {
         let id = pool.alloc();
         pool.retain(id);
         let _ = pool.get_mut(id);
+    }
+
+    #[test]
+    fn generations_track_every_mutation_path() {
+        let mut pool = PagePool::new(2, 4, false);
+        let a = pool.alloc();
+        let g0 = pool.gen(a);
+        assert!(g0 > 0, "fresh page should start with a nonzero generation");
+        pool.get_mut(a).append(2, 4, None, &[1.0; 4], &[2.0; 4]);
+        let g1 = pool.gen(a);
+        assert!(g1 > g0, "get_mut did not bump the generation");
+        let b = pool.alloc();
+        let gb0 = pool.gen(b);
+        pool.copy_prefix(a, b, 1, None);
+        assert!(pool.gen(b) > gb0, "CoW seed did not bump the target generation");
+        let gb = pool.gen(b);
+        let _ = pool.get(a);
+        assert_eq!(pool.gen(a), g1, "reads must not bump generations");
+        pool.free(a);
+        let c = pool.alloc();
+        assert_eq!(c, a, "free list not reused");
+        assert!(pool.gen(c) > gb, "realloc did not bump the generation");
+    }
+
+    #[test]
+    fn pools_have_distinct_instance_ids() {
+        let p1 = PagePool::new(2, 4, false);
+        let p2 = PagePool::new(2, 4, false);
+        assert_ne!(p1.instance_id(), 0);
+        assert_ne!(p1.instance_id(), p2.instance_id());
     }
 
     #[test]

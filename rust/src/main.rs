@@ -242,12 +242,13 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
             };
             let session = DecodeSession::new(cfg.clone(), &weights, &scheme, pool, max_batch, kv)?;
             println!(
-                "[serve-cpu] model {} ({} params), scheme {}, weights {}, kv {}, lanes {max_batch}, prefix cache {}",
+                "[serve-cpu] model {} ({} params), scheme {}, weights {}, kv {}, kernels {}, lanes {max_batch}, prefix cache {}",
                 cfg.name,
                 cfg.param_count(),
                 session.act_scheme_name(),
                 session.weight_mode(),
                 session.kv_mode(),
+                lobcq::kernels::backend_name(),
                 session.prefix_mode()
             );
             // The cached engine holds full histories (no sliding window);
@@ -264,11 +265,12 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
         "batch" => {
             let exec = CpuExecutor::new(cfg.clone(), &weights, &scheme, pool, max_batch, t)?;
             println!(
-                "[serve-cpu] model {} ({} params), scheme {}, weights {}, batch {max_batch}, t {t}",
+                "[serve-cpu] model {} ({} params), scheme {}, weights {}, kernels {}, batch {max_batch}, t {t}",
                 cfg.name,
                 cfg.param_count(),
                 exec.act_scheme_name(),
-                exec.weight_mode()
+                exec.weight_mode(),
+                lobcq::kernels::backend_name()
             );
             Server::start(
                 exec,

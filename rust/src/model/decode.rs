@@ -6,6 +6,13 @@
 //! per token instead of the full forward's O(t²) re-score, and only the
 //! frontier rows of logits are ever materialized.
 //!
+//! All three entry points are thin drivers over one shared set of
+//! per-layer helpers ([`layer_qkv`], [`layer_wo_residual`],
+//! [`layer_mlp`], [`lm_head`], [`attend_span`]) parameterized by the
+//! stacked row count — the only thing that differs between a prefill
+//! suffix (`m` rows), a single decode token (1 row), and a fused batch
+//! (`lanes` rows).
+//!
 //! Numerics: with an f32 (KV16) cache the pair (prefill, decode_step)
 //! reproduces [`forward`](super::forward::forward) — every sub-step is
 //! row-independent in the reference forward (layer norm, GELU, per-row
@@ -21,6 +28,21 @@
 //! across requests bit-exactly (see `prefill_from`), and the KV4-vs-KV16
 //! ablation in EXPERIMENTS.md.
 //!
+//! Attention has two interchangeable paths ([`AttnPath`], DESIGN.md
+//! §Encoded-domain attention). [`AttnPath::Gather`] re-materializes the
+//! full f32 history per (lane, head) and runs the scalar score/context
+//! loops — the reference. [`AttnPath::Encoded`] (the default; opt out
+//! with `LOBCQ_DECODE_ATTN=gather`) scores q·K **directly against the
+//! cached pages**: each page is LUT-decoded once into a `K^T`/V panel
+//! pair cached per `PageId` in the scratch's [`KvPanelCache`] and
+//! revalidated against the page pool's generation counters, so
+//! steady-state decode re-decodes only the frontier page and streams
+//! full pages through the blocked (SIMD) GEMM driver. Both paths are
+//! **bit-identical**: the panels hold the same decoded values a gather
+//! would produce, and the GEMM driver accumulates q·K[j] in the same
+//! per-element order as the scalar loop (pinned by a module test and
+//! the decode-parity suite).
+//!
 //! Batching (DESIGN.md §Batched decode): `decode_step_batch` stacks the
 //! per-lane frontier tokens into a `(lanes, d)` activation matrix and
 //! runs each projection / FFN / LM-head GEMM **once per step** with
@@ -35,10 +57,45 @@
 //! which other lanes are co-scheduled (`tests/decode_parity.rs`).
 
 use crate::kernels::{self, KC};
-use crate::kvcache::{PagedKvCache, SlotId};
+use crate::kvcache::{KvPanelCache, PagedKvCache, PageId, SlotId};
 use crate::model::config::ModelConfig;
 use crate::model::forward::{gelu, layer_norm_flat, qmatmul_rows_into, softmax_rows, ActQuant};
 use crate::model::weights::Weights;
+use std::sync::OnceLock;
+
+/// Which implementation decode attention runs (see the module doc).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnPath {
+    /// Score q·K straight off the cached pages, each LUT-decoded once
+    /// into a cached `K^T`/V panel and streamed through the blocked
+    /// (SIMD) GEMM driver. The serving default.
+    Encoded,
+    /// Re-gather the full f32 history per (lane, head), then the scalar
+    /// score/context loops — the reference path the encoded one is
+    /// verified against.
+    Gather,
+}
+
+impl AttnPath {
+    pub fn name(self) -> &'static str {
+        match self {
+            AttnPath::Encoded => "encoded",
+            AttnPath::Gather => "gather",
+        }
+    }
+}
+
+impl Default for AttnPath {
+    /// `Encoded` unless `LOBCQ_DECODE_ATTN=gather` opts the process out
+    /// (read once, like the kernel backend's `LOBCQ_FORCE_SCALAR`).
+    fn default() -> AttnPath {
+        static FROM_ENV: OnceLock<AttnPath> = OnceLock::new();
+        *FROM_ENV.get_or_init(|| match std::env::var("LOBCQ_DECODE_ATTN") {
+            Ok(v) if v.eq_ignore_ascii_case("gather") => AttnPath::Gather,
+            _ => AttnPath::Encoded,
+        })
+    }
+}
 
 /// Reusable state for [`decode_step`] / [`decode_step_batch`]: every
 /// per-token temporary of the decode hot loop — the stacked activation
@@ -46,12 +103,13 @@ use crate::model::weights::Weights;
 /// projection, FFN hidden, logits), the activation-quantization staging
 /// buffer, the GEMM panel scratch (the encoded path's LUT-decode
 /// target), the gathered K/V history with score/context accumulators,
-/// per-lane positions, and the pre-rendered per-layer weight names
-/// (decode runs per token, so the `format!` allocations are hoisted out
-/// of the hot loop). A session that keeps one across steps performs
-/// **no steady-state allocations** once the buffers reach the working
-/// size — [`footprint`](Self::footprint) exposes the total capacity so
-/// the zero-alloc property test can pin that.
+/// per-lane positions, the per-page decoded-panel cache, and the
+/// pre-rendered per-layer weight names (decode runs per token, so the
+/// `format!` allocations are hoisted out of the hot loop). A session
+/// that keeps one across steps performs **no steady-state allocations**
+/// once the buffers reach the working size —
+/// [`footprint`](Self::footprint) exposes the total capacity so the
+/// zero-alloc property test can pin that.
 #[derive(Debug, Default)]
 pub struct DecodeScratch {
     /// Residual stream, `(lanes, d)`.
@@ -80,6 +138,15 @@ pub struct DecodeScratch {
     acc: Vec<f32>,
     /// Per-lane cache positions for the current step.
     pos: Vec<usize>,
+    /// Page ids of the (slot, layer, head) run being attended.
+    page_run: Vec<PageId>,
+    /// Per-page decoded `K^T`/V panels for [`AttnPath::Encoded`]. Its
+    /// memory scales with **cache state** (budgeted, generation-
+    /// revalidated — see `kvcache::lut`), not with the per-step working
+    /// set, so it is deliberately NOT part of [`footprint`](Self::footprint)
+    /// — the same reason KV pages themselves aren't.
+    panels: KvPanelCache,
+    attn_path: AttnPath,
     names: Vec<LayerNames>,
 }
 
@@ -88,10 +155,24 @@ impl DecodeScratch {
         DecodeScratch::default()
     }
 
-    /// Total f32/usize capacity (in elements) held across every scratch
-    /// buffer. Constant across steps once the working set is reached —
-    /// any hidden steady-state allocation in the decode loop would grow
-    /// it, which the zero-alloc property test asserts never happens.
+    /// Which attention path this scratch drives (defaults from
+    /// `LOBCQ_DECODE_ATTN`).
+    pub fn attn_path(&self) -> AttnPath {
+        self.attn_path
+    }
+
+    /// Force the attention path (benches pin both sides; tests pin
+    /// bit-equality across them).
+    pub fn set_attn_path(&mut self, path: AttnPath) {
+        self.attn_path = path;
+    }
+
+    /// Total f32/usize capacity (in elements) held across every
+    /// per-step scratch buffer. Constant across steps once the working
+    /// set is reached — any hidden steady-state allocation in the
+    /// decode loop would grow it, which the zero-alloc property test
+    /// asserts never happens. (The decoded-panel cache is excluded: its
+    /// size tracks cache state, not the step working set.)
     pub fn footprint(&self) -> usize {
         self.x.capacity()
             + self.h.capacity()
@@ -108,6 +189,7 @@ impl DecodeScratch {
             + self.ctx.capacity()
             + self.acc.capacity()
             + self.pos.capacity()
+            + self.page_run.capacity()
     }
 
     fn ensure_names(&mut self, n_layers: usize) {
@@ -117,16 +199,20 @@ impl DecodeScratch {
     }
 
     /// Pin the length-proportional attention buffers (gathered K/V,
-    /// score row) at the cache's per-slot token capacity once, so the
-    /// decode loop never reallocates them at **any** sequence length —
-    /// the zero-steady-state-allocation property holds by construction
-    /// instead of by amortized-doubling luck. Gathers only ever resize
-    /// within this capacity afterwards.
-    fn pin_attention_capacity(&mut self, max_tokens: usize, head_dim: usize) {
+    /// score row, page run) at the cache's per-slot token capacity once,
+    /// so the decode loop never reallocates them at **any** sequence
+    /// length — the zero-steady-state-allocation property holds by
+    /// construction instead of by amortized-doubling luck. Gathers only
+    /// ever resize within this capacity afterwards.
+    fn pin_attention_capacity(&mut self, max_tokens: usize, head_dim: usize, page_tokens: usize) {
         if self.k.capacity() < max_tokens * head_dim {
             self.k.resize(max_tokens * head_dim, 0.0);
             self.v.resize(max_tokens * head_dim, 0.0);
             self.scores.resize(max_tokens, 0.0);
+        }
+        let pages = max_tokens.div_ceil(page_tokens);
+        if self.page_run.capacity() < pages {
+            self.page_run.resize(pages, 0);
         }
     }
 }
@@ -159,6 +245,163 @@ impl LayerNames {
     }
 }
 
+// ---------------------------------------------------------------------
+// Shared per-layer building blocks. Each takes the stacked row count
+// `m` — 1 for a decode token, `lanes` for a fused batch, the suffix
+// length for prefill — and works on `s.x` as an `(m, d)` matrix.
+// ---------------------------------------------------------------------
+
+/// Embed `(token, position)` pairs into consecutive rows of `x`
+/// (`x[r] = embed[tok_r] + pos[p_r]`); callers size `x` first.
+fn embed_rows(
+    w: &Weights,
+    x: &mut [f32],
+    d: usize,
+    rows: impl Iterator<Item = (u32, usize)>,
+) -> anyhow::Result<()> {
+    let embed = w.get("embed")?;
+    let ppos = w.get("pos")?;
+    for (r, (tok, pos)) in rows.enumerate() {
+        let (e, p) = (embed.row(tok as usize), ppos.row(pos));
+        for (o, (&a, &b)) in x[r * d..(r + 1) * d].iter_mut().zip(e.iter().zip(p)) {
+            *o = a + b;
+        }
+    }
+    Ok(())
+}
+
+/// LN1(x) → one fused QKV projection over `m` stacked rows into
+/// `s.qkv` (`(m, 3d)`).
+fn layer_qkv(w: &Weights, s: &mut DecodeScratch, li: usize, m: usize, d: usize, act_q: ActQuant) -> anyhow::Result<()> {
+    s.h.clear();
+    s.h.extend_from_slice(&s.x);
+    layer_norm_flat(&mut s.h, d, w.get(&s.names[li].ln1_g)?, w.get(&s.names[li].ln1_b)?, 1e-5);
+    qmatmul_rows_into(w, &s.names[li].wqkv, &s.h, m, d, act_q, &mut s.qkv, &mut s.aq, &mut s.panel)?;
+    Ok(())
+}
+
+/// Output projection of the attention block + residual add into `x`.
+fn layer_wo_residual(w: &Weights, s: &mut DecodeScratch, li: usize, m: usize, d: usize, act_q: ActQuant) -> anyhow::Result<()> {
+    qmatmul_rows_into(w, &s.names[li].wo, &s.attn, m, d, act_q, &mut s.proj, &mut s.aq, &mut s.panel)?;
+    for (xv, pv) in s.x.iter_mut().zip(&s.proj) {
+        *xv += pv;
+    }
+    Ok(())
+}
+
+/// MLP block over `m` stacked rows: LN2 → W1 → GELU → W2 + residual.
+fn layer_mlp(w: &Weights, s: &mut DecodeScratch, li: usize, m: usize, d: usize, act_q: ActQuant) -> anyhow::Result<()> {
+    s.h.clear();
+    s.h.extend_from_slice(&s.x);
+    layer_norm_flat(&mut s.h, d, w.get(&s.names[li].ln2_g)?, w.get(&s.names[li].ln2_b)?, 1e-5);
+    let d_ff = qmatmul_rows_into(w, &s.names[li].w1, &s.h, m, d, act_q, &mut s.ff, &mut s.aq, &mut s.panel)?;
+    gelu(&mut s.ff);
+    qmatmul_rows_into(w, &s.names[li].w2, &s.ff, m, d_ff, act_q, &mut s.proj, &mut s.aq, &mut s.panel)?;
+    for (xv, dv) in s.x.iter_mut().zip(&s.proj) {
+        *xv += dv;
+    }
+    Ok(())
+}
+
+/// Final layer norm over **every** stacked row (row-independent, cheap)
+/// + the tied LM-head GEMM over rows `row0..row0 + rows` only — decode
+/// samples frontier rows, so the vocab GEMM never runs on a row nobody
+/// reads.
+fn lm_head(cfg: &ModelConfig, w: &Weights, s: &mut DecodeScratch, row0: usize, rows: usize) -> anyhow::Result<()> {
+    let d = cfg.d;
+    layer_norm_flat(&mut s.x, d, w.get("lnf.g")?, w.get("lnf.b")?, 1e-5);
+    let head = w.packed_transposed("embed")?;
+    s.logits.resize(rows * cfg.vocab, 0.0);
+    kernels::gemm_into_flat_with(&s.x[row0 * d..(row0 + rows) * d], rows, d, &*head, &mut s.logits, &mut s.panel);
+    Ok(())
+}
+
+/// Make one (slot, layer, head)'s cached history attendable under the
+/// scratch's [`AttnPath`] and return its length: `Gather` decodes the
+/// whole history into `s.k`/`s.v`; `Encoded` resolves the page run and
+/// revalidates its decoded `K^T`/V panels (only pages whose pool
+/// generation moved — in steady state, just the frontier page — are
+/// re-decoded).
+fn resolve_head(cache: &PagedKvCache, s: &mut DecodeScratch, slot: SlotId, li: usize, head: usize) -> usize {
+    match s.attn_path {
+        AttnPath::Gather => cache.gather_kv(slot, li, head, &mut s.k, &mut s.v),
+        AttnPath::Encoded => {
+            let lay = cache.layout();
+            let len = cache.page_run(slot, li, head, &mut s.page_run);
+            let pages = len.div_ceil(lay.page_tokens);
+            s.panels.ensure(cache.pool(), cache.quantizer(), lay.head_dim, &s.page_run[..pages]);
+            len
+        }
+    }
+}
+
+/// One (row, head) of decode attention over the first `n` cached
+/// tokens: scores = (q · K) * scale, causal softmax, ctx = p · V,
+/// written to `s.attn[out_off..out_off + hd]`. The query is
+/// `s.qkv[q_off..q_off + hd]`; [`resolve_head`] must have run for this
+/// head.
+///
+/// Both paths produce identical bits. `Gather` is the scalar reference:
+/// a per-element dot over `head_dim` ascending, then the same
+/// `KC`-chunked context reduction the blocked kernel uses. `Encoded`
+/// feeds the cached `K^T` panels to the blocked GEMM driver — one
+/// `k`-block (`head_dim <= KC`), accumulators starting at the zeroed
+/// output, products added in the same per-element order (the dispatch
+/// contract: no FMA, no reassociation) — and scales after, `acc * scale`
+/// either way; its context product reads the decoded V rows in the same
+/// token order the gathered copy would have.
+fn attend_span(s: &mut DecodeScratch, pt: usize, hd: usize, n: usize, q_off: usize, out_off: usize, scale: f32) {
+    debug_assert!(hd <= KC, "head_dim {hd} spans multiple k-blocks");
+    s.scores.resize(n, 0.0);
+    match s.attn_path {
+        AttnPath::Gather => {
+            for (j, sc) in s.scores.iter_mut().enumerate() {
+                let q = &s.qkv[q_off..q_off + hd];
+                let krow = &s.k[j * hd..(j + 1) * hd];
+                let mut acc = 0.0f32;
+                for (a, b) in q.iter().zip(krow) {
+                    acc += a * b;
+                }
+                *sc = acc * scale;
+            }
+        }
+        AttnPath::Encoded => {
+            // During prefill a page can hold tokens past this row's
+            // causal span; the view's `n` masks them — the driver
+            // discards the columns past `n`, same as packed zero-pad.
+            let view = s.panels.kt_view(&s.page_run[..n.div_ceil(pt)], n);
+            kernels::gemm_into_flat_with(&s.qkv[q_off..q_off + hd], 1, hd, &view, &mut s.scores, &mut s.panel);
+            for sc in s.scores[..n].iter_mut() {
+                *sc *= scale;
+            }
+        }
+    }
+    softmax_rows(&mut s.scores, n);
+    // ctx = p · V, reduced over tokens in KC-sized chunks with a fresh
+    // accumulator per chunk — the blocked driver's order.
+    s.ctx.fill(0.0);
+    let mut j0 = 0usize;
+    while j0 < n {
+        let jc = KC.min(n - j0);
+        s.acc.fill(0.0);
+        for j in j0..j0 + jc {
+            let pj = s.scores[j];
+            let vrow = match s.attn_path {
+                AttnPath::Gather => &s.v[j * hd..(j + 1) * hd],
+                AttnPath::Encoded => s.panels.v_row(&s.page_run, j),
+            };
+            for (a, &b) in s.acc.iter_mut().zip(vrow) {
+                *a += pj * b;
+            }
+        }
+        for (c, &a) in s.ctx.iter_mut().zip(s.acc.iter()) {
+            *c += a;
+        }
+        j0 += jc;
+    }
+    s.attn[out_off..out_off + hd].copy_from_slice(&s.ctx);
+}
+
 /// Fill `slot` with a whole prompt — [`prefill_from`] at offset 0 with
 /// a scratch of its own. Kept as the convenience entry point for tests
 /// and benches; the serving session calls [`prefill_from`] directly so
@@ -185,11 +428,11 @@ pub fn prefill(
 ///
 /// Numerics: the suffix runs as one `(m, d)` stacked forward — each
 /// projection/FFN GEMM once over all suffix rows — and attention is
-/// computed **against the cache** (per row, over the gathered history at
-/// that row's position), in the same accumulation order `decode_step`
-/// uses. Consequences, both load-bearing:
+/// computed **against the cache** (per row, over the history at that
+/// row's position), in the same accumulation order `decode_step` uses.
+/// Consequences, both load-bearing:
 ///
-/// - With an f32 cache the gathered history equals the in-flight values,
+/// - With an f32 cache the cached history equals the in-flight values,
 ///   so prefill reproduces the full forward bit for bit (pinned by the
 ///   decode-parity suite).
 /// - With a BCQ (KV4) cache, attention reads the **quantized** history —
@@ -200,16 +443,6 @@ pub fn prefill(
 ///   what makes a warm (adopted-prefix) prefill bit-identical to a cold
 ///   one (`tests/prefix_parity.rs`) and cached pages safe to share
 ///   across requests.
-///
-/// Known tradeoff: the per-row score/context reductions here are the
-/// scalar decode-mirror of the blocked kernel, not the packed-GEMM
-/// attention the old full-prompt prefill ran — bit-identical by the
-/// kernel's KC-accumulation contract, but without its SIMD constants,
-/// so a cold prefill's O(t²·hd) attention runs slower than the PR2
-/// kernels could make it. Routing the gathered history through
-/// `PackedB` panels (plus a causal mask) would keep the same bits and
-/// recover that speed; it is left as follow-up rather than risked
-/// here.
 #[allow(clippy::too_many_arguments)]
 pub fn prefill_from(
     cfg: &ModelConfig,
@@ -230,7 +463,7 @@ pub fn prefill_from(
     );
     anyhow::ensure!(tokens.len() <= lay.max_tokens, "prompt {} > cache capacity {}", tokens.len(), lay.max_tokens);
     anyhow::ensure!(tokens.len() <= cfg.max_t, "prompt {} > max_t {}", tokens.len(), cfg.max_t);
-    let max_tokens = lay.max_tokens;
+    let (max_tokens, pt) = (lay.max_tokens, lay.page_tokens);
     anyhow::ensure!(
         cache.seq_len(slot) == offset,
         "cache holds {} tokens for slot {slot}, prefill expects {offset}",
@@ -242,32 +475,21 @@ pub fn prefill_from(
     let (d, hd) = (cfg.d, cfg.head_dim());
     let m = tokens.len() - offset;
     let scale = 1.0 / (hd as f32).sqrt();
-    scratch.pin_attention_capacity(max_tokens, hd);
+    scratch.pin_attention_capacity(max_tokens, hd, pt);
 
     // ---- embed the suffix: x[r] = embed[tok_{offset+r}] + pos[offset+r] ----
-    let embed = w.get("embed")?;
-    let ppos = w.get("pos")?;
     scratch.x.resize(m * d, 0.0);
-    for r in 0..m {
-        let (e, p) = (embed.row(tokens[offset + r] as usize), ppos.row(offset + r));
-        for (o, (&a, &b)) in scratch.x[r * d..(r + 1) * d].iter_mut().zip(e.iter().zip(p)) {
-            *o = a + b;
-        }
-    }
+    embed_rows(w, &mut scratch.x, d, (offset..tokens.len()).map(|p| (tokens[p], p)))?;
 
     scratch.ctx.resize(hd, 0.0);
     scratch.acc.resize(hd, 0.0);
     scratch.ensure_names(cfg.n_layers);
     for li in 0..cfg.n_layers {
-        let names = &scratch.names[li];
         // --- attention block: one fused QKV GEMM over the suffix, then
-        // append every row's K/V before attending, so one gather per
-        // head serves all suffix rows (row r reads its causal prefix of
-        // the gathered history) ---
-        scratch.h.clear();
-        scratch.h.extend_from_slice(&scratch.x);
-        layer_norm_flat(&mut scratch.h, d, w.get(&names.ln1_g)?, w.get(&names.ln1_b)?, 1e-5);
-        qmatmul_rows_into(w, &names.wqkv, &scratch.h, m, d, act_q, &mut scratch.qkv, &mut scratch.aq, &mut scratch.panel)?; // (m, 3D)
+        // append every row's K/V before attending, so one history
+        // resolve per head serves all suffix rows (row r reads its
+        // causal prefix) ---
+        layer_qkv(w, scratch, li, m, d, act_q)?;
         for r in 0..m {
             let row = &scratch.qkv[r * 3 * d..(r + 1) * 3 * d];
             cache.append(slot, li, &row[d..2 * d], &row[2 * d..3 * d])?;
@@ -275,65 +497,18 @@ pub fn prefill_from(
         scratch.attn.resize(m * d, 0.0);
         for head in 0..cfg.n_heads {
             let off = head * hd;
-            let len = cache.gather_kv(slot, li, head, &mut scratch.k, &mut scratch.v);
+            let len = resolve_head(cache, scratch, slot, li, head);
             debug_assert_eq!(len, offset + m);
             for r in 0..m {
                 let n = offset + r + 1; // this row's causal span
-                let qbase = r * 3 * d;
-                scratch.scores.resize(n, 0.0);
-                for (j, s) in scratch.scores.iter_mut().enumerate() {
-                    let q = &scratch.qkv[qbase + off..qbase + off + hd];
-                    let krow = &scratch.k[j * hd..(j + 1) * hd];
-                    let mut acc = 0.0f32;
-                    for (a, b) in q.iter().zip(krow) {
-                        acc += a * b;
-                    }
-                    *s = acc * scale;
-                }
-                softmax_rows(&mut scratch.scores, n);
-                scratch.ctx.fill(0.0);
-                let mut j0 = 0usize;
-                while j0 < n {
-                    let jc = KC.min(n - j0);
-                    scratch.acc.fill(0.0);
-                    for j in j0..j0 + jc {
-                        let pj = scratch.scores[j];
-                        let vrow = &scratch.v[j * hd..(j + 1) * hd];
-                        for (a, &b) in scratch.acc.iter_mut().zip(vrow) {
-                            *a += pj * b;
-                        }
-                    }
-                    for (c, &a) in scratch.ctx.iter_mut().zip(scratch.acc.iter()) {
-                        *c += a;
-                    }
-                    j0 += jc;
-                }
-                scratch.attn[r * d + off..r * d + off + hd].copy_from_slice(&scratch.ctx);
+                attend_span(scratch, pt, hd, n, r * 3 * d + off, r * d + off, scale);
             }
         }
-        qmatmul_rows_into(w, &names.wo, &scratch.attn, m, d, act_q, &mut scratch.proj, &mut scratch.aq, &mut scratch.panel)?;
-        for (xv, pv) in scratch.x.iter_mut().zip(&scratch.proj) {
-            *xv += pv;
-        }
-
-        // --- MLP block: two fused GEMMs over the suffix ---
-        scratch.h.clear();
-        scratch.h.extend_from_slice(&scratch.x);
-        layer_norm_flat(&mut scratch.h, d, w.get(&names.ln2_g)?, w.get(&names.ln2_b)?, 1e-5);
-        let d_ff = qmatmul_rows_into(w, &names.w1, &scratch.h, m, d, act_q, &mut scratch.ff, &mut scratch.aq, &mut scratch.panel)?;
-        gelu(&mut scratch.ff);
-        qmatmul_rows_into(w, &names.w2, &scratch.ff, m, d_ff, act_q, &mut scratch.proj, &mut scratch.aq, &mut scratch.panel)?;
-        for (xv, dv) in scratch.x.iter_mut().zip(&scratch.proj) {
-            *xv += dv;
-        }
+        layer_wo_residual(w, scratch, li, m, d, act_q)?;
+        layer_mlp(w, scratch, li, m, d, act_q)?;
     }
 
-    // Frontier-only LM head: layer-norm is row-independent, so norm the
-    // whole suffix (cheap) but run the vocab GEMM on the last row only.
-    layer_norm_flat(&mut scratch.x, d, w.get("lnf.g")?, w.get("lnf.b")?, 1e-5);
-    let head = w.packed_transposed("embed")?;
-    scratch.logits.resize(cfg.vocab, 0.0);
-    kernels::gemm_into_flat_with(&scratch.x[(m - 1) * d..m * d], 1, d, &*head, &mut scratch.logits, &mut scratch.panel);
+    lm_head(cfg, w, scratch, m - 1, 1)?;
     Ok(scratch.logits[..cfg.vocab].to_vec())
 }
 
@@ -368,7 +543,7 @@ pub fn validate_decode_lane(
 /// is bit-exact with the corresponding row of the full forward.
 ///
 /// This is the single-lane **reference** the batched step is verified
-/// against — it shares the scratch buffers and row-level helpers but
+/// against — it shares the scratch buffers and per-layer helpers but
 /// keeps the straightforward one-lane control flow.
 pub fn decode_step(
     cfg: &ModelConfig,
@@ -381,88 +556,34 @@ pub fn decode_step(
 ) -> anyhow::Result<Vec<f32>> {
     let pos = validate_decode_lane(cfg, cache, &[slot], 0, token)?;
     let (d, hd) = (cfg.d, cfg.head_dim());
+    let lay = cache.layout();
+    let pt = lay.page_tokens;
     let scale = 1.0 / (hd as f32).sqrt();
-    scratch.pin_attention_capacity(cache.layout().max_tokens, hd);
+    scratch.pin_attention_capacity(lay.max_tokens, hd, pt);
 
     // Embed the frontier token at its position.
-    let embed = w.get("embed")?;
-    let ppos = w.get("pos")?;
     scratch.x.resize(d, 0.0);
-    let (e, p) = (embed.row(token as usize), ppos.row(pos));
-    for (o, (&a, &b)) in scratch.x.iter_mut().zip(e.iter().zip(p)) {
-        *o = a + b;
-    }
+    embed_rows(w, &mut scratch.x, d, std::iter::once((token, pos)))?;
 
     scratch.ctx.resize(hd, 0.0);
     scratch.acc.resize(hd, 0.0);
     scratch.ensure_names(cfg.n_layers);
-    for i in 0..cfg.n_layers {
-        let names = &scratch.names[i];
+    for li in 0..cfg.n_layers {
         // --- attention block ---
-        scratch.h.clear();
-        scratch.h.extend_from_slice(&scratch.x);
-        layer_norm_flat(&mut scratch.h, d, w.get(&names.ln1_g)?, w.get(&names.ln1_b)?, 1e-5);
-        qmatmul_rows_into(w, &names.wqkv, &scratch.h, 1, d, act_q, &mut scratch.qkv, &mut scratch.aq, &mut scratch.panel)?; // (1, 3D)
-        let n = cache.append(slot, i, &scratch.qkv[d..2 * d], &scratch.qkv[2 * d..3 * d])?;
+        layer_qkv(w, scratch, li, 1, d, act_q)?;
+        let n = cache.append(slot, li, &scratch.qkv[d..2 * d], &scratch.qkv[2 * d..3 * d])?;
         scratch.attn.resize(d, 0.0);
         for head in 0..cfg.n_heads {
             let off = head * hd;
-            cache.gather_kv(slot, i, head, &mut scratch.k, &mut scratch.v);
-            // scores[j] = (q · K[j]) * scale — reduction over head_dim,
-            // ascending, one KC block (head_dim < KC always here).
-            scratch.scores.resize(n, 0.0);
-            for (j, s) in scratch.scores.iter_mut().enumerate() {
-                let q = &scratch.qkv[off..off + hd];
-                let krow = &scratch.k[j * hd..(j + 1) * hd];
-                let mut acc = 0.0f32;
-                for (a, b) in q.iter().zip(krow) {
-                    acc += a * b;
-                }
-                *s = acc * scale;
-            }
-            softmax_rows(&mut scratch.scores, n);
-            // ctx = p · V, reduced over tokens in KC-sized chunks with a
-            // fresh accumulator per chunk — the blocked driver's order.
-            scratch.ctx.fill(0.0);
-            let mut j0 = 0usize;
-            while j0 < n {
-                let jc = KC.min(n - j0);
-                scratch.acc.fill(0.0);
-                for j in j0..j0 + jc {
-                    let pj = scratch.scores[j];
-                    let vrow = &scratch.v[j * hd..(j + 1) * hd];
-                    for (a, &b) in scratch.acc.iter_mut().zip(vrow) {
-                        *a += pj * b;
-                    }
-                }
-                for (c, &a) in scratch.ctx.iter_mut().zip(scratch.acc.iter()) {
-                    *c += a;
-                }
-                j0 += jc;
-            }
-            scratch.attn[off..off + hd].copy_from_slice(&scratch.ctx);
+            let len = resolve_head(cache, scratch, slot, li, head);
+            debug_assert_eq!(len, n);
+            attend_span(scratch, pt, hd, n, off, off, scale);
         }
-        qmatmul_rows_into(w, &names.wo, &scratch.attn, 1, d, act_q, &mut scratch.proj, &mut scratch.aq, &mut scratch.panel)?;
-        for (xv, pv) in scratch.x.iter_mut().zip(&scratch.proj) {
-            *xv += pv;
-        }
-
-        // --- MLP block ---
-        scratch.h.clear();
-        scratch.h.extend_from_slice(&scratch.x);
-        layer_norm_flat(&mut scratch.h, d, w.get(&names.ln2_g)?, w.get(&names.ln2_b)?, 1e-5);
-        let d_ff = qmatmul_rows_into(w, &names.w1, &scratch.h, 1, d, act_q, &mut scratch.ff, &mut scratch.aq, &mut scratch.panel)?;
-        gelu(&mut scratch.ff);
-        qmatmul_rows_into(w, &names.w2, &scratch.ff, 1, d_ff, act_q, &mut scratch.proj, &mut scratch.aq, &mut scratch.panel)?;
-        for (xv, dv) in scratch.x.iter_mut().zip(&scratch.proj) {
-            *xv += dv;
-        }
+        layer_wo_residual(w, scratch, li, 1, d, act_q)?;
+        layer_mlp(w, scratch, li, 1, d, act_q)?;
     }
 
-    layer_norm_flat(&mut scratch.x, d, w.get("lnf.g")?, w.get("lnf.b")?, 1e-5);
-    let head = w.packed_transposed("embed")?;
-    scratch.logits.resize(cfg.vocab, 0.0);
-    kernels::gemm_into_flat_with(&scratch.x, 1, d, &*head, &mut scratch.logits, &mut scratch.panel);
+    lm_head(cfg, w, scratch, 0, 1)?;
     Ok(scratch.logits.clone())
 }
 
@@ -499,6 +620,8 @@ pub fn decode_step_batch<'s>(
     anyhow::ensure!(lanes >= 1, "decode_step_batch with no lanes");
     anyhow::ensure!(tokens.len() == lanes, "{} tokens for {lanes} lanes", tokens.len());
     let (d, hd) = (cfg.d, cfg.head_dim());
+    let lay = cache.layout();
+    let pt = lay.page_tokens;
     let scale = 1.0 / (hd as f32).sqrt();
 
     // ---- validate everything up front (shared per-lane check); no
@@ -508,29 +631,18 @@ pub fn decode_step_batch<'s>(
         let pos = validate_decode_lane(cfg, cache, slots, i, tok)?;
         scratch.pos.push(pos);
     }
-    scratch.pin_attention_capacity(cache.layout().max_tokens, hd);
+    scratch.pin_attention_capacity(lay.max_tokens, hd, pt);
 
     // ---- embed all frontier tokens: x[i] = embed[tok_i] + pos[p_i] ----
-    let embed = w.get("embed")?;
-    let ppos = w.get("pos")?;
     scratch.x.resize(lanes * d, 0.0);
-    for i in 0..lanes {
-        let (e, p) = (embed.row(tokens[i] as usize), ppos.row(scratch.pos[i]));
-        for (o, (&a, &b)) in scratch.x[i * d..(i + 1) * d].iter_mut().zip(e.iter().zip(p)) {
-            *o = a + b;
-        }
-    }
+    embed_rows(w, &mut scratch.x, d, tokens.iter().zip(&scratch.pos).map(|(&t, &p)| (t, p)))?;
 
     scratch.ctx.resize(hd, 0.0);
     scratch.acc.resize(hd, 0.0);
     scratch.ensure_names(cfg.n_layers);
     for li in 0..cfg.n_layers {
-        let names = &scratch.names[li];
         // --- attention block: one fused QKV GEMM, per-lane attention ---
-        scratch.h.clear();
-        scratch.h.extend_from_slice(&scratch.x);
-        layer_norm_flat(&mut scratch.h, d, w.get(&names.ln1_g)?, w.get(&names.ln1_b)?, 1e-5);
-        qmatmul_rows_into(w, &names.wqkv, &scratch.h, lanes, d, act_q, &mut scratch.qkv, &mut scratch.aq, &mut scratch.panel)?; // (lanes, 3D)
+        layer_qkv(w, scratch, li, lanes, d, act_q)?;
         cache.append_batch(slots, li, &scratch.qkv, 3 * d, d, 2 * d)?;
         scratch.attn.resize(lanes * d, 0.0);
         for i in 0..lanes {
@@ -538,59 +650,16 @@ pub fn decode_step_batch<'s>(
             let qbase = i * 3 * d;
             for head in 0..cfg.n_heads {
                 let off = head * hd;
-                cache.gather_kv(slots[i], li, head, &mut scratch.k, &mut scratch.v);
-                scratch.scores.resize(n, 0.0);
-                for (j, s) in scratch.scores.iter_mut().enumerate() {
-                    let q = &scratch.qkv[qbase + off..qbase + off + hd];
-                    let krow = &scratch.k[j * hd..(j + 1) * hd];
-                    let mut acc = 0.0f32;
-                    for (a, b) in q.iter().zip(krow) {
-                        acc += a * b;
-                    }
-                    *s = acc * scale;
-                }
-                softmax_rows(&mut scratch.scores, n);
-                scratch.ctx.fill(0.0);
-                let mut j0 = 0usize;
-                while j0 < n {
-                    let jc = KC.min(n - j0);
-                    scratch.acc.fill(0.0);
-                    for j in j0..j0 + jc {
-                        let pj = scratch.scores[j];
-                        let vrow = &scratch.v[j * hd..(j + 1) * hd];
-                        for (a, &b) in scratch.acc.iter_mut().zip(vrow) {
-                            *a += pj * b;
-                        }
-                    }
-                    for (c, &a) in scratch.ctx.iter_mut().zip(scratch.acc.iter()) {
-                        *c += a;
-                    }
-                    j0 += jc;
-                }
-                scratch.attn[i * d + off..i * d + off + hd].copy_from_slice(&scratch.ctx);
+                let len = resolve_head(cache, scratch, slots[i], li, head);
+                debug_assert_eq!(len, n);
+                attend_span(scratch, pt, hd, n, qbase + off, i * d + off, scale);
             }
         }
-        qmatmul_rows_into(w, &names.wo, &scratch.attn, lanes, d, act_q, &mut scratch.proj, &mut scratch.aq, &mut scratch.panel)?;
-        for (xv, pv) in scratch.x.iter_mut().zip(&scratch.proj) {
-            *xv += pv;
-        }
-
-        // --- MLP block: two fused GEMMs over all lanes ---
-        scratch.h.clear();
-        scratch.h.extend_from_slice(&scratch.x);
-        layer_norm_flat(&mut scratch.h, d, w.get(&names.ln2_g)?, w.get(&names.ln2_b)?, 1e-5);
-        let d_ff = qmatmul_rows_into(w, &names.w1, &scratch.h, lanes, d, act_q, &mut scratch.ff, &mut scratch.aq, &mut scratch.panel)?;
-        gelu(&mut scratch.ff);
-        qmatmul_rows_into(w, &names.w2, &scratch.ff, lanes, d_ff, act_q, &mut scratch.proj, &mut scratch.aq, &mut scratch.panel)?;
-        for (xv, dv) in scratch.x.iter_mut().zip(&scratch.proj) {
-            *xv += dv;
-        }
+        layer_wo_residual(w, scratch, li, lanes, d, act_q)?;
+        layer_mlp(w, scratch, li, lanes, d, act_q)?;
     }
 
-    layer_norm_flat(&mut scratch.x, d, w.get("lnf.g")?, w.get("lnf.b")?, 1e-5);
-    let head = w.packed_transposed("embed")?;
-    scratch.logits.resize(lanes * cfg.vocab, 0.0);
-    kernels::gemm_into_flat_with(&scratch.x, lanes, d, &*head, &mut scratch.logits, &mut scratch.panel);
+    lm_head(cfg, w, scratch, 0, lanes)?;
     Ok(&scratch.logits[..lanes * cfg.vocab])
 }
 
@@ -632,6 +701,51 @@ mod tests {
                 }
             }
             assert_eq!(cache.seq_len(slot), tokens.len());
+        }
+    }
+
+    #[test]
+    fn encoded_attention_is_bit_identical_to_gather() {
+        // Twin sessions, one scratch pinned per path, over both KV
+        // stores: every prefill and decode logit row must agree to the
+        // bit — the contract that lets the encoded path replace the
+        // gather path silently (and the property the gather path is
+        // retained to witness).
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 47);
+        let hd = cfg.head_dim();
+        let sample: Vec<f32> = w.get("l0.attn.wqkv").unwrap().data.clone();
+        let tokens: Vec<u32> = (0..11).map(|i| (i * 11 % 40) as u32).collect();
+        for encoded in [false, true] {
+            let mk = || {
+                let store = if encoded {
+                    KvStore::Encoded(KvQuantizer::calibrated(hd, &sample[..hd * 32], 23).unwrap())
+                } else {
+                    KvStore::F32
+                };
+                PagedKvCache::new(KvLayout::for_model(&cfg, 4, 1), store).unwrap()
+            };
+            let (mut cg, mut ce) = (mk(), mk());
+            let sg = cg.alloc_slot().unwrap();
+            let se = ce.alloc_slot().unwrap();
+            let (mut scr_g, mut scr_e) = (DecodeScratch::new(), DecodeScratch::new());
+            scr_g.set_attn_path(AttnPath::Gather);
+            scr_e.set_attn_path(AttnPath::Encoded);
+            // Split prefill so the encoded path sees both a partially
+            // filled frontier page and rows whose causal span ends
+            // mid-page (the masked-columns case).
+            let a = prefill_from(&cfg, &w, &mut cg, sg, &tokens[..6], 0, None, &mut scr_g).unwrap();
+            let b = prefill_from(&cfg, &w, &mut ce, se, &tokens[..6], 0, None, &mut scr_e).unwrap();
+            for (c, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "encoded={encoded} prefill col {c}");
+            }
+            for (t, &tok) in tokens[6..].iter().enumerate() {
+                let x = decode_step(&cfg, &w, &mut cg, sg, tok, None, &mut scr_g).unwrap();
+                let y = decode_step(&cfg, &w, &mut ce, se, tok, None, &mut scr_e).unwrap();
+                for (c, (x, y)) in x.iter().zip(&y).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "encoded={encoded} step {t} col {c}");
+                }
+            }
         }
     }
 

@@ -9,6 +9,6 @@ pub mod forward;
 pub mod weights;
 
 pub use config::ModelConfig;
-pub use decode::{decode_step, prefill, DecodeScratch};
+pub use decode::{decode_step, prefill, AttnPath, DecodeScratch};
 pub use forward::{forward, forward_logits_at};
 pub use weights::{Linear, Weights};
