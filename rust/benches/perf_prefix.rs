@@ -65,7 +65,7 @@ fn model() -> (ModelConfig, Weights) {
 }
 
 fn session(cfg: &ModelConfig, w: &Weights, encoded_kv: bool, prefix_budget: Option<usize>) -> DecodeSession {
-    let kv = KvCacheOpts { page_tokens: PAGE_TOKENS, encoded: encoded_kv, prefix_cache_bytes: prefix_budget };
+    let kv = KvCacheOpts { page_tokens: PAGE_TOKENS, encoded: encoded_kv, prefix_cache_bytes: prefix_budget, page_budget: None };
     DecodeSession::new(cfg.clone(), w, &Scheme::Bf16, QuantPool::serial(), 1, kv).unwrap()
 }
 

@@ -2,12 +2,29 @@
 //! `max_batch`, waiting at most `max_wait` for the batch to fill —
 //! the standard latency/throughput knob of serving systems (vLLM-style).
 //!
-//! Invariants (property-tested): FIFO order within a batch stream, no
-//! request dropped, no request duplicated, batch size ≤ max_batch, and a
-//! non-empty queue never waits longer than `max_wait` once the first
-//! request of a batch has arrived.
+//! SLO machinery (DESIGN.md §Scheduling):
+//!
+//! - **Bounded admission**: an optional `queue_cap` turns `push` into
+//!   backpressure — a full queue rejects with [`PushOutcome::QueueFull`]
+//!   instead of growing without bound. Requeues from the scheduler
+//!   ([`push_front`](Batcher::push_front)) bypass the cap: those
+//!   requests were already admitted once.
+//! - **Two-level priority FIFO**: high-priority requests drain before
+//!   normal ones at every pop; order within each class stays FIFO.
+//! - **Deadline shedding at pop time**: a request whose deadline passed
+//!   while queued is never handed to the scheduler — it moves to an
+//!   internal shed bin the worker drains
+//!   ([`drain_shed`](Batcher::drain_shed)) to deliver the terminal
+//!   shed error. Shedding at pop (not push) catches deadlines that
+//!   expire *while waiting*, which is where queueing delay actually
+//!   kills an SLO.
+//!
+//! Invariants (property-tested): FIFO order within a priority class, no
+//! request dropped or duplicated across pops + shed bin, batch size ≤
+//! max_batch, and a non-empty queue never waits longer than `max_wait`
+//! once the first request of a batch has arrived.
 
-use super::request::Request;
+use super::request::{Priority, Request};
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -16,18 +33,76 @@ use std::time::{Duration, Instant};
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Admission-queue capacity (`None` = unbounded, the pre-SLO
+    /// behaviour). Counts queued requests only, not the shed bin.
+    pub queue_cap: Option<usize>,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5), queue_cap: None }
     }
+}
+
+/// Result of a producer-side [`push`](Batcher::push).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushOutcome {
+    Accepted,
+    /// Bounded queue at capacity; the request was NOT enqueued.
+    QueueFull,
+    /// Queue closed (shutdown); the request was NOT enqueued.
+    Closed,
+}
+
+impl PushOutcome {
+    pub fn is_accepted(self) -> bool {
+        self == PushOutcome::Accepted
+    }
+}
+
+/// Result of a blocking consumer-side [`pop`](Batcher::pop).
+#[derive(Debug)]
+pub enum PopResult {
+    /// A live (unexpired) request.
+    Req(Request),
+    /// No live request, but deadline-expired ones just moved to the
+    /// shed bin — the caller must [`drain_shed`](Batcher::drain_shed)
+    /// and deliver their terminal errors before polling again (pop
+    /// never blocks while shed deliveries are pending).
+    Shed,
+    /// Closed and fully drained.
+    Closed,
 }
 
 #[derive(Debug, Default)]
 struct QueueState {
-    queue: VecDeque<Request>,
+    high: VecDeque<Request>,
+    normal: VecDeque<Request>,
+    /// Deadline-expired requests awaiting terminal-error delivery.
+    shed: Vec<Request>,
     closed: bool,
+}
+
+impl QueueState {
+    fn queued(&self) -> usize {
+        self.high.len() + self.normal.len()
+    }
+
+    /// Pop the highest-priority live request, moving deadline-expired
+    /// ones encountered on the way into the shed bin.
+    fn pop_live(&mut self, now: Instant) -> Option<Request> {
+        loop {
+            let r = match self.high.pop_front() {
+                Some(r) => r,
+                None => self.normal.pop_front()?,
+            };
+            if r.expired(now) {
+                self.shed.push(r);
+            } else {
+                return Some(r);
+            }
+        }
+    }
 }
 
 /// Thread-safe dynamic batching queue.
@@ -47,86 +122,151 @@ impl Batcher {
         self.policy
     }
 
-    /// Enqueue a request (producer side). Returns false if closed.
-    pub fn push(&self, req: Request) -> bool {
+    /// Enqueue a request (producer side), subject to the capacity bound.
+    pub fn push(&self, req: Request) -> PushOutcome {
         let mut st = self.state.lock().unwrap();
         if st.closed {
-            return false;
+            return PushOutcome::Closed;
         }
-        st.queue.push_back(req);
+        if let Some(cap) = self.policy.queue_cap {
+            if st.queued() >= cap {
+                return PushOutcome::QueueFull;
+            }
+        }
+        match req.priority {
+            Priority::High => st.high.push_back(req),
+            Priority::Normal => st.normal.push_back(req),
+        }
         self.cv.notify_one();
-        true
+        PushOutcome::Accepted
+    }
+
+    /// Requeue a deferred or preempted request at the **front** of its
+    /// priority class (scheduler side). Bypasses the capacity bound —
+    /// the request was already admitted once and must terminate — and
+    /// works even on a closed queue, so shutdown still drains it.
+    pub fn push_front(&self, req: Request) {
+        let mut st = self.state.lock().unwrap();
+        match req.priority {
+            Priority::High => st.high.push_front(req),
+            Priority::Normal => st.normal.push_front(req),
+        }
+        self.cv.notify_one();
     }
 
     /// Close the queue: producers are rejected, consumers drain what is
-    /// left and then receive `None`.
+    /// left and then receive `Closed`/`None`.
     pub fn close(&self) {
         let mut st = self.state.lock().unwrap();
         st.closed = true;
         self.cv.notify_all();
     }
 
+    /// Queued (not yet popped or shed) requests — one lock acquisition.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        self.state.lock().unwrap().queued()
     }
 
+    /// One lock acquisition, not a `len()` round trip.
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.state.lock().unwrap().queued() == 0
     }
 
-    /// Blocking single-request pop (continuous-batching admission: the
-    /// worker blocks here only when it has no active lanes). Returns
-    /// `None` when the queue is closed and drained.
-    pub fn pop(&self) -> Option<Request> {
+    /// Take every deadline-expired request shed so far. The worker
+    /// delivers each one's terminal shed error; draining is how the
+    /// "exactly one terminal event per request" invariant covers the
+    /// shed path.
+    pub fn drain_shed(&self) -> Vec<Request> {
+        std::mem::take(&mut self.state.lock().unwrap().shed)
+    }
+
+    /// Blocking pop (continuous-batching admission: the worker blocks
+    /// here only when it has no active lanes). Never blocks while shed
+    /// deliveries are pending — see [`PopResult::Shed`].
+    pub fn pop(&self) -> PopResult {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(r) = st.queue.pop_front() {
-                return Some(r);
+            if let Some(r) = st.pop_live(Instant::now()) {
+                return PopResult::Req(r);
+            }
+            if !st.shed.is_empty() {
+                return PopResult::Shed;
             }
             if st.closed {
-                return None;
+                return PopResult::Closed;
             }
             st = self.cv.wait(st).unwrap();
         }
     }
 
     /// Non-blocking single-request pop (mid-batch backfill into a freed
-    /// lane: never stall live lanes waiting for new arrivals).
+    /// lane: never stall live lanes waiting for new arrivals). Expired
+    /// requests encountered are shed; the caller's per-iteration
+    /// `drain_shed` delivers them.
     pub fn try_pop(&self) -> Option<Request> {
-        self.state.lock().unwrap().queue.pop_front()
+        self.state.lock().unwrap().pop_live(Instant::now())
     }
 
     /// Take the next batch (consumer side). Blocks until at least one
-    /// request is available, then waits up to `max_wait` for the batch to
-    /// fill (returning early if it does). Returns `None` when closed and
-    /// drained.
+    /// live request is available, then waits up to `max_wait` for the
+    /// batch to fill (returning early if it does). Returns `None` when
+    /// closed and drained. Returns an **empty** batch only when the
+    /// call's progress was moving expired requests to the shed bin —
+    /// the caller drains and re-polls. A competing consumer draining
+    /// the queue during the fill window restarts the first-request
+    /// wait instead of yielding a spurious empty batch.
     pub fn next_batch(&self) -> Option<Vec<Request>> {
         let mut st = self.state.lock().unwrap();
-        // Wait for a first request (or shutdown).
-        loop {
-            if !st.queue.is_empty() {
-                break;
+        'restart: loop {
+            // Wait for a first request (or shed progress, or shutdown).
+            loop {
+                if st.queued() > 0 {
+                    break;
+                }
+                if !st.shed.is_empty() {
+                    return Some(Vec::new());
+                }
+                if st.closed {
+                    return None;
+                }
+                st = self.cv.wait(st).unwrap();
             }
-            if st.closed {
-                return None;
+            // Fill window: wait until max_batch or deadline. Every wake
+            // re-checks the deadline; a wake that finds the queue
+            // drained (competing consumer) restarts the outer wait.
+            let deadline = Instant::now() + self.policy.max_wait;
+            while st.queued() < self.policy.max_batch && !st.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (next, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                st = next;
+                if timeout.timed_out() {
+                    break;
+                }
+                if st.queued() == 0 {
+                    continue 'restart;
+                }
             }
-            st = self.cv.wait(st).unwrap();
-        }
-        // Fill window: wait until max_batch or deadline.
-        let deadline = Instant::now() + self.policy.max_wait;
-        while st.queue.len() < self.policy.max_batch && !st.closed {
             let now = Instant::now();
-            if now >= deadline {
-                break;
+            let mut out = Vec::new();
+            while out.len() < self.policy.max_batch {
+                match st.pop_live(now) {
+                    Some(r) => out.push(r),
+                    None => break,
+                }
             }
-            let (next, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
-            st = next;
-            if timeout.timed_out() {
-                break;
+            if out.is_empty() {
+                // Everything queued had expired: surface the shed
+                // progress (or restart if a competitor raced us).
+                if !st.shed.is_empty() {
+                    return Some(out);
+                }
+                continue 'restart;
             }
+            return Some(out);
         }
-        let n = st.queue.len().min(self.policy.max_batch);
-        Some(st.queue.drain(..n).collect())
     }
 }
 
@@ -138,18 +278,25 @@ mod tests {
     use std::time::Instant;
 
     fn req(id: u64) -> Request {
-        Request { id, prompt: vec![1], max_new: 1, submitted_at: Instant::now() }
+        Request::new(id, vec![1], 1)
     }
 
     fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
-        BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms) }
+        BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms), queue_cap: None }
+    }
+
+    fn pop_req(b: &Batcher) -> Option<Request> {
+        match b.pop() {
+            PopResult::Req(r) => Some(r),
+            _ => None,
+        }
     }
 
     #[test]
     fn batches_respect_max_batch_and_fifo() {
         let b = Batcher::new(policy(3, 0));
         for i in 0..7 {
-            assert!(b.push(req(i)));
+            assert!(b.push(req(i)).is_accepted());
         }
         let ids: Vec<Vec<u64>> = (0..3)
             .map(|_| b.next_batch().unwrap().iter().map(|r| r.id).collect())
@@ -162,7 +309,7 @@ mod tests {
         let b = Batcher::new(policy(4, 0));
         b.push(req(1));
         b.close();
-        assert!(!b.push(req(2)), "push after close accepted");
+        assert_eq!(b.push(req(2)), PushOutcome::Closed, "push after close accepted");
         assert_eq!(b.next_batch().unwrap().len(), 1);
         assert!(b.next_batch().is_none());
     }
@@ -210,16 +357,94 @@ mod tests {
         b.push(req(1));
         b.push(req(2));
         assert_eq!(b.try_pop().unwrap().id, 1);
-        assert_eq!(b.pop().unwrap().id, 2);
+        assert_eq!(pop_req(&b).unwrap().id, 2);
         b.close();
-        assert!(b.pop().is_none(), "pop after close+drain should be None");
+        assert!(matches!(b.pop(), PopResult::Closed), "pop after close+drain should be Closed");
         // Blocking pop wakes on push from another thread.
         let b = Arc::new(Batcher::new(policy(4, 0)));
         let b2 = b.clone();
-        let h = std::thread::spawn(move || b2.pop());
+        let h = std::thread::spawn(move || match b2.pop() {
+            PopResult::Req(r) => r.id,
+            other => panic!("expected a request, got {other:?}"),
+        });
         std::thread::sleep(Duration::from_millis(20));
         b.push(req(9));
-        assert_eq!(h.join().unwrap().unwrap().id, 9);
+        assert_eq!(h.join().unwrap(), 9);
+    }
+
+    #[test]
+    fn capacity_bound_rejects_but_push_front_bypasses() {
+        let b = Batcher::new(BatchPolicy { queue_cap: Some(2), ..policy(4, 0) });
+        assert!(b.push(req(1)).is_accepted());
+        assert!(b.push(req(2)).is_accepted());
+        assert_eq!(b.push(req(3)), PushOutcome::QueueFull);
+        assert_eq!(b.len(), 2, "rejected push grew the queue");
+        // A requeue is not a new admission: it must go through even at
+        // capacity, and land at the FRONT of its class.
+        b.push_front(req(9));
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.try_pop().unwrap().id, 9, "requeue not at the front");
+        // Draining back under cap re-opens admission.
+        assert!(b.push(req(4)).is_accepted());
+        // push_front works after close too (shutdown must still drain).
+        b.close();
+        b.push_front(req(10));
+        assert_eq!(b.try_pop().unwrap().id, 10);
+    }
+
+    #[test]
+    fn high_priority_drains_first_fifo_within_class() {
+        let b = Batcher::new(policy(8, 0));
+        b.push(req(1));
+        b.push(req(2).with_priority(Priority::High));
+        b.push(req(3));
+        b.push(req(4).with_priority(Priority::High));
+        let ids: Vec<u64> = b.next_batch().unwrap().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 4, 1, 3], "two-level FIFO violated");
+    }
+
+    #[test]
+    fn expired_requests_shed_at_pop_not_decoded() {
+        let b = Batcher::new(policy(4, 0));
+        let past = Instant::now() - Duration::from_millis(1);
+        b.push(req(1).with_deadline(Some(past)));
+        b.push(req(2));
+        b.push(req(3).with_deadline(Some(past)));
+        // Pop skips the expired ones and returns the live request.
+        assert_eq!(pop_req(&b).unwrap().id, 2);
+        let shed: Vec<u64> = b.drain_shed().iter().map(|r| r.id).collect();
+        assert_eq!(shed, vec![1, 3], "expired requests not shed at pop");
+        assert!(b.drain_shed().is_empty(), "shed bin not drained");
+        // All-expired queue: pop reports Shed instead of blocking, and
+        // next_batch surfaces an empty batch for the same reason.
+        b.push(req(4).with_deadline(Some(past)));
+        assert!(matches!(b.pop(), PopResult::Shed));
+        assert_eq!(b.drain_shed().len(), 1);
+        b.push(req(5).with_deadline(Some(past)));
+        assert_eq!(b.next_batch().unwrap().len(), 0, "expired-only queue must yield shed progress");
+        assert_eq!(b.drain_shed().len(), 1);
+    }
+
+    #[test]
+    fn next_batch_restarts_on_competing_consumer_drain() {
+        // A try_pop consumer stealing the queue mid-fill-window must not
+        // make next_batch return an empty batch.
+        let b = Arc::new(Batcher::new(policy(4, 120)));
+        b.push(req(1));
+        let b2 = b.clone();
+        let consumer = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(30));
+        // Steal the only request, then wake the batching consumer.
+        let stolen = b.try_pop();
+        b.push(req(2));
+        let got = consumer.join().unwrap().unwrap();
+        assert!(!got.is_empty(), "next_batch returned an empty batch");
+        let mut ids: Vec<u64> = got.iter().map(|r| r.id).collect();
+        if let Some(s) = stolen {
+            ids.push(s.id);
+        }
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2], "request lost between consumers");
     }
 
     #[test]
@@ -239,6 +464,40 @@ mod tests {
             }
             ensure(seen.len() == n, || format!("dropped/extra: {} vs {n}", seen.len()))?;
             ensure(seen.windows(2).all(|w| w[0] < w[1]), || "order violated".into())
+        });
+    }
+
+    #[test]
+    fn prop_conservation_with_priorities_deadlines_and_cap() {
+        forall(60, "batcher SLO conservation", |rng| {
+            let cap = 1 + rng.index(12);
+            let b = Batcher::new(BatchPolicy { queue_cap: Some(cap), ..policy(1 + rng.index(4), 0) });
+            let n = 1 + rng.index(30);
+            let past = Instant::now() - Duration::from_millis(1);
+            let mut accepted = 0usize;
+            for i in 0..n as u64 {
+                let mut r = req(i);
+                if rng.index(3) == 0 {
+                    r = r.with_priority(Priority::High);
+                }
+                if rng.index(4) == 0 {
+                    r = r.with_deadline(Some(past));
+                }
+                if b.push(r).is_accepted() {
+                    accepted += 1;
+                }
+            }
+            ensure(accepted <= cap, || format!("cap {cap} breached: {accepted}"))?;
+            b.close();
+            let mut terminal = 0usize;
+            while let Some(batch) = b.next_batch() {
+                terminal += batch.len();
+                terminal += b.drain_shed().len();
+            }
+            terminal += b.drain_shed().len();
+            ensure(terminal == accepted, || {
+                format!("conservation broken: {terminal} terminal events for {accepted} accepted")
+            })
         });
     }
 }

@@ -14,17 +14,63 @@
 //! stalled waiting for arrivals). The worker blocks only when it has
 //! nothing to decode at all.
 //!
+//! SLO machinery (DESIGN.md §Scheduling):
+//!
+//! - **Chunked prefill** ([`ContinuousOpts::prefill_chunk`]): admission
+//!   stages a prompt ([`DecodeEngine::begin_prefill`]) and the loop
+//!   spends at most one chunk of prefill compute per iteration,
+//!   interleaved with the fused decode step — live lanes stall at most
+//!   one chunk behind a long prompt, and the result is bit-identical to
+//!   inline prefill (K/V at position `p` depends only on tokens
+//!   `..= p`).
+//! - **Deadline shedding**: the batcher sheds expired requests at pop
+//!   time; the loop drains the shed bin every iteration and delivers
+//!   each one's terminal [`ShedError`].
+//! - **Graceful degradation**: a typed [`KvPressure`] failure (prefill
+//!   chunk or fused decode step — both pre-check pages, so nothing
+//!   advanced and the step replays bit-exactly) walks a ladder instead
+//!   of panicking: evict the engine's prefix cache → defer the newest
+//!   still-prefilling admission → preempt the lowest-priority newest
+//!   decoding lane (deterministic sampling makes the replay
+//!   bit-identical) → shed the sole remaining lane explicitly.
+//!
 //! Engine errors are per-lane: a failed prefill or a lane's slot in the
 //! fused step fails that one request and frees its lane; the rest of
 //! the batch keeps decoding (the fixed-batch path can only fail the
 //! whole batch).
 
-use super::batcher::Batcher;
+use super::batcher::{Batcher, PopResult};
 use super::metrics::ServerMetrics;
-use super::request::{Request, Response};
+use super::request::{Request, Response, ShedError, ShedReason};
 use super::scheduler::{sample_from_logits, Sampling};
-use super::session::DecodeEngine;
+use super::session::{DecodeEngine, PrefillProgress};
+use crate::kvcache::KvPressure;
 use std::time::Instant;
+
+/// Knobs for the continuous loop.
+#[derive(Debug, Clone, Copy)]
+pub struct ContinuousOpts {
+    /// Maximum prompt tokens prefilled per scheduler iteration.
+    /// `usize::MAX` = inline admission (finish each staged prompt
+    /// before the next decode step — the historical behaviour); a
+    /// finite chunk bounds how long live decode lanes stall behind a
+    /// long prompt. Output is bit-identical either way.
+    pub prefill_chunk: usize,
+}
+
+impl Default for ContinuousOpts {
+    fn default() -> Self {
+        ContinuousOpts { prefill_chunk: usize::MAX }
+    }
+}
+
+/// Where a lane is in its lifecycle.
+enum LaneState {
+    /// Prompt staged; chunks still being fed in. Nothing generated yet.
+    Prefilling,
+    /// Prompt fully cached; `generated` is non-empty.
+    Decoding,
+}
 
 /// One in-flight request bound to an engine lane.
 struct Lane {
@@ -33,7 +79,11 @@ struct Lane {
     /// Number of tokens this request may generate (its `max_new`, capped
     /// by the engine's per-lane token capacity).
     budget: usize,
+    state: LaneState,
     generated: Vec<u32>,
+    /// Admission order (monotone): preemption picks the *newest* victim
+    /// within the lowest priority class — it has the least sunk work.
+    admit_seq: u64,
     picked_at: Instant,
     first_token_at: Instant,
     last_step_at: Instant,
@@ -41,65 +91,135 @@ struct Lane {
     max_batch_seen: usize,
 }
 
-/// Drive the engine until the batcher is closed and drained and every
-/// active lane has finished. `deliver` receives each request's terminal
-/// event — `Ok(Response)` or the per-request error. When `metrics` is
-/// given, every fused step records its batch occupancy and the engine's
-/// KV-cache page stats.
+/// Drive the engine with default options — inline prefill, the
+/// historical contract. See [`run_continuous_opts`].
 pub fn run_continuous<E: DecodeEngine + ?Sized>(
     engine: &mut E,
     batcher: &Batcher,
     sampling: Sampling,
     metrics: Option<&ServerMetrics>,
+    deliver: impl FnMut(u64, anyhow::Result<Response>),
+) {
+    run_continuous_opts(engine, batcher, ContinuousOpts::default(), sampling, metrics, deliver)
+}
+
+/// Drive the engine until the batcher is closed and drained and every
+/// active lane has finished. `deliver` receives each request's terminal
+/// event — `Ok(Response)`, the per-request error, or a typed
+/// [`ShedError`] — **exactly once per admitted request**, including
+/// deferred/preempted requests (requeued, they terminate on a later
+/// pass). When `metrics` is given, every fused step records its batch
+/// occupancy, queue depth, and the engine's KV-cache page stats.
+pub fn run_continuous_opts<E: DecodeEngine + ?Sized>(
+    engine: &mut E,
+    batcher: &Batcher,
+    opts: ContinuousOpts,
+    sampling: Sampling,
+    metrics: Option<&ServerMetrics>,
     mut deliver: impl FnMut(u64, anyhow::Result<Response>),
 ) {
     let mut active: Vec<Lane> = Vec::new();
+    let mut admit_seq: u64 = 0;
+    // Set when the pressure ladder displaced a lane: admitting more work
+    // would meet the same wall, so admission holds until a lane retires
+    // (frees pages) or the loop runs dry.
+    let mut admission_paused = false;
     // Per-step staging, reused across iterations.
     let mut step_idx: Vec<usize> = Vec::new(); // indices into `active`
     let mut step_lanes: Vec<usize> = Vec::new(); // engine lane ids
     let mut step_tokens: Vec<u32> = Vec::new();
     loop {
+        // ---- terminal shed deliveries (deadline-expired at pop) ----
+        deliver_shed(batcher, metrics, &mut deliver);
+        if let Some(m) = metrics {
+            m.record_queue_depth(batcher.len());
+        }
+
         // ---- admission: fill free lanes. Block only when idle. ----
-        while active.len() < engine.max_concurrency() {
-            let next = if active.is_empty() { batcher.pop() } else { batcher.try_pop() };
-            let Some(req) = next else {
-                if active.is_empty() {
-                    // pop() returned None => closed and drained => done.
-                    // Snapshot the caches one last time: the final lane
-                    // releases freed pages and published prefixes after
-                    // the last step's metrics were recorded, so without
-                    // this the summary would print pre-shutdown
-                    // occupancy.
-                    record_engine_stats(engine, metrics);
-                    return;
+        if active.is_empty() {
+            admission_paused = false; // nothing left to free pages; must admit
+        }
+        while !admission_paused && active.len() < engine.max_concurrency() {
+            let req = if active.is_empty() {
+                match batcher.pop() {
+                    PopResult::Req(r) => r,
+                    PopResult::Shed => {
+                        deliver_shed(batcher, metrics, &mut deliver);
+                        continue;
+                    }
+                    PopResult::Closed => {
+                        // Closed and drained => done. Snapshot the caches
+                        // one last time: the final lane releases freed
+                        // pages and published prefixes after the last
+                        // step's metrics were recorded, so without this
+                        // the summary would print pre-shutdown occupancy.
+                        record_engine_stats(engine, metrics);
+                        deliver_shed(batcher, metrics, &mut deliver);
+                        return;
+                    }
                 }
-                break; // nothing queued right now; keep decoding
+            } else {
+                match batcher.try_pop() {
+                    Some(r) => r,
+                    None => break, // nothing queued right now; keep decoding
+                }
             };
-            admit(engine, req, sampling, &mut active, &mut deliver);
+            admit(engine, req, &mut admit_seq, &mut active, &mut deliver);
         }
         if active.is_empty() {
             // Admission failed (e.g. prefill error on the only request);
             // loop back to blocking pop.
             continue;
         }
+
+        // ---- prefill work. Inline mode runs every staged prompt to
+        // completion (a request is decodable the iteration it is
+        // admitted); chunked mode spends ONE chunk on the oldest staged
+        // prompt, so the decode step below never waits longer than one
+        // chunk. ----
+        let mut pressured = if opts.prefill_chunk == usize::MAX {
+            let mut hit = false;
+            let mut i = 0;
+            while i < active.len() {
+                if !matches!(active[i].state, LaneState::Prefilling) {
+                    i += 1; // Done lanes advance past; error-removed lanes re-test `i`
+                    continue;
+                }
+                if advance_prefill(engine, &mut active, i, usize::MAX, sampling, &mut deliver) {
+                    hit = true;
+                    break;
+                }
+            }
+            hit
+        } else if let Some(i) = oldest_prefilling(&active) {
+            advance_prefill(engine, &mut active, i, opts.prefill_chunk, sampling, &mut deliver)
+        } else {
+            false
+        };
+
         let cur = active.len();
         for lane in active.iter_mut() {
             lane.max_batch_seen = lane.max_batch_seen.max(cur);
         }
 
-        // ---- ONE fused decode step across every live lane ----
+        // ---- ONE fused decode step across every decoding lane ----
         let mut finished: Vec<usize> = Vec::new();
         step_idx.clear();
         step_lanes.clear();
         step_tokens.clear();
-        for (idx, lane) in active.iter().enumerate() {
-            if lane.generated.len() >= lane.budget {
-                finished.push(idx);
-                continue;
+        if !pressured {
+            for (idx, lane) in active.iter().enumerate() {
+                if matches!(lane.state, LaneState::Prefilling) {
+                    continue; // still chunking its prompt in
+                }
+                if lane.generated.len() >= lane.budget {
+                    finished.push(idx);
+                    continue;
+                }
+                step_idx.push(idx);
+                step_lanes.push(lane.lane);
+                step_tokens.push(*lane.generated.last().unwrap());
             }
-            step_idx.push(idx);
-            step_lanes.push(lane.lane);
-            step_tokens.push(*lane.generated.last().unwrap());
         }
         if !step_idx.is_empty() {
             if let Some(m) = metrics {
@@ -107,31 +227,47 @@ pub fn run_continuous<E: DecodeEngine + ?Sized>(
             }
             let t0 = Instant::now();
             let results = engine.decode_batch(&step_lanes, &step_tokens);
-            // The step's wall time is shared work; attribute an equal
-            // share to each participating lane.
-            let share_us = t0.elapsed().as_secs_f64() * 1e6 / step_idx.len() as f64;
-            let stepped_at = Instant::now();
             debug_assert_eq!(results.len(), step_idx.len());
-            for (&idx, result) in step_idx.iter().zip(results) {
-                let lane = &mut active[idx];
-                match result {
-                    Ok(logits) => {
-                        lane.decode_us += share_us;
-                        lane.last_step_at = stepped_at;
-                        let step = lane.req.prompt.len() + lane.generated.len();
-                        lane.generated.push(sample_from_logits(&logits, sampling, lane.req.id, step));
-                        if lane.generated.len() >= lane.budget {
-                            finished.push(idx);
+            if results
+                .iter()
+                .any(|r| matches!(r, Err(e) if e.downcast_ref::<KvPressure>().is_some()))
+            {
+                // Page pressure fails the whole step with NOTHING
+                // consumed (the engine pre-checks the step's pages), so
+                // dropping every result and replaying after relief is
+                // bit-exact.
+                pressured = true;
+                finished.clear();
+            } else {
+                // The step's wall time is shared work; attribute an
+                // equal share to each participating lane.
+                let share_us = t0.elapsed().as_secs_f64() * 1e6 / step_idx.len() as f64;
+                let stepped_at = Instant::now();
+                for (&idx, result) in step_idx.iter().zip(results) {
+                    let lane = &mut active[idx];
+                    match result {
+                        Ok(logits) => {
+                            lane.decode_us += share_us;
+                            lane.last_step_at = stepped_at;
+                            let step = lane.req.prompt.len() + lane.generated.len();
+                            lane.generated.push(sample_from_logits(&logits, sampling, lane.req.id, step));
+                            if lane.generated.len() >= lane.budget {
+                                finished.push(idx);
+                            }
                         }
-                    }
-                    Err(e) => {
-                        deliver(lane.req.id, Err(anyhow::anyhow!("decode failed: {e}")));
-                        lane.generated.clear(); // mark dead: the retire loop below
-                        finished.push(idx); // releases the lane, delivers nothing
+                        Err(e) => {
+                            deliver(lane.req.id, Err(anyhow::anyhow!("decode failed: {e}")));
+                            lane.generated.clear(); // mark dead: the retire loop below
+                            finished.push(idx); // releases the lane, delivers nothing
+                        }
                     }
                 }
             }
             record_engine_stats(engine, metrics);
+        }
+        if pressured {
+            relieve_kv_pressure(engine, &mut active, batcher, metrics, &mut admission_paused, &mut deliver);
+            continue;
         }
 
         // ---- retire finished lanes (slots free => next admission pass
@@ -142,6 +278,7 @@ pub fn run_continuous<E: DecodeEngine + ?Sized>(
         for idx in finished.into_iter().rev() {
             let lane = active.swap_remove(idx);
             engine.release(lane.lane);
+            admission_paused = false; // freed pages: re-open admission
             if lane.generated.is_empty() {
                 continue; // errored above; already delivered
             }
@@ -156,6 +293,7 @@ pub fn run_continuous<E: DecodeEngine + ?Sized>(
                 lane.req.id,
                 Ok(Response {
                     id: lane.req.id,
+                    priority: lane.req.priority,
                     tokens: lane.generated,
                     queue_us: (lane.picked_at - lane.req.submitted_at).as_secs_f64() * 1e6,
                     execute_us: lane.decode_us,
@@ -165,6 +303,144 @@ pub fn run_continuous<E: DecodeEngine + ?Sized>(
                     batch_size: lane.max_batch_seen,
                 }),
             );
+        }
+    }
+}
+
+/// Deliver the terminal error for every deadline-shed request.
+fn deliver_shed(
+    batcher: &Batcher,
+    metrics: Option<&ServerMetrics>,
+    deliver: &mut impl FnMut(u64, anyhow::Result<Response>),
+) {
+    for r in batcher.drain_shed() {
+        if let Some(m) = metrics {
+            m.record_shed(ShedReason::DeadlineExpired);
+        }
+        deliver(r.id, Err(ShedError { id: r.id, reason: ShedReason::DeadlineExpired }.into()));
+    }
+}
+
+/// Graceful-degradation ladder for a typed KV-pressure event. Each rung
+/// either frees capacity for a retry (the failed chunk/step replays
+/// bit-exactly — nothing was consumed) or displaces work:
+///
+/// 1. **Evict** the engine's prefix cache (cached-but-unpinned pages).
+/// 2. **Defer** the newest still-prefilling admission — requeued at the
+///    front of its class, it has no generated tokens to lose.
+/// 3. **Preempt** the lowest-priority newest decoding lane — requeued
+///    for full replay; deterministic sampling regenerates its tokens
+///    bit-identically.
+/// 4. **Shed** the sole remaining lane with a typed [`ShedError`]: one
+///    lane holding every page and still failing means the request
+///    simply does not fit the budget. Never panic, never spin.
+///
+/// Rungs 2 and 3 pause admission until a lane retires, so the displaced
+/// request is not immediately readmitted into the same wall.
+fn relieve_kv_pressure<E: DecodeEngine + ?Sized>(
+    engine: &mut E,
+    active: &mut Vec<Lane>,
+    batcher: &Batcher,
+    metrics: Option<&ServerMetrics>,
+    admission_paused: &mut bool,
+    deliver: &mut impl FnMut(u64, anyhow::Result<Response>),
+) {
+    if engine.relieve_pressure() > 0 {
+        return;
+    }
+    if active.len() > 1 {
+        let (idx, deferred) = match newest_prefilling(active) {
+            Some(i) => (i, true),
+            None => (preempt_victim(active), false),
+        };
+        let lane = active.remove(idx);
+        engine.release(lane.lane);
+        batcher.push_front(lane.req);
+        *admission_paused = true;
+        if let Some(m) = metrics {
+            if deferred {
+                m.record_deferred();
+            } else {
+                m.record_preempted();
+            }
+        }
+        return;
+    }
+    if let Some(lane) = active.pop() {
+        engine.release(lane.lane);
+        if let Some(m) = metrics {
+            m.record_shed(ShedReason::KvPressure);
+        }
+        deliver(lane.req.id, Err(ShedError { id: lane.req.id, reason: ShedReason::KvPressure }.into()));
+    }
+}
+
+fn newest_prefilling(active: &[Lane]) -> Option<usize> {
+    active
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| matches!(l.state, LaneState::Prefilling))
+        .max_by_key(|(_, l)| l.admit_seq)
+        .map(|(i, _)| i)
+}
+
+fn oldest_prefilling(active: &[Lane]) -> Option<usize> {
+    active
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| matches!(l.state, LaneState::Prefilling))
+        .min_by_key(|(_, l)| l.admit_seq)
+        .map(|(i, _)| i)
+}
+
+/// Lowest priority class first, newest admission within it (least sunk
+/// decode work to throw away). Only called with `active` non-empty.
+fn preempt_victim(active: &[Lane]) -> usize {
+    active
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, l)| (l.req.priority, std::cmp::Reverse(l.admit_seq)))
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Feed one chunk of prefill to `active[idx]`. Returns `true` on a
+/// typed KV-pressure failure (lane left intact and retryable — the
+/// caller walks the ladder). Other errors terminate the request and
+/// remove the lane here.
+fn advance_prefill<E: DecodeEngine + ?Sized>(
+    engine: &mut E,
+    active: &mut Vec<Lane>,
+    idx: usize,
+    chunk: usize,
+    sampling: Sampling,
+    deliver: &mut impl FnMut(u64, anyhow::Result<Response>),
+) -> bool {
+    let t0 = Instant::now();
+    let lane = &mut active[idx];
+    match engine.prefill_chunk(lane.lane, &lane.req.prompt, chunk) {
+        Ok(PrefillProgress::Pending { .. }) => {
+            lane.decode_us += t0.elapsed().as_secs_f64() * 1e6;
+            false
+        }
+        Ok(PrefillProgress::Done(logits)) => {
+            lane.decode_us += t0.elapsed().as_secs_f64() * 1e6;
+            let now = Instant::now();
+            lane.first_token_at = now;
+            lane.last_step_at = now;
+            let first = sample_from_logits(&logits, sampling, lane.req.id, lane.req.prompt.len());
+            lane.generated.push(first);
+            lane.state = LaneState::Decoding;
+            false
+        }
+        Err(e) => {
+            if e.downcast_ref::<KvPressure>().is_some() {
+                return true;
+            }
+            let lane = active.remove(idx);
+            engine.release(lane.lane);
+            deliver(lane.req.id, Err(anyhow::anyhow!("prefill failed: {e}")));
+            false
         }
     }
 }
@@ -186,7 +462,7 @@ fn record_engine_stats<E: DecodeEngine + ?Sized>(engine: &E, metrics: Option<&Se
 fn admit<E: DecodeEngine + ?Sized>(
     engine: &mut E,
     req: Request,
-    sampling: Sampling,
+    admit_seq: &mut u64,
     active: &mut Vec<Lane>,
     deliver: &mut impl FnMut(u64, anyhow::Result<Response>),
 ) {
@@ -195,21 +471,20 @@ fn admit<E: DecodeEngine + ?Sized>(
     // prompt + n - 1; cap the budget at the engine's lane capacity.
     let cap = engine.max_tokens().saturating_sub(req.prompt.len()) + 1;
     let budget = req.max_new.min(cap).max(1);
-    let t0 = Instant::now();
-    match engine.prefill(&req.prompt) {
-        Ok((lane, logits)) => {
-            let prefill_us = t0.elapsed().as_secs_f64() * 1e6;
-            let first_token_at = Instant::now();
-            let first = sample_from_logits(&logits, sampling, req.id, req.prompt.len());
+    match engine.begin_prefill(&req.prompt) {
+        Ok(lane) => {
+            *admit_seq += 1;
             active.push(Lane {
                 req,
                 lane,
                 budget,
-                generated: vec![first],
+                state: LaneState::Prefilling,
+                generated: Vec::new(),
+                admit_seq: *admit_seq,
                 picked_at,
-                first_token_at,
-                last_step_at: first_token_at,
-                decode_us: prefill_us,
+                first_token_at: picked_at,
+                last_step_at: picked_at,
+                decode_us: 0.0,
                 max_batch_seen: 0,
             });
         }
@@ -225,17 +500,30 @@ mod tests {
     use std::time::{Duration, Instant};
 
     fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
-        Request { id, prompt, max_new, submitted_at: Instant::now() }
+        Request::new(id, prompt, max_new)
+    }
+
+    fn zero_wait() -> BatchPolicy {
+        BatchPolicy { max_batch: 8, max_wait: Duration::ZERO, queue_cap: None }
     }
 
     fn drive(engine: &mut MockDecodeEngine, reqs: Vec<Request>) -> Vec<(u64, anyhow::Result<Response>)> {
-        let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
+        drive_opts(engine, reqs, ContinuousOpts::default(), None)
+    }
+
+    fn drive_opts(
+        engine: &mut MockDecodeEngine,
+        reqs: Vec<Request>,
+        opts: ContinuousOpts,
+        metrics: Option<&crate::coordinator::metrics::ServerMetrics>,
+    ) -> Vec<(u64, anyhow::Result<Response>)> {
+        let b = Batcher::new(zero_wait());
         for r in reqs {
-            assert!(b.push(r));
+            assert!(b.push(r).is_accepted());
         }
         b.close();
         let mut out = Vec::new();
-        run_continuous(engine, &b, Sampling::Greedy, None, |id, r| out.push((id, r)));
+        run_continuous_opts(engine, &b, opts, Sampling::Greedy, metrics, |id, r| out.push((id, r)));
         out
     }
 
@@ -270,9 +558,9 @@ mod tests {
     fn records_occupancy_and_shares_step_time() {
         use crate::coordinator::metrics::ServerMetrics;
         let m = ServerMetrics::new();
-        let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
-        assert!(b.push(req(1, vec![1], 3)));
-        assert!(b.push(req(2, vec![2], 3)));
+        let b = Batcher::new(zero_wait());
+        assert!(b.push(req(1, vec![1], 3)).is_accepted());
+        assert!(b.push(req(2, vec![2], 3)).is_accepted());
         b.close();
         let mut e = MockDecodeEngine::new(4, 32);
         let mut out = Vec::new();
@@ -332,5 +620,136 @@ mod tests {
         // prompt 3 tokens + budget cap => 4 - 3 + 1 = 2 tokens max.
         let out = drive(&mut e, vec![req(1, vec![1, 2, 3], 10)]);
         assert_eq!(out[0].1.as_ref().unwrap().tokens.len(), 2);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_inline_token_for_token() {
+        let reqs = || {
+            vec![
+                req(1, (0..7).map(|i| i * 3 % 32).collect(), 4),
+                req(2, vec![9, 10, 11], 3),
+                req(3, vec![1], 2),
+            ]
+        };
+        let mut inline = MockDecodeEngine::new(2, 32);
+        let mut chunked = MockDecodeEngine::new(2, 32);
+        let a = drive(&mut inline, reqs());
+        let b = drive_opts(&mut chunked, reqs(), ContinuousOpts { prefill_chunk: 2 }, None);
+        assert!(chunked.chunk_calls > inline.chunk_calls, "chunking never split a prompt");
+        for id in [1u64, 2, 3] {
+            let find = |o: &[(u64, anyhow::Result<Response>)]| {
+                o.iter().find(|(i, _)| *i == id).unwrap().1.as_ref().unwrap().tokens.clone()
+            };
+            assert_eq!(find(&a), find(&b), "request {id} diverged under chunked prefill");
+        }
+        assert_eq!(chunked.releases, 3, "chunked run leaked lanes");
+    }
+
+    #[test]
+    fn deadline_expired_request_is_shed_with_typed_error() {
+        use crate::coordinator::metrics::ServerMetrics;
+        let m = ServerMetrics::new();
+        let mut e = MockDecodeEngine::new(2, 32);
+        let past = Instant::now() - Duration::from_millis(1);
+        let out = drive_opts(
+            &mut e,
+            vec![req(1, vec![5], 2).with_deadline(Some(past)), req(2, vec![9], 2)],
+            ContinuousOpts::default(),
+            Some(&m),
+        );
+        assert_eq!(out.len(), 2, "shed request got no terminal event");
+        let r1 = out.iter().find(|(i, _)| *i == 1).unwrap().1.as_ref().expect_err("expired decoded");
+        let shed = r1.downcast_ref::<ShedError>().expect("shed error lost its type");
+        assert_eq!(shed.reason, ShedReason::DeadlineExpired);
+        assert!(out.iter().find(|(i, _)| *i == 2).unwrap().1.is_ok());
+        assert_eq!(e.prefills, 1, "expired request reached the engine");
+    }
+
+    #[test]
+    fn kv_pressure_relieves_evictable_pool_then_recovers() {
+        let mut e = MockDecodeEngine::new(2, 32);
+        e.kv_capacity = Some(6);
+        e.kv_evictable = 2; // mock "prefix cache" — rung 1 reclaims this
+        let out = drive(&mut e, vec![req(1, vec![1], 4), req(2, vec![2, 3], 2)]);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|(_, r)| r.is_ok()), "pressure leaked into a response error");
+        assert_eq!(e.relieve_calls, 1, "rung 1 not exercised exactly once");
+        assert_eq!((e.releases, e.kv_used()), (2, 0), "lanes or KV leaked");
+    }
+
+    #[test]
+    fn kv_pressure_preempts_newest_and_replays_bit_identically() {
+        use crate::coordinator::metrics::ServerMetrics;
+        let m = ServerMetrics::new();
+        let mut e = MockDecodeEngine::new(2, 32);
+        // Both lanes fit their prefill, but the second co-decoded step
+        // busts the budget: rung 3 preempts the newest lane (no
+        // prefilling lanes exist, no evictable pool).
+        e.kv_capacity = Some(5);
+        let out = drive_opts(
+            &mut e,
+            vec![req(1, vec![1], 4), req(2, vec![7], 4)],
+            ContinuousOpts::default(),
+            Some(&m),
+        );
+        assert_eq!(out.len(), 2);
+        // The preempted request replays from scratch and — deterministic
+        // sampling — regenerates the exact same successor chain.
+        let get = |id: u64| out.iter().find(|(i, _)| *i == id).unwrap().1.as_ref().unwrap().clone();
+        assert_eq!(get(1).tokens, vec![2, 3, 4, 5]);
+        assert_eq!(get(2).tokens, vec![8, 9, 10, 11]);
+        assert_eq!(e.prefills, 3, "victim not readmitted via requeue");
+        assert_eq!(e.releases, 3, "preempted lane leaked");
+        assert_eq!(m.snapshot().preempted, 1);
+        assert_eq!(e.kv_used(), 0);
+    }
+
+    #[test]
+    fn sole_oversized_request_is_shed_not_panicked() {
+        use crate::coordinator::metrics::ServerMetrics;
+        let m = ServerMetrics::new();
+        let mut e = MockDecodeEngine::new(2, 32);
+        e.kv_capacity = Some(3);
+        let out = drive_opts(
+            &mut e,
+            vec![req(1, (0..5).collect(), 4)], // 5 prompt tokens > 3-token budget
+            ContinuousOpts { prefill_chunk: 2 },
+            Some(&m),
+        );
+        assert_eq!(out.len(), 1, "shed request got no terminal event");
+        let err = out[0].1.as_ref().expect_err("over-budget request succeeded");
+        let shed = err.downcast_ref::<ShedError>().expect("terminal shed lost its type");
+        assert_eq!(shed.reason, ShedReason::KvPressure);
+        assert_eq!(e.releases, e.prefills, "shed lane leaked");
+        assert_eq!(e.kv_used(), 0, "shed lane's KV not reclaimed");
+        assert_eq!(m.snapshot().shed_kv, 1);
+    }
+
+    #[test]
+    fn pressure_during_chunked_prefill_defers_the_admission() {
+        use crate::coordinator::metrics::ServerMetrics;
+        let m = ServerMetrics::new();
+        let mut e = MockDecodeEngine::new(2, 32);
+        // Request 1's growing decode state plus request 2's chunked-in
+        // prompt bust the budget mid-prefill: the staged admission is
+        // deferred (requeued, its partial KV freed), request 1 runs to
+        // completion, and request 2 is readmitted and finishes — one
+        // terminal event each, no leaks, no panic.
+        e.kv_capacity = Some(6);
+        let out = drive_opts(
+            &mut e,
+            vec![req(1, vec![1], 6), req(2, vec![4, 5, 6, 7], 1)],
+            ContinuousOpts { prefill_chunk: 2 },
+            Some(&m),
+        );
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|(_, r)| r.is_ok()), "deferred request never completed");
+        let get = |id: u64| out.iter().find(|(i, _)| *i == id).unwrap().1.as_ref().unwrap().clone();
+        assert_eq!(get(1).tokens, vec![2, 3, 4, 5, 6, 7]);
+        assert_eq!(get(2).tokens, vec![8]);
+        assert_eq!(m.snapshot().deferred, 1, "staged admission not deferred under pressure");
+        assert_eq!(e.prefills, 3, "deferred request not readmitted via requeue");
+        assert_eq!(e.releases, e.prefills, "lane leak across defer/readmit");
+        assert_eq!(e.kv_used(), 0);
     }
 }

@@ -343,7 +343,7 @@ mod tests {
         let exec = CpuExecutor::new(cfg, &w, &scheme, QuantPool::serial(), 4, 16).unwrap();
         let s = Server::start(
             exec,
-            BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(2) },
+            BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(2), queue_cap: None },
             Limits { max_prompt: 8, max_new: 4, vocab },
             Sampling::Greedy,
         );

@@ -15,7 +15,7 @@
 //! plus, when the prefix cache is on, its hit-rate / saved-prefill /
 //! eviction counters, all printed in the `serve-cpu` summary.
 
-use super::request::Response;
+use super::request::{Priority, Response, ShedReason};
 use crate::kvcache::KvStats;
 use crate::prefixcache::PrefixStats;
 use crate::util::stats::LatencyHistogram;
@@ -29,6 +29,12 @@ struct Inner {
     ttft: LatencyHistogram,
     itl: LatencyHistogram,
     total: LatencyHistogram,
+    /// Per-priority-class TTFT/ITL (indexed by [`Priority::index`]) —
+    /// the split that shows whether the two-level FIFO and preemption
+    /// policy actually bought the high class better latency.
+    ttft_by_prio: [LatencyHistogram; 2],
+    itl_by_prio: [LatencyHistogram; 2],
+    done_by_prio: [u64; 2],
     batch_sizes: Vec<usize>,
     /// `occupancy[n-1]` = decode steps that ran with `n` live lanes.
     occupancy: Vec<u64>,
@@ -36,6 +42,21 @@ struct Inner {
     kv: Option<KvStats>,
     /// Latest prefix-cache snapshot (counters are cumulative inside it).
     prefix: Option<PrefixStats>,
+    // SLO counters: every admitted-then-displaced fate is counted, so
+    // (responses + sheds) reconciles against accepted admissions.
+    /// Pushes rejected at the admission cap (`QueueFull`).
+    rejected: u64,
+    /// Requests shed because their deadline expired while queued.
+    shed_deadline: u64,
+    /// Requests shed terminally by the KV-pressure ladder.
+    shed_kv: u64,
+    /// Still-prefilling admissions requeued under KV pressure.
+    deferred: u64,
+    /// Decoding lanes preempted (requeued for replay) under KV pressure.
+    preempted: u64,
+    queue_depth_sum: u64,
+    queue_depth_samples: u64,
+    queue_depth_max: usize,
     tokens_out: u64,
     requests_done: u64,
     started: Option<Instant>,
@@ -61,10 +82,21 @@ impl ServerMetrics {
                 ttft: LatencyHistogram::new(),
                 itl: LatencyHistogram::new(),
                 total: LatencyHistogram::new(),
+                ttft_by_prio: [LatencyHistogram::new(), LatencyHistogram::new()],
+                itl_by_prio: [LatencyHistogram::new(), LatencyHistogram::new()],
+                done_by_prio: [0, 0],
                 batch_sizes: Vec::new(),
                 occupancy: Vec::new(),
                 kv: None,
                 prefix: None,
+                rejected: 0,
+                shed_deadline: 0,
+                shed_kv: 0,
+                deferred: 0,
+                preempted: 0,
+                queue_depth_sum: 0,
+                queue_depth_samples: 0,
+                queue_depth_max: 0,
                 tokens_out: 0,
                 requests_done: 0,
                 started: None,
@@ -103,14 +135,51 @@ impl ServerMetrics {
         g.queue.record_us(resp.queue_us);
         g.execute.record_us(resp.execute_us);
         g.ttft.record_us(resp.ttft_us);
+        let p = resp.priority.index();
+        g.ttft_by_prio[p].record_us(resp.ttft_us);
         if resp.tokens.len() > 1 {
             // ITL is undefined for single-token responses.
             g.itl.record_us(resp.itl_us);
+            g.itl_by_prio[p].record_us(resp.itl_us);
         }
+        g.done_by_prio[p] += 1;
         g.total.record_us(resp.total_us);
         g.batch_sizes.push(resp.batch_size);
         g.tokens_out += resp.tokens.len() as u64;
         g.requests_done += 1;
+    }
+
+    /// A push bounced off the admission cap (`PushOutcome::QueueFull`).
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// A request received a terminal shed error.
+    pub fn record_shed(&self, reason: ShedReason) {
+        let mut g = self.inner.lock().unwrap();
+        match reason {
+            ShedReason::DeadlineExpired => g.shed_deadline += 1,
+            ShedReason::KvPressure => g.shed_kv += 1,
+        }
+    }
+
+    /// A still-prefilling admission was requeued under KV pressure.
+    pub fn record_deferred(&self) {
+        self.inner.lock().unwrap().deferred += 1;
+    }
+
+    /// A decoding lane was preempted (requeued for replay) under KV
+    /// pressure.
+    pub fn record_preempted(&self) {
+        self.inner.lock().unwrap().preempted += 1;
+    }
+
+    /// Admission-queue depth sample (once per scheduler iteration).
+    pub fn record_queue_depth(&self, depth: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue_depth_sum += depth as u64;
+        g.queue_depth_samples += 1;
+        g.queue_depth_max = g.queue_depth_max.max(depth);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -128,6 +197,17 @@ impl ServerMetrics {
             g.occupancy.iter().enumerate().map(|(i, &c)| (i + 1) as u64 * c).sum::<u64>() as f64
                 / steps as f64
         };
+        let by_priority = [Priority::Normal, Priority::High].map(|p| {
+            let i = p.index();
+            PrioritySlo {
+                class: p.name(),
+                requests: g.done_by_prio[i],
+                ttft_p50_us: g.ttft_by_prio[i].percentile_us(50.0),
+                ttft_p99_us: g.ttft_by_prio[i].percentile_us(99.0),
+                itl_p50_us: g.itl_by_prio[i].percentile_us(50.0),
+                itl_p99_us: g.itl_by_prio[i].percentile_us(99.0),
+            }
+        });
         MetricsSnapshot {
             occupancy_hist: g
                 .occupancy
@@ -139,6 +219,18 @@ impl ServerMetrics {
             mean_occupancy,
             kv: g.kv,
             prefix: g.prefix,
+            rejected: g.rejected,
+            shed_deadline: g.shed_deadline,
+            shed_kv: g.shed_kv,
+            deferred: g.deferred,
+            preempted: g.preempted,
+            queue_depth_mean: if g.queue_depth_samples == 0 {
+                0.0
+            } else {
+                g.queue_depth_sum as f64 / g.queue_depth_samples as f64
+            },
+            queue_depth_max: g.queue_depth_max,
+            by_priority,
             requests: g.requests_done,
             tokens: g.tokens_out,
             tokens_per_s: if elapsed > 0.0 { g.tokens_out as f64 / elapsed } else { 0.0 },
@@ -158,6 +250,17 @@ impl ServerMetrics {
     }
 }
 
+/// Per-priority-class SLO latencies.
+#[derive(Debug, Clone, Copy)]
+pub struct PrioritySlo {
+    pub class: &'static str,
+    pub requests: u64,
+    pub ttft_p50_us: f64,
+    pub ttft_p99_us: f64,
+    pub itl_p50_us: f64,
+    pub itl_p99_us: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     /// `(live_lanes, steps)` pairs, ascending, zero-count rows dropped.
@@ -168,6 +271,20 @@ pub struct MetricsSnapshot {
     /// Latest prefix-cache counters (continuous engine with the prefix
     /// cache on).
     pub prefix: Option<PrefixStats>,
+    /// Pushes rejected at the admission cap.
+    pub rejected: u64,
+    /// Requests shed for a queue-expired deadline.
+    pub shed_deadline: u64,
+    /// Requests shed terminally by the KV-pressure ladder.
+    pub shed_kv: u64,
+    /// Admissions deferred (requeued mid-prefill) under KV pressure.
+    pub deferred: u64,
+    /// Decoding lanes preempted for replay under KV pressure.
+    pub preempted: u64,
+    pub queue_depth_mean: f64,
+    pub queue_depth_max: usize,
+    /// `[normal, high]` latency split.
+    pub by_priority: [PrioritySlo; 2],
     pub requests: u64,
     pub tokens: u64,
     pub tokens_per_s: f64,
@@ -235,6 +352,32 @@ impl MetricsSnapshot {
                 p.resident_chunks
             ));
         }
+        if self.rejected + self.shed_deadline + self.shed_kv + self.deferred + self.preempted > 0
+            || self.queue_depth_max > 0
+        {
+            s.push_str(&format!(
+                " | slo rejected={} shed-deadline={} shed-kv={} deferred={} preempted={} \
+                 queue-depth mean={:.2} max={}",
+                self.rejected,
+                self.shed_deadline,
+                self.shed_kv,
+                self.deferred,
+                self.preempted,
+                self.queue_depth_mean,
+                self.queue_depth_max
+            ));
+        }
+        // The per-priority split only says something once both classes
+        // ran (a single-class workload would just repeat the global
+        // numbers).
+        if self.by_priority.iter().all(|p| p.requests > 0) {
+            for p in &self.by_priority {
+                s.push_str(&format!(
+                    " | {}: n={} ttft p50={:.0}µs p99={:.0}µs itl p50={:.0}µs p99={:.0}µs",
+                    p.class, p.requests, p.ttft_p50_us, p.ttft_p99_us, p.itl_p50_us, p.itl_p99_us
+                ));
+            }
+        }
         s
     }
 }
@@ -246,6 +389,7 @@ mod tests {
     fn resp(tokens: usize, queue: f64, exec: f64, ttft: f64, itl: f64, total: f64, batch: usize) -> Response {
         Response {
             id: 1,
+            priority: Priority::Normal,
             tokens: vec![0; tokens],
             queue_us: queue,
             execute_us: exec,
@@ -294,6 +438,7 @@ mod tests {
             pages_in_use: 6,
             pages_peak: 8,
             pages_capacity: 8,
+            pages_budget: None,
             state_bytes: 1024,
             peak_bytes: 2048,
         });
@@ -305,6 +450,39 @@ mod tests {
         let r = s.report();
         assert!(r.contains("occupancy mean=3.00") && r.contains("4:3"), "{r}");
         assert!(r.contains("kv pages=6/8 (peak 8)"), "{r}");
+    }
+
+    #[test]
+    fn slo_counters_and_priority_split_flow_to_report() {
+        let m = ServerMetrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.rejected, s.shed_deadline, s.shed_kv, s.deferred, s.preempted), (0, 0, 0, 0, 0));
+        assert!(!s.report().contains("slo"), "idle metrics printed an SLO line");
+        m.record_rejected();
+        m.record_shed(ShedReason::DeadlineExpired);
+        m.record_shed(ShedReason::DeadlineExpired);
+        m.record_shed(ShedReason::KvPressure);
+        m.record_deferred();
+        m.record_preempted();
+        m.record_queue_depth(3);
+        m.record_queue_depth(7);
+        // One completed request per class lights up the priority split.
+        m.record_response(&resp(4, 10.0, 50.0, 200.0, 30.0, 300.0, 2));
+        let mut high = resp(4, 5.0, 50.0, 100.0, 20.0, 200.0, 2);
+        high.priority = Priority::High;
+        m.record_response(&high);
+        let s = m.snapshot();
+        assert_eq!((s.rejected, s.shed_deadline, s.shed_kv), (1, 2, 1));
+        assert_eq!((s.deferred, s.preempted), (1, 1));
+        assert!((s.queue_depth_mean - 5.0).abs() < 1e-9);
+        assert_eq!(s.queue_depth_max, 7);
+        assert_eq!(s.by_priority[0].class, "normal");
+        assert_eq!(s.by_priority[1].requests, 1);
+        assert!(s.by_priority[1].ttft_p50_us <= s.by_priority[0].ttft_p50_us);
+        let r = s.report();
+        assert!(r.contains("shed-deadline=2") && r.contains("shed-kv=1"), "{r}");
+        assert!(r.contains("queue-depth mean=5.00 max=7"), "{r}");
+        assert!(r.contains("high: n=1") && r.contains("normal: n=1"), "{r}");
     }
 
     #[test]

@@ -13,13 +13,13 @@ pub mod scheduler;
 pub mod server;
 pub mod session;
 
-pub use batcher::{BatchPolicy, Batcher};
-pub use continuous::run_continuous;
+pub use batcher::{BatchPolicy, Batcher, PopResult, PushOutcome};
+pub use continuous::{run_continuous, run_continuous_opts, ContinuousOpts};
 #[cfg(feature = "pjrt")]
 pub use executor::PjrtExecutor;
 pub use executor::{CpuExecutor, MockExecutor, StepExecutor};
-pub use metrics::{MetricsSnapshot, ServerMetrics};
-pub use request::{AdmitError, Limits, Request, Response};
+pub use metrics::{MetricsSnapshot, PrioritySlo, ServerMetrics};
+pub use request::{AdmitError, Limits, Priority, Request, Response, ShedError, ShedReason};
 pub use scheduler::{run_batch, Sampling};
 pub use server::{Server, Ticket};
-pub use session::{DecodeEngine, DecodeSession, KvCacheOpts, MockDecodeEngine};
+pub use session::{DecodeEngine, DecodeSession, KvCacheOpts, MockDecodeEngine, PrefillProgress};

@@ -2,19 +2,112 @@
 
 use std::time::Instant;
 
-/// Inference request: a token prompt plus generation length.
+/// Scheduling class: two levels are enough for a two-level FIFO — high
+/// drains before normal at every pop, and normal lanes are the first
+/// preemption victims under KV pressure.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    /// Dense index for per-priority metrics tables.
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Normal => 0,
+            Priority::High => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
+
+/// Inference request: a token prompt plus generation length, carrying
+/// its SLO envelope (priority class + optional absolute deadline).
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<u32>,
     pub max_new: usize,
     pub submitted_at: Instant,
+    pub priority: Priority,
+    /// Absolute deadline: a request still queued past this instant is
+    /// shed at pop time instead of decoded (`None` = no deadline).
+    pub deadline: Option<Instant>,
 }
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new,
+            submitted_at: Instant::now(),
+            priority: Priority::Normal,
+            deadline: None,
+        }
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> Request {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Option<Instant>) -> Request {
+        self.deadline = deadline;
+        self
+    }
+
+    /// Whether the deadline has passed as of `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.map(|d| now >= d).unwrap_or(false)
+    }
+}
+
+/// Why a request was shed instead of answered. Carried as the typed
+/// source of the terminal `anyhow::Error`, so clients can branch on
+/// shed-vs-fault via `Error::downcast_ref::<ShedError>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Deadline passed while queued; shed at pop time, never decoded.
+    DeadlineExpired,
+    /// Displaced under KV-page pressure with nothing left to yield —
+    /// the pressure ladder (evict → defer → preempt) was exhausted.
+    KvPressure,
+}
+
+/// Terminal shed event for one request (load shedding, not a fault).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShedError {
+    pub id: u64,
+    pub reason: ShedReason,
+}
+
+impl std::fmt::Display for ShedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.reason {
+            ShedReason::DeadlineExpired => write!(f, "request {} shed: deadline expired in queue", self.id),
+            ShedReason::KvPressure => write!(f, "request {} shed: KV page budget exhausted", self.id),
+        }
+    }
+}
+
+impl std::error::Error for ShedError {}
 
 /// Completed response with per-stage timing.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
+    /// Scheduling class the request ran under (per-priority SLO metrics
+    /// key off this).
+    pub priority: Priority,
     /// Generated tokens (not including the prompt).
     pub tokens: Vec<u32>,
     /// Time from submit to batch pickup.
@@ -46,6 +139,9 @@ pub enum AdmitError {
     PromptTooLong(usize, usize),
     TooManyTokens(usize, usize),
     BadToken(u32, u32),
+    /// Admission queue at capacity — bounded-queue backpressure, the
+    /// client should retry later.
+    QueueFull(usize),
     Shutdown,
 }
 
@@ -56,6 +152,7 @@ impl std::fmt::Display for AdmitError {
             AdmitError::PromptTooLong(n, lim) => write!(f, "prompt length {n} exceeds limit {lim}"),
             AdmitError::TooManyTokens(n, lim) => write!(f, "max_new {n} exceeds limit {lim}"),
             AdmitError::BadToken(tok, vocab) => write!(f, "token {tok} outside vocabulary {vocab}"),
+            AdmitError::QueueFull(cap) => write!(f, "admission queue full (capacity {cap})"),
             AdmitError::Shutdown => write!(f, "server shutting down"),
         }
     }
@@ -100,5 +197,30 @@ mod tests {
         assert!(matches!(validate(&vec![1; 100], 4, &l), Err(AdmitError::PromptTooLong(100, 48))));
         assert!(matches!(validate(&[1], 0, &l), Err(AdmitError::TooManyTokens(0, 16))));
         assert!(matches!(validate(&[1, 200], 4, &l), Err(AdmitError::BadToken(200, 168))));
+    }
+
+    #[test]
+    fn request_builders_and_expiry() {
+        use std::time::{Duration, Instant};
+        let r = Request::new(7, vec![1, 2], 4);
+        assert_eq!((r.priority, r.deadline), (Priority::Normal, None));
+        assert!(!r.expired(Instant::now() + Duration::from_secs(3600)), "no deadline never expires");
+        let now = Instant::now();
+        let r = r.with_priority(Priority::High).with_deadline(Some(now + Duration::from_millis(50)));
+        assert_eq!(r.priority, Priority::High);
+        assert!(!r.expired(now));
+        assert!(r.expired(now + Duration::from_millis(50)));
+        assert!(Priority::High > Priority::Normal, "ordering drives the two-level FIFO");
+        assert_eq!((Priority::Normal.index(), Priority::High.index()), (0, 1));
+    }
+
+    #[test]
+    fn shed_error_is_typed_and_downcastable() {
+        let e: anyhow::Error = ShedError { id: 9, reason: ShedReason::DeadlineExpired }.into();
+        let s = e.downcast_ref::<ShedError>().expect("shed error lost its type through anyhow");
+        assert_eq!((s.id, s.reason), (9, ShedReason::DeadlineExpired));
+        assert!(e.to_string().contains("deadline expired"), "{e}");
+        let e: anyhow::Error = ShedError { id: 3, reason: ShedReason::KvPressure }.into();
+        assert!(e.to_string().contains("KV page budget"), "{e}");
     }
 }

@@ -107,6 +107,7 @@ pub fn run_batch<E: StepExecutor + ?Sized>(
             };
             Response {
                 id: req.id,
+                priority: req.priority,
                 tokens: seqs[i][req.prompt.len()..].to_vec(),
                 queue_us,
                 execute_us,
@@ -141,7 +142,10 @@ pub(crate) fn sample_from_logits(slice: &[f32], sampling: Sampling, req_id: u64,
         Sampling::Greedy => argmax(slice) as u32,
         Sampling::TopK(k) => {
             let mut idx: Vec<usize> = (0..v).collect();
-            idx.sort_by(|&a, &b| slice[b].partial_cmp(&slice[a]).unwrap());
+            // total_cmp, not partial_cmp().unwrap(): logits come from
+            // the engine, and a NaN (bad weights, poisoned lane) must
+            // not panic the worker thread mid-serve.
+            idx.sort_by(|&a, &b| slice[b].total_cmp(&slice[a]));
             idx.truncate(k.max(1));
             // Softmax over the top-k, sampled with a per-(request, step)
             // deterministic stream.
@@ -176,10 +180,20 @@ mod tests {
     use super::*;
     use crate::coordinator::executor::MockExecutor;
     use crate::util::prop::{ensure, forall};
-    use std::time::Instant;
 
     fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
-        Request { id, prompt, max_new, submitted_at: Instant::now() }
+        Request::new(id, prompt, max_new)
+    }
+
+    #[test]
+    fn sampling_survives_nan_logits() {
+        // A poisoned lane can hand the sampler NaN logits; neither
+        // sampling mode may panic the worker thread over it.
+        let logits = [1.0f32, f32::NAN, 0.5, f32::NAN];
+        let g = sample_from_logits(&logits, Sampling::Greedy, 1, 0);
+        assert!((g as usize) < logits.len());
+        let t = sample_from_logits(&logits, Sampling::TopK(3), 1, 0);
+        assert!((t as usize) < logits.len());
     }
 
     #[test]

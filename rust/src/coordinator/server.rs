@@ -2,18 +2,25 @@
 //! batcher → scheduler worker → response delivery. One worker thread per
 //! executor (the PJRT engine serializes executions anyway; multiple
 //! workers make sense with multiple executors/variants).
+//!
+//! SLO plumbing: `submit_with` carries a priority class and an optional
+//! relative deadline into the bounded admission queue. A full queue
+//! rejects at submit time (`AdmitError::QueueFull`); a deadline that
+//! expires while queued resolves the ticket with a typed [`ShedError`]
+//! instead of hanging the client — every accepted ticket gets exactly
+//! one terminal event.
 
-use super::batcher::{BatchPolicy, Batcher};
-use super::continuous::run_continuous;
+use super::batcher::{BatchPolicy, Batcher, PushOutcome};
+use super::continuous::{run_continuous_opts, ContinuousOpts};
 use super::executor::StepExecutor;
 use super::metrics::ServerMetrics;
-use super::request::{validate, AdmitError, Limits, Request, Response};
+use super::request::{validate, AdmitError, Limits, Priority, Request, Response, ShedError, ShedReason};
 use super::scheduler::{run_batch, Sampling};
 use super::session::DecodeEngine;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Ticket returned on submit; blocks for the response.
 pub struct Ticket {
@@ -28,6 +35,19 @@ impl Ticket {
 }
 
 type ReplyMap = Arc<Mutex<HashMap<u64, mpsc::Sender<anyhow::Result<Response>>>>>;
+
+/// Deliver terminal shed errors for every deadline-expired request the
+/// batcher binned. The fixed-batch worker calls this around each batch
+/// (the continuous scheduler drains the bin itself and routes sheds
+/// through its deliver callback, so only this path needs it).
+fn deliver_shed(batcher: &Batcher, replies: &ReplyMap, metrics: &ServerMetrics) {
+    for req in batcher.drain_shed() {
+        metrics.record_shed(ShedReason::DeadlineExpired);
+        if let Some(tx) = replies.lock().unwrap().remove(&req.id) {
+            let _ = tx.send(Err(ShedError { id: req.id, reason: ShedReason::DeadlineExpired }.into()));
+        }
+    }
+}
 
 /// The serving coordinator.
 pub struct Server {
@@ -60,6 +80,13 @@ impl Server {
             .name("lobcq-worker".into())
             .spawn(move || {
                 while let Some(batch) = b.next_batch() {
+                    // An empty batch signals shed-only progress: expired
+                    // requests need their terminal errors delivered even
+                    // though there is nothing to decode.
+                    deliver_shed(&b, &r, &m);
+                    if batch.is_empty() {
+                        continue;
+                    }
                     let result = run_batch(&exec, &batch, sampling, Some(&m));
                     let mut guard = r.lock().unwrap();
                     match result {
@@ -81,6 +108,9 @@ impl Server {
                         }
                     }
                 }
+                // Shutdown drain: anything expired after the last batch
+                // still owes its ticket a terminal event.
+                deliver_shed(&b, &r, &m);
             })
             .expect("spawn worker");
 
@@ -88,16 +118,33 @@ impl Server {
     }
 
     /// Start a server over a stateful [`DecodeEngine`] with the
-    /// continuous-batching scheduler: requests are admitted into engine
-    /// lanes as they free up (token-granular backfill) instead of being
-    /// held in fixed batches. No `BatchPolicy` — concurrency is the
-    /// engine's lane count and admission is immediate.
+    /// continuous-batching scheduler and the default admission policy
+    /// (unbounded queue, inline prefill).
     pub fn start_continuous<E: DecodeEngine + 'static>(
-        mut engine: E,
+        engine: E,
         limits: Limits,
         sampling: Sampling,
     ) -> Server {
-        let batcher = Arc::new(Batcher::new(BatchPolicy::default()));
+        Server::start_continuous_with(
+            engine,
+            limits,
+            sampling,
+            BatchPolicy::default(),
+            ContinuousOpts::default(),
+        )
+    }
+
+    /// Start a continuous-batching server with explicit admission policy
+    /// (`queue_cap` bounds the queue) and scheduler options
+    /// (`prefill_chunk` bounds per-iteration prefill work).
+    pub fn start_continuous_with<E: DecodeEngine + 'static>(
+        mut engine: E,
+        limits: Limits,
+        sampling: Sampling,
+        policy: BatchPolicy,
+        opts: ContinuousOpts,
+    ) -> Server {
+        let batcher = Arc::new(Batcher::new(policy));
         let replies: ReplyMap = Arc::new(Mutex::new(HashMap::new()));
         let metrics = Arc::new(ServerMetrics::new());
 
@@ -107,7 +154,7 @@ impl Server {
         let worker = std::thread::Builder::new()
             .name("lobcq-decode-worker".into())
             .spawn(move || {
-                run_continuous(&mut engine, &b, sampling, Some(&m), |id, result| {
+                run_continuous_opts(&mut engine, &b, opts, sampling, Some(&m), |id, result| {
                     if let Ok(resp) = &result {
                         m.record_response(resp);
                     }
@@ -121,18 +168,42 @@ impl Server {
         Server { batcher, replies, next_id: AtomicU64::new(1), limits, metrics, workers: vec![worker] }
     }
 
-    /// Router entry point: validate, assign id, enqueue.
+    /// Router entry point: validate, assign id, enqueue at normal
+    /// priority with no deadline.
     pub fn submit(&self, prompt: Vec<u32>, max_new: usize) -> Result<Ticket, AdmitError> {
+        self.submit_with(prompt, max_new, Priority::Normal, None)
+    }
+
+    /// Router entry point with the full SLO envelope: scheduling class
+    /// plus an optional deadline relative to now. A request still queued
+    /// past its deadline is shed (its ticket resolves with a typed
+    /// [`ShedError`]) rather than decoded late.
+    pub fn submit_with(
+        &self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket, AdmitError> {
         validate(&prompt, max_new, &self.limits)?;
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let (tx, rx) = mpsc::channel();
         self.replies.lock().unwrap().insert(id, tx);
-        let ok = self.batcher.push(Request { id, prompt, max_new, submitted_at: Instant::now() });
-        if !ok {
-            self.replies.lock().unwrap().remove(&id);
-            return Err(AdmitError::Shutdown);
+        let req = Request::new(id, prompt, max_new)
+            .with_priority(priority)
+            .with_deadline(deadline.map(|d| Instant::now() + d));
+        match self.batcher.push(req) {
+            PushOutcome::Accepted => Ok(Ticket { id, rx }),
+            PushOutcome::QueueFull => {
+                self.replies.lock().unwrap().remove(&id);
+                self.metrics.record_rejected();
+                Err(AdmitError::QueueFull(self.batcher.policy().queue_cap.unwrap_or(0)))
+            }
+            PushOutcome::Closed => {
+                self.replies.lock().unwrap().remove(&id);
+                Err(AdmitError::Shutdown)
+            }
         }
-        Ok(Ticket { id, rx })
     }
 
     /// Graceful shutdown: drain the queue, join workers.
@@ -152,12 +223,13 @@ impl Server {
 mod tests {
     use super::*;
     use crate::coordinator::executor::MockExecutor;
+    use crate::coordinator::session::MockDecodeEngine;
     use std::time::Duration;
 
     fn server(max_batch: usize, wait_ms: u64) -> Server {
         Server::start(
             MockExecutor::new(8, 16, 64),
-            BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms) },
+            BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms), queue_cap: None },
             Limits { max_prompt: 12, max_new: 8, vocab: 64 },
             Sampling::Greedy,
         )
@@ -203,7 +275,6 @@ mod tests {
 
     #[test]
     fn continuous_server_end_to_end() {
-        use crate::coordinator::session::MockDecodeEngine;
         let s = Arc::new(Server::start_continuous(
             MockDecodeEngine::new(2, 64),
             Limits { max_prompt: 12, max_new: 8, vocab: 64 },
@@ -248,6 +319,59 @@ mod tests {
         let b = s.batcher.clone();
         b.close();
         assert_eq!(s.submit(vec![1], 1).err(), Some(AdmitError::Shutdown));
+        s.shutdown();
+    }
+
+    #[test]
+    fn full_queue_rejects_at_submit_with_typed_error() {
+        // queue_cap 0 makes every push hit the bound deterministically,
+        // independent of how fast the worker drains.
+        let s = Server::start_continuous_with(
+            MockDecodeEngine::new(2, 64),
+            Limits { max_prompt: 12, max_new: 8, vocab: 64 },
+            Sampling::Greedy,
+            BatchPolicy { max_batch: 8, max_wait: Duration::ZERO, queue_cap: Some(0) },
+            ContinuousOpts::default(),
+        );
+        let err = s.submit(vec![1], 1).err().expect("bounded queue must reject");
+        assert_eq!(err, AdmitError::QueueFull(0));
+        assert_eq!(s.metrics.snapshot().rejected, 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_resolves_ticket_with_shed_error() {
+        // Deadline of zero: expired by the time the worker pops it, so
+        // the ticket must resolve with a typed shed error (not hang,
+        // not decode).
+        let s = Server::start_continuous(
+            MockDecodeEngine::new(2, 64),
+            Limits { max_prompt: 12, max_new: 8, vocab: 64 },
+            Sampling::Greedy,
+        );
+        let t = s
+            .submit_with(vec![3], 2, Priority::High, Some(Duration::ZERO))
+            .expect("admission accepts; shedding happens at pop time");
+        let err = t.wait().err().expect("expired request must not produce tokens");
+        let shed = err.downcast_ref::<ShedError>().expect("terminal error must stay typed");
+        assert_eq!(shed.reason, ShedReason::DeadlineExpired);
+        let snap = s.metrics.snapshot();
+        assert_eq!((snap.shed_deadline, snap.requests), (1, 0));
+        s.shutdown();
+    }
+
+    #[test]
+    fn fixed_batch_worker_delivers_shed_errors() {
+        // The legacy fixed-batch path must honour deadlines too: an
+        // empty next_batch() signals shed progress and the worker owes
+        // the ticket its terminal error.
+        let s = server(4, 0);
+        let t = s
+            .submit_with(vec![5], 2, Priority::Normal, Some(Duration::ZERO))
+            .expect("admission accepts");
+        let err = t.wait().err().expect("expired request must not decode");
+        assert!(err.downcast_ref::<ShedError>().is_some(), "untyped shed error: {err}");
+        assert_eq!(s.metrics.snapshot().shed_deadline, 1);
         s.shutdown();
     }
 }

@@ -75,6 +75,8 @@ pub struct KvStats {
     pub pages_peak: usize,
     /// Pages ever allocated (the pool never shrinks).
     pub pages_capacity: usize,
+    /// Page-capacity budget (`None` = unbounded).
+    pub pages_budget: Option<usize>,
     pub state_bytes: usize,
     pub peak_bytes: usize,
 }
@@ -232,7 +234,12 @@ impl PagedKvCache {
         }
         let pos = self.slots[slot].lens[layer];
         if pos % pt == 0 {
-            // Page boundary: claim one fresh page per head.
+            // Page boundary: claim one fresh page per head. Check the
+            // whole head group against the pool budget **before** the
+            // first allocation, so a shortfall surfaces as a typed
+            // KvPressure error with the cache untouched (a partial head
+            // group would corrupt the slot's page table).
+            self.pool.ensure_headroom(nh)?;
             for _ in 0..nh {
                 let id = self.pool.alloc();
                 // f32 pages carry their full pre-sized storage from the
@@ -290,6 +297,15 @@ impl PagedKvCache {
                 "slot {slot} appears twice in one batched append"
             );
         }
+        // Page-budget pre-check: every lane sitting at a page boundary
+        // claims one fresh page per head. Validating the sum before the
+        // first append keeps the call atomic under KV pressure — a
+        // shortfall fails with a typed KvPressure error and an untouched
+        // cache instead of a half-appended step.
+        let pt = self.layout.page_tokens;
+        let boundary_lanes =
+            slots.iter().filter(|&&s| self.slots[s].lens[layer] % pt == 0).count();
+        self.pool.ensure_headroom(boundary_lanes * self.layout.n_heads)?;
         for (i, &slot) in slots.iter().enumerate() {
             let row = &rows[i * stride..(i + 1) * stride];
             self.append(slot, layer, &row[k_off..k_off + d], &row[v_off..v_off + d])?;
@@ -435,6 +451,13 @@ impl PagedKvCache {
         let total = full.len() * pt + m_extra;
         anyhow::ensure!(total >= 1, "adopting an empty prefix");
         anyhow::ensure!(total <= self.layout.max_tokens, "adopted prefix {total} > slot capacity {}", self.layout.max_tokens);
+        // Shared pages cost no headroom (retain only bumps a refcount),
+        // but the copy-on-write group claims one fresh page per (layer,
+        // head). Pre-check it with the rest of the validation so a
+        // budget shortfall rejects the adoption before any retain.
+        if partial.is_some() {
+            self.pool.ensure_headroom(group)?;
+        }
 
         for g in full {
             for layer in 0..nl {
@@ -570,6 +593,41 @@ impl PagedKvCache {
         self.pool.capacity_pages()
     }
 
+    /// Cap (or uncap) the pool's page budget — the serving `--kv-pages`
+    /// knob. `None` restores unbounded growth.
+    pub fn set_page_budget(&mut self, budget: Option<usize>) {
+        self.pool.set_budget_pages(budget);
+    }
+
+    /// Pages still allocatable under the budget (`usize::MAX` when
+    /// unbounded) — what the scheduler's pressure ladder consults.
+    pub fn page_headroom(&self) -> usize {
+        self.pool.headroom_pages()
+    }
+
+    /// Fail with a typed [`KvPressure`](super::pool::KvPressure) error
+    /// unless `needed` pages fit under the budget. Callers staging a
+    /// multi-allocation unit of work (a prefill chunk, a fused decode
+    /// step) pre-check the whole unit here so a shortfall never leaves
+    /// the cache half-mutated.
+    pub fn ensure_page_headroom(&self, needed: usize) -> anyhow::Result<()> {
+        self.pool.ensure_headroom(needed)
+    }
+
+    /// Fresh pages appending `new_tokens` more tokens to `slot` will
+    /// claim, over all layers and heads: the number of page-boundary
+    /// crossings in `[len, len + new_tokens)` times `n_layers * n_heads`.
+    /// The chunked-prefill and fused-decode paths size their headroom
+    /// pre-checks with this.
+    pub fn pages_needed(&self, slot: SlotId, new_tokens: usize) -> usize {
+        let st = &self.slots[slot];
+        debug_assert!(st.live, "pages_needed of a dead slot {slot}");
+        let pt = self.layout.page_tokens;
+        let len = st.lens.first().copied().unwrap_or(0);
+        let crossings = (len + new_tokens).div_ceil(pt) - len.div_ceil(pt);
+        crossings * self.layout.n_layers * self.layout.n_heads
+    }
+
     /// Occupancy snapshot (pages in use / high-water mark / bytes) for
     /// the serving metrics.
     pub fn stats(&self) -> KvStats {
@@ -578,6 +636,7 @@ impl PagedKvCache {
             pages_in_use: self.pool.live_pages(),
             pages_peak: self.pool.peak_live_pages(),
             pages_capacity: self.pool.capacity_pages(),
+            pages_budget: self.pool.budget_pages(),
             state_bytes: self.state_bytes(),
             peak_bytes: self.peak_bytes(),
         }
@@ -839,6 +898,84 @@ mod tests {
         assert!(cache.is_live(s));
         cache.free_slot(s);
         assert!(!cache.is_live(s));
+    }
+
+    #[test]
+    fn page_budget_fails_typed_and_leaves_cache_resumable() {
+        use super::super::pool::KvPressure;
+        let lay = KvLayout { n_layers: 1, n_heads: 2, head_dim: 4, page_tokens: 2, max_tokens: 16, max_slots: 2 };
+        let d = lay.n_heads * lay.head_dim;
+        let mut cache = PagedKvCache::new(lay, KvStore::F32).unwrap();
+        // Budget of 2 pages = exactly one 2-token page group (2 heads).
+        cache.set_page_budget(Some(2));
+        let s = cache.alloc_slot().unwrap();
+        assert_eq!(cache.pages_needed(s, 2), 2);
+        assert_eq!(cache.pages_needed(s, 3), 4);
+        for _ in 0..2 {
+            cache.append(s, 0, &vec![1.0; d], &vec![2.0; d]).unwrap();
+        }
+        assert_eq!(cache.page_headroom(), 0);
+        // Third token needs a fresh page group: typed failure, no growth,
+        // lane still resumable at its pre-failure length.
+        let err = cache.append(s, 0, &vec![1.0; d], &vec![2.0; d]).unwrap_err();
+        let p = err.downcast_ref::<KvPressure>().expect("append loses the KvPressure source");
+        assert_eq!((p.needed, p.headroom), (2, 0));
+        assert_eq!(cache.seq_len(s), 2, "failed append mutated the slot");
+        assert_eq!(cache.stats().pages_budget, Some(2));
+        // Batched flavour is atomic under pressure too.
+        let rows = vec![0.5f32; 3 * d];
+        let err = cache.append_batch(&[s], 0, &rows, 3 * d, d, 2 * d).unwrap_err();
+        assert!(err.downcast_ref::<KvPressure>().is_some(), "append_batch loses the KvPressure source");
+        assert_eq!(cache.seq_len(s), 2);
+        // Raising the budget resumes the same lane bit-exactly.
+        cache.set_page_budget(Some(4));
+        cache.append(s, 0, &vec![3.0; d], &vec![4.0; d]).unwrap();
+        assert_eq!(cache.seq_len(s), 3);
+        let mut out = Vec::new();
+        cache.gather(s, 0, 0, Plane::K, &mut out);
+        assert_eq!(&out[..4], &[1.0; 4], "pre-pressure history corrupted");
+        assert_eq!(&out[8..12], &[3.0; 4]);
+    }
+
+    #[test]
+    fn adopt_prefix_cow_respects_page_budget() {
+        let lay = layout(4);
+        let d = lay.n_heads * lay.head_dim;
+        let group = lay.n_layers * lay.n_heads;
+        let mut cache = PagedKvCache::new(lay, KvStore::F32).unwrap();
+        let donor = cache.alloc_slot().unwrap();
+        let mut rng = Pcg32::seeded(0x9A90);
+        for _tok in 0..6 {
+            let (k, v) = rows(&mut rng, d);
+            for layer in 0..2 {
+                cache.append(donor, layer, &k, &v).unwrap();
+            }
+        }
+        let groups = cache.full_page_groups(donor);
+        let mut partial_group = Vec::new();
+        for layer in 0..2 {
+            for head in 0..cache.layout().n_heads {
+                partial_group.push(cache.page_ids(donor)[layer * 2 * cache.layout().n_heads + cache.layout().n_heads + head]);
+            }
+        }
+        // No headroom for the CoW group: adoption fails typed, before
+        // any refcount moved, so freeing the adopter leaks nothing.
+        cache.set_page_budget(Some(cache.capacity_pages()));
+        let adopter = cache.alloc_slot().unwrap();
+        let err = cache.adopt_prefix(adopter, &groups, Some((&partial_group, 2))).unwrap_err();
+        assert!(err.downcast_ref::<super::super::pool::KvPressure>().is_some());
+        for &id in &groups[0] {
+            assert_eq!(cache.pool().ref_count(id), 1, "failed adoption leaked a retain");
+        }
+        // Full-group-only adoption is refcount-only and succeeds at zero
+        // headroom; with room for the CoW group the partial path works.
+        cache.adopt_prefix(adopter, &groups, None).unwrap();
+        assert_eq!(cache.seq_len(adopter), 4);
+        cache.free_slot(adopter);
+        cache.set_page_budget(Some(cache.capacity_pages() + group));
+        let adopter = cache.alloc_slot().unwrap();
+        cache.adopt_prefix(adopter, &groups, Some((&partial_group, 2))).unwrap();
+        assert_eq!(cache.seq_len(adopter), 6);
     }
 
     #[test]

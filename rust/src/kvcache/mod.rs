@@ -21,5 +21,5 @@ pub mod quant;
 
 pub use cache::{KvLayout, KvStats, KvStore, PagedKvCache, SlotId};
 pub use lut::{KtView, KvPanelCache};
-pub use pool::{Page, PageId, PagePool, Plane};
+pub use pool::{KvPressure, Page, PageId, PagePool, Plane};
 pub use quant::{kv_cfg, KvQuantizer};

@@ -38,6 +38,28 @@ pub enum Plane {
     V,
 }
 
+/// Typed "out of KV pages" error: the pool's page budget cannot cover an
+/// allocation. Carried as the **source** of the `anyhow::Result` chain
+/// (via `?` / `From`), so the serving coordinator can
+/// `err.downcast_ref::<KvPressure>()` and run its degradation ladder
+/// (evict prefix cache → defer admission → preempt a lane) instead of
+/// failing the request like a genuine fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPressure {
+    /// Pages the failed operation needed.
+    pub needed: usize,
+    /// Pages the pool could still hand out (free list + budget headroom).
+    pub headroom: usize,
+}
+
+impl std::fmt::Display for KvPressure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KV page budget exhausted: need {} pages, {} available", self.needed, self.headroom)
+    }
+}
+
+impl std::error::Error for KvPressure {}
+
 /// Bit-packed encoded storage for one plane of one page: codeword and
 /// selector streams (same `BitWriter` the Fig. 5 wire format uses) plus
 /// one f32 inverse effective scale per stored vector.
@@ -193,6 +215,11 @@ pub struct PagePool {
     page_tokens: usize,
     head_dim: usize,
     encoded: bool,
+    /// Page-capacity budget (`None` = unbounded, the historical
+    /// behaviour): [`try_alloc`](Self::try_alloc) refuses to grow the
+    /// page table past this many pages. Freed pages stay reusable, so
+    /// the budget caps *physical* page storage, not churn.
+    budget_pages: Option<usize>,
     /// High-water mark of pages simultaneously owned by live slots.
     peak_live: usize,
     /// Process-unique nonzero id (see [`instance_id`](Self::instance_id)).
@@ -211,6 +238,7 @@ impl PagePool {
             page_tokens,
             head_dim,
             encoded,
+            budget_pages: None,
             peak_live: 0,
             instance: POOL_INSTANCES.fetch_add(1, Ordering::Relaxed),
         }
@@ -240,9 +268,55 @@ impl PagePool {
         self.gens[id as usize] = self.gen_clock;
     }
 
+    /// Set (or clear) the page-capacity budget. Lowering it below the
+    /// current page-table size does not free anything — it only stops
+    /// further growth; the free list keeps recycling existing pages.
+    pub fn set_budget_pages(&mut self, budget: Option<usize>) {
+        self.budget_pages = budget;
+    }
+
+    pub fn budget_pages(&self) -> Option<usize> {
+        self.budget_pages
+    }
+
+    /// Pages the pool can still hand out without violating its budget:
+    /// the free list plus the budget headroom (`usize::MAX` when
+    /// unbudgeted). Callers that must allocate several pages atomically
+    /// (one page group, one decode step) check this **before** the first
+    /// allocation so a shortfall surfaces with nothing mutated.
+    pub fn headroom_pages(&self) -> usize {
+        match self.budget_pages {
+            None => usize::MAX,
+            Some(b) => self.free.len() + b.saturating_sub(self.pages.len()),
+        }
+    }
+
+    /// Fail with a typed [`KvPressure`] error unless the pool can cover
+    /// `needed` more pages (see [`headroom_pages`](Self::headroom_pages)).
+    pub fn ensure_headroom(&self, needed: usize) -> anyhow::Result<()> {
+        let headroom = self.headroom_pages();
+        if headroom < needed {
+            return Err(KvPressure { needed, headroom }.into());
+        }
+        Ok(())
+    }
+
     /// Allocate a page (one reference), reusing a freed one when
-    /// available.
+    /// available; fails with a typed [`KvPressure`] error when the page
+    /// budget is exhausted.
+    pub fn try_alloc(&mut self) -> anyhow::Result<PageId> {
+        self.ensure_headroom(1)?;
+        Ok(self.alloc())
+    }
+
+    /// Infallible allocation — only correct when the pool is unbudgeted
+    /// or the caller pre-checked [`ensure_headroom`](Self::ensure_headroom);
+    /// a budget violation here is a bookkeeping bug, caught in debug.
     pub fn alloc(&mut self) -> PageId {
+        debug_assert!(
+            self.headroom_pages() >= 1,
+            "alloc past the page budget (headroom pre-check missing)"
+        );
         let id = if let Some(id) = self.free.pop() {
             debug_assert_eq!(self.pages[id as usize].filled, 0, "freed page not cleared");
             debug_assert_eq!(self.refs[id as usize], 0, "free-listed page still referenced");
@@ -505,6 +579,32 @@ mod tests {
         let p2 = PagePool::new(2, 4, false);
         assert_ne!(p1.instance_id(), 0);
         assert_ne!(p1.instance_id(), p2.instance_id());
+    }
+
+    #[test]
+    fn budget_bounds_growth_but_not_reuse() {
+        let mut pool = PagePool::new(4, 8, false);
+        assert_eq!(pool.headroom_pages(), usize::MAX);
+        pool.set_budget_pages(Some(2));
+        assert_eq!(pool.headroom_pages(), 2);
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        assert_eq!(pool.headroom_pages(), 0);
+        let err = pool.try_alloc().unwrap_err();
+        let p = err.downcast_ref::<KvPressure>().expect("not a typed pressure error");
+        assert_eq!((p.needed, p.headroom), (1, 0));
+        assert!(pool.ensure_headroom(1).is_err());
+        // Freed pages come back under the same budget.
+        pool.free(a);
+        assert_eq!(pool.headroom_pages(), 1);
+        let c = pool.try_alloc().unwrap();
+        assert_eq!(c, a, "budgeted pool did not recycle the free list");
+        assert_eq!(pool.capacity_pages(), 2, "budgeted pool grew instead of recycling");
+        pool.free(b);
+        pool.free(c);
+        // Raising (or clearing) the budget restores growth.
+        pool.set_budget_pages(None);
+        assert!(pool.ensure_headroom(100).is_ok());
     }
 
     #[test]

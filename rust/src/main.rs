@@ -2,7 +2,9 @@
 //! experiment harness, all over the AOT artifacts (Python never runs on
 //! the request path).
 
-use lobcq::coordinator::{BatchPolicy, CpuExecutor, DecodeSession, KvCacheOpts, Limits, Sampling, Server};
+use lobcq::coordinator::{
+    BatchPolicy, ContinuousOpts, CpuExecutor, DecodeSession, KvCacheOpts, Limits, Priority, Sampling, Server,
+};
 use lobcq::data::corpus;
 use lobcq::eval::{experiments, Env};
 use lobcq::quant::calib::calibrate_universal;
@@ -136,6 +138,7 @@ fn serve(argv: &[String]) -> anyhow::Result<()> {
         BatchPolicy {
             max_batch: entry.batch,
             max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 4)?),
+            queue_cap: None,
         },
         Limits { max_prompt: entry.t, max_new: 32, vocab: manifest.vocab as u32 },
         Sampling::Greedy,
@@ -190,6 +193,10 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
         OptSpec { name: "max-new", help: "tokens to generate per request", takes_value: true, default: Some("4") },
         OptSpec { name: "max-batch", help: "dynamic batch limit / decode lanes", takes_value: true, default: Some("8") },
         OptSpec { name: "max-wait-ms", help: "batcher wait (batch engine only)", takes_value: true, default: Some("4") },
+        OptSpec { name: "prefill-chunk", help: "prompt tokens prefilled per scheduler iteration (0 = inline: whole prompt at admission)", takes_value: true, default: Some("0") },
+        OptSpec { name: "queue-cap", help: "admission queue capacity; submits beyond it are rejected (0 = unbounded)", takes_value: true, default: Some("0") },
+        OptSpec { name: "deadline-ms", help: "per-request deadline; requests still queued past it are shed (0 = none)", takes_value: true, default: Some("0") },
+        OptSpec { name: "kv-pages", help: "KV page budget across all lanes; pressure degrades evict->defer->preempt (0 = unbounded)", takes_value: true, default: Some("0") },
         OptSpec { name: "workers", help: "quantization worker threads (0 = all cores)", takes_value: true, default: Some("0") },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
@@ -202,6 +209,13 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
     let n_requests = args.usize_or("requests", 32)?;
     let max_new = args.usize_or("max-new", 4)?;
     let max_batch = args.usize_or("max-batch", 8)?.max(1);
+    // SLO envelope: 0 means "off" for every knob (inline prefill,
+    // unbounded queue, no deadline, unbounded KV pages).
+    let prefill_chunk = args.usize_or("prefill-chunk", 0)?;
+    let queue_cap = args.usize_or("queue-cap", 0)?;
+    let deadline_ms = args.u64_or("deadline-ms", 0)?;
+    let kv_pages = args.usize_or("kv-pages", 0)?;
+    let deadline = (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms));
     let workers = args.usize_or("workers", 0)?;
     let pool = if workers == 0 { QuantPool::default() } else { QuantPool::with_workers(workers) };
 
@@ -239,6 +253,7 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
                 page_tokens,
                 encoded,
                 prefix_cache_bytes: args.bytes_opt("prefix-cache")?,
+                page_budget: (kv_pages > 0).then_some(kv_pages),
             };
             let session = DecodeSession::new(cfg.clone(), &weights, &scheme, pool, max_batch, kv)?;
             println!(
@@ -251,15 +266,30 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
                 lobcq::kernels::backend_name(),
                 session.prefix_mode()
             );
+            println!(
+                "[serve-cpu] slo: prefill-chunk {}, queue-cap {}, deadline {}, kv-pages {}",
+                if prefill_chunk == 0 { "inline".into() } else { prefill_chunk.to_string() },
+                if queue_cap == 0 { "unbounded".into() } else { queue_cap.to_string() },
+                if deadline_ms == 0 { "none".into() } else { format!("{deadline_ms}ms") },
+                if kv_pages == 0 { "unbounded".into() } else { kv_pages.to_string() },
+            );
             // The cached engine holds full histories (no sliding window);
             // any prompt up to `t` prefills, and the scheduler caps each
             // request's generation budget at the lane's remaining token
             // capacity, so prompt+max_new past max_t shortens the output
             // instead of rejecting the request.
-            Server::start_continuous(
+            Server::start_continuous_with(
                 session,
                 Limits { max_prompt: t, max_new: max_new.max(1), vocab },
                 Sampling::Greedy,
+                BatchPolicy {
+                    max_batch,
+                    max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 4)?),
+                    queue_cap: (queue_cap > 0).then_some(queue_cap),
+                },
+                ContinuousOpts {
+                    prefill_chunk: if prefill_chunk == 0 { usize::MAX } else { prefill_chunk },
+                },
             )
         }
         "batch" => {
@@ -277,6 +307,7 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
                 BatchPolicy {
                     max_batch,
                     max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 4)?),
+                    queue_cap: (queue_cap > 0).then_some(queue_cap),
                 },
                 Limits { max_prompt: t, max_new: max_new.max(1), vocab },
                 Sampling::Greedy,
@@ -311,7 +342,14 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
     for (_, prompt) in workload.requests {
         let s = server.clone();
         let prompt: Vec<u32> = prompt.into_iter().map(|x| x % vocab).collect();
-        handles.push(std::thread::spawn(move || s.submit(prompt, max_new).unwrap().wait()));
+        handles.push(std::thread::spawn(move || {
+            // A bounded queue may reject at submit time; count that as a
+            // failed request rather than panicking the client thread.
+            match s.submit_with(prompt, max_new, Priority::Normal, deadline) {
+                Ok(ticket) => ticket.wait(),
+                Err(e) => Err(anyhow::Error::new(e)),
+            }
+        }));
     }
     let mut ok = 0;
     for h in handles {

@@ -475,6 +475,11 @@ pub fn prefill_from(
     let (d, hd) = (cfg.d, cfg.head_dim());
     let m = tokens.len() - offset;
     let scale = 1.0 / (hd as f32).sqrt();
+    // Reserve the whole chunk's pages up front: a KV-page shortfall must
+    // surface as a typed KvPressure error *before* any layer appends, so
+    // the slot still holds exactly `offset` tokens and the scheduler can
+    // retry the same prefill_from call once pressure clears.
+    cache.ensure_page_headroom(cache.pages_needed(slot, m))?;
     scratch.pin_attention_capacity(max_tokens, hd, pt);
 
     // ---- embed the suffix: x[r] = embed[tok_{offset+r}] + pos[offset+r] ----
@@ -555,6 +560,9 @@ pub fn decode_step(
     scratch: &mut DecodeScratch,
 ) -> anyhow::Result<Vec<f32>> {
     let pos = validate_decode_lane(cfg, cache, &[slot], 0, token)?;
+    // One token touches every layer; reserve its pages before the first
+    // append so a budget shortfall leaves the lane resumable at `pos`.
+    cache.ensure_page_headroom(cache.pages_needed(slot, 1))?;
     let (d, hd) = (cfg.d, cfg.head_dim());
     let lay = cache.layout();
     let pt = lay.page_tokens;
@@ -631,6 +639,12 @@ pub fn decode_step_batch<'s>(
         let pos = validate_decode_lane(cfg, cache, slots, i, tok)?;
         scratch.pos.push(pos);
     }
+    // Whole-step page pre-check: lanes at a page boundary each claim one
+    // fresh page per (layer, head) this step. Failing here — before the
+    // first layer's append — keeps every lane resumable at its current
+    // position, so the scheduler can shed load and replay the step.
+    let needed: usize = slots.iter().map(|&s| cache.pages_needed(s, 1)).sum();
+    cache.ensure_page_headroom(needed)?;
     scratch.pin_attention_capacity(lay.max_tokens, hd, pt);
 
     // ---- embed all frontier tokens: x[i] = embed[tok_i] + pos[p_i] ----

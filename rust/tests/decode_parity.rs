@@ -109,7 +109,7 @@ fn decode_session_matches_full_forward_with_encoded_weights() {
         &scheme,
         QuantPool::serial(),
         1,
-        KvCacheOpts { page_tokens: 4, encoded: false, prefix_cache_bytes: None },
+        KvCacheOpts { page_tokens: 4, encoded: false, prefix_cache_bytes: None, page_budget: None },
     )
     .unwrap();
     assert_eq!(session.weight_mode(), "encoded-domain (qgemm on LO-BCQ codes)");
@@ -417,7 +417,7 @@ fn continuous_session_backfills_and_stays_consistent() {
         &lobcq::eval::Scheme::Bf16,
         QuantPool::serial(),
         1,
-        KvCacheOpts { page_tokens: 4, encoded: false, prefix_cache_bytes: None },
+        KvCacheOpts { page_tokens: 4, encoded: false, prefix_cache_bytes: None, page_budget: None },
     )
     .unwrap();
     for r in 0..3u32 {

@@ -74,7 +74,7 @@ fn warm_prefill_bit_identical_to_cold_across_stores_and_weight_modes() {
     for (scheme, wmode) in &schemes {
         for kv_encoded in [false, true] {
             let tag = format!("weights={wmode} kv_encoded={kv_encoded}");
-            let kv = KvCacheOpts { page_tokens: 4, encoded: kv_encoded, prefix_cache_bytes: Some(1 << 20) };
+            let kv = KvCacheOpts { page_tokens: 4, encoded: kv_encoded, prefix_cache_bytes: Some(1 << 20), page_budget: None };
             let mk = |budget: Option<usize>| {
                 DecodeSession::new(
                     cfg.clone(),
@@ -144,7 +144,7 @@ fn warm_hits_over_the_shared_prefix_workload_save_prefill_tokens() {
     // repeated full pages.
     let cfg = cfg32();
     let w = random_weights(&cfg, 0x50F2);
-    let kv = KvCacheOpts { page_tokens: 4, encoded: true, prefix_cache_bytes: Some(1 << 20) };
+    let kv = KvCacheOpts { page_tokens: 4, encoded: true, prefix_cache_bytes: Some(1 << 20), page_budget: None };
     let mut s = DecodeSession::new(cfg.clone(), &w, &Scheme::Bf16, QuantPool::serial(), 1, kv).unwrap();
     let wl = corpus::shared_prefix_workload(7, 2, 10, 12, 4);
     let mut seen = [false; 2];

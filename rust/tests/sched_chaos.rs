@@ -1,0 +1,251 @@
+//! Scheduler chaos suite (ISSUE 7): adversarial traffic against the
+//! continuous-batching loop — random arrivals, priorities, deadlines
+//! (some already expired), poisoned tokens, tiny simulated KV budgets,
+//! and every prefill-chunk mode — checking the invariants that make the
+//! SLO machinery safe to run in production:
+//!
+//! 1. **Conservation**: every admitted request gets exactly one terminal
+//!    event (response, per-request error, or typed shed), no matter how
+//!    often it was deferred or preempted along the way.
+//! 2. **No leaks**: every begun prefill is released, and no lane still
+//!    holds KV when the loop exits.
+//! 3. **Healthy-lane parity**: a request that completed normally yields
+//!    exactly the tokens an uncontended solo run produces — contention
+//!    may delay a lane but must never change its output.
+//! 4. **Real-engine degradation**: a real `DecodeSession` under a tiny
+//!    page budget never panics; it degrades (evict → defer → preempt)
+//!    and every displaced request terminates with a response or an
+//!    explicit [`ShedError`].
+//! 5. **Chunked == inline through the scheduler**: token-for-token
+//!    identical output across {dense, encoded} weights × {f32, BCQ} KV.
+
+use lobcq::coordinator::{
+    run_continuous_opts, BatchPolicy, Batcher, ContinuousOpts, DecodeEngine, DecodeSession, KvCacheOpts,
+    MockDecodeEngine, Priority, Request, Response, Sampling, ShedError,
+};
+use lobcq::eval::Scheme;
+use lobcq::model::{ModelConfig, Weights};
+use lobcq::quant::pipeline::QuantPool;
+use lobcq::tensor::Tensor;
+use lobcq::util::prop::{ensure, forall_seeded};
+use lobcq::util::rng::Pcg32;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+fn drive<E: DecodeEngine>(
+    engine: &mut E,
+    reqs: Vec<Request>,
+    opts: ContinuousOpts,
+) -> Vec<(u64, anyhow::Result<Response>)> {
+    let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO, queue_cap: None });
+    for r in reqs {
+        assert!(b.push(r).is_accepted());
+    }
+    b.close();
+    let mut out = Vec::new();
+    run_continuous_opts(engine, &b, opts, Sampling::Greedy, None, |id, r| out.push((id, r)));
+    out
+}
+
+// ---- 1-3. mock-engine chaos property (200 seeded iterations) ----
+
+#[test]
+fn prop_chaos_conservation_no_leaks_and_healthy_parity() {
+    forall_seeded(0xC4A05, 200, "scheduler chaos", |rng| {
+        let vocab = 32u32;
+        let lanes = 1 + rng.index(4);
+        let mut e = MockDecodeEngine::new(lanes, vocab as usize);
+        if rng.next_f32() < 0.5 {
+            // Tiny token-denominated KV budget — including 0, where every
+            // request is oversized and must be shed, not decoded.
+            e.kv_capacity = Some(rng.index(20));
+            e.kv_evictable = rng.index(4);
+        }
+        if rng.next_f32() < 0.2 {
+            e.poison_token = Some(rng.below(vocab));
+        }
+        let chunk = match rng.index(4) {
+            0 => usize::MAX, // inline admission
+            c => c,          // 1..=3 token chunks
+        };
+        let n = 1 + rng.index(10);
+        let now = Instant::now();
+        let mut reqs = Vec::new();
+        for i in 0..n {
+            let plen = 1 + rng.index(8);
+            let prompt: Vec<u32> = (0..plen).map(|_| rng.below(vocab)).collect();
+            let mut r = Request::new(i as u64 + 1, prompt, 1 + rng.index(5));
+            if rng.next_f32() < 0.25 {
+                r = r.with_priority(Priority::High);
+            }
+            if rng.next_f32() < 0.2 {
+                // Already expired at submit: must be shed, never decoded.
+                r = r.with_deadline(Some(now));
+            } else if rng.next_f32() < 0.2 {
+                r = r.with_deadline(Some(now + Duration::from_secs(120)));
+            }
+            reqs.push(r);
+        }
+        let out = drive(&mut e, reqs.clone(), ContinuousOpts { prefill_chunk: chunk });
+
+        // Conservation: exactly one terminal event per request.
+        ensure(out.len() == n, || format!("{} terminal events for {n} requests", out.len()))?;
+        let mut ids: Vec<u64> = out.iter().map(|(id, _)| *id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ensure(ids.len() == n, || "duplicate terminal events".into())?;
+
+        // No leaks: every begun prefill (including preempt-replays) was
+        // released, and no lane still holds simulated KV. The evictable
+        // pool may survive intact when pressure never forced eviction.
+        ensure(e.releases == e.prefills, || {
+            format!("{} prefills vs {} releases", e.prefills, e.releases)
+        })?;
+        ensure(e.kv_used() == e.kv_evictable, || {
+            format!("lanes still hold {} KV tokens", e.kv_used() - e.kv_evictable)
+        })?;
+
+        // Healthy-lane parity: each Ok response matches an uncontended
+        // solo run of the same request (fresh engine, no budget, no
+        // poison, inline prefill).
+        for (id, res) in &out {
+            if let Ok(resp) = res {
+                let orig = reqs.iter().find(|r| r.id == *id).unwrap();
+                let mut solo = MockDecodeEngine::new(1, vocab as usize);
+                let solo_out = drive(
+                    &mut solo,
+                    vec![Request::new(orig.id, orig.prompt.clone(), orig.max_new)],
+                    ContinuousOpts::default(),
+                );
+                let solo_resp = solo_out[0].1.as_ref().expect("uncontended solo run failed");
+                ensure(resp.tokens == solo_resp.tokens, || {
+                    format!(
+                        "request {id}: contended tokens {:?} != solo {:?}",
+                        resp.tokens, solo_resp.tokens
+                    )
+                })?;
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- 4-5. real DecodeSession under pressure and chunk parity ----
+
+fn cfg32() -> ModelConfig {
+    ModelConfig { name: "chaos".into(), d: 32, n_layers: 2, n_heads: 2, vocab: 40, max_t: 32 }
+}
+
+fn random_weights(cfg: &ModelConfig, seed: u64) -> Weights {
+    let mut rng = Pcg32::seeded(seed);
+    let mut tensors = BTreeMap::new();
+    for (name, shape) in cfg.param_shapes() {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with(".g") {
+            vec![1.0; n]
+        } else if name.ends_with(".b") {
+            vec![0.0; n]
+        } else {
+            (0..n).map(|_| rng.normal() * 0.05).collect()
+        };
+        tensors.insert(name, Tensor::new(&shape, data));
+    }
+    Weights::new(tensors)
+}
+
+fn encoded_scheme(w: &Weights) -> Scheme {
+    use lobcq::quant::calib::calibrate_universal;
+    use lobcq::quant::lobcq::{CalibOpts, LobcqConfig};
+    let qcfg = LobcqConfig::new(8, 4, 64);
+    let fam = calibrate_universal(
+        &[w.get("l0.mlp.w1").unwrap()],
+        &qcfg,
+        CalibOpts { max_iters: 8, ..Default::default() },
+        5,
+    );
+    Scheme::lobcq(qcfg, fam)
+}
+
+#[test]
+fn real_session_under_tiny_page_budget_degrades_without_panic() {
+    let cfg = cfg32();
+    let w = random_weights(&cfg, 0xC4A1);
+    // Budgets from "nothing fits" (2 pages < one head group) through
+    // "everything fits"; both prefill modes. Exhaustion must never
+    // panic, and every request must terminate with a response or a
+    // typed shed error.
+    for budget in [2usize, 4, 8, 24] {
+        for chunk in [usize::MAX, 2] {
+            let kv = KvCacheOpts {
+                page_tokens: 4,
+                encoded: false,
+                prefix_cache_bytes: Some(1 << 20),
+                page_budget: Some(budget),
+            };
+            let mut s =
+                DecodeSession::new(cfg.clone(), &w, &Scheme::Bf16, QuantPool::serial(), 2, kv).unwrap();
+            let reqs: Vec<Request> = (0..5)
+                .map(|i| {
+                    let plen = 3 + (i % 4);
+                    let prompt: Vec<u32> = (0..plen).map(|k| ((i * 7 + k * 3) % 40) as u32).collect();
+                    Request::new(i as u64 + 1, prompt, 2)
+                })
+                .collect();
+            let out = drive(&mut s, reqs, ContinuousOpts { prefill_chunk: chunk });
+            assert_eq!(out.len(), 5, "budget {budget} chunk {chunk}: lost a terminal event");
+            for (id, res) in &out {
+                if let Err(e) = res {
+                    assert!(
+                        e.downcast_ref::<ShedError>().is_some(),
+                        "budget {budget} chunk {chunk} req {id}: non-shed failure {e}"
+                    );
+                }
+            }
+            assert_eq!(s.cache().stats().live_slots, 0, "budget {budget} chunk {chunk}: slot leak");
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_token_identical_to_inline_across_weight_and_kv_modes() {
+    let cfg = cfg32();
+    let w = random_weights(&cfg, 0xC4A2);
+    let schemes: [(Scheme, &str); 2] = [(Scheme::Bf16, "dense"), (encoded_scheme(&w), "encoded")];
+    let reqs = || -> Vec<Request> {
+        (0..4usize)
+            .map(|i| {
+                let plen = 5 + (i % 3) * 2; // 5, 7, 9 — never a chunk multiple of 3
+                let prompt: Vec<u32> = (0..plen).map(|k| ((i * 11 + k * 5 + 3) % 40) as u32).collect();
+                Request::new(i as u64 + 1, prompt, 3)
+            })
+            .collect()
+    };
+    let tokens = |out: &[(u64, anyhow::Result<Response>)]| -> Vec<(u64, Vec<u32>)> {
+        let mut v: Vec<(u64, Vec<u32>)> = out
+            .iter()
+            .map(|(id, r)| (*id, r.as_ref().expect("uncontended run errored").tokens.clone()))
+            .collect();
+        v.sort();
+        v
+    };
+    for (scheme, wmode) in &schemes {
+        for kv_encoded in [false, true] {
+            let kv = KvCacheOpts {
+                page_tokens: 4,
+                encoded: kv_encoded,
+                prefix_cache_bytes: None,
+                page_budget: None,
+            };
+            let mk = || {
+                DecodeSession::new(cfg.clone(), &w, scheme, QuantPool::serial(), 2, kv.clone()).unwrap()
+            };
+            let inline_out = drive(&mut mk(), reqs(), ContinuousOpts::default());
+            let chunked_out = drive(&mut mk(), reqs(), ContinuousOpts { prefill_chunk: 3 });
+            assert_eq!(
+                tokens(&inline_out),
+                tokens(&chunked_out),
+                "chunked prefill diverged: weights={wmode} kv_encoded={kv_encoded}"
+            );
+        }
+    }
+}

@@ -32,6 +32,25 @@ impl Error {
         Error { msg: message.to_string(), source: None }
     }
 
+    /// Walk the source chain looking for a concrete error type —
+    /// anyhow's `downcast_ref`, restricted to references. Errors built
+    /// from a typed `std::error::Error` (via `?` or `From`) keep the
+    /// boxed original as their source, so callers can recover it to
+    /// branch on error *kind* (the serving coordinator distinguishes
+    /// KV-pressure errors from genuine faults this way). Errors built
+    /// by `anyhow!`/`bail!` carry only a message and never match.
+    pub fn downcast_ref<T: StdError + 'static>(&self) -> Option<&T> {
+        let mut cur: Option<&(dyn StdError + 'static)> =
+            self.source.as_deref().map(|s| s as &(dyn StdError + 'static));
+        while let Some(e) = cur {
+            if let Some(t) = e.downcast_ref::<T>() {
+                return Some(t);
+            }
+            cur = e.source();
+        }
+        None
+    }
+
     /// The chain of sources, outermost first (excludes the message).
     fn chain(&self) -> Vec<String> {
         let mut out = Vec::new();
@@ -160,6 +179,23 @@ mod tests {
             Ok(())
         }
         assert!(f().unwrap_err().to_string().contains("condition failed"));
+    }
+
+    #[test]
+    fn downcast_ref_recovers_typed_sources() {
+        #[derive(Debug, PartialEq)]
+        struct Marker(u32);
+        impl fmt::Display for Marker {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "marker {}", self.0)
+            }
+        }
+        impl StdError for Marker {}
+        let e: Error = Marker(7).into();
+        assert_eq!(e.downcast_ref::<Marker>(), Some(&Marker(7)));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+        let msg_only: Error = anyhow!("no typed source here");
+        assert!(msg_only.downcast_ref::<Marker>().is_none());
     }
 
     #[test]
