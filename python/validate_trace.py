@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Validate the serve-cpu observability artifacts (CI smoke leg, ISSUE 8).
+
+Usage:
+    validate_trace.py TRACE_JSON LIFECYCLE_JSONL METRICS_JSON
+
+Checks, in order:
+  1. TRACE_JSON is valid Chrome trace-event JSON: a non-empty
+     ``traceEvents`` list where every event carries name/cat/ph/ts/pid/tid,
+     "X" (complete) events carry ``dur``, "i" (instant) events carry the
+     global scope marker, and the request / sched / model / layer / op /
+     lifecycle categories all appear.
+  2. LIFECYCLE_JSONL is one JSON object per line (ts_us/event/request/arg),
+     sorted by timestamp, and conserves requests: every admitted request id
+     reaches exactly one terminal event (finished, shed-deadline, shed-kv,
+     or failed).
+  3. METRICS_JSON carries the server sections (latency, occupancy,
+     admission, kv, prefix, panel), non-empty per-layer activation-NMSE
+     telemetry, KV-encode NMSE samples, codebook-selector occupancy, and
+     the registry / kernel_backend / system stamps.
+
+Exits non-zero with a one-line reason on the first failure.
+"""
+
+import json
+import sys
+
+TERMINALS = {"finished", "shed-deadline", "shed-kv", "failed"}
+REQUIRED_CATS = {"request", "sched", "model", "layer", "op", "lifecycle"}
+
+
+def fail(msg):
+    print(f"validate_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_chrome_trace(path):
+    with open(path) as f:
+        trace = json.load(f)
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents missing or empty")
+    cats = set()
+    for ev in events:
+        for key in ("name", "cat", "ph", "ts", "pid", "tid"):
+            if key not in ev:
+                fail(f"{path}: event missing `{key}`: {ev}")
+        if ev["ph"] == "X":
+            if "dur" not in ev:
+                fail(f"{path}: complete event missing `dur`: {ev}")
+        elif ev["ph"] == "i":
+            if ev.get("s") != "g":
+                fail(f"{path}: instant event missing global scope: {ev}")
+        else:
+            fail(f"{path}: unexpected phase {ev['ph']!r}")
+        cats.add(ev["cat"])
+    missing = REQUIRED_CATS - cats
+    if missing:
+        fail(f"{path}: no events in categories {sorted(missing)} (saw {sorted(cats)})")
+    return len(events)
+
+
+def check_lifecycle(path):
+    admitted, terminal_counts = set(), {}
+    last_ts, lines = -1, 0
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            row = json.loads(line)
+            for key in ("ts_us", "event", "request", "arg"):
+                if key not in row:
+                    fail(f"{path}: line missing `{key}`: {row}")
+            if row["ts_us"] < last_ts:
+                fail(f"{path}: lifecycle log not sorted by ts_us at {row}")
+            last_ts = row["ts_us"]
+            if row["event"] == "admitted":
+                admitted.add(row["request"])
+            if row["event"] in TERMINALS:
+                terminal_counts[row["request"]] = terminal_counts.get(row["request"], 0) + 1
+            lines += 1
+    if lines == 0:
+        fail(f"{path}: lifecycle log is empty")
+    if not admitted:
+        fail(f"{path}: no `admitted` events")
+    for rid in sorted(admitted):
+        n = terminal_counts.get(rid, 0)
+        if n != 1:
+            fail(f"{path}: request {rid} admitted but has {n} terminal events (want 1)")
+    return lines, len(admitted)
+
+
+def check_metrics(path):
+    with open(path) as f:
+        m = json.load(f)
+    server = m.get("server")
+    if not isinstance(server, dict):
+        fail(f"{path}: no `server` section")
+    for key in ("latency", "occupancy", "admission", "kv", "prefix", "panel"):
+        if key not in server:
+            fail(f"{path}: server section missing `{key}`")
+    quant = m.get("quant")
+    if not isinstance(quant, dict):
+        fail(f"{path}: no `quant` section")
+    act = quant.get("act")
+    if not isinstance(act, dict) or not act:
+        fail(f"{path}: quant.act has no per-layer activation-NMSE entries")
+    for name, acc in act.items():
+        if "nmse" not in acc or "samples" not in acc:
+            fail(f"{path}: quant.act[{name!r}] missing nmse/samples")
+    if quant.get("kv", {}).get("samples", 0) <= 0:
+        fail(f"{path}: no KV-encode NMSE samples")
+    if quant.get("selectors", {}).get("total", 0) <= 0:
+        fail(f"{path}: no codebook-selector occupancy counts")
+    for key in ("registry", "kernel_backend", "system"):
+        if key not in m:
+            fail(f"{path}: missing `{key}` stamp")
+    return len(act)
+
+
+def main():
+    if len(sys.argv) != 4:
+        fail("usage: validate_trace.py TRACE_JSON LIFECYCLE_JSONL METRICS_JSON")
+    trace_p, events_p, metrics_p = sys.argv[1:4]
+    n_events = check_chrome_trace(trace_p)
+    n_lines, n_requests = check_lifecycle(events_p)
+    n_layers = check_metrics(metrics_p)
+    print(
+        f"validate_trace: OK — {n_events} trace events, {n_lines} lifecycle lines "
+        f"({n_requests} admitted requests conserved), {n_layers} act-NMSE layers"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -98,4 +98,21 @@ fn main() {
     if speedup < 2.0 || allocs_delta != 0 {
         eprintln!("WARNING: pipeline acceptance target missed on this host");
     }
+
+    use lobcq::util::json::Json;
+    let mut report = Json::obj()
+        .with("bench", Json::Str("perf_encode".into()))
+        .with(
+            "pipeline_vs_legacy",
+            Json::obj()
+                .with("speedup", Json::Num(speedup))
+                .with("target_speedup", Json::Num(2.0))
+                .with("steady_state_allocations", Json::Num(allocs_delta as f64))
+                .with("legacy_scalars_per_s", Json::Num(n as f64 / legacy.median_s()))
+                .with("pipeline_scalars_per_s", Json::Num(n as f64 / par.median_s())),
+        );
+    lobcq::obs::report::stamp(&mut report);
+    let path = std::path::Path::new("BENCH_encode.json");
+    report.to_file(path).expect("write BENCH_encode.json");
+    println!("report written to {}", path.display());
 }

@@ -198,11 +198,11 @@ fn main() {
         }
     }
 
-    let report = Json::obj()
+    let mut report = Json::obj()
         .with("bench", Json::Str("perf_gemm".into()))
-        .with("kernel_backend", Json::Str(backend_name().into()))
         .with("shapes", Json::Arr(shapes_json))
         .with("acceptance", acceptance);
+    lobcq::obs::report::stamp(&mut report);
     let path = std::path::Path::new("BENCH_gemm.json");
     report.to_file(path).expect("write BENCH_gemm.json");
     println!("\nreport written to {}", path.display());

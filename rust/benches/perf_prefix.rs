@@ -175,10 +175,11 @@ fn main() {
         eprintln!("WARNING: warm-hit prefill less than 2x faster than cold on this host");
     }
 
-    let report = Json::obj()
+    let mut report = Json::obj()
         .with("bench", Json::Str("perf_prefix".into()))
         .with("shapes", Json::Arr(shapes_json))
         .with("acceptance", acceptance);
+    lobcq::obs::report::stamp(&mut report);
     let path = std::path::Path::new("BENCH_prefix.json");
     report.to_file(path).expect("write BENCH_prefix.json");
     println!("\nreport written to {}", path.display());

@@ -227,7 +227,7 @@ fn main() {
         eprintln!("WARNING: chunked prefill did not halve the p99 ITL on this host");
     }
 
-    let report = Json::obj()
+    let mut report = Json::obj()
         .with("bench", Json::Str("perf_serving".into()))
         .with(
             "scenario",
@@ -245,6 +245,7 @@ fn main() {
                 .with("p99_itl_chunked_vs_inline", Json::Num(ratio))
                 .with("p99_itl_target", Json::Num(0.5)),
         );
+    lobcq::obs::report::stamp(&mut report);
     let path = std::path::Path::new("BENCH_serving.json");
     report.to_file(path).expect("write BENCH_serving.json");
     println!("report written to {}", path.display());

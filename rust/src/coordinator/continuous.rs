@@ -225,6 +225,8 @@ pub fn run_continuous_opts<E: DecodeEngine + ?Sized>(
             if let Some(m) = metrics {
                 m.record_step_occupancy(step_idx.len());
             }
+            let mut step_span = crate::obs::trace::span("sched", "step");
+            step_span.set_arg(step_idx.len() as u64);
             let t0 = Instant::now();
             let results = engine.decode_batch(&step_lanes, &step_tokens);
             debug_assert_eq!(results.len(), step_idx.len());
@@ -256,6 +258,7 @@ pub fn run_continuous_opts<E: DecodeEngine + ?Sized>(
                             }
                         }
                         Err(e) => {
+                            crate::obs::trace::lifecycle("failed", lane.req.id, 0);
                             deliver(lane.req.id, Err(anyhow::anyhow!("decode failed: {e}")));
                             lane.generated.clear(); // mark dead: the retire loop below
                             finished.push(idx); // releases the lane, delivers nothing
@@ -263,6 +266,7 @@ pub fn run_continuous_opts<E: DecodeEngine + ?Sized>(
                     }
                 }
             }
+            drop(step_span); // bound the step span to the fused engine call
             record_engine_stats(engine, metrics);
         }
         if pressured {
@@ -289,6 +293,8 @@ pub fn run_continuous_opts<E: DecodeEngine + ?Sized>(
             } else {
                 0.0
             };
+            crate::obs::trace::lifecycle("finished", lane.req.id, n as u64);
+            crate::obs::trace::complete("request", "request", lane.req.id, n as u64, lane.req.submitted_at);
             deliver(
                 lane.req.id,
                 Ok(Response {
@@ -317,6 +323,7 @@ fn deliver_shed(
         if let Some(m) = metrics {
             m.record_shed(ShedReason::DeadlineExpired);
         }
+        crate::obs::trace::lifecycle("shed-deadline", r.id, 0);
         deliver(r.id, Err(ShedError { id: r.id, reason: ShedReason::DeadlineExpired }.into()));
     }
 }
@@ -355,6 +362,11 @@ fn relieve_kv_pressure<E: DecodeEngine + ?Sized>(
         };
         let lane = active.remove(idx);
         engine.release(lane.lane);
+        crate::obs::trace::lifecycle(
+            if deferred { "deferred" } else { "preempted" },
+            lane.req.id,
+            lane.generated.len() as u64,
+        );
         batcher.push_front(lane.req);
         *admission_paused = true;
         if let Some(m) = metrics {
@@ -371,6 +383,7 @@ fn relieve_kv_pressure<E: DecodeEngine + ?Sized>(
         if let Some(m) = metrics {
             m.record_shed(ShedReason::KvPressure);
         }
+        crate::obs::trace::lifecycle("shed-kv", lane.req.id, 0);
         deliver(lane.req.id, Err(ShedError { id: lane.req.id, reason: ShedReason::KvPressure }.into()));
     }
 }
@@ -419,11 +432,13 @@ fn advance_prefill<E: DecodeEngine + ?Sized>(
     let t0 = Instant::now();
     let lane = &mut active[idx];
     match engine.prefill_chunk(lane.lane, &lane.req.prompt, chunk) {
-        Ok(PrefillProgress::Pending { .. }) => {
+        Ok(PrefillProgress::Pending { done }) => {
+            crate::obs::trace::lifecycle("chunked", lane.req.id, done as u64);
             lane.decode_us += t0.elapsed().as_secs_f64() * 1e6;
             false
         }
         Ok(PrefillProgress::Done(logits)) => {
+            crate::obs::trace::lifecycle("staged", lane.req.id, lane.req.prompt.len() as u64);
             lane.decode_us += t0.elapsed().as_secs_f64() * 1e6;
             let now = Instant::now();
             lane.first_token_at = now;
@@ -439,6 +454,7 @@ fn advance_prefill<E: DecodeEngine + ?Sized>(
             }
             let lane = active.remove(idx);
             engine.release(lane.lane);
+            crate::obs::trace::lifecycle("failed", lane.req.id, 0);
             deliver(lane.req.id, Err(anyhow::anyhow!("prefill failed: {e}")));
             false
         }
@@ -457,6 +473,9 @@ fn record_engine_stats<E: DecodeEngine + ?Sized>(engine: &E, metrics: Option<&Se
     if let Some(ps) = engine.prefix_stats() {
         m.record_prefix_stats(ps);
     }
+    if let Some((hits, decodes)) = engine.panel_stats() {
+        m.record_panel_stats(hits, decodes);
+    }
 }
 
 fn admit<E: DecodeEngine + ?Sized>(
@@ -471,6 +490,9 @@ fn admit<E: DecodeEngine + ?Sized>(
     // prompt + n - 1; cap the budget at the engine's lane capacity.
     let cap = engine.max_tokens().saturating_sub(req.prompt.len()) + 1;
     let budget = req.max_new.min(cap).max(1);
+    // A deferred/preempted request re-admits: it may log "admitted"
+    // more than once, but still reaches exactly one terminal event.
+    crate::obs::trace::lifecycle("admitted", req.id, req.prompt.len() as u64);
     match engine.begin_prefill(&req.prompt) {
         Ok(lane) => {
             *admit_seq += 1;
@@ -488,7 +510,10 @@ fn admit<E: DecodeEngine + ?Sized>(
                 max_batch_seen: 0,
             });
         }
-        Err(e) => deliver(req.id, Err(anyhow::anyhow!("prefill failed: {e}"))),
+        Err(e) => {
+            crate::obs::trace::lifecycle("failed", req.id, 0);
+            deliver(req.id, Err(anyhow::anyhow!("prefill failed: {e}")));
+        }
     }
 }
 

@@ -18,6 +18,7 @@
 use super::request::{Priority, Response, ShedReason};
 use crate::kvcache::KvStats;
 use crate::prefixcache::PrefixStats;
+use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -42,6 +43,9 @@ struct Inner {
     kv: Option<KvStats>,
     /// Latest prefix-cache snapshot (counters are cumulative inside it).
     prefix: Option<PrefixStats>,
+    /// Latest decoded-panel cache counters `(hits, decodes)` from the
+    /// encoded-attention fast path (cumulative inside the cache).
+    panel: Option<(u64, u64)>,
     // SLO counters: every admitted-then-displaced fate is counted, so
     // (responses + sheds) reconciles against accepted admissions.
     /// Pushes rejected at the admission cap (`QueueFull`).
@@ -89,6 +93,7 @@ impl ServerMetrics {
                 occupancy: Vec::new(),
                 kv: None,
                 prefix: None,
+                panel: None,
                 rejected: 0,
                 shed_deadline: 0,
                 shed_kv: 0,
@@ -127,6 +132,12 @@ impl ServerMetrics {
     /// cumulative inside it, so the most recent one is lossless).
     pub fn record_prefix_stats(&self, stats: PrefixStats) {
         self.inner.lock().unwrap().prefix = Some(stats);
+    }
+
+    /// Latest decoded-panel cache counters (cumulative `hits` out of
+    /// `decodes` panel fetches; the most recent pair is lossless).
+    pub fn record_panel_stats(&self, hits: u64, decodes: u64) {
+        self.inner.lock().unwrap().panel = Some((hits, decodes));
     }
 
     pub fn record_response(&self, resp: &Response) {
@@ -182,6 +193,9 @@ impl ServerMetrics {
         g.queue_depth_max = g.queue_depth_max.max(depth);
     }
 
+    /// Side effect: the snapshot is also published to the global metrics
+    /// registry (section `server`), so `--metrics-out` and bench stamps
+    /// see the latest serving state without a second wiring path.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         let elapsed = g.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
@@ -208,7 +222,7 @@ impl ServerMetrics {
                 itl_p99_us: g.itl_by_prio[i].percentile_us(99.0),
             }
         });
-        MetricsSnapshot {
+        let snap = MetricsSnapshot {
             occupancy_hist: g
                 .occupancy
                 .iter()
@@ -219,6 +233,7 @@ impl ServerMetrics {
             mean_occupancy,
             kv: g.kv,
             prefix: g.prefix,
+            panel: g.panel,
             rejected: g.rejected,
             shed_deadline: g.shed_deadline,
             shed_kv: g.shed_kv,
@@ -246,7 +261,9 @@ impl ServerMetrics {
             total_p95_us: g.total.percentile_us(95.0),
             total_p99_us: g.total.percentile_us(99.0),
             mean_batch,
-        }
+        };
+        crate::obs::registry::publish("server", snap.to_json());
+        snap
     }
 }
 
@@ -271,6 +288,9 @@ pub struct MetricsSnapshot {
     /// Latest prefix-cache counters (continuous engine with the prefix
     /// cache on).
     pub prefix: Option<PrefixStats>,
+    /// Decoded-panel cache `(hits, decodes)` — encoded-attention engines
+    /// only.
+    pub panel: Option<(u64, u64)>,
     /// Pushes rejected at the admission cap.
     pub rejected: u64,
     /// Requests shed for a queue-expired deadline.
@@ -352,6 +372,16 @@ impl MetricsSnapshot {
                 p.resident_chunks
             ));
         }
+        if let Some((hits, decodes)) = self.panel {
+            if decodes > 0 {
+                s.push_str(&format!(
+                    " | panel hits={}/{} ({:.0}%)",
+                    hits,
+                    decodes,
+                    100.0 * hits as f64 / decodes as f64
+                ));
+            }
+        }
         if self.rejected + self.shed_deadline + self.shed_kv + self.deferred + self.preempted > 0
             || self.queue_depth_max > 0
         {
@@ -379,6 +409,104 @@ impl MetricsSnapshot {
             }
         }
         s
+    }
+
+    /// Machine-readable form of the snapshot for `--metrics-out` and the
+    /// bench reports; field names mirror the struct, nested sections for
+    /// the optional cache stats.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("requests", Json::Num(self.requests as f64));
+        j.set("tokens", Json::Num(self.tokens as f64));
+        j.set("tokens_per_s", Json::Num(self.tokens_per_s));
+        let mut lat = Json::obj();
+        lat.set("queue_p50_us", Json::Num(self.queue_p50_us));
+        lat.set("queue_p99_us", Json::Num(self.queue_p99_us));
+        lat.set("exec_p50_us", Json::Num(self.exec_p50_us));
+        lat.set("exec_p99_us", Json::Num(self.exec_p99_us));
+        lat.set("ttft_p50_us", Json::Num(self.ttft_p50_us));
+        lat.set("ttft_p99_us", Json::Num(self.ttft_p99_us));
+        lat.set("itl_p50_us", Json::Num(self.itl_p50_us));
+        lat.set("itl_p99_us", Json::Num(self.itl_p99_us));
+        lat.set("total_p50_us", Json::Num(self.total_p50_us));
+        lat.set("total_p95_us", Json::Num(self.total_p95_us));
+        lat.set("total_p99_us", Json::Num(self.total_p99_us));
+        j.set("latency", lat);
+        let mut occ = Json::obj();
+        occ.set("mean", Json::Num(self.mean_occupancy));
+        occ.set("mean_batch", Json::Num(self.mean_batch));
+        occ.set(
+            "hist",
+            Json::Arr(
+                self.occupancy_hist
+                    .iter()
+                    .map(|&(lanes, steps)| {
+                        Json::obj()
+                            .with("lanes", Json::Num(lanes as f64))
+                            .with("steps", Json::Num(steps as f64))
+                    })
+                    .collect(),
+            ),
+        );
+        j.set("occupancy", occ);
+        let mut adm = Json::obj();
+        adm.set("rejected", Json::Num(self.rejected as f64));
+        adm.set("shed_deadline", Json::Num(self.shed_deadline as f64));
+        adm.set("shed_kv", Json::Num(self.shed_kv as f64));
+        adm.set("deferred", Json::Num(self.deferred as f64));
+        adm.set("preempted", Json::Num(self.preempted as f64));
+        adm.set("queue_depth_mean", Json::Num(self.queue_depth_mean));
+        adm.set("queue_depth_max", Json::Num(self.queue_depth_max as f64));
+        j.set("admission", adm);
+        if let Some(kv) = &self.kv {
+            let mut k = Json::obj();
+            k.set("live_slots", Json::Num(kv.live_slots as f64));
+            k.set("pages_in_use", Json::Num(kv.pages_in_use as f64));
+            k.set("pages_peak", Json::Num(kv.pages_peak as f64));
+            k.set("pages_capacity", Json::Num(kv.pages_capacity as f64));
+            if let Some(b) = kv.pages_budget {
+                k.set("pages_budget", Json::Num(b as f64));
+            }
+            k.set("state_bytes", Json::Num(kv.state_bytes as f64));
+            k.set("peak_bytes", Json::Num(kv.peak_bytes as f64));
+            j.set("kv", k);
+        }
+        if let Some(p) = &self.prefix {
+            let mut pj = Json::obj();
+            pj.set("lookups", Json::Num(p.lookups as f64));
+            pj.set("hits", Json::Num(p.hits as f64));
+            pj.set("hit_rate", Json::Num(p.hit_rate()));
+            pj.set("saved_tokens", Json::Num(p.saved_tokens as f64));
+            pj.set("published_chunks", Json::Num(p.published_chunks as f64));
+            pj.set("evicted_bytes", Json::Num(p.evicted_bytes as f64));
+            pj.set("resident_bytes", Json::Num(p.resident_bytes as f64));
+            pj.set("resident_chunks", Json::Num(p.resident_chunks as f64));
+            j.set("prefix", pj);
+        }
+        if let Some((hits, decodes)) = self.panel {
+            let mut pj = Json::obj();
+            pj.set("hits", Json::Num(hits as f64));
+            pj.set("decodes", Json::Num(decodes as f64));
+            j.set("panel", pj);
+        }
+        j.set(
+            "by_priority",
+            Json::Arr(
+                self.by_priority
+                    .iter()
+                    .map(|p| {
+                        Json::obj()
+                            .with("class", Json::Str(p.class.to_string()))
+                            .with("requests", Json::Num(p.requests as f64))
+                            .with("ttft_p50_us", Json::Num(p.ttft_p50_us))
+                            .with("ttft_p99_us", Json::Num(p.ttft_p99_us))
+                            .with("itl_p50_us", Json::Num(p.itl_p50_us))
+                            .with("itl_p99_us", Json::Num(p.itl_p99_us))
+                    })
+                    .collect(),
+            ),
+        );
+        j
     }
 }
 
@@ -483,6 +611,29 @@ mod tests {
         assert!(r.contains("shed-deadline=2") && r.contains("shed-kv=1"), "{r}");
         assert!(r.contains("queue-depth mean=5.00 max=7"), "{r}");
         assert!(r.contains("high: n=1") && r.contains("normal: n=1"), "{r}");
+    }
+
+    #[test]
+    fn panel_stats_and_json_snapshot() {
+        let m = ServerMetrics::new();
+        assert!(m.snapshot().panel.is_none());
+        assert!(!m.snapshot().report().contains("panel"), "panel line printed with no panel cache");
+        m.record_panel_stats(30, 40);
+        m.record_step_occupancy(2);
+        m.record_rejected();
+        m.record_response(&resp(4, 10.0, 50.0, 200.0, 30.0, 300.0, 2));
+        let s = m.snapshot();
+        assert_eq!(s.panel, Some((30, 40)));
+        assert!(s.report().contains("panel hits=30/40 (75%)"), "{}", s.report());
+        // The JSON snapshot must round-trip through the parser and carry
+        // every section the trace validator looks for.
+        let j = crate::util::json::Json::parse(&s.to_json().to_string_compact()).unwrap();
+        assert_eq!(j.get("requests").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(j.get("admission").unwrap().get("rejected").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(j.get("panel").unwrap().get("hits").unwrap().as_u64().unwrap(), 30);
+        assert_eq!(j.get("occupancy").unwrap().get("hist").unwrap().as_arr().unwrap().len(), 1);
+        assert!(j.get("latency").unwrap().get("ttft_p50_us").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.opt("kv").is_none() && j.opt("prefix").is_none());
     }
 
     #[test]

@@ -102,6 +102,12 @@ pub trait DecodeEngine: Send {
     fn prefix_stats(&self) -> Option<PrefixStats> {
         None
     }
+    /// Decoded-panel cache counters `(hits, decodes)` from the
+    /// encoded-attention fast path; `None` when the engine has no panel
+    /// cache (mocks, gather-only engines).
+    fn panel_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 /// KV-cache configuration for [`DecodeSession`].
@@ -441,6 +447,11 @@ impl DecodeEngine for DecodeSession {
 
     fn prefix_stats(&self) -> Option<PrefixStats> {
         self.prefix.as_ref().map(|t| t.stats())
+    }
+
+    fn panel_stats(&self) -> Option<(u64, u64)> {
+        let p = self.scratch.panel_cache();
+        Some((p.hit_count(), p.decode_count()))
     }
 }
 

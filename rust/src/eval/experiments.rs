@@ -63,7 +63,7 @@ pub fn bench_entry(id: &str) {
             println!("[{id}] completed in {:.2}s (quick={quick})", t0.elapsed().as_secs_f64());
         }
         Err(e) => {
-            eprintln!("[{id}] FAILED: {e:#}");
+            crate::log_error!("[{id}] FAILED: {e:#}");
             std::process::exit(1);
         }
     }

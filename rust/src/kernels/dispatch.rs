@@ -96,23 +96,36 @@ fn force_scalar(val: Option<&str>) -> bool {
 }
 
 /// The backend every default GEMM entry point uses: best supported ISA,
-/// probed once per process, honoring `LOBCQ_FORCE_SCALAR=1`.
+/// probed once per process, honoring `LOBCQ_FORCE_SCALAR=1`. The picked
+/// backend is published to the metrics registry at resolution time, so
+/// every `--metrics-out` snapshot and bench stamp records which ISA the
+/// numbers came from.
 pub fn active_backend() -> KernelBackend {
     static ACTIVE: OnceLock<KernelBackend> = OnceLock::new();
     *ACTIVE.get_or_init(|| {
-        if force_scalar(std::env::var("LOBCQ_FORCE_SCALAR").ok().as_deref()) {
-            return KernelBackend::Scalar;
-        }
-        #[cfg(target_arch = "x86_64")]
-        if KernelBackend::Avx2.supported() {
-            return KernelBackend::Avx2;
-        }
-        #[cfg(target_arch = "aarch64")]
-        if KernelBackend::Neon.supported() {
-            return KernelBackend::Neon;
-        }
-        KernelBackend::Scalar
+        let picked = detect_backend();
+        use crate::util::json::Json;
+        crate::obs::registry::publish(
+            "kernel",
+            Json::obj().with("backend", Json::Str(picked.name().into())),
+        );
+        picked
     })
+}
+
+fn detect_backend() -> KernelBackend {
+    if force_scalar(std::env::var("LOBCQ_FORCE_SCALAR").ok().as_deref()) {
+        return KernelBackend::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if KernelBackend::Avx2.supported() {
+        return KernelBackend::Avx2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if KernelBackend::Neon.supported() {
+        return KernelBackend::Neon;
+    }
+    KernelBackend::Scalar
 }
 
 /// Name of the active backend, for the serve summary and bench JSON.

@@ -132,6 +132,13 @@ impl KvQuantizer {
         // `quantize_arrays_into` computes for a [1, head_dim] tensor).
         let eff = tensor_scale(v, &self.cfg);
         invs.push(1.0 / eff);
+        // Sampled encode telemetry (obs::quant_stats): reconstruction
+        // NMSE plus selector occupancy, accumulated in stack locals and
+        // recorded under one lock after the vector. Read-only on the
+        // bit-streams; one relaxed load when telemetry is off.
+        let sampled = crate::obs::quant_stats::sample_kv();
+        let mut sum_err = 0.0f64;
+        let mut sel_counts = [0u64; 16];
         let mut norm = [0.0f32; 8];
         for block in v.chunks_exact(lb) {
             let nb = &mut norm[..lb];
@@ -143,9 +150,29 @@ impl KvQuantizer {
                 sels.push(sel as u32, sel_bits);
             }
             let book = &self.family.books[sel];
-            for &x in nb.iter() {
-                codes.push(book.encode(x) as u32, b);
+            if sampled {
+                sel_counts[sel.min(15)] += 1;
+                for (&x, &orig) in nb.iter().zip(block) {
+                    let code = book.encode(x);
+                    codes.push(code as u32, b);
+                    let recon = book.decode(code) / eff;
+                    let d = orig as f64 - recon as f64;
+                    sum_err += d * d;
+                }
+            } else {
+                for &x in nb.iter() {
+                    codes.push(book.encode(x) as u32, b);
+                }
             }
+        }
+        if sampled {
+            let nc = self.cfg.nc.min(sel_counts.len());
+            crate::obs::quant_stats::record_kv(
+                sum_err,
+                crate::util::stats::sum_sq(v),
+                v.len() as u64,
+                &sel_counts[..nc],
+            );
         }
     }
 

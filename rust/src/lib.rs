@@ -38,6 +38,7 @@
 )]
 
 pub mod formats;
+pub mod obs;
 pub mod tensor;
 pub mod util;
 pub mod kernels;

@@ -19,11 +19,15 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 fn main() {
+    // Env-gated observability (`--trace`/`--metrics-out` enable the same
+    // flags explicitly later; both paths are one relaxed load when off).
+    lobcq::obs::trace::init_from_env();
+    lobcq::obs::quant_stats::init_from_env();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match dispatch(&argv) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            lobcq::log_error!("error: {e:#}");
             1
         }
     };
@@ -198,12 +202,22 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
         OptSpec { name: "deadline-ms", help: "per-request deadline; requests still queued past it are shed (0 = none)", takes_value: true, default: Some("0") },
         OptSpec { name: "kv-pages", help: "KV page budget across all lanes; pressure degrades evict->defer->preempt (0 = unbounded)", takes_value: true, default: Some("0") },
         OptSpec { name: "workers", help: "quantization worker threads (0 = all cores)", takes_value: true, default: Some("0") },
+        OptSpec { name: "trace", help: "write a Chrome-trace JSON (plus <stem>.events.jsonl lifecycle log) to this path", takes_value: true, default: None },
+        OptSpec { name: "metrics-out", help: "write a JSON metrics + quant-telemetry snapshot to this path", takes_value: true, default: None },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
     let args = Args::parse(argv, &specs)?;
     if args.flag("help") {
         println!("{}", render_help("serve-cpu", "serve via the CPU decode engine + quant pipeline", &specs));
         return Ok(());
+    }
+    let trace_path = args.opt("trace").map(PathBuf::from);
+    let metrics_out = args.opt("metrics-out").map(PathBuf::from);
+    if trace_path.is_some() {
+        lobcq::obs::trace::enable();
+    }
+    if trace_path.is_some() || metrics_out.is_some() {
+        lobcq::obs::quant_stats::enable();
     }
     let env = Env::load_from(PathBuf::from(args.str_or("artifacts", "artifacts")));
     let n_requests = args.usize_or("requests", 32)?;
@@ -329,7 +343,7 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
         // The shared prefix must span one whole page to ever be
         // published/adopted; with this page size and prompt limit it
         // can't, so the run would report 0% hits by construction.
-        println!(
+        lobcq::log_warn!(
             "[serve-cpu] WARNING: --page-tokens {page_tokens} exceeds the {prefix_len}-token shared \
              prefix that fits max_prompt {t}; the prefix cache cannot get hits at this page size"
         );
@@ -359,9 +373,33 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     println!("[serve-cpu] {ok}/{n_requests} ok in {wall:.2}s");
-    println!("[serve-cpu] {}", server.metrics.snapshot().report());
+    let snapshot = server.metrics.snapshot();
+    println!("[serve-cpu] {}", snapshot.report());
     if let Ok(s) = std::sync::Arc::try_unwrap(server) {
+        // Joins the scheduler thread, which flushes its trace ring.
         s.shutdown();
+    }
+    if let Some(path) = &metrics_out {
+        let mut j = Json::obj();
+        j.set("server", snapshot.to_json());
+        j.set("quant", lobcq::obs::quant_stats::snapshot_json());
+        j.set("registry", lobcq::obs::registry::snapshot());
+        j.set("kernel_backend", Json::Str(lobcq::kernels::backend_name().into()));
+        j.set("system", lobcq::obs::report::system_info());
+        j.to_file(path)?;
+        println!("[serve-cpu] metrics written to {}", path.display());
+    }
+    if let Some(path) = &trace_path {
+        let events = lobcq::obs::trace::drain();
+        lobcq::obs::trace::export_chrome_trace(path, &events)?;
+        let jsonl = lobcq::obs::trace::lifecycle_path(path);
+        lobcq::obs::trace::export_lifecycle_jsonl(&jsonl, &events)?;
+        println!(
+            "[serve-cpu] trace: {} events to {} (lifecycle log {})",
+            events.len(),
+            path.display(),
+            jsonl.display()
+        );
     }
     Ok(())
 }

@@ -167,6 +167,12 @@ impl DecodeScratch {
         self.attn_path = path;
     }
 
+    /// The per-page decoded-panel cache — read-only metrics surface
+    /// (hit/decode counters, resident bytes).
+    pub fn panel_cache(&self) -> &KvPanelCache {
+        &self.panels
+    }
+
     /// Total f32/usize capacity (in elements) held across every
     /// per-step scratch buffer. Constant across steps once the working
     /// set is reached — any hidden steady-state allocation in the
@@ -273,6 +279,7 @@ fn embed_rows(
 /// LN1(x) → one fused QKV projection over `m` stacked rows into
 /// `s.qkv` (`(m, 3d)`).
 fn layer_qkv(w: &Weights, s: &mut DecodeScratch, li: usize, m: usize, d: usize, act_q: ActQuant) -> anyhow::Result<()> {
+    let _span = crate::obs::trace::span_id("op", "qkv", li as u64);
     s.h.clear();
     s.h.extend_from_slice(&s.x);
     layer_norm_flat(&mut s.h, d, w.get(&s.names[li].ln1_g)?, w.get(&s.names[li].ln1_b)?, 1e-5);
@@ -282,6 +289,7 @@ fn layer_qkv(w: &Weights, s: &mut DecodeScratch, li: usize, m: usize, d: usize, 
 
 /// Output projection of the attention block + residual add into `x`.
 fn layer_wo_residual(w: &Weights, s: &mut DecodeScratch, li: usize, m: usize, d: usize, act_q: ActQuant) -> anyhow::Result<()> {
+    let _span = crate::obs::trace::span_id("op", "wo", li as u64);
     qmatmul_rows_into(w, &s.names[li].wo, &s.attn, m, d, act_q, &mut s.proj, &mut s.aq, &mut s.panel)?;
     for (xv, pv) in s.x.iter_mut().zip(&s.proj) {
         *xv += pv;
@@ -291,6 +299,7 @@ fn layer_wo_residual(w: &Weights, s: &mut DecodeScratch, li: usize, m: usize, d:
 
 /// MLP block over `m` stacked rows: LN2 → W1 → GELU → W2 + residual.
 fn layer_mlp(w: &Weights, s: &mut DecodeScratch, li: usize, m: usize, d: usize, act_q: ActQuant) -> anyhow::Result<()> {
+    let _span = crate::obs::trace::span_id("op", "mlp", li as u64);
     s.h.clear();
     s.h.extend_from_slice(&s.x);
     layer_norm_flat(&mut s.h, d, w.get(&s.names[li].ln2_g)?, w.get(&s.names[li].ln2_b)?, 1e-5);
@@ -308,6 +317,7 @@ fn layer_mlp(w: &Weights, s: &mut DecodeScratch, li: usize, m: usize, d: usize, 
 /// samples frontier rows, so the vocab GEMM never runs on a row nobody
 /// reads.
 fn lm_head(cfg: &ModelConfig, w: &Weights, s: &mut DecodeScratch, row0: usize, rows: usize) -> anyhow::Result<()> {
+    let _span = crate::obs::trace::span("op", "lm_head");
     let d = cfg.d;
     layer_norm_flat(&mut s.x, d, w.get("lnf.g")?, w.get("lnf.b")?, 1e-5);
     let head = w.packed_transposed("embed")?;
@@ -474,6 +484,8 @@ pub fn prefill_from(
     }
     let (d, hd) = (cfg.d, cfg.head_dim());
     let m = tokens.len() - offset;
+    let mut prefill_span = crate::obs::trace::span_id("model", "prefill_chunk", slot as u64);
+    prefill_span.set_arg(m as u64);
     let scale = 1.0 / (hd as f32).sqrt();
     // Reserve the whole chunk's pages up front: a KV-page shortfall must
     // surface as a typed KvPressure error *before* any layer appends, so
@@ -490,6 +502,7 @@ pub fn prefill_from(
     scratch.acc.resize(hd, 0.0);
     scratch.ensure_names(cfg.n_layers);
     for li in 0..cfg.n_layers {
+        let _layer_span = crate::obs::trace::span_id("layer", "layer", li as u64);
         // --- attention block: one fused QKV GEMM over the suffix, then
         // append every row's K/V before attending, so one history
         // resolve per head serves all suffix rows (row r reads its
@@ -500,6 +513,7 @@ pub fn prefill_from(
             cache.append(slot, li, &row[d..2 * d], &row[2 * d..3 * d])?;
         }
         scratch.attn.resize(m * d, 0.0);
+        let attn_span = crate::obs::trace::span_id("op", "attn", li as u64);
         for head in 0..cfg.n_heads {
             let off = head * hd;
             let len = resolve_head(cache, scratch, slot, li, head);
@@ -509,6 +523,7 @@ pub fn prefill_from(
                 attend_span(scratch, pt, hd, n, r * 3 * d + off, r * d + off, scale);
             }
         }
+        drop(attn_span);
         layer_wo_residual(w, scratch, li, m, d, act_q)?;
         layer_mlp(w, scratch, li, m, d, act_q)?;
     }
@@ -577,16 +592,19 @@ pub fn decode_step(
     scratch.acc.resize(hd, 0.0);
     scratch.ensure_names(cfg.n_layers);
     for li in 0..cfg.n_layers {
+        let _layer_span = crate::obs::trace::span_id("layer", "layer", li as u64);
         // --- attention block ---
         layer_qkv(w, scratch, li, 1, d, act_q)?;
         let n = cache.append(slot, li, &scratch.qkv[d..2 * d], &scratch.qkv[2 * d..3 * d])?;
         scratch.attn.resize(d, 0.0);
+        let attn_span = crate::obs::trace::span_id("op", "attn", li as u64);
         for head in 0..cfg.n_heads {
             let off = head * hd;
             let len = resolve_head(cache, scratch, slot, li, head);
             debug_assert_eq!(len, n);
             attend_span(scratch, pt, hd, n, off, off, scale);
         }
+        drop(attn_span);
         layer_wo_residual(w, scratch, li, 1, d, act_q)?;
         layer_mlp(w, scratch, li, 1, d, act_q)?;
     }
@@ -627,6 +645,8 @@ pub fn decode_step_batch<'s>(
     let lanes = slots.len();
     anyhow::ensure!(lanes >= 1, "decode_step_batch with no lanes");
     anyhow::ensure!(tokens.len() == lanes, "{} tokens for {lanes} lanes", tokens.len());
+    let mut step_span = crate::obs::trace::span("model", "decode_step");
+    step_span.set_arg(lanes as u64);
     let (d, hd) = (cfg.d, cfg.head_dim());
     let lay = cache.layout();
     let pt = lay.page_tokens;
@@ -655,10 +675,12 @@ pub fn decode_step_batch<'s>(
     scratch.acc.resize(hd, 0.0);
     scratch.ensure_names(cfg.n_layers);
     for li in 0..cfg.n_layers {
+        let _layer_span = crate::obs::trace::span_id("layer", "layer", li as u64);
         // --- attention block: one fused QKV GEMM, per-lane attention ---
         layer_qkv(w, scratch, li, lanes, d, act_q)?;
         cache.append_batch(slots, li, &scratch.qkv, 3 * d, d, 2 * d)?;
         scratch.attn.resize(lanes * d, 0.0);
+        let attn_span = crate::obs::trace::span_id("op", "attn", li as u64);
         for i in 0..lanes {
             let n = scratch.pos[i] + 1; // this lane's attention span
             let qbase = i * 3 * d;
@@ -669,6 +691,7 @@ pub fn decode_step_batch<'s>(
                 attend_span(scratch, pt, hd, n, qbase + off, i * d + off, scale);
             }
         }
+        drop(attn_span);
         layer_wo_residual(w, scratch, li, lanes, d, act_q)?;
         layer_mlp(w, scratch, li, lanes, d, act_q)?;
     }

@@ -79,6 +79,9 @@ pub(crate) fn qmatmul(x: &Tensor, w: &Weights, name: &str, act_q: ActQuant) -> a
         None => run(x),
         Some(pipe) => {
             let xq = Tensor::new(&x.shape, pipe.quantize_pooled(&x.data));
+            if crate::obs::quant_stats::sample_act() {
+                crate::obs::quant_stats::record_act(name, &x.data, &xq.data);
+            }
             let out = run(&xq);
             pipe.recycle(xq.data);
             out
@@ -122,6 +125,11 @@ pub(crate) fn qmatmul_rows_into(
             aq.resize(m * k, 0.0);
             for (sr, dr) in x.chunks_exact(k).zip(aq.chunks_exact_mut(k)) {
                 pipe.quantize_into(sr, dr);
+                // Sampled NMSE telemetry; read-only on the numerics and
+                // one relaxed load when telemetry is off.
+                if crate::obs::quant_stats::sample_act() {
+                    crate::obs::quant_stats::record_act(name, sr, dr);
+                }
             }
             &aq[..]
         }

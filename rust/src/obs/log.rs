@@ -1,0 +1,135 @@
+//! Leveled structured logging (`LOBCQ_LOG=error|warn|info|debug`).
+//!
+//! Replaces the ad-hoc `eprintln!` calls scattered through `main.rs`,
+//! `runtime/manifest.rs`, and `eval/experiments.rs`. The default level
+//! is `warn`, and warn/error lines print their message verbatim —
+//! exactly what the old `eprintln!`s emitted — so default output is
+//! stable; `info`/`debug` add a `[level]` prefix since they only appear
+//! when explicitly opted into.
+//!
+//! Use through the crate-root macros:
+//!
+//! ```ignore
+//! crate::log_warn!("KV pressure: {} pages free", free);
+//! lobcq::log_info!("loaded manifest from {}", path.display());
+//! ```
+
+use std::sync::OnceLock;
+
+/// Log severity, ordered most- to least-severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// Active level: `LOBCQ_LOG` read once, default [`Level::Warn`].
+pub fn max_level() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        std::env::var("LOBCQ_LOG")
+            .ok()
+            .as_deref()
+            .and_then(Level::parse)
+            .unwrap_or(Level::Warn)
+    })
+}
+
+/// Whether a message at `level` would be emitted.
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level <= max_level()
+}
+
+/// Sink for the macros; prefer `log_warn!` & co. over calling this.
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    match level {
+        // Verbatim: these existed as bare eprintln!s before the logger.
+        Level::Error | Level::Warn => eprintln!("{args}"),
+        Level::Info => eprintln!("[info] {args}"),
+        Level::Debug => eprintln!("[debug] {args}"),
+    }
+}
+
+/// Log at error level (always emitted).
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Error, format_args!($($arg)*))
+    };
+}
+
+/// Log at warn level (emitted by default).
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+/// Log at info level (`LOBCQ_LOG=info`).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Info, format_args!($($arg)*))
+    };
+}
+
+/// Log at debug level (`LOBCQ_LOG=debug`).
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_matches_severity() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn parse_accepts_aliases_and_rejects_junk() {
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("verbose"), None);
+    }
+
+    #[test]
+    fn default_level_emits_warn_not_info() {
+        // LOBCQ_LOG is unset in the test environment.
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn) == (max_level() >= Level::Warn));
+        if max_level() == Level::Warn {
+            assert!(!enabled(Level::Info));
+            assert!(!enabled(Level::Debug));
+        }
+        // Macros expand and run without panicking at any level.
+        crate::log_debug!("debug {}", 1);
+        crate::log_info!("info {}", 2);
+    }
+}

@@ -1,0 +1,35 @@
+//! End-to-end observability (DESIGN.md §Observability).
+//!
+//! Zero-dependency measurement substrate with three pillars, all built
+//! on the same rule: **when nothing is watching, the serving path pays
+//! one relaxed atomic load per probe site and allocates nothing.**
+//!
+//! - [`trace`] — hierarchical span tracing (request → scheduler step →
+//!   per-layer → GEMM/attention/act-quant) recorded into per-thread
+//!   ring buffers through an RAII guard, exported as Chrome-trace JSON
+//!   (`chrome://tracing`, Perfetto) plus a JSONL request-lifecycle
+//!   event log that makes the SLO ladder (admitted → chunked → staged →
+//!   deferred/preempted/shed → finished) visible per request. Gated by
+//!   `--trace <path>` or `LOBCQ_TRACE`.
+//! - [`registry`] — a typed counter/gauge/histogram registry plus
+//!   published JSON sections; one [`registry::Registry::snapshot`]
+//!   feeds `--metrics-out` and the bench report stamps, replacing the
+//!   scattered per-subsystem stat structs as the *export* surface
+//!   (the structs remain the collection surface).
+//! - [`quant_stats`] — sampled LO-BCQ quantization-error telemetry:
+//!   per-layer activation-quant NMSE at every GEMM input, KV-cache
+//!   encode NMSE, and codebook-selector occupancy histograms, so
+//!   accuracy drift is observable in serving rather than only in
+//!   offline perplexity runs.
+//!
+//! [`log`] is the leveled structured logger (`LOBCQ_LOG=warn|info|debug`,
+//! default `warn`) behind the crate-level `log_error!`/`log_warn!`/
+//! `log_info!`/`log_debug!` macros, and [`report`] stamps every
+//! `BENCH_*.json` with system info, the active kernel backend, the git
+//! revision, and a metrics-registry snapshot.
+
+pub mod log;
+pub mod quant_stats;
+pub mod registry;
+pub mod report;
+pub mod trace;

@@ -1,0 +1,247 @@
+//! Sampled LO-BCQ quantization-error telemetry (DESIGN.md
+//! §Observability).
+//!
+//! The paper's objective is per-cluster quantization MSE (the Fig. 5
+//! loop), and layer-wise error breakdowns are the standard diagnostic
+//! for W&A quantization — yet a serving run otherwise records no error
+//! signal at all. This module samples three series during serving:
+//!
+//! - **Activation-quant NMSE per GEMM input**, keyed by the weight name
+//!   the activation feeds (`l3.attn.wqkv`, `l3.mlp.w1`, ...), so the
+//!   per-layer / per-op table in EXPERIMENTS.md comes straight out of a
+//!   snapshot. Hooked in `model::forward::qmatmul_rows_into` /
+//!   `qmatmul` right after `QuantPipeline::quantize_into` — reference
+//!   and quantized rows are both in hand there, so the hook is
+//!   read-only on the numerics.
+//! - **KV-cache encode NMSE**, hooked in `KvQuantizer::encode_vector`:
+//!   a sampled vector additionally decodes each codeword it just chose
+//!   (`book.decode(code) / eff`) to accumulate reconstruction error.
+//!   The encoded bit-streams are untouched.
+//! - **Codebook-selector occupancy**: how often each of the `N_c`
+//!   codebooks wins eq. 4 on sampled KV vectors. A dead or dominant
+//!   codebook is the first sign the frozen calibration no longer fits
+//!   the serving distribution.
+//!
+//! Sampling policy: 1-in-[`ACT_SAMPLE_EVERY`] GEMM-input rows and
+//! 1-in-[`KV_SAMPLE_EVERY`] KV vectors, via relaxed atomic tick
+//! counters — cheap enough to leave on for whole serving runs, and the
+//! NMSE ratio is scale-free so sparse sampling stays unbiased. Gated by
+//! its own flag ([`enable`], `LOBCQ_QUANT_STATS`, or `--metrics-out`):
+//! the disabled path is one relaxed load, and nothing allocates unless
+//! a sample fires.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Record one of every this many quantized GEMM-input rows.
+pub const ACT_SAMPLE_EVERY: u64 = 16;
+/// Record one of every this many KV vector encodes.
+pub const KV_SAMPLE_EVERY: u64 = 8;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ACT_TICK: AtomicU64 = AtomicU64::new(0);
+static KV_TICK: AtomicU64 = AtomicU64::new(0);
+
+/// Whether telemetry is on — one relaxed load, the entire disabled cost.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn telemetry on (`--metrics-out` does this in `main`).
+pub fn enable() {
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn telemetry off (tests, overhead benches).
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// `LOBCQ_QUANT_STATS` set to a non-empty, non-`0` value enables.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("LOBCQ_QUANT_STATS") {
+        if !v.is_empty() && v != "0" {
+            enable();
+        }
+    }
+}
+
+/// Should this GEMM-input row be sampled? One branch when disabled.
+#[inline]
+pub fn sample_act() -> bool {
+    enabled() && ACT_TICK.fetch_add(1, Ordering::Relaxed) % ACT_SAMPLE_EVERY == 0
+}
+
+/// Should this KV vector encode be sampled? One branch when disabled.
+#[inline]
+pub fn sample_kv() -> bool {
+    enabled() && KV_TICK.fetch_add(1, Ordering::Relaxed) % KV_SAMPLE_EVERY == 0
+}
+
+/// Streaming squared-error accumulator; NMSE = Σerr² / Σref² (the
+/// paper's metric, Figs. 4/6/7/9 — ratio form, so sample counts cancel).
+#[derive(Debug, Clone, Copy, Default)]
+struct ErrAcc {
+    samples: u64,
+    scalars: u64,
+    sum_err: f64,
+    sum_ref: f64,
+}
+
+impl ErrAcc {
+    fn add(&mut self, sum_err: f64, sum_ref: f64, scalars: u64) {
+        self.samples += 1;
+        self.scalars += scalars;
+        self.sum_err += sum_err;
+        self.sum_ref += sum_ref;
+    }
+
+    fn nmse(&self) -> f64 {
+        if self.sum_ref == 0.0 {
+            0.0
+        } else {
+            self.sum_err / self.sum_ref
+        }
+    }
+
+    fn json(&self) -> Json {
+        Json::obj()
+            .with("samples", Json::Num(self.samples as f64))
+            .with("scalars", Json::Num(self.scalars as f64))
+            .with("nmse", Json::Num(self.nmse()))
+    }
+}
+
+struct Telemetry {
+    /// Keyed by the weight name the activation feeds (`l0.attn.wqkv`...).
+    act: BTreeMap<String, ErrAcc>,
+    kv: ErrAcc,
+    /// Selector occupancy counts, index = codebook selector.
+    selectors: Vec<u64>,
+}
+
+static TELEM: Mutex<Telemetry> = Mutex::new(Telemetry {
+    act: BTreeMap::new(),
+    kv: ErrAcc { samples: 0, scalars: 0, sum_err: 0.0, sum_ref: 0.0 },
+    selectors: Vec::new(),
+});
+
+/// Record one sampled activation row: `reference` is the pre-quant
+/// activation, `approx` the fake-quantized row. Call only after
+/// [`sample_act`] returned true.
+pub fn record_act(name: &str, reference: &[f32], approx: &[f32]) {
+    debug_assert_eq!(reference.len(), approx.len());
+    let mut sum_err = 0.0f64;
+    let mut sum_ref = 0.0f64;
+    for (&x, &y) in reference.iter().zip(approx) {
+        let d = x as f64 - y as f64;
+        sum_err += d * d;
+        sum_ref += (x as f64) * (x as f64);
+    }
+    let mut t = TELEM.lock().unwrap();
+    t.act.entry(name.to_string()).or_default().add(sum_err, sum_ref, reference.len() as u64);
+}
+
+/// Record one sampled KV vector encode: pre-accumulated Σerr²/Σref²
+/// over its `scalars`, plus per-selector win counts (`sel_counts[i]` =
+/// blocks that chose codebook `i` in this vector). Call only after
+/// [`sample_kv`] returned true.
+pub fn record_kv(sum_err: f64, sum_ref: f64, scalars: u64, sel_counts: &[u64]) {
+    let mut t = TELEM.lock().unwrap();
+    t.kv.add(sum_err, sum_ref, scalars);
+    if t.selectors.len() < sel_counts.len() {
+        t.selectors.resize(sel_counts.len(), 0);
+    }
+    for (acc, &c) in t.selectors.iter_mut().zip(sel_counts) {
+        *acc += c;
+    }
+}
+
+/// Clear all accumulated series (tests; bench sections).
+pub fn reset() {
+    let mut t = TELEM.lock().unwrap();
+    t.act.clear();
+    t.kv = ErrAcc::default();
+    t.selectors.clear();
+}
+
+/// The telemetry snapshot that lands under `quant` in `--metrics-out`.
+pub fn snapshot_json() -> Json {
+    let t = TELEM.lock().unwrap();
+    let mut act = Json::obj();
+    for (name, acc) in &t.act {
+        act.set(name, acc.json());
+    }
+    let total: u64 = t.selectors.iter().sum();
+    let mut sel = Json::obj()
+        .with("counts", Json::Arr(t.selectors.iter().map(|&c| Json::Num(c as f64)).collect()))
+        .with("total", Json::Num(total as f64));
+    if total > 0 {
+        sel.set(
+            "occupancy",
+            Json::Arr(t.selectors.iter().map(|&c| Json::Num(c as f64 / total as f64)).collect()),
+        );
+    }
+    Json::obj()
+        .with("enabled", Json::Bool(enabled()))
+        .with(
+            "sampling",
+            Json::obj()
+                .with("act_every", Json::Num(ACT_SAMPLE_EVERY as f64))
+                .with("kv_every", Json::Num(KV_SAMPLE_EVERY as f64)),
+        )
+        .with("act", act)
+        .with("kv", t.kv.json())
+        .with("selectors", sel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sampling_never_fires() {
+        // Read-only on the global accumulator, safe under parallel tests.
+        assert!(!enabled(), "lib tests must start with telemetry off");
+        for _ in 0..100 {
+            assert!(!sample_act());
+            assert!(!sample_kv());
+        }
+    }
+
+    // One test mutates the global accumulator: cargo runs test fns on
+    // parallel threads in one process, so splitting this up would let
+    // one fn's reset() wipe another's records mid-assert.
+    #[test]
+    fn accumulators_and_snapshot() {
+        reset();
+        record_act("l0.attn.wqkv", &[1.0, 2.0, -2.0], &[1.0, 2.0, -2.0]);
+        record_act("l0.mlp.w1", &[2.0, 0.0], &[1.0, 0.0]);
+        let snap = snapshot_json();
+        let act = snap.get("act").unwrap();
+        let exact = act.get("l0.attn.wqkv").unwrap();
+        assert_eq!(exact.get("nmse").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(exact.get("scalars").unwrap().as_u64().unwrap(), 3);
+        let lossy = act.get("l0.mlp.w1").unwrap();
+        // err = 1, ref = 4 → NMSE 0.25.
+        assert!((lossy.get("nmse").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-12);
+
+        record_kv(0.5, 8.0, 16, &[3, 0, 1]);
+        record_kv(0.5, 8.0, 16, &[0, 4, 0]);
+        let snap = snapshot_json();
+        let kv = snap.get("kv").unwrap();
+        assert_eq!(kv.get("samples").unwrap().as_u64().unwrap(), 2);
+        assert!((kv.get("nmse").unwrap().as_f64().unwrap() - 1.0 / 16.0).abs() < 1e-12);
+        let sel = snap.get("selectors").unwrap();
+        assert_eq!(sel.get("total").unwrap().as_u64().unwrap(), 8);
+        let occ = sel.get("occupancy").unwrap().as_arr().unwrap();
+        let sum: f64 = occ.iter().map(|j| j.as_f64().unwrap()).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        // Round-trips through the serializer.
+        Json::parse(&snap.to_string_pretty()).unwrap();
+        reset();
+    }
+}

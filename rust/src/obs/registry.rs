@@ -1,0 +1,241 @@
+//! Unified metrics registry (DESIGN.md §Observability).
+//!
+//! The subsystems keep their existing stat structs (`ServerMetrics`,
+//! `KvStats`, `PrefixStats`, panel-cache counters, ...) as the
+//! *collection* surface — those are lock-free or already inside the
+//! scheduler's ownership domain. This registry is the *export* surface:
+//! everything funnels into one [`snapshot`] JSON tree, which backs
+//! `--metrics-out` and the [`super::report`] bench stamps.
+//!
+//! Two registration styles:
+//! - **Typed instruments** ([`counter`], [`gauge`], [`histogram`]) for
+//!   values owned by the registry itself. Handles are cheap `Arc`
+//!   clones; counters and gauges are single atomics, histograms wrap
+//!   the log-bucketed [`LatencyHistogram`] behind a mutex (callers
+//!   record off the hot path).
+//! - **Published sections** ([`publish`]) for subsystems that already
+//!   aggregate their own stats: they hand over a ready JSON object
+//!   under a section name, replacing the previous one. This is how the
+//!   scattered structs join the snapshot without double-counting.
+
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonic counter handle.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge handle (f64 stored as bits in an atomic).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Histogram handle over the shared log-bucketed latency histogram.
+#[derive(Clone)]
+pub struct Histogram(Arc<Mutex<LatencyHistogram>>);
+
+impl Histogram {
+    pub fn record_us(&self, us: f64) {
+        self.0.lock().unwrap().record_us(us);
+    }
+
+    pub fn snapshot_json(&self) -> Json {
+        let h = self.0.lock().unwrap();
+        Json::obj()
+            .with("count", Json::Num(h.count() as f64))
+            .with("mean_us", Json::Num(h.mean_us()))
+            .with("p50_us", Json::Num(h.percentile_us(50.0)))
+            .with("p95_us", Json::Num(h.percentile_us(95.0)))
+            .with("p99_us", Json::Num(h.percentile_us(99.0)))
+            .with("max_us", Json::Num(h.max_us()))
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Counter>,
+    gauges: BTreeMap<String, Gauge>,
+    histograms: BTreeMap<String, Histogram>,
+    sections: BTreeMap<String, Json>,
+}
+
+/// The process-wide registry. All lookups go through [`global`]; the
+/// struct is public so tests can build private instances.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create a counter by name. Re-registering returns a handle
+    /// to the same underlying value.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut g = self.inner.lock().unwrap();
+        g.counters
+            .entry(name.to_string())
+            .or_insert_with(|| Counter(Arc::new(AtomicU64::new(0))))
+            .clone()
+    }
+
+    /// Get-or-create a gauge by name.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges
+            .entry(name.to_string())
+            .or_insert_with(|| Gauge(Arc::new(AtomicU64::new(0.0f64.to_bits()))))
+            .clone()
+    }
+
+    /// Get-or-create a histogram by name.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut g = self.inner.lock().unwrap();
+        g.histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram(Arc::new(Mutex::new(LatencyHistogram::new()))))
+            .clone()
+    }
+
+    /// Replace a named section with a subsystem-provided JSON object.
+    pub fn publish(&self, section: &str, value: Json) {
+        self.inner.lock().unwrap().sections.insert(section.to_string(), value);
+    }
+
+    /// One JSON tree over everything registered: typed instruments
+    /// under `counters`/`gauges`/`histograms`, published sections at
+    /// the top level. Deterministic key order (BTreeMap all the way).
+    pub fn snapshot(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let mut counters = Json::obj();
+        for (name, c) in &g.counters {
+            counters.set(name, Json::Num(c.get() as f64));
+        }
+        let mut gauges = Json::obj();
+        for (name, v) in &g.gauges {
+            gauges.set(name, Json::Num(v.get()));
+        }
+        let mut histograms = Json::obj();
+        for (name, h) in &g.histograms {
+            histograms.set(name, h.snapshot_json());
+        }
+        let mut root = Json::obj()
+            .with("counters", counters)
+            .with("gauges", gauges)
+            .with("histograms", histograms);
+        for (name, section) in &g.sections {
+            root.set(name, section.clone());
+        }
+        root
+    }
+}
+
+/// The process-wide registry instance.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Shorthand: `global().counter(name)`.
+pub fn counter(name: &str) -> Counter {
+    global().counter(name)
+}
+
+/// Shorthand: `global().gauge(name)`.
+pub fn gauge(name: &str) -> Gauge {
+    global().gauge(name)
+}
+
+/// Shorthand: `global().histogram(name)`.
+pub fn histogram(name: &str) -> Histogram {
+    global().histogram(name)
+}
+
+/// Shorthand: `global().publish(section, value)`.
+pub fn publish(section: &str, value: Json) {
+    global().publish(section, value)
+}
+
+/// Shorthand: `global().snapshot()`.
+pub fn snapshot() -> Json {
+    global().snapshot()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("steps");
+        c.inc();
+        c.add(4);
+        // Second registration sees the same underlying value.
+        assert_eq!(r.counter("steps").get(), 5);
+        let g = r.gauge("occupancy");
+        g.set(0.75);
+        assert_eq!(r.gauge("occupancy").get(), 0.75);
+    }
+
+    #[test]
+    fn histogram_snapshot_shape() {
+        let r = Registry::new();
+        let h = r.histogram("step_us");
+        for i in 1..=100 {
+            h.record_us(i as f64 * 10.0);
+        }
+        let j = r.histogram("step_us").snapshot_json();
+        assert_eq!(j.get("count").unwrap().as_u64().unwrap(), 100);
+        assert!(j.get("p99_us").unwrap().as_f64().unwrap() >= j.get("p50_us").unwrap().as_f64().unwrap());
+    }
+
+    #[test]
+    fn sections_and_snapshot_merge() {
+        let r = Registry::new();
+        r.counter("a").inc();
+        r.publish("kv", Json::obj().with("resident_bytes", Json::Num(123.0)));
+        r.publish("kv", Json::obj().with("resident_bytes", Json::Num(456.0)));
+        let snap = r.snapshot();
+        assert_eq!(snap.get("counters").unwrap().get("a").unwrap().as_u64().unwrap(), 1);
+        // publish replaces, never merges stale values.
+        assert_eq!(
+            snap.get("kv").unwrap().get("resident_bytes").unwrap().as_u64().unwrap(),
+            456
+        );
+        // Round-trips through the serializer.
+        let text = snap.to_string_pretty();
+        Json::parse(&text).unwrap();
+    }
+}

@@ -1,0 +1,120 @@
+//! Uniform bench-report stamping (DESIGN.md §Observability).
+//!
+//! Every `BENCH_*.json` used to carry whatever ad-hoc fields its bench
+//! happened to write, which made the perf trajectory across commits
+//! impossible to line up (different machines, backends, and revisions
+//! all look the same in the report). [`stamp`] adds one uniform block:
+//!
+//! - `system`: OS, architecture, logical core count;
+//! - `kernel_backend`: the runtime-dispatched micro-kernel actually in
+//!   use (scalar / AVX2 / NEON — `LOBCQ_FORCE_SCALAR` shows up here);
+//! - `git_rev`: the checked-out commit, read straight from `.git`
+//!   (no subprocess — works in sandboxes without a `git` binary);
+//! - `metrics`: a [`super::registry`] snapshot, so counters the bench
+//!   populated ride along with its headline numbers.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// OS / architecture / logical cores, from the standard library only.
+pub fn system_info() -> Json {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
+    Json::obj()
+        .with("os", Json::Str(std::env::consts::OS.into()))
+        .with("arch", Json::Str(std::env::consts::ARCH.into()))
+        .with("cores", Json::Num(cores as f64))
+}
+
+/// Find the enclosing `.git` directory starting from `start`.
+fn find_git_dir(start: &Path) -> Option<PathBuf> {
+    let mut dir = Some(start.to_path_buf());
+    while let Some(d) = dir {
+        let git = d.join(".git");
+        if git.is_dir() {
+            return Some(git);
+        }
+        dir = d.parent().map(Path::to_path_buf);
+    }
+    None
+}
+
+/// The checked-out commit hash, resolved by reading `.git/HEAD` (and
+/// the ref file or `packed-refs` it points at) — no `git` subprocess.
+/// `"unknown"` when the repo layout is unreadable.
+pub fn git_rev() -> String {
+    fn resolve() -> Option<String> {
+        let cwd = std::env::current_dir().ok()?;
+        let git = find_git_dir(&cwd)?;
+        let head = std::fs::read_to_string(git.join("HEAD")).ok()?;
+        let head = head.trim();
+        let rev = match head.strip_prefix("ref: ") {
+            None => head.to_string(), // detached HEAD: the hash itself
+            Some(refname) => {
+                let loose = std::fs::read_to_string(git.join(refname)).ok();
+                match loose {
+                    Some(h) => h.trim().to_string(),
+                    None => {
+                        // Packed ref: "<hash> <refname>" lines.
+                        let packed = std::fs::read_to_string(git.join("packed-refs")).ok()?;
+                        packed
+                            .lines()
+                            .filter(|l| !l.starts_with('#') && !l.starts_with('^'))
+                            .find_map(|l| {
+                                let (hash, name) = l.split_once(' ')?;
+                                (name.trim() == refname).then(|| hash.to_string())
+                            })?
+                    }
+                }
+            }
+        };
+        (!rev.is_empty()).then_some(rev)
+    }
+    resolve().unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Stamp a bench report with the uniform block (see module docs).
+/// Overwrites `kernel_backend` if the bench already set it, so the
+/// field is guaranteed to reflect the dispatched backend.
+pub fn stamp(report: &mut Json) {
+    report.set("system", system_info());
+    report.set("kernel_backend", Json::Str(crate::kernels::backend_name().into()));
+    report.set("git_rev", Json::Str(git_rev()));
+    report.set("metrics", super::registry::snapshot());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_info_is_populated() {
+        let j = system_info();
+        assert!(!j.get("os").unwrap().as_str().unwrap().is_empty());
+        assert!(!j.get("arch").unwrap().as_str().unwrap().is_empty());
+        assert!(j.get("cores").unwrap().as_u64().unwrap() >= 1);
+    }
+
+    #[test]
+    fn git_rev_from_this_checkout() {
+        // The test process runs inside the repo, so the pure-fs walk
+        // must find a commit hash (or "unknown" in exported tarballs —
+        // accept both, but never an empty string).
+        let rev = git_rev();
+        assert!(!rev.is_empty());
+        if rev != "unknown" {
+            assert!(rev.len() >= 7, "suspicious rev {rev:?}");
+            assert!(rev.chars().all(|c| c.is_ascii_hexdigit()), "non-hex rev {rev:?}");
+        }
+    }
+
+    #[test]
+    fn stamp_adds_the_uniform_block() {
+        let mut report = Json::obj().with("bench", Json::Str("t".into()));
+        stamp(&mut report);
+        for key in ["system", "kernel_backend", "git_rev", "metrics"] {
+            assert!(report.get(key).is_ok(), "missing {key}");
+        }
+        assert_eq!(report.get("bench").unwrap().as_str().unwrap(), "t");
+        Json::parse(&report.to_string_pretty()).unwrap();
+    }
+}

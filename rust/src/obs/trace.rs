@@ -1,0 +1,461 @@
+//! Span tracing with Chrome-trace export (DESIGN.md §Observability).
+//!
+//! Probe sites create [`SpanGuard`]s (RAII: the span closes when the
+//! guard drops) or emit [`instant`] lifecycle events. Both check one
+//! global `AtomicBool` with a relaxed load first — the entire cost of a
+//! disabled probe — and when enabled push a `Copy` [`Event`] into a
+//! per-thread fixed-capacity ring buffer: no locks, no allocation past
+//! the ring itself (created once per thread on first enabled record),
+//! and overflow overwrites the oldest events rather than blocking the
+//! serving path (`dropped()` reports how many).
+//!
+//! Rings drain into a global sink when a thread exits (TLS drop) or via
+//! [`flush_current_thread`]; [`drain`] collects everything for export.
+//! Timestamps are microseconds relative to the [`enable`] instant —
+//! request-level spans whose start predates enablement saturate to 0.
+//!
+//! Export formats:
+//! - [`export_chrome_trace`] — the Chrome trace-event JSON format
+//!   (`{"traceEvents": [...]}`, "X" complete + "i" instant events),
+//!   loadable in `chrome://tracing` and Perfetto.
+//! - [`export_lifecycle_jsonl`] — one compact JSON object per lifecycle
+//!   instant (category `lifecycle`), the per-request event log.
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-thread ring capacity in events (64 bytes each → 4 MiB/thread
+/// worst case, only for threads that actually record).
+const RING_CAP: usize = 1 << 16;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+static SINK: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+static ANCHOR: OnceLock<Instant> = OnceLock::new();
+
+/// Whether tracing is on. **This relaxed load is the entire disabled-path
+/// cost of every probe site** — callers must check it before doing any
+/// other work.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on, anchoring the trace clock at the first call.
+pub fn enable() {
+    let _ = ANCHOR.set(Instant::now());
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn tracing off (benches measuring enabled-vs-disabled; tests).
+/// Already-recorded events stay in their rings/sink.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Initialize from the environment: `LOBCQ_TRACE` set to a non-empty,
+/// non-`0` value enables tracing (the `--trace` flag calls [`enable`]
+/// directly). Call once at program start; cheap to call again.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("LOBCQ_TRACE") {
+        if !v.is_empty() && v != "0" {
+            enable();
+        }
+    }
+}
+
+/// Microseconds since the trace anchor (0 before [`enable`]).
+#[inline]
+pub fn now_us() -> u64 {
+    match ANCHOR.get() {
+        Some(t0) => t0.elapsed().as_micros() as u64,
+        None => 0,
+    }
+}
+
+/// Microseconds from the anchor to `t`, saturating to 0 for instants
+/// that predate it (e.g. a request submitted before `--trace` kicked in).
+#[inline]
+pub fn since_anchor_us(t: Instant) -> u64 {
+    match ANCHOR.get() {
+        Some(t0) => t.checked_duration_since(*t0).map_or(0, |d| d.as_micros() as u64),
+        None => 0,
+    }
+}
+
+/// Event phase: a closed span or a point event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Chrome "X" complete event (ts + dur).
+    Complete,
+    /// Chrome "i" instant event.
+    Instant,
+}
+
+/// One trace event. `Copy` and string-reference-free so the hot path
+/// never allocates: names and categories are `&'static str`, numeric
+/// context rides in `id`/`arg`.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub ph: Phase,
+    /// Category (Chrome `cat`): "request", "sched", "layer", "op",
+    /// "lifecycle", ...
+    pub cat: &'static str,
+    pub name: &'static str,
+    /// Correlation id (request id, layer index, ...; 0 = none).
+    pub id: u64,
+    /// Free numeric argument (token count, chunk progress, ...).
+    pub arg: u64,
+    /// Start timestamp, µs since the trace anchor.
+    pub ts_us: u64,
+    /// Duration (µs) for `Complete` events; 0 for instants.
+    pub dur_us: u64,
+    /// Recording thread (dense ids assigned per thread, 1-based).
+    pub tid: u32,
+}
+
+/// Per-thread event ring. Created lazily on the first *enabled* record,
+/// drained into the global sink on thread exit.
+struct Ring {
+    tid: u32,
+    buf: Vec<Event>,
+    /// Next write position once `buf` reached capacity (wrap-around).
+    head: usize,
+}
+
+impl Ring {
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() < RING_CAP {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % RING_CAP;
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn drain_into_sink(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let mut sink = SINK.lock().unwrap();
+        // Oldest-first: the un-overwritten tail, then the wrapped head.
+        sink.extend_from_slice(&self.buf[self.head..]);
+        sink.extend_from_slice(&self.buf[..self.head]);
+        self.buf.clear();
+        self.head = 0;
+    }
+}
+
+impl Drop for Ring {
+    fn drop(&mut self) {
+        self.drain_into_sink();
+    }
+}
+
+thread_local! {
+    static RING: RefCell<Option<Ring>> = const { RefCell::new(None) };
+}
+
+#[inline]
+fn record(ev: Event) {
+    RING.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let ring = slot.get_or_insert_with(|| Ring {
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            buf: Vec::with_capacity(RING_CAP.min(1024)),
+            head: 0,
+        });
+        let mut ev = ev;
+        ev.tid = ring.tid;
+        ring.push(ev);
+    });
+}
+
+/// Whether this thread has materialized a ring (test hook: the disabled
+/// path must never create one).
+pub fn thread_has_ring() -> bool {
+    RING.with(|cell| cell.borrow().is_some())
+}
+
+/// Events overwritten due to ring overflow since program start.
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Drain the calling thread's ring into the global sink. Threads that
+/// exit flush automatically; call this on long-lived threads (main)
+/// before [`drain`].
+pub fn flush_current_thread() {
+    RING.with(|cell| {
+        if let Some(ring) = cell.borrow_mut().as_mut() {
+            ring.drain_into_sink();
+        }
+    });
+}
+
+/// Flush the calling thread and take every sunk event (threads that
+/// already exited or flushed). Events from still-live other threads
+/// remain in their rings.
+pub fn drain() -> Vec<Event> {
+    flush_current_thread();
+    std::mem::take(&mut *SINK.lock().unwrap())
+}
+
+/// RAII span: records one `Complete` event covering its lifetime when
+/// tracing was enabled at construction; otherwise fully inert.
+#[must_use = "a span closes when this guard drops"]
+pub struct SpanGuard {
+    /// `Some` iff tracing was enabled at construction.
+    start: Option<Instant>,
+    cat: &'static str,
+    name: &'static str,
+    id: u64,
+    arg: u64,
+}
+
+impl SpanGuard {
+    /// Attach a numeric argument to the span (recorded at close).
+    pub fn set_arg(&mut self, arg: u64) {
+        self.arg = arg;
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let ts_us = since_anchor_us(start);
+            record(Event {
+                ph: Phase::Complete,
+                cat: self.cat,
+                name: self.name,
+                id: self.id,
+                arg: self.arg,
+                ts_us,
+                dur_us: start.elapsed().as_micros() as u64,
+                tid: 0,
+            });
+        }
+    }
+}
+
+/// Open a span. Disabled path: one branch, returns an inert guard.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> SpanGuard {
+    span_id(cat, name, 0)
+}
+
+/// Open a span with a correlation id (request id, layer index, ...).
+#[inline]
+pub fn span_id(cat: &'static str, name: &'static str, id: u64) -> SpanGuard {
+    SpanGuard {
+        start: if enabled() { Some(Instant::now()) } else { None },
+        cat,
+        name,
+        id,
+        arg: 0,
+    }
+}
+
+/// Emit an instant event. Disabled path: one branch.
+#[inline]
+pub fn instant(cat: &'static str, name: &'static str, id: u64, arg: u64) {
+    if !enabled() {
+        return;
+    }
+    record(Event { ph: Phase::Instant, cat, name, id, arg, ts_us: now_us(), dur_us: 0, tid: 0 });
+}
+
+/// Emit a lifecycle instant (category `lifecycle`, the JSONL stream).
+#[inline]
+pub fn lifecycle(name: &'static str, request: u64, arg: u64) {
+    instant("lifecycle", name, request, arg);
+}
+
+/// Record an already-measured span (e.g. the whole request, from its
+/// submit instant to retirement — the guard shape doesn't fit there).
+#[inline]
+pub fn complete(cat: &'static str, name: &'static str, id: u64, arg: u64, start: Instant) {
+    if !enabled() {
+        return;
+    }
+    let ts_us = since_anchor_us(start);
+    record(Event {
+        ph: Phase::Complete,
+        cat,
+        name,
+        id,
+        arg,
+        ts_us,
+        dur_us: now_us().saturating_sub(ts_us),
+        tid: 0,
+    });
+}
+
+fn event_json(ev: &Event) -> Json {
+    let mut j = Json::obj()
+        .with("name", Json::Str(ev.name.into()))
+        .with("cat", Json::Str(ev.cat.into()))
+        .with("ts", Json::Num(ev.ts_us as f64))
+        .with("pid", Json::Num(1.0))
+        .with("tid", Json::Num(ev.tid as f64))
+        .with(
+            "args",
+            Json::obj()
+                .with("id", Json::Num(ev.id as f64))
+                .with("v", Json::Num(ev.arg as f64)),
+        );
+    match ev.ph {
+        Phase::Complete => {
+            j.set("ph", Json::Str("X".into()));
+            j.set("dur", Json::Num(ev.dur_us as f64));
+        }
+        Phase::Instant => {
+            j.set("ph", Json::Str("i".into()));
+            j.set("s", Json::Str("g".into()));
+        }
+    }
+    j
+}
+
+/// Write the Chrome trace-event file (`{"traceEvents": [...]}`).
+pub fn export_chrome_trace(path: &std::path::Path, events: &[Event]) -> anyhow::Result<()> {
+    let arr: Vec<Json> = events.iter().map(event_json).collect();
+    let root = Json::obj()
+        .with("traceEvents", Json::Arr(arr))
+        .with("displayTimeUnit", Json::Str("ms".into()))
+        .with("otherData", Json::obj().with("dropped_events", Json::Num(dropped() as f64)));
+    root.to_file(path)
+}
+
+/// Write the request-lifecycle JSONL log: one compact JSON object per
+/// `lifecycle` instant, in timestamp order.
+pub fn export_lifecycle_jsonl(path: &std::path::Path, events: &[Event]) -> anyhow::Result<()> {
+    let mut rows: Vec<&Event> = events
+        .iter()
+        .filter(|e| e.ph == Phase::Instant && e.cat == "lifecycle")
+        .collect();
+    rows.sort_by_key(|e| e.ts_us);
+    let mut out = String::new();
+    for ev in rows {
+        let line = Json::obj()
+            .with("ts_us", Json::Num(ev.ts_us as f64))
+            .with("event", Json::Str(ev.name.into()))
+            .with("request", Json::Num(ev.id as f64))
+            .with("arg", Json::Num(ev.arg as f64));
+        out.push_str(&line.to_string_compact());
+        out.push('\n');
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// The conventional lifecycle-log path next to a Chrome-trace path
+/// (`out.json` → `out.events.jsonl`).
+pub fn lifecycle_path(trace_path: &std::path::Path) -> std::path::PathBuf {
+    let stem = trace_path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "trace".into());
+    trace_path.with_file_name(format!("{stem}.events.jsonl"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: these unit tests run in the library test binary, where
+    // nothing ever calls `enable()` — the global flag stays off, so the
+    // disabled-path assertions are safe against test parallelism. The
+    // enabled-path behaviour is exercised in `tests/obs_trace.rs`,
+    // which owns its process.
+
+    #[test]
+    fn disabled_probes_are_inert_and_ringless() {
+        assert!(!enabled(), "lib unit tests must never enable tracing");
+        {
+            let mut g = span("sched", "step");
+            g.set_arg(7);
+            let _g2 = span_id("layer", "layer", 3);
+            instant("sched", "tick", 1, 2);
+            lifecycle("admitted", 9, 0);
+            complete("request", "request", 9, 0, Instant::now());
+        }
+        assert!(!thread_has_ring(), "disabled probe materialized a ring buffer");
+        assert_eq!(now_us(), 0, "clock anchored without enable()");
+    }
+
+    #[test]
+    fn exports_render_valid_json_from_synthetic_events() {
+        let events = [
+            Event {
+                ph: Phase::Complete,
+                cat: "request",
+                name: "request",
+                id: 1,
+                arg: 4,
+                ts_us: 10,
+                dur_us: 500,
+                tid: 1,
+            },
+            Event { ph: Phase::Instant, cat: "lifecycle", name: "admitted", id: 1, arg: 3, ts_us: 12, dur_us: 0, tid: 1 },
+            Event { ph: Phase::Instant, cat: "lifecycle", name: "finished", id: 1, arg: 4, ts_us: 480, dur_us: 0, tid: 2 },
+        ];
+        let dir = std::env::temp_dir().join("lobcq_trace_test");
+        let trace = dir.join("out.json");
+        export_chrome_trace(&trace, &events).unwrap();
+        let parsed = Json::from_file(&trace).unwrap();
+        let rows = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(rows[0].get("dur").unwrap().as_u64().unwrap(), 500);
+        assert_eq!(rows[1].get("ph").unwrap().as_str().unwrap(), "i");
+
+        let jsonl = lifecycle_path(&trace);
+        assert_eq!(jsonl.file_name().unwrap().to_str().unwrap(), "out.events.jsonl");
+        export_lifecycle_jsonl(&jsonl, &events).unwrap();
+        let text = std::fs::read_to_string(&jsonl).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "one line per lifecycle instant");
+        for line in &lines {
+            let row = Json::parse(line).unwrap();
+            assert_eq!(row.get("request").unwrap().as_u64().unwrap(), 1);
+        }
+        // Sorted by timestamp regardless of input order.
+        assert!(lines[0].contains("admitted") && lines[1].contains("finished"));
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let mut ring = Ring { tid: 1, buf: Vec::new(), head: 0 };
+        let ev = |i: u64| Event {
+            ph: Phase::Instant,
+            cat: "t",
+            name: "t",
+            id: i,
+            arg: 0,
+            ts_us: i,
+            dur_us: 0,
+            tid: 1,
+        };
+        let before = dropped();
+        for i in 0..(RING_CAP as u64 + 5) {
+            ring.push(ev(i));
+        }
+        assert_eq!(ring.buf.len(), RING_CAP);
+        assert_eq!(dropped() - before, 5);
+        // Oldest-first drain: first surviving event is id 5.
+        ring.drain_into_sink();
+        let sunk = std::mem::take(&mut *SINK.lock().unwrap());
+        assert_eq!(sunk.len(), RING_CAP);
+        assert_eq!(sunk[0].id, 5);
+        assert_eq!(sunk.last().unwrap().id, RING_CAP as u64 + 4);
+    }
+}

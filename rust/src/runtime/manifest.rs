@@ -148,7 +148,7 @@ mod tests {
     #[test]
     fn parses_real_manifest_when_present() {
         let Some(m) = manifest_available() else {
-            eprintln!("skipping: no artifacts/manifest.json (run `make artifacts`)");
+            crate::log_warn!("skipping: no artifacts/manifest.json (run `make artifacts`)");
             return;
         };
         assert_eq!(m.vocab, crate::data::corpus::VOCAB as usize);
@@ -160,7 +160,7 @@ mod tests {
     #[test]
     fn corpus_parity_with_manifest() {
         let Some(m) = manifest_available() else {
-            eprintln!("skipping: no artifacts");
+            crate::log_warn!("skipping: no artifacts");
             return;
         };
         m.check_corpus_parity().expect("rust corpus generator diverged from python");

@@ -1,0 +1,258 @@
+//! Enabled-path observability suite (ISSUE 8). This target owns its
+//! process (see Cargo.toml): it flips the global trace-enable flag,
+//! which the library unit tests assume stays off, and it drains the
+//! global event sink — so everything runs inside one test fn, in
+//! phases, instead of racing across cargo's parallel test threads.
+//!
+//! Phases:
+//! 1. Disabled path is inert: a full scheduler run with tracing off
+//!    materializes no per-thread ring and records zero events — the
+//!    "steady-state decode allocates nothing" guarantee.
+//! 2. Chaos-like mock workload (expired deadlines, tiny KV budget,
+//!    chunked prefill, a poison token): every submitted request
+//!    reaches exactly one terminal lifecycle event, and every
+//!    admitted request's terminal follows its admission.
+//! 3. Real `DecodeSession` with an encoded scheme + BCQ KV: model /
+//!    layer / op spans close with durations and nest (each `layer`
+//!    span sits inside a `model` span on the same thread), and
+//!    quant-error telemetry accumulates act + KV NMSE.
+//! 4. Chrome-trace and lifecycle-JSONL exports parse back as valid
+//!    JSON with the fields the viewers require.
+
+use lobcq::coordinator::{
+    run_continuous_opts, BatchPolicy, Batcher, ContinuousOpts, DecodeEngine, DecodeSession, KvCacheOpts,
+    MockDecodeEngine, Priority, Request, Response, Sampling,
+};
+use lobcq::eval::Scheme;
+use lobcq::model::{ModelConfig, Weights};
+use lobcq::obs::trace::{self, Event, Phase};
+use lobcq::quant::pipeline::QuantPool;
+use lobcq::tensor::Tensor;
+use lobcq::util::json::Json;
+use lobcq::util::rng::Pcg32;
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::{Duration, Instant};
+
+const TERMINALS: [&str; 4] = ["finished", "shed-deadline", "shed-kv", "failed"];
+
+fn drive<E: DecodeEngine>(
+    engine: &mut E,
+    reqs: Vec<Request>,
+    opts: ContinuousOpts,
+) -> Vec<(u64, anyhow::Result<Response>)> {
+    let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO, queue_cap: None });
+    for r in reqs {
+        assert!(b.push(r).is_accepted());
+    }
+    b.close();
+    let mut out = Vec::new();
+    run_continuous_opts(engine, &b, opts, Sampling::Greedy, None, |id, r| out.push((id, r)));
+    out
+}
+
+/// A deterministic adversarial mix: long-ish prompts (so chunk=2
+/// produces `chunked` events), some already-expired deadlines, some
+/// high priority.
+fn chaos_requests(base_id: u64, n: usize, vocab: u32) -> Vec<Request> {
+    let now = Instant::now();
+    (0..n)
+        .map(|i| {
+            let plen = 3 + i % 5;
+            let prompt: Vec<u32> = (0..plen).map(|k| ((i * 7 + k * 3) % vocab as usize) as u32).collect();
+            let mut r = Request::new(base_id + i as u64, prompt, 2 + i % 3);
+            if i % 4 == 3 {
+                r = r.with_deadline(Some(now)); // expired at submit: must shed
+            }
+            if i % 3 == 2 {
+                r = r.with_priority(Priority::High);
+            }
+            r
+        })
+        .collect()
+}
+
+fn cfg32() -> ModelConfig {
+    ModelConfig { name: "obs".into(), d: 32, n_layers: 2, n_heads: 2, vocab: 40, max_t: 32 }
+}
+
+fn random_weights(cfg: &ModelConfig, seed: u64) -> Weights {
+    let mut rng = Pcg32::seeded(seed);
+    let mut tensors = BTreeMap::new();
+    for (name, shape) in cfg.param_shapes() {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with(".g") {
+            vec![1.0; n]
+        } else if name.ends_with(".b") {
+            vec![0.0; n]
+        } else {
+            (0..n).map(|_| rng.normal() * 0.05).collect()
+        };
+        tensors.insert(name, Tensor::new(&shape, data));
+    }
+    Weights::new(tensors)
+}
+
+fn encoded_scheme(w: &Weights) -> Scheme {
+    use lobcq::quant::calib::calibrate_universal;
+    use lobcq::quant::lobcq::{CalibOpts, LobcqConfig};
+    let qcfg = LobcqConfig::new(8, 4, 64);
+    let fam = calibrate_universal(
+        &[w.get("l0.mlp.w1").unwrap()],
+        &qcfg,
+        CalibOpts { max_iters: 8, ..Default::default() },
+        5,
+    );
+    Scheme::lobcq(qcfg, fam)
+}
+
+/// Exactly-one-terminal conservation over the lifecycle stream, for a
+/// known set of submitted ids. Re-admissions (defer/preempt) may log
+/// `admitted` more than once; deadline sheds at pop may terminate a
+/// request that was never admitted.
+fn assert_conservation(events: &[Event], submitted: &BTreeSet<u64>) {
+    let mut terminals: BTreeMap<u64, Vec<&str>> = BTreeMap::new();
+    let mut admitted: BTreeSet<u64> = BTreeSet::new();
+    for ev in events.iter().filter(|e| e.cat == "lifecycle" && submitted.contains(&e.id)) {
+        if ev.name == "admitted" {
+            admitted.insert(ev.id);
+        }
+        if TERMINALS.contains(&ev.name) {
+            terminals.entry(ev.id).or_default().push(ev.name);
+        }
+    }
+    for id in submitted {
+        let t = terminals.get(id).map(Vec::as_slice).unwrap_or(&[]);
+        assert_eq!(t.len(), 1, "request {id}: expected exactly one terminal event, got {t:?}");
+    }
+    for id in &admitted {
+        assert!(terminals.contains_key(id), "request {id} admitted but never terminated");
+    }
+}
+
+#[test]
+fn tracing_lifecycle_spans_and_exports_end_to_end() {
+    // ---- phase 1: disabled probes are free and allocation-free ----
+    assert!(!trace::enabled(), "trace flag must start off in this process");
+    let mut e = MockDecodeEngine::new(2, 32);
+    let out = drive(&mut e, chaos_requests(1, 6, 32), ContinuousOpts { prefill_chunk: 2 });
+    assert_eq!(out.len(), 6);
+    assert!(!trace::thread_has_ring(), "disabled scheduler run materialized a trace ring");
+    assert!(trace::drain().is_empty(), "disabled scheduler run recorded events");
+
+    // ---- phase 2: mock chaos workload under tracing ----
+    trace::enable();
+    lobcq::obs::quant_stats::enable();
+    lobcq::obs::quant_stats::reset();
+    let mut e = MockDecodeEngine::new(2, 32);
+    e.kv_capacity = Some(12); // tiny budget: forces defer/preempt/shed-kv
+    e.kv_evictable = 2;
+    e.poison_token = Some(13);
+    let mock_ids: BTreeSet<u64> = (101..111).collect();
+    let out = drive(&mut e, chaos_requests(101, 10, 32), ContinuousOpts { prefill_chunk: 2 });
+    assert_eq!(out.len(), 10, "lost a terminal delivery");
+
+    // ---- phase 3: real session — model spans + quant telemetry ----
+    let cfg = cfg32();
+    let w = random_weights(&cfg, 0x0B5);
+    let scheme = encoded_scheme(&w);
+    let kv = KvCacheOpts { page_tokens: 4, encoded: true, prefix_cache_bytes: None, page_budget: None };
+    let mut s = DecodeSession::new(cfg.clone(), &w, &scheme, QuantPool::serial(), 2, kv).unwrap();
+    let real_ids: BTreeSet<u64> = (201..205).collect();
+    let reqs: Vec<Request> = (0..4)
+        .map(|i| {
+            let prompt: Vec<u32> = (0..5 + i).map(|k| ((i * 11 + k * 5 + 3) % 40) as u32).collect();
+            Request::new(201 + i as u64, prompt, 3)
+        })
+        .collect();
+    let out = drive(&mut s, reqs, ContinuousOpts { prefill_chunk: 3 });
+    assert_eq!(out.len(), 4);
+    for (id, r) in &out {
+        assert!(r.is_ok(), "uncontended real request {id} failed: {:?}", r.as_ref().err());
+    }
+
+    let events = trace::drain();
+    trace::disable();
+    assert!(!events.is_empty());
+
+    // Lifecycle conservation over both workloads.
+    assert_conservation(&events, &mock_ids);
+    assert_conservation(&events, &real_ids);
+    let names: BTreeSet<&str> =
+        events.iter().filter(|e| e.cat == "lifecycle").map(|e| e.name).collect();
+    for required in ["admitted", "chunked", "staged", "finished", "shed-deadline"] {
+        assert!(names.contains(required), "no `{required}` lifecycle event in {names:?}");
+    }
+
+    // Span structure: request spans close with the token count; every
+    // scheduler iteration that stepped lanes has a `sched/step` span;
+    // each `layer` span nests inside a `model` span on its thread
+    // (±5 µs slack for the separate truncations of parent/child ends).
+    let complete = |cat: &str| -> Vec<&Event> {
+        events.iter().filter(|e| e.ph == Phase::Complete && e.cat == cat).collect()
+    };
+    let request_spans = complete("request");
+    for id in &real_ids {
+        let span = request_spans
+            .iter()
+            .find(|e| e.id == *id)
+            .unwrap_or_else(|| panic!("no request span for finished request {id}"));
+        assert_eq!(span.arg, 3, "request span arg should be the generated-token count");
+    }
+    assert!(!complete("sched").is_empty(), "no sched/step spans");
+    let model_spans = complete("model");
+    let model_names: BTreeSet<&str> = model_spans.iter().map(|e| e.name).collect();
+    assert!(model_names.contains("prefill_chunk") && model_names.contains("decode_step"));
+    let layer_spans = complete("layer");
+    assert!(!layer_spans.is_empty(), "no layer spans");
+    for l in &layer_spans {
+        let nested = model_spans.iter().any(|m| {
+            m.tid == l.tid && m.ts_us <= l.ts_us && m.ts_us + m.dur_us + 5 >= l.ts_us + l.dur_us
+        });
+        assert!(nested, "layer span at ts={} not nested in any model span", l.ts_us);
+    }
+    assert!(!complete("op").is_empty(), "no op spans");
+
+    // Quant telemetry accumulated under the encoded scheme.
+    let quant = lobcq::obs::quant_stats::snapshot_json();
+    let act = quant.get("act").unwrap();
+    let act_layers = match act {
+        Json::Obj(m) => m.len(),
+        _ => 0,
+    };
+    assert!(act_layers > 0, "no per-layer activation NMSE accumulated");
+    assert!(quant.get("kv").unwrap().get("samples").unwrap().as_u64().unwrap() > 0);
+    assert!(quant.get("selectors").unwrap().get("total").unwrap().as_u64().unwrap() > 0);
+
+    // ---- phase 4: exports parse back as valid JSON ----
+    let dir = std::env::temp_dir().join("lobcq_obs_trace_it");
+    let trace_path = dir.join("trace.json");
+    trace::export_chrome_trace(&trace_path, &events).unwrap();
+    let parsed = Json::from_file(&trace_path).unwrap();
+    let rows = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), events.len());
+    for row in rows {
+        for key in ["name", "cat", "ph", "ts", "pid", "tid"] {
+            assert!(row.opt(key).is_some(), "trace event missing `{key}`: {row:?}");
+        }
+        match row.get("ph").unwrap().as_str().unwrap() {
+            "X" => assert!(row.opt("dur").is_some(), "complete event missing dur"),
+            "i" => assert_eq!(row.get("s").unwrap().as_str().unwrap(), "g"),
+            ph => panic!("unexpected phase {ph:?}"),
+        }
+    }
+
+    let jsonl = trace::lifecycle_path(&trace_path);
+    trace::export_lifecycle_jsonl(&jsonl, &events).unwrap();
+    let text = std::fs::read_to_string(&jsonl).unwrap();
+    let mut last_ts = 0u64;
+    let mut lines = 0usize;
+    for line in text.lines() {
+        let row = Json::parse(line).unwrap();
+        let ts = row.get("ts_us").unwrap().as_u64().unwrap();
+        assert!(ts >= last_ts, "lifecycle log not sorted by timestamp");
+        last_ts = ts;
+        assert!(row.opt("event").is_some() && row.opt("request").is_some() && row.opt("arg").is_some());
+        lines += 1;
+    }
+    assert_eq!(lines, events.iter().filter(|e| e.cat == "lifecycle").count());
+}
