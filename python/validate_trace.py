@@ -9,15 +9,20 @@ Checks, in order:
      ``traceEvents`` list where every event carries name/cat/ph/ts/pid/tid,
      "X" (complete) events carry ``dur``, "i" (instant) events carry the
      global scope marker, and the request / sched / model / layer / op /
-     lifecycle categories all appear.
+     lifecycle categories all appear. When speculative decoding ran
+     (``op``/``verify`` or ``op``/``rollback`` spans present), every such
+     span must nest inside some ``sched``/``step`` interval — speculation
+     is a property of a scheduler step, never free-floating work.
   2. LIFECYCLE_JSONL is one JSON object per line (ts_us/event/request/arg),
      sorted by timestamp, and conserves requests: every admitted request id
      reaches exactly one terminal event (finished, shed-deadline, shed-kv,
-     or failed).
+     or failed). Non-terminal streams (staged/chunked/preempted/
+     speculation) pass through unconstrained.
   3. METRICS_JSON carries the server sections (latency, occupancy,
      admission, kv, prefix, panel), non-empty per-layer activation-NMSE
      telemetry, KV-encode NMSE samples, codebook-selector occupancy, and
-     the registry / kernel_backend / system stamps.
+     the registry / kernel_backend / system stamps. A ``server.speculation``
+     section, when present, must carry the draft/accept/rollback counters.
 
 Exits non-zero with a one-line reason on the first failure.
 """
@@ -57,7 +62,29 @@ def check_chrome_trace(path):
     missing = REQUIRED_CATS - cats
     if missing:
         fail(f"{path}: no events in categories {sorted(missing)} (saw {sorted(cats)})")
+    check_spec_nesting(path, events)
     return len(events)
+
+
+def check_spec_nesting(path, events):
+    """Every op/verify and op/rollback span must lie inside a sched/step
+    span on the same pid/tid (2 us slack for timestamp truncation).
+    Vacuously true for non-speculative runs."""
+    steps = {}
+    for ev in events:
+        if ev["cat"] == "sched" and ev["name"] == "step" and ev["ph"] == "X":
+            key = (ev["pid"], ev["tid"])
+            steps.setdefault(key, []).append((ev["ts"], ev["ts"] + ev["dur"]))
+    n_spec = 0
+    for ev in events:
+        if ev["cat"] != "op" or ev["name"] not in ("verify", "rollback") or ev["ph"] != "X":
+            continue
+        n_spec += 1
+        lo, hi = ev["ts"], ev["ts"] + ev["dur"]
+        key = (ev["pid"], ev["tid"])
+        if not any(s - 2 <= lo and hi <= e + 2 for s, e in steps.get(key, [])):
+            fail(f"{path}: op/{ev['name']} span at ts={lo} not nested in any sched/step")
+    return n_spec
 
 
 def check_lifecycle(path):
@@ -100,6 +127,11 @@ def check_metrics(path):
     for key in ("latency", "occupancy", "admission", "kv", "prefix", "panel"):
         if key not in server:
             fail(f"{path}: server section missing `{key}`")
+    spec = server.get("speculation")
+    if spec is not None:
+        for key in ("steps", "drafted", "accepted", "wasted", "rollbacks"):
+            if key not in spec:
+                fail(f"{path}: server.speculation missing `{key}`")
     quant = m.get("quant")
     if not isinstance(quant, dict):
         fail(f"{path}: no `quant` section")

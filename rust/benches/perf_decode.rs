@@ -31,15 +31,23 @@
 
 #![allow(clippy::needless_range_loop)]
 
+use lobcq::coordinator::{
+    run_continuous_opts, BatchPolicy, Batcher, ContinuousOpts, DecodeSession, DrafterKind, KvCacheOpts,
+    Request, Sampling, ServerMetrics, SpecStats,
+};
 use lobcq::data::corpus;
+use lobcq::eval::Scheme;
 use lobcq::kvcache::{KvLayout, KvQuantizer, KvStore, PagedKvCache};
-use lobcq::model::decode::{decode_step, decode_step_batch, prefill, AttnPath, DecodeScratch};
+use lobcq::model::decode::{
+    decode_step, decode_step_batch, decode_step_batch_spec, prefill, AttnPath, DecodeScratch,
+};
 use lobcq::model::forward::{forward, forward_logits_at};
 use lobcq::model::{ModelConfig, Weights};
+use lobcq::quant::pipeline::QuantPool;
 use lobcq::tensor::Tensor;
 use lobcq::util::json::Json;
 use lobcq::util::rng::Pcg32;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Serving-shaped toy model: head_dim 64 (the ≤5 bits/scalar shape).
 fn model() -> (ModelConfig, Weights) {
@@ -181,6 +189,62 @@ fn run_attn_path(cfg: &ModelConfig, w: &Weights, stream: &[u32], t0: usize, gen:
         assert!(logits[0].is_finite());
     }
     gen as f64 / start.elapsed().as_secs_f64()
+}
+
+/// Teacher-forced speculative decode along the stream (BCQ cache): each
+/// fused stacked-verify call feeds the frontier plus the next `k`
+/// stream tokens as the draft, so every draft token is "accepted" and
+/// one weight pass advances `1 + k` positions — the full-acceptance
+/// upper bound for the spec path. Cache writes are identical to
+/// [`run_cached`]'s one-token loop (`main` bit-verifies the fused rows
+/// against sequential `decode_step` before timing).
+fn run_spec_teacher(cfg: &ModelConfig, w: &Weights, stream: &[u32], t0: usize, gen: usize, k: usize) -> f64 {
+    let mut kv = cache(cfg, w, true, 1);
+    let slot = kv.alloc_slot().unwrap();
+    let mut scratch = DecodeScratch::new();
+    prefill(cfg, w, &mut kv, slot, &stream[..t0], None).unwrap();
+    let start = Instant::now();
+    let mut s = 0usize;
+    while s < gen {
+        let take = k.min(gen - s - 1);
+        let draft = stream[t0 + s + 1..t0 + s + 1 + take].to_vec();
+        let logits =
+            decode_step_batch_spec(cfg, w, &mut kv, &[slot], &[stream[t0 + s]], &[draft], None, &mut scratch)
+                .unwrap();
+        assert!(logits[0].is_finite());
+        s += 1 + take;
+    }
+    gen as f64 / start.elapsed().as_secs_f64()
+}
+
+/// End-to-end speculative serving: 8 repetitive-corpus requests over a
+/// 4-lane BCQ-cache [`DecodeSession`] through the continuous scheduler,
+/// n-gram drafter (`spec_k == 0` = speculation off). Greedy decode on a
+/// toy model settles into a cycle the n-gram drafter learns, so this
+/// measures realistic accept-some/reject-some traffic, not the
+/// teacher-forced upper bound. Returns (emitted tokens/sec, per-request
+/// tokens sorted by id — the parity gate, and the speculation stats).
+fn run_sched_spec(cfg: &ModelConfig, w: &Weights, spec_k: usize) -> (f64, Vec<(u64, Vec<u32>)>, Option<SpecStats>) {
+    let kv = KvCacheOpts { page_tokens: 16, encoded: true, prefix_cache_bytes: None, page_budget: None };
+    let mut sess = DecodeSession::new(cfg.clone(), w, &Scheme::Bf16, QuantPool::serial(), 4, kv).unwrap();
+    let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO, queue_cap: None });
+    for i in 0..8u64 {
+        let prompt = corpus::repetitive(0xDECE ^ i, 12, 48);
+        assert!(b.push(Request::new(i + 1, prompt, 48)).is_accepted());
+    }
+    b.close();
+    let drafter = if spec_k == 0 { DrafterKind::Off } else { DrafterKind::NGram };
+    let opts = ContinuousOpts { prefill_chunk: usize::MAX, spec_k, drafter };
+    let metrics = ServerMetrics::new();
+    let mut out: Vec<(u64, Vec<u32>)> = Vec::new();
+    let start = Instant::now();
+    run_continuous_opts(&mut sess, &b, opts, Sampling::Greedy, Some(&metrics), |id, r| {
+        out.push((id, r.expect("bench request failed").tokens));
+    });
+    let elapsed = start.elapsed().as_secs_f64();
+    out.sort();
+    let emitted: usize = out.iter().map(|(_, t)| t.len()).sum();
+    (emitted as f64 / elapsed, out, metrics.snapshot().spec)
 }
 
 /// Teacher-forced perplexity of a corpus stream through prefill + decode
@@ -368,6 +432,86 @@ fn main() {
     let ppl4 = decode_ppl(&cfg, &w, &stream, 32, 96, true);
     println!("decode ppl: KV16 {ppl16:.4}  KV4 {ppl4:.4}  (delta {:+.4})", ppl4 - ppl16);
 
+    // ---- speculative decoding: stacked verify vs one-token steps ----
+    // (ISSUE 9.) Parity gate first: one fused stacked-verify step over
+    // frontier + 3 drafted tokens must be bit-identical to feeding the
+    // same four tokens through sequential `decode_step`s.
+    {
+        let mut kv_a = cache(&cfg, &w, true, 1);
+        let mut kv_b = cache(&cfg, &w, true, 1);
+        let sa_slot = kv_a.alloc_slot().unwrap();
+        let sb_slot = kv_b.alloc_slot().unwrap();
+        let (mut sa, mut sb) = (DecodeScratch::new(), DecodeScratch::new());
+        prefill(&cfg, &w, &mut kv_a, sa_slot, &stream[..40], None).unwrap();
+        prefill(&cfg, &w, &mut kv_b, sb_slot, &stream[..40], None).unwrap();
+        let draft: Vec<u32> = stream[41..44].to_vec();
+        let fused =
+            decode_step_batch_spec(&cfg, &w, &mut kv_b, &[sb_slot], &[stream[40]], &[draft], None, &mut sb)
+                .unwrap()
+                .to_vec();
+        for r in 0..4usize {
+            let lone = decode_step(&cfg, &w, &mut kv_a, sa_slot, stream[40 + r], None, &mut sa).unwrap();
+            for (c, (&g, &want)) in fused[r * cfg.vocab..(r + 1) * cfg.vocab].iter().zip(&lone).enumerate() {
+                assert_eq!(g.to_bits(), want.to_bits(), "spec parity drift: row {r} col {c}");
+            }
+        }
+    }
+    println!("\n# speculative decoding — stacked verify vs one-token steps (bcq cache, T0=64)");
+    let (spec_base_tps, _) = run_cached(&cfg, &w, &stream, 64, gen, true);
+    let mut teacher_json = Vec::new();
+    for &k in &[2usize, 4] {
+        let tps = run_spec_teacher(&cfg, &w, &stream, 64, gen, k);
+        println!(
+            "teacher-forced k={k}: {tps:8.1} tok/s vs one-token {spec_base_tps:8.1} ({:.2}x, full acceptance)",
+            tps / spec_base_tps
+        );
+        teacher_json.push(
+            Json::obj()
+                .with("k", Json::Num(k as f64))
+                .with("tokens_per_s", Json::Num(tps))
+                .with("speedup_vs_one_token", Json::Num(tps / spec_base_tps)),
+        );
+    }
+    // End-to-end scheduler rows: spec-off vs n-gram at k ∈ {2, 4} on the
+    // repetitive corpus. Every speculated run is parity-gated against the
+    // spec-off run before its timing is trusted.
+    let (off_tps, off_tokens, _) = run_sched_spec(&cfg, &w, 0);
+    let mut sched_spec_json = Vec::new();
+    let mut spec_vs_baseline = 0.0f64;
+    for &k in &[2usize, 4] {
+        let (tps, toks, stats) = run_sched_spec(&cfg, &w, k);
+        assert_eq!(toks, off_tokens, "speculated scheduler run diverged from spec-off at k={k}");
+        let st = stats.expect("speculated run recorded no speculation stats");
+        println!(
+            "scheduler ngram k={k}: {tps:8.1} tok/s vs spec-off {off_tps:8.1} ({:.2}x)   acceptance mean {:.0}% p50 {:.0}%   rollbacks {}",
+            tps / off_tps,
+            st.acceptance_mean_pct,
+            st.acceptance_p50_pct,
+            st.rollbacks
+        );
+        if k == 4 {
+            spec_vs_baseline = tps / off_tps;
+        }
+        sched_spec_json.push(
+            Json::obj()
+                .with("k", Json::Num(k as f64))
+                .with("tokens_per_s", Json::Num(tps))
+                .with("speedup_vs_spec_off", Json::Num(tps / off_tps))
+                .with("acceptance_mean_pct", Json::Num(st.acceptance_mean_pct))
+                .with("acceptance_p50_pct", Json::Num(st.acceptance_p50_pct))
+                .with("drafted", Json::Num(st.drafted as f64))
+                .with("accepted", Json::Num(st.accepted as f64))
+                .with("wasted", Json::Num(st.wasted as f64))
+                .with("rollbacks", Json::Num(st.rollbacks as f64)),
+        );
+    }
+    acceptance.set("spec_vs_baseline", Json::Num(spec_vs_baseline));
+    acceptance.set("spec_target", Json::Num(1.0));
+    println!("speculation vs spec-off @k=4 (repetitive corpus): {spec_vs_baseline:.2}x (target > 1x)");
+    if spec_vs_baseline <= 1.0 {
+        eprintln!("WARNING: speculative decoding not faster than spec-off on this host/workload");
+    }
+
     // ---- span-tracing overhead (ISSUE 8 gate) ----
     // Disabled cost: one relaxed load per probe, measured directly over a
     // tight guard-construct/drop loop; the gate is that cost, times the
@@ -424,6 +568,14 @@ fn main() {
                 .with("encoded_tokens_per_s", Json::Num(enc_attn_tps))
                 .with("gather_tokens_per_s", Json::Num(gat_attn_tps))
                 .with("speedup", Json::Num(attn_ratio)),
+        )
+        .with(
+            "speculation",
+            Json::obj()
+                .with("one_token_tokens_per_s", Json::Num(spec_base_tps))
+                .with("teacher_forced", Json::Arr(teacher_json))
+                .with("spec_off_tokens_per_s", Json::Num(off_tps))
+                .with("scheduler", Json::Arr(sched_spec_json)),
         )
         .with("shapes", Json::Arr(shapes_json))
         .with("batch4_cached_bcq_tokens_per_s", Json::Num(batch4_tps))

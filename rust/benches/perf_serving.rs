@@ -151,7 +151,7 @@ fn run(cfg: &ModelConfig, w: &Weights, prefill_chunk: usize) -> RunResult {
     run_continuous_opts(
         &mut engine,
         &b,
-        ContinuousOpts { prefill_chunk },
+        ContinuousOpts { prefill_chunk, ..ContinuousOpts::default() },
         Sampling::Greedy,
         None,
         |id, r| out.push((id, r)),

@@ -40,11 +40,13 @@
 //! whole batch).
 
 use super::batcher::{Batcher, PopResult};
+use super::drafter::{Drafter, DrafterKind};
 use super::metrics::ServerMetrics;
 use super::request::{Request, Response, ShedError, ShedReason};
 use super::scheduler::{sample_from_logits, Sampling};
 use super::session::{DecodeEngine, PrefillProgress};
 use crate::kvcache::KvPressure;
+use std::sync::OnceLock;
 use std::time::Instant;
 
 /// Knobs for the continuous loop.
@@ -56,11 +58,27 @@ pub struct ContinuousOpts {
     /// finite chunk bounds how long live decode lanes stall behind a
     /// long prompt. Output is bit-identical either way.
     pub prefill_chunk: usize,
+    /// Maximum draft tokens verified per lane per step (`0` =
+    /// speculation off). Emitted tokens are **bit-identical** at any
+    /// value: drafts are greedily verified against the real model's
+    /// logits and rejected tails are rolled back, so `spec_k` only
+    /// trades verify-row compute for multi-token steps. Defaults from
+    /// `LOBCQ_SPEC_K` (read once).
+    pub spec_k: usize,
+    /// Which drafter each lane gets ([`DrafterKind::Off`] disables
+    /// speculation regardless of `spec_k`).
+    pub drafter: DrafterKind,
 }
 
 impl Default for ContinuousOpts {
     fn default() -> Self {
-        ContinuousOpts { prefill_chunk: usize::MAX }
+        // Read once, like the kernel backend's LOBCQ_FORCE_SCALAR — the
+        // CI leg forces speculation over the whole suite this way.
+        static SPEC_K: OnceLock<usize> = OnceLock::new();
+        let spec_k = *SPEC_K.get_or_init(|| {
+            std::env::var("LOBCQ_SPEC_K").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+        });
+        ContinuousOpts { prefill_chunk: usize::MAX, spec_k, drafter: DrafterKind::default() }
     }
 }
 
@@ -89,6 +107,14 @@ struct Lane {
     last_step_at: Instant,
     decode_us: f64,
     max_batch_seen: usize,
+    /// Per-lane draft source when speculation is on. Observes the
+    /// lane's committed stream only (prompt + emitted tokens) — never
+    /// rolled-back draft positions.
+    drafter: Option<Box<dyn Drafter>>,
+    /// Draft tokens proposed / greedily accepted over this request's
+    /// lifetime (the per-request acceptance rate at retirement).
+    drafted: usize,
+    accepted: usize,
 }
 
 /// Drive the engine with default options — inline prefill, the
@@ -124,10 +150,19 @@ pub fn run_continuous_opts<E: DecodeEngine + ?Sized>(
     // would meet the same wall, so admission holds until a lane retires
     // (frees pages) or the loop runs dry.
     let mut admission_paused = false;
-    // Per-step staging, reused across iterations.
+    // Speculation runs only when configured on AND the engine has the
+    // stacked-verify/rollback pair; everything else is the plain step.
+    let spec_on =
+        opts.spec_k > 0 && opts.drafter != DrafterKind::Off && engine.supports_speculation();
+    let drafter_kind = if spec_on { Some(opts.drafter) } else { None };
+    // Per-step staging, reused across iterations (draft buffers are
+    // recycled slot-by-slot so steady-state speculation allocates
+    // nothing here either).
     let mut step_idx: Vec<usize> = Vec::new(); // indices into `active`
     let mut step_lanes: Vec<usize> = Vec::new(); // engine lane ids
     let mut step_tokens: Vec<u32> = Vec::new();
+    let mut step_drafts: Vec<Vec<u32>> = Vec::new();
+    let mut step_emitted: Vec<usize> = Vec::new();
     loop {
         // ---- terminal shed deliveries (deadline-expired at pop) ----
         deliver_shed(batcher, metrics, &mut deliver);
@@ -164,7 +199,7 @@ pub fn run_continuous_opts<E: DecodeEngine + ?Sized>(
                     None => break, // nothing queued right now; keep decoding
                 }
             };
-            admit(engine, req, &mut admit_seq, &mut active, &mut deliver);
+            admit(engine, req, drafter_kind, &mut admit_seq, &mut active, &mut deliver);
         }
         if active.is_empty() {
             // Admission failed (e.g. prefill error on the only request);
@@ -202,13 +237,19 @@ pub fn run_continuous_opts<E: DecodeEngine + ?Sized>(
             lane.max_batch_seen = lane.max_batch_seen.max(cur);
         }
 
-        // ---- ONE fused decode step across every decoding lane ----
+        // ---- ONE fused decode step across every decoding lane; with
+        // speculation on, each lane also stages up to spec_k draft
+        // tokens as extra verify rows of the same fused call ----
         let mut finished: Vec<usize> = Vec::new();
         step_idx.clear();
         step_lanes.clear();
         step_tokens.clear();
+        let mut drafted_this_step = 0usize;
         if !pressured {
-            for (idx, lane) in active.iter().enumerate() {
+            let mut draft_span =
+                if spec_on { Some(crate::obs::trace::span("op", "draft")) } else { None };
+            let engine_cap = engine.max_tokens();
+            for (idx, lane) in active.iter_mut().enumerate() {
                 if matches!(lane.state, LaneState::Prefilling) {
                     continue; // still chunking its prompt in
                 }
@@ -219,41 +260,125 @@ pub fn run_continuous_opts<E: DecodeEngine + ?Sized>(
                 step_idx.push(idx);
                 step_lanes.push(lane.lane);
                 step_tokens.push(*lane.generated.last().unwrap());
+                let di = step_idx.len() - 1;
+                if step_drafts.len() == di {
+                    step_drafts.push(Vec::new());
+                }
+                step_drafts[di].clear();
+                if spec_on {
+                    // The cache holds everything but the pending
+                    // frontier; cap the draft so budget and lane
+                    // capacity can absorb frontier + k + bonus token.
+                    let cache_len = lane.req.prompt.len() + lane.generated.len() - 1;
+                    let k = opts
+                        .spec_k
+                        .min(lane.budget - lane.generated.len() - 1)
+                        .min(engine_cap.saturating_sub(cache_len + 1));
+                    if k > 0 {
+                        if let Some(d) = lane.drafter.as_deref_mut() {
+                            d.draft(k, &mut step_drafts[di]);
+                        }
+                    }
+                    drafted_this_step += step_drafts[di].len();
+                }
+            }
+            if let Some(s) = draft_span.as_mut() {
+                s.set_arg(drafted_this_step as u64);
             }
         }
         if !step_idx.is_empty() {
+            let step_rows = step_idx.len() + drafted_this_step;
             if let Some(m) = metrics {
-                m.record_step_occupancy(step_idx.len());
+                // Occupancy counts verify rows: the fused GEMMs run at
+                // M = rows, which is the utilization the histogram is for.
+                m.record_step_occupancy(step_rows);
             }
             let mut step_span = crate::obs::trace::span("sched", "step");
-            step_span.set_arg(step_idx.len() as u64);
+            step_span.set_arg(step_rows as u64);
             let t0 = Instant::now();
-            let results = engine.decode_batch(&step_lanes, &step_tokens);
+            let results = if drafted_this_step > 0 {
+                let mut verify_span = crate::obs::trace::span("op", "verify");
+                verify_span.set_arg(step_rows as u64);
+                engine.decode_batch_spec(&step_lanes, &step_tokens, &step_drafts[..step_idx.len()])
+            } else {
+                engine.decode_batch(&step_lanes, &step_tokens)
+            };
             debug_assert_eq!(results.len(), step_idx.len());
             if results
                 .iter()
                 .any(|r| matches!(r, Err(e) if e.downcast_ref::<KvPressure>().is_some()))
             {
                 // Page pressure fails the whole step with NOTHING
-                // consumed (the engine pre-checks the step's pages), so
-                // dropping every result and replaying after relief is
-                // bit-exact.
+                // consumed (the engine pre-checks the step's pages —
+                // draft rows included — before appending), so dropping
+                // every result and replaying after relief is bit-exact.
                 pressured = true;
                 finished.clear();
             } else {
-                // The step's wall time is shared work; attribute an
-                // equal share to each participating lane.
-                let share_us = t0.elapsed().as_secs_f64() * 1e6 / step_idx.len() as f64;
+                let step_us = t0.elapsed().as_secs_f64() * 1e6;
                 let stepped_at = Instant::now();
-                for (&idx, result) in step_idx.iter().zip(results) {
+                let vocab = engine.vocab();
+                step_emitted.clear();
+                let (mut step_drafted, mut step_accepted, mut rollbacks) = (0usize, 0usize, 0usize);
+                for (si, (&idx, result)) in step_idx.iter().zip(results).enumerate() {
                     let lane = &mut active[idx];
                     match result {
                         Ok(logits) => {
-                            lane.decode_us += share_us;
+                            // Row r holds the logits after the lane's
+                            // r-th fed token; greedily verify the draft
+                            // row by row. The sampling step index is the
+                            // same prompt+generated count a plain decode
+                            // step would use at that position, so the
+                            // emitted sequence is bit-identical.
+                            let rows = logits.len() / vocab;
+                            let k = rows - 1;
+                            debug_assert_eq!(k, step_drafts[si].len());
+                            let mut emitted = 0usize;
+                            for m in 0..rows {
+                                let row = &logits[m * vocab..(m + 1) * vocab];
+                                let step = lane.req.prompt.len() + lane.generated.len();
+                                let t = sample_from_logits(row, sampling, lane.req.id, step);
+                                lane.generated.push(t);
+                                if let Some(d) = lane.drafter.as_deref_mut() {
+                                    d.observe(t);
+                                }
+                                emitted += 1;
+                                if m < k && t != step_drafts[si][m] {
+                                    break; // rejection: rows past m are garbage
+                                }
+                            }
                             lane.last_step_at = stepped_at;
-                            let step = lane.req.prompt.len() + lane.generated.len();
-                            lane.generated.push(sample_from_logits(&logits, sampling, lane.req.id, step));
-                            if lane.generated.len() >= lane.budget {
+                            let mut dead = false;
+                            if k > 0 {
+                                let j = emitted - 1; // accepted draft prefix
+                                lane.drafted += k;
+                                lane.accepted += j;
+                                step_drafted += k;
+                                step_accepted += j;
+                                crate::obs::trace::lifecycle("speculation", lane.req.id, j as u64);
+                                if j < k {
+                                    // Erase the rejected tail: the cache
+                                    // keeps exactly the positions behind
+                                    // the pending frontier, same as a
+                                    // lane that never speculated.
+                                    let keep = lane.req.prompt.len() + lane.generated.len() - 1;
+                                    let _rb =
+                                        crate::obs::trace::span_id("op", "rollback", lane.req.id);
+                                    rollbacks += 1;
+                                    if let Err(e) = engine.truncate(lane.lane, keep) {
+                                        crate::obs::trace::lifecycle("failed", lane.req.id, 0);
+                                        deliver(
+                                            lane.req.id,
+                                            Err(anyhow::anyhow!("speculative rollback failed: {e}")),
+                                        );
+                                        lane.generated.clear();
+                                        finished.push(idx);
+                                        dead = true;
+                                    }
+                                }
+                            }
+                            step_emitted.push(if dead { 0 } else { emitted });
+                            if !dead && lane.generated.len() >= lane.budget {
                                 finished.push(idx);
                             }
                         }
@@ -262,7 +387,27 @@ pub fn run_continuous_opts<E: DecodeEngine + ?Sized>(
                             deliver(lane.req.id, Err(anyhow::anyhow!("decode failed: {e}")));
                             lane.generated.clear(); // mark dead: the retire loop below
                             finished.push(idx); // releases the lane, delivers nothing
+                            step_emitted.push(0);
                         }
+                    }
+                }
+                // The step's wall time is shared work; attribute it per
+                // EMITTED token, so a verify step that accepted j tokens
+                // books step_time * (j+1)/total to that lane — honest
+                // per-token latency under speculation (single-token
+                // steps degenerate to the old equal share).
+                let total_emitted: usize = step_emitted.iter().sum();
+                if total_emitted > 0 {
+                    let per_tok = step_us / total_emitted as f64;
+                    for (&idx, &em) in step_idx.iter().zip(&step_emitted) {
+                        if em > 0 {
+                            active[idx].decode_us += per_tok * em as f64;
+                        }
+                    }
+                }
+                if step_drafted > 0 {
+                    if let Some(m) = metrics {
+                        m.record_spec_step(step_drafted, step_accepted, rollbacks);
                     }
                 }
             }
@@ -295,6 +440,11 @@ pub fn run_continuous_opts<E: DecodeEngine + ?Sized>(
             };
             crate::obs::trace::lifecycle("finished", lane.req.id, n as u64);
             crate::obs::trace::complete("request", "request", lane.req.id, n as u64, lane.req.submitted_at);
+            if lane.drafted > 0 {
+                if let Some(m) = metrics {
+                    m.record_spec_acceptance(lane.accepted as f64 / lane.drafted as f64);
+                }
+            }
             deliver(
                 lane.req.id,
                 Ok(Response {
@@ -445,6 +595,9 @@ fn advance_prefill<E: DecodeEngine + ?Sized>(
             lane.last_step_at = now;
             let first = sample_from_logits(&logits, sampling, lane.req.id, lane.req.prompt.len());
             lane.generated.push(first);
+            if let Some(d) = lane.drafter.as_deref_mut() {
+                d.observe(first);
+            }
             lane.state = LaneState::Decoding;
             false
         }
@@ -481,6 +634,7 @@ fn record_engine_stats<E: DecodeEngine + ?Sized>(engine: &E, metrics: Option<&Se
 fn admit<E: DecodeEngine + ?Sized>(
     engine: &mut E,
     req: Request,
+    drafter_kind: Option<DrafterKind>,
     admit_seq: &mut u64,
     active: &mut Vec<Lane>,
     deliver: &mut impl FnMut(u64, anyhow::Result<Response>),
@@ -492,7 +646,16 @@ fn admit<E: DecodeEngine + ?Sized>(
     let budget = req.max_new.min(cap).max(1);
     // A deferred/preempted request re-admits: it may log "admitted"
     // more than once, but still reaches exactly one terminal event.
+    // (Its drafter is rebuilt from scratch each time — fed the prompt
+    // here and each emitted token later, so a preempted replay observes
+    // the identical stream.)
     crate::obs::trace::lifecycle("admitted", req.id, req.prompt.len() as u64);
+    let mut drafter = drafter_kind.and_then(|k| k.build());
+    if let Some(d) = drafter.as_deref_mut() {
+        for &t in &req.prompt {
+            d.observe(t);
+        }
+    }
     match engine.begin_prefill(&req.prompt) {
         Ok(lane) => {
             *admit_seq += 1;
@@ -508,6 +671,9 @@ fn admit<E: DecodeEngine + ?Sized>(
                 last_step_at: picked_at,
                 decode_us: 0.0,
                 max_batch_seen: 0,
+                drafter,
+                drafted: 0,
+                accepted: 0,
             });
         }
         Err(e) => {
@@ -530,6 +696,14 @@ mod tests {
 
     fn zero_wait() -> BatchPolicy {
         BatchPolicy { max_batch: 8, max_wait: Duration::ZERO, queue_cap: None }
+    }
+
+    fn chunked_opts(chunk: usize) -> ContinuousOpts {
+        ContinuousOpts { prefill_chunk: chunk, ..ContinuousOpts::default() }
+    }
+
+    fn spec_opts(k: usize, drafter: DrafterKind) -> ContinuousOpts {
+        ContinuousOpts { prefill_chunk: usize::MAX, spec_k: k, drafter }
     }
 
     fn drive(engine: &mut MockDecodeEngine, reqs: Vec<Request>) -> Vec<(u64, anyhow::Result<Response>)> {
@@ -659,7 +833,7 @@ mod tests {
         let mut inline = MockDecodeEngine::new(2, 32);
         let mut chunked = MockDecodeEngine::new(2, 32);
         let a = drive(&mut inline, reqs());
-        let b = drive_opts(&mut chunked, reqs(), ContinuousOpts { prefill_chunk: 2 }, None);
+        let b = drive_opts(&mut chunked, reqs(), chunked_opts(2), None);
         assert!(chunked.chunk_calls > inline.chunk_calls, "chunking never split a prompt");
         for id in [1u64, 2, 3] {
             let find = |o: &[(u64, anyhow::Result<Response>)]| {
@@ -738,7 +912,7 @@ mod tests {
         let out = drive_opts(
             &mut e,
             vec![req(1, (0..5).collect(), 4)], // 5 prompt tokens > 3-token budget
-            ContinuousOpts { prefill_chunk: 2 },
+            chunked_opts(2),
             Some(&m),
         );
         assert_eq!(out.len(), 1, "shed request got no terminal event");
@@ -764,7 +938,7 @@ mod tests {
         let out = drive_opts(
             &mut e,
             vec![req(1, vec![1], 6), req(2, vec![4, 5, 6, 7], 1)],
-            ContinuousOpts { prefill_chunk: 2 },
+            chunked_opts(2),
             Some(&m),
         );
         assert_eq!(out.len(), 2);
@@ -776,5 +950,130 @@ mod tests {
         assert_eq!(e.prefills, 3, "deferred request not readmitted via requeue");
         assert_eq!(e.releases, e.prefills, "lane leak across defer/readmit");
         assert_eq!(e.kv_used(), 0);
+    }
+
+    #[test]
+    fn ngram_speculation_is_bit_identical_with_high_acceptance() {
+        use crate::coordinator::metrics::ServerMetrics;
+        let m = ServerMetrics::new();
+        // Vocab 8: the mock's successor stream wraps after one lap, so
+        // the n-gram drafter learns the cycle and then drafts the exact
+        // continuation the model will emit — full acceptance, multi-token
+        // steps, zero rollbacks.
+        let mut plain = MockDecodeEngine::new(1, 8);
+        let a =
+            drive_opts(&mut plain, vec![req(1, vec![5], 16)], spec_opts(0, DrafterKind::Off), None);
+        let mut spec = MockDecodeEngine::new(1, 8);
+        let b = drive_opts(
+            &mut spec,
+            vec![req(1, vec![5], 16)],
+            spec_opts(4, DrafterKind::NGram),
+            Some(&m),
+        );
+        let ta = &a[0].1.as_ref().unwrap().tokens;
+        let tb = &b[0].1.as_ref().unwrap().tokens;
+        assert_eq!(ta, tb, "speculation changed the emitted sequence");
+        assert_eq!(tb.len(), 16);
+        assert!(spec.spec_calls > 0, "no speculative step ran");
+        assert_eq!(spec.truncate_calls, 0, "perfect drafts still rolled back");
+        // Multi-token steps mean fewer engine calls for the same tokens.
+        assert!(
+            spec.batch_calls + spec.spec_calls < plain.batch_calls,
+            "{}+{} spec-run calls vs {} plain",
+            spec.batch_calls,
+            spec.spec_calls,
+            plain.batch_calls
+        );
+        let s = m.snapshot();
+        let sp = s.spec.expect("speculative run published no spec stats");
+        assert_eq!((sp.steps, sp.drafted, sp.accepted), (2, 6, 6));
+        assert_eq!((sp.wasted, sp.rollbacks, sp.lanes), (0, 0, 1));
+        assert!((sp.acceptance_mean_pct - 100.0).abs() < 1e-9, "{}", sp.acceptance_mean_pct);
+        // Occupancy counts verify rows, not lanes: a 1-lane run with
+        // k=4 drafts shows fused steps wider than the lane count.
+        assert!(
+            s.occupancy_hist.iter().any(|&(rows, _)| rows > 1),
+            "verify rows missing from occupancy: {:?}",
+            s.occupancy_hist
+        );
+    }
+
+    #[test]
+    fn always_wrong_drafter_rolls_back_and_stays_bit_identical() {
+        use crate::coordinator::metrics::ServerMetrics;
+        let m = ServerMetrics::new();
+        let reqs = || vec![req(1, vec![5], 4), req(2, vec![9, 10], 3)];
+        let mut plain = MockDecodeEngine::new(2, 32);
+        let a = drive_opts(&mut plain, reqs(), spec_opts(0, DrafterKind::Off), None);
+        // Token 31 never appears in either successor stream, so every
+        // draft is fully rejected and every speculative step rolls back.
+        let mut spec = MockDecodeEngine::new(2, 32);
+        let wrong = DrafterKind::AlwaysWrong { token: 31 };
+        let b = drive_opts(&mut spec, reqs(), spec_opts(3, wrong), Some(&m));
+        for id in [1u64, 2] {
+            let find = |o: &[(u64, anyhow::Result<Response>)]| {
+                o.iter().find(|(i, _)| *i == id).unwrap().1.as_ref().unwrap().tokens.clone()
+            };
+            assert_eq!(find(&a), find(&b), "request {id} diverged under adversarial drafting");
+        }
+        assert!(spec.spec_calls > 0, "no speculative step ran");
+        assert!(spec.truncate_calls > 0, "full rejection never rolled back");
+        assert_eq!((spec.releases, spec.kv_used()), (2, 0), "rollback leaked lanes or KV");
+        let sp = m.snapshot().spec.expect("no spec stats");
+        assert_eq!(sp.accepted, 0, "always-wrong drafts got accepted");
+        assert_eq!(sp.wasted, sp.drafted);
+        assert_eq!(sp.rollbacks, spec.truncate_calls as u64);
+        assert_eq!(sp.lanes, 2);
+        assert_eq!(sp.acceptance_mean_pct, 0.0);
+    }
+
+    #[test]
+    fn kv_pressure_during_verify_step_replays_bit_exactly() {
+        use crate::coordinator::metrics::ServerMetrics;
+        let m = ServerMetrics::new();
+        let mut e = MockDecodeEngine::new(2, 32);
+        // Both prefills fit, but the first co-decoded verify step needs
+        // 2 lanes x (1 frontier + 2 draft) = 6 rows on top of 2 cached
+        // tokens > 7: the engine pre-checks and consumes NOTHING, the
+        // ladder preempts the newest lane, and both requests still emit
+        // the exact successor chains.
+        e.kv_capacity = Some(7);
+        let wrong = DrafterKind::AlwaysWrong { token: 31 };
+        let out = drive_opts(
+            &mut e,
+            vec![req(1, vec![1], 4), req(2, vec![7], 4)],
+            spec_opts(2, wrong),
+            Some(&m),
+        );
+        assert_eq!(out.len(), 2);
+        let get = |id: u64| out.iter().find(|(i, _)| *i == id).unwrap().1.as_ref().unwrap().clone();
+        assert_eq!(get(1).tokens, vec![2, 3, 4, 5]);
+        assert_eq!(get(2).tokens, vec![8, 9, 10, 11]);
+        let s = m.snapshot();
+        assert_eq!(s.preempted, 1, "verify-step pressure never walked the ladder");
+        assert!(s.spec.unwrap().rollbacks > 0, "rejections stopped rolling back after relief");
+        assert!(e.truncate_calls > 0);
+        assert_eq!(e.releases, 3, "preempted lane leaked");
+        assert_eq!(e.kv_used(), 0);
+    }
+
+    #[test]
+    fn per_token_itl_attribution_under_speculation() {
+        use crate::coordinator::metrics::ServerMetrics;
+        // An accepted multi-token step books its wall time across every
+        // emitted token, so ITL under speculation reflects per-token
+        // cost, not per-step cost. With full acceptance the execute time
+        // still sums to the steps' wall time (smoke-level: positive and
+        // finite, exact timing is wall-clock).
+        let m = ServerMetrics::new();
+        let mut e = MockDecodeEngine::new(1, 8);
+        let opts = spec_opts(4, DrafterKind::NGram);
+        let out = drive_opts(&mut e, vec![req(1, vec![5], 16)], opts, Some(&m));
+        let r = out[0].1.as_ref().unwrap();
+        assert_eq!(r.tokens.len(), 16);
+        assert!(r.execute_us > 0.0 && r.execute_us.is_finite());
+        assert!(r.itl_us > 0.0, "multi-token response lost its ITL");
+        let s = m.snapshot();
+        assert!(s.itl_p50_us > 0.0);
     }
 }

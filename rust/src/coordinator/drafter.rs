@@ -1,0 +1,218 @@
+//! Draft-token proposal for speculative decoding (DESIGN.md
+//! §Speculative decoding). A [`Drafter`] is the cheap half of the
+//! drafter/verifier loop: per lane, it watches the token stream (prompt
+//! + everything generated so far) and proposes up to `k` continuation
+//! tokens that the fused stacked-verify step
+//! ([`decode_step_batch_spec`](crate::model::decode::decode_step_batch_spec))
+//! then checks in one W4A4 forward. Drafters only ever *propose* —
+//! verification is greedy against the real model's logits, so a bad
+//! drafter costs wasted verify rows, never a wrong token: emitted
+//! sequences stay bit-identical to non-speculative decode regardless of
+//! what is drafted.
+//!
+//! The trait is deliberately minimal (observe tokens, emit a draft) so
+//! a reduced-layer self-draft model can slot in behind the same seam
+//! later; today's implementation is [`NGramDrafter`], a suffix-lookup
+//! (bigram) table over the lane's own history — free to build, and
+//! effective exactly on the repetitive continuations where speculation
+//! pays (code, templated text, the bench's looped corpus).
+
+use std::collections::HashMap;
+
+/// Per-lane draft-token source. One instance per lane: `observe` feeds
+/// it every token the lane has committed (prompt tokens at admission,
+/// then each accepted/corrected token as it is emitted), `draft`
+/// proposes up to `k` tokens extending that history.
+pub trait Drafter: Send {
+    /// Feed one committed token of this lane's stream. Called for every
+    /// prompt token and every emitted token, in order — including
+    /// tokens that replaced a rejected draft, so the drafter's view
+    /// never contains rolled-back tokens.
+    fn observe(&mut self, token: u32);
+
+    /// Propose up to `k` tokens continuing the observed stream into
+    /// `out` (cleared first). Fewer than `k` — including zero — is
+    /// always legal; an empty draft makes the scheduler fall back to
+    /// the plain fused step for that round.
+    fn draft(&mut self, k: usize, out: &mut Vec<u32>);
+}
+
+/// Suffix-lookup drafter: remembers, for every token, the token that
+/// most recently followed it, and drafts by walking that successor map
+/// from the frontier — proposing the continuation the lane itself
+/// produced last time it was at this token. Last occurrence wins, so
+/// the table adapts as the stream drifts. O(1) per observe, O(k) per
+/// draft, one map entry per distinct token seen.
+#[derive(Debug, Default)]
+pub struct NGramDrafter {
+    /// token → the token that most recently followed it.
+    next: HashMap<u32, u32>,
+    /// Most recently observed token (the frontier the draft extends).
+    last: Option<u32>,
+}
+
+impl NGramDrafter {
+    pub fn new() -> NGramDrafter {
+        NGramDrafter::default()
+    }
+}
+
+impl Drafter for NGramDrafter {
+    fn observe(&mut self, token: u32) {
+        if let Some(prev) = self.last {
+            self.next.insert(prev, token);
+        }
+        self.last = Some(token);
+    }
+
+    fn draft(&mut self, k: usize, out: &mut Vec<u32>) {
+        out.clear();
+        let Some(mut cur) = self.last else { return };
+        for _ in 0..k {
+            // Walk the successor chain speculatively — each hop assumes
+            // the previous proposal is accepted, which is exactly what
+            // the stacked verify checks position by position.
+            match self.next.get(&cur) {
+                Some(&nxt) => {
+                    out.push(nxt);
+                    cur = nxt;
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+/// Adversarial drafter for tests: always proposes `k` copies of a fixed
+/// token, so on any stream where the model never emits that token every
+/// draft is fully rejected and every speculative step exercises the
+/// rollback path. The bit-exactness property tests lean on it — a
+/// system that survives an always-wrong drafter unchanged survives any
+/// drafter.
+#[derive(Debug)]
+pub struct AlwaysWrongDrafter {
+    pub token: u32,
+}
+
+impl Drafter for AlwaysWrongDrafter {
+    fn observe(&mut self, _token: u32) {}
+
+    fn draft(&mut self, k: usize, out: &mut Vec<u32>) {
+        out.clear();
+        out.resize(k, self.token);
+    }
+}
+
+/// Which drafter a serving run builds per lane — the `--drafter` CLI
+/// knob. `Off` disables speculation even when `spec_k > 0`.
+/// `AlwaysWrong` is test-only (not parseable from the CLI): it forces a
+/// full rejection + rollback on every speculative step, the adversarial
+/// half of the bit-exactness property tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DrafterKind {
+    #[default]
+    NGram,
+    Off,
+    AlwaysWrong { token: u32 },
+}
+
+impl DrafterKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DrafterKind::NGram => "ngram",
+            DrafterKind::Off => "off",
+            DrafterKind::AlwaysWrong { .. } => "always-wrong",
+        }
+    }
+
+    /// Parse the `--drafter` argument.
+    pub fn parse(s: &str) -> anyhow::Result<DrafterKind> {
+        match s {
+            "ngram" => Ok(DrafterKind::NGram),
+            "off" => Ok(DrafterKind::Off),
+            _ => anyhow::bail!("unknown drafter {s:?} (expected ngram|off)"),
+        }
+    }
+
+    /// Build one lane's drafter, fed nothing yet.
+    pub fn build(self) -> Option<Box<dyn Drafter>> {
+        match self {
+            DrafterKind::NGram => Some(Box::new(NGramDrafter::new())),
+            DrafterKind::Off => None,
+            DrafterKind::AlwaysWrong { token } => Some(Box::new(AlwaysWrongDrafter { token })),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ngram_drafts_repetitive_continuations() {
+        let mut d = NGramDrafter::new();
+        for &t in &[1u32, 2, 3, 1, 2, 3, 1] {
+            d.observe(t);
+        }
+        let mut out = Vec::new();
+        d.draft(4, &mut out);
+        // Frontier is 1; the cycle 1→2→3→1 replays for as many tokens
+        // as asked.
+        assert_eq!(out, vec![2, 3, 1, 2]);
+        d.draft(2, &mut out);
+        assert_eq!(out, vec![2, 3]);
+    }
+
+    #[test]
+    fn ngram_last_occurrence_wins_and_cold_start_is_empty() {
+        let mut d = NGramDrafter::new();
+        let mut out = vec![99];
+        d.draft(3, &mut out);
+        assert!(out.is_empty(), "cold drafter must propose nothing");
+        for &t in &[5u32, 6, 5, 7] {
+            d.observe(t);
+        }
+        d.draft(1, &mut out);
+        assert!(out.is_empty(), "7 has no recorded successor");
+        d.observe(5);
+        d.draft(2, &mut out);
+        // 5's successor was updated from 6 to 7 by the later occurrence.
+        assert_eq!(out, vec![7, 5]);
+    }
+
+    #[test]
+    fn successor_streams_never_self_draft() {
+        // MockDecodeEngine emits strictly increasing successor tokens;
+        // an n-gram drafter observing such a stream finds no repeated
+        // frontier and proposes nothing — the property that makes the
+        // LOBCQ_SPEC_K CI leg a no-op for non-repetitive mock tests.
+        let mut d = NGramDrafter::new();
+        for t in 10u32..20 {
+            d.observe(t);
+        }
+        let mut out = Vec::new();
+        d.draft(4, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn always_wrong_drafts_k_copies() {
+        let mut d = AlwaysWrongDrafter { token: 42 };
+        d.observe(1);
+        let mut out = Vec::new();
+        d.draft(3, &mut out);
+        assert_eq!(out, vec![42, 42, 42]);
+    }
+
+    #[test]
+    fn kind_parses_and_builds() {
+        assert_eq!(DrafterKind::parse("ngram").unwrap(), DrafterKind::NGram);
+        assert_eq!(DrafterKind::parse("off").unwrap(), DrafterKind::Off);
+        assert!(DrafterKind::parse("oracle").is_err());
+        // The test-only kind must never be CLI-reachable.
+        assert!(DrafterKind::parse("always-wrong").is_err());
+        assert!(DrafterKind::NGram.build().is_some());
+        assert!(DrafterKind::Off.build().is_none());
+        assert!(DrafterKind::AlwaysWrong { token: 3 }.build().is_some());
+    }
+}

@@ -46,6 +46,20 @@ struct Inner {
     /// Latest decoded-panel cache counters `(hits, decodes)` from the
     /// encoded-attention fast path (cumulative inside the cache).
     panel: Option<(u64, u64)>,
+    // Speculative decoding (drafter/verifier loop) counters — all zero
+    // unless at least one step actually drafted.
+    /// Fused steps that carried at least one drafted verify row.
+    spec_steps: u64,
+    /// Draft tokens proposed across all speculative steps.
+    spec_drafted: u64,
+    /// Draft tokens accepted by greedy verification.
+    spec_accepted: u64,
+    /// Rejected speculative steps that rolled the KV cache back.
+    spec_rollbacks: u64,
+    /// Per-lane lifetime acceptance rate, recorded at retirement as a
+    /// percent in [0, 100] (log buckets are coarse but the exact mean
+    /// rides along in the histogram's sum).
+    spec_acceptance: LatencyHistogram,
     // SLO counters: every admitted-then-displaced fate is counted, so
     // (responses + sheds) reconciles against accepted admissions.
     /// Pushes rejected at the admission cap (`QueueFull`).
@@ -94,6 +108,11 @@ impl ServerMetrics {
                 kv: None,
                 prefix: None,
                 panel: None,
+                spec_steps: 0,
+                spec_drafted: 0,
+                spec_accepted: 0,
+                spec_rollbacks: 0,
+                spec_acceptance: LatencyHistogram::new(),
                 rejected: 0,
                 shed_deadline: 0,
                 shed_kv: 0,
@@ -138,6 +157,24 @@ impl ServerMetrics {
     /// `decodes` panel fetches; the most recent pair is lossless).
     pub fn record_panel_stats(&self, hits: u64, decodes: u64) {
         self.inner.lock().unwrap().panel = Some((hits, decodes));
+    }
+
+    /// One fused step carried speculative verify rows: `drafted` tokens
+    /// were proposed across its lanes, `accepted` of them survived
+    /// greedy verification, and `rollbacks` lanes truncated a rejected
+    /// tail out of the KV cache.
+    pub fn record_spec_step(&self, drafted: usize, accepted: usize, rollbacks: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.spec_steps += 1;
+        g.spec_drafted += drafted as u64;
+        g.spec_accepted += accepted as u64;
+        g.spec_rollbacks += rollbacks as u64;
+    }
+
+    /// A lane that drafted at least once retired with the given lifetime
+    /// acceptance rate (accepted / drafted, in [0, 1]).
+    pub fn record_spec_acceptance(&self, rate: f64) {
+        self.inner.lock().unwrap().spec_acceptance.record_us(rate * 100.0);
     }
 
     pub fn record_response(&self, resp: &Response) {
@@ -222,6 +259,20 @@ impl ServerMetrics {
                 itl_p99_us: g.itl_by_prio[i].percentile_us(99.0),
             }
         });
+        let spec = if g.spec_steps > 0 || g.spec_acceptance.count() > 0 {
+            Some(SpecStats {
+                steps: g.spec_steps,
+                drafted: g.spec_drafted,
+                accepted: g.spec_accepted,
+                wasted: g.spec_drafted - g.spec_accepted,
+                rollbacks: g.spec_rollbacks,
+                lanes: g.spec_acceptance.count(),
+                acceptance_mean_pct: g.spec_acceptance.mean_us(),
+                acceptance_p50_pct: g.spec_acceptance.percentile_us(50.0),
+            })
+        } else {
+            None
+        };
         let snap = MetricsSnapshot {
             occupancy_hist: g
                 .occupancy
@@ -234,6 +285,7 @@ impl ServerMetrics {
             kv: g.kv,
             prefix: g.prefix,
             panel: g.panel,
+            spec,
             rejected: g.rejected,
             shed_deadline: g.shed_deadline,
             shed_kv: g.shed_kv,
@@ -267,6 +319,29 @@ impl ServerMetrics {
     }
 }
 
+/// Speculative-decoding counters: how much was drafted, how much of it
+/// survived verification, and how often the KV cache had to roll back.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecStats {
+    /// Fused steps that carried at least one drafted verify row.
+    pub steps: u64,
+    /// Draft tokens proposed (== extra verify rows computed).
+    pub drafted: u64,
+    /// Draft tokens accepted by greedy verification.
+    pub accepted: u64,
+    /// `drafted - accepted` — verify rows computed and discarded.
+    pub wasted: u64,
+    /// KV-cache rollbacks (one per rejected speculative lane-step).
+    pub rollbacks: u64,
+    /// Retired lanes contributing to the acceptance-rate histogram.
+    pub lanes: u64,
+    /// Mean lifetime acceptance rate over retired lanes, in percent.
+    pub acceptance_mean_pct: f64,
+    /// Median lifetime acceptance rate over retired lanes, in percent
+    /// (log-bucket approximation).
+    pub acceptance_p50_pct: f64,
+}
+
 /// Per-priority-class SLO latencies.
 #[derive(Debug, Clone, Copy)]
 pub struct PrioritySlo {
@@ -291,6 +366,8 @@ pub struct MetricsSnapshot {
     /// Decoded-panel cache `(hits, decodes)` — encoded-attention engines
     /// only.
     pub panel: Option<(u64, u64)>,
+    /// Speculative-decoding counters — present once any step drafted.
+    pub spec: Option<SpecStats>,
     /// Pushes rejected at the admission cap.
     pub rejected: u64,
     /// Requests shed for a queue-expired deadline.
@@ -381,6 +458,22 @@ impl MetricsSnapshot {
                     100.0 * hits as f64 / decodes as f64
                 ));
             }
+        }
+        if let Some(sp) = &self.spec {
+            let rate =
+                if sp.drafted > 0 { 100.0 * sp.accepted as f64 / sp.drafted as f64 } else { 0.0 };
+            s.push_str(&format!(
+                " | spec steps={} accepted={}/{} ({:.0}%) wasted={} rollbacks={} \
+                 lane-acceptance mean={:.0}% p50={:.0}%",
+                sp.steps,
+                sp.accepted,
+                sp.drafted,
+                rate,
+                sp.wasted,
+                sp.rollbacks,
+                sp.acceptance_mean_pct,
+                sp.acceptance_p50_pct
+            ));
         }
         if self.rejected + self.shed_deadline + self.shed_kv + self.deferred + self.preempted > 0
             || self.queue_depth_max > 0
@@ -488,6 +581,18 @@ impl MetricsSnapshot {
             pj.set("hits", Json::Num(hits as f64));
             pj.set("decodes", Json::Num(decodes as f64));
             j.set("panel", pj);
+        }
+        if let Some(sp) = &self.spec {
+            let mut sj = Json::obj();
+            sj.set("steps", Json::Num(sp.steps as f64));
+            sj.set("drafted", Json::Num(sp.drafted as f64));
+            sj.set("accepted", Json::Num(sp.accepted as f64));
+            sj.set("wasted", Json::Num(sp.wasted as f64));
+            sj.set("rollbacks", Json::Num(sp.rollbacks as f64));
+            sj.set("lanes", Json::Num(sp.lanes as f64));
+            sj.set("acceptance_mean_pct", Json::Num(sp.acceptance_mean_pct));
+            sj.set("acceptance_p50_pct", Json::Num(sp.acceptance_p50_pct));
+            j.set("speculation", sj);
         }
         j.set(
             "by_priority",
@@ -634,6 +739,33 @@ mod tests {
         assert_eq!(j.get("occupancy").unwrap().get("hist").unwrap().as_arr().unwrap().len(), 1);
         assert!(j.get("latency").unwrap().get("ttft_p50_us").unwrap().as_f64().unwrap() > 0.0);
         assert!(j.opt("kv").is_none() && j.opt("prefix").is_none());
+    }
+
+    #[test]
+    fn spec_counters_flow_to_report_and_json() {
+        let m = ServerMetrics::new();
+        let s = m.snapshot();
+        assert!(s.spec.is_none(), "idle metrics grew a speculation section");
+        assert!(!s.report().contains("spec"), "{}", s.report());
+        assert!(s.to_json().opt("speculation").is_none());
+        // Two speculative steps: 3-of-4 accepted then 0-of-2 (rollback).
+        m.record_spec_step(4, 3, 0);
+        m.record_spec_step(2, 0, 1);
+        m.record_spec_acceptance(0.5);
+        m.record_spec_acceptance(1.0);
+        let s = m.snapshot();
+        let sp = s.spec.unwrap();
+        assert_eq!((sp.steps, sp.drafted, sp.accepted), (2, 6, 3));
+        assert_eq!((sp.wasted, sp.rollbacks, sp.lanes), (3, 1, 2));
+        assert!((sp.acceptance_mean_pct - 75.0).abs() < 1e-9, "{}", sp.acceptance_mean_pct);
+        let r = s.report();
+        assert!(r.contains("spec steps=2 accepted=3/6 (50%)"), "{r}");
+        assert!(r.contains("wasted=3 rollbacks=1"), "{r}");
+        let j = crate::util::json::Json::parse(&s.to_json().to_string_compact()).unwrap();
+        let sj = j.get("speculation").unwrap();
+        assert_eq!(sj.get("drafted").unwrap().as_u64().unwrap(), 6);
+        assert_eq!(sj.get("rollbacks").unwrap().as_u64().unwrap(), 1);
+        assert!(sj.get("acceptance_mean_pct").unwrap().as_f64().unwrap() > 70.0);
     }
 
     #[test]

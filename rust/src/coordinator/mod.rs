@@ -6,6 +6,7 @@
 
 pub mod batcher;
 pub mod continuous;
+pub mod drafter;
 pub mod executor;
 pub mod metrics;
 pub mod request;
@@ -15,10 +16,11 @@ pub mod session;
 
 pub use batcher::{BatchPolicy, Batcher, PopResult, PushOutcome};
 pub use continuous::{run_continuous, run_continuous_opts, ContinuousOpts};
+pub use drafter::{AlwaysWrongDrafter, Drafter, DrafterKind, NGramDrafter};
 #[cfg(feature = "pjrt")]
 pub use executor::PjrtExecutor;
 pub use executor::{CpuExecutor, MockExecutor, StepExecutor};
-pub use metrics::{MetricsSnapshot, PrioritySlo, ServerMetrics};
+pub use metrics::{MetricsSnapshot, PrioritySlo, ServerMetrics, SpecStats};
 pub use request::{AdmitError, Limits, Priority, Request, Response, ShedError, ShedReason};
 pub use scheduler::{run_batch, Sampling};
 pub use server::{Server, Ticket};

@@ -14,7 +14,9 @@
 
 use crate::eval::Scheme;
 use crate::kvcache::{KvLayout, KvPressure, KvQuantizer, KvStats, KvStore, PagedKvCache, SlotId};
-use crate::model::decode::{decode_step, decode_step_batch, prefill_from, validate_decode_lane, DecodeScratch};
+use crate::model::decode::{
+    decode_step, decode_step_batch, decode_step_batch_spec, prefill_from, validate_decode_lane, DecodeScratch,
+};
 use crate::model::{ModelConfig, Weights};
 use crate::prefixcache::{PrefixCache, PrefixStats};
 use crate::quant::pipeline::{QuantPipeline, QuantPool};
@@ -88,6 +90,40 @@ pub trait DecodeEngine: Send {
     fn decode_batch(&mut self, lanes: &[usize], tokens: &[u32]) -> Vec<anyhow::Result<Vec<f32>>> {
         assert_eq!(lanes.len(), tokens.len(), "lanes/tokens length mismatch");
         lanes.iter().zip(tokens).map(|(&l, &t)| self.decode(l, t)).collect()
+    }
+    /// Whether this engine implements the speculative pair
+    /// ([`decode_batch_spec`](Self::decode_batch_spec) /
+    /// [`truncate`](Self::truncate)). The scheduler only drafts for
+    /// engines that do; everything else stays on the plain fused step.
+    fn supports_speculation(&self) -> bool {
+        false
+    }
+    /// Stacked-verify step: advance every listed lane by its frontier
+    /// token **plus** its speculative draft, returning per-lane results
+    /// where `Ok` holds `(1 + drafts[i].len()) * vocab` concatenated
+    /// logit rows — row `r` is the logits after the lane's `r`-th fed
+    /// token, so the caller greedily verifies the draft against rows
+    /// `0..k` and rolls rejected tail tokens back with
+    /// [`truncate`](Self::truncate). With every draft empty this **is**
+    /// [`decode_batch`](Self::decode_batch) (the default delegates), so
+    /// a speculative scheduler degrades to plain decode for free on
+    /// rounds where the drafter has nothing to say.
+    fn decode_batch_spec(&mut self, lanes: &[usize], tokens: &[u32], drafts: &[Vec<u32>]) -> Vec<anyhow::Result<Vec<f32>>> {
+        assert_eq!(lanes.len(), tokens.len(), "lanes/tokens length mismatch");
+        assert_eq!(lanes.len(), drafts.len(), "lanes/drafts length mismatch");
+        if drafts.iter().all(|d| d.is_empty()) {
+            return self.decode_batch(lanes, tokens);
+        }
+        lanes.iter().map(|_| Err(anyhow::anyhow!("engine does not support speculative decode"))).collect()
+    }
+    /// Rewind `lane`'s cached history to its first `len` tokens — the
+    /// rollback half of speculative decode, erasing rejected draft
+    /// positions so the lane is indistinguishable from one that never
+    /// speculated (prefix publishing included). Engines without KV
+    /// rollback refuse.
+    fn truncate(&mut self, lane: usize, len: usize) -> anyhow::Result<()> {
+        let _ = (lane, len);
+        anyhow::bail!("engine does not support KV truncation")
     }
     /// Free a lane (idempotent).
     fn release(&mut self, lane: usize);
@@ -410,6 +446,102 @@ impl DecodeEngine for DecodeSession {
         out
     }
 
+    fn supports_speculation(&self) -> bool {
+        true
+    }
+
+    /// Speculative hot path: the same per-lane screening as
+    /// [`decode_batch`](Self::decode_batch) — extended with the
+    /// draft-specific checks the fused call enforces (draft tokens in
+    /// vocab, stacked rows within capacity) so a bad draft fails alone —
+    /// then **one** fused stacked-verify forward over the healthy
+    /// subset. Every fed token's K/V is cached on success, so the slot
+    /// token history records frontier + draft per lane; the scheduler
+    /// rewinds rejected tails via [`truncate`](Self::truncate) before
+    /// anything can observe them.
+    fn decode_batch_spec(&mut self, lanes: &[usize], tokens: &[u32], drafts: &[Vec<u32>]) -> Vec<anyhow::Result<Vec<f32>>> {
+        assert_eq!(lanes.len(), tokens.len(), "lanes/tokens length mismatch");
+        assert_eq!(lanes.len(), drafts.len(), "lanes/drafts length mismatch");
+        let cap = self.cache.layout().max_tokens.min(self.cfg.max_t);
+        let mut out: Vec<anyhow::Result<Vec<f32>>> = Vec::with_capacity(lanes.len());
+        let mut valid: Vec<usize> = Vec::new(); // indices into `lanes`
+        for (i, &tok) in tokens.iter().enumerate() {
+            let lane_ok = validate_decode_lane(&self.cfg, &self.cache, lanes, i, tok).and_then(|pos| {
+                for &t in &drafts[i] {
+                    anyhow::ensure!((t as usize) < self.cfg.vocab, "draft token {t} out of vocab");
+                }
+                anyhow::ensure!(
+                    pos + 1 + drafts[i].len() <= cap,
+                    "draft of {} overruns capacity at position {pos}",
+                    drafts[i].len()
+                );
+                Ok(())
+            });
+            match lane_ok {
+                Ok(()) => {
+                    valid.push(i);
+                    out.push(Ok(Vec::new())); // placeholder, filled below
+                }
+                Err(e) => out.push(Err(e)),
+            }
+        }
+        if valid.is_empty() {
+            return out;
+        }
+        let slots: Vec<SlotId> = valid.iter().map(|&i| lanes[i]).collect();
+        let toks: Vec<u32> = valid.iter().map(|&i| tokens[i]).collect();
+        let drs: Vec<Vec<u32>> = valid.iter().map(|&i| drafts[i].clone()).collect();
+        let fused = decode_step_batch_spec(
+            &self.cfg,
+            &self.weights,
+            &mut self.cache,
+            &slots,
+            &toks,
+            &drs,
+            self.act.as_ref(),
+            &mut self.scratch,
+        );
+        match fused {
+            Ok(logits) => {
+                let v = self.cfg.vocab;
+                let mut row = 0usize;
+                for (j, &i) in valid.iter().enumerate() {
+                    let rows = 1 + drs[j].len();
+                    out[i] = Ok(logits[row * v..(row + rows) * v].to_vec());
+                    self.slot_tokens[lanes[i]].push(tokens[i]);
+                    self.slot_tokens[lanes[i]].extend_from_slice(&drs[j]);
+                    row += rows;
+                }
+            }
+            Err(e) => {
+                // Same atomicity contract as decode_batch: the fused
+                // step pre-reserves every stacked row's pages, so no
+                // lane advanced and typed KV pressure replays exactly.
+                if let Some(p) = e.downcast_ref::<KvPressure>() {
+                    for &i in &valid {
+                        out[i] = Err((*p).into());
+                    }
+                } else {
+                    for &i in &valid {
+                        out[i] = Err(anyhow::anyhow!("speculative decode failed: {e}"));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// KV rollback for a rejected draft tail: truncate the paged cache
+    /// (tail pages freed, boundary page rewritten in place — which bumps
+    /// its pool generation, invalidating any decoded panel over it) and
+    /// rewind the slot's token history in lockstep, so a later `release`
+    /// can never publish rolled-back tokens into the prefix tree.
+    fn truncate(&mut self, lane: usize, len: usize) -> anyhow::Result<()> {
+        self.cache.truncate(lane, len)?;
+        self.slot_tokens[lane].truncate(len);
+        Ok(())
+    }
+
     /// Free a lane — but first publish its full KV pages into the
     /// prefix tree, so the history this request paid to compute serves
     /// the next request with the same prefix. Publishing happens while
@@ -481,6 +613,12 @@ pub struct MockDecodeEngine {
     pub chunk_calls: usize,
     /// `relieve_pressure` calls (ladder-order tests).
     pub relieve_calls: usize,
+    /// Speculative `decode_batch_spec` calls with a nonempty draft, and
+    /// the widest stacked-row count seen.
+    pub spec_calls: usize,
+    pub max_spec_rows: usize,
+    /// `truncate` (rollback) calls.
+    pub truncate_calls: usize,
     /// Token the engine should fail decode on (error-path tests).
     pub poison_token: Option<u32>,
     /// Simulated KV budget in tokens (`None` = unbounded).
@@ -509,6 +647,9 @@ impl MockDecodeEngine {
             max_batch_lanes: 0,
             chunk_calls: 0,
             relieve_calls: 0,
+            spec_calls: 0,
+            max_spec_rows: 0,
+            truncate_calls: 0,
             poison_token: None,
             kv_capacity: None,
             kv_evictable: 0,
@@ -619,6 +760,69 @@ impl DecodeEngine for MockDecodeEngine {
             }
         }
         lanes.iter().zip(tokens).map(|(&l, &t)| self.decode(l, t)).collect()
+    }
+
+    fn supports_speculation(&self) -> bool {
+        true
+    }
+
+    /// Mock stacked verify: row `r`'s logits are the successor of the
+    /// lane's `r`-th fed token (so drafting `token + 1, token + 2, …` is
+    /// always fully accepted, anything else rejects at its first wrong
+    /// position). Mirrors the real step's atomicity: the whole step's
+    /// row cost is pre-checked against the KV budget, and a shortfall
+    /// fails every lane typed with **nothing consumed**. An all-empty
+    /// draft set goes through `decode_batch` so plain-step counters
+    /// stay comparable across spec-on/off runs.
+    fn decode_batch_spec(&mut self, lanes: &[usize], tokens: &[u32], drafts: &[Vec<u32>]) -> Vec<anyhow::Result<Vec<f32>>> {
+        assert_eq!(lanes.len(), tokens.len(), "lanes/tokens length mismatch");
+        assert_eq!(lanes.len(), drafts.len(), "lanes/drafts length mismatch");
+        if drafts.iter().all(|d| d.is_empty()) {
+            return self.decode_batch(lanes, tokens);
+        }
+        self.spec_calls += 1;
+        let total_rows: usize = drafts.iter().map(|d| 1 + d.len()).sum();
+        self.max_spec_rows = self.max_spec_rows.max(total_rows);
+        self.max_batch_lanes = self.max_batch_lanes.max(lanes.len());
+        if let Some(cap) = self.kv_capacity {
+            let need: usize = lanes
+                .iter()
+                .zip(drafts)
+                .filter(|(&l, _)| self.live.get(l).copied().unwrap_or(false))
+                .map(|(_, d)| 1 + d.len())
+                .sum();
+            let used = self.kv_used();
+            if used + need > cap {
+                let p = KvPressure { needed: need, headroom: cap.saturating_sub(used) };
+                return lanes.iter().map(|_| Err(p.into())).collect();
+            }
+        }
+        lanes
+            .iter()
+            .zip(tokens)
+            .zip(drafts)
+            .map(|((&l, &t), d)| {
+                anyhow::ensure!(self.live.get(l).copied().unwrap_or(false), "decode on a dead mock lane");
+                let mut rows = Vec::with_capacity((1 + d.len()) * self.vocab);
+                for &fed in std::iter::once(&t).chain(d) {
+                    if self.poison_token == Some(fed) {
+                        anyhow::bail!("poisoned token {fed}");
+                    }
+                    rows.extend_from_slice(&self.successor_logits(fed));
+                }
+                self.kv_per_lane[l] += 1 + d.len();
+                self.decodes += 1 + d.len();
+                Ok(rows)
+            })
+            .collect()
+    }
+
+    fn truncate(&mut self, lane: usize, len: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.live.get(lane).copied().unwrap_or(false), "truncate on a dead mock lane");
+        anyhow::ensure!(len <= self.kv_per_lane[lane], "truncate to {len} of {} mock tokens", self.kv_per_lane[lane]);
+        self.truncate_calls += 1;
+        self.kv_per_lane[lane] = len;
+        Ok(())
     }
 
     fn release(&mut self, lane: usize) {
@@ -953,6 +1157,138 @@ mod tests {
         e.release(a);
         e.release(b);
         assert_eq!(e.kv_used(), 0, "released lanes leaked mock KV");
+    }
+
+    #[test]
+    fn spec_batch_matches_plain_decode_and_rolls_back() {
+        // Engine-level speculation contract on the hardest path (encoded
+        // weights + BCQ KV): a stacked-verify call returns per-row
+        // logits bit-identical to plain per-step decode_batch, and after
+        // truncating the rejected tail the session is bit-identical to a
+        // twin that never speculated — including what release publishes.
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 61);
+        let scheme = crate::eval::scheme::mx4();
+        let kv = KvCacheOpts { page_tokens: 4, encoded: true, ..KvCacheOpts::default() };
+        let mk = || {
+            DecodeSession::new(cfg.clone(), &w, &scheme, QuantPool::serial(), 1, kv.clone()).unwrap()
+        };
+        let (mut plain, mut spec) = (mk(), mk());
+        assert!(spec.supports_speculation());
+        let (lp, _) = plain.prefill(&[1, 2, 3]).unwrap();
+        let (ls, _) = spec.prefill(&[1, 2, 3]).unwrap();
+        // Frontier 4, draft [5, 30]: verify row-by-row against the plain
+        // twin fed the same tokens one step at a time.
+        let drafts = vec![vec![5u32, 30]];
+        let out = spec.decode_batch_spec(&[ls], &[4], &drafts);
+        let rows = out[0].as_ref().unwrap();
+        assert_eq!(rows.len(), 3 * cfg.vocab);
+        for (r, &tok) in [4u32, 5, 30].iter().enumerate() {
+            let want = plain.decode(lp, tok).unwrap();
+            for (c, (&g, &x)) in rows[r * cfg.vocab..(r + 1) * cfg.vocab].iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), x.to_bits(), "row {r} col {c}");
+            }
+        }
+        // Reject everything after the accepted first draft token: both
+        // twins should now hold [1,2,3,4,5].
+        spec.truncate(ls, 5).unwrap();
+        plain.truncate(lp, 5).unwrap();
+        assert_eq!(spec.cache().seq_len(ls), 5);
+        let a = spec.decode(ls, 7).unwrap();
+        let b = plain.decode(lp, 7).unwrap();
+        for (c, (&g, &x)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(g.to_bits(), x.to_bits(), "post-rollback decode col {c}");
+        }
+        spec.release(ls);
+        plain.release(lp);
+    }
+
+    #[test]
+    fn spec_rollback_never_publishes_rejected_tokens() {
+        // A slot that speculated and rolled back must publish exactly
+        // the history a never-speculated twin would: a later request
+        // matching the rolled-back continuation must MISS.
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 62);
+        let kv = KvCacheOpts {
+            page_tokens: 2,
+            prefix_cache_bytes: Some(1 << 20),
+            ..KvCacheOpts::default()
+        };
+        let mut s = DecodeSession::new(cfg, &w, &Scheme::Bf16, QuantPool::serial(), 1, kv).unwrap();
+        let (lane, _) = s.prefill(&[1, 2, 3]).unwrap();
+        // Feed frontier 4 + rejected draft [8, 9], keep only the frontier.
+        let out = s.decode_batch_spec(&[lane], &[4], &[vec![8, 9]]);
+        assert!(out[0].is_ok());
+        s.truncate(lane, 4).unwrap();
+        s.release(lane);
+        // [1,2,3,4] (two full pt=2 page groups) is publishable; the
+        // rolled-back [..,8] continuation must not be.
+        let (l2, _) = s.prefill(&[1, 2, 3, 4, 8, 9]).unwrap();
+        let st = s.prefix_stats().unwrap();
+        assert_eq!(st.saved_tokens, 4, "prefix tree knows rolled-back tokens");
+        s.release(l2);
+    }
+
+    #[test]
+    fn spec_batch_screens_bad_drafts_per_lane() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 63);
+        let mut s =
+            DecodeSession::new(cfg.clone(), &w, &Scheme::Bf16, QuantPool::serial(), 2, KvCacheOpts::default())
+                .unwrap();
+        let (a, _) = s.prefill(&[1, 2]).unwrap();
+        let (b, _) = s.prefill(&[3]).unwrap();
+        // Lane b's draft has an out-of-vocab token: it must fail alone
+        // while lane a's speculative rows still come back.
+        let out = s.decode_batch_spec(&[a, b], &[4, 5], &[vec![6], vec![999]]);
+        assert!(out[0].is_ok(), "healthy lane dragged down: {:?}", out[0].as_ref().err());
+        assert!(out[1].is_err(), "out-of-vocab draft accepted");
+        assert_eq!(out[0].as_ref().unwrap().len(), 2 * cfg.vocab);
+        assert_eq!(s.cache().seq_len(a), 4, "frontier + draft cached");
+        assert_eq!(s.cache().seq_len(b), 1, "failed lane advanced");
+        // Truncate misuse is refused without mutating.
+        assert!(s.truncate(a, 99).is_err());
+        assert_eq!(s.cache().seq_len(a), 4);
+    }
+
+    #[test]
+    fn mock_spec_batch_verifies_and_truncates() {
+        let mut e = MockDecodeEngine::new(2, 16);
+        let (a, _) = e.prefill(&[1]).unwrap();
+        let (b, _) = e.prefill(&[2]).unwrap();
+        // Successor drafts are fully accepted; a wrong draft shows the
+        // mismatch at its row so a scheduler can verify greedily.
+        let out = e.decode_batch_spec(&[a, b], &[3, 5], &[vec![4, 5], vec![9]]);
+        assert_eq!((e.spec_calls, e.max_spec_rows), (1, 5));
+        let rows_a = out[0].as_ref().unwrap();
+        assert_eq!(rows_a.len(), 3 * 16);
+        assert_eq!(rows_a[4], 10.0, "row 0 must prefer successor 4");
+        assert_eq!(rows_a[16 + 5], 10.0, "row 1 must prefer successor 5");
+        let rows_b = out[1].as_ref().unwrap();
+        assert_eq!(rows_b[6], 10.0, "row 0 prefers 6, so draft 9 rejects");
+        // Roll lane b back to its pre-step cache (1 prompt token + the
+        // frontier), as a scheduler that rejected the draft would.
+        assert_eq!(e.kv_used(), 4 + 3, "1+3 rows on a, 1+2 rows on b");
+        e.truncate(b, 2).unwrap();
+        assert_eq!(e.truncate_calls, 1);
+        assert_eq!(e.kv_used(), 4 + 2, "rollback must return draft tokens");
+        // All-empty drafts route through the plain batch path.
+        let before = e.batch_calls;
+        let out = e.decode_batch_spec(&[a], &[6], &[vec![]]);
+        assert!(out[0].is_ok());
+        assert_eq!(e.batch_calls, before + 1, "empty drafts must use decode_batch");
+        assert_eq!(e.spec_calls, 1);
+        // Atomic pressure: a step too wide for the budget fails typed
+        // with nothing consumed.
+        e.kv_capacity = Some(e.kv_used() + 2);
+        let used = e.kv_used();
+        let out = e.decode_batch_spec(&[a, b], &[7, 8], &[vec![8, 9], vec![9]]);
+        for r in &out {
+            let err = r.as_ref().expect_err("over-budget spec step decoded");
+            assert!(err.downcast_ref::<KvPressure>().is_some(), "pressure lost its type: {err}");
+        }
+        assert_eq!(e.kv_used(), used, "failed spec step consumed KV");
     }
 
     #[test]

@@ -129,6 +129,22 @@ pub fn shared_prefix_workload(
     SharedPrefixWorkload { prefixes, requests }
 }
 
+/// A pathologically repetitive stream for the speculative-decoding
+/// benches: one grammar-generated `period`-token phrase tiled out to
+/// `n_tokens` (BOS first, like [`generate`]). After one period every
+/// token's successor is fixed, so an n-gram drafter converges to full
+/// acceptance — the workload shape speculation is supposed to win on.
+pub fn repetitive(seed: u64, period: usize, n_tokens: usize) -> Vec<u32> {
+    assert!(period >= 1, "repetitive stream needs a positive period");
+    let phrase = generate(seed, period + 1);
+    let mut out = vec![BOS];
+    while out.len() < n_tokens {
+        out.extend_from_slice(&phrase[1..]);
+    }
+    out.truncate(n_tokens);
+    out
+}
+
 /// Split a token stream into (N, t+1) next-token windows (stride = t).
 pub fn windows(tokens: &[u32], t: usize) -> Vec<Vec<u32>> {
     let mut out = Vec::new();
@@ -218,6 +234,21 @@ mod tests {
         if same.len() >= 2 {
             assert_ne!(same[0], same[1], "suffixes not unique");
         }
+    }
+
+    #[test]
+    fn repetitive_stream_tiles_one_phrase() {
+        let period = 12;
+        let toks = repetitive(77, period, 100);
+        assert_eq!(toks.len(), 100);
+        assert_eq!(toks[0], BOS);
+        assert!(toks.iter().all(|&t| t < VOCAB));
+        assert_eq!(toks, repetitive(77, period, 100), "not deterministic");
+        // Past the leading BOS the stream is exactly periodic.
+        for i in 1..100 - period {
+            assert_eq!(toks[i], toks[i + period], "aperiodic at {i}");
+        }
+        assert_ne!(repetitive(78, period, 100), toks);
     }
 
     #[test]

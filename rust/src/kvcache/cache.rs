@@ -262,6 +262,79 @@ impl PagedKvCache {
         Ok(pos + 1)
     }
 
+    /// Roll `slot` back to its first `len` tokens — the KV-rollback
+    /// primitive behind speculative decoding's reject path. Whole
+    /// now-empty tail pages return to the pool's free list; a partially
+    /// emptied boundary page is truncated **in place**, which routes
+    /// through [`PagePool::get_mut`] and therefore bumps the page's
+    /// generation — any decode-panel cache entry for it revalidates and
+    /// re-decodes on next use. Per-slot token bookkeeping (`seq_len`,
+    /// `full_page_groups`) reflects the rolled-back length immediately,
+    /// so a later prefix-cache publish never sees rejected tokens.
+    ///
+    /// Only legal between whole tokens (every layer at the same length).
+    /// Freed tail pages may be shared (the slot just drops its
+    /// reference), but an in-place boundary rewrite needs exclusive
+    /// ownership — truncating into a page another holder can read is
+    /// refused with the cache untouched. In practice speculative appends
+    /// land strictly after any adopted prefix, so rollback (which never
+    /// goes below the pre-step position) only ever touches slot-owned
+    /// tail pages.
+    pub fn truncate(&mut self, slot: SlotId, len: usize) -> anyhow::Result<usize> {
+        anyhow::ensure!(self.is_live(slot), "truncate of a dead slot {slot}");
+        let cur = self.slots[slot].lens.last().copied().unwrap_or(0);
+        anyhow::ensure!(
+            self.slots[slot].lens.iter().all(|&l| l == cur),
+            "truncate of slot {slot} mid-token (ragged per-layer lengths)"
+        );
+        anyhow::ensure!(len >= 1, "truncate to zero tokens (free the slot instead)");
+        anyhow::ensure!(len <= cur, "truncate of slot {slot} to {len} of {cur} cached tokens");
+        if len == cur {
+            return Ok(len);
+        }
+        let (nl, nh, pt) = (self.layout.n_layers, self.layout.n_heads, self.layout.page_tokens);
+        let keep_pages = len.div_ceil(pt);
+        let boundary = len % pt; // tokens kept in the last page when nonzero
+        // Validate exclusivity of every boundary page that must be
+        // rewritten before mutating anything, so a refusal is atomic.
+        if boundary != 0 {
+            for layer_pages in self.slots[slot].pages.iter() {
+                for &id in &layer_pages[(keep_pages - 1) * nh..keep_pages * nh] {
+                    if self.pool.get(id).filled > boundary {
+                        anyhow::ensure!(
+                            !self.pool.is_shared(id),
+                            "truncate into shared page {id} (adopted prefix is immutable)"
+                        );
+                    }
+                }
+            }
+        }
+        // Bytes only shrink from here: sample the high-water mark first,
+        // exactly as free_slot does.
+        self.peak_bytes = self.peak_bytes.max(self.state_bytes());
+        for layer in 0..nl {
+            while self.slots[slot].pages[layer].len() > keep_pages * nh {
+                let id = self.slots[slot].pages[layer].pop().unwrap();
+                self.cached_bytes -= self.pool.get(id).state_bytes();
+                self.pool.free(id);
+            }
+            if boundary != 0 {
+                for head in 0..nh {
+                    let id = self.slots[slot].pages[layer][(keep_pages - 1) * nh + head];
+                    if self.pool.get(id).filled > boundary {
+                        let quant = self.quant.as_ref();
+                        let page = self.pool.get_mut(id);
+                        let before = page.state_bytes();
+                        page.truncate_to(boundary, quant);
+                        self.cached_bytes -= before - page.state_bytes();
+                    }
+                }
+            }
+            self.slots[slot].lens[layer] = len;
+        }
+        Ok(len)
+    }
+
     /// Multi-slot append for one fused decode step: row `i` of the
     /// stacked row-major `rows` buffer (`stride` floats per row) carries
     /// lane `i`'s K head vectors at `[k_off, k_off + d)` and V at
@@ -976,6 +1049,112 @@ mod tests {
         let adopter = cache.alloc_slot().unwrap();
         cache.adopt_prefix(adopter, &groups, Some((&partial_group, 2))).unwrap();
         assert_eq!(cache.seq_len(adopter), 6);
+    }
+
+    #[test]
+    fn truncate_frees_tail_pages_and_matches_never_extended_twin() {
+        // Twin caches, f32 and encoded: one appends 7 tokens then rolls
+        // back to 3 and re-appends; the other only ever sees the kept
+        // history. Gathers must agree bit for bit and the freed tail
+        // pages must be back on the pool's free list.
+        let mut rng = Pcg32::seeded(0x9AB0);
+        let lay = layout(2); // pt 2: 7 tokens = 3 pages + 1 boundary token
+        let d = lay.n_heads * lay.head_dim;
+        let sample = llm_like_sample(&mut rng, lay.head_dim * 32, 0.05, 4.0);
+        let mk = |enc: bool| {
+            let store = if enc {
+                KvStore::Encoded(KvQuantizer::calibrated(lay.head_dim, &sample, 11).unwrap())
+            } else {
+                KvStore::F32
+            };
+            PagedKvCache::new(lay.clone(), store).unwrap()
+        };
+        for enc in [false, true] {
+            let mut spec = mk(enc);
+            let mut clean = mk(enc);
+            let ss = spec.alloc_slot().unwrap();
+            let cs = clean.alloc_slot().unwrap();
+            let toks: Vec<(Vec<f32>, Vec<f32>)> = (0..9).map(|_| rows(&mut rng, d)).collect();
+            for (k, v) in &toks[..7] {
+                for layer in 0..2 {
+                    spec.append(ss, layer, k, v).unwrap();
+                }
+            }
+            let live_before = spec.pool().live_pages();
+            assert_eq!(spec.truncate(ss, 3).unwrap(), 3);
+            assert_eq!(spec.seq_len(ss), 3);
+            // 7 tokens = 4 pages/[layer,head]; keeping 3 tokens = 2 pages.
+            assert_eq!(live_before - spec.pool().live_pages(), 2 * 2 * lay.n_heads);
+            // Truncating to the current length is a no-op.
+            assert_eq!(spec.truncate(ss, 3).unwrap(), 3);
+            for (k, v) in &toks[7..] {
+                for layer in 0..2 {
+                    spec.append(ss, layer, k, v).unwrap();
+                }
+            }
+            for (k, v) in toks[..3].iter().chain(&toks[7..]) {
+                for layer in 0..2 {
+                    clean.append(cs, layer, k, v).unwrap();
+                }
+            }
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            for layer in 0..2 {
+                for head in 0..lay.n_heads {
+                    for plane in [Plane::K, Plane::V] {
+                        assert_eq!(spec.gather(ss, layer, head, plane, &mut a), 5);
+                        clean.gather(cs, layer, head, plane, &mut b);
+                        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                            assert_eq!(
+                                x.to_bits(),
+                                y.to_bits(),
+                                "enc {enc} layer {layer} head {head} {plane:?} scalar {i}"
+                            );
+                        }
+                    }
+                }
+            }
+            // state_bytes() cross-checks the incremental counter against
+            // the page walk in debug builds.
+            assert!(spec.state_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn truncate_rejects_misuse_and_shared_boundary_pages() {
+        let lay = layout(4);
+        let d = lay.n_heads * lay.head_dim;
+        let mut cache = PagedKvCache::new(lay, KvStore::F32).unwrap();
+        let mut rng = Pcg32::seeded(0x9AB1);
+        assert!(cache.truncate(0, 1).is_err(), "truncate of a dead slot accepted");
+        let donor = cache.alloc_slot().unwrap();
+        for _ in 0..4 {
+            let (k, v) = rows(&mut rng, d);
+            for layer in 0..2 {
+                cache.append(donor, layer, &k, &v).unwrap();
+            }
+        }
+        assert!(cache.truncate(donor, 0).is_err(), "truncate to zero accepted");
+        assert!(cache.truncate(donor, 5).is_err(), "truncate past the history accepted");
+        // Share the donor's full page with an adopter: cutting inside a
+        // shared page must be refused with nothing mutated.
+        let groups = cache.full_page_groups(donor);
+        assert_eq!(groups.len(), 1);
+        let adopter = cache.alloc_slot().unwrap();
+        cache.adopt_prefix(adopter, &groups, None).unwrap();
+        let err = cache.truncate(adopter, 2).unwrap_err();
+        assert!(err.to_string().contains("shared"), "unexpected error: {err}");
+        assert_eq!(cache.seq_len(adopter), 4, "refused truncate mutated the slot");
+        // Once the adopter extends past the shared page, rolling back to
+        // (but not into) it is fine: the slot-owned tail page is freed.
+        let (k, v) = rows(&mut rng, d);
+        for layer in 0..2 {
+            cache.append(adopter, layer, &k, &v).unwrap();
+        }
+        assert_eq!(cache.truncate(adopter, 4).unwrap(), 4);
+        assert_eq!(cache.seq_len(adopter), 4);
+        for &id in &groups[0] {
+            assert_eq!(cache.pool().ref_count(id), 2, "shared page lost a reference");
+        }
     }
 
     #[test]

@@ -419,6 +419,27 @@ mod tests {
     }
 
     #[test]
+    fn truncate_invalidates_cached_panels() {
+        // Speculative-decode rollback truncates the boundary page in
+        // place through `get_mut`, which bumps its generation: a panel
+        // decoded before the rollback must re-decode, not serve the
+        // rolled-back tail.
+        let (pt, hd) = (4usize, 8usize);
+        let (mut pool, ids, _, vs) = filled_pool(pt, hd, 7, 0x180); // 2 pages, frontier holds 3
+        let mut pc = KvPanelCache::new();
+        pc.ensure(&pool, None, hd, &ids);
+        let base = pc.decode_count();
+        let frontier = *ids.last().unwrap();
+        pool.get_mut(frontier).truncate_to(1, None);
+        let fresh_v = vec![4.25f32; hd];
+        pool.get_mut(frontier).append(pt, hd, None, &fresh_v, &fresh_v);
+        pc.ensure(&pool, None, hd, &ids);
+        assert_eq!(pc.decode_count(), base + 1, "truncated page served from a stale panel");
+        assert_eq!(pc.v_row(&ids, 4), &vs[4][..], "kept token corrupted by rollback");
+        assert_eq!(pc.v_row(&ids, 5), &fresh_v[..], "rolled-back token still visible");
+    }
+
+    #[test]
     fn encoded_panels_bit_match_gather() {
         let (pt, hd) = (4usize, 16usize);
         let mut rng = Pcg32::seeded(0x17D);

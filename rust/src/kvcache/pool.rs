@@ -147,6 +147,31 @@ impl Page {
         }
     }
 
+    /// Truncate to the first `m` token vectors — the page-level KV
+    /// rollback primitive behind speculative decoding's reject path.
+    /// f32 planes just shrink the valid prefix (the stale tail is
+    /// overwritten by the next append and never read — `gather` stops at
+    /// `filled`); encoded planes are append-only bit streams, so the
+    /// kept prefix is replayed through a `BitReader` into fresh streams
+    /// field by field, the same bit-exact mechanics as the CoW prefix
+    /// copy: a truncated-then-reappended page is indistinguishable from
+    /// one that never held the tail.
+    pub fn truncate_to(&mut self, m: usize, quant: Option<&KvQuantizer>) {
+        assert!(m <= self.filled, "truncate to {m} of a page holding {}", self.filled);
+        if m == self.filled {
+            return;
+        }
+        match (&mut self.store, quant) {
+            (PageStore::F32 { .. }, None) => {}
+            (PageStore::Encoded { k, v }, Some(q)) => {
+                truncate_plane_to(k, m, q);
+                truncate_plane_to(v, m, q);
+            }
+            _ => panic!("page store / quantizer mode mismatch"),
+        }
+        self.filled = m;
+    }
+
     /// Copy-on-write seed: fill this (empty) page with the first `m`
     /// token vectors of `src` — the divergence-inside-a-page case of
     /// prefix adoption, where a request shares only part of a cached
@@ -195,6 +220,14 @@ fn copy_plane_prefix(dst: &mut EncPlane, src: &EncPlane, m: usize, q: &KvQuantiz
         }
     }
     dst.invs.extend_from_slice(&src.invs[..m]);
+}
+
+/// Rebuild an encoded plane holding only its first `m` vectors: take the
+/// streams out, replay the prefix into the (now-empty) writers. The
+/// replay reuses [`copy_plane_prefix`]'s layout guarantee.
+fn truncate_plane_to(plane: &mut EncPlane, m: usize, q: &KvQuantizer) {
+    let src = std::mem::take(plane);
+    copy_plane_prefix(plane, &src, m, q);
 }
 
 /// Page allocator with free-list reuse and per-page refcounts. Grows on
@@ -627,6 +660,64 @@ mod tests {
         assert_eq!(&out[hd..], &rows[1][..]);
         page.gather(hd, None, Plane::V, &mut out);
         assert_eq!(out[0], -rows[0][0]);
+    }
+
+    #[test]
+    fn f32_truncate_then_reappend_matches_untruncated() {
+        let (pt, hd) = (4usize, 8usize);
+        let mut pool = PagePool::new(pt, hd, false);
+        let id = pool.alloc();
+        let rows: Vec<Vec<f32>> = (0..4).map(|t| (0..hd).map(|j| (t * hd + j) as f32).collect()).collect();
+        for r in &rows[..3] {
+            pool.get_mut(id).append(pt, hd, None, r, r);
+        }
+        pool.get_mut(id).truncate_to(1, None);
+        assert_eq!(pool.get(id).filled, 1);
+        // Refill with different rows: the stale tail must be invisible.
+        pool.get_mut(id).append(pt, hd, None, &rows[3], &rows[3]);
+        let mut out = vec![0.0f32; 2 * hd];
+        pool.get(id).gather(hd, None, Plane::K, &mut out);
+        assert_eq!(&out[..hd], &rows[0][..]);
+        assert_eq!(&out[hd..], &rows[3][..]);
+    }
+
+    #[test]
+    fn encoded_truncate_is_bit_identical_to_never_appended() {
+        use crate::util::rng::{llm_like_sample, Pcg32};
+        let (pt, hd) = (4usize, 16usize);
+        let mut rng = Pcg32::seeded(0x7C2);
+        let sample = llm_like_sample(&mut rng, hd * 32, 0.05, 4.0);
+        let q = KvQuantizer::calibrated(hd, &sample, 7).unwrap();
+        let mut pool = PagePool::new(pt, hd, true);
+        let rows: Vec<Vec<f32>> = (0..4).map(|_| llm_like_sample(&mut rng, hd, 0.05, 4.0)).collect();
+        // Twin pages: one appends 4 rows then truncates to 2 and
+        // re-appends row 2'; the other only ever sees rows 0,1,2'.
+        let spec = pool.alloc();
+        let clean = pool.alloc();
+        for r in &rows {
+            pool.get_mut(spec).append(pt, hd, Some(&q), r, r);
+        }
+        pool.get_mut(spec).truncate_to(2, Some(&q));
+        assert_eq!(pool.get(spec).filled, 2);
+        let fresh = llm_like_sample(&mut rng, hd, 0.05, 4.0);
+        pool.get_mut(spec).append(pt, hd, Some(&q), &fresh, &fresh);
+        for r in [&rows[0], &rows[1], &fresh] {
+            pool.get_mut(clean).append(pt, hd, Some(&q), r, r);
+        }
+        // Decoded planes (and the stored byte counts) must agree exactly.
+        for plane in [Plane::K, Plane::V] {
+            let (mut a, mut b) = (vec![0.0f32; 3 * hd], vec![0.0f32; 3 * hd]);
+            pool.get(spec).gather(hd, Some(&q), plane, &mut a);
+            pool.get(clean).gather(hd, Some(&q), plane, &mut b);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{plane:?} diverged at scalar {i}");
+            }
+        }
+        assert_eq!(
+            pool.get(spec).state_bytes(),
+            pool.get(clean).state_bytes(),
+            "truncated page retained tail bytes"
+        );
     }
 
     #[test]

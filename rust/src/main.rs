@@ -3,7 +3,8 @@
 //! the request path).
 
 use lobcq::coordinator::{
-    BatchPolicy, ContinuousOpts, CpuExecutor, DecodeSession, KvCacheOpts, Limits, Priority, Sampling, Server,
+    BatchPolicy, ContinuousOpts, CpuExecutor, DecodeSession, DrafterKind, KvCacheOpts, Limits, Priority,
+    Sampling, Server,
 };
 use lobcq::data::corpus;
 use lobcq::eval::{experiments, Env};
@@ -198,6 +199,8 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
         OptSpec { name: "max-batch", help: "dynamic batch limit / decode lanes", takes_value: true, default: Some("8") },
         OptSpec { name: "max-wait-ms", help: "batcher wait (batch engine only)", takes_value: true, default: Some("4") },
         OptSpec { name: "prefill-chunk", help: "prompt tokens prefilled per scheduler iteration (0 = inline: whole prompt at admission)", takes_value: true, default: Some("0") },
+        OptSpec { name: "spec-k", help: "speculative decoding: max draft tokens verified per lane per step (0 = off); output is bit-identical at any k", takes_value: true, default: Some("0") },
+        OptSpec { name: "drafter", help: "draft-token source for --spec-k: ngram | off", takes_value: true, default: Some("ngram") },
         OptSpec { name: "queue-cap", help: "admission queue capacity; submits beyond it are rejected (0 = unbounded)", takes_value: true, default: Some("0") },
         OptSpec { name: "deadline-ms", help: "per-request deadline; requests still queued past it are shed (0 = none)", takes_value: true, default: Some("0") },
         OptSpec { name: "kv-pages", help: "KV page budget across all lanes; pressure degrades evict->defer->preempt (0 = unbounded)", takes_value: true, default: Some("0") },
@@ -226,6 +229,8 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
     // SLO envelope: 0 means "off" for every knob (inline prefill,
     // unbounded queue, no deadline, unbounded KV pages).
     let prefill_chunk = args.usize_or("prefill-chunk", 0)?;
+    let spec_k = args.usize_or("spec-k", 0)?;
+    let drafter = DrafterKind::parse(args.str_or("drafter", "ngram"))?;
     let queue_cap = args.usize_or("queue-cap", 0)?;
     let deadline_ms = args.u64_or("deadline-ms", 0)?;
     let kv_pages = args.usize_or("kv-pages", 0)?;
@@ -281,11 +286,16 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
                 session.prefix_mode()
             );
             println!(
-                "[serve-cpu] slo: prefill-chunk {}, queue-cap {}, deadline {}, kv-pages {}",
+                "[serve-cpu] slo: prefill-chunk {}, queue-cap {}, deadline {}, kv-pages {}, spec {}",
                 if prefill_chunk == 0 { "inline".into() } else { prefill_chunk.to_string() },
                 if queue_cap == 0 { "unbounded".into() } else { queue_cap.to_string() },
                 if deadline_ms == 0 { "none".into() } else { format!("{deadline_ms}ms") },
                 if kv_pages == 0 { "unbounded".into() } else { kv_pages.to_string() },
+                if spec_k == 0 || drafter == DrafterKind::Off {
+                    "off".into()
+                } else {
+                    format!("k={spec_k} ({})", drafter.name())
+                },
             );
             // The cached engine holds full histories (no sliding window);
             // any prompt up to `t` prefills, and the scheduler caps each
@@ -303,6 +313,8 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
                 },
                 ContinuousOpts {
                     prefill_chunk: if prefill_chunk == 0 { usize::MAX } else { prefill_chunk },
+                    spec_k,
+                    drafter,
                 },
             )
         }

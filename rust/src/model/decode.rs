@@ -55,6 +55,14 @@
 //! blocked kernel, so one batched step is **bit-identical** to running
 //! `decode_step` once per lane — a lane's numerics never depend on
 //! which other lanes are co-scheduled (`tests/decode_parity.rs`).
+//!
+//! Speculation (DESIGN.md §Speculative decoding): [`decode_step_batch_spec`]
+//! stacks each lane's frontier token **plus its drafted tokens** as extra
+//! rows of the same fused step — logits at every drafted position for a
+//! single weight-panel stream, which is what makes verify rows nearly
+//! free under W4A4 — and a rejected draft tail is erased bit-exactly by
+//! [`PagedKvCache::truncate`], so the speculative round trip is invisible
+//! to later steps and to prefix-cache publishing.
 
 use crate::kernels::{self, KC};
 use crate::kvcache::{KvPanelCache, PagedKvCache, PageId, SlotId};
@@ -138,6 +146,9 @@ pub struct DecodeScratch {
     acc: Vec<f32>,
     /// Per-lane cache positions for the current step.
     pos: Vec<usize>,
+    /// Per-lane first-row offsets of a stacked-verify step (prefix sums
+    /// of `1 + k_i`).
+    row0: Vec<usize>,
     /// Page ids of the (slot, layer, head) run being attended.
     page_run: Vec<PageId>,
     /// Per-page decoded `K^T`/V panels for [`AttnPath::Encoded`]. Its
@@ -195,6 +206,7 @@ impl DecodeScratch {
             + self.ctx.capacity()
             + self.acc.capacity()
             + self.pos.capacity()
+            + self.row0.capacity()
             + self.page_run.capacity()
     }
 
@@ -700,6 +712,142 @@ pub fn decode_step_batch<'s>(
     Ok(&scratch.logits[..lanes * cfg.vocab])
 }
 
+/// One fused **stacked-verify** step ([`decode_step_batch`] with
+/// speculative drafts): lane `i` contributes `1 + drafts[i].len()`
+/// consecutive rows — its frontier token followed by its draft — so a
+/// step of `Σ (1 + k_i)` rows runs every projection / FFN / LM-head
+/// GEMM **once**, streaming the packed/encoded weight panels a single
+/// time for all drafted positions. Appends reuse the [`prefill_from`]
+/// suffix mechanics (each lane's rows land contiguously per layer before
+/// any attention runs), and attention is ragged both across lanes and
+/// across rows: row `r` of lane `i` attends over `pos_i + r + 1` tokens.
+///
+/// Returns stacked `(Σ rows_i, vocab)` logits; lane `i`'s rows start at
+/// offset `Σ_{j<i} (1 + k_j)` (the caller mirrors the prefix sums). Row
+/// `r` holds the logits **after** the lane's `r`-th stacked token, so
+/// greedy verification walks the rows: accept `drafts[i][m]` while it
+/// equals row `m`'s sampled token; the first mismatching row still
+/// yields the corrected token — the bonus row that makes a fully
+/// rejected draft cost nothing over a plain decode step.
+///
+/// Numerics: every row attends over exactly the causal history a
+/// sequential [`decode_step`] at that position would see, and with
+/// either KV store the cached K/V at a position is a function of the
+/// token prefix alone — so the stacked rows are **bit-identical** to
+/// feeding the same tokens one `decode_step` at a time (pinned by a
+/// module test), and rejected rows erased by
+/// [`PagedKvCache::truncate`] leave the cache bit-identical to a
+/// never-speculated session.
+///
+/// Validates every lane, draft token, and capacity bound and
+/// pre-reserves **all** pages before the first append: a failure
+/// (including typed `KvPressure`) leaves every slot at its pre-step
+/// length, so the scheduler can drop the whole speculative step
+/// atomically and replay it plain.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_step_batch_spec<'s>(
+    cfg: &ModelConfig,
+    w: &Weights,
+    cache: &mut PagedKvCache,
+    slots: &[SlotId],
+    tokens: &[u32],
+    drafts: &[Vec<u32>],
+    act_q: ActQuant,
+    scratch: &'s mut DecodeScratch,
+) -> anyhow::Result<&'s [f32]> {
+    let lanes = slots.len();
+    anyhow::ensure!(lanes >= 1, "decode_step_batch_spec with no lanes");
+    anyhow::ensure!(tokens.len() == lanes, "{} tokens for {lanes} lanes", tokens.len());
+    anyhow::ensure!(drafts.len() == lanes, "{} drafts for {lanes} lanes", drafts.len());
+    let mut step_span = crate::obs::trace::span("model", "decode_step_spec");
+    let (d, hd) = (cfg.d, cfg.head_dim());
+    let lay = cache.layout();
+    let pt = lay.page_tokens;
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    // ---- validate lanes, draft tokens, and capacity up front (shared
+    // per-lane check); no cache mutation on failure ----
+    scratch.pos.clear();
+    scratch.row0.clear();
+    let mut total_rows = 0usize;
+    for i in 0..lanes {
+        let pos = validate_decode_lane(cfg, cache, slots, i, tokens[i])?;
+        for &t in &drafts[i] {
+            anyhow::ensure!((t as usize) < cfg.vocab, "draft token {t} out of vocab");
+        }
+        let rows = 1 + drafts[i].len();
+        anyhow::ensure!(
+            pos + rows <= lay.max_tokens && pos + rows <= cfg.max_t,
+            "draft of {} overruns capacity at position {pos} (slot {})",
+            drafts[i].len(),
+            slots[i]
+        );
+        scratch.pos.push(pos);
+        scratch.row0.push(total_rows);
+        total_rows += rows;
+    }
+    step_span.set_arg(total_rows as u64);
+    // Whole-step page pre-check over every stacked row: a shortfall
+    // surfaces as typed KvPressure before the first append, keeping the
+    // whole speculative step atomic.
+    let needed: usize =
+        slots.iter().zip(drafts).map(|(&s, dr)| cache.pages_needed(s, 1 + dr.len())).sum();
+    cache.ensure_page_headroom(needed)?;
+    scratch.pin_attention_capacity(lay.max_tokens, hd, pt);
+
+    // ---- embed all stacked rows: lane i's row r is its r-th fed token
+    // at position pos_i + r ----
+    scratch.x.resize(total_rows * d, 0.0);
+    embed_rows(
+        w,
+        &mut scratch.x,
+        d,
+        tokens.iter().zip(drafts).zip(&scratch.pos).flat_map(|((&t, dr), &p)| {
+            std::iter::once((t, p))
+                .chain(dr.iter().enumerate().map(move |(r, &dt)| (dt, p + 1 + r)))
+        }),
+    )?;
+
+    scratch.ctx.resize(hd, 0.0);
+    scratch.acc.resize(hd, 0.0);
+    scratch.ensure_names(cfg.n_layers);
+    for li in 0..cfg.n_layers {
+        let _layer_span = crate::obs::trace::span_id("layer", "layer", li as u64);
+        // --- attention block: one fused QKV GEMM over every stacked
+        // row, then prefill_from-style contiguous per-lane appends so
+        // each head resolves its history once for all of a lane's rows ---
+        layer_qkv(w, scratch, li, total_rows, d, act_q)?;
+        for i in 0..lanes {
+            for r in 0..1 + drafts[i].len() {
+                let row = scratch.row0[i] + r;
+                let qkv = &scratch.qkv[row * 3 * d..(row + 1) * 3 * d];
+                cache.append(slots[i], li, &qkv[d..2 * d], &qkv[2 * d..3 * d])?;
+            }
+        }
+        scratch.attn.resize(total_rows * d, 0.0);
+        let attn_span = crate::obs::trace::span_id("op", "attn", li as u64);
+        for i in 0..lanes {
+            let rows = 1 + drafts[i].len();
+            for head in 0..cfg.n_heads {
+                let off = head * hd;
+                let len = resolve_head(cache, scratch, slots[i], li, head);
+                debug_assert_eq!(len, scratch.pos[i] + rows);
+                for r in 0..rows {
+                    let n = scratch.pos[i] + r + 1; // this row's causal span
+                    let row = scratch.row0[i] + r;
+                    attend_span(scratch, pt, hd, n, row * 3 * d + off, row * d + off, scale);
+                }
+            }
+        }
+        drop(attn_span);
+        layer_wo_residual(w, scratch, li, total_rows, d, act_q)?;
+        layer_mlp(w, scratch, li, total_rows, d, act_q)?;
+    }
+
+    lm_head(cfg, w, scratch, 0, total_rows)?;
+    Ok(&scratch.logits[..total_rows * cfg.vocab])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -881,6 +1029,188 @@ mod tests {
         assert_eq!(cache.seq_len(a), 2, "failed batched step mutated the cache");
         let ok = decode_step_batch(&cfg, &w, &mut cache, &[a], &[3], None, &mut scratch).unwrap();
         assert_eq!(ok.len(), cfg.vocab);
+    }
+
+    #[test]
+    fn spec_step_matches_sequential_decode_bitwise() {
+        // Stacked-verify rows must equal feeding the same tokens one
+        // decode_step at a time — per lane, per row, to the bit, on both
+        // KV stores, with ragged drafts including an empty one (the
+        // k = 0 lane degenerates to a plain decode row).
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 48);
+        let hd = cfg.head_dim();
+        let sample: Vec<f32> = w.get("l0.attn.wqkv").unwrap().data.clone();
+        let prompts: [&[u32]; 3] = [&[1, 2, 3], &[7, 8], &[9]];
+        let tokens = [4u32, 14, 10];
+        let drafts: Vec<Vec<u32>> = vec![vec![5, 6], vec![], vec![11, 12, 13]];
+        for encoded in [false, true] {
+            let mk = || {
+                let store = if encoded {
+                    KvStore::Encoded(KvQuantizer::calibrated(hd, &sample[..hd * 32], 13).unwrap())
+                } else {
+                    KvStore::F32
+                };
+                PagedKvCache::new(KvLayout::for_model(&cfg, 4, 3), store).unwrap()
+            };
+            let (mut serial, mut spec) = (mk(), mk());
+            let mut ss = DecodeScratch::new();
+            let mut sb = DecodeScratch::new();
+            let mut slots_s = Vec::new();
+            let mut slots_b = Vec::new();
+            for p in prompts {
+                let a = serial.alloc_slot().unwrap();
+                let b = spec.alloc_slot().unwrap();
+                prefill(&cfg, &w, &mut serial, a, p, None).unwrap();
+                prefill(&cfg, &w, &mut spec, b, p, None).unwrap();
+                slots_s.push(a);
+                slots_b.push(b);
+            }
+            let got =
+                decode_step_batch_spec(&cfg, &w, &mut spec, &slots_b, &tokens, &drafts, None, &mut sb)
+                    .unwrap()
+                    .to_vec();
+            let mut row = 0usize;
+            for (i, &slot) in slots_s.iter().enumerate() {
+                for (r, &tok) in std::iter::once(&tokens[i]).chain(&drafts[i]).enumerate() {
+                    let lone = decode_step(&cfg, &w, &mut serial, slot, tok, None, &mut ss).unwrap();
+                    for (c, (&g, &want)) in
+                        got[row * cfg.vocab..(row + 1) * cfg.vocab].iter().zip(&lone).enumerate()
+                    {
+                        assert_eq!(
+                            g.to_bits(),
+                            want.to_bits(),
+                            "encoded={encoded} lane {i} row {r} col {c}"
+                        );
+                    }
+                    row += 1;
+                }
+                assert_eq!(spec.seq_len(slots_b[i]), serial.seq_len(slot));
+            }
+        }
+    }
+
+    #[test]
+    fn spec_rollback_is_invisible_to_later_steps() {
+        // A speculative step followed by truncate back to the accepted
+        // frontier must leave the session bit-identical to one that
+        // never speculated — full rejection and partial acceptance, on
+        // both KV stores (the encoded store replays its append-only
+        // pages bit-exactly on truncate).
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 49);
+        let hd = cfg.head_dim();
+        let sample: Vec<f32> = w.get("l0.attn.wqkv").unwrap().data.clone();
+        for encoded in [false, true] {
+            for accept in [0usize, 1] {
+                let mk = || {
+                    let store = if encoded {
+                        KvStore::Encoded(KvQuantizer::calibrated(hd, &sample[..hd * 32], 19).unwrap())
+                    } else {
+                        KvStore::F32
+                    };
+                    PagedKvCache::new(KvLayout::for_model(&cfg, 4, 1), store).unwrap()
+                };
+                let (mut plain, mut spec) = (mk(), mk());
+                let sp = plain.alloc_slot().unwrap();
+                let sq = spec.alloc_slot().unwrap();
+                let mut scr_p = DecodeScratch::new();
+                let mut scr_q = DecodeScratch::new();
+                prefill(&cfg, &w, &mut plain, sp, &[1, 2, 3], None).unwrap();
+                prefill(&cfg, &w, &mut spec, sq, &[1, 2, 3], None).unwrap();
+                // Draft [5, 30]: with accept = 1 the first token is kept
+                // (plain twin decodes it too); the tail is rolled back.
+                let draft = vec![5u32, 30];
+                let got = decode_step_batch_spec(
+                    &cfg, &w, &mut spec, &[sq], &[4], std::slice::from_ref(&draft), None, &mut scr_q,
+                )
+                .unwrap()
+                .to_vec();
+                let want = decode_step(&cfg, &w, &mut plain, sp, 4, None, &mut scr_p).unwrap();
+                for (c, (&g, &x)) in got[..cfg.vocab].iter().zip(&want).enumerate() {
+                    assert_eq!(g.to_bits(), x.to_bits(), "encoded={encoded} frontier row col {c}");
+                }
+                for &tok in &draft[..accept] {
+                    decode_step(&cfg, &w, &mut plain, sp, tok, None, &mut scr_p).unwrap();
+                }
+                // Keep frontier + accepted prefix, erase the rejected tail.
+                spec.truncate(sq, 3 + 1 + accept).unwrap();
+                assert_eq!(spec.seq_len(sq), plain.seq_len(sp));
+                for &tok in &[17u32, 18] {
+                    let a = decode_step(&cfg, &w, &mut spec, sq, tok, None, &mut scr_q).unwrap();
+                    let b = decode_step(&cfg, &w, &mut plain, sp, tok, None, &mut scr_p).unwrap();
+                    for (c, (&g, &x)) in a.iter().zip(&b).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            x.to_bits(),
+                            "encoded={encoded} accept={accept} post-rollback tok {tok} col {c}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spec_footprint_is_constant_across_steps_at_fixed_k() {
+        // The zero-steady-state-allocation property extends to the
+        // speculative loop: at fixed k the scratch footprint must not
+        // grow across draft → verify → rollback rounds.
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 50);
+        let mut cache = f32_cache(&cfg, 2);
+        let a = cache.alloc_slot().unwrap();
+        let b = cache.alloc_slot().unwrap();
+        let mut scratch = DecodeScratch::new();
+        prefill_from(&cfg, &w, &mut cache, a, &[1, 2], 0, None, &mut scratch).unwrap();
+        prefill_from(&cfg, &w, &mut cache, b, &[3], 0, None, &mut scratch).unwrap();
+        let mut base = 0usize;
+        for step in 0..5u32 {
+            let tokens = [(4 + step) % 40, (9 + step) % 40];
+            let drafts = vec![vec![(6 + step) % 40, (7 + step) % 40], vec![(8 + step) % 40, step % 40]];
+            decode_step_batch_spec(&cfg, &w, &mut cache, &[a, b], &tokens, &drafts, None, &mut scratch)
+                .unwrap();
+            // Reject both lanes' draft tails every round so truncate is
+            // in the loop (and the slots stay within capacity).
+            for slot in [a, b] {
+                let keep = cache.seq_len(slot) - 2;
+                cache.truncate(slot, keep).unwrap();
+            }
+            if step == 0 {
+                base = scratch.footprint();
+                assert!(base > 0);
+            } else {
+                assert_eq!(scratch.footprint(), base, "speculative step {step} grew the scratch");
+            }
+        }
+    }
+
+    #[test]
+    fn spec_step_rejects_misuse_without_mutating() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 51);
+        let mut cache = f32_cache(&cfg, 1);
+        let a = cache.alloc_slot().unwrap();
+        let mut scratch = DecodeScratch::new();
+        prefill(&cfg, &w, &mut cache, a, &[1, 2], None).unwrap();
+        let cap = cache.layout().max_tokens;
+        // Out-of-vocab draft token; draft overrunning slot capacity;
+        // drafts/lanes arity mismatch — all rejected, none advance a.
+        let bad_tok = vec![vec![999u32]];
+        let too_long = vec![vec![1u32; cap]];
+        let arity = vec![vec![1u32], vec![2]];
+        assert!(decode_step_batch_spec(&cfg, &w, &mut cache, &[a], &[3], &bad_tok, None, &mut scratch)
+            .is_err());
+        assert!(decode_step_batch_spec(&cfg, &w, &mut cache, &[a], &[3], &too_long, None, &mut scratch)
+            .is_err());
+        assert!(decode_step_batch_spec(&cfg, &w, &mut cache, &[a], &[3], &arity, None, &mut scratch)
+            .is_err());
+        assert_eq!(cache.seq_len(a), 2, "failed speculative step mutated the cache");
+        // An all-empty draft set is legal and equals one decode row per lane.
+        let ok = decode_step_batch_spec(&cfg, &w, &mut cache, &[a], &[3], &[vec![]], None, &mut scratch)
+            .unwrap();
+        assert_eq!(ok.len(), cfg.vocab);
+        assert_eq!(cache.seq_len(a), 3);
     }
 
     #[test]

@@ -86,7 +86,7 @@ fn prop_chaos_conservation_no_leaks_and_healthy_parity() {
             }
             reqs.push(r);
         }
-        let out = drive(&mut e, reqs.clone(), ContinuousOpts { prefill_chunk: chunk });
+        let out = drive(&mut e, reqs.clone(), ContinuousOpts { prefill_chunk: chunk, ..ContinuousOpts::default() });
 
         // Conservation: exactly one terminal event per request.
         ensure(out.len() == n, || format!("{} terminal events for {n} requests", out.len()))?;
@@ -191,7 +191,7 @@ fn real_session_under_tiny_page_budget_degrades_without_panic() {
                     Request::new(i as u64 + 1, prompt, 2)
                 })
                 .collect();
-            let out = drive(&mut s, reqs, ContinuousOpts { prefill_chunk: chunk });
+            let out = drive(&mut s, reqs, ContinuousOpts { prefill_chunk: chunk, ..ContinuousOpts::default() });
             assert_eq!(out.len(), 5, "budget {budget} chunk {chunk}: lost a terminal event");
             for (id, res) in &out {
                 if let Err(e) = res {
@@ -240,7 +240,7 @@ fn chunked_prefill_token_identical_to_inline_across_weight_and_kv_modes() {
                 DecodeSession::new(cfg.clone(), &w, scheme, QuantPool::serial(), 2, kv.clone()).unwrap()
             };
             let inline_out = drive(&mut mk(), reqs(), ContinuousOpts::default());
-            let chunked_out = drive(&mut mk(), reqs(), ContinuousOpts { prefill_chunk: 3 });
+            let chunked_out = drive(&mut mk(), reqs(), ContinuousOpts { prefill_chunk: 3, ..ContinuousOpts::default() });
             assert_eq!(
                 tokens(&inline_out),
                 tokens(&chunked_out),

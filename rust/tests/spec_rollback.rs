@@ -1,0 +1,217 @@
+//! Speculative-decoding rollback suite (ISSUE 9): end-to-end proof that
+//! the stacked-verify path is an invisible optimization. A speculated
+//! run of the continuous scheduler over a real [`DecodeSession`] must
+//! emit token-for-token exactly what a never-speculated run emits — for
+//! every combination of {dense, encoded} weights × {f32, BCQ} KV, with
+//! more requests than lanes (so lanes retire and are backfilled
+//! mid-batch while other lanes are mid-speculation), and under both a
+//! useful drafter (n-gram) and an adversarial always-wrong drafter that
+//! forces a `truncate` rollback on every verify step.
+//!
+//! The unit layers pin the mechanics (bit-exact plane truncation in
+//! `kvcache::pool`, panel-generation invalidation in `kvcache::lut`,
+//! fused-step equivalence in `model::decode`); this suite pins the
+//! composition: rejection, rollback, and backfill through the whole
+//! scheduler never perturb the BCQ-encoded cache state that later
+//! tokens read.
+
+use lobcq::coordinator::{
+    run_continuous_opts, BatchPolicy, Batcher, ContinuousOpts, DecodeEngine, DecodeSession, DrafterKind,
+    KvCacheOpts, Request, Response, Sampling, ShedError,
+};
+use lobcq::eval::Scheme;
+use lobcq::model::{ModelConfig, Weights};
+use lobcq::quant::pipeline::QuantPool;
+use lobcq::tensor::Tensor;
+use lobcq::util::rng::Pcg32;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+fn drive<E: DecodeEngine>(
+    engine: &mut E,
+    reqs: Vec<Request>,
+    opts: ContinuousOpts,
+) -> Vec<(u64, anyhow::Result<Response>)> {
+    let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO, queue_cap: None });
+    for r in reqs {
+        assert!(b.push(r).is_accepted());
+    }
+    b.close();
+    let mut out = Vec::new();
+    run_continuous_opts(engine, &b, opts, Sampling::Greedy, None, |id, r| out.push((id, r)));
+    out
+}
+
+fn cfg32() -> ModelConfig {
+    ModelConfig { name: "specrb".into(), d: 32, n_layers: 2, n_heads: 2, vocab: 40, max_t: 32 }
+}
+
+fn random_weights(cfg: &ModelConfig, seed: u64) -> Weights {
+    let mut rng = Pcg32::seeded(seed);
+    let mut tensors = BTreeMap::new();
+    for (name, shape) in cfg.param_shapes() {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with(".g") {
+            vec![1.0; n]
+        } else if name.ends_with(".b") {
+            vec![0.0; n]
+        } else {
+            (0..n).map(|_| rng.normal() * 0.05).collect()
+        };
+        tensors.insert(name, Tensor::new(&shape, data));
+    }
+    Weights::new(tensors)
+}
+
+fn encoded_scheme(w: &Weights) -> Scheme {
+    use lobcq::quant::calib::calibrate_universal;
+    use lobcq::quant::lobcq::{CalibOpts, LobcqConfig};
+    let qcfg = LobcqConfig::new(8, 4, 64);
+    let fam = calibrate_universal(
+        &[w.get("l0.mlp.w1").unwrap()],
+        &qcfg,
+        CalibOpts { max_iters: 8, ..Default::default() },
+        5,
+    );
+    Scheme::lobcq(qcfg, fam)
+}
+
+/// Mixed-length workload: 5 requests on 2 lanes, so two lanes retire
+/// and are backfilled while speculation is live elsewhere. Prompts
+/// contain repeated bigrams so the n-gram drafter actually drafts.
+fn workload() -> Vec<Request> {
+    let prompts: [&[u32]; 5] = [
+        &[5, 9, 5, 9, 5],
+        &[12, 3, 12, 3, 12, 3, 12],
+        &[7, 7, 7, 7],
+        &[1, 20, 1, 20, 1],
+        &[30, 2, 30, 2, 30, 2],
+    ];
+    let budgets = [6usize, 2, 4, 3, 5];
+    prompts
+        .iter()
+        .zip(budgets)
+        .enumerate()
+        .map(|(i, (p, max_new))| Request::new(i as u64 + 1, p.to_vec(), max_new))
+        .collect()
+}
+
+fn spec_off() -> ContinuousOpts {
+    // Explicit, NOT ContinuousOpts::default(): the default reads
+    // LOBCQ_SPEC_K, and the baseline must stay non-speculative even
+    // under the CI leg that forces speculation on.
+    ContinuousOpts { prefill_chunk: usize::MAX, spec_k: 0, drafter: DrafterKind::Off }
+}
+
+fn tokens(out: &[(u64, anyhow::Result<Response>)]) -> Vec<(u64, Vec<u32>)> {
+    let mut v: Vec<(u64, Vec<u32>)> = out
+        .iter()
+        .map(|(id, r)| (*id, r.as_ref().expect("run errored").tokens.clone()))
+        .collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn speculation_is_bit_identical_across_weight_and_kv_modes() {
+    let cfg = cfg32();
+    let w = random_weights(&cfg, 0x59EC);
+    let schemes: [(Scheme, &str); 2] = [(Scheme::Bf16, "dense"), (encoded_scheme(&w), "encoded")];
+    // The always-wrong drafter pins token 39 on every draft slot; any
+    // verify step where the model disagrees (virtually all of them for
+    // random weights) forces a truncate rollback mid-batch.
+    let drafters =
+        [(DrafterKind::NGram, "ngram"), (DrafterKind::AlwaysWrong { token: 39 }, "always-wrong")];
+    for (scheme, wmode) in &schemes {
+        for kv_encoded in [false, true] {
+            let kv = KvCacheOpts {
+                page_tokens: 4,
+                encoded: kv_encoded,
+                prefix_cache_bytes: Some(1 << 20),
+                page_budget: None,
+            };
+            let mk = || {
+                DecodeSession::new(cfg.clone(), &w, scheme, QuantPool::serial(), 2, kv.clone()).unwrap()
+            };
+            let baseline = tokens(&drive(&mut mk(), workload(), spec_off()));
+            for (drafter, dname) in drafters {
+                for k in [2usize, 4] {
+                    let opts = ContinuousOpts { prefill_chunk: usize::MAX, spec_k: k, drafter };
+                    let mut s = mk();
+                    let spec = tokens(&drive(&mut s, workload(), opts));
+                    assert_eq!(
+                        baseline, spec,
+                        "speculated run diverged: weights={wmode} kv_encoded={kv_encoded} \
+                         drafter={dname} k={k}"
+                    );
+                    assert_eq!(
+                        s.cache().stats().live_slots,
+                        0,
+                        "slot leak: weights={wmode} kv_encoded={kv_encoded} drafter={dname} k={k}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn rollback_coexists_with_chunked_prefill_and_page_pressure() {
+    // An adversarial drafter under a tight page budget: every verify
+    // step both allocates draft tail pages and rolls them back, while
+    // chunked prefill and the KV-pressure ladder (evict → defer →
+    // preempt → shed) run concurrently. Every request must terminate
+    // with a response or a typed shed, no slot may leak, and every Ok
+    // response must match an uncontended non-speculative solo run.
+    let cfg = cfg32();
+    let w = random_weights(&cfg, 0x59ED);
+    for budget in [8usize, 24] {
+        let kv = KvCacheOpts {
+            page_tokens: 4,
+            encoded: true,
+            prefix_cache_bytes: None,
+            page_budget: Some(budget),
+        };
+        let mut s =
+            DecodeSession::new(cfg.clone(), &w, &Scheme::Bf16, QuantPool::serial(), 2, kv.clone()).unwrap();
+        let opts = ContinuousOpts {
+            prefill_chunk: 2,
+            spec_k: 3,
+            drafter: DrafterKind::AlwaysWrong { token: 39 },
+        };
+        let out = drive(&mut s, workload(), opts);
+        assert_eq!(out.len(), 5, "budget {budget}: lost a terminal event");
+        assert_eq!(s.cache().stats().live_slots, 0, "budget {budget}: slot leak");
+        for (id, res) in &out {
+            match res {
+                Err(e) => assert!(
+                    e.downcast_ref::<ShedError>().is_some(),
+                    "budget {budget} req {id}: non-shed failure {e}"
+                ),
+                Ok(resp) => {
+                    let orig = workload().into_iter().find(|r| r.id == *id).unwrap();
+                    let mut solo = DecodeSession::new(
+                        cfg.clone(),
+                        &w,
+                        &Scheme::Bf16,
+                        QuantPool::serial(),
+                        1,
+                        KvCacheOpts {
+                            page_tokens: 4,
+                            encoded: true,
+                            prefix_cache_bytes: None,
+                            page_budget: None,
+                        },
+                    )
+                    .unwrap();
+                    let solo_out = drive(&mut solo, vec![orig], spec_off());
+                    let solo_resp = solo_out[0].1.as_ref().expect("solo run failed");
+                    assert_eq!(
+                        resp.tokens, solo_resp.tokens,
+                        "budget {budget} req {id}: rollback perturbed output"
+                    );
+                }
+            }
+        }
+    }
+}
