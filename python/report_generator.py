@@ -1,0 +1,293 @@
+#!/usr/bin/env python3
+"""Consolidate lobcq run-records into one comparison report (ISSUE 10).
+
+Every perf measurement in the repo — workload runs from ``lobcq bench
+--workload`` / ``lobcq serve-cpu --workload`` and the four ``perf_*``
+benches — lands in ``results/raw/`` as one JSON document in the shared
+run-record schema (``rust/src/bench/record.rs``, DESIGN.md §Workload
+harness):
+
+    { "schema": "lobcq-run-record", "schema_version": 1,
+      "kind": "workload" | "bench", "name": ...,
+      "config": { flat scalars }, "summary": { metric: {value, dir} },
+      "server"/"quant"/"detail": optional sections,
+      "system"/"kernel_backend"/"git_rev"/"trace_dropped": env stamp }
+
+This script groups raw records by workload×config, renders one
+consolidated table (markdown + JSON), compares every summary metric
+against the matching record in ``results/baseline/``, and exits
+non-zero when an **enforced** comparison regresses beyond the
+threshold.
+
+Perf baselines are only meaningful between comparable environments, so
+a comparison is enforced when the raw and baseline stamps are
+*compatible* — same ``kernel_backend`` and same ``system.arch`` — and
+advisory (reported, never fatal) otherwise. The checked-in baselines
+are stamped ``kernel_backend: reference-seed`` precisely so they stay
+advisory everywhere until a host re-records them with
+``--update-baseline``; ``--strict`` promotes every comparison to
+enforced regardless of stamps (what CI uses after re-recording a
+self-baseline on the same host).
+
+Usage:
+    report_generator.py [--raw DIR] [--baseline DIR]
+                        [--out-md PATH] [--out-json PATH]
+                        [--threshold PCT] [--strict]
+                        [--update-baseline]
+
+Exit codes: 0 ok / no enforced regressions; 1 enforced regression or
+malformed input.
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+SCHEMA = "lobcq-run-record"
+SCHEMA_VERSION = 1
+
+
+class RecordError(Exception):
+    pass
+
+
+def load_record(path):
+    """Parse + structurally validate one run-record. Raises RecordError."""
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise RecordError(f"{path}: unreadable: {e}") from e
+    if rec.get("schema") != SCHEMA:
+        raise RecordError(f"{path}: schema {rec.get('schema')!r} != {SCHEMA!r}")
+    version = rec.get("schema_version")
+    if version != SCHEMA_VERSION:
+        raise RecordError(f"{path}: schema_version {version!r} != {SCHEMA_VERSION} (refusing records from the future)")
+    if rec.get("kind") not in ("workload", "bench"):
+        raise RecordError(f"{path}: kind {rec.get('kind')!r} not workload|bench")
+    if not rec.get("name"):
+        raise RecordError(f"{path}: missing name")
+    if not isinstance(rec.get("config"), dict):
+        raise RecordError(f"{path}: config must be an object")
+    summary = rec.get("summary")
+    if not isinstance(summary, dict):
+        raise RecordError(f"{path}: summary must be an object")
+    for metric, entry in summary.items():
+        if not isinstance(entry, dict) or entry.get("dir") not in ("higher", "lower"):
+            raise RecordError(f"{path}: summary metric {metric!r} needs {{value, dir: higher|lower}}")
+        if not isinstance(entry.get("value"), (int, float)) or isinstance(entry.get("value"), bool):
+            raise RecordError(f"{path}: summary metric {metric!r} needs a numeric value")
+    for key in ("system", "kernel_backend", "git_rev", "trace_dropped"):
+        if key not in rec:
+            raise RecordError(f"{path}: missing stamp key {key!r}")
+    rec["_path"] = path
+    return rec
+
+
+def load_dir(dirpath):
+    """All *.json records in ``dirpath``, sorted by filename. Missing or
+    empty directories load as an empty list (baselines are optional)."""
+    records = []
+    if not os.path.isdir(dirpath):
+        return records
+    for name in sorted(os.listdir(dirpath)):
+        if name.endswith(".json"):
+            records.append(load_record(os.path.join(dirpath, name)))
+    return records
+
+
+def config_str(config):
+    """Flat config as a canonical ``k=v`` join — the grouping key half."""
+    parts = []
+    for k in sorted(config):
+        v = config[k]
+        if isinstance(v, float) and v == int(v):
+            v = int(v)
+        parts.append(f"{k}={v}")
+    return " ".join(parts)
+
+
+def group_key(rec):
+    """workload×config identity: records compare iff these match."""
+    return f"{rec['kind']}/{rec['name']} [{config_str(rec['config'])}]"
+
+
+def stamps_compatible(a, b):
+    """Perf numbers transfer between runs only when the dispatched
+    kernel backend and the CPU architecture match."""
+    return a.get("kernel_backend") == b.get("kernel_backend") and a.get("system", {}).get("arch") == b.get(
+        "system", {}
+    ).get("arch")
+
+
+def compare(raw_records, baseline_records, threshold_pct, strict):
+    """Per-metric comparison rows.
+
+    Returns a list of dicts: group, metric, value, dir, baseline,
+    delta_pct, enforced, regressed. ``baseline``/``delta_pct`` are None
+    when the group or metric has no baseline.
+    """
+    baseline_by_group = {}
+    for rec in baseline_records:
+        key = group_key(rec)
+        if key in baseline_by_group:
+            raise RecordError(f"duplicate baseline for group {key!r} ({rec['_path']})")
+        baseline_by_group[key] = rec
+
+    rows = []
+    for rec in raw_records:
+        key = group_key(rec)
+        base = baseline_by_group.get(key)
+        for metric in sorted(rec["summary"]):
+            entry = rec["summary"][metric]
+            value, direction = entry["value"], entry["dir"]
+            row = {
+                "group": key,
+                "kind": rec["kind"],
+                "name": rec["name"],
+                "metric": metric,
+                "value": value,
+                "dir": direction,
+                "baseline": None,
+                "delta_pct": None,
+                "enforced": False,
+                "regressed": False,
+            }
+            base_entry = base["summary"].get(metric) if base else None
+            if base_entry is not None:
+                base_value = base_entry["value"]
+                row["baseline"] = base_value
+                if base_value != 0:
+                    delta = 100.0 * (value - base_value) / abs(base_value)
+                else:
+                    delta = 0.0 if value == 0 else float("inf")
+                row["delta_pct"] = delta
+                row["enforced"] = strict or stamps_compatible(rec, base)
+                worse = -delta if direction == "higher" else delta
+                row["regressed"] = row["enforced"] and worse > threshold_pct
+            rows.append(row)
+    return rows
+
+
+def fmt_value(v):
+    if v is None:
+        return "—"
+    if isinstance(v, float) and abs(v) >= 1000:
+        return f"{v:,.0f}"
+    return f"{v:.4g}" if isinstance(v, float) else str(v)
+
+
+def render_markdown(rows, threshold_pct, strict):
+    lines = [
+        "# lobcq consolidated perf report",
+        "",
+        f"Regression threshold: {threshold_pct:g}% ({'strict: all comparisons enforced' if strict else 'enforced only on stamp-compatible baselines'})",
+        "",
+        "| group | metric | dir | value | baseline | delta | status |",
+        "|---|---|---|---:|---:|---:|---|",
+    ]
+    for row in rows:
+        if row["baseline"] is None:
+            delta, status = "—", "no-baseline"
+        else:
+            delta = f"{row['delta_pct']:+.1f}%"
+            if row["regressed"]:
+                status = "REGRESSED"
+            elif row["enforced"]:
+                status = "ok"
+            else:
+                status = "advisory"
+        lines.append(
+            f"| {row['group']} | {row['metric']} | {row['dir']} | {fmt_value(row['value'])} "
+            f"| {fmt_value(row['baseline'])} | {delta} | {status} |"
+        )
+    regressed = [r for r in rows if r["regressed"]]
+    lines.append("")
+    if regressed:
+        lines.append(f"**{len(regressed)} regression(s) beyond {threshold_pct:g}%:**")
+        lines.extend(f"- {r['group']} :: {r['metric']}: {r['delta_pct']:+.1f}% ({r['dir']} is better)" for r in regressed)
+    else:
+        lines.append("No enforced regressions.")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def update_baseline(raw_records, baseline_dir):
+    """Copy every raw record into the baseline dir (filename preserved),
+    replacing what was there. This is how a host records a real baseline
+    to replace the advisory reference-seed placeholders."""
+    os.makedirs(baseline_dir, exist_ok=True)
+    for name in os.listdir(baseline_dir):
+        if name.endswith(".json"):
+            os.unlink(os.path.join(baseline_dir, name))
+    for rec in raw_records:
+        shutil.copy(rec["_path"], os.path.join(baseline_dir, os.path.basename(rec["_path"])))
+    return len(raw_records)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--raw", default="results/raw", help="directory of run-records to report on")
+    ap.add_argument("--baseline", default="results/baseline", help="directory of baseline run-records")
+    ap.add_argument("--out-md", default="results/report.md", help="consolidated markdown table")
+    ap.add_argument("--out-json", default="results/report.json", help="consolidated JSON report")
+    ap.add_argument("--threshold", type=float, default=10.0, help="regression threshold in percent (default 10)")
+    ap.add_argument(
+        "--strict", action="store_true", help="enforce every comparison even across incompatible stamps"
+    )
+    ap.add_argument(
+        "--update-baseline", action="store_true", help="copy the raw records over the baseline dir and exit"
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        raw = load_dir(args.raw)
+        if not raw:
+            print(f"report_generator: FAIL: no run-records in {args.raw}", file=sys.stderr)
+            return 1
+        if args.update_baseline:
+            n = update_baseline(raw, args.baseline)
+            print(f"report_generator: baseline updated with {n} record(s) in {args.baseline}")
+            return 0
+        baseline = load_dir(args.baseline)
+        rows = compare(raw, baseline, args.threshold, args.strict)
+    except RecordError as e:
+        print(f"report_generator: FAIL: {e}", file=sys.stderr)
+        return 1
+
+    md = render_markdown(rows, args.threshold, args.strict)
+    report = {
+        "schema": "lobcq-perf-report",
+        "schema_version": 1,
+        "threshold_pct": args.threshold,
+        "strict": args.strict,
+        "raw_records": len(raw),
+        "baseline_records": len(baseline),
+        "rows": rows,
+        "regressions": [r["group"] + " :: " + r["metric"] for r in rows if r["regressed"]],
+    }
+    for out_path, text in ((args.out_md, md), (args.out_json, json.dumps(report, indent=2, sort_keys=True) + "\n")):
+        d = os.path.dirname(out_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(out_path, "w") as f:
+            f.write(text)
+
+    regressed = report["regressions"]
+    compared = sum(1 for r in rows if r["baseline"] is not None)
+    advisory = sum(1 for r in rows if r["baseline"] is not None and not r["enforced"])
+    print(
+        f"report_generator: {len(raw)} record(s), {len(rows)} metric(s), {compared} compared "
+        f"({advisory} advisory), {len(regressed)} regression(s) — wrote {args.out_md}, {args.out_json}"
+    )
+    if regressed:
+        for g in regressed:
+            print(f"report_generator: REGRESSED: {g}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,185 @@
+"""report_generator regression-gate tests on synthetic run-records.
+
+These never run the rust side: they hand-author records in the shared
+schema (rust/src/bench/record.rs) and check the consolidation, the
+stamp-compatibility gating, and the exit codes.
+"""
+
+import copy
+import json
+import os
+
+import pytest
+
+import report_generator as rg
+
+
+def record(name="steady-decode", kind="workload", config=None, metrics=None, backend="scalar", arch="x86_64"):
+    summary = {}
+    for metric, (value, direction) in (metrics or {"tok_per_s": (800.0, "higher")}).items():
+        summary[metric] = {"value": value, "dir": direction}
+    return {
+        "schema": rg.SCHEMA,
+        "schema_version": rg.SCHEMA_VERSION,
+        "kind": kind,
+        "name": name,
+        "config": config if config is not None else {"lanes": 4, "kv": "bcq"},
+        "summary": summary,
+        "system": {"os": "linux", "arch": arch, "cores": 8},
+        "kernel_backend": backend,
+        "git_rev": "deadbeef",
+        "trace_dropped": 0,
+        "metrics": {},
+    }
+
+
+def write_records(dirpath, records):
+    os.makedirs(dirpath, exist_ok=True)
+    for i, rec in enumerate(records):
+        with open(os.path.join(dirpath, f"rec{i}.json"), "w") as f:
+            json.dump(rec, f)
+
+
+def run(tmp_path, raw, baseline=None, extra=()):
+    raw_dir = str(tmp_path / "raw")
+    base_dir = str(tmp_path / "baseline")
+    write_records(raw_dir, raw)
+    if baseline is not None:
+        write_records(base_dir, baseline)
+    argv = [
+        "--raw", raw_dir,
+        "--baseline", base_dir,
+        "--out-md", str(tmp_path / "report.md"),
+        "--out-json", str(tmp_path / "report.json"),
+        *extra,
+    ]
+    code = rg.main(argv)
+    report = None
+    if (tmp_path / "report.json").exists():
+        report = json.loads((tmp_path / "report.json").read_text())
+    return code, report
+
+
+def test_no_baseline_is_ok(tmp_path):
+    code, report = run(tmp_path, [record()])
+    assert code == 0
+    assert report["rows"][0]["baseline"] is None
+    assert report["regressions"] == []
+
+
+def test_matching_baseline_within_threshold_passes(tmp_path):
+    base = record(metrics={"tok_per_s": (800.0, "higher")})
+    raw = record(metrics={"tok_per_s": (780.0, "higher")})  # -2.5% < 10%
+    code, report = run(tmp_path, [raw], [base])
+    assert code == 0
+    row = report["rows"][0]
+    assert row["enforced"] and not row["regressed"]
+    assert row["delta_pct"] == pytest.approx(-2.5)
+
+
+def test_regression_on_higher_metric_fails(tmp_path):
+    base = record(metrics={"tok_per_s": (800.0, "higher")})
+    raw = record(metrics={"tok_per_s": (600.0, "higher")})  # -25%
+    code, report = run(tmp_path, [raw], [base])
+    assert code == 1
+    assert report["regressions"] == ["workload/steady-decode [kv=bcq lanes=4] :: tok_per_s"]
+
+
+def test_regression_on_lower_metric_fails(tmp_path):
+    base = record(metrics={"p99_itl_us": (1000.0, "lower")})
+    raw = record(metrics={"p99_itl_us": (1300.0, "lower")})  # +30% latency
+    code, _ = run(tmp_path, [raw], [base])
+    assert code == 1
+
+
+def test_improvement_never_fails(tmp_path):
+    base = record(metrics={"p99_itl_us": (1000.0, "lower"), "tok_per_s": (800.0, "higher")})
+    raw = record(metrics={"p99_itl_us": (500.0, "lower"), "tok_per_s": (1600.0, "higher")})
+    code, report = run(tmp_path, [raw], [base])
+    assert code == 0
+    assert all(not r["regressed"] for r in report["rows"])
+
+
+def test_incompatible_stamp_is_advisory(tmp_path):
+    """The checked-in reference-seed baselines must never gate a real
+    host — the comparison shows up but cannot fail the run."""
+    base = record(backend="reference-seed", metrics={"tok_per_s": (10_000.0, "higher")})
+    raw = record(backend="scalar", metrics={"tok_per_s": (100.0, "higher")})
+    code, report = run(tmp_path, [raw], [base])
+    assert code == 0
+    row = report["rows"][0]
+    assert row["baseline"] is not None and not row["enforced"] and not row["regressed"]
+
+
+def test_strict_enforces_incompatible_stamps(tmp_path):
+    base = record(backend="reference-seed", metrics={"tok_per_s": (10_000.0, "higher")})
+    raw = record(backend="scalar", metrics={"tok_per_s": (100.0, "higher")})
+    code, _ = run(tmp_path, [raw], [base], extra=["--strict"])
+    assert code == 1
+
+
+def test_different_config_is_a_different_group(tmp_path):
+    """A lanes=8 run never compares against a lanes=4 baseline."""
+    base = record(config={"lanes": 4}, metrics={"tok_per_s": (10_000.0, "higher")})
+    raw = record(config={"lanes": 8}, metrics={"tok_per_s": (100.0, "higher")})
+    code, report = run(tmp_path, [raw], [base])
+    assert code == 0
+    assert report["rows"][0]["baseline"] is None
+
+
+def test_threshold_flag(tmp_path):
+    base = record(metrics={"tok_per_s": (800.0, "higher")})
+    raw = record(metrics={"tok_per_s": (760.0, "higher")})  # -5%
+    assert run(tmp_path, [raw], [base], extra=["--threshold", "2"])[0] == 1
+    assert run(tmp_path, [raw], [base], extra=["--threshold", "8"])[0] == 0
+
+
+def test_malformed_record_fails(tmp_path):
+    bad = record()
+    bad["schema_version"] = 99
+    code, _ = run(tmp_path, [bad])
+    assert code == 1
+
+
+def test_bad_metric_entry_fails(tmp_path):
+    bad = record()
+    bad["summary"]["tok_per_s"] = {"value": 1.0}  # no dir
+    assert run(tmp_path, [bad])[0] == 1
+    bad2 = record()
+    bad2["summary"]["tok_per_s"] = {"value": "fast", "dir": "higher"}
+    assert run(tmp_path, [bad2])[0] == 1
+
+
+def test_empty_raw_dir_fails(tmp_path):
+    assert run(tmp_path, [])[0] == 1
+
+
+def test_markdown_report_is_written(tmp_path):
+    base = record(metrics={"tok_per_s": (800.0, "higher")})
+    raw = record(metrics={"tok_per_s": (600.0, "higher")})
+    code, _ = run(tmp_path, [raw], [base])
+    assert code == 1
+    md = (tmp_path / "report.md").read_text()
+    assert "REGRESSED" in md and "tok_per_s" in md
+
+
+def test_update_baseline_round_trips(tmp_path):
+    """--update-baseline then a re-run of the same records: every
+    comparison enforced (same stamp) with zero delta."""
+    raw = [record(metrics={"tok_per_s": (800.0, "higher")})]
+    raw_dir = str(tmp_path / "raw")
+    base_dir = str(tmp_path / "baseline")
+    write_records(raw_dir, raw)
+    common = ["--raw", raw_dir, "--baseline", base_dir,
+              "--out-md", str(tmp_path / "report.md"), "--out-json", str(tmp_path / "report.json")]
+    assert rg.main(common + ["--update-baseline"]) == 0
+    assert rg.main(common + ["--strict"]) == 0
+    report = json.loads((tmp_path / "report.json").read_text())
+    row = report["rows"][0]
+    assert row["enforced"] and row["delta_pct"] == 0.0
+
+
+def test_duplicate_baseline_group_rejected(tmp_path):
+    base = record()
+    code, _ = run(tmp_path, [record()], [base, copy.deepcopy(base)])
+    assert code == 1

@@ -12,7 +12,9 @@ Checks, in order:
      lifecycle categories all appear. When speculative decoding ran
      (``op``/``verify`` or ``op``/``rollback`` spans present), every such
      span must nest inside some ``sched``/``step`` interval — speculation
-     is a property of a scheduler step, never free-floating work.
+     is a property of a scheduler step, never free-floating work. The
+     export must report zero ring-buffer drops (``otherData.dropped_events``):
+     a lossy trace silently hides the spans these checks exist to audit.
   2. LIFECYCLE_JSONL is one JSON object per line (ts_us/event/request/arg),
      sorted by timestamp, and conserves requests: every admitted request id
      reaches exactly one terminal event (finished, shed-deadline, shed-kv,
@@ -21,8 +23,9 @@ Checks, in order:
   3. METRICS_JSON carries the server sections (latency, occupancy,
      admission, kv, prefix, panel), non-empty per-layer activation-NMSE
      telemetry, KV-encode NMSE samples, codebook-selector occupancy, and
-     the registry / kernel_backend / system stamps. A ``server.speculation``
-     section, when present, must carry the draft/accept/rollback counters.
+     the registry / kernel_backend / system stamps, and a zero
+     ``trace_dropped`` count. A ``server.speculation`` section, when
+     present, must carry the draft/accept/rollback counters.
 
 Exits non-zero with a one-line reason on the first failure.
 """
@@ -62,6 +65,13 @@ def check_chrome_trace(path):
     missing = REQUIRED_CATS - cats
     if missing:
         fail(f"{path}: no events in categories {sorted(missing)} (saw {sorted(cats)})")
+    dropped = trace.get("otherData", {}).get("dropped_events", 0)
+    try:
+        dropped = int(dropped)
+    except (TypeError, ValueError):
+        fail(f"{path}: otherData.dropped_events is not a count: {dropped!r}")
+    if dropped > 0:
+        fail(f"{path}: trace ring dropped {dropped} events — raise the ring capacity or drain more often")
     check_spec_nesting(path, events)
     return len(events)
 
@@ -148,6 +158,8 @@ def check_metrics(path):
     for key in ("registry", "kernel_backend", "system"):
         if key not in m:
             fail(f"{path}: missing `{key}` stamp")
+    if m.get("trace_dropped", 0) > 0:
+        fail(f"{path}: trace_dropped = {m['trace_dropped']} — the span ring overflowed during the run")
     return len(act)
 
 

@@ -591,9 +591,30 @@ fn main() {
             "peak_cache_bytes",
             Json::obj().with("f32", Json::Num(peak_f32 as f64)).with("bcq", Json::Num(peak_bcq as f64)),
         )
-        .with("acceptance", acceptance);
+        .with("acceptance", acceptance.clone());
     lobcq::obs::report::stamp(&mut report);
     let path = std::path::Path::new("BENCH_decode.json");
     report.to_file(path).expect("write BENCH_decode.json");
     println!("\nreport written to {}", path.display());
+
+    // Shared run-record (results/raw/) in the same schema the workload
+    // harness emits, for report_generator.py consolidation.
+    use lobcq::bench::Direction;
+    let rec = lobcq::bench::RunRecord::bench("decode")
+        .config(
+            Json::obj()
+                .with("d", Json::Num(cfg.d as f64))
+                .with("n_layers", Json::Num(cfg.n_layers as f64))
+                .with("kv", Json::Str("bcq".into())),
+        )
+        .metric("batch4_cached_bcq_tokens_per_s", batch4_tps, Direction::Higher)
+        .metric("encoded_attn_speedup", attn_ratio, Direction::Higher)
+        .metric("spec_vs_baseline", spec_vs_baseline, Direction::Higher)
+        .metric("kv4_ppl_delta", ppl4 - ppl16, Direction::Lower)
+        .metric("trace_disabled_overhead_pct", disabled_overhead_pct, Direction::Lower)
+        .detail(report.clone());
+    let rp = rec
+        .write_into(&lobcq::bench::record::raw_dir(), "bench_decode")
+        .expect("write decode run-record");
+    println!("run-record written to {}", rp.display());
 }

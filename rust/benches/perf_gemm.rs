@@ -201,9 +201,26 @@ fn main() {
     let mut report = Json::obj()
         .with("bench", Json::Str("perf_gemm".into()))
         .with("shapes", Json::Arr(shapes_json))
-        .with("acceptance", acceptance);
+        .with("acceptance", acceptance.clone());
     lobcq::obs::report::stamp(&mut report);
     let path = std::path::Path::new("BENCH_gemm.json");
     report.to_file(path).expect("write BENCH_gemm.json");
     println!("\nreport written to {}", path.display());
+
+    // Shared run-record (results/raw/): the same schema the workload
+    // harness emits, so report_generator.py consolidates benches and
+    // serving runs into one trajectory.
+    let mut rec = lobcq::bench::RunRecord::bench("gemm")
+        .config(Json::obj().with("k", Json::Num(1024.0)).with("n", Json::Num(1024.0)))
+        .detail(report.clone());
+    use lobcq::bench::Direction;
+    for key in ["blocked_vs_naive_1024", "simd_vs_scalar", "encoded_vs_decode_then_gemm_decode_shape"] {
+        if let Some(v) = acceptance.opt(key).and_then(|x| x.as_f64().ok()) {
+            rec = rec.metric(key, v, Direction::Higher);
+        }
+    }
+    let rp = rec
+        .write_into(&lobcq::bench::record::raw_dir(), "bench_gemm")
+        .expect("write gemm run-record");
+    println!("run-record written to {}", rp.display());
 }

@@ -178,9 +178,25 @@ fn main() {
     let mut report = Json::obj()
         .with("bench", Json::Str("perf_prefix".into()))
         .with("shapes", Json::Arr(shapes_json))
-        .with("acceptance", acceptance);
+        .with("acceptance", acceptance.clone());
     lobcq::obs::report::stamp(&mut report);
     let path = std::path::Path::new("BENCH_prefix.json");
     report.to_file(path).expect("write BENCH_prefix.json");
     println!("\nreport written to {}", path.display());
+
+    // Shared run-record (results/raw/) in the same schema the workload
+    // harness emits, for report_generator.py consolidation.
+    let rec = lobcq::bench::RunRecord::bench("prefix")
+        .config(
+            Json::obj()
+                .with("prefix_tokens", Json::Num(PREFIX_TOKENS as f64))
+                .with("suffix_tokens", Json::Num(SUFFIX_TOKENS as f64))
+                .with("requests", Json::Num(REQUESTS as f64)),
+        )
+        .metric("warm_ttft_speedup", speedup_k1, lobcq::bench::Direction::Higher)
+        .detail(report.clone());
+    let rp = rec
+        .write_into(&lobcq::bench::record::raw_dir(), "bench_prefix")
+        .expect("write prefix run-record");
+    println!("run-record written to {}", rp.display());
 }

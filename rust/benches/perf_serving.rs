@@ -249,4 +249,24 @@ fn main() {
     let path = std::path::Path::new("BENCH_serving.json");
     report.to_file(path).expect("write BENCH_serving.json");
     println!("report written to {}", path.display());
+
+    // Shared run-record (results/raw/) in the same schema the workload
+    // harness emits, for report_generator.py consolidation.
+    use lobcq::bench::Direction;
+    let rec = lobcq::bench::RunRecord::bench("serving")
+        .config(
+            Json::obj()
+                .with("lanes", Json::Num(LANES as f64))
+                .with("long_prompt_tokens", Json::Num(LONG_PROMPT as f64))
+                .with("prefill_chunk", Json::Num(CHUNK as f64))
+                .with("kv", Json::Str("bcq".into())),
+        )
+        .metric("p99_itl_chunked_vs_inline", ratio, Direction::Lower)
+        .metric("chunked_p99_itl_us", chunked_p99, Direction::Lower)
+        .metric("chunked_tok_per_s", chunked.total_tokens as f64 / chunked.wall_s, Direction::Higher)
+        .detail(report.clone());
+    let rp = rec
+        .write_into(&lobcq::bench::record::raw_dir(), "bench_serving")
+        .expect("write serving run-record");
+    println!("run-record written to {}", rp.display());
 }

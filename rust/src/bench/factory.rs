@@ -1,0 +1,235 @@
+//! Deterministic expansion of a [`WorkloadSpec`] into a timed request
+//! trace.
+//!
+//! Same spec + same seed ⇒ byte-identical trace (prompts, arrival
+//! offsets, generation budgets), every time, on every host — enforced
+//! by `tests/workload_harness.rs`. All randomness flows through one
+//! seeded [`Pcg32`] on a dedicated stream, and prompt token content
+//! comes from the shared `data::corpus` generators so workload traffic
+//! is drawn from the same distribution the parity tests and benches
+//! already use.
+
+use super::spec::{ArrivalKind, WorkloadSpec};
+use crate::data::corpus;
+use crate::util::rng::Pcg32;
+
+/// RNG stream id for trace expansion (disjoint from the corpus
+/// streams so a workload seed never aliases a corpus seed).
+const TRACE_STREAM: u64 = 0xBE4C;
+
+/// One request in a trace: when it arrives and what it asks for.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TimedRequest {
+    /// Arrival offset from run start, in microseconds. Zero for every
+    /// request under closed-loop arrivals (clients re-submit on
+    /// completion instead of on a clock).
+    pub at_us: u64,
+    /// Prompt token ids (corpus vocabulary; the runner folds them into
+    /// the serving model's vocab).
+    pub prompt: Vec<u32>,
+    /// Generation budget in tokens.
+    pub max_new: usize,
+    /// Index of the shared system prompt this request extends, when
+    /// the spec declares `prefix_k > 0`.
+    pub prefix_id: Option<usize>,
+}
+
+/// A fully expanded workload: the requests plus a content fingerprint
+/// that run-records carry so two runs can be checked for having
+/// served the identical trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestTrace {
+    pub requests: Vec<TimedRequest>,
+    /// FNV-1a over every request's `(at_us, max_new, prompt)`.
+    pub fingerprint: u64,
+}
+
+impl RequestTrace {
+    pub fn total_prompt_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.prompt.len()).sum()
+    }
+
+    pub fn total_gen_budget(&self) -> usize {
+        self.requests.iter().map(|r| r.max_new).sum()
+    }
+}
+
+fn fnv_fold(h: &mut u64, x: u64) {
+    *h ^= x;
+    *h = h.wrapping_mul(0x100000001B3);
+}
+
+fn trace_fingerprint(requests: &[TimedRequest]) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for r in requests {
+        fnv_fold(&mut h, r.at_us);
+        fnv_fold(&mut h, r.max_new as u64);
+        for &t in &r.prompt {
+            fnv_fold(&mut h, t as u64);
+        }
+        // Separator keeps (len-3 prompt, len-2 prompt) distinct from
+        // (len-2, len-3) splits of the same token stream.
+        fnv_fold(&mut h, u64::MAX);
+    }
+    h
+}
+
+/// Arrival offsets for `n` requests under the spec's arrival pattern.
+fn arrivals(spec: &WorkloadSpec, n: usize, rng: &mut Pcg32) -> Vec<u64> {
+    match spec.arrival {
+        ArrivalKind::Closed => vec![0; n],
+        ArrivalKind::Poisson => {
+            // Exponential inter-arrival gaps at rate_rps, cumulated.
+            let mut t_us = 0.0f64;
+            (0..n)
+                .map(|_| {
+                    let u = rng.next_f64().min(1.0 - 1e-12);
+                    t_us += -(1.0 - u).ln() * 1e6 / spec.rate_rps;
+                    t_us as u64
+                })
+                .collect()
+        }
+        ArrivalKind::Bursty => (0..n)
+            .map(|i| (i / spec.burst_size) as u64 * spec.burst_gap_ms * 1000)
+            .collect(),
+    }
+}
+
+/// Expand `spec` into its request trace. Draw order is fixed —
+/// arrivals, then per-request (prefix choice, prompt length,
+/// generation length) — so adding requests never perturbs earlier
+/// ones' arrival clock.
+pub fn expand(spec: &WorkloadSpec) -> anyhow::Result<RequestTrace> {
+    spec.validate()?;
+    let mut rng = Pcg32::new(spec.seed, TRACE_STREAM);
+    let at = arrivals(spec, spec.requests, &mut rng);
+
+    // Shared system prompts, when the spec asks for prefix sharing.
+    let prefixes: Vec<Vec<u32>> = (0..spec.prefix_k)
+        .map(|j| corpus::generate(spec.seed ^ (0x5151 + j as u64), spec.prefix_len))
+        .collect();
+
+    let mut requests = Vec::with_capacity(spec.requests);
+    for (i, &at_us) in at.iter().enumerate() {
+        let plen = spec.prompt_len.sample(&mut rng);
+        let max_new = spec.gen_len.sample(&mut rng);
+        let (prompt, prefix_id) = if spec.prefix_k > 0 {
+            let j = rng.index(spec.prefix_k);
+            let mut prompt = prefixes[j].clone();
+            // validate() guarantees plen > prefix_len, so every request
+            // keeps a non-empty unique suffix past its system prompt.
+            let suffix = corpus::unique_prompt(spec.seed, i, plen - spec.prefix_len + 1);
+            prompt.extend_from_slice(&suffix[1..]); // skip the generator's BOS
+            (prompt, Some(j))
+        } else if spec.repetitive {
+            (corpus::repetitive(spec.seed ^ ((i as u64) << 8), spec.repeat_period, plen), None)
+        } else {
+            (corpus::unique_prompt(spec.seed, i, plen), None)
+        };
+        requests.push(TimedRequest { at_us, prompt, max_new, prefix_id });
+    }
+    let fingerprint = trace_fingerprint(&requests);
+    Ok(RequestTrace { requests, fingerprint })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::spec::LenDist;
+
+    fn spec(text: &str) -> WorkloadSpec {
+        WorkloadSpec::parse(text).unwrap()
+    }
+
+    #[test]
+    fn same_seed_same_trace() {
+        let s = spec("requests = 12\narrival = poisson\nrate_rps = 500\nprompt_len = 8..24\ngen_len = 2..6");
+        let a = expand(&s).unwrap();
+        let b = expand(&s).unwrap();
+        assert_eq!(a, b);
+        let mut s2 = s.clone();
+        s2.seed += 1;
+        let c = expand(&s2).unwrap();
+        assert_ne!(a.fingerprint, c.fingerprint);
+    }
+
+    #[test]
+    fn closed_loop_arrivals_are_all_zero() {
+        let t = expand(&spec("requests = 8")).unwrap();
+        assert!(t.requests.iter().all(|r| r.at_us == 0));
+    }
+
+    #[test]
+    fn poisson_arrivals_nondecreasing_and_rate_scaled() {
+        let t = expand(&spec("requests = 64\narrival = poisson\nrate_rps = 1000")).unwrap();
+        let at: Vec<u64> = t.requests.iter().map(|r| r.at_us).collect();
+        assert!(at.windows(2).all(|w| w[0] <= w[1]), "arrivals must be sorted");
+        // 64 arrivals at 1000 rps ⇒ mean span ~64 ms; allow wide slack.
+        let span_ms = *at.last().unwrap() as f64 / 1000.0;
+        assert!((10.0..400.0).contains(&span_ms), "span {span_ms} ms implausible for 1000 rps");
+    }
+
+    #[test]
+    fn bursty_arrivals_group_into_bursts() {
+        let t = expand(&spec("requests = 10\narrival = bursty\nburst_size = 4\nburst_gap_ms = 20")).unwrap();
+        let at: Vec<u64> = t.requests.iter().map(|r| r.at_us).collect();
+        assert_eq!(&at[..4], &[0, 0, 0, 0]);
+        assert_eq!(&at[4..8], &[20_000; 4]);
+        assert_eq!(&at[8..], &[40_000, 40_000]);
+    }
+
+    #[test]
+    fn length_distributions_hit_their_bounds() {
+        let s = spec("requests = 200\nprompt_len = 8..12\ngen_len = 2..4");
+        let t = expand(&s).unwrap();
+        let mut seen_plen = std::collections::BTreeSet::new();
+        for r in &t.requests {
+            assert!((8..=12).contains(&r.prompt.len()), "prompt len {}", r.prompt.len());
+            assert!((2..=4).contains(&r.max_new), "gen len {}", r.max_new);
+            seen_plen.insert(r.prompt.len());
+        }
+        // 200 draws over 5 lengths must cover the extremes.
+        assert!(seen_plen.contains(&8) && seen_plen.contains(&12), "bounds never drawn: {seen_plen:?}");
+    }
+
+    #[test]
+    fn fixed_lengths_are_exact() {
+        let s = spec("requests = 6\nprompt_len = 16\ngen_len = 5");
+        assert_eq!(s.prompt_len, LenDist::Fixed(16));
+        for r in &expand(&s).unwrap().requests {
+            assert_eq!(r.prompt.len(), 16);
+            assert_eq!(r.max_new, 5);
+        }
+    }
+
+    #[test]
+    fn prefix_sharing_shares_exact_prefixes() {
+        let t = expand(&spec("requests = 24\nprefix_k = 3\nprefix_len = 8\nprompt_len = 16")).unwrap();
+        let mut used = [false; 3];
+        let mut by_prefix: std::collections::BTreeMap<usize, Vec<&Vec<u32>>> = Default::default();
+        for r in &t.requests {
+            let j = r.prefix_id.expect("prefix workload must tag requests");
+            used[j] = true;
+            by_prefix.entry(j).or_default().push(&r.prompt);
+        }
+        assert!(used.iter().filter(|&&u| u).count() >= 2, "sampler never varied its prefix");
+        for (_, prompts) in by_prefix {
+            for w in prompts.windows(2) {
+                assert_eq!(&w[0][..8], &w[1][..8], "same prefix id, different system prompt");
+            }
+            if prompts.len() >= 2 {
+                assert_ne!(prompts[0], prompts[1], "suffixes not unique");
+            }
+        }
+    }
+
+    #[test]
+    fn repetitive_prompts_are_periodic() {
+        let t = expand(&spec("requests = 4\nrepetitive = true\nrepeat_period = 6\nprompt_len = 30")).unwrap();
+        for r in &t.requests {
+            for i in 1..r.prompt.len() - 6 {
+                assert_eq!(r.prompt[i], r.prompt[i + 6], "aperiodic at {i}");
+            }
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Declarative workload harness + consolidated perf reporting
+//! (DESIGN.md §Workload harness).
+//!
+//! Turns the bespoke per-bench sweeps into one corpus of **versioned
+//! run-records**:
+//!
+//! - [`spec`] — a [`spec::WorkloadSpec`] parsed from a simple
+//!   `key = value` file (`workloads/*.toml`): lanes, arrival pattern
+//!   (closed-loop / open-loop Poisson / bursty), prompt/gen length
+//!   distributions, prefix-sharing K, KV mode (`bcq`|`f32`), weight
+//!   mode (`encoded`|`dense`), speculation (`spec_k`/drafter), seed.
+//! - [`factory`] — deterministically expands a spec into a timed
+//!   request trace ([`factory::RequestTrace`]): same spec + seed ⇒
+//!   byte-identical prompts and arrival offsets, every time.
+//! - [`record`] — the shared run-record schema
+//!   ([`record::SCHEMA`]/[`record::SCHEMA_VERSION`]): one JSON per run
+//!   carrying the resolved config, a flat `summary` of headline
+//!   metrics (each tagged with its better-direction), the full
+//!   `ServerMetrics` snapshot where one exists, `obs::quant_stats`
+//!   NMSE telemetry, and the `obs::report` stamp
+//!   (system/kernel backend/git rev/registry).
+//! - [`runner`] — builds a server from a spec, drives the trace
+//!   through `Server::submit_with`, and sweeps one key over a value
+//!   list (`lobcq bench --workload <spec> --sweep key=v1,v2,…`),
+//!   emitting one run-record per point into `results/raw/`.
+//!
+//! `python/report_generator.py` consolidates `results/raw/*.json`
+//! into one comparison table and gates regressions against the
+//! checked-in `results/baseline/` snapshot.
+
+pub mod factory;
+pub mod record;
+pub mod runner;
+pub mod spec;
+
+pub use factory::{expand, RequestTrace, TimedRequest};
+pub use record::{Direction, RunRecord};
+pub use runner::{run_sweep, run_workload, DriveStats, SweepSpec};
+pub use spec::{ArrivalKind, KvMode, LenDist, WeightMode, WorkloadSpec};

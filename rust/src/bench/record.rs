@@ -1,0 +1,287 @@
+//! The shared run-record schema (DESIGN.md §Workload harness).
+//!
+//! Every perf measurement in the repo — workload runs from the sweep
+//! runner and the four `perf_*` benches — lands as one JSON document
+//! of this shape, so `python/report_generator.py` can consolidate them
+//! into a single trajectory:
+//!
+//! ```text
+//! {
+//!   "schema": "lobcq-run-record", "schema_version": 1,
+//!   "kind": "workload" | "bench",
+//!   "name": "steady-decode",
+//!   "config": { flat scalars — the grouping key for baselines },
+//!   "summary": { "tok_per_s": {"value": 812.0, "dir": "higher"},
+//!                "p99_itl_us": {"value": 1500.0, "dir": "lower"}, … },
+//!   "server":  <ServerMetrics::to_json() snapshot>      (optional),
+//!   "quant":   <obs::quant_stats snapshot>              (optional),
+//!   "detail":  { bench-specific sections, free-form }   (optional),
+//!   "system"/"kernel_backend"/"git_rev"/"metrics"/"trace_dropped":
+//!       the obs::report::stamp block
+//! }
+//! ```
+//!
+//! `summary` metrics carry their better-direction inline so the report
+//! generator never needs a hard-coded metric table; `config` is flat
+//! (strings/numbers/bools only) so workload×config grouping is a plain
+//! string join. Bump [`SCHEMA_VERSION`] on any incompatible change —
+//! the report generator refuses records from the future.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+pub const SCHEMA: &str = "lobcq-run-record";
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Which way a metric is better.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Higher,
+    Lower,
+}
+
+impl Direction {
+    pub fn name(self) -> &'static str {
+        match self {
+            Direction::Higher => "higher",
+            Direction::Lower => "lower",
+        }
+    }
+}
+
+/// Builder for one run-record. Assemble sections, then [`RunRecord::to_json`]
+/// (pure — for determinism tests) or [`RunRecord::write`] (stamps and
+/// persists).
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    kind: &'static str,
+    name: String,
+    config: Json,
+    summary: Json,
+    server: Option<Json>,
+    quant: Option<Json>,
+    detail: Option<Json>,
+}
+
+impl RunRecord {
+    /// A record for a declarative workload run.
+    pub fn workload(name: &str) -> RunRecord {
+        Self::new("workload", name)
+    }
+
+    /// A record for a `perf_*` bench.
+    pub fn bench(name: &str) -> RunRecord {
+        Self::new("bench", name)
+    }
+
+    fn new(kind: &'static str, name: &str) -> RunRecord {
+        RunRecord {
+            kind,
+            name: name.to_string(),
+            config: Json::obj(),
+            summary: Json::obj(),
+            server: None,
+            quant: None,
+            detail: None,
+        }
+    }
+
+    /// Set the whole config object (must be a flat JSON object).
+    pub fn config(mut self, config: Json) -> RunRecord {
+        self.config = config;
+        self
+    }
+
+    /// Add one config key (benches build their config incrementally).
+    pub fn config_kv(mut self, key: &str, value: Json) -> RunRecord {
+        self.config.set(key, value);
+        self
+    }
+
+    /// Add one headline metric with its better-direction.
+    pub fn metric(mut self, name: &str, value: f64, dir: Direction) -> RunRecord {
+        self.summary.set(
+            name,
+            Json::obj().with("dir", Json::Str(dir.name().into())).with("value", Json::Num(value)),
+        );
+        self
+    }
+
+    pub fn server(mut self, snapshot: Json) -> RunRecord {
+        self.server = Some(snapshot);
+        self
+    }
+
+    pub fn quant(mut self, snapshot: Json) -> RunRecord {
+        self.quant = Some(snapshot);
+        self
+    }
+
+    pub fn detail(mut self, detail: Json) -> RunRecord {
+        self.detail = Some(detail);
+        self
+    }
+
+    /// The record body, without the environment stamp — byte-identical
+    /// for identical inputs (what the determinism tests compare).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .with("schema", Json::Str(SCHEMA.into()))
+            .with("schema_version", Json::Num(SCHEMA_VERSION as f64))
+            .with("kind", Json::Str(self.kind.into()))
+            .with("name", Json::Str(self.name.clone()))
+            .with("config", self.config.clone())
+            .with("summary", self.summary.clone());
+        if let Some(s) = &self.server {
+            j.set("server", s.clone());
+        }
+        if let Some(q) = &self.quant {
+            j.set("quant", q.clone());
+        }
+        if let Some(d) = &self.detail {
+            j.set("detail", d.clone());
+        }
+        j
+    }
+
+    /// Stamp with `obs::report::stamp` and write to `path`
+    /// (parent directories are created).
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        let mut j = self.to_json();
+        crate::obs::report::stamp(&mut j);
+        validate(&j).map_err(|e| anyhow::anyhow!("refusing to write malformed record: {e}"))?;
+        j.to_file(path)
+    }
+
+    /// Stamp and write into `dir` under `<slug>.json`; returns the path.
+    pub fn write_into(&self, dir: &Path, slug: &str) -> anyhow::Result<PathBuf> {
+        let path = dir.join(format!("{}.json", sanitize(slug)));
+        self.write(&path)?;
+        Ok(path)
+    }
+}
+
+/// Where run-records land by default: `results/raw/`, overridable via
+/// `LOBCQ_RAW_DIR` (the CI smoke leg points benches and workload runs
+/// at a scratch directory this way).
+pub fn raw_dir() -> PathBuf {
+    std::env::var("LOBCQ_RAW_DIR").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("results/raw"))
+}
+
+/// Filesystem-safe slug: alnum kept, everything else folded to `-`
+/// (runs collapsed, edges trimmed). `_` is kept so the runner's
+/// `name__key-value` convention survives.
+pub fn sanitize(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut last_dash = true; // trim leading dashes
+    for c in s.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == '.' {
+            out.push(c);
+            last_dash = false;
+        } else if !last_dash {
+            out.push('-');
+            last_dash = true;
+        }
+    }
+    while out.ends_with('-') {
+        out.pop();
+    }
+    if out.is_empty() {
+        out.push_str("run");
+    }
+    out
+}
+
+/// Structural schema check — shared by the writer (refuses to emit a
+/// malformed record) and the harness tests (assert every sweep output
+/// round-trips).
+pub fn validate(j: &Json) -> Result<(), String> {
+    let schema =
+        j.opt("schema").and_then(|s| s.as_str().ok()).ok_or_else(|| "missing schema".to_string())?;
+    if schema != SCHEMA {
+        return Err(format!("schema '{schema}' != '{SCHEMA}'"));
+    }
+    let version = j
+        .opt("schema_version")
+        .and_then(|v| v.as_u64().ok())
+        .ok_or_else(|| "missing schema_version".to_string())?;
+    if version != SCHEMA_VERSION {
+        return Err(format!("schema_version {version} != {SCHEMA_VERSION}"));
+    }
+    let kind = j.opt("kind").and_then(|s| s.as_str().ok()).ok_or_else(|| "missing kind".to_string())?;
+    if kind != "workload" && kind != "bench" {
+        return Err(format!("kind '{kind}' not workload|bench"));
+    }
+    match j.opt("name").and_then(|s| s.as_str().ok()) {
+        Some(n) if !n.is_empty() => {}
+        _ => return Err("missing name".into()),
+    }
+    match j.get("config") {
+        Ok(Json::Obj(_)) => {}
+        _ => return Err("config must be an object".into()),
+    }
+    let summary = match j.get("summary") {
+        Ok(Json::Obj(m)) => m,
+        _ => return Err("summary must be an object".into()),
+    };
+    for (k, v) in summary {
+        let value = v.opt("value").and_then(|x| x.as_f64().ok());
+        let dir = v.opt("dir").and_then(|x| x.as_str().ok());
+        if value.is_none() || !matches!(dir, Some("higher") | Some("lower")) {
+            return Err(format!("summary metric '{k}' needs {{value, dir: higher|lower}}"));
+        }
+    }
+    for key in ["system", "kernel_backend", "git_rev", "trace_dropped"] {
+        if j.get(key).is_err() {
+            return Err(format!("missing stamp key '{key}'"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunRecord {
+        RunRecord::workload("steady-decode")
+            .config(Json::obj().with("lanes", Json::Num(4.0)))
+            .metric("tok_per_s", 812.5, Direction::Higher)
+            .metric("p99_itl_us", 1500.0, Direction::Lower)
+            .server(Json::obj().with("requests", Json::Num(16.0)))
+    }
+
+    #[test]
+    fn body_is_deterministic_and_stamped_record_validates() {
+        assert_eq!(sample().to_json().to_string_compact(), sample().to_json().to_string_compact());
+        let mut j = sample().to_json();
+        assert!(validate(&j).is_err(), "unstamped record must not validate");
+        crate::obs::report::stamp(&mut j);
+        validate(&j).unwrap();
+        // Round-trips through text.
+        validate(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_malformed() {
+        let mut j = sample().to_json();
+        crate::obs::report::stamp(&mut j);
+        let mut wrong_ver = j.clone();
+        wrong_ver.set("schema_version", Json::Num(99.0));
+        assert!(validate(&wrong_ver).is_err());
+        let mut wrong_kind = j.clone();
+        wrong_kind.set("kind", Json::Str("vibes".into()));
+        assert!(validate(&wrong_kind).is_err());
+        let mut bad_metric = j.clone();
+        bad_metric.set("summary", Json::obj().with("x", Json::obj().with("value", Json::Num(1.0))));
+        assert!(validate(&bad_metric).is_err(), "metric without dir must fail");
+    }
+
+    #[test]
+    fn sanitize_makes_safe_slugs() {
+        assert_eq!(sanitize("steady-decode__lanes-4"), "steady-decode__lanes-4");
+        assert_eq!(sanitize("a b/c..8"), "a-b-c..8");
+        assert_eq!(sanitize("--weird--"), "weird");
+        assert_eq!(sanitize("///"), "run");
+    }
+}

@@ -1,0 +1,302 @@
+//! Workload execution + sweep orchestration.
+//!
+//! [`build_server`] turns a [`WorkloadSpec`] into a live continuous
+//! decode server (same construction path as `lobcq serve-cpu`, just
+//! spec-driven); [`drive`] plays a [`RequestTrace`] into it honouring
+//! the arrival pattern — closed-loop clients or open-loop timed
+//! submits; [`run_workload`] composes the two and emits one stamped
+//! run-record; [`run_sweep`] repeats that for every value of a swept
+//! key (`lobcq bench --workload <spec> --sweep key=v1,v2,…`).
+
+use super::factory::{expand, RequestTrace};
+use super::record::{sanitize, Direction, RunRecord};
+use super::spec::{ArrivalKind, WeightMode, WorkloadSpec};
+use crate::coordinator::{
+    BatchPolicy, ContinuousOpts, DecodeSession, DrafterKind, KvCacheOpts, Limits, Priority, Sampling,
+    Server,
+};
+use crate::data::corpus;
+use crate::eval::Env;
+use crate::quant::pipeline::QuantPool;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// Deterministic random tiny-GPT over the corpus vocab — the model
+/// every artifact-less run (workloads, `serve-cpu`, CI smoke) serves.
+pub fn demo_model() -> (crate::model::ModelConfig, crate::model::Weights) {
+    let cfg = crate::model::ModelConfig {
+        name: "cpu-demo".into(),
+        d: 64,
+        n_layers: 2,
+        n_heads: 2,
+        vocab: corpus::VOCAB as usize,
+        max_t: 64,
+    };
+    let mut rng = Pcg32::seeded(0xCDE);
+    let mut tensors = std::collections::BTreeMap::new();
+    for (name, shape) in cfg.param_shapes() {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with(".g") {
+            vec![1.0; n]
+        } else if name.ends_with(".b") {
+            vec![0.0; n]
+        } else {
+            (0..n).map(|_| rng.normal() * 0.05).collect()
+        };
+        tensors.insert(name, crate::tensor::Tensor::new(&shape, data));
+    }
+    (cfg, crate::model::Weights::new(tensors))
+}
+
+/// Build the continuous-engine server a spec describes. Artifacts are
+/// used when present under `artifacts`; otherwise the [`demo_model`]
+/// serves. Returns the server and its vocab (prompts are folded into
+/// it at submit time).
+pub fn build_server(spec: &WorkloadSpec, artifacts: &Path) -> anyhow::Result<(Server, u32)> {
+    spec.validate()?;
+    let env = Env::load_from(artifacts.to_path_buf());
+    let scheme = match spec.weights {
+        // Encoded-domain W4A4 qgemm over packed BCQ codes.
+        WeightMode::Encoded => env.lobcq(8, 8, 64)?,
+        // Dense f32 GEMM reference path.
+        WeightMode::Dense => crate::eval::Scheme::Bf16,
+    };
+    let (cfg, weights) = match (env.model_config("s"), env.weights("s")) {
+        (Ok(c), Ok(w)) => (c, w),
+        _ => demo_model(),
+    };
+    let max_prompt = cfg.max_t.saturating_sub(1);
+    anyhow::ensure!(
+        spec.prompt_len.max() <= max_prompt,
+        "workload '{}': prompt_len max {} exceeds the model's prompt budget {} (max_t {})",
+        spec.name,
+        spec.prompt_len.max(),
+        max_prompt,
+        cfg.max_t
+    );
+    let vocab = cfg.vocab as u32;
+    let kv = KvCacheOpts {
+        page_tokens: spec.page_tokens,
+        encoded: spec.kv.encoded(),
+        prefix_cache_bytes: spec.prefix_cache_bytes,
+        page_budget: (spec.kv_pages > 0).then_some(spec.kv_pages),
+    };
+    let session =
+        DecodeSession::new(cfg.clone(), &weights, &scheme, QuantPool::default(), spec.lanes, kv)?;
+    let server = Server::start_continuous_with(
+        session,
+        Limits { max_prompt, max_new: spec.gen_len.max().max(1), vocab },
+        Sampling::Greedy,
+        BatchPolicy {
+            max_batch: spec.lanes,
+            max_wait: Duration::from_millis(spec.max_wait_ms),
+            queue_cap: (spec.queue_cap > 0).then_some(spec.queue_cap),
+        },
+        ContinuousOpts {
+            prefill_chunk: if spec.prefill_chunk == 0 { usize::MAX } else { spec.prefill_chunk },
+            spec_k: spec.spec_k,
+            drafter: DrafterKind::parse(&spec.drafter)?,
+        },
+    );
+    Ok((server, vocab))
+}
+
+/// Outcome counts from driving one trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriveStats {
+    /// Requests that completed with a response.
+    pub ok: usize,
+    /// Requests rejected at admission or shed/failed before completing.
+    pub failed: usize,
+    /// Wall-clock for the whole trace, seconds.
+    pub wall_s: f64,
+}
+
+/// Play `trace` into `server`. Closed-loop arrivals run `spec.lanes`
+/// client threads that each submit their next request the moment the
+/// previous one finishes; open-loop arrivals (poisson/bursty) give
+/// every request its own thread that submits at its trace offset
+/// regardless of completions — the load keeps coming when the server
+/// falls behind, which is the point.
+pub fn drive(server: &Server, trace: &RequestTrace, spec: &WorkloadSpec, vocab: u32) -> DriveStats {
+    let deadline = (spec.deadline_ms > 0).then(|| Duration::from_millis(spec.deadline_ms));
+    let submit = |r: &super::factory::TimedRequest| -> bool {
+        let prompt: Vec<u32> = r.prompt.iter().map(|&x| x % vocab).collect();
+        match server.submit_with(prompt, r.max_new, Priority::Normal, deadline) {
+            Ok(ticket) => ticket.wait().is_ok(),
+            Err(_) => false,
+        }
+    };
+    let t0 = Instant::now();
+    let ok = AtomicUsize::new(0);
+    match spec.arrival {
+        ArrivalKind::Closed => {
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                for _ in 0..spec.lanes.min(trace.requests.len()) {
+                    s.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        let Some(r) = trace.requests.get(i) else { break };
+                        if submit(r) {
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                }
+            });
+        }
+        ArrivalKind::Poisson | ArrivalKind::Bursty => {
+            std::thread::scope(|s| {
+                for r in &trace.requests {
+                    s.spawn(|| {
+                        let due = Duration::from_micros(r.at_us);
+                        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+                            std::thread::sleep(wait);
+                        }
+                        if submit(r) {
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                }
+            });
+        }
+    }
+    let ok = ok.into_inner();
+    DriveStats { ok, failed: trace.requests.len() - ok, wall_s: t0.elapsed().as_secs_f64() }
+}
+
+/// Run one workload end-to-end and write its stamped run-record as
+/// `<out_dir>/<slug>.json`. Quant telemetry is reset at entry so the
+/// record's NMSE section reflects this run alone.
+pub fn run_workload(
+    spec: &WorkloadSpec,
+    artifacts: &Path,
+    out_dir: &Path,
+    slug: &str,
+) -> anyhow::Result<PathBuf> {
+    crate::obs::quant_stats::enable();
+    crate::obs::quant_stats::reset();
+    let trace = expand(spec)?;
+    let (server, vocab) = build_server(spec, artifacts)?;
+    let stats = drive(&server, &trace, spec, vocab);
+    let snapshot = server.metrics.snapshot();
+    server.shutdown();
+
+    let ok_rate =
+        if trace.requests.is_empty() { 0.0 } else { stats.ok as f64 / trace.requests.len() as f64 };
+    let record = RunRecord::workload(&spec.name)
+        .config(
+            spec.to_config_json()
+                // u64 fingerprints exceed f64-exact range; carry as text.
+                .with("trace_fingerprint", Json::Str(trace.fingerprint.to_string())),
+        )
+        .metric("tok_per_s", snapshot.tokens_per_s, Direction::Higher)
+        .metric("ttft_p99_us", snapshot.ttft_p99_us, Direction::Lower)
+        .metric("itl_p50_us", snapshot.itl_p50_us, Direction::Lower)
+        .metric("itl_p99_us", snapshot.itl_p99_us, Direction::Lower)
+        .metric("total_p95_us", snapshot.total_p95_us, Direction::Lower)
+        .metric("ok_rate", ok_rate, Direction::Higher)
+        .server(snapshot.to_json())
+        .quant(crate::obs::quant_stats::snapshot_json())
+        .detail(
+            Json::obj()
+                .with("ok", Json::Num(stats.ok as f64))
+                .with("failed", Json::Num(stats.failed as f64))
+                .with("wall_s", Json::Num(stats.wall_s))
+                .with("trace_requests", Json::Num(trace.requests.len() as f64))
+                .with("trace_prompt_tokens", Json::Num(trace.total_prompt_tokens() as f64))
+                .with("trace_gen_budget", Json::Num(trace.total_gen_budget() as f64)),
+        );
+    let path = record.write_into(out_dir, slug)?;
+    crate::log_info!(
+        "[workload {}] {} ok / {} failed in {:.2}s — {:.1} tok/s → {}",
+        spec.name,
+        stats.ok,
+        stats.failed,
+        stats.wall_s,
+        snapshot.tokens_per_s,
+        path.display()
+    );
+    Ok(path)
+}
+
+/// One swept key and the values to run it at, from `--sweep key=v1,v2,…`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SweepSpec {
+    pub key: String,
+    pub values: Vec<String>,
+}
+
+impl SweepSpec {
+    pub fn parse(s: &str) -> anyhow::Result<SweepSpec> {
+        let (key, vals) = s
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--sweep wants key=v1,v2,… (got '{s}')"))?;
+        let values: Vec<String> =
+            vals.split(',').map(str::trim).filter(|v| !v.is_empty()).map(str::to_string).collect();
+        anyhow::ensure!(!values.is_empty(), "--sweep {key}= needs at least one value");
+        Ok(SweepSpec { key: key.trim().to_string(), values })
+    }
+}
+
+/// Expand the sweep into per-point specs (base spec with one key
+/// rewritten) and run each, one record per point. Without a sweep the
+/// base spec runs once. Returns the written record paths.
+pub fn run_sweep(
+    base: &WorkloadSpec,
+    sweep: Option<&SweepSpec>,
+    artifacts: &Path,
+    out_dir: &Path,
+) -> anyhow::Result<Vec<PathBuf>> {
+    let Some(sweep) = sweep else {
+        return Ok(vec![run_workload(base, artifacts, out_dir, &base.name)?]);
+    };
+    let mut paths = Vec::with_capacity(sweep.values.len());
+    for value in &sweep.values {
+        let mut spec = base.clone();
+        spec.apply(&sweep.key, value)
+            .map_err(|e| anyhow::anyhow!("sweep point {}={value}: {e}", sweep.key))?;
+        spec.validate()
+            .map_err(|e| anyhow::anyhow!("sweep point {}={value}: {e}", sweep.key))?;
+        let slug = format!("{}__{}-{}", spec.name, sweep.key, sanitize(value));
+        paths.push(run_workload(&spec, artifacts, out_dir, &slug)?);
+    }
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_spec_parses_lists() {
+        let s = SweepSpec::parse("lanes=1,4").unwrap();
+        assert_eq!(s.key, "lanes");
+        assert_eq!(s.values, vec!["1", "4"]);
+        let s = SweepSpec::parse("prompt_len = 8..16, 32 ").unwrap();
+        assert_eq!(s.key, "prompt_len");
+        assert_eq!(s.values, vec!["8..16", "32"]);
+        assert!(SweepSpec::parse("lanes").is_err());
+        assert!(SweepSpec::parse("lanes=").is_err());
+    }
+
+    #[test]
+    fn demo_model_is_deterministic_and_serves_corpus_vocab() {
+        let (cfg, w) = demo_model();
+        assert_eq!(cfg.vocab, corpus::VOCAB as usize);
+        let (cfg2, w2) = demo_model();
+        assert_eq!(cfg.param_count(), cfg2.param_count());
+        let name = cfg.param_shapes()[0].0.clone();
+        assert_eq!(w.get(&name).unwrap().data, w2.get(&name).unwrap().data);
+    }
+
+    #[test]
+    fn build_server_rejects_oversized_prompts() {
+        let spec =
+            WorkloadSpec::parse("requests = 1\nprompt_len = 4096\nweights = dense").unwrap();
+        let err = build_server(&spec, Path::new("definitely-missing-artifacts")).unwrap_err();
+        assert!(err.to_string().contains("prompt budget"), "{err}");
+    }
+}

@@ -1,0 +1,489 @@
+//! `WorkloadSpec` — the declarative workload grammar.
+//!
+//! A spec is a plain-text file of `key = value` lines (`#` starts a
+//! comment; values may be double-quoted). The same `apply(key, value)`
+//! path handles both file parsing and `--sweep key=v1,v2,…` overrides,
+//! so a sweep point is exactly "the file with one key rewritten".
+//!
+//! Grammar (all keys optional; defaults in [`WorkloadSpec::default`]):
+//!
+//! ```text
+//! name          = steady-decode        # record/group id (file stem if absent)
+//! seed          = 42                   # drives every random draw
+//! lanes         = 4                    # decode lanes / closed-loop clients
+//! requests      = 24
+//! arrival       = closed | poisson | bursty
+//! rate_rps      = 100.0                # poisson: mean arrivals per second
+//! burst_size    = 4                    # bursty: requests per burst
+//! burst_gap_ms  = 20                   # bursty: gap between bursts
+//! prompt_len    = 16 | 8..24           # fixed or uniform-inclusive tokens
+//! gen_len       = 8  | 2..8
+//! prefix_k      = 0                    # >0: K shared system prompts
+//! prefix_len    = 16                   # tokens per shared prefix
+//! repetitive    = true | false         # periodic prompts (speculation-friendly)
+//! repeat_period = 8
+//! kv            = bcq | f32
+//! weights       = encoded | dense
+//! spec_k        = 0                    # speculative draft depth (0 = off)
+//! drafter       = ngram | off
+//! prefill_chunk = 0                    # 0 = inline whole-prompt prefill
+//! page_tokens   = 16
+//! prefix_cache  = 16m | off            # bytes, k/m/g suffix
+//! queue_cap     = 0                    # 0 = unbounded admission queue
+//! deadline_ms   = 0                    # 0 = no deadline
+//! kv_pages      = 0                    # 0 = unbounded KV page budget
+//! max_wait_ms   = 4
+//! ```
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Request arrival pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// `lanes` closed-loop clients, each submitting its next request as
+    /// soon as the previous one finishes (arrival offsets all zero).
+    Closed,
+    /// Open-loop Poisson process at `rate_rps` (exponential gaps).
+    Poisson,
+    /// Open-loop bursts of `burst_size` back-to-back requests every
+    /// `burst_gap_ms`.
+    Bursty,
+}
+
+impl ArrivalKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalKind::Closed => "closed",
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Bursty => "bursty",
+        }
+    }
+}
+
+/// Prompt / generation length distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LenDist {
+    Fixed(usize),
+    /// Uniform over `lo..=hi`.
+    Uniform(usize, usize),
+}
+
+impl LenDist {
+    pub fn parse(v: &str) -> anyhow::Result<LenDist> {
+        if let Some((lo, hi)) = v.split_once("..") {
+            let lo: usize = lo.trim().parse().map_err(|e| anyhow::anyhow!("bad range start '{lo}': {e}"))?;
+            let hi: usize = hi.trim().parse().map_err(|e| anyhow::anyhow!("bad range end '{hi}': {e}"))?;
+            anyhow::ensure!(lo >= 1 && lo <= hi, "length range {lo}..{hi} must satisfy 1 <= lo <= hi");
+            Ok(if lo == hi { LenDist::Fixed(lo) } else { LenDist::Uniform(lo, hi) })
+        } else {
+            let n: usize = v.trim().parse().map_err(|e| anyhow::anyhow!("bad length '{v}': {e}"))?;
+            anyhow::ensure!(n >= 1, "length must be >= 1");
+            Ok(LenDist::Fixed(n))
+        }
+    }
+
+    pub fn min(&self) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform(lo, _) => lo,
+        }
+    }
+
+    pub fn max(&self) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform(_, hi) => hi,
+        }
+    }
+
+    /// One draw; consumes exactly one RNG step for `Uniform` and none
+    /// for `Fixed` (keeps fixed-length traces independent of the dist).
+    pub fn sample(&self, rng: &mut crate::util::rng::Pcg32) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform(lo, hi) => lo + (rng.next_u32() as usize) % (hi - lo + 1),
+        }
+    }
+
+    fn render(&self) -> String {
+        match *self {
+            LenDist::Fixed(n) => n.to_string(),
+            LenDist::Uniform(lo, hi) => format!("{lo}..{hi}"),
+        }
+    }
+}
+
+/// KV-cache store mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvMode {
+    Bcq,
+    F32,
+}
+
+impl KvMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            KvMode::Bcq => "bcq",
+            KvMode::F32 => "f32",
+        }
+    }
+
+    pub fn encoded(self) -> bool {
+        self == KvMode::Bcq
+    }
+}
+
+/// Weight-path mode: encoded-domain W4A4 qgemm vs dense f32 GEMM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightMode {
+    Encoded,
+    Dense,
+}
+
+impl WeightMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            WeightMode::Encoded => "encoded",
+            WeightMode::Dense => "dense",
+        }
+    }
+}
+
+/// One declarative workload (see module docs for the grammar).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub seed: u64,
+    pub lanes: usize,
+    pub requests: usize,
+    pub arrival: ArrivalKind,
+    pub rate_rps: f64,
+    pub burst_size: usize,
+    pub burst_gap_ms: u64,
+    pub prompt_len: LenDist,
+    pub gen_len: LenDist,
+    pub prefix_k: usize,
+    pub prefix_len: usize,
+    pub repetitive: bool,
+    pub repeat_period: usize,
+    pub kv: KvMode,
+    pub weights: WeightMode,
+    pub spec_k: usize,
+    pub drafter: String,
+    pub prefill_chunk: usize,
+    pub page_tokens: usize,
+    pub prefix_cache_bytes: Option<usize>,
+    pub queue_cap: usize,
+    pub deadline_ms: u64,
+    pub kv_pages: usize,
+    pub max_wait_ms: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            name: "workload".into(),
+            seed: 42,
+            lanes: 4,
+            requests: 16,
+            arrival: ArrivalKind::Closed,
+            rate_rps: 100.0,
+            burst_size: 4,
+            burst_gap_ms: 20,
+            prompt_len: LenDist::Fixed(16),
+            gen_len: LenDist::Fixed(8),
+            prefix_k: 0,
+            prefix_len: 16,
+            repetitive: false,
+            repeat_period: 8,
+            kv: KvMode::Bcq,
+            weights: WeightMode::Encoded,
+            spec_k: 0,
+            drafter: "ngram".into(),
+            prefill_chunk: 0,
+            page_tokens: 16,
+            prefix_cache_bytes: Some(16 << 20),
+            queue_cap: 0,
+            deadline_ms: 0,
+            kv_pages: 0,
+            max_wait_ms: 4,
+        }
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, v: &str) -> anyhow::Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    v.trim().parse::<T>().map_err(|e| anyhow::anyhow!("bad value for {key}: '{v}' ({e})"))
+}
+
+/// Byte budget: integer with optional binary `k`/`m`/`g` suffix, or
+/// `off` → `None` (mirrors the CLI's `--prefix-cache` grammar).
+fn parse_bytes(key: &str, v: &str) -> anyhow::Result<Option<usize>> {
+    let v = v.trim();
+    if v.eq_ignore_ascii_case("off") {
+        return Ok(None);
+    }
+    let (digits, shift) = match v.chars().last() {
+        Some('k') | Some('K') => (&v[..v.len() - 1], 10u32),
+        Some('m') | Some('M') => (&v[..v.len() - 1], 20),
+        Some('g') | Some('G') => (&v[..v.len() - 1], 30),
+        Some(_) => (v, 0),
+        None => anyhow::bail!("empty value for {key}"),
+    };
+    let n: usize = parse_num(key, digits)?;
+    n.checked_shl(shift)
+        .filter(|&b| b >> shift == n)
+        .map(Some)
+        .ok_or_else(|| anyhow::anyhow!("byte budget for {key} overflows usize"))
+}
+
+impl WorkloadSpec {
+    /// Apply one `key = value` assignment (file line or sweep override).
+    pub fn apply(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        let v = value.trim().trim_matches('"');
+        match key {
+            "name" => self.name = v.to_string(),
+            "seed" => self.seed = parse_num(key, v)?,
+            "lanes" => self.lanes = parse_num(key, v)?,
+            "requests" => self.requests = parse_num(key, v)?,
+            "arrival" => {
+                self.arrival = match v {
+                    "closed" => ArrivalKind::Closed,
+                    "poisson" => ArrivalKind::Poisson,
+                    "bursty" => ArrivalKind::Bursty,
+                    other => anyhow::bail!("unknown arrival '{other}' (closed|poisson|bursty)"),
+                }
+            }
+            "rate_rps" => self.rate_rps = parse_num(key, v)?,
+            "burst_size" => self.burst_size = parse_num(key, v)?,
+            "burst_gap_ms" => self.burst_gap_ms = parse_num(key, v)?,
+            "prompt_len" => self.prompt_len = LenDist::parse(v)?,
+            "gen_len" => self.gen_len = LenDist::parse(v)?,
+            "prefix_k" => self.prefix_k = parse_num(key, v)?,
+            "prefix_len" => self.prefix_len = parse_num(key, v)?,
+            "repetitive" => {
+                self.repetitive = match v {
+                    "true" => true,
+                    "false" => false,
+                    other => anyhow::bail!("bad bool for repetitive: '{other}'"),
+                }
+            }
+            "repeat_period" => self.repeat_period = parse_num(key, v)?,
+            "kv" => {
+                self.kv = match v {
+                    "bcq" => KvMode::Bcq,
+                    "f32" => KvMode::F32,
+                    other => anyhow::bail!("unknown kv mode '{other}' (bcq|f32)"),
+                }
+            }
+            "weights" => {
+                self.weights = match v {
+                    "encoded" => WeightMode::Encoded,
+                    "dense" => WeightMode::Dense,
+                    other => anyhow::bail!("unknown weight mode '{other}' (encoded|dense)"),
+                }
+            }
+            "spec_k" => self.spec_k = parse_num(key, v)?,
+            "drafter" => {
+                anyhow::ensure!(v == "ngram" || v == "off", "unknown drafter '{v}' (ngram|off)");
+                self.drafter = v.to_string();
+            }
+            "prefill_chunk" => self.prefill_chunk = parse_num(key, v)?,
+            "page_tokens" => self.page_tokens = parse_num(key, v)?,
+            "prefix_cache" => self.prefix_cache_bytes = parse_bytes(key, v)?,
+            "queue_cap" => self.queue_cap = parse_num(key, v)?,
+            "deadline_ms" => self.deadline_ms = parse_num(key, v)?,
+            "kv_pages" => self.kv_pages = parse_num(key, v)?,
+            "max_wait_ms" => self.max_wait_ms = parse_num(key, v)?,
+            other => anyhow::bail!("unknown workload key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Parse a spec from `key = value` text (see module docs).
+    pub fn parse(text: &str) -> anyhow::Result<WorkloadSpec> {
+        let mut spec = WorkloadSpec::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected 'key = value', got '{raw}'", lineno + 1))?;
+            spec.apply(key.trim(), value)
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load a spec file; `name` defaults to the file stem when the file
+    /// doesn't set it.
+    pub fn load(path: &Path) -> anyhow::Result<WorkloadSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read workload spec {}: {e}", path.display()))?;
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("workload");
+        let mut spec = WorkloadSpec { name: stem.to_string(), ..WorkloadSpec::default() };
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("{}:{}: expected 'key = value', got '{raw}'", path.display(), lineno + 1)
+            })?;
+            spec.apply(key.trim(), value)
+                .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), lineno + 1))?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Structural sanity — called after parsing and after sweep
+    /// overrides, so a bad point fails fast instead of mid-run.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "workload needs a name");
+        anyhow::ensure!(self.lanes >= 1, "lanes must be >= 1");
+        anyhow::ensure!(self.requests >= 1, "requests must be >= 1");
+        anyhow::ensure!(self.page_tokens >= 1, "page_tokens must be >= 1");
+        anyhow::ensure!(self.repeat_period >= 1, "repeat_period must be >= 1");
+        if self.arrival == ArrivalKind::Poisson {
+            anyhow::ensure!(self.rate_rps > 0.0, "poisson arrivals need rate_rps > 0");
+        }
+        if self.arrival == ArrivalKind::Bursty {
+            anyhow::ensure!(self.burst_size >= 1, "bursty arrivals need burst_size >= 1");
+        }
+        if self.prefix_k > 0 {
+            anyhow::ensure!(self.prefix_len >= 1, "prefix_k > 0 needs prefix_len >= 1");
+            anyhow::ensure!(
+                self.prompt_len.min() > self.prefix_len,
+                "prompt_len (min {}) must exceed prefix_len {} so every request keeps a unique suffix",
+                self.prompt_len.min(),
+                self.prefix_len
+            );
+            anyhow::ensure!(!self.repetitive, "prefix_k and repetitive are mutually exclusive");
+        }
+        Ok(())
+    }
+
+    /// The resolved config as a flat JSON object — the run-record's
+    /// grouping key (`python/report_generator.py` matches baselines on
+    /// it), so every field is always present in canonical form.
+    pub fn to_config_json(&self) -> Json {
+        Json::obj()
+            .with("arrival", Json::Str(self.arrival.name().into()))
+            .with("burst_gap_ms", Json::Num(self.burst_gap_ms as f64))
+            .with("burst_size", Json::Num(self.burst_size as f64))
+            .with("deadline_ms", Json::Num(self.deadline_ms as f64))
+            .with("drafter", Json::Str(self.drafter.clone()))
+            .with("gen_len", Json::Str(self.gen_len.render()))
+            .with("kv", Json::Str(self.kv.name().into()))
+            .with("kv_pages", Json::Num(self.kv_pages as f64))
+            .with("lanes", Json::Num(self.lanes as f64))
+            .with("max_wait_ms", Json::Num(self.max_wait_ms as f64))
+            .with("page_tokens", Json::Num(self.page_tokens as f64))
+            .with(
+                "prefix_cache_bytes",
+                match self.prefix_cache_bytes {
+                    Some(b) => Json::Num(b as f64),
+                    None => Json::Num(0.0),
+                },
+            )
+            .with("prefill_chunk", Json::Num(self.prefill_chunk as f64))
+            .with("prefix_k", Json::Num(self.prefix_k as f64))
+            .with("prefix_len", Json::Num(self.prefix_len as f64))
+            .with("prompt_len", Json::Str(self.prompt_len.render()))
+            .with("queue_cap", Json::Num(self.queue_cap as f64))
+            .with("rate_rps", Json::Num(self.rate_rps))
+            .with("repeat_period", Json::Num(self.repeat_period as f64))
+            .with("repetitive", Json::Bool(self.repetitive))
+            .with("requests", Json::Num(self.requests as f64))
+            .with("seed", Json::Num(self.seed as f64))
+            .with("spec_k", Json::Num(self.spec_k as f64))
+            .with("weights", Json::Str(self.weights.name().into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let text = "\
+# a comment line
+name = bursty-test
+seed = 7
+lanes = 2
+arrival = bursty   # trailing comment
+burst_size = 3
+burst_gap_ms = 10
+prompt_len = 8..24
+gen_len = 4
+kv = f32
+weights = dense
+prefix_cache = off
+";
+        let s = WorkloadSpec::parse(text).unwrap();
+        assert_eq!(s.name, "bursty-test");
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.arrival, ArrivalKind::Bursty);
+        assert_eq!((s.burst_size, s.burst_gap_ms), (3, 10));
+        assert_eq!(s.prompt_len, LenDist::Uniform(8, 24));
+        assert_eq!(s.gen_len, LenDist::Fixed(4));
+        assert_eq!(s.kv, KvMode::F32);
+        assert_eq!(s.weights, WeightMode::Dense);
+        assert_eq!(s.prefix_cache_bytes, None);
+    }
+
+    #[test]
+    fn unknown_key_and_bad_values_rejected() {
+        assert!(WorkloadSpec::parse("nope = 1").is_err());
+        assert!(WorkloadSpec::parse("arrival = random").is_err());
+        assert!(WorkloadSpec::parse("prompt_len = 9..3").is_err());
+        assert!(WorkloadSpec::parse("lanes = zero").is_err());
+        assert!(WorkloadSpec::parse("lanes 4").is_err(), "missing '=' must fail");
+    }
+
+    #[test]
+    fn validate_prefix_and_repetitive_rules() {
+        // Prefix must leave room for a unique suffix.
+        assert!(WorkloadSpec::parse("prefix_k = 2\nprefix_len = 16\nprompt_len = 16").is_err());
+        assert!(WorkloadSpec::parse("prefix_k = 2\nprefix_len = 8\nprompt_len = 16").is_ok());
+        assert!(WorkloadSpec::parse("prefix_k = 2\nprefix_len = 8\nprompt_len = 16\nrepetitive = true").is_err());
+    }
+
+    #[test]
+    fn sweep_override_is_one_apply() {
+        let mut s = WorkloadSpec::parse("name = t\nlanes = 1").unwrap();
+        s.apply("lanes", "8").unwrap();
+        assert_eq!(s.lanes, 8);
+        let j = s.to_config_json();
+        assert_eq!(j.get("lanes").unwrap().as_usize().unwrap(), 8);
+    }
+
+    #[test]
+    fn config_json_is_total_and_deterministic() {
+        let a = WorkloadSpec::default().to_config_json();
+        let b = WorkloadSpec::default().to_config_json();
+        assert_eq!(a.to_string_compact(), b.to_string_compact());
+        for key in ["arrival", "lanes", "prompt_len", "gen_len", "kv", "weights", "seed", "spec_k"] {
+            assert!(a.get(key).is_ok(), "config json missing {key}");
+        }
+    }
+
+    #[test]
+    fn len_dist_samples_stay_in_bounds() {
+        let d = LenDist::parse("8..24").unwrap();
+        let mut rng = crate::util::rng::Pcg32::seeded(1);
+        for _ in 0..200 {
+            let n = d.sample(&mut rng);
+            assert!((8..=24).contains(&n), "sample {n} out of bounds");
+        }
+        assert_eq!(LenDist::parse("5..5").unwrap(), LenDist::Fixed(5));
+    }
+}

@@ -650,6 +650,28 @@ mod tests {
     }
 
     #[test]
+    fn percentiles_interpolate_within_histogram_buckets() {
+        let m = ServerMetrics::new();
+        // TTFT uniform over 1ms..100ms in 1ms steps: exact p99 is 99ms.
+        // The log-bucket layout puts that rank in the (79.4ms, 100ms]
+        // bucket, so a bucket-upper-bound readout would report 100ms
+        // (+1.0%); the interpolated readout must land within 0.5%.
+        for i in 1..=100u32 {
+            let t = i as f64 * 1000.0;
+            m.record_response(&resp(4, 10.0, 50.0, t, 100.0, t + 500.0, 1));
+        }
+        let s = m.snapshot();
+        let exact = 99_000.0;
+        assert!(
+            (s.ttft_p99_us - exact).abs() / exact < 0.005,
+            "ttft p99 {} vs exact {exact} — bucket-bound readout overstates the tail",
+            s.ttft_p99_us
+        );
+        assert!(s.ttft_p99_us < 99_500.0, "p99 {} sits at the bucket bound", s.ttft_p99_us);
+        assert!(s.ttft_p50_us <= s.ttft_p99_us);
+    }
+
+    #[test]
     fn single_token_responses_skip_itl() {
         let m = ServerMetrics::new();
         m.record_response(&resp(1, 10.0, 50.0, 60.0, 0.0, 80.0, 1));

@@ -129,6 +129,16 @@ pub fn shared_prefix_workload(
     SharedPrefixWorkload { prefixes, requests }
 }
 
+/// A request-unique prompt: `len` grammar tokens (BOS first) on a
+/// stream derived from `(seed, i)` — the same derivation
+/// [`shared_prefix_workload`] uses for its suffixes, exposed so the
+/// workload factory (`bench::factory`) draws unique prompts from the
+/// same distribution the swarm suffixes come from.
+pub fn unique_prompt(seed: u64, i: usize, len: usize) -> Vec<u32> {
+    assert!(len >= 1, "unique_prompt needs len >= 1");
+    generate(seed ^ 0xD1FF ^ ((i as u64) << 8), len)
+}
+
 /// A pathologically repetitive stream for the speculative-decoding
 /// benches: one grammar-generated `period`-token phrase tiled out to
 /// `n_tokens` (BOS first, like [`generate`]). After one period every
@@ -234,6 +244,17 @@ mod tests {
         if same.len() >= 2 {
             assert_ne!(same[0], same[1], "suffixes not unique");
         }
+    }
+
+    #[test]
+    fn unique_prompts_are_unique_and_deterministic() {
+        let a = unique_prompt(42, 0, 24);
+        assert_eq!(a, unique_prompt(42, 0, 24));
+        assert_eq!(a.len(), 24);
+        assert_eq!(a[0], BOS);
+        assert!(a.iter().all(|&t| t < VOCAB));
+        assert_ne!(a, unique_prompt(42, 1, 24));
+        assert_ne!(a, unique_prompt(43, 0, 24));
     }
 
     #[test]

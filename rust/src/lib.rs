@@ -37,6 +37,7 @@
     clippy::manual_memcpy
 )]
 
+pub mod bench;
 pub mod formats;
 pub mod obs;
 pub mod tensor;

@@ -62,7 +62,9 @@ fn print_help() {
          \x20 serve-cpu   serve through the CPU decode engine: incremental decode\n\
          \x20             over a paged BCQ-quantized KV cache, continuous batching,\n\
          \x20             on-the-fly W4A4 activation quantization (no artifacts)\n\
-         \x20 bench       run a paper experiment (--exp tab1..tab11, fig1..fig9, all)\n\
+         \x20 bench       run a paper experiment (--exp tab1..tab11, fig1..fig9, all),\n\
+         \x20             or a declarative workload sweep (--workload workloads/<spec>.toml\n\
+         \x20             [--sweep key=v1,v2,…]) emitting run-records into results/raw/\n\
          \x20 eval        perplexity of one artifact variant via PJRT\n\
          \x20 calibrate   run LO-BCQ calibration in rust, dump codebooks\n\
          \x20 gen-parity  emit cross-language parity vectors for pytest\n\
@@ -188,6 +190,7 @@ fn serve(argv: &[String]) -> anyhow::Result<()> {
 fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
     let specs = [
         artifacts_opt(),
+        OptSpec { name: "workload", help: "declarative workload spec file — serve its trace instead of the ad-hoc swarm (overrides scheme/kv/requests/… flags)", takes_value: true, default: None },
         OptSpec { name: "scheme", help: "bf16|lobcq|mx4|vsq|mxfp4", takes_value: true, default: Some("lobcq") },
         OptSpec { name: "engine", help: "continuous (cached decode) | batch (full-window executor)", takes_value: true, default: Some("continuous") },
         OptSpec { name: "kv", help: "KV cache store: bcq (~4.9 bits/scalar) | f32", takes_value: true, default: Some("bcq") },
@@ -221,6 +224,30 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
     }
     if trace_path.is_some() || metrics_out.is_some() {
         lobcq::obs::quant_stats::enable();
+    }
+    // Declarative path: a workload spec fully describes the server and
+    // the traffic, so the ad-hoc swarm flags below don't apply.
+    if let Some(wl) = args.opt("workload") {
+        let spec = lobcq::bench::WorkloadSpec::load(&PathBuf::from(wl))?;
+        let trace = lobcq::bench::expand(&spec)?;
+        let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+        let (server, vocab) = lobcq::bench::runner::build_server(&spec, &artifacts)?;
+        println!(
+            "[serve-cpu] workload '{}': {} requests, {} arrivals, {} lanes, kv {}, weights {}, kernels {}",
+            spec.name,
+            trace.requests.len(),
+            spec.arrival.name(),
+            spec.lanes,
+            spec.kv.name(),
+            spec.weights.name(),
+            lobcq::kernels::backend_name()
+        );
+        let stats = lobcq::bench::runner::drive(&server, &trace, &spec, vocab);
+        println!("[serve-cpu] {} ok / {} failed in {:.2}s", stats.ok, stats.failed, stats.wall_s);
+        let snapshot = server.metrics.snapshot();
+        println!("[serve-cpu] {}", snapshot.report());
+        server.shutdown();
+        return export_obs(&snapshot, metrics_out.as_ref(), trace_path.as_ref());
     }
     let env = Env::load_from(PathBuf::from(args.str_or("artifacts", "artifacts")));
     let n_requests = args.usize_or("requests", 32)?;
@@ -391,17 +418,30 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
         // Joins the scheduler thread, which flushes its trace ring.
         s.shutdown();
     }
-    if let Some(path) = &metrics_out {
+    export_obs(&snapshot, metrics_out.as_ref(), trace_path.as_ref())
+}
+
+/// Shared `--metrics-out` / `--trace` export tail for both `serve-cpu`
+/// paths. The metrics snapshot carries the span-ring drop count so a
+/// truncated trace is visible (and CI-failable) from the metrics file
+/// alone.
+fn export_obs(
+    snapshot: &lobcq::coordinator::MetricsSnapshot,
+    metrics_out: Option<&PathBuf>,
+    trace_path: Option<&PathBuf>,
+) -> anyhow::Result<()> {
+    if let Some(path) = metrics_out {
         let mut j = Json::obj();
         j.set("server", snapshot.to_json());
         j.set("quant", lobcq::obs::quant_stats::snapshot_json());
         j.set("registry", lobcq::obs::registry::snapshot());
         j.set("kernel_backend", Json::Str(lobcq::kernels::backend_name().into()));
         j.set("system", lobcq::obs::report::system_info());
+        j.set("trace_dropped", Json::Num(lobcq::obs::trace::dropped() as f64));
         j.to_file(path)?;
         println!("[serve-cpu] metrics written to {}", path.display());
     }
-    if let Some(path) = &trace_path {
+    if let Some(path) = trace_path {
         let events = lobcq::obs::trace::drain();
         lobcq::obs::trace::export_chrome_trace(path, &events)?;
         let jsonl = lobcq::obs::trace::lifecycle_path(path);
@@ -416,30 +456,11 @@ fn serve_cpu(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Deterministic random tiny-GPT over the corpus vocab (no artifacts).
+/// Deterministic random tiny-GPT over the corpus vocab (no artifacts);
+/// shared with the workload harness so spec-driven and flag-driven runs
+/// serve the identical model.
 fn synthetic_model() -> (lobcq::model::ModelConfig, lobcq::model::Weights) {
-    let cfg = lobcq::model::ModelConfig {
-        name: "cpu-demo".into(),
-        d: 64,
-        n_layers: 2,
-        n_heads: 2,
-        vocab: corpus::VOCAB as usize,
-        max_t: 64,
-    };
-    let mut rng = Pcg32::seeded(0xCDE);
-    let mut tensors = std::collections::BTreeMap::new();
-    for (name, shape) in cfg.param_shapes() {
-        let n: usize = shape.iter().product();
-        let data: Vec<f32> = if name.ends_with(".g") {
-            vec![1.0; n]
-        } else if name.ends_with(".b") {
-            vec![0.0; n]
-        } else {
-            (0..n).map(|_| rng.normal() * 0.05).collect()
-        };
-        tensors.insert(name, Tensor::new(&shape, data));
-    }
-    (cfg, lobcq::model::Weights::new(tensors))
+    lobcq::bench::runner::demo_model()
 }
 
 // ---- bench (experiments) ----
@@ -450,8 +471,29 @@ fn bench(argv: &[String]) -> anyhow::Result<()> {
         OptSpec { name: "exp", help: "experiment id or 'all'", takes_value: true, default: Some("all") },
         OptSpec { name: "quick", help: "reduced workload", takes_value: false, default: None },
         OptSpec { name: "out", help: "write report to file", takes_value: true, default: None },
+        OptSpec { name: "workload", help: "declarative workload spec file — runs the sweep harness (one run-record JSON per point) instead of paper experiments", takes_value: true, default: None },
+        OptSpec { name: "sweep", help: "with --workload: sweep one spec key over values (key=v1,v2,…)", takes_value: true, default: None },
+        OptSpec { name: "raw-out", help: "with --workload: run-record output directory", takes_value: true, default: Some("results/raw") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
     let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        println!("{}", render_help("bench", "paper experiments, or workload sweeps with --workload", &specs));
+        return Ok(());
+    }
+    if let Some(wl) = args.opt("workload") {
+        let spec = lobcq::bench::WorkloadSpec::load(&PathBuf::from(wl))?;
+        let sweep = args.opt("sweep").map(lobcq::bench::SweepSpec::parse).transpose()?;
+        let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+        let out_dir = PathBuf::from(args.str_or("raw-out", "results/raw"));
+        let t0 = Instant::now();
+        let paths = lobcq::bench::run_sweep(&spec, sweep.as_ref(), &artifacts, &out_dir)?;
+        println!("[bench] {} run-record(s) in {:.1}s:", paths.len(), t0.elapsed().as_secs_f64());
+        for p in &paths {
+            println!("  {}", p.display());
+        }
+        return Ok(());
+    }
     let env = Env::load_from(PathBuf::from(args.str_or("artifacts", "artifacts")));
     let quick = args.flag("quick");
     let ids: Vec<&str> = match args.str_or("exp", "all") {

@@ -75,11 +75,14 @@ pub fn git_rev() -> String {
 /// Stamp a bench report with the uniform block (see module docs).
 /// Overwrites `kernel_backend` if the bench already set it, so the
 /// field is guaranteed to reflect the dispatched backend.
+/// `trace_dropped` carries the span-ring drop count so a truncated
+/// trace is visible in every export that rode along with it.
 pub fn stamp(report: &mut Json) {
     report.set("system", system_info());
     report.set("kernel_backend", Json::Str(crate::kernels::backend_name().into()));
     report.set("git_rev", Json::Str(git_rev()));
     report.set("metrics", super::registry::snapshot());
+    report.set("trace_dropped", Json::Num(super::trace::dropped() as f64));
 }
 
 #[cfg(test)]
@@ -111,7 +114,7 @@ mod tests {
     fn stamp_adds_the_uniform_block() {
         let mut report = Json::obj().with("bench", Json::Str("t".into()));
         stamp(&mut report);
-        for key in ["system", "kernel_backend", "git_rev", "metrics"] {
+        for key in ["system", "kernel_backend", "git_rev", "metrics", "trace_dropped"] {
             assert!(report.get(key).is_ok(), "missing {key}");
         }
         assert_eq!(report.get("bench").unwrap().as_str().unwrap(), "t");

@@ -147,18 +147,36 @@ impl LatencyHistogram {
         self.max_us
     }
 
-    /// Approximate percentile (bucket upper bound containing the rank).
+    /// Percentile with linear interpolation inside the containing
+    /// bucket: the rank's position among the bucket's samples places it
+    /// between the bucket's bounds. The overflow bucket and the bucket
+    /// holding the global max are clamped to `max_us`, so a
+    /// single-sample histogram reports that sample exactly instead of
+    /// its bucket's upper bound (which overstates tail percentiles by
+    /// up to one full bucket — ~26% at 10 buckets/decade).
     pub fn percentile_us(&self, p: f64) -> f64 {
         if self.total == 0 {
             return 0.0;
         }
-        let rank = ((p / 100.0) * self.total as f64).ceil() as u64;
+        let rank = (((p / 100.0) * self.total as f64).ceil() as u64).max(1);
         let mut seen = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
-            seen += c;
-            if seen >= rank.max(1) {
-                return if i < self.bounds_us.len() { self.bounds_us[i] } else { self.max_us };
+            if c == 0 {
+                continue;
             }
+            if seen + c >= rank {
+                // Bucket i spans (lo, hi]; `rank - seen` of its `c`
+                // samples are at or below the answer.
+                let lo = if i == 0 { 0.0 } else { self.bounds_us[i - 1] };
+                let hi = if i < self.bounds_us.len() {
+                    self.bounds_us[i].min(self.max_us)
+                } else {
+                    self.max_us
+                };
+                let frac = (rank - seen) as f64 / c as f64;
+                return lo + (hi - lo) * frac;
+            }
+            seen += c;
         }
         self.max_us
     }
@@ -228,6 +246,38 @@ mod tests {
         let p99 = h.percentile_us(99.0);
         assert!(p99 > 800.0 && p99 <= 1100.0, "p99 {p99}");
         assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn histogram_interpolates_within_buckets() {
+        // Uniform 1..=1000: every percentile should land near its exact
+        // value, not at its bucket's upper bound (~26% high at p99).
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record_us(i as f64);
+        }
+        for (p, exact) in [(50.0, 500.0), (95.0, 950.0), (99.0, 990.0)] {
+            let got = h.percentile_us(p);
+            assert!(
+                (got - exact).abs() / exact < 0.03,
+                "p{p}: got {got}, exact {exact} — bucket-bound readout?"
+            );
+        }
+        // Monotone in p.
+        let (p50, p95, p99) = (h.percentile_us(50.0), h.percentile_us(95.0), h.percentile_us(99.0));
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // Never past the recorded max.
+        assert!(h.percentile_us(100.0) <= h.max_us());
+    }
+
+    #[test]
+    fn histogram_single_sample_is_exact() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(237.0);
+        for p in [1.0, 50.0, 99.0, 100.0] {
+            let got = h.percentile_us(p);
+            assert!((got - 237.0).abs() < 1e-9, "p{p} of one sample: {got}");
+        }
     }
 
     #[test]

@@ -1,0 +1,213 @@
+//! Integration tests for the declarative workload harness (ISSUE 10).
+//!
+//! Covers the three contracts the harness makes:
+//! - **determinism** — the same spec (same seed) expands to a
+//!   byte-identical request trace, and the run-record's config section
+//!   (including the trace fingerprint) is identical across runs;
+//! - **schema** — every sweep point emits exactly one run-record that
+//!   round-trips through `bench::record::validate`;
+//! - **distributions** — sampled lengths stay inside their declared
+//!   bounds and arrival offsets follow the declared pattern.
+//!
+//! Runs own-process so enabling quant telemetry here can't perturb the
+//! library unit tests.
+
+use lobcq::bench::{expand, record, run_sweep, SweepSpec, WorkloadSpec};
+use lobcq::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lobcq_workload_harness_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A spec small enough to run end-to-end in test time on the demo model.
+const TINY: &str = "\
+name = tiny
+seed = 7
+lanes = 1
+requests = 2
+prompt_len = 8
+gen_len = 2
+weights = dense
+";
+
+#[test]
+fn same_seed_expands_to_byte_identical_trace() {
+    let text = "\
+name = det
+seed = 11
+requests = 32
+arrival = poisson
+rate_rps = 500
+prompt_len = 8..24
+gen_len = 2..6
+";
+    let spec = WorkloadSpec::parse(text).unwrap();
+    let a = expand(&spec).unwrap();
+    let b = expand(&spec).unwrap();
+    assert_eq!(a.fingerprint, b.fingerprint);
+    assert_eq!(a.requests.len(), b.requests.len());
+    for (x, y) in a.requests.iter().zip(&b.requests) {
+        assert_eq!((x.at_us, x.max_new, &x.prompt), (y.at_us, y.max_new, &y.prompt));
+    }
+    // A different seed is a different trace.
+    let mut other = spec.clone();
+    other.apply("seed", "12").unwrap();
+    assert_ne!(expand(&other).unwrap().fingerprint, a.fingerprint);
+}
+
+#[test]
+fn sweep_emits_one_valid_record_per_point() {
+    let out = tmp_dir("sweep");
+    let spec = WorkloadSpec::parse(TINY).unwrap();
+    let sweep = SweepSpec::parse("lanes=1,2").unwrap();
+    let paths = run_sweep(&spec, Some(&sweep), Path::new("no-artifacts-here"), &out).unwrap();
+    assert_eq!(paths.len(), 2, "one record per sweep point");
+    for (path, lanes) in paths.iter().zip([1u64, 2]) {
+        let j = Json::from_file(path).unwrap();
+        record::validate(&j).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "workload");
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "tiny");
+        let config = j.get("config").unwrap();
+        assert_eq!(config.get("lanes").unwrap().as_u64().unwrap(), lanes);
+        // Headline metrics are present with directions.
+        let summary = j.get("summary").unwrap();
+        for metric in ["tok_per_s", "ttft_p99_us", "itl_p99_us", "ok_rate"] {
+            assert!(summary.get(metric).is_ok(), "{}: summary missing {metric}", path.display());
+        }
+        // Request conservation: ok + failed covers the whole trace.
+        let detail = j.get("detail").unwrap();
+        let ok = detail.get("ok").unwrap().as_u64().unwrap();
+        let failed = detail.get("failed").unwrap().as_u64().unwrap();
+        assert_eq!(ok + failed, detail.get("trace_requests").unwrap().as_u64().unwrap());
+        assert_eq!(ok, 2, "{}: tiny uncontended workload must complete", path.display());
+    }
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn rerun_same_spec_has_identical_config_and_metric_keys() {
+    // Live timings differ between runs; the deterministic surface is
+    // the config section (trace fingerprint included) and the summary
+    // key set. Byte-compare those.
+    let out_a = tmp_dir("rerun_a");
+    let out_b = tmp_dir("rerun_b");
+    let spec = WorkloadSpec::parse(TINY).unwrap();
+    let pa = run_sweep(&spec, None, Path::new("no-artifacts-here"), &out_a).unwrap();
+    let pb = run_sweep(&spec, None, Path::new("no-artifacts-here"), &out_b).unwrap();
+    let a = Json::from_file(&pa[0]).unwrap();
+    let b = Json::from_file(&pb[0]).unwrap();
+    assert_eq!(
+        a.get("config").unwrap().to_string_compact(),
+        b.get("config").unwrap().to_string_compact(),
+        "config (with trace fingerprint) must be run-invariant"
+    );
+    let keys = |j: &Json| match j.get("summary").unwrap() {
+        Json::Obj(m) => m.keys().cloned().collect::<Vec<_>>(),
+        _ => panic!("summary not an object"),
+    };
+    assert_eq!(keys(&a), keys(&b));
+    let _ = std::fs::remove_dir_all(&out_a);
+    let _ = std::fs::remove_dir_all(&out_b);
+}
+
+#[test]
+fn length_distributions_stay_in_bounds() {
+    let text = "\
+name = bounds
+seed = 3
+requests = 64
+prompt_len = 8..24
+gen_len = 2..4
+";
+    let spec = WorkloadSpec::parse(text).unwrap();
+    let trace = expand(&spec).unwrap();
+    assert_eq!(trace.requests.len(), 64);
+    let (mut min_p, mut max_p) = (usize::MAX, 0);
+    for r in &trace.requests {
+        assert!((8..=24).contains(&r.prompt.len()), "prompt len {} out of 8..24", r.prompt.len());
+        assert!((2..=4).contains(&r.max_new), "gen len {} out of 2..4", r.max_new);
+        min_p = min_p.min(r.prompt.len());
+        max_p = max_p.max(r.prompt.len());
+    }
+    // 64 draws over 17 values: both extremes should be hit.
+    assert_eq!((min_p, max_p), (8, 24), "uniform sampler never reached its bounds");
+}
+
+#[test]
+fn arrival_offsets_follow_the_declared_pattern() {
+    let closed = WorkloadSpec::parse("requests = 8").unwrap();
+    assert!(expand(&closed).unwrap().requests.iter().all(|r| r.at_us == 0));
+
+    let bursty = WorkloadSpec::parse(
+        "requests = 8\narrival = bursty\nburst_size = 4\nburst_gap_ms = 20",
+    )
+    .unwrap();
+    let trace = expand(&bursty).unwrap();
+    for (i, r) in trace.requests.iter().enumerate() {
+        assert_eq!(r.at_us, (i / 4) as u64 * 20_000, "request {i}");
+    }
+
+    let poisson =
+        WorkloadSpec::parse("requests = 32\narrival = poisson\nrate_rps = 1000").unwrap();
+    let trace = expand(&poisson).unwrap();
+    let mut prev = 0u64;
+    for r in &trace.requests {
+        assert!(r.at_us >= prev, "poisson offsets must be nondecreasing");
+        prev = r.at_us;
+    }
+    assert!(prev > 0, "poisson offsets all zero");
+}
+
+#[test]
+fn shared_prefixes_are_shared_and_suffixes_unique() {
+    let spec = WorkloadSpec::parse(
+        "name = swarm\nrequests = 12\nprefix_k = 2\nprefix_len = 8\nprompt_len = 16",
+    )
+    .unwrap();
+    let trace = expand(&spec).unwrap();
+    let mut by_prefix: std::collections::BTreeMap<usize, Vec<&Vec<u32>>> = Default::default();
+    for r in &trace.requests {
+        let pid = r.prefix_id.expect("prefix workload request without prefix_id");
+        assert!(pid < 2);
+        by_prefix.entry(pid).or_default().push(&r.prompt);
+    }
+    for prompts in by_prefix.values() {
+        for w in prompts.windows(2) {
+            assert_eq!(w[0][..8], w[1][..8], "prefix diverged within a group");
+            assert_ne!(w[0][8..], w[1][8..], "suffixes must be request-unique");
+        }
+    }
+}
+
+#[test]
+fn canned_workloads_parse_and_fit_the_demo_model() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../workloads");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).expect("workloads/ directory missing") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        seen += 1;
+        let spec = WorkloadSpec::load(&path).unwrap_or_else(|e| panic!("{e}"));
+        // The demo model serves artifact-less runs: max_t 64, so a
+        // prompt plus its generation budget must fit in 63 positions.
+        assert!(
+            spec.prompt_len.max() + spec.gen_len.max() < 64,
+            "{}: prompt {} + gen {} overflows the demo model's 64-token window",
+            path.display(),
+            spec.prompt_len.max(),
+            spec.gen_len.max()
+        );
+        assert_eq!(
+            spec.name,
+            path.file_stem().unwrap().to_str().unwrap(),
+            "{}: canned spec name must match its file stem",
+            path.display()
+        );
+    }
+    assert!(seen >= 5, "expected the canned workload set, found {seen}");
+}
